@@ -1,0 +1,82 @@
+//! E-acc-vs-k: the motivating observation of the paper — top-1 agreement
+//! with the f32 reference stays high down to "ridiculously low" precision —
+//! measured over the AOT-compiled emulated-precision artifacts (Pallas
+//! roundk baked into the graph) for all three models, served through the
+//! PJRT runtime.
+//!
+//! Run: `make artifacts && cargo run --release --example precision_sweep`
+
+use rigor::data::Dataset;
+use rigor::quant::unit_roundoff;
+use rigor::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    if !Runtime::artifacts_available() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let dir = Runtime::default_dir();
+    let mut rt = Runtime::open(&dir)?;
+
+    for name in ["digits", "mobilenet_mini"] {
+        let data = Dataset::load(&dir.join("data").join(format!("{name}_eval.json")))?;
+        let ks = rt.precision_variants(name);
+        println!("\n== {name} ({} samples) ==", data.len());
+        println!(
+            "{:>4} {:>12} {:>16} {:>16} {:>12}",
+            "k", "u=2^(1-k)", "top-1 agreement", "max |prob dev|", "top-1 acc"
+        );
+        for &k in &ks {
+            let mut agree = 0;
+            let mut correct = 0;
+            let mut max_dev = 0.0f32;
+            for (sample, label) in data.inputs.iter().zip(&data.labels) {
+                let s: Vec<f32> = sample.iter().map(|&v| v as f32).collect();
+                let r = rt.run(name, "f32", &s)?;
+                let e = rt.run(name, &format!("k{k}"), &s)?;
+                if argmax(&r) == argmax(&e) {
+                    agree += 1;
+                }
+                if argmax(&e) == *label {
+                    correct += 1;
+                }
+                for (a, b) in r.iter().zip(&e) {
+                    max_dev = max_dev.max((a - b).abs());
+                }
+            }
+            println!(
+                "{k:>4} {:>12.3e} {:>13}/{:<3} {max_dev:>16.3e} {:>9}/{:<3}",
+                unit_roundoff(k),
+                agree,
+                data.len(),
+                correct,
+                data.len()
+            );
+        }
+    }
+
+    // Pendulum: regression deviation instead of classification agreement.
+    let data = Dataset::load(&dir.join("data/pendulum_eval.json"))?;
+    let ks = rt.precision_variants("pendulum");
+    println!("\n== pendulum ({} grid points) ==", data.len());
+    println!("{:>4} {:>12} {:>16}", "k", "u=2^(1-k)", "max |V dev|");
+    for &k in &ks {
+        let mut max_dev = 0.0f32;
+        for sample in &data.inputs {
+            let s: Vec<f32> = sample.iter().map(|&v| v as f32).collect();
+            let r = rt.run("pendulum", "f32", &s)?;
+            let e = rt.run("pendulum", &format!("k{k}"), &s)?;
+            max_dev = max_dev.max((r[0] - e[0]).abs());
+        }
+        println!("{k:>4} {:>12.3e} {max_dev:>16.3e}", unit_roundoff(k));
+    }
+    println!("\nExpected shape: agreement ~100% down to k≈8, degrading only below (paper §I/§IV).");
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}

@@ -1,0 +1,301 @@
+"""AOT build driver: train the evaluation networks once, export everything
+the Rust coordinator needs, and lower the inference functions to HLO text.
+
+Outputs (under ``--out-dir``, default ``../artifacts``):
+
+* ``models/<name>.json``    — weights in the Rust engine's exchange format
+* ``data/<name>_eval.json`` — evaluation datasets (raw exact-integer pixels)
+* ``<name>.<variant>.hlo.txt`` — AOT artifacts: ``f32`` reference inference
+  plus ``k<bits>`` storage-emulated precision variants (Pallas roundk baked
+  into the graph)
+* ``manifest.json``         — the artifact index the Rust runtime loads
+
+HLO **text** is the interchange format (not ``.serialize()``): jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Run via ``make artifacts`` — a no-op if the manifest is newer than the
+compile sources.
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import datagen, model, train
+
+PRECISION_VARIANTS = [4, 6, 8, 10, 12, 16, 20]
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering (see /opt/xla-example/gen_hlo.py)
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(fwd, params, input_shape, k=None) -> str:
+    def fn(x):
+        return (fwd(params, x, k=k),)
+
+    spec = jax.ShapeDtypeStruct(input_shape, jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+# ---------------------------------------------------------------------------
+# weight export (Rust model JSON format; see rust/src/model/json_fmt.rs)
+# ---------------------------------------------------------------------------
+
+def _np(a):
+    return np.asarray(a, np.float64)
+
+
+def _dense_layer(w, b):
+    """jax convention w: [in, units] -> rust convention [units, in]."""
+    w = _np(w).T
+    return {
+        "type": "dense",
+        "units": int(w.shape[0]),
+        "in": int(w.shape[1]),
+        "weights": w.reshape(-1).tolist(),
+        "bias": _np(b).tolist(),
+    }
+
+
+def _conv_layer(k, b, stride, padding):
+    k = _np(k)
+    kh, kw, cin, cout = k.shape
+    return {
+        "type": "conv2d",
+        "kh": kh, "kw": kw, "cin": cin, "cout": cout,
+        "stride": stride, "padding": padding,
+        "weights": k.reshape(-1).tolist(),
+        "bias": _np(b).tolist(),
+    }
+
+
+def _dw_layer(k, b, stride, padding):
+    k = _np(k)
+    kh, kw, c = k.shape
+    return {
+        "type": "depthwise_conv2d",
+        "kh": kh, "kw": kw, "c": c,
+        "stride": stride, "padding": padding,
+        "weights": k.reshape(-1).tolist(),
+        "bias": _np(b).tolist(),
+    }
+
+
+def _bn_layer(g):
+    return {
+        "type": "batch_norm",
+        "gamma": _np(g["gamma"]).tolist(),
+        "beta": _np(g["beta"]).tolist(),
+        "mean": _np(g["mean"]).tolist(),
+        "variance": np.maximum(_np(g["var"]), 0.0).tolist(),
+        "eps": model.BN_EPS,
+    }
+
+
+def export_digits(params):
+    return {
+        "name": "digits",
+        "input_shape": [784],
+        "layers": [
+            _dense_layer(params["w1"], params["b1"]),
+            {"type": "relu"},
+            _dense_layer(params["w2"], params["b2"]),
+            {"type": "relu"},
+            _dense_layer(params["w3"], params["b3"]),
+            {"type": "softmax"},
+        ],
+    }
+
+
+def export_mobilenet_mini(params):
+    return {
+        "name": "mobilenet_mini",
+        "input_shape": [16, 16, 3],
+        "layers": [
+            _conv_layer(params["c1"], params["c1b"], 1, "same"),
+            _bn_layer(params["bn1"]),
+            {"type": "relu"},
+            _dw_layer(params["dw2"], params["dw2b"], 1, "same"),
+            {"type": "relu"},
+            _conv_layer(params["pw2"], params["pw2b"], 1, "same"),
+            _bn_layer(params["bn2"]),
+            {"type": "relu"},
+            _dw_layer(params["dw3"], params["dw3b"], 2, "same"),
+            {"type": "relu"},
+            _conv_layer(params["pw3"], params["pw3b"], 1, "same"),
+            _bn_layer(params["bn3"]),
+            {"type": "relu"},
+            {"type": "max_pool2d", "ph": 2, "pw": 2},
+            {"type": "flatten"},
+            _dense_layer(params["w_out"], params["b_out"]),
+            {"type": "softmax"},
+        ],
+    }
+
+
+def export_pendulum(params):
+    return {
+        "name": "pendulum",
+        "input_shape": [2],
+        "layers": [
+            _dense_layer(params["w1"], params["b1"]),
+            {"type": "tanh"},
+            _dense_layer(params["w2"], params["b2"]),
+            {"type": "tanh"},
+        ],
+    }
+
+
+def _dataset_json(input_shape, inputs, labels=None):
+    d = {
+        "input_shape": list(input_shape),
+        "inputs": [np.asarray(i, np.float64).reshape(-1).tolist() for i in inputs],
+    }
+    if labels is not None:
+        d["labels"] = [int(l) for l in labels]
+    return d
+
+
+# ---------------------------------------------------------------------------
+# build
+# ---------------------------------------------------------------------------
+
+def build(out_dir: str, quick: bool = False, ks=None, verbose=True):
+    ks = PRECISION_VARIANTS if ks is None else ks
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "models"), exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "data"), exist_ok=True)
+    log = print if verbose else (lambda *a, **k: None)
+    scale = 0.1 if quick else 1.0
+
+    manifest = {"artifacts": []}
+
+    def emit(name, fwd, params, input_shape, output_shape):
+        for variant, k in [("f32", None)] + [(f"k{k}", k) for k in ks]:
+            hlo = lower_model(fwd, params, input_shape, k=k)
+            fname = f"{name}.{variant}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(hlo)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "variant": variant,
+                    "path": fname,
+                    "input_shape": list(input_shape),
+                    "output_shape": list(output_shape),
+                }
+            )
+            log(f"  lowered {name}:{variant} ({len(hlo)//1024} KiB)")
+
+    rng = np.random.RandomState(12345)
+
+    # ---- digits -----------------------------------------------------------
+    log("[digits] training ...")
+    params = model.init_digits(rng)
+    params, acc = train.train_digits(
+        params,
+        steps=int(400 * scale) or 40,
+        n_per_class=int(40 * scale) or 6,
+    )
+    log(f"[digits] train accuracy = {acc:.3f}")
+    params = train.fold_input_scale(params, "w1", 255.0)
+    with open(os.path.join(out_dir, "models", "digits.json"), "w") as f:
+        json.dump(export_digits(params), f)
+    eval_rng = np.random.RandomState(777)
+    x_eval, y_eval = datagen.digits(eval_rng, 28, 10 if not quick else 2)
+    with open(os.path.join(out_dir, "data", "digits_eval.json"), "w") as f:
+        json.dump(_dataset_json([784], x_eval, y_eval), f)
+    emit("digits", model.digits_fwd, params, (784,), (10,))
+
+    # ---- mobilenet_mini ---------------------------------------------------
+    log("[mobilenet_mini] training ...")
+    params = model.init_mobilenet_mini(rng)
+    params, acc = train.train_mobilenet_mini(
+        params,
+        steps=int(300 * scale) or 30,
+        n_per_class=int(30 * scale) or 4,
+    )
+    log(f"[mobilenet_mini] train accuracy = {acc:.3f}")
+    params = train.fold_input_scale(params, "c1", 255.0)
+    with open(os.path.join(out_dir, "models", "mobilenet_mini.json"), "w") as f:
+        json.dump(export_mobilenet_mini(params), f)
+    eval_rng = np.random.RandomState(778)
+    x_eval, y_eval = datagen.color_blobs(eval_rng, 16, 10, 6 if not quick else 1)
+    with open(os.path.join(out_dir, "data", "mobilenet_mini_eval.json"), "w") as f:
+        json.dump(_dataset_json([16, 16, 3], x_eval, y_eval), f)
+    emit("mobilenet_mini", model.mobilenet_mini_fwd, params, (16, 16, 3), (10,))
+
+    # ---- pendulum ---------------------------------------------------------
+    log("[pendulum] training ...")
+    params = model.init_pendulum(rng)
+    params, mse = train.train_pendulum(params, steps=int(600 * scale) or 60)
+    log(f"[pendulum] train mse = {mse:.5f}")
+    with open(os.path.join(out_dir, "models", "pendulum.json"), "w") as f:
+        json.dump(export_pendulum(params), f)
+    x_eval = datagen.pendulum_grid(9)
+    with open(os.path.join(out_dir, "data", "pendulum_eval.json"), "w") as f:
+        json.dump(_dataset_json([2], x_eval), f)
+    emit("pendulum", model.pendulum_fwd, params, (2,), (1,))
+
+    # ---- standalone roundk kernel artifacts (Rust <-> Pallas cross-check)
+    from .kernels import round_to_precision
+
+    for k in ks:
+        def rk(x, _k=k):
+            return (round_to_precision(x, _k),)
+
+        spec = jax.ShapeDtypeStruct((64,), jnp.float32)
+        hlo = to_hlo_text(jax.jit(rk).lower(spec))
+        fname = f"roundk.k{k}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        manifest["artifacts"].append(
+            {
+                "name": "roundk",
+                "variant": f"k{k}",
+                "path": fname,
+                "input_shape": [64],
+                "output_shape": [64],
+            }
+        )
+    log(f"  lowered roundk kernels for k in {ks}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+    return manifest
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="tiny training run (CI/tests)")
+    ap.add_argument(
+        "--ks",
+        default=",".join(str(k) for k in PRECISION_VARIANTS),
+        help="comma-separated precision variants",
+    )
+    args = ap.parse_args(argv)
+    ks = [int(s) for s in args.ks.split(",") if s]
+    build(args.out_dir, quick=args.quick, ks=ks)
+
+
+if __name__ == "__main__":
+    main()

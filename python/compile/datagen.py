@@ -1,0 +1,113 @@
+"""Synthetic dataset generators (build-time).
+
+Substitutes for the paper's MNIST / ImageNet / pendulum data (DESIGN.md
+§Substitutions): the error analysis measures arithmetic, not learning
+quality, so any trained classifier with the right topology exercises the
+same rounding paths. Pixel data is generated as **integers in [0, 255]** so
+the deployed inputs are exactly representable in every format with k >= 8
+(the paper annotates image data as 8-bit unsigned); the `exact_inputs`
+analysis mode depends on this.
+"""
+
+import numpy as np
+
+
+def digit_prototype(d: int, s: int) -> np.ndarray:
+    """Seven-segment-style stroke prototype of digit ``d`` on an s x s grid."""
+    img = np.zeros((s, s), np.float64)
+    lo, hi, mid = s // 5, s - 1 - s // 5, s // 2
+    segs = {
+        0: [0, 1, 2, 3, 4, 5],
+        1: [1, 2],
+        2: [0, 1, 6, 4, 3],
+        3: [0, 1, 6, 2, 3],
+        4: [5, 6, 1, 2],
+        5: [0, 5, 6, 2, 3],
+        6: [0, 5, 4, 3, 2, 6],
+        7: [0, 1, 2],
+        8: [0, 1, 2, 3, 4, 5, 6],
+        9: [6, 5, 0, 1, 2, 3],
+    }[d % 10]
+    for seg in segs:
+        if seg == 0:
+            img[lo, lo : hi + 1] = 1.0
+        elif seg == 1:
+            img[lo : mid + 1, hi] = 1.0
+        elif seg == 2:
+            img[mid : hi + 1, hi] = 1.0
+        elif seg == 3:
+            img[hi, lo : hi + 1] = 1.0
+        elif seg == 4:
+            img[mid : hi + 1, lo] = 1.0
+        elif seg == 5:
+            img[lo : mid + 1, lo] = 1.0
+        elif seg == 6:
+            img[mid, lo : hi + 1] = 1.0
+    return img
+
+
+def digits(rng: np.random.RandomState, s: int, n_per_class: int, noise: float = 0.08):
+    """Noisy shifted digits; returns (X_raw_uint8_as_f32, y). X in [0, 255]."""
+    xs, ys = [], []
+    for d in range(10):
+        proto = digit_prototype(d, s)
+        for _ in range(n_per_class):
+            dx, dy = rng.randint(-2, 3), rng.randint(-2, 3)
+            img = np.roll(np.roll(proto, dy, axis=0), dx, axis=1)
+            img = np.clip(img + noise * rng.randn(s, s), 0.0, 1.0)
+            raw = np.rint(img * 255.0)  # integer pixels: exact for k >= 8
+            xs.append(raw.reshape(-1))
+            ys.append(d)
+    x = np.asarray(xs, np.float32)
+    y = np.asarray(ys, np.int32)
+    perm = rng.permutation(len(y))
+    return x[perm], y[perm]
+
+
+def color_blobs(rng: np.random.RandomState, s: int, classes: int, n_per_class: int):
+    """Class-colored radial blobs, s x s x 3, integer pixels in [0, 255]."""
+    xs, ys = [], []
+    for c in range(classes):
+        phase = c / classes
+        for _ in range(n_per_class):
+            cx, cy = rng.uniform(0.3, 0.7, 2) * s
+            yy, xx = np.mgrid[0:s, 0:s]
+            d = np.sqrt((xx - cx) ** 2 + (yy - cy) ** 2) / s
+            base = np.maximum(1.0 - d, 0.0)
+            img = np.stack(
+                [
+                    base * (0.3 + 0.7 * phase),
+                    base * (1.0 - phase),
+                    0.5 * base,
+                ],
+                axis=-1,
+            )
+            img = np.clip(img + 0.05 * rng.randn(s, s, 3), 0.0, 1.0)
+            xs.append(np.rint(img * 255.0))
+            ys.append(c)
+    x = np.asarray(xs, np.float32)
+    y = np.asarray(ys, np.int32)
+    perm = rng.permutation(len(y))
+    return x[perm], y[perm]
+
+
+def lyapunov_target(x: np.ndarray) -> np.ndarray:
+    """A Lyapunov-like positive-definite target on the pendulum box:
+    V(x) = 0.6 x1^2 + 0.4 x2^2 + 0.25 x1 x2 + 0.05 (1 - cos x1)."""
+    x1, x2 = x[..., 0], x[..., 1]
+    return 0.6 * x1**2 + 0.4 * x2**2 + 0.25 * x1 * x2 + 0.05 * (1.0 - np.cos(x1))
+
+
+def pendulum(rng: np.random.RandomState, n: int):
+    """Random training points in [-6, 6]^2 with Lyapunov targets."""
+    x = rng.uniform(-6.0, 6.0, size=(n, 2)).astype(np.float32)
+    v = lyapunov_target(x).astype(np.float32)[:, None]
+    return x, v
+
+
+def pendulum_grid(per_axis: int):
+    """Evaluation grid over [-6, 6]^2; per_axis = 2^m + 1 keeps every
+    coordinate exactly representable at small k."""
+    t = np.linspace(-6.0, 6.0, per_axis)
+    xx, yy = np.meshgrid(t, t)
+    return np.stack([xx.reshape(-1), yy.reshape(-1)], axis=-1).astype(np.float32)

@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT HLO).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness path; real-TPU
+performance is *estimated structurally* from the BlockSpec tiling (see
+DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf).
+"""
+
+from .dense import dense, DENSE_BLOCK_M, DENSE_BLOCK_N, DENSE_BLOCK_K
+from .roundk import round_to_precision
+from .softmax import softmax
+
+__all__ = [
+    "dense",
+    "round_to_precision",
+    "softmax",
+    "DENSE_BLOCK_M",
+    "DENSE_BLOCK_N",
+    "DENSE_BLOCK_K",
+]

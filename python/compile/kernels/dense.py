@@ -1,0 +1,94 @@
+"""Pallas kernel: tiled dense layer ``y = x @ W + b``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the GEMM is tiled into
+(BLOCK_M, BLOCK_K) x (BLOCK_K, BLOCK_N) VMEM-resident blocks via BlockSpec,
+with an MXU-aligned 128-lane inner dimension; the K loop is the innermost
+grid axis so partial products accumulate in the output block across grid
+steps (the standard Pallas accumulation idiom). Inputs whose dimensions are
+not multiples of the block sizes are zero-padded by the wrapper and the
+result is sliced back — zero padding is exact for a matmul.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile sizes (f32: 8x128 VPU lanes, 128x128 MXU).
+DENSE_BLOCK_M = 8
+DENSE_BLOCK_N = 128
+DENSE_BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (M, K) x (K, N) tile; accumulates over the K grid axis."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(a, rows, cols):
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+@jax.jit
+def dense(x, w, b):
+    """``x: [batch, n_in] (or [n_in])``, ``w: [n_in, n_out]``, ``b: [n_out]``.
+
+    Returns ``x @ w + b`` with the matmul computed by the tiled Pallas
+    kernel.
+    """
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"dense: x has {k} features, w expects {k2}"
+
+    bm = min(DENSE_BLOCK_M, _ceil_mult(m))
+    bn = min(DENSE_BLOCK_N, _ceil_mult(n))
+    bk = min(DENSE_BLOCK_K, _ceil_mult(k))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+
+    xp = _pad_to(x.astype(jnp.float32), mp, kp)
+    wp = _pad_to(w.astype(jnp.float32), kp, np_)
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+
+    y = out[:m, :n] + b[None, :]
+    return y[0] if squeeze else y
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def _ceil_mult(v: int) -> int:
+    """Smallest power of two >= v (tiles for tiny dimensions)."""
+    p = 1
+    while p < v:
+        p *= 2
+    return p
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dense_ref_free(x, w, b):
+    """Non-Pallas fallback used while debugging lowering issues."""
+    return x @ w + b

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal:
+pytest asserts kernel == ref across shapes and dtypes via hypothesis)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b):
+    """y = x @ w + b."""
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(w, jnp.float32) + b
+
+
+def softmax_ref(x):
+    x = jnp.asarray(x, jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def conv2d_ref(x, kernel, bias, stride=1, padding="SAME"):
+    """NHWC x HWIO conv. ``x: [h, w, cin]`` (single sample) or NHWC batch."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        kernel.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + bias
+    return y[0] if squeeze else y
+
+
+def depthwise_ref(x, kernel, bias, stride=1, padding="SAME"):
+    """Depthwise conv; ``kernel: [kh, kw, c]``."""
+    c = kernel.shape[-1]
+    k = kernel[..., None, :] * np.eye(c, dtype=np.float32)[None, None, :, :]
+    # Equivalent grouped formulation: HWIO with feature_group_count = c.
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        kernel[:, :, None, :].astype(jnp.float32),  # HW1C -> HWIO, groups=c
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    ) + bias
+    del k
+    return y[0] if squeeze else y
+
+
+def max_pool_ref(x, ph, pw):
+    """``x: [h, w, c]``; non-overlapping windows (stride = pool)."""
+    h, w, c = x.shape
+    x = x.reshape(h // ph, ph, w // pw, pw, c)
+    return x.max(axis=(1, 3))
+
+
+def avg_pool_ref(x, ph, pw):
+    h, w, c = x.shape
+    x = x.reshape(h // ph, ph, w // pw, pw, c)
+    return x.mean(axis=(1, 3))
+
+
+def batch_norm_ref(x, gamma, beta, mean, var, eps):
+    return gamma * (x - mean) / jnp.sqrt(var + eps) + beta
+
+
+def roundk_ref(x, k: int):
+    """NumPy reference for round-to-k-mantissa-bits (RTNE) on f32."""
+    x = np.asarray(x, np.float32)
+    if k == 24:
+        return x
+    drop = 24 - k
+    bits = x.view(np.int32)
+    mask = np.int32((1 << drop) - 1)
+    tail = bits & mask
+    truncated = bits & ~mask
+    half = np.int32(1 << (drop - 1))
+    kept_lsb = (truncated >> drop) & 1
+    round_up = (tail > half) | ((tail == half) & (kept_lsb == 1))
+    out_bits = truncated + np.where(round_up, np.int32(1 << drop), np.int32(0))
+    out = out_bits.view(np.float32)
+    return np.where(np.isfinite(x), np.where(x == 0.0, x, out), x).astype(np.float32)

@@ -1,0 +1,53 @@
+"""Pallas kernel: round f32 values to k mantissa bits (RTNE).
+
+The numeric-format primitive of the reproduction: emulates storing a tensor
+in a precision-k floating-point format (k counts the implicit leading 1, so
+k = 24 is the f32 identity) with round-to-nearest-even, exponent range
+unchanged. This is the Rust `quant::round_to_precision` twin; the two are
+cross-checked through the PJRT runtime in `rust/tests/runtime_e2e.rs`.
+
+TPU mapping: a pure VPU elementwise bit-twiddle (bitcast + mask + add); it
+fuses into the surrounding computation and is memory-bound, so the BlockSpec
+keeps whole rows resident in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _roundk_kernel(x_ref, o_ref, *, drop: int):
+    """Round the block in x_ref to (24 - drop) mantissa bits."""
+    x = x_ref[...]
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)
+    mask = jnp.int32((1 << drop) - 1)
+    tail = jnp.bitwise_and(bits, mask)
+    truncated = jnp.bitwise_and(bits, jnp.bitwise_not(mask))
+    half = jnp.int32(1 << (drop - 1))
+    kept_lsb = jnp.bitwise_and(jax.lax.shift_right_logical(truncated, drop), 1)
+    round_up = (tail > half) | ((tail == half) & (kept_lsb == 1))
+    out_bits = truncated + jnp.where(round_up, jnp.int32(1 << drop), jnp.int32(0))
+    out = jax.lax.bitcast_convert_type(out_bits, jnp.float32)
+    # Zero stays exactly zero (and keeps its sign); non-finite pass through.
+    o_ref[...] = jnp.where(jnp.isfinite(x), jnp.where(x == 0.0, x, out), x)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def round_to_precision(x, k: int):
+    """Round an f32 array to ``k`` mantissa bits, round-to-nearest-even.
+
+    ``k`` must be in [2, 24]; ``k = 24`` is the identity.
+    """
+    if not 2 <= k <= 24:
+        raise ValueError(f"k must be in [2, 24], got {k}")
+    if k == 24:
+        return jnp.asarray(x, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    kernel = functools.partial(_roundk_kernel, drop=24 - k)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,236 @@
+"""Layer-2: the evaluation networks as JAX functions calling the L1
+Pallas kernels.
+
+Three models (matching the paper's Table I workloads, scaled per DESIGN.md
+§Substitutions):
+
+* ``digits``       — Dense(784->512) ReLU Dense(512->256) ReLU
+                     Dense(256->10) Softmax (the paper's MNIST MLP shape).
+* ``mobilenet_mini`` — Conv/BN/ReLU + depthwise-separable stages + Dense +
+                     Softmax on 16x16x3 images (the MobileNet layer mix).
+* ``pendulum``     — Dense tanh Dense tanh on R^2 (the neural Lyapunov
+                     function of Chang et al.: two Dense, two tanh).
+
+Each forward function takes ``(params, x, k=None)``; with ``k`` set, every
+materialized tensor (weights on entry, activations after each layer) is
+rounded to k mantissa bits via the Pallas ``roundk`` kernel — *storage
+emulation* of a precision-k format (compute in f32, store in k bits), the
+deployment model of bfloat16-style hardware. The Rust `quant::EmulatedFp`
+provides the stricter per-operation emulation; CAA bounds cover both.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense as dense_kernel
+from .kernels import round_to_precision, softmax
+
+
+def _maybe_round(x, k):
+    return x if k is None else round_to_precision(x, k)
+
+
+# ---------------------------------------------------------------------------
+# layer helpers (all take/return channels-last single-sample tensors)
+# ---------------------------------------------------------------------------
+
+def _same_pads(size: int, kernel: int, stride: int):
+    out = -(-size // stride)
+    pad = max((out - 1) * stride + kernel - size, 0)
+    return pad // 2, pad - pad // 2, out
+
+
+def im2col(x, kh: int, kw: int, stride: int, padding: str):
+    """``x: [h, w, cin]`` -> (patches ``[oh*ow, kh*kw*cin]``, oh, ow).
+    Patch feature order is (ky, kx, cin) — matching an HWIO kernel
+    reshaped to ``[kh*kw*cin, cout]``."""
+    h, w, cin = x.shape
+    if padding.upper() == "SAME":
+        pt, pb, oh = _same_pads(h, kh, stride)
+        pl_, pr, ow = _same_pads(w, kw, stride)
+        x = jnp.pad(x, ((pt, pb), (pl_, pr), (0, 0)))
+    else:
+        oh = (h - kh) // stride + 1
+        ow = (w - kw) // stride + 1
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            patch = x[ky : ky + (oh - 1) * stride + 1 : stride,
+                      kx : kx + (ow - 1) * stride + 1 : stride, :]
+            cols.append(patch)
+    stacked = jnp.stack(cols, axis=2)  # [oh, ow, kh*kw, cin]
+    return stacked.reshape(oh * ow, kh * kw * cin), oh, ow
+
+
+def conv2d(x, kernel, bias, stride: int, padding: str):
+    """Convolution as im2col + the tiled Pallas GEMM (the TPU mapping of
+    the paper's convolutional dot products). ``kernel: [kh, kw, cin, cout]``."""
+    kh, kw, cin, cout = kernel.shape
+    patches, oh, ow = im2col(x, kh, kw, stride, padding)
+    w2 = kernel.reshape(kh * kw * cin, cout)
+    y = dense_kernel(patches, w2, bias)
+    return y.reshape(oh, ow, cout)
+
+
+def depthwise2d(x, kernel, bias, stride: int, padding: str):
+    """Depthwise convolution; ``kernel: [kh, kw, c]``. The per-channel
+    contraction is a small einsum (VPU work, not MXU; the GEMMs dominate)."""
+    kh, kw, c = kernel.shape
+    h, w, _ = x.shape
+    if padding.upper() == "SAME":
+        pt, pb, oh = _same_pads(h, kh, stride)
+        pl_, pr, ow = _same_pads(w, kw, stride)
+        xp = jnp.pad(x, ((pt, pb), (pl_, pr), (0, 0)))
+    else:
+        oh = (h - kh) // stride + 1
+        ow = (w - kw) // stride + 1
+        xp = x
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            cols.append(
+                xp[ky : ky + (oh - 1) * stride + 1 : stride,
+                   kx : kx + (ow - 1) * stride + 1 : stride, :]
+            )
+    stacked = jnp.stack(cols, axis=2)  # [oh, ow, kh*kw, c]
+    return jnp.einsum("abkc,kc->abc", stacked, kernel.reshape(kh * kw, c)) + bias
+
+
+def max_pool(x, ph: int, pw: int):
+    h, w, c = x.shape
+    return x.reshape(h // ph, ph, w // pw, pw, c).max(axis=(1, 3))
+
+
+def batch_norm_infer(x, g):
+    """Inference-mode BN with stored statistics ``g = (gamma, beta, mean, var, eps)``."""
+    gamma, beta, mean, var, eps = g
+    return gamma * (x - mean) / jnp.sqrt(var + eps) + beta
+
+
+# ---------------------------------------------------------------------------
+# parameter initialization
+# ---------------------------------------------------------------------------
+
+def _glorot(rng, fan_in, fan_out, shape):
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return rng.uniform(-limit, limit, size=shape).astype("float32")
+
+
+def init_digits(rng):
+    return {
+        "w1": _glorot(rng, 784, 512, (784, 512)),
+        "b1": jnp.zeros(512, jnp.float32),
+        "w2": _glorot(rng, 512, 256, (512, 256)),
+        "b2": jnp.zeros(256, jnp.float32),
+        "w3": _glorot(rng, 256, 10, (256, 10)),
+        "b3": jnp.zeros(10, jnp.float32),
+    }
+
+
+def init_mobilenet_mini(rng):
+    def bn(c):
+        return {
+            "gamma": jnp.ones(c, jnp.float32),
+            "beta": jnp.zeros(c, jnp.float32),
+            "mean": jnp.zeros(c, jnp.float32),
+            "var": jnp.ones(c, jnp.float32),
+        }
+
+    return {
+        "c1": _glorot(rng, 27, 8, (3, 3, 3, 8)),
+        "c1b": jnp.zeros(8, jnp.float32),
+        "bn1": bn(8),
+        "dw2": _glorot(rng, 9, 1, (3, 3, 8)),
+        "dw2b": jnp.zeros(8, jnp.float32),
+        "pw2": _glorot(rng, 8, 16, (1, 1, 8, 16)),
+        "pw2b": jnp.zeros(16, jnp.float32),
+        "bn2": bn(16),
+        "dw3": _glorot(rng, 9, 1, (3, 3, 16)),
+        "dw3b": jnp.zeros(16, jnp.float32),
+        "pw3": _glorot(rng, 16, 32, (1, 1, 16, 32)),
+        "pw3b": jnp.zeros(32, jnp.float32),
+        "bn3": bn(32),
+        "w_out": _glorot(rng, 512, 10, (512, 10)),
+        "b_out": jnp.zeros(10, jnp.float32),
+    }
+
+
+def init_pendulum(rng):
+    # The paper's Pendulum topology: two Dense layers, two tanh activations
+    # (Chang et al. NeurIPS'19).
+    return {
+        "w1": _glorot(rng, 2, 16, (2, 16)),
+        "b1": jnp.zeros(16, jnp.float32),
+        "w2": _glorot(rng, 16, 1, (16, 1)),
+        "b2": jnp.zeros(1, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward passes (single-sample; batched training wrappers use vmap)
+# ---------------------------------------------------------------------------
+
+BN_EPS = 1e-3
+
+
+def digits_fwd(params, x, k=None):
+    """``x: [784]`` raw pixels (the /255 normalization is folded into w1 at
+    export time — see train.fold_input_scale)."""
+    p = {n: _maybe_round(v, k) for n, v in params.items()}
+    h = _maybe_round(jnp.maximum(dense_kernel(x, p["w1"], p["b1"]), 0.0), k)
+    h = _maybe_round(jnp.maximum(dense_kernel(h, p["w2"], p["b2"]), 0.0), k)
+    logits = _maybe_round(dense_kernel(h, p["w3"], p["b3"]), k)
+    return _maybe_round(softmax(logits), k)
+
+
+def _round_tree(params, k):
+    def rec(v):
+        if isinstance(v, dict):
+            return {n: rec(x) for n, x in v.items()}
+        return _maybe_round(v, k)
+
+    return rec(params)
+
+
+def mobilenet_mini_fwd(params, x, k=None):
+    """``x: [16, 16, 3]`` raw pixels (normalization folded into c1)."""
+    p = _round_tree(params, k)
+
+    def bn(x, g):
+        return batch_norm_infer(x, (g["gamma"], g["beta"], g["mean"], g["var"], BN_EPS))
+
+    r = lambda t: _maybe_round(t, k)
+    h = r(jnp.maximum(bn(conv2d(x, p["c1"], p["c1b"], 1, "SAME"), p["bn1"]), 0.0))
+    h = r(jnp.maximum(depthwise2d(h, p["dw2"], p["dw2b"], 1, "SAME"), 0.0))
+    h = r(jnp.maximum(bn(conv2d(h, p["pw2"], p["pw2b"], 1, "SAME"), p["bn2"]), 0.0))
+    h = r(jnp.maximum(depthwise2d(h, p["dw3"], p["dw3b"], 2, "SAME"), 0.0))
+    h = r(jnp.maximum(bn(conv2d(h, p["pw3"], p["pw3b"], 1, "SAME"), p["bn3"]), 0.0))
+    h = r(max_pool(h, 2, 2))  # [4, 4, 32]
+    logits = r(dense_kernel(h.reshape(-1), p["w_out"], p["b_out"]))
+    return r(softmax(logits))
+
+
+def pendulum_fwd(params, x, k=None):
+    """``x: [2]`` -> scalar Lyapunov value ``[1]`` (Dense tanh Dense tanh)."""
+    p = {n: _maybe_round(v, k) for n, v in params.items()}
+    h = _maybe_round(jnp.tanh(dense_kernel(x, p["w1"], p["b1"])), k)
+    return _maybe_round(jnp.tanh(dense_kernel(h, p["w2"], p["b2"])), k)
+
+
+MODELS = {
+    "digits": {"fwd": digits_fwd, "init": init_digits, "input_shape": (784,), "output_shape": (10,)},
+    "mobilenet_mini": {
+        "fwd": mobilenet_mini_fwd,
+        "init": init_mobilenet_mini,
+        "input_shape": (16, 16, 3),
+        "output_shape": (10,),
+    },
+    "pendulum": {
+        "fwd": pendulum_fwd,
+        "init": init_pendulum,
+        "input_shape": (2,),
+        "output_shape": (1,),
+    },
+}

@@ -1,0 +1,216 @@
+"""Build-time training of the three evaluation networks.
+
+Hand-rolled Adam on ``jax.grad`` (no optax in the build image). Training
+uses fast pure-XLA forwards (lax.conv / jnp.matmul); the Pallas-kernel
+forwards in :mod:`compile.model` are the *inference* path that gets
+AOT-lowered — pytest asserts the two agree on the trained parameters.
+
+After training, the input normalization (/255 on integer pixels) is folded
+into the first linear layer (`fold_input_scale`), so the deployed network
+consumes raw [0, 255] data — which is exactly representable for k >= 8,
+enabling the paper-faithful `exact_inputs` analysis mode.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import datagen
+from .model import BN_EPS
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+# ---------------------------------------------------------------------------
+# digits MLP
+# ---------------------------------------------------------------------------
+
+def _digits_logits(params, xb):
+    h = jnp.maximum(xb @ params["w1"] + params["b1"], 0.0)
+    h = jnp.maximum(h @ params["w2"] + params["b2"], 0.0)
+    return h @ params["w3"] + params["b3"]
+
+
+def train_digits(params, seed=0, steps=400, batch=64, n_per_class=40, lr=2e-3):
+    """Returns (params, final_accuracy). Trains on *normalized* pixels."""
+    rng = np.random.RandomState(seed)
+    x_raw, y = datagen.digits(rng, 28, n_per_class)
+    x = jnp.asarray(x_raw / 255.0)
+    y = jnp.asarray(y)
+
+    @jax.jit
+    def loss_fn(p, xb, yb):
+        return cross_entropy(_digits_logits(p, xb), yb)
+
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    state = adam_init(params)
+    n = x.shape[0]
+    for step in range(steps):
+        idx = rng.randint(0, n, size=batch)
+        grads = grad_fn(params, x[idx], y[idx])
+        params, state = adam_step(params, grads, state, lr=lr)
+    preds = jnp.argmax(_digits_logits(params, x), axis=1)
+    acc = float(jnp.mean((preds == y).astype(jnp.float32)))
+    return params, acc
+
+
+def fold_input_scale(params, first_weight_key: str, scale: float):
+    """Fold ``x/scale`` normalization into the first linear layer so the
+    deployed network consumes raw integer pixels."""
+    p = dict(params)
+    p[first_weight_key] = params[first_weight_key] / scale
+    return p
+
+
+# ---------------------------------------------------------------------------
+# mobilenet-mini CNN
+# ---------------------------------------------------------------------------
+
+def _conv(x, k, b, stride):
+    return jax.lax.conv_general_dilated(
+        x, k, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    ) + b
+
+
+def _dwconv(x, k, b, stride):
+    c = k.shape[-1]
+    return jax.lax.conv_general_dilated(
+        x,
+        k[:, :, None, :],
+        (stride, stride),
+        "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    ) + b
+
+
+def _bn_train(x, g, axes=(0, 1, 2)):
+    mu = jnp.mean(x, axis=axes)
+    var = jnp.var(x, axis=axes)
+    y = g["gamma"] * (x - mu) / jnp.sqrt(var + BN_EPS) + g["beta"]
+    return y, mu, var
+
+
+def _mobilenet_forward_train(params, xb):
+    """Batched training forward. Returns (logits, stats dict of (mu, var))."""
+    stats = {}
+
+    def bn(x, name):
+        y, mu, var = _bn_train(x, params[name])
+        stats[name] = (mu, var)
+        return y
+
+    h = jnp.maximum(bn(_conv(xb, params["c1"], params["c1b"], 1), "bn1"), 0.0)
+    h = jnp.maximum(_dwconv(h, params["dw2"], params["dw2b"], 1), 0.0)
+    h = jnp.maximum(bn(_conv(h, params["pw2"], params["pw2b"], 1), "bn2"), 0.0)
+    h = jnp.maximum(_dwconv(h, params["dw3"], params["dw3b"], 2), 0.0)
+    h = jnp.maximum(bn(_conv(h, params["pw3"], params["pw3b"], 1), "bn3"), 0.0)
+    b, hh, ww, c = h.shape
+    h = h.reshape(b, hh // 2, 2, ww // 2, 2, c).max(axis=(2, 4))
+    logits = h.reshape(b, -1) @ params["w_out"] + params["b_out"]
+    return logits, stats
+
+
+def batchnorm_apply(x, g, stats):
+    mu, var = stats
+    return g["gamma"] * (x - mu) / jnp.sqrt(var + BN_EPS) + g["beta"]
+
+
+def train_mobilenet_mini(params, seed=1, steps=300, batch=32, n_per_class=30, lr=2e-3):
+    """Returns (params-with-running-stats, accuracy). Normalized pixels."""
+    rng = np.random.RandomState(seed)
+    x_raw, y = datagen.color_blobs(rng, 16, 10, n_per_class)
+    x = jnp.asarray(x_raw / 255.0)
+    y = jnp.asarray(y)
+
+    def loss_fn(p, xb, yb):
+        logits, _ = _mobilenet_forward_train(p, xb)
+        return cross_entropy(logits, yb)
+
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    fwd = jax.jit(_mobilenet_forward_train)
+    state = adam_init(params)
+    running = {name: None for name in ("bn1", "bn2", "bn3")}
+    momentum = 0.9
+    n = x.shape[0]
+    for step in range(steps):
+        idx = rng.randint(0, n, size=batch)
+        grads = grad_fn(params, x[idx], y[idx])
+        # BN statistics are not trained by gradient.
+        for name in running:
+            grads[name] = jax.tree_util.tree_map(jnp.zeros_like, grads[name])
+        params, state = adam_step(params, grads, state, lr=lr)
+        _, stats = fwd(params, x[idx])
+        for name, (mu, var) in stats.items():
+            if running[name] is None:
+                running[name] = (mu, var)
+            else:
+                rm, rv = running[name]
+                running[name] = (
+                    momentum * rm + (1 - momentum) * mu,
+                    momentum * rv + (1 - momentum) * var,
+                )
+    for name, (mu, var) in running.items():
+        params[name] = dict(params[name])
+        params[name]["mean"] = mu
+        params[name]["var"] = var
+    logits, _ = fwd(params, x)
+    acc = float(jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32)))
+    return params, acc
+
+
+# ---------------------------------------------------------------------------
+# pendulum Lyapunov net
+# ---------------------------------------------------------------------------
+
+def _pendulum_out(params, xb):
+    h = jnp.tanh(xb @ params["w1"] + params["b1"])
+    return jnp.tanh(h @ params["w2"] + params["b2"])
+
+
+def train_pendulum(params, seed=2, steps=600, batch=128, n=4000, lr=3e-3):
+    """Returns (params, final MSE)."""
+    rng = np.random.RandomState(seed)
+    x, v = datagen.pendulum(rng, n)
+    x = jnp.asarray(x)
+    v = jnp.asarray(v / 64.0)  # 2^6 rescale keeps targets in tanh range, exactly invertible
+
+    @jax.jit
+    def loss_fn(p, xb, vb):
+        return jnp.mean((_pendulum_out(p, xb) - vb) ** 2)
+
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    state = adam_init(params)
+    for step in range(steps):
+        idx = rng.randint(0, x.shape[0], size=batch)
+        grads = grad_fn(params, x[idx], v[idx])
+        params, state = adam_step(params, grads, state, lr=lr)
+    mse = float(loss_fn(params, x, v))
+    return params, mse

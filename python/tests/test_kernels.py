@@ -1,0 +1,197 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes and value regimes — the CORE correctness signal
+for the compile path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, round_to_precision, softmax
+from compile.kernels import ref
+
+settings.register_profile("kernels", max_examples=40, deadline=None)
+settings.load_profile("kernels")
+
+
+def _arr(rng, *shape, scale=2.0):
+    return (rng.randn(*shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.integers(1, 17),
+    k=st.integers(1, 200),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(m, k, n, seed):
+    rng = np.random.RandomState(seed)
+    x, w, b = _arr(rng, m, k), _arr(rng, k, n), _arr(rng, n)
+    got = np.asarray(dense(x, w, b))
+    want = np.asarray(ref.dense_ref(x, w, b))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_dense_vector_input():
+    rng = np.random.RandomState(0)
+    x, w, b = _arr(rng, 33), _arr(rng, 33, 5), _arr(rng, 5)
+    got = np.asarray(dense(x, w, b))
+    assert got.shape == (5,)
+    np.testing.assert_allclose(got, np.asarray(x @ w + b), rtol=2e-5, atol=2e-4)
+
+
+def test_dense_blocked_path_exercised():
+    # Dimensions above one block force a multi-step K accumulation.
+    rng = np.random.RandomState(1)
+    x, w, b = _arr(rng, 16, 700), _arr(rng, 700, 300), _arr(rng, 300)
+    got = np.asarray(dense(x, w, b))
+    want = np.asarray(ref.dense_ref(x, w, b))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# softmax
+# ---------------------------------------------------------------------------
+
+@given(
+    rows=st.integers(1, 8),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 10.0, 80.0]),
+)
+def test_softmax_matches_ref(rows, n, seed, scale):
+    rng = np.random.RandomState(seed)
+    x = _arr(rng, rows, n, scale=scale)
+    got = np.asarray(softmax(x))
+    want = np.asarray(ref.softmax_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got.sum(axis=-1), 1.0, rtol=1e-5)
+
+
+def test_softmax_extreme_logits_stable():
+    x = np.array([[1000.0, 0.0, -1000.0]], np.float32)
+    got = np.asarray(softmax(x))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got[0, 0], 1.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# roundk
+# ---------------------------------------------------------------------------
+
+@given(
+    k=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-6, 1.0, 255.0, 1e6]),
+)
+def test_roundk_matches_ref(k, seed, scale):
+    rng = np.random.RandomState(seed)
+    x = _arr(rng, 64, scale=scale)
+    got = np.asarray(round_to_precision(x, k))
+    want = ref.roundk_ref(x, k)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(k=st.integers(2, 23), seed=st.integers(0, 2**31 - 1))
+def test_roundk_idempotent(k, seed):
+    rng = np.random.RandomState(seed)
+    x = _arr(rng, 32)
+    once = np.asarray(round_to_precision(x, k))
+    twice = np.asarray(round_to_precision(once, k))
+    np.testing.assert_array_equal(once, twice)
+
+
+@given(k=st.integers(4, 23), seed=st.integers(0, 2**31 - 1))
+def test_roundk_half_ulp(k, seed):
+    rng = np.random.RandomState(seed)
+    x = _arr(rng, 64)
+    x = x[x != 0.0]
+    got = np.asarray(round_to_precision(x, k))
+    u = 2.0 ** (1 - k)
+    assert (np.abs(got - x) <= 0.5 * u * np.abs(x) * (1 + 1e-6)).all()
+
+
+def test_roundk_known_values():
+    for k in (8, 11):
+        u = 2.0 ** (1 - k)
+        x = np.array([1.0 + u / 4, 1.0 + 0.76 * u, 1.0 + u / 2], np.float32)
+        got = np.asarray(round_to_precision(x, k))
+        np.testing.assert_array_equal(got, np.array([1.0, 1.0 + u, 1.0], np.float32))
+
+
+def test_roundk_identity_at_24():
+    x = np.array([0.1, -3.7, 1e-30], np.float32)
+    np.testing.assert_array_equal(np.asarray(round_to_precision(x, 24)), x)
+
+
+def test_roundk_preserves_zero_and_rejects_bad_k():
+    x = np.array([0.0, -0.0], np.float32)
+    got = np.asarray(round_to_precision(x, 8))
+    np.testing.assert_array_equal(got, x)
+    with pytest.raises(ValueError):
+        round_to_precision(x, 1)
+    with pytest.raises(ValueError):
+        round_to_precision(x, 25)
+
+
+# ---------------------------------------------------------------------------
+# conv / pooling / batchnorm oracles vs the model-layer implementations
+# ---------------------------------------------------------------------------
+
+@given(
+    h=st.integers(4, 12),
+    w=st.integers(4, 12),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 6),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_conv_matches_lax(h, w, cin, cout, stride, padding, seed):
+    from compile.model import conv2d
+
+    rng = np.random.RandomState(seed)
+    if padding == "VALID" and (h < 3 or w < 3):
+        return
+    x = _arr(rng, h, w, cin, scale=1.0)
+    kern = _arr(rng, 3, 3, cin, cout, scale=0.5)
+    b = _arr(rng, cout, scale=0.1)
+    got = np.asarray(conv2d(x, kern, b, stride, padding))
+    want = np.asarray(ref.conv2d_ref(x, kern, b, stride, padding))
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+@given(
+    h=st.integers(4, 10),
+    w=st.integers(4, 10),
+    c=st.integers(1, 6),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_matches_lax(h, w, c, stride, seed):
+    from compile.model import depthwise2d
+
+    rng = np.random.RandomState(seed)
+    x = _arr(rng, h, w, c, scale=1.0)
+    kern = _arr(rng, 3, 3, c, scale=0.5)
+    b = _arr(rng, c, scale=0.1)
+    got = np.asarray(depthwise2d(x, kern, b, stride, "SAME"))
+    want = np.asarray(ref.depthwise_ref(x, kern, b, stride, "SAME"))
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_max_pool_matches_ref():
+    rng = np.random.RandomState(3)
+    x = _arr(rng, 8, 8, 3)
+    from compile.model import max_pool
+
+    np.testing.assert_array_equal(
+        np.asarray(max_pool(x, 2, 2)), np.asarray(ref.max_pool_ref(x, 2, 2))
+    )

@@ -1,0 +1,120 @@
+"""L2 model tests: shapes, probability outputs, precision-emulated
+variants, and agreement between the training forward (pure XLA) and the
+inference forward (Pallas kernels) on shared parameters."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import datagen, model, train
+
+
+@pytest.fixture(scope="module")
+def rngs():
+    return np.random.RandomState(42)
+
+
+def test_digits_fwd_shapes_and_probs(rngs):
+    p = model.init_digits(rngs)
+    x = jnp.asarray(np.abs(rngs.randn(784)).astype(np.float32))
+    y = np.asarray(model.digits_fwd(p, x))
+    assert y.shape == (10,)
+    assert np.all(y >= 0) and abs(y.sum() - 1.0) < 1e-5
+
+
+def test_mobilenet_fwd_shapes_and_probs(rngs):
+    p = model.init_mobilenet_mini(rngs)
+    x = jnp.asarray(np.abs(rngs.randn(16, 16, 3)).astype(np.float32))
+    y = np.asarray(model.mobilenet_mini_fwd(p, x))
+    assert y.shape == (10,)
+    assert np.all(y >= 0) and abs(y.sum() - 1.0) < 1e-5
+
+
+def test_pendulum_fwd_shape(rngs):
+    p = model.init_pendulum(rngs)
+    y = np.asarray(model.pendulum_fwd(p, jnp.asarray(np.float32([1.0, -2.0]))))
+    assert y.shape == (1,)
+    assert np.isfinite(y).all()
+
+
+def test_precision_variant_deviates_but_tracks(rngs):
+    p = model.init_digits(rngs)
+    x = jnp.asarray((np.abs(rngs.randn(784)) * 50).astype(np.float32))
+    y = np.asarray(model.digits_fwd(p, x))
+    y8 = np.asarray(model.digits_fwd(p, x, k=8))
+    y20 = np.asarray(model.digits_fwd(p, x, k=20))
+    assert not np.array_equal(y, y8), "k=8 must actually round"
+    assert np.abs(y20 - y).max() < np.abs(y8 - y).max() + 1e-6, \
+        "higher precision must not be worse"
+    assert np.abs(y8 - y).max() < 0.05, "k=8 softmax outputs stay close"
+
+
+def test_train_fwd_matches_infer_fwd_digits(rngs):
+    # The pure-XLA training forward and the Pallas inference forward must
+    # agree on the same parameters.
+    p = model.init_digits(rngs)
+    xb = (np.abs(rngs.randn(4, 784)) * 0.5).astype(np.float32)
+    logits = np.asarray(train._digits_logits(p, jnp.asarray(xb)))
+    for i in range(4):
+        probs = np.asarray(model.digits_fwd(p, jnp.asarray(xb[i])))
+        want = np.exp(logits[i] - logits[i].max())
+        want /= want.sum()
+        np.testing.assert_allclose(probs, want, rtol=1e-4, atol=1e-6)
+
+
+def test_infer_fwd_matches_lax_reference_mobilenet(rngs):
+    # Rebuild the inference forward with lax-based oracles (stored BN
+    # stats) and compare to the Pallas/im2col forward.
+    from compile.kernels import ref
+
+    p = model.init_mobilenet_mini(rngs)
+    x = (np.abs(rngs.randn(16, 16, 3)) * 0.5).astype(np.float32)
+
+    def bn(h, g):
+        return np.asarray(
+            ref.batch_norm_ref(h, g["gamma"], g["beta"], g["mean"], g["var"], model.BN_EPS)
+        )
+
+    h = np.maximum(bn(np.asarray(ref.conv2d_ref(x, p["c1"], p["c1b"], 1)), p["bn1"]), 0)
+    h = np.maximum(np.asarray(ref.depthwise_ref(h, p["dw2"], p["dw2b"], 1)), 0)
+    h = np.maximum(bn(np.asarray(ref.conv2d_ref(h, p["pw2"], p["pw2b"], 1)), p["bn2"]), 0)
+    h = np.maximum(np.asarray(ref.depthwise_ref(h, p["dw3"], p["dw3b"], 2)), 0)
+    h = np.maximum(bn(np.asarray(ref.conv2d_ref(h, p["pw3"], p["pw3b"], 1)), p["bn3"]), 0)
+    h = np.asarray(ref.max_pool_ref(h, 2, 2))
+    logits = h.reshape(-1) @ np.asarray(p["w_out"]) + np.asarray(p["b_out"])
+    want = np.exp(logits - logits.max())
+    want /= want.sum()
+
+    probs = np.asarray(model.mobilenet_mini_fwd(p, jnp.asarray(x)))
+    np.testing.assert_allclose(probs, want, rtol=5e-4, atol=5e-5)
+
+
+def test_fold_input_scale_equivalence(rngs):
+    p = model.init_digits(rngs)
+    raw = np.rint(np.abs(rngs.randn(784)) * 80).astype(np.float32)
+    y_norm = np.asarray(model.digits_fwd(p, jnp.asarray(raw / 255.0)))
+    folded = train.fold_input_scale(p, "w1", 255.0)
+    y_raw = np.asarray(model.digits_fwd(folded, jnp.asarray(raw)))
+    np.testing.assert_allclose(y_raw, y_norm, rtol=1e-4, atol=1e-6)
+
+
+def test_datagen_pixels_are_exact_integers():
+    rng = np.random.RandomState(0)
+    x, y = datagen.digits(rng, 28, 2)
+    assert x.shape == (20, 784)
+    assert np.array_equal(x, np.rint(x)), "pixels must be integers"
+    assert x.min() >= 0 and x.max() <= 255
+    xb, yb = datagen.color_blobs(rng, 16, 10, 1)
+    assert np.array_equal(xb, np.rint(xb))
+
+
+def test_pendulum_grid_endpoints():
+    g = datagen.pendulum_grid(9)
+    assert g.shape == (81, 2)
+    assert g.min() == -6.0 and g.max() == 6.0
+
+
+def test_training_reduces_loss_quickly(rngs):
+    p = model.init_pendulum(rngs)
+    p2, mse = train.train_pendulum(p, steps=150)
+    assert mse < 0.05, f"pendulum must fit its quadratic target, mse={mse}"

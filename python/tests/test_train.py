@@ -1,0 +1,59 @@
+"""Training-path tests: optimizer behavior, determinism, generators."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import datagen, model, train
+
+
+def test_adam_reduces_quadratic():
+    params = {"x": jnp.asarray(np.float32([5.0, -3.0]))}
+    state = train.adam_init(params)
+    import jax
+
+    grad = jax.grad(lambda p: jnp.sum(p["x"] ** 2))
+    for _ in range(300):
+        params, state = train.adam_step(params, grad(params), state, lr=5e-2)
+    assert float(jnp.abs(params["x"]).max()) < 0.1
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray(np.float32([[2.0, 0.0, -1.0]]))
+    labels = jnp.asarray(np.int32([0]))
+    got = float(train.cross_entropy(logits, labels))
+    p = np.exp([2.0, 0.0, -1.0])
+    want = -np.log(p[0] / p.sum())
+    assert abs(got - want) < 1e-6
+
+
+def test_datagen_deterministic_by_seed():
+    a1, l1 = datagen.digits(np.random.RandomState(5), 12, 3)
+    a2, l2 = datagen.digits(np.random.RandomState(5), 12, 3)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(l1, l2)
+
+
+def test_digits_training_improves_over_chance():
+    rng = np.random.RandomState(0)
+    p = model.init_digits(rng)
+    p, acc = train.train_digits(p, steps=80, n_per_class=8)
+    assert acc > 0.5, f"10-class accuracy {acc} barely above chance"
+
+
+def test_bn_running_stats_exported():
+    rng = np.random.RandomState(1)
+    p = model.init_mobilenet_mini(rng)
+    p, _ = train.train_mobilenet_mini(p, steps=10, n_per_class=3)
+    for name in ("bn1", "bn2", "bn3"):
+        mean = np.asarray(p[name]["mean"])
+        var = np.asarray(p[name]["var"])
+        assert mean.shape == np.asarray(p[name]["gamma"]).shape
+        assert (var >= 0).all()
+        assert not np.allclose(mean, 0.0), "running mean never updated"
+
+
+def test_lyapunov_target_positive_definite_away_from_origin():
+    g = datagen.pendulum_grid(9)
+    v = datagen.lyapunov_target(g)
+    off_origin = np.abs(g).sum(axis=1) > 1.0
+    assert (v[off_origin] > 0).all()

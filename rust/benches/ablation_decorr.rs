@@ -1,0 +1,86 @@
+//! **A-decorr** — ablation of the paper's two "global insight" fixes:
+//! id-based decorrelation and min/max bound labels (§III). Measured on the
+//! structure that needs them most: the max-subtracted softmax.
+
+mod common;
+
+use rigor::analysis::{analyze_class, AnalysisConfig};
+use rigor::bench::Bencher;
+use rigor::caa::{max_many, Caa, Ctx};
+use rigor::interval::Interval;
+use rigor::model::zoo;
+use rigor::report::fmt_bound_u;
+
+fn main() {
+    let mut b = Bencher::new("ablation_decorr");
+
+    // ---- micro: the softmax exp-input range with/without labels -----------
+    println!("softmax exp-input knowledge (x - max(x), ranged logits):");
+    for (name, ctx) in [
+        ("labels + decorrelation", Ctx::new()),
+        ("no labels", Ctx::new().no_labels()),
+        ("no decorrelation", Ctx::new().no_decorrelation()),
+        ("neither", Ctx::new().no_labels().no_decorrelation()),
+    ] {
+        let mut xs = vec![
+            Caa::input(&ctx, Interval::new(0.0, 4.0), 3.0),
+            Caa::input(&ctx, Interval::new(0.0, 4.0), 1.0),
+            Caa::input(&ctx, Interval::new(0.0, 4.0), 2.0),
+        ];
+        let m = max_many(&ctx, &mut xs);
+        let e = xs[0].sub(&m, &ctx).exp(&ctx);
+        println!(
+            "  {name:<28} exp range hi = {:>12.4e}  (1.0 is ideal)",
+            e.ideal().hi()
+        );
+    }
+
+    // ---- micro: x - x decorrelation ---------------------------------------
+    println!("\nthe paper's decorrelation example (y = x; z = x - y), x in [-1,1]:");
+    for (name, ctx) in [("decorrelation on", Ctx::new()), ("decorrelation off", Ctx::new().no_decorrelation())] {
+        let x = Caa::input(&ctx, Interval::new(-1.0, 1.0), 0.5);
+        let y = x.clone(); // assignment copies the id
+        let z = x.sub(&y, &ctx);
+        println!(
+            "  {name:<28} z range = {}, δ̄ = {}, ε̄ = {}",
+            z.ideal(),
+            fmt_bound_u(z.abs_bound()),
+            fmt_bound_u(z.rel_bound())
+        );
+    }
+
+    // ---- macro: full model bounds with the features toggled ---------------
+    let (model, data) = common::trained("digits").unwrap_or_else(|| {
+        let mut rng = rigor::util::Rng::new(4);
+        (
+            zoo::scaled_mlp(4, 64, 48, 10),
+            rigor::data::synthetic::digits(&mut rng, 8, 1, 0.05),
+        )
+    });
+    let sample = &data.inputs[0];
+    println!("\nfull digits analysis with features toggled:");
+    println!("{:<28} {:>12} {:>12} {:>10}", "configuration", "abs bound", "rel bound", "time");
+    // Tailored u_max = 2^-21 (see table1 bench) keeps the rows finite.
+    let u21 = 2f64.powi(-21);
+    for (name, ctx) in [
+        ("full CAA", Ctx::with_u_max(u21)),
+        ("no labels", Ctx::with_u_max(u21).no_labels()),
+        ("no decorrelation", Ctx::with_u_max(u21).no_decorrelation()),
+        ("neither", Ctx::with_u_max(u21).no_labels().no_decorrelation()),
+    ] {
+        let cfg = AnalysisConfig { ctx, p_star: 0.6, input_radius: 0.0, exact_inputs: true };
+        let mut out = None;
+        let (_, stats) = b.bench_once(&format!("digits/{name}"), || {
+            out = Some(analyze_class(&model, &cfg, 0, sample).unwrap())
+        });
+        let a = out.unwrap();
+        println!(
+            "{name:<28} {:>12} {:>12} {:>10.1?}",
+            fmt_bound_u(a.max_abs_u),
+            fmt_bound_u(a.max_rel_u),
+            stats.mean
+        );
+    }
+
+    b.report();
+}

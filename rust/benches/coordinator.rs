@@ -1,0 +1,63 @@
+//! **A-scale (coordinator)** — throughput and parallel speedup of the L3
+//! job runtime: raw job throughput, backpressure behavior, and the
+//! end-to-end speedup of parallel per-class analysis over sequential.
+
+use rigor::analysis::{analyze_model, AnalysisConfig};
+use rigor::bench::Bencher;
+use rigor::coordinator::{analyze_model_parallel, Pool};
+use rigor::data::synthetic;
+use rigor::model::zoo;
+use rigor::util::Rng;
+
+fn main() {
+    let mut b = Bencher::new("coordinator");
+
+    // ---- raw job throughput -------------------------------------------------
+    for workers in [1usize, 2, 4, 8] {
+        let pool = Pool::new(workers, workers * 4);
+        let stats = b.bench(&format!("throughput/noop-jobs/w={workers}"), || {
+            pool.run_batch((0..256).collect::<Vec<_>>(), |i| i)
+        });
+        let jps = 256.0 / stats.mean.as_secs_f64();
+        println!("workers={workers}: {:.0} k noop jobs/s", jps / 1e3);
+    }
+
+    // ---- parallel analysis speedup -------------------------------------------
+    let model = zoo::scaled_mlp(3, 128, 96, 10);
+    let mut rng = Rng::new(5);
+    let data = synthetic::digits(&mut rng, 12, 2, 0.05)
+        .inputs
+        .iter()
+        .map(|i| i[..128].to_vec())
+        .collect::<Vec<_>>();
+    let data = rigor::data::Dataset {
+        input_shape: vec![128],
+        inputs: data,
+        labels: (0..20).map(|i| i % 10).collect(),
+    };
+    let cfg = AnalysisConfig::default();
+
+    let seq = b
+        .bench_once("analysis/sequential", || {
+            analyze_model(&model, &data, &cfg).unwrap()
+        })
+        .1
+        .mean;
+    println!("\nsequential 10-class analysis: {seq:.2?}");
+    for workers in [2usize, 4, 8] {
+        let pool = Pool::new(workers, 32);
+        let par = b
+            .bench_once(&format!("analysis/parallel/w={workers}"), || {
+                analyze_model_parallel(&model, &data, &cfg, &pool).unwrap()
+            })
+            .1
+            .mean;
+        println!(
+            "parallel w={workers}: {par:.2?}  speedup {:.2}x  (queue high-water {})",
+            seq.as_secs_f64() / par.as_secs_f64(),
+            pool.metrics().queue_high_water
+        );
+    }
+
+    b.report();
+}

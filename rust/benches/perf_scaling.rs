@@ -1,0 +1,88 @@
+//! **A-scale** — analysis-cost scaling and the allocation ablation.
+//!
+//! The paper's tool needed 4.2 h/class for 27M parameters and blamed
+//! "memory allocation deep in MPFI". This bench measures:
+//! 1. per-CAA-operation cost of the flat value-type design,
+//! 2. the same dot-product loop with per-op heap boxing (an MPFI-style
+//!    allocation pattern) for comparison,
+//! 3. analysis-time scaling vs parameter count (should be ~linear),
+//! 4. projected time for the paper's 27M-parameter MobileNet.
+
+use rigor::analysis::{analyze_class, AnalysisConfig};
+use rigor::bench::Bencher;
+use rigor::caa::{Caa, Ctx};
+use rigor::model::zoo;
+use rigor::util::Rng;
+
+fn main() {
+    let mut b = Bencher::new("perf_scaling");
+    let ctx = Ctx::new();
+    let mut rng = Rng::new(7);
+
+    // ---- 1+2: per-op cost, flat vs boxed -----------------------------------
+    let n = 4096;
+    let ws: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+    let xs: Vec<Caa> = (0..n).map(|_| Caa::param(&ctx, rng.range(0.0, 1.0))).collect();
+
+    let flat = b
+        .bench("dot4096/flat-caa", || {
+            let mut acc = Caa::exact(0.0);
+            for (w, x) in ws.iter().zip(&xs) {
+                let t = Caa::param(&ctx, *w).mul(x, &ctx);
+                acc = acc.add(&t, &ctx);
+            }
+            acc.abs_bound()
+        })
+        .mean;
+
+    // MPFI-style: every intermediate boxed on the heap (plus the clone an
+    // arbitrary-precision library would do internally).
+    let boxed = b
+        .bench("dot4096/boxed-caa (MPFI-style)", || {
+            let mut acc = Box::new(Caa::exact(0.0));
+            for (w, x) in ws.iter().zip(&xs) {
+                let w = Box::new(Caa::param(&ctx, *w));
+                let t = Box::new(w.mul(x, &ctx));
+                acc = Box::new(acc.add(&t.clone(), &ctx));
+            }
+            acc.abs_bound()
+        })
+        .mean;
+    println!(
+        "per-op cost: flat {:.0} ns/op, boxed {:.0} ns/op ({:.2}x)",
+        flat.as_nanos() as f64 / (2.0 * n as f64),
+        boxed.as_nanos() as f64 / (2.0 * n as f64),
+        boxed.as_secs_f64() / flat.as_secs_f64()
+    );
+
+    // ---- 3: scaling vs parameter count -------------------------------------
+    println!("\nanalysis time vs parameters (3-dense MLP, one class):");
+    println!("{:>10} {:>12} {:>14}", "params", "time", "ns/param");
+    let mut per_param = Vec::new();
+    for hidden in [32usize, 64, 128, 256, 512] {
+        let model = zoo::scaled_mlp(1, 256, hidden, 10);
+        let params = model.param_count();
+        let sample: Vec<f64> = (0..256).map(|i| (i % 7) as f64 / 7.0).collect();
+        let cfg = AnalysisConfig::default();
+        let mut out = None;
+        let (_, stats) = b.bench_once(&format!("analyze/mlp-h{hidden}"), || {
+            out = Some(analyze_class(&model, &cfg, 0, &sample).unwrap())
+        });
+        let nspp = stats.mean.as_nanos() as f64 / params as f64;
+        per_param.push(nspp);
+        println!("{params:>10} {:>12.1?} {nspp:>14.1}", stats.mean);
+    }
+    let spread = per_param.iter().cloned().fold(0.0f64, f64::max)
+        / per_param.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("ns/param spread across sizes: {spread:.2}x (1.0 = perfectly linear)");
+
+    // ---- 4: projection to the paper's MobileNet ---------------------------
+    let nspp = per_param.last().unwrap();
+    let projected = nspp * 27e6 * 2.0 / 1e9; // ~2 ops per parameter
+    println!(
+        "\nprojected 27M-parameter MobileNet analysis at {nspp:.0} ns/param: \
+         ~{projected:.0} s/class (paper: 15120 s/class on MPFI)"
+    );
+
+    b.report();
+}

@@ -1,0 +1,100 @@
+//! **E-acc-vs-k** — the motivating observation (paper §I): classification
+//! agreement with the reference stays high down to very low precision.
+//! Sweeps the AOT k-variant artifacts through PJRT (falls back to the Rust
+//! per-op emulation when artifacts are missing) and reports agreement and
+//! worst probability deviation per k.
+
+mod common;
+
+use rigor::bench::Bencher;
+use rigor::quant::unit_roundoff;
+use rigor::runtime::Runtime;
+
+fn main() {
+    let mut b = Bencher::new("precision_sweep");
+
+    if !Runtime::artifacts_available() {
+        eprintln!("[skip] artifacts missing — run `make artifacts`; falling back to engine sweep");
+        engine_fallback();
+        return;
+    }
+    let dir = Runtime::default_dir();
+    let mut rt = Runtime::open(&dir).expect("runtime");
+
+    for name in ["digits", "mobilenet_mini"] {
+        let data = rigor::data::Dataset::load(&dir.join("data").join(format!("{name}_eval.json")))
+            .expect("eval data");
+        println!("\n== {name}: agreement vs precision ({} samples) ==", data.len());
+        println!("{:>4} {:>12} {:>12} {:>14}", "k", "u", "agreement", "max |dev|");
+        for k in rt.precision_variants(name) {
+            let mut agree = 0usize;
+            let mut max_dev = 0.0f32;
+            let (_, stats) = b.bench_once(&format!("{name}/k={k}"), || {
+                for sample in &data.inputs {
+                    let s: Vec<f32> = sample.iter().map(|&v| v as f32).collect();
+                    let r = rt.run(name, "f32", &s).unwrap();
+                    let e = rt.run(name, &format!("k{k}"), &s).unwrap();
+                    if common::argmax32(&r) == common::argmax32(&e) {
+                        agree += 1;
+                    }
+                    for (a, c) in r.iter().zip(&e) {
+                        max_dev = max_dev.max((a - c).abs());
+                    }
+                }
+            });
+            let _ = stats;
+            println!(
+                "{k:>4} {:>12.2e} {:>9}/{:<3} {max_dev:>14.3e}",
+                unit_roundoff(k),
+                agree,
+                data.len()
+            );
+        }
+    }
+    println!("\nexpected shape (paper): near-perfect agreement down to k~8, cliff below.");
+    b.report();
+}
+
+/// Engine-only fallback: per-op emulation over a zoo model.
+fn engine_fallback() {
+    use rigor::model::zoo;
+    use rigor::quant::EmulatedFp;
+    use rigor::tensor::{EmuCtx, Tensor};
+
+    let model = zoo::scaled_mlp(7, 64, 48, 10);
+    let mut rng = rigor::util::Rng::new(9);
+    let data = rigor::data::synthetic::digits(&mut rng, 8, 4, 0.05);
+    println!("{:>4} {:>12}", "k", "agreement");
+    for k in [4u32, 6, 8, 10, 12, 16, 20] {
+        let ec = EmuCtx { k };
+        let mut agree = 0;
+        for input in &data.inputs {
+            let yr = model
+                .forward::<f64>(&(), Tensor::new(model.input_shape.clone(), input.clone()))
+                .unwrap();
+            let xe = Tensor::new(
+                model.input_shape.clone(),
+                input.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
+            );
+            let ye = model.forward::<EmulatedFp>(&ec, xe).unwrap();
+            let am_r = yr
+                .data()
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            let am_e = ye
+                .data()
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.v.partial_cmp(&b.1.v).unwrap())
+                .unwrap()
+                .0;
+            if am_r == am_e {
+                agree += 1;
+            }
+        }
+        println!("{k:>4} {:>9}/{:<3}", agree, data.inputs.len());
+    }
+}

@@ -1,0 +1,69 @@
+//! **E-softmax11/2** — empirical verification of the paper's eq. (11):
+//! the softmax layer turns an absolute input error bound δ̄ into a
+//! relative output error bounded by (11/2)·max|δ|, independent of the
+//! vector length n. We sweep n and δ̄, report the worst observed
+//! amplification, and check it against 5.5 and against the CAA softmax's
+//! own bounds.
+
+use rigor::analysis::softmax_theory::{eta_bound, max_amplification};
+use rigor::bench::Bencher;
+use rigor::caa::{Caa, Ctx};
+use rigor::interval::Interval;
+use rigor::layers::softmax_vec;
+
+fn main() {
+    let mut b = Bencher::new("softmax_bound");
+
+    println!("observed relative-error amplification of softmax (bound: 11/2 = 5.5)");
+    println!("{:>8} {:>12} {:>16} {:>10}", "n", "δ̄", "observed amp", "<= 5.5");
+    let mut worst_overall = 0.0f64;
+    for &n in &[2usize, 10, 100, 1000] {
+        for &delta in &[1e-6, 1e-4, 1e-2] {
+            let trials = if n >= 1000 { 30 } else { 120 };
+            let (amp, stats) = {
+                let mut amp = 0.0;
+                let s = b.bench(&format!("amplification/n={n}/delta={delta:.0e}"), || {
+                    amp = max_amplification(42, n, delta, trials);
+                    amp
+                });
+                (amp, s.mean)
+            };
+            let _ = stats;
+            worst_overall = worst_overall.max(amp);
+            println!("{n:>8} {delta:>12.0e} {amp:>16.4} {:>10}", amp <= 5.5);
+            assert!(amp <= 5.5, "eq. (11) violated: {amp} > 5.5");
+        }
+    }
+    println!("worst overall: {worst_overall:.4} (first-order theory: ~2)");
+    println!("η bound at δ̄=1e-2: {:.4e}", eta_bound(1e-2));
+
+    // CAA's own softmax bounds obey the same law: feed logits carrying
+    // δ̄ = 2u of absolute error, expect output rel bounds <~ 5.5·δ̄ + rounding.
+    let ctx = Ctx::new();
+    let delta_u = 2.0;
+    let logits: Vec<Caa> = [0.3f64, -1.2, 0.9, 2.0, -0.4]
+        .iter()
+        .map(|&v| {
+            Caa::from_parts(
+                &ctx,
+                v,
+                Interval::point(v),
+                Interval::new(v - delta_u * ctx.u_max, v + delta_u * ctx.u_max),
+                delta_u,
+                f64::INFINITY,
+            )
+        })
+        .collect();
+    let out = softmax_vec(&ctx, &logits);
+    println!("\nCAA softmax with δ̄ = {delta_u}u input error:");
+    for (i, o) in out.iter().enumerate() {
+        println!(
+            "  out[{i}]: rel bound {:.2}u (law scale: 5.5·δ̄ = {:.1}u + rounding)",
+            o.rel_bound(),
+            5.5 * delta_u
+        );
+        assert!(o.rel_bound().is_finite());
+    }
+
+    b.report();
+}

@@ -1,0 +1,132 @@
+//! **E-soundness** — the rigor contract, measured: for each model and each
+//! precision k, the worst observed deviation of an emulated precision-k
+//! run from the high-precision reference must stay below the CAA bound
+//! `δ̄·u`. Reported as the ratio bound/observed (the "rigor margin" —
+//! >= 1 always; close to 1 means the bound is tight).
+//!
+//! Two emulation paths are exercised:
+//! * Rust `EmulatedFp` (per-operation rounding — the model CAA covers), and
+//! * the AOT Pallas `roundk` artifacts through PJRT (storage rounding),
+//!   when artifacts are available.
+
+mod common;
+
+use rigor::analysis::{analyze_class, AnalysisConfig};
+use rigor::bench::Bencher;
+use rigor::model::zoo;
+use rigor::quant::{unit_roundoff, EmulatedFp};
+use rigor::runtime::Runtime;
+use rigor::tensor::{EmuCtx, Tensor};
+
+fn main() {
+    let mut b = Bencher::new("soundness_sweep");
+
+    let (model, data) = common::trained("digits").unwrap_or_else(|| {
+        let mut rng = rigor::util::Rng::new(4);
+        (
+            zoo::scaled_mlp(4, 64, 48, 10),
+            rigor::data::synthetic::digits(&mut rng, 8, 2, 0.05),
+        )
+    });
+
+    println!("per-op emulation (Rust EmulatedFp) vs CAA bound, {}:", model.name);
+    println!("{:>4} {:>14} {:>14} {:>12}", "k", "observed", "bound·u", "margin");
+    let samples: Vec<&Vec<f64>> = data.inputs.iter().take(8).collect();
+    for &k in &[8u32, 10, 12, 16, 20, 24] {
+        // Analyze *at* this precision (u_max = 2^(1-k)) — the paper's
+        // tailoring workflow; the parametric bound then applies to k.
+        let mut cfg = AnalysisConfig::default();
+        cfg.exact_inputs = true;
+        cfg.ctx = rigor::caa::Ctx::with_u_max(2f64.powi(1 - k as i32));
+        let mut worst_obs = 0.0f64;
+        let mut worst_bound = 0.0f64;
+        let (_, _stats) = b.bench_once(&format!("emulated/k={k}"), || {
+            for sample in &samples {
+                let a = analyze_class(&model, &cfg, 0, sample).unwrap();
+                let xr = Tensor::new(model.input_shape.clone(), (*sample).clone());
+                let yr = model.forward::<f64>(&(), xr).unwrap();
+                let ec = EmuCtx { k };
+                let xe = Tensor::new(
+                    model.input_shape.clone(),
+                    sample.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
+                );
+                let ye = model.forward::<EmulatedFp>(&ec, xe).unwrap();
+                for i in 0..yr.len() {
+                    let err = (ye.data()[i].v - yr.data()[i]).abs();
+                    worst_obs = worst_obs.max(err);
+                }
+                worst_bound = worst_bound.max(a.max_abs_u * unit_roundoff(k));
+            }
+        });
+        let margin = if worst_obs > 0.0 { worst_bound / worst_obs } else { f64::INFINITY };
+        println!("{k:>4} {worst_obs:>14.3e} {worst_bound:>14.3e} {margin:>11.1e}x");
+        assert!(worst_obs <= worst_bound, "SOUNDNESS VIOLATION at k={k}");
+    }
+
+    // Small well-conditioned net: margins here show the *tightness* of the
+    // bounds (the deep 784-dim net above shows worst-case-vs-average gap).
+    let small = zoo::tiny_mlp(42);
+    let mut rng = rigor::util::Rng::new(11);
+    let small_samples: Vec<Vec<f64>> =
+        (0..6).map(|_| (0..8).map(|_| rng.range(0.0, 1.0)).collect()).collect();
+    println!("\nper-op emulation vs CAA bound, tiny_mlp (well-conditioned):");
+    println!("{:>4} {:>14} {:>14} {:>12}", "k", "observed", "bound·u", "margin");
+    for &k in &[8u32, 12, 16, 20, 24] {
+        let mut cfg = AnalysisConfig::default();
+        cfg.ctx = rigor::caa::Ctx::with_u_max(2f64.powi(1 - k as i32));
+        let mut worst_obs = 0.0f64;
+        let mut worst_bound = 0.0f64;
+        for sample in &small_samples {
+            let a = analyze_class(&small, &cfg, 0, sample).unwrap();
+            let xr = Tensor::new(small.input_shape.clone(), sample.clone());
+            let yr = small.forward::<f64>(&(), xr).unwrap();
+            let ec = EmuCtx { k };
+            let xe = Tensor::new(
+                small.input_shape.clone(),
+                sample.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
+            );
+            let ye = small.forward::<EmulatedFp>(&ec, xe).unwrap();
+            for i in 0..yr.len() {
+                worst_obs = worst_obs.max((ye.data()[i].v - yr.data()[i]).abs());
+            }
+            worst_bound = worst_bound.max(a.max_abs_u * unit_roundoff(k));
+        }
+        let margin = if worst_obs > 0.0 { worst_bound / worst_obs } else { f64::INFINITY };
+        println!("{k:>4} {worst_obs:>14.3e} {worst_bound:>14.3e} {margin:>11.1e}x");
+        assert!(worst_obs <= worst_bound, "SOUNDNESS VIOLATION (tiny) at k={k}");
+    }
+
+    // Storage emulation through the AOT artifacts.
+    if Runtime::artifacts_available() {
+        let dir = Runtime::default_dir();
+        let mut rt = Runtime::open(&dir).expect("runtime");
+        println!("\nstorage emulation (PJRT roundk artifacts) vs CAA bound, digits:");
+        println!("{:>4} {:>14} {:>14} {:>12}", "k", "observed", "bound·u", "margin");
+        for k in rt.precision_variants("digits") {
+            if k < 8 {
+                continue; // coarser than any certifiable precision here
+            }
+            let mut cfg = AnalysisConfig::default();
+            cfg.exact_inputs = true;
+            cfg.ctx = rigor::caa::Ctx::with_u_max(2f64.powi(1 - k as i32));
+            let a = analyze_class(&model, &cfg, 0, &data.inputs[0]).unwrap();
+            let mut worst = 0.0f64;
+            for sample in data.inputs.iter().take(10) {
+                let s: Vec<f32> = sample.iter().map(|&v| v as f32).collect();
+                let r = rt.run("digits", "f32", &s).unwrap();
+                let e = rt.run("digits", &format!("k{k}"), &s).unwrap();
+                for (x, y) in r.iter().zip(&e) {
+                    worst = worst.max((x - y).abs() as f64);
+                }
+            }
+            let bound = a.max_abs_u * unit_roundoff(k);
+            let margin = if worst > 0.0 { bound / worst } else { f64::INFINITY };
+            println!("{k:>4} {worst:>14.3e} {bound:>14.3e} {margin:>11.1e}x");
+            // Storage rounding also stays within the per-op bound in
+            // practice; report (not assert) since the emulation models
+            // differ (DESIGN.md).
+        }
+    }
+
+    b.report();
+}

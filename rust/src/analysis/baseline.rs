@@ -1,0 +1,171 @@
+//! Baselines the experiments compare CAA against.
+//!
+//! * **IA-only** (`ia_only_class`): plain interval arithmetic without error
+//!   bounds — the enclosure distance between the rounded and ideal range is
+//!   the only error estimate it can give. This is what a naive rigorous
+//!   analysis looks like and it is dramatically looser than CAA.
+//! * **Sampling** (`sampling_estimate`): the non-rigorous "typical study"
+//!   the paper's introduction describes — run the network at emulated
+//!   precision k on test samples and report the worst observed deviation.
+//!   It *under*-estimates (no guarantee), bracketing CAA from below.
+
+use super::{AnalysisConfig, ClassAnalysis};
+use crate::caa::Caa;
+use crate::model::Model;
+use crate::quant::{unit_roundoff, EmulatedFp};
+use crate::tensor::{EmuCtx, Tensor};
+use crate::util::Stopwatch;
+use anyhow::Result;
+
+/// IA-only analysis of one class: bounds derived solely from the distance
+/// between the rounded and ideal enclosures, in units of u (evaluated at
+/// `u_max`, the loosest covered precision).
+pub fn ia_only_class(
+    model: &Model,
+    cfg: &AnalysisConfig,
+    class: usize,
+    sample: &[f64],
+) -> Result<ClassAnalysis> {
+    let sw = Stopwatch::start();
+    let ctx = cfg.ctx.clone().ia_only();
+    let input = super::caa_input_cfg(
+        &ctx,
+        &model.input_shape,
+        sample,
+        cfg.input_radius,
+        cfg.exact_inputs,
+    );
+    let out = model.forward::<Caa>(&ctx, input)?;
+    let outs = out.data();
+    let max_abs_u = outs
+        .iter()
+        .map(|o| ia_abs_estimate_u(o, ctx.u_max))
+        .fold(0.0f64, f64::max);
+    let max_rel_u = outs
+        .iter()
+        .map(|o| ia_rel_estimate_u(o, ctx.u_max))
+        .fold(0.0f64, f64::max);
+    let predicted = crate::caa::argmax_fp(outs);
+    Ok(ClassAnalysis {
+        class,
+        max_abs_u,
+        max_rel_u,
+        top1_rel_u: ia_rel_estimate_u(&outs[predicted], ctx.u_max),
+        predicted,
+        ambiguous: outs.len() > 1 && crate::caa::argmax_ambiguous(outs),
+        secs: sw.secs(),
+    })
+}
+
+/// Absolute error estimate available to a *single-interval* IA analysis,
+/// in units of u. A plain IA tool keeps one enclosure per quantity — it
+/// cannot separate the input data range from the accumulated rounding
+/// error (the paper's motivation for CAA) — so the only sound error claim
+/// it can make is the half-width of the final enclosure.
+pub fn ia_abs_estimate_u(o: &Caa, u_max: f64) -> f64 {
+    let r = o.rounded();
+    if !r.is_finite() {
+        return f64::INFINITY;
+    }
+    (r.width() / 2.0) / u_max
+}
+
+/// Relative error estimate from ranges alone (distance over mignitude).
+pub fn ia_rel_estimate_u(o: &Caa, u_max: f64) -> f64 {
+    let mig = o.ideal().mig();
+    if mig == 0.0 {
+        return f64::INFINITY;
+    }
+    ia_abs_estimate_u(o, u_max) / mig
+}
+
+/// Observed worst-case deviation of emulated precision-k runs from the f64
+/// reference over a set of samples. Returns `(max_abs, max_rel)` in units
+/// of `u = 2^(1-k)` — directly comparable to CAA bounds (which must
+/// dominate it: CAA >= observed, always).
+pub fn sampling_estimate(
+    model: &Model,
+    k: u32,
+    samples: &[Vec<f64>],
+) -> Result<(f64, f64)> {
+    let u = unit_roundoff(k);
+    let ec = EmuCtx { k };
+    let mut max_abs = 0.0f64;
+    let mut max_rel = 0.0f64;
+    for s in samples {
+        let xr = Tensor::new(model.input_shape.clone(), s.clone());
+        let yr = model.forward::<f64>(&(), xr)?;
+        let xe = Tensor::new(
+            model.input_shape.clone(),
+            s.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
+        );
+        let ye = model.forward::<EmulatedFp>(&ec, xe)?;
+        for (r, e) in yr.data().iter().zip(ye.data()) {
+            let d = (e.v - r).abs();
+            max_abs = max_abs.max(d / u);
+            if *r != 0.0 {
+                max_rel = max_rel.max(d / r.abs() / u);
+            }
+        }
+    }
+    Ok((max_abs, max_rel))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze_class;
+    use crate::model::zoo;
+    use crate::util::Rng;
+
+    #[test]
+    fn sampling_below_caa_bound() {
+        // The rigor sandwich: observed <= CAA for every sample and k.
+        let m = zoo::tiny_mlp(5);
+        let mut rng = Rng::new(2);
+        let samples: Vec<Vec<f64>> = (0..8)
+            .map(|_| (0..8).map(|_| rng.range(0.0, 1.0)).collect())
+            .collect();
+        for k in [8u32, 12, 16] {
+            let (obs_abs, _obs_rel) = sampling_estimate(&m, k, &samples).unwrap();
+            for s in &samples {
+                let caa = analyze_class(&m, &AnalysisConfig::default(), 0, s).unwrap();
+                assert!(
+                    caa.max_abs_u >= 0.0 && caa.max_abs_u.is_finite(),
+                    "CAA bound must exist for the MLP"
+                );
+                // The per-sample CAA bound dominates that sample's own
+                // deviation; the dataset max is checked against the max
+                // bound.
+                let _ = obs_abs;
+            }
+            let worst_bound = samples
+                .iter()
+                .map(|s| {
+                    analyze_class(&m, &AnalysisConfig::default(), 0, s)
+                        .unwrap()
+                        .max_abs_u
+                })
+                .fold(0.0f64, f64::max);
+            assert!(
+                worst_bound >= obs_abs,
+                "k={k}: observed {obs_abs} exceeds rigorous bound {worst_bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn ia_estimates_infinite_when_range_unbounded() {
+        let ctx = crate::caa::Ctx::new();
+        let o = Caa::make(
+            &ctx,
+            0.0,
+            crate::interval::Interval::new(-1.0, 1.0),
+            crate::interval::Interval::ENTIRE,
+            f64::INFINITY,
+            f64::INFINITY,
+        );
+        assert!(ia_abs_estimate_u(&o, ctx.u_max).is_infinite());
+        assert!(ia_rel_estimate_u(&o, ctx.u_max).is_infinite());
+    }
+}

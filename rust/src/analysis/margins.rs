@@ -1,0 +1,174 @@
+//! Error margins and precision tailoring (paper §IV).
+//!
+//! Given external knowledge that the top-1 confidence is at least
+//! `p* > 0.5` on all possible inputs, each output element may absorb an
+//! absolute FP error `μ = p* - 1/2` and a relative FP error
+//! `ν = (2p* - 1)/(2p* + 1)` without the argmax — the predicted class —
+//! ever flipping. Combining the margins with the CAA output bounds
+//! (expressed in units of `u = 2^(1-k)`) yields the minimum safe
+//! precision `k`.
+
+/// Classification error margins derived from a top-1 confidence floor.
+#[derive(Clone, Copy, Debug)]
+pub struct Margins {
+    pub p_star: f64,
+}
+
+impl Margins {
+    /// `p*` must exceed 1/2 (at exactly 1/2 no arithmetic can help —
+    /// paper §IV).
+    pub fn new(p_star: f64) -> anyhow::Result<Margins> {
+        if !(p_star > 0.5 && p_star <= 1.0) {
+            anyhow::bail!("p* must be in (1/2, 1], got {p_star}");
+        }
+        Ok(Margins { p_star })
+    }
+
+    /// Absolute error margin `μ = p* - 1/2` per output element.
+    pub fn abs_margin(&self) -> f64 {
+        self.p_star - 0.5
+    }
+
+    /// Relative error margin `ν = (2p* - 1)/(2p* + 1)`.
+    pub fn rel_margin(&self) -> f64 {
+        (2.0 * self.p_star - 1.0) / (2.0 * self.p_star + 1.0)
+    }
+}
+
+/// Smallest precision `k` such that `bound · 2^(1-k) <= margin`.
+/// `None` if the bound is infinite or the required k exceeds 53.
+fn k_for(bound_in_u: f64, margin: f64) -> Option<u32> {
+    debug_assert!(margin > 0.0);
+    if !bound_in_u.is_finite() {
+        return None;
+    }
+    if bound_in_u == 0.0 {
+        return Some(2);
+    }
+    // 2^(1-k) <= margin/bound  =>  k >= 1 + log2(bound/margin)
+    let k = (1.0 + (bound_in_u / margin).log2()).ceil().max(2.0);
+    if k > 53.0 {
+        None
+    } else {
+        Some(k as u32)
+    }
+}
+
+/// Minimum precision `k` that provably prevents misclassification, given
+/// the analysis output bounds (in units of u) and the margins. Either the
+/// absolute or the relative condition suffices (whichever allows the
+/// smaller k); the result is floored at `k_validity`, the smallest k the
+/// analysis covers (`u = 2^(1-k) <= u_max`).
+pub fn required_precision(
+    max_abs_u: f64,
+    max_rel_u: f64,
+    margins: Margins,
+    u_max: f64,
+) -> Option<u32> {
+    let k_validity = validity_floor(u_max);
+    let k_abs = k_for(max_abs_u, margins.abs_margin());
+    let k_rel = k_for(max_rel_u, margins.rel_margin());
+    let k = match (k_abs, k_rel) {
+        (Some(a), Some(r)) => a.min(r),
+        (Some(a), None) => a,
+        (None, Some(r)) => r,
+        (None, None) => return None,
+    };
+    Some(k.max(k_validity))
+}
+
+/// Smallest k with `2^(1-k) <= u_max`.
+pub fn validity_floor(u_max: f64) -> u32 {
+    let mut k = 2u32;
+    while 2f64.powi(1 - (k as i32)) > u_max {
+        k += 1;
+        if k > 64 {
+            break;
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_worked_example() {
+        // §IV: p* = 0.60 => ν = 1/11 = 0.0909..., i.e. "about 3.45 valid
+        // bits suffice" (log2(1/ν) = 3.459; the paper rounds to 3.45).
+        let m = Margins::new(0.60).unwrap();
+        assert!((m.rel_margin() - 1.0 / 11.0).abs() < 1e-15);
+        assert!(m.rel_margin() > 2f64.powf(-3.46));
+        assert!(m.rel_margin() < 2f64.powf(-3.45));
+        assert!((m.abs_margin() - 0.1).abs() < 1e-15);
+        // And the absolute-margin side of the worked example:
+        // 0.0909/5.5 > 1.65e-2, about 2^-6 fixed-point quantization.
+        let abs_in = m.rel_margin() / 5.5;
+        assert!(abs_in > 1.65e-2);
+        assert!(abs_in < 2f64.powi(-5));
+    }
+
+    #[test]
+    fn digits_row_reproduces_k8() {
+        // Table I Digits: 1.1u abs, 3.4u rel, u_max = 2^-7 => k = 8
+        // (margin alone would allow k < 8; the u_max validity floor binds,
+        // exactly as in the paper).
+        let m = Margins::new(0.60).unwrap();
+        let k = required_precision(1.1, 3.4, m, 2f64.powi(-7)).unwrap();
+        assert_eq!(k, 8);
+    }
+
+    #[test]
+    fn mobilenet_row_reproduces_k8() {
+        // Table I MobileNet: 22.4u abs, 11.5u rel => still k = 8.
+        let m = Margins::new(0.60).unwrap();
+        let k = required_precision(22.4, 11.5, m, 2f64.powi(-7)).unwrap();
+        assert_eq!(k, 8);
+    }
+
+    #[test]
+    fn margin_binds_for_loose_bounds() {
+        // Huge bounds push k above the validity floor.
+        let m = Margins::new(0.60).unwrap();
+        let k = required_precision(1e4, 1e4, m, 2f64.powi(-7)).unwrap();
+        // abs: 1e4 * 2^(1-k) <= 0.1 => k >= 1 + log2(1e5) = 17.6 => 18.
+        assert_eq!(k, 18);
+    }
+
+    #[test]
+    fn one_sided_bounds() {
+        let m = Margins::new(0.75).unwrap();
+        // Only an absolute bound (the Pendulum case).
+        let k = required_precision(1.7, f64::INFINITY, m, 2f64.powi(-7)).unwrap();
+        assert_eq!(k, 8);
+        // No bound at all.
+        assert_eq!(required_precision(f64::INFINITY, f64::INFINITY, m, 0.01), None);
+    }
+
+    #[test]
+    fn validity_floor_values() {
+        assert_eq!(validity_floor(2f64.powi(-7)), 8);
+        assert_eq!(validity_floor(2f64.powi(-11)), 12);
+        assert_eq!(validity_floor(0.25), 3);
+    }
+
+    #[test]
+    fn rejects_bad_p_star() {
+        assert!(Margins::new(0.5).is_err());
+        assert!(Margins::new(0.0).is_err());
+        assert!(Margins::new(1.5).is_err());
+        assert!(Margins::new(0.51).is_ok());
+    }
+
+    #[test]
+    fn k_monotone_in_bounds() {
+        let m = Margins::new(0.6).unwrap();
+        let mut last = 0;
+        for b in [0.5, 2.0, 8.0, 32.0, 1e3, 1e6] {
+            let k = required_precision(b, b, m, 2f64.powi(-7)).unwrap();
+            assert!(k >= last, "k must grow with looser bounds");
+            last = k;
+        }
+    }
+}

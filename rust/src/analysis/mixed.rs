@@ -1,0 +1,304 @@
+//! **Mixed-precision analysis and tuning** — the paper's §VI future-work
+//! item: "removing the global u and parameterizing the error analysis with
+//! the input/output precision".
+//!
+//! A mixed assignment gives every layer its own format `k_ℓ`
+//! (`u_ℓ = 2^(1-k_ℓ)`). The analysis runs layer by layer in the layer's
+//! own unit; at each format boundary the carried bounds are *rescaled*
+//! into the next layer's unit (`δ̄' = δ̄ · u_ℓ / u_{ℓ+1}` — exact algebra,
+//! rounded up) and the store-and-convert rounding of the boundary itself
+//! (one ½-ulp relative error in the destination format) is charged.
+//!
+//! Unlike the uniform analysis, a mixed run is *not* parametric in u: it
+//! certifies one concrete assignment. [`tune_mixed`] searches greedily for
+//! a cheap assignment: starting from a certified uniform k, it walks the
+//! layers and lowers each `k_ℓ` as far as the certification margin allows.
+
+use super::{caa_input_cfg, AnalysisConfig, Margins};
+use crate::caa::{badd, bmul, Caa, Ctx, RND_BASIC};
+use crate::data::Dataset;
+use crate::model::Model;
+use crate::quant::{round_to_precision, unit_roundoff};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Result of a mixed-precision analysis over one assignment.
+#[derive(Clone, Debug)]
+pub struct MixedAnalysis {
+    /// Per-layer mantissa widths.
+    pub ks: Vec<u32>,
+    /// Max absolute output error bound, **absolute** (not in units of u —
+    /// a mixed run has no single u).
+    pub max_abs: f64,
+    /// Max relative output error bound, dimensionless.
+    pub max_rel: f64,
+    /// Whether every class representative kept an unambiguous argmax and
+    /// met the p* margins.
+    pub certified: bool,
+}
+
+/// Convert a value's bounds from unit `u_from` to unit `u_to` and charge
+/// the format-conversion rounding (storing into the `u_to` format).
+fn rescale(v: &Caa, u_from: f64, u_to: f64) -> Caa {
+    let ratio = u_from / u_to;
+    // Bounds are nonnegative; multiply rounded up. The conversion itself
+    // is one rounding in the destination format: ε += 1/2, δ += |q|/2.
+    let abs = badd(bmul(v.abs_bound(), ratio), bmul(RND_BASIC, v.ideal().mag()));
+    let rel = badd(bmul(v.rel_bound(), ratio), RND_BASIC);
+    Caa::from_parts(
+        &Ctx::with_u_max(u_to),
+        v.fp(),
+        v.ideal(),
+        v.rounded(),
+        abs,
+        rel,
+    )
+}
+
+/// Analyze one sample under a per-layer precision assignment. Returns the
+/// output values in the *last* layer's unit.
+/// Validate an assignment against a model (shared by analysis and tuning).
+pub fn validate_assignment(model: &Model, ks: &[u32]) -> Result<()> {
+    if ks.len() != model.layers.len() {
+        bail!(
+            "assignment has {} entries for {} layers",
+            ks.len(),
+            model.layers.len()
+        );
+    }
+    if let Some(&bad) = ks.iter().find(|&&k| !(2..=53).contains(&k)) {
+        bail!("invalid per-layer precision {bad}");
+    }
+    Ok(())
+}
+
+pub fn analyze_sample_mixed(
+    model: &Model,
+    cfg: &AnalysisConfig,
+    ks: &[u32],
+    sample: &[f64],
+) -> Result<Vec<Caa>> {
+    validate_assignment(model, ks)?;
+    let mut u_prev = unit_roundoff(ks[0]);
+    let ctx0 = Ctx::with_u_max(u_prev);
+    let mut t = caa_input_cfg(&ctx0, &model.input_shape, sample, cfg.input_radius, cfg.exact_inputs);
+    for (layer, &k) in model.layers.iter().zip(ks) {
+        let u = unit_roundoff(k);
+        if u != u_prev {
+            // Format boundary: rescale bounds + charge the conversion.
+            let rescaled: Vec<Caa> = t.data().iter().map(|v| rescale(v, u_prev, u)).collect();
+            t = Tensor::new(t.shape().to_vec(), rescaled);
+            u_prev = u;
+        }
+        let ctx = Ctx::with_u_max(u);
+        t = layer.apply::<Caa>(&ctx, &t)?;
+    }
+    Ok(t.into_data())
+}
+
+/// Analyze all class representatives under an assignment and check the
+/// p*-margin certification.
+pub fn analyze_mixed(
+    model: &Model,
+    data: &Dataset,
+    cfg: &AnalysisConfig,
+    ks: &[u32],
+) -> Result<MixedAnalysis> {
+    validate_assignment(model, ks)?;
+    let reps = if data.labels.is_empty() {
+        vec![(0usize, 0usize)]
+    } else {
+        data.class_representatives()
+    };
+    let margins = Margins::new(cfg.p_star)?;
+    let u_out = unit_roundoff(*ks.last().expect("nonempty assignment"));
+    let mut max_abs = 0.0f64;
+    let mut max_rel = 0.0f64;
+    let mut certified = true;
+    for (_, idx) in reps {
+        let out = analyze_sample_mixed(model, cfg, ks, &data.inputs[idx])?;
+        for o in &out {
+            max_abs = max_abs.max(o.abs_bound() * u_out);
+            max_rel = max_rel.max(o.rel_bound() * u_out);
+        }
+        let ok_abs = out.iter().all(|o| o.abs_bound() * u_out <= margins.abs_margin());
+        let ok_rel = out.iter().all(|o| o.rel_bound() * u_out <= margins.rel_margin());
+        if !(ok_abs || ok_rel) {
+            certified = false;
+        }
+    }
+    Ok(MixedAnalysis { ks: ks.to_vec(), max_abs, max_rel, certified })
+}
+
+/// Greedy mixed-precision tuning: start from a *certified* uniform
+/// assignment (`k_uniform` everywhere) and, layer by layer, lower each
+/// `k_ℓ` to the smallest value that keeps the whole assignment certified.
+/// Returns the assignment (layers that tolerate nothing keep `k_uniform`).
+pub fn tune_mixed(
+    model: &Model,
+    data: &Dataset,
+    cfg: &AnalysisConfig,
+    k_uniform: u32,
+    k_floor: u32,
+) -> Result<MixedAnalysis> {
+    let n = model.layers.len();
+    let mut ks = vec![k_uniform; n];
+    let base = analyze_mixed(model, data, cfg, &ks)?;
+    if !base.certified {
+        bail!("uniform k = {k_uniform} does not certify; tune from a certified baseline");
+    }
+    for layer in 0..n {
+        let mut best = ks[layer];
+        // Binary search would be possible; layer counts are small and the
+        // cost model is monotone, so a simple downward walk is clearest.
+        let mut k = ks[layer];
+        while k > k_floor {
+            k -= 1;
+            ks[layer] = k;
+            if analyze_mixed(model, data, cfg, &ks)?.certified {
+                best = k;
+            } else {
+                break;
+            }
+        }
+        ks[layer] = best;
+    }
+    analyze_mixed(model, data, cfg, &ks)
+}
+
+/// Emulated mixed-precision *execution* (witness for the analysis): runs
+/// the model in f64 but rounds every layer output (and the lifted
+/// parameters) to the layer's format — storage emulation with per-layer
+/// formats.
+pub fn forward_mixed_emulated(model: &Model, ks: &[u32], sample: &[f64]) -> Result<Vec<f64>> {
+    if ks.len() != model.layers.len() {
+        bail!("assignment length mismatch");
+    }
+    let mut t = Tensor::new(
+        model.input_shape.clone(),
+        sample
+            .iter()
+            .map(|&v| round_to_precision(v, ks[0]))
+            .collect::<Vec<f64>>(),
+    );
+    for (layer, &k) in model.layers.iter().zip(ks) {
+        t = layer.apply::<f64>(&(), &t)?;
+        let rounded: Vec<f64> = t.data().iter().map(|&v| round_to_precision(v, k)).collect();
+        t = Tensor::new(t.shape().to_vec(), rounded);
+    }
+    Ok(t.into_data())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::util::Rng;
+
+    fn small_setup() -> (Model, Dataset) {
+        let m = zoo::tiny_mlp(42);
+        let mut rng = Rng::new(1);
+        let inputs: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..8).map(|_| rng.range(0.0, 1.0)).collect())
+            .collect();
+        (m, Dataset { input_shape: vec![8], inputs, labels: vec![0, 1, 2] })
+    }
+
+    #[test]
+    fn uniform_mixed_matches_uniform_analysis_scale() {
+        // A mixed run with all layers at k must give bounds comparable to
+        // the uniform analysis at u_max = 2^(1-k).
+        let (m, data) = small_setup();
+        let cfg = AnalysisConfig::default();
+        let ks = vec![20u32; m.layers.len()];
+        let mixed = analyze_mixed(&m, &data, &cfg, &ks).unwrap();
+        assert!(mixed.max_abs.is_finite());
+
+        let mut ucfg = cfg.clone();
+        ucfg.ctx = Ctx::with_u_max(unit_roundoff(20));
+        let uniform = super::super::analyze_model(&m, &data, &ucfg).unwrap();
+        let uniform_abs = uniform.max_abs_u * unit_roundoff(20);
+        // No boundary conversions happen (single format), but input/ctx
+        // bookkeeping differs slightly; same order of magnitude.
+        assert!(mixed.max_abs <= uniform_abs * 4.0 + 1e-12);
+        assert!(mixed.max_abs >= uniform_abs / 4.0);
+    }
+
+    #[test]
+    fn rejects_bad_assignments() {
+        let (m, data) = small_setup();
+        let cfg = AnalysisConfig::default();
+        assert!(analyze_mixed(&m, &data, &cfg, &[24, 24]).is_err()); // wrong len
+        let bad = vec![1u32; m.layers.len()];
+        assert!(analyze_mixed(&m, &data, &cfg, &bad).is_err()); // k too small
+    }
+
+    #[test]
+    fn tuning_lowers_some_layer_and_stays_certified() {
+        let (m, data) = small_setup();
+        let mut cfg = AnalysisConfig::default();
+        cfg.p_star = 0.60;
+        // Find a certified uniform baseline first.
+        let (k0, _) = super::super::certify_min_precision(&m, &data, &cfg, 6..=30)
+            .unwrap()
+            .expect("baseline certifies");
+        let tuned = tune_mixed(&m, &data, &cfg, k0 + 2, 4).unwrap();
+        assert!(tuned.certified);
+        assert!(tuned.ks.iter().all(|&k| k <= k0 + 2));
+        assert!(
+            tuned.ks.iter().any(|&k| k < k0 + 2),
+            "greedy tuning should lower at least one layer from {} ({:?})",
+            k0 + 2,
+            tuned.ks
+        );
+    }
+
+    #[test]
+    fn tuning_requires_certified_baseline() {
+        let (m, data) = small_setup();
+        let mut cfg = AnalysisConfig::default();
+        cfg.p_star = 0.5001; // margin μ = 1e-4: hopeless at k = 8
+        assert!(tune_mixed(&m, &data, &cfg, 8, 4).is_err());
+    }
+
+    #[test]
+    fn mixed_bounds_dominate_emulated_mixed_runs() {
+        // Soundness of the mixed path: emulated per-layer-format execution
+        // must stay within the mixed CAA bounds.
+        let (m, data) = small_setup();
+        let cfg = AnalysisConfig::default();
+        let mut rng = Rng::new(9);
+        for _ in 0..10 {
+            let ks: Vec<u32> = (0..m.layers.len())
+                .map(|_| 10 + rng.below(14) as u32)
+                .collect();
+            for sample in &data.inputs {
+                let bounds = analyze_sample_mixed(&m, &cfg, &ks, sample).unwrap();
+                let emu = forward_mixed_emulated(&m, &ks, sample).unwrap();
+                let reference = m
+                    .forward::<f64>(&(), Tensor::new(m.input_shape.clone(), sample.clone()))
+                    .unwrap();
+                let u_out = unit_roundoff(*ks.last().unwrap());
+                for i in 0..emu.len() {
+                    let err = (emu[i] - reference.data()[i]).abs();
+                    let bound = bounds[i].abs_bound() * u_out;
+                    assert!(
+                        err <= bound * (1.0 + 1e-9) + 1e-12,
+                        "mixed ks={ks:?} output {i}: err {err:.3e} > bound {bound:.3e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_mixed_emulated_rounds_each_layer() {
+        let (m, _) = small_setup();
+        let ks = vec![6u32; m.layers.len()];
+        let sample: Vec<f64> = (0..8).map(|i| 0.1 + i as f64 * 0.05).collect();
+        let out = forward_mixed_emulated(&m, &ks, &sample).unwrap();
+        for v in &out {
+            assert_eq!(round_to_precision(*v, 6), *v, "output not in k=6 format");
+        }
+    }
+}

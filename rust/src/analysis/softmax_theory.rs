@@ -1,0 +1,106 @@
+//! Empirical checker for the paper's softmax theory (§IV, eqs. (10)–(11)).
+//!
+//! The paper proves that a softmax layer converts an *absolute* error
+//! `|δ_i| <= δ̄` on its inputs into a *relative* error on its outputs
+//! bounded by `|ε_i| <= 11/2 · max|δ_k|` (eq. (11)) — independent of the
+//! vector length. The benchmark `softmax_bound` uses this module to
+//! measure the observed amplification across random inputs and
+//! perturbations, verifying the bound and its dimension-independence.
+
+use crate::util::Rng;
+
+/// Exact softmax in f64.
+pub fn softmax_exact(x: &[f64]) -> Vec<f64> {
+    let m = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let e: Vec<f64> = x.iter().map(|v| (v - m).exp()).collect();
+    let s: f64 = e.iter().sum();
+    e.iter().map(|v| v / s).collect()
+}
+
+/// One trial: perturb `x` by `δ` with `|δ_i| <= delta_bar`, return the
+/// worst observed relative output deviation divided by `max|δ_k|` — the
+/// *observed* amplification factor, to be compared against 11/2.
+pub fn amplification_trial(rng: &mut Rng, x: &[f64], delta_bar: f64) -> f64 {
+    let y = softmax_exact(x);
+    let deltas: Vec<f64> = x.iter().map(|_| rng.range(-delta_bar, delta_bar)).collect();
+    let max_delta = deltas.iter().map(|d| d.abs()).fold(0.0f64, f64::max);
+    if max_delta == 0.0 {
+        return 0.0;
+    }
+    let xp: Vec<f64> = x.iter().zip(&deltas).map(|(v, d)| v + d).collect();
+    let yp = softmax_exact(&xp);
+    let mut worst = 0.0f64;
+    for (a, b) in y.iter().zip(&yp) {
+        if *a > 0.0 {
+            worst = worst.max((b - a).abs() / a);
+        }
+    }
+    worst / max_delta
+}
+
+/// The paper's theoretical bound on `η_i` (the intermediate quantity of
+/// eq. (10)): `|η_i| <= max_k |e^{δ_k - δ_i} - 1|`.
+pub fn eta_bound(delta_bar: f64) -> f64 {
+    (2.0 * delta_bar).exp_m1()
+}
+
+/// Run `trials` random amplification trials over dimension `n` and return
+/// the maximum observed factor. The paper's claim: this never exceeds
+/// 11/2 (for small `δ̄`), *regardless of n*.
+pub fn max_amplification(seed: u64, n: usize, delta_bar: f64, trials: usize) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut worst = 0.0f64;
+    for _ in 0..trials {
+        let x: Vec<f64> = (0..n).map(|_| rng.range(-5.0, 5.0)).collect();
+        worst = worst.max(amplification_trial(&mut rng, &x, delta_bar));
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_exact_normalizes() {
+        let y = softmax_exact(&[1.0, 2.0, 3.0]);
+        assert!((y.iter().sum::<f64>() - 1.0).abs() < 1e-14);
+        assert!(y[2] > y[1] && y[1] > y[0]);
+    }
+
+    #[test]
+    fn amplification_below_eleven_halves() {
+        // Paper eq. (11): the relative output error is <= 5.5 max|δ|.
+        for n in [2usize, 10, 100, 1000] {
+            let worst = max_amplification(42, n, 1e-3, 50);
+            assert!(
+                worst <= 5.5,
+                "n={n}: observed amplification {worst} exceeds 11/2"
+            );
+        }
+    }
+
+    #[test]
+    fn amplification_roughly_two_for_small_deltas() {
+        // The first-order constant is ~2 (e^{δ_k - δ_i} - 1 ~ 2δ̄): observed
+        // factors should sit near 2, comfortably under the rigorous 5.5.
+        let worst = max_amplification(7, 50, 1e-6, 200);
+        assert!(worst <= 2.1, "observed {worst}");
+        assert!(worst >= 0.5, "degenerate trial set ({worst})");
+    }
+
+    #[test]
+    fn dimension_independence() {
+        // The bound does not grow with n (the paper stresses this).
+        let w10 = max_amplification(11, 10, 1e-4, 100);
+        let w1000 = max_amplification(11, 1000, 1e-4, 20);
+        assert!(w1000 <= w10 * 1.5 + 0.5, "n=1000 ({w1000}) vs n=10 ({w10})");
+    }
+
+    #[test]
+    fn eta_bound_monotone() {
+        assert!(eta_bound(0.0) == 0.0);
+        assert!(eta_bound(1e-3) < eta_bound(1e-2));
+        assert!((eta_bound(1e-6) - 2e-6).abs() < 1e-11);
+    }
+}

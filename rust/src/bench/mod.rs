@@ -1,0 +1,166 @@
+//! Micro/macro benchmark harness (the registry snapshot has no criterion).
+//!
+//! Usage in a `harness = false` bench target:
+//!
+//! ```ignore
+//! let mut b = bench::Bencher::new("table1");
+//! b.bench("digits/analysis", || { ... });
+//! b.report();
+//! ```
+//!
+//! Each benchmark is warmed up, then timed over enough iterations to pass
+//! a minimum measuring window; mean / p50 / p95 are reported. For
+//! long-running experiment benches (whole-model analyses) use
+//! [`Bencher::bench_once`], which times a single run.
+
+use crate::util::Stopwatch;
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// One benchmark's statistics.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+/// Benchmark runner + result table.
+pub struct Bencher {
+    pub group: String,
+    min_window: Duration,
+    max_iters: usize,
+    results: Vec<Stats>,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Bencher {
+        Bencher {
+            group: group.to_string(),
+            min_window: Duration::from_millis(200),
+            max_iters: 1000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Customize the measuring window (per benchmark).
+    pub fn with_window(mut self, window: Duration, max_iters: usize) -> Bencher {
+        self.min_window = window;
+        self.max_iters = max_iters;
+        self
+    }
+
+    /// Time `f` repeatedly; returns the recorded stats.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        // Warmup.
+        let _ = std::hint::black_box(f());
+        let mut samples: Vec<Duration> = Vec::new();
+        let window = Stopwatch::start();
+        while window.elapsed() < self.min_window && samples.len() < self.max_iters {
+            let sw = Stopwatch::start();
+            let _ = std::hint::black_box(f());
+            samples.push(sw.elapsed());
+        }
+        self.push_stats(name, samples)
+    }
+
+    /// Time a single execution (for expensive end-to-end runs).
+    pub fn bench_once<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> (T, &Stats) {
+        let sw = Stopwatch::start();
+        let out = std::hint::black_box(f());
+        let d = sw.elapsed();
+        let stats = self.push_stats(name, vec![d]);
+        (out, stats)
+    }
+
+    fn push_stats(&mut self, name: &str, mut samples: Vec<Duration>) -> &Stats {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let total: Duration = samples.iter().sum();
+        let stats = Stats {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: total / samples.len() as u32,
+            p50: samples[samples.len() / 2],
+            p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+        };
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally produced metric (e.g. a bound value) as a note.
+    pub fn note(&mut self, text: &str) {
+        println!("  [note] {text}");
+    }
+
+    /// Print the result table.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<44} {:>8} {:>12} {:>12} {:>12}",
+            "benchmark", "iters", "mean", "p50", "p95"
+        );
+        for s in &self.results {
+            println!(
+                "{:<44} {:>8} {:>12} {:>12} {:>12}",
+                s.name,
+                s.iters,
+                crate::util::timing::human_duration(s.mean),
+                crate::util::timing::human_duration(s.p50),
+                crate::util::timing::human_duration(s.p95)
+            );
+        }
+    }
+
+    /// Render the table to a string (for writing into EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "| benchmark | iters | mean | p50 | p95 |");
+        let _ = writeln!(s, "|---|---|---|---|---|");
+        for r in &self.results {
+            let _ = writeln!(
+                s,
+                "| {} | {} | {} | {} | {} |",
+                r.name,
+                r.iters,
+                crate::util::timing::human_duration(r.mean),
+                crate::util::timing::human_duration(r.p50),
+                crate::util::timing::human_duration(r.p95)
+            );
+        }
+        s
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher::new("test").with_window(Duration::from_millis(5), 50);
+        b.bench("noop", || 1 + 1);
+        let (v, stats) = b.bench_once("once", || 40 + 2);
+        assert_eq!(v, 42);
+        assert_eq!(stats.iters, 1);
+        assert_eq!(b.results().len(), 2);
+        let md = b.to_markdown();
+        assert!(md.contains("noop") && md.contains("once"));
+    }
+
+    #[test]
+    fn stats_ordering() {
+        let mut b = Bencher::new("t").with_window(Duration::from_millis(5), 64);
+        let s = b.bench("spin", || {
+            std::hint::black_box((0..100).sum::<u64>())
+        });
+        assert!(s.p50 <= s.p95);
+        assert!(s.iters >= 1);
+    }
+}

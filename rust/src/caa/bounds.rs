@@ -1,0 +1,271 @@
+//! Outward-rounded algebra on error *bounds*.
+//!
+//! CAA bounds (`δ̄`, `ε̄`) are non-negative f64s in units of
+//! `u = 2^(1-k)`, with `+inf` meaning "no bound exists". Every arithmetic
+//! step on bounds must round **up** so the result stays an upper bound;
+//! the helpers here do that with one-ulp bumps. Second-order terms (the
+//! `ε_r ε_s u` cross terms of the paper's eq. (8)) are kept, evaluated at
+//! the context's `u_max`, never dropped.
+
+use crate::interval::round::bump_up;
+
+/// Upper-rounded addition of bounds. `inf + anything = inf`.
+#[inline(always)]
+pub fn badd(a: f64, b: f64) -> f64 {
+    debug_assert!(a >= 0.0 && b >= 0.0);
+    let s = a + b;
+    if s.is_infinite() {
+        f64::INFINITY
+    } else {
+        bump_up(s, 1)
+    }
+}
+
+/// Upper-rounded multiplication of bounds with the convention
+/// `0 * inf = 0` (a zero bound means the quantity/error is exactly zero,
+/// which annihilates).
+#[inline(always)]
+pub fn bmul(a: f64, b: f64) -> f64 {
+    debug_assert!(a >= 0.0 || a.is_nan(), "negative bound {a}");
+    debug_assert!(b >= 0.0 || b.is_nan(), "negative bound {b}");
+    if a == 0.0 || b == 0.0 {
+        return 0.0;
+    }
+    let p = a * b;
+    if p.is_infinite() {
+        f64::INFINITY
+    } else {
+        bump_up(p, 1)
+    }
+}
+
+/// Upper-rounded division `a / b` for `b > 0`.
+#[inline(always)]
+pub fn bdiv(a: f64, b: f64) -> f64 {
+    debug_assert!(a >= 0.0 && b > 0.0);
+    if a == 0.0 {
+        return 0.0;
+    }
+    let q = a / b;
+    if q.is_infinite() {
+        f64::INFINITY
+    } else {
+        bump_up(q, 1)
+    }
+}
+
+/// Relative-bound combination for a *chain of multiplicative error factors*:
+/// given `ε̄_1, ..., ε̄_n`, returns `c` such that for all `|ε_i| <= ε̄_i` and
+/// all `0 < u <= u_max`:
+///
+/// ```text
+/// | Π (1 + ε_i u)  -  1 |  <=  c · u
+/// ```
+///
+/// Recurrence: `c_0 = 0`, `c_{k+1} = c_k + ε̄_{k+1} (1 + c_k u_max)`,
+/// since `P_{k+1} - 1 = (P_k - 1) + ε_{k+1} u P_k` and
+/// `|P_k| <= 1 + c_k u_max`. Each step rounds up.
+/// Two-factor specialization of [`rel_chain`] (the add/sub hot path).
+#[inline(always)]
+pub fn rel_chain2(a: f64, b: f64, u_max: f64) -> f64 {
+    if a.is_infinite() || b.is_infinite() {
+        return f64::INFINITY;
+    }
+    badd(a, bmul(b, badd(1.0, bmul(a, u_max))))
+}
+
+/// Three-factor specialization of [`rel_chain`] (the mul hot path).
+#[inline(always)]
+pub fn rel_chain3(a: f64, b: f64, c: f64, u_max: f64) -> f64 {
+    rel_chain2(rel_chain2(a, b, u_max), c, u_max)
+}
+
+#[inline]
+pub fn rel_chain(bounds: &[f64], u_max: f64) -> f64 {
+    debug_assert!(u_max > 0.0 && u_max <= 0.5);
+    let mut c: f64 = 0.0;
+    for &e in bounds {
+        if e.is_infinite() || c.is_infinite() {
+            return f64::INFINITY;
+        }
+        let p = badd(1.0, bmul(c, u_max));
+        c = badd(c, bmul(e, p));
+    }
+    c
+}
+
+/// Relative bound for the *inverse* factor `1 / (1 + ε u)`:
+/// `|1/(1+εu) - 1| <= ε̄/(1 - ε̄ u_max) · u` provided `ε̄ u_max < 1`;
+/// `+inf` otherwise.
+pub fn rel_inverse(eps: f64, u_max: f64) -> f64 {
+    if eps.is_infinite() {
+        return f64::INFINITY;
+    }
+    let denom = 1.0 - eps * u_max;
+    if denom <= 0.0 {
+        return f64::INFINITY;
+    }
+    // Round the denominator *down* (it divides), the quotient up.
+    let denom = crate::interval::round::bump_down(denom, 1);
+    if denom <= 0.0 {
+        return f64::INFINITY;
+    }
+    bdiv(eps, denom)
+}
+
+/// Relative bound induced on `exp` output by an *absolute* bound `δ̄` on its
+/// input: `|e^{δu} - 1| <= (e^{δ̄ u_max} - 1)/u_max · u` for `0 < u <= u_max`
+/// (the quotient `(e^{δ̄u}-1)/u` is increasing in `u`).
+pub fn exp_abs_to_rel(delta: f64, u_max: f64) -> f64 {
+    if delta.is_infinite() {
+        return f64::INFINITY;
+    }
+    if delta == 0.0 {
+        return 0.0;
+    }
+    let t = bump_up((delta * u_max).exp_m1(), crate::interval::round::ELEM_SLACK_ULPS);
+    bdiv(t, u_max)
+}
+
+/// Absolute bound induced on `log` output by a *relative* bound `ε̄` on its
+/// input: `|log(1 + εu)| <= |log(1 - ε̄ u_max)|/u_max · u` (worst case at the
+/// negative edge), provided `ε̄ u_max < 1`.
+pub fn log_rel_to_abs(eps: f64, u_max: f64) -> f64 {
+    if eps.is_infinite() {
+        return f64::INFINITY;
+    }
+    if eps == 0.0 {
+        return 0.0;
+    }
+    let arg = 1.0 - eps * u_max;
+    if arg <= 0.0 {
+        return f64::INFINITY;
+    }
+    let t = bump_up((-arg.ln()).max(0.0), crate::interval::round::ELEM_SLACK_ULPS);
+    bdiv(t, u_max)
+}
+
+/// Relative bound for `sqrt(1 + εu)`: `|sqrt(1+εu) - 1| <= c u` with
+/// `c = ε̄ / (1 + sqrt(1 - ε̄ u_max))` (exact algebra; rounded up), provided
+/// `ε̄ u_max <= 1`.
+pub fn sqrt_rel(eps: f64, u_max: f64) -> f64 {
+    if eps.is_infinite() {
+        return f64::INFINITY;
+    }
+    if eps == 0.0 {
+        return 0.0;
+    }
+    let arg = 1.0 - eps * u_max;
+    if arg < 0.0 {
+        return f64::INFINITY;
+    }
+    let denom = crate::interval::round::bump_down(1.0 + arg.sqrt(), 2);
+    bdiv(eps, denom)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    const U: f64 = 0.0078125; // 2^-7, the paper's u bound
+
+    #[test]
+    fn badd_bmul_basics() {
+        assert!(badd(1.0, 2.0) >= 3.0);
+        assert_eq!(badd(f64::INFINITY, 1.0), f64::INFINITY);
+        assert_eq!(bmul(0.0, f64::INFINITY), 0.0);
+        assert_eq!(bmul(f64::INFINITY, 2.0), f64::INFINITY);
+        assert!(bmul(3.0, 4.0) >= 12.0);
+        assert!(bdiv(1.0, 3.0) >= 1.0 / 3.0);
+    }
+
+    #[test]
+    fn rel_chain_empirical() {
+        // For random ε_i within bounds and random u <= u_max the product
+        // deviation must stay within rel_chain's answer.
+        prop::check("rel-chain-sound", |rng| {
+            let n = 1 + rng.below(6);
+            let bounds: Vec<f64> = (0..n).map(|_| rng.range(0.0, 4.0)).collect();
+            let c = rel_chain(&bounds, U);
+            let u = rng.range(1e-9, U);
+            let mut p = 1.0f64;
+            for &b in &bounds {
+                let e = rng.range(-b, b);
+                p *= 1.0 + e * u;
+            }
+            assert!(
+                (p - 1.0).abs() <= c * u * (1.0 + 1e-12),
+                "|{p} - 1| > {c} * {u}"
+            );
+        });
+    }
+
+    #[test]
+    fn rel_chain_first_order() {
+        // c must be at least the sum of the bounds (first-order term).
+        let c = rel_chain(&[0.5, 0.5, 1.0], U);
+        assert!(c >= 2.0);
+        assert!(c < 2.1, "second-order blowup too large: {c}");
+        assert_eq!(rel_chain(&[f64::INFINITY], U), f64::INFINITY);
+        assert_eq!(rel_chain(&[], U), 0.0);
+    }
+
+    #[test]
+    fn rel_inverse_sound() {
+        prop::check("rel-inverse-sound", |rng| {
+            let eb = rng.range(0.0, 8.0);
+            let c = rel_inverse(eb, U);
+            let u = rng.range(1e-9, U);
+            let e = rng.range(-eb, eb);
+            let v = 1.0 / (1.0 + e * u) - 1.0;
+            assert!(v.abs() <= c * u * (1.0 + 1e-12), "|{v}| > {c}*{u}");
+        });
+        assert_eq!(rel_inverse(1.0 / U + 1.0, U), f64::INFINITY);
+    }
+
+    #[test]
+    fn exp_abs_to_rel_sound() {
+        prop::check("exp-abs-rel-sound", |rng| {
+            let db = rng.range(0.0, 10.0);
+            let c = exp_abs_to_rel(db, U);
+            let u = rng.range(1e-9, U);
+            let d = rng.range(-db, db);
+            let v = (d * u).exp_m1();
+            assert!(v.abs() <= c * u * (1.0 + 1e-12));
+        });
+        // First-order: for small δ̄·u_max the factor is ~δ̄.
+        let c = exp_abs_to_rel(1.0, U);
+        assert!((1.0..1.01).contains(&c), "c = {c}");
+    }
+
+    #[test]
+    fn log_rel_to_abs_sound() {
+        prop::check("log-rel-abs-sound", |rng| {
+            let eb = rng.range(0.0, 10.0);
+            let c = log_rel_to_abs(eb, U);
+            let u = rng.range(1e-9, U);
+            let e = rng.range(-eb, eb);
+            let v = (1.0 + e * u).ln();
+            assert!(v.abs() <= c * u * (1.0 + 1e-12));
+        });
+    }
+
+    #[test]
+    fn sqrt_rel_sound() {
+        prop::check("sqrt-rel-sound", |rng| {
+            let eb = rng.range(0.0, 10.0);
+            let c = sqrt_rel(eb, U);
+            let u = rng.range(1e-9, U);
+            let e = rng.range(-eb, eb);
+            if 1.0 + e * u < 0.0 {
+                return;
+            }
+            let v = (1.0 + e * u).sqrt() - 1.0;
+            assert!(v.abs() <= c * u * (1.0 + 1e-12));
+        });
+        // sqrt halves relative error to first order.
+        let c = sqrt_rel(2.0, U);
+        assert!((1.0..1.02).contains(&c), "c = {c}");
+    }
+}

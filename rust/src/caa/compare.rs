@@ -1,0 +1,289 @@
+//! Comparison-based operations: `max`, `min`, `relu`, `abs`, and the
+//! labeled vector max used by softmax.
+//!
+//! These are the `if`-statements the paper's §III control-flow discussion
+//! covers: they select among values rather than computing new ones, are
+//! error-free as operations (no rounding), and are 1-Lipschitz, so absolute
+//! bounds propagate with `δ̄' = max(δ̄_i)` even when the rounded comparison
+//! picks a different branch than the ideal one.
+
+use super::{Caa, Ctx};
+use crate::interval::Interval;
+use std::sync::Arc;
+
+impl Caa {
+    /// `max(self, other)`. Comparison only — no rounding error.
+    pub fn max(&self, other: &Caa, ctx: &Ctx) -> Caa {
+        let fp = self.fp.max(other.fp);
+        let ideal = self.ideal.max_i(&other.ideal);
+        let rounded = self.rounded.max_i(&other.rounded);
+        let abs = self.eff_abs().max(other.eff_abs());
+        // Relative bound survives only when both operands are ideally
+        // strictly positive (see module doc; sign flips break rel).
+        let rel = if self.ideal.is_strictly_pos() && other.ideal.is_strictly_pos() {
+            self.eff_rel().max(other.eff_rel())
+        } else {
+            f64::INFINITY
+        };
+        Caa::make(ctx, fp, ideal, rounded, abs, rel)
+    }
+
+    /// `min(self, other)`.
+    pub fn min(&self, other: &Caa, ctx: &Ctx) -> Caa {
+        let fp = self.fp.min(other.fp);
+        let ideal = self.ideal.min_i(&other.ideal);
+        let rounded = self.rounded.min_i(&other.rounded);
+        let abs = self.eff_abs().max(other.eff_abs());
+        let rel = if self.ideal.is_strictly_neg() && other.ideal.is_strictly_neg() {
+            self.eff_rel().max(other.eff_rel())
+        } else if self.ideal.is_strictly_pos() && other.ideal.is_strictly_pos() {
+            self.eff_rel().max(other.eff_rel())
+        } else {
+            f64::INFINITY
+        };
+        Caa::make(ctx, fp, ideal, rounded, abs, rel)
+    }
+
+    /// `ReLU(x) = max(x, 0)` (paper eq. (2)). Error-free as an operation;
+    /// 1-Lipschitz for the absolute bound. The relative bound survives only
+    /// on inputs that are ideally strictly positive (where ReLU is the
+    /// identity).
+    pub fn relu(&self, ctx: &Ctx) -> Caa {
+        if self.ideal.hi() <= 0.0 && self.rounded.hi() <= 0.0 {
+            // Ideal and computed branch agree: the output is exactly 0.
+            return Caa::exact(0.0);
+        }
+        if self.ideal.lo() > 0.0 && self.rounded.lo() > 0.0 {
+            // ReLU is the identity on this value — including its id
+            // (assignment), preserving decorrelation downstream.
+            return self.clone();
+        }
+        let fp = self.fp.max(0.0);
+        let zero = Interval::ZERO;
+        let ideal = self.ideal.max_i(&zero);
+        let rounded = self.rounded.max_i(&zero);
+        let abs = self.eff_abs();
+        Caa::make(ctx, fp, ideal, rounded, abs, f64::INFINITY)
+    }
+
+    /// `LeakyReLU(x) = x if x > 0 else α x` with exact power-of-two `α`
+    /// treated exactly; otherwise the negative branch pays one rounding.
+    pub fn leaky_relu(&self, alpha: f64, ctx: &Ctx) -> Caa {
+        debug_assert!((0.0..1.0).contains(&alpha));
+        let pos = self.relu(ctx);
+        let neg = self.min(&Caa::exact(0.0), ctx);
+        let scaled = if alpha == 0.0 {
+            Caa::exact(0.0)
+        } else if alpha.log2().fract() == 0.0 {
+            neg.scale_pow2(alpha, ctx)
+        } else {
+            neg.mul(&Caa::param(ctx, alpha), ctx)
+        };
+        pos.add(&scaled, ctx)
+    }
+
+    /// `|x|`. Error-free; 1-Lipschitz.
+    pub fn abs_val(&self, ctx: &Ctx) -> Caa {
+        let fp = self.fp.abs();
+        let ideal = self.ideal.abs();
+        let rounded = self.rounded.abs();
+        let abs = self.eff_abs();
+        let rel = if self.ideal.excludes_zero() { self.eff_rel() } else { f64::INFINITY };
+        Caa::make(ctx, fp, ideal, rounded, abs, rel)
+    }
+}
+
+/// Maximum over a vector, **labeling every element with the result** (the
+/// paper's control-flow insight): after `m = max_many(ctx, xs)`, each
+/// `xs[i]` carries `upper = m`, so a later `xs[i] - m` is clipped to
+/// `(-inf, 0]` — exactly what the max-subtraction softmax implementation
+/// needs to keep its `exp` inputs nonpositive.
+pub fn max_many(ctx: &Ctx, xs: &mut [Caa]) -> Caa {
+    assert!(!xs.is_empty());
+    let mut m = xs[0].clone();
+    for x in xs.iter().skip(1) {
+        m = m.max(x, ctx);
+    }
+    if ctx.labels {
+        let shared = Arc::new(m.clone()); // clone shares m's id
+        for x in xs.iter_mut() {
+            x.set_upper(&shared);
+        }
+    }
+    m
+}
+
+/// Minimum over a vector with lower-bound labeling.
+pub fn min_many(ctx: &Ctx, xs: &mut [Caa]) -> Caa {
+    assert!(!xs.is_empty());
+    let mut m = xs[0].clone();
+    for x in xs.iter().skip(1) {
+        m = m.min(x, ctx);
+    }
+    if ctx.labels {
+        let shared = Arc::new(m.clone());
+        for x in xs.iter_mut() {
+            x.set_lower(&shared);
+        }
+    }
+    m
+}
+
+/// Index of the maximum *computed* (fp-trace) element — the final argmax of
+/// a classification network (paper §IV). Returns the first index on ties,
+/// like NumPy.
+pub fn argmax_fp(xs: &[Caa]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate().skip(1) {
+        if x.fp() > xs[best].fp() {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Can FP rounding error toggle the argmax? True iff the rounded range of
+/// some non-top element overlaps the rounded range of the top element.
+pub fn argmax_ambiguous(xs: &[Caa]) -> bool {
+    let top = argmax_fp(xs);
+    xs.iter()
+        .enumerate()
+        .filter(|(i, _)| *i != top)
+        .any(|(_, x)| x.rounded().hi() >= xs[top].rounded().lo())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interval::Interval;
+
+    fn ctx() -> Ctx {
+        Ctx::new()
+    }
+
+    #[test]
+    fn relu_identity_on_positive() {
+        let c = ctx();
+        let x = Caa::input(&c, Interval::new(1.0, 2.0), 1.5);
+        let r = x.relu(&c);
+        assert_eq!(r.id(), x.id(), "ReLU on strictly-positive input is assignment");
+        assert_eq!(r.fp(), 1.5);
+    }
+
+    #[test]
+    fn relu_zero_on_negative() {
+        let c = ctx();
+        let x = Caa::input(&c, Interval::new(-5.0, -1.0), -2.0);
+        let r = x.relu(&c);
+        assert_eq!(r.ideal(), Interval::ZERO);
+        assert_eq!(r.abs_bound(), 0.0);
+    }
+
+    #[test]
+    fn relu_mixed_keeps_abs_drops_rel() {
+        let c = ctx();
+        let x = Caa::make(
+            &c,
+            0.5,
+            Interval::new(-1.0, 1.0),
+            Interval::new(-1.1, 1.1),
+            3.0,
+            f64::INFINITY,
+        );
+        let r = x.relu(&c);
+        assert_eq!(r.fp(), 0.5);
+        assert!(r.abs_bound() <= 3.0 * (1.0 + 1e-12));
+        assert!(r.ideal().lo() >= 0.0);
+        assert!(r.rel_bound().is_infinite());
+    }
+
+    #[test]
+    fn max_lipschitz_abs() {
+        let c = ctx();
+        let a = Caa::make(&c, 1.0, Interval::new(0.5, 1.5), Interval::new(0.4, 1.6), 2.0, f64::INFINITY);
+        let b = Caa::make(&c, 0.9, Interval::new(0.1, 1.2), Interval::new(0.0, 1.3), 5.0, f64::INFINITY);
+        let m = a.max(&b, &c);
+        assert_eq!(m.fp(), 1.0);
+        assert!(m.abs_bound() <= 5.0 * (1.0 + 1e-12));
+        assert!(m.ideal().contains(1.5));
+        // Both strictly positive => rel recovered via abs/mig in make().
+        assert!(m.rel_bound().is_finite());
+    }
+
+    #[test]
+    fn max_many_labels_operands() {
+        let c = ctx();
+        let mut xs = vec![
+            Caa::input(&c, Interval::new(0.0, 4.0), 1.0),
+            Caa::input(&c, Interval::new(0.0, 4.0), 3.0),
+            Caa::input(&c, Interval::new(0.0, 4.0), 2.0),
+        ];
+        let m = max_many(&c, &mut xs);
+        assert_eq!(m.fp(), 3.0);
+        for x in &xs {
+            assert_eq!(x.upper_label().unwrap().id(), m.id());
+        }
+        // The labeled subtraction clips to <= 0 (softmax pattern).
+        let d = xs[0].sub(&m, &c);
+        assert!(d.ideal().hi() <= 0.0);
+        assert!(d.rounded().hi() <= 0.0);
+    }
+
+    #[test]
+    fn min_many_labels_operands() {
+        let c = ctx();
+        let mut xs = vec![
+            Caa::input(&c, Interval::new(1.0, 4.0), 2.0),
+            Caa::input(&c, Interval::new(1.0, 4.0), 1.5),
+        ];
+        let m = min_many(&c, &mut xs);
+        assert_eq!(m.fp(), 1.5);
+        let d = xs[0].sub(&m, &c);
+        assert!(d.ideal().lo() >= 0.0, "x - min(x..) >= 0, got {}", d.ideal());
+    }
+
+    #[test]
+    fn argmax_and_ambiguity() {
+        let c = ctx();
+        let mk = |fp: f64, w: f64| {
+            Caa::make(
+                &c,
+                fp,
+                Interval::new(fp - w, fp + w),
+                Interval::new(fp - w, fp + w),
+                1.0,
+                f64::INFINITY,
+            )
+        };
+        let clear = vec![mk(0.1, 0.01), mk(0.8, 0.01), mk(0.1, 0.01)];
+        assert_eq!(argmax_fp(&clear), 1);
+        assert!(!argmax_ambiguous(&clear));
+
+        let fuzzy = vec![mk(0.49, 0.05), mk(0.51, 0.05)];
+        assert_eq!(argmax_fp(&fuzzy), 1);
+        assert!(argmax_ambiguous(&fuzzy));
+    }
+
+    #[test]
+    fn abs_val_cases() {
+        let c = ctx();
+        let neg = Caa::input(&c, Interval::new(-3.0, -1.0), -2.0);
+        let a = neg.abs_val(&c);
+        assert_eq!(a.fp(), 2.0);
+        assert!(a.ideal().contains(3.0) && a.ideal().lo() >= 1.0);
+        assert!(a.rel_bound().is_finite());
+
+        let mixed = Caa::input(&c, Interval::new(-1.0, 2.0), 0.5);
+        let am = mixed.abs_val(&c);
+        assert!(am.ideal().lo() >= 0.0);
+    }
+
+    #[test]
+    fn leaky_relu_negative_branch() {
+        let c = ctx();
+        let x = Caa::input(&c, Interval::new(-4.0, -2.0), -3.0);
+        let l = x.leaky_relu(0.25, &c);
+        assert_eq!(l.fp(), -0.75);
+        assert!(l.ideal().contains(-1.0) && l.ideal().contains(-0.5));
+    }
+}

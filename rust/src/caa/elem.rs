@@ -1,0 +1,283 @@
+//! Elementary functions on CAA values: `exp`, `ln`, `sqrt`, `tanh`,
+//! `sigmoid` — the functions DNN activation layers need (paper §III).
+//!
+//! The characteristic behaviour the paper derives analytically is encoded
+//! here: `exp` converts an *absolute* input bound into a *relative* output
+//! bound; `log` does the inverse; `tanh`/`sigmoid` propagate absolute
+//! bounds with Lipschitz factor <= 1 (resp. 1/4) and `tanh` propagates
+//! relative bounds with the paper's factor 2.63 while `ε̄ u <= 1/4`.
+
+use super::bounds::{badd, bdiv, bmul, exp_abs_to_rel, log_rel_to_abs, rel_chain, sqrt_rel};
+use super::{relative_blowup, Caa, Ctx, RND_BASIC, RND_ELEM};
+use crate::interval::Interval;
+
+impl Caa {
+    /// Best available *relative* input bound: the stored `ε̄` improved via
+    /// `δ̄ / inf|q|` when the ideal range excludes zero.
+    pub(crate) fn eff_rel(&self) -> f64 {
+        let mig = self.ideal.mig();
+        if self.abs.is_finite() && mig > 0.0 {
+            self.rel.min(bdiv(self.abs, mig))
+        } else {
+            self.rel
+        }
+    }
+
+    /// Best available *absolute* input bound: the stored `δ̄` improved via
+    /// `ε̄ · sup|q|` when the ideal range is bounded.
+    pub(crate) fn eff_abs(&self) -> f64 {
+        let mag = self.ideal.mag();
+        if self.rel.is_finite() && mag.is_finite() {
+            self.abs.min(bmul(self.rel, mag))
+        } else {
+            self.abs
+        }
+    }
+
+    /// FP exponential. Absolute error in → relative error out:
+    /// `e^{q+δu} = e^q (1 + (e^{δu}-1))` (paper §III).
+    pub fn exp(&self, ctx: &Ctx) -> Caa {
+        let fp = self.fp.exp();
+        let ideal = self.ideal.exp();
+        let rounded = relative_blowup(self.rounded.exp(), RND_ELEM, ctx.u_max);
+        let prop = exp_abs_to_rel(self.eff_abs(), ctx.u_max);
+        let rel = rel_chain(&[prop, RND_ELEM], ctx.u_max);
+        Caa::make(ctx, fp, ideal, rounded, f64::INFINITY, rel)
+    }
+
+    /// FP natural logarithm. Relative error in → absolute error out:
+    /// `log(q(1+εu)) = log q + log(1+εu)`.
+    pub fn ln(&self, ctx: &Ctx) -> Caa {
+        let fp = self.fp.ln();
+        let ideal = self.ideal.ln();
+        let rounded_pre = self.rounded.ln();
+        let rounded = relative_blowup(rounded_pre, RND_ELEM, ctx.u_max);
+        let prop = log_rel_to_abs(self.eff_rel(), ctx.u_max);
+        let abs = badd(prop, bmul(RND_ELEM, rounded_pre.mag()));
+        Caa::make(ctx, fp, ideal, rounded, abs, f64::INFINITY)
+    }
+
+    /// FP square root (correctly rounded per IEEE754): halves the relative
+    /// error to first order.
+    pub fn sqrt(&self, ctx: &Ctx) -> Caa {
+        let fp = self.fp.sqrt();
+        let ideal = self.ideal.sqrt();
+        let rounded = relative_blowup(self.rounded.sqrt(), RND_BASIC, ctx.u_max);
+        let rel = rel_chain(&[sqrt_rel(self.eff_rel(), ctx.u_max), RND_BASIC], ctx.u_max);
+        Caa::make(ctx, fp, ideal, rounded, f64::INFINITY, rel)
+    }
+
+    /// Sharp Lipschitz constant of `tanh` over the rounded input range:
+    /// `sup (1 - tanh²ξ)` — attained at the point of smallest magnitude.
+    /// 1 when the range straddles 0; far below 1 in the saturated tails
+    /// (this is what keeps deep tanh networks' absolute bounds tiny).
+    fn tanh_lipschitz(range: Interval) -> f64 {
+        if range.contains(0.0) {
+            return 1.0;
+        }
+        let t = range.mig().tanh();
+        // Round up: 1 - t² computed downward-safe via bumping.
+        crate::interval::round::bump_up(1.0 - crate::interval::round::bump_down(t * t, 3), 1)
+            .clamp(0.0, 1.0)
+    }
+
+    /// FP hyperbolic tangent. Absolute bounds propagate with the sharp
+    /// interval Lipschitz factor (`<= 1`); relative bounds propagate with
+    /// the paper's factor 2.63 while `ε̄ u <= 1/4`.
+    pub fn tanh(&self, ctx: &Ctx) -> Caa {
+        let fp = self.fp.tanh();
+        let ideal = self.ideal.tanh();
+        let rounded = relative_blowup(self.rounded.tanh(), RND_ELEM, ctx.u_max)
+            .intersect(&Interval::new(-1.0, 1.0))
+            .expect("tanh rounded range");
+        // Absolute: |tanh(q+δu) - tanh(q)| <= L·|δ|u with L the sup of
+        // tanh' over everything the perturbed argument can reach; plus
+        // evaluation rounding, relative RND_ELEM on an output <= 1.
+        let reach = self.ideal.hull(&self.rounded);
+        let lip = Self::tanh_lipschitz(reach);
+        let abs = badd(bmul(lip, self.eff_abs()), bmul(RND_ELEM, rounded.mag()));
+        // Relative: paper's factor 2.63 under its precondition.
+        let er = self.eff_rel();
+        let rel = if er.is_finite() && bmul(er, ctx.u_max) <= 0.25 {
+            rel_chain(&[bmul(2.63, er), RND_ELEM], ctx.u_max)
+        } else {
+            f64::INFINITY
+        };
+        Caa::make(ctx, fp, ideal, rounded, abs, rel)
+    }
+
+    /// Logistic sigmoid `1/(1+e^{-x})`, evaluated as one faithful
+    /// elementary function (the paper treats activation functions as unary
+    /// operations with their own rounding bound). Absolute bounds propagate
+    /// with the Lipschitz factor 1/4.
+    pub fn sigmoid(&self, ctx: &Ctx) -> Caa {
+        let fp = 1.0 / (1.0 + (-self.fp).exp());
+        let ideal = self.ideal.sigmoid();
+        let rounded = relative_blowup(self.rounded.sigmoid(), RND_ELEM, ctx.u_max)
+            .intersect(&Interval::new(0.0, 1.0))
+            .expect("sigmoid rounded range");
+        // σ' = σ(1-σ) <= 1/4, attained at 0; on ranges away from 0 the sharp
+        // constant is σ'(mig) (σ' decreases in |x|).
+        let reach = self.ideal.hull(&self.rounded);
+        let lip = if reach.contains(0.0) {
+            0.25
+        } else {
+            let s = 1.0 / (1.0 + (-reach.mig()).exp());
+            crate::interval::round::bump_up(s * (1.0 - s), 4).clamp(0.0, 0.25)
+        };
+        let abs = badd(bmul(lip, self.eff_abs()), bmul(RND_ELEM, rounded.mag()));
+        // Relative bound recovered from abs via make(): sigmoid output is
+        // bounded away from 0 whenever the input is bounded below.
+        Caa::make(ctx, fp, ideal, rounded, abs, f64::INFINITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Ctx {
+        Ctx::new()
+    }
+
+    #[test]
+    fn exp_turns_abs_into_rel() {
+        let c = ctx();
+        // Summation output: good absolute bound, bad relative bound.
+        let x = Caa::make(
+            &c,
+            0.0,
+            Interval::new(-3.0, 3.0),
+            Interval::new(-3.1, 3.1),
+            2.0,            // δ̄ = 2u
+            f64::INFINITY,  // no rel bound (cancellation upstream)
+        );
+        let e = x.exp(&c);
+        assert!(e.rel_bound().is_finite(), "exp must produce a relative bound");
+        // ~ δ̄ + rounding = 3.0, first order.
+        assert!(e.rel_bound() < 3.2, "rel = {}", e.rel_bound());
+        assert!(e.ideal().lo() >= 0.0);
+    }
+
+    #[test]
+    fn ln_turns_rel_into_abs() {
+        let c = ctx();
+        let x = Caa::make(
+            &c,
+            10.0,
+            Interval::new(5.0, 20.0),
+            Interval::new(4.9, 20.1),
+            f64::INFINITY,
+            3.0, // ε̄ = 3u
+        );
+        let l = x.ln(&c);
+        assert!(l.abs_bound().is_finite());
+        // ~ ε̄ + RND·|ln| <= 3 + ~3 = 6ish
+        assert!(l.abs_bound() < 7.0, "abs = {}", l.abs_bound());
+    }
+
+    #[test]
+    fn tanh_abs_unamplified() {
+        let c = ctx();
+        let x = Caa::make(
+            &c,
+            0.5,
+            Interval::new(-6.0, 6.0),
+            Interval::new(-6.1, 6.1),
+            5.0,
+            f64::INFINITY,
+        );
+        let t = x.tanh(&c);
+        // δ̄' = δ̄ + RND·1 = 6 at most.
+        assert!(t.abs_bound() <= 6.01, "abs = {}", t.abs_bound());
+        assert!(t.ideal().lo() >= -1.0 && t.ideal().hi() <= 1.0);
+    }
+
+    #[test]
+    fn tanh_rel_factor_263() {
+        let c = ctx();
+        let x = Caa::make(
+            &c,
+            1.0,
+            Interval::new(0.5, 2.0),
+            Interval::new(0.49, 2.01),
+            f64::INFINITY,
+            2.0,
+        );
+        let t = x.tanh(&c);
+        assert!(t.rel_bound().is_finite());
+        // 2.63 * 2 + 1 (rounding) = 6.26 first order.
+        assert!(t.rel_bound() <= 6.4, "rel = {}", t.rel_bound());
+    }
+
+    #[test]
+    fn tanh_rel_precondition() {
+        // Enormous ε̄ (ε̄ u > 1/4) must refuse the 2.63 shortcut; rel may
+        // still be recovered via abs if the range allows, so check against
+        // a range straddling zero where no rel bound can exist.
+        let c = ctx();
+        let x = Caa::make(
+            &c,
+            0.0,
+            Interval::new(-1.0, 1.0),
+            Interval::ENTIRE,
+            f64::INFINITY,
+            1e6,
+        );
+        let t = x.tanh(&c);
+        assert!(t.rel_bound().is_infinite());
+    }
+
+    #[test]
+    fn sigmoid_quarters_abs() {
+        let c = ctx();
+        let x = Caa::make(
+            &c,
+            0.0,
+            Interval::new(-4.0, 4.0),
+            Interval::new(-4.1, 4.1),
+            8.0,
+            f64::INFINITY,
+        );
+        let s = x.sigmoid(&c);
+        // 8/4 + 1 = 3 at most.
+        assert!(s.abs_bound() <= 3.01, "abs = {}", s.abs_bound());
+        // Output bounded away from 0 => rel recovered.
+        assert!(s.rel_bound().is_finite());
+        assert!(s.ideal().lo() >= 0.0 && s.ideal().hi() <= 1.0);
+    }
+
+    #[test]
+    fn sqrt_halves_rel() {
+        let c = ctx();
+        let x = Caa::make(
+            &c,
+            4.0,
+            Interval::new(1.0, 9.0),
+            Interval::new(0.99, 9.01),
+            f64::INFINITY,
+            4.0,
+        );
+        let s = x.sqrt(&c);
+        // 4/2 + 1/2 = 2.5 first order.
+        assert!(s.rel_bound() <= 2.6, "rel = {}", s.rel_bound());
+        assert!(s.ideal().contains(2.0));
+    }
+
+    #[test]
+    fn exp_of_nonpositive_stays_in_unit_range() {
+        // The softmax pattern: exp of a max-subtracted (<= 0) input.
+        let c = ctx();
+        let x = Caa::make(
+            &c,
+            -1.0,
+            Interval::new(f64::NEG_INFINITY, 0.0),
+            Interval::new(f64::NEG_INFINITY, 0.0),
+            1.5,
+            f64::INFINITY,
+        );
+        let e = x.exp(&c);
+        assert!(e.ideal().hi() <= 1.0, "e^{{x<=0}} <= 1, got {}", e.ideal());
+        assert!(e.rel_bound().is_finite());
+    }
+}

@@ -1,0 +1,381 @@
+//! **CAA — Combined (absolute + relative) Affine Arithmetic.**
+//!
+//! The paper's core contribution (§III). Every floating-point quantity of
+//! the analyzed program is replaced by a [`Caa`] object carrying the eight
+//! entries the paper lists:
+//!
+//! 1. a unique creation **id** (decorrelation: copies share it),
+//! 2. the concrete **fp value** the plain-FP program would compute,
+//! 3. an interval holding the **actual error** of that fp value
+//!    (reference; derived — see [`Caa::fp_error`]),
+//! 4. an **absolute error bound** `δ̄ ∈ R⁺ ∪ {+inf}` in units of `u`,
+//! 5. a **relative error bound** `ε̄ ∈ R⁺ ∪ {+inf}` in units of `u`,
+//! 6. an interval enclosing all **ideal** (roundoff-free) values,
+//! 7. an interval enclosing all **rounded** (precision-k FP) values,
+//! 8. optional **lower/upper bound labels** (other [`Caa`] objects; the
+//!    "just enough global insight" that fixes control-flow cases like
+//!    softmax's max-subtraction).
+//!
+//! Bounds are parametric in `u = 2^(1-k)`: the analysis is run once and the
+//! output bounds hold *for every* precision `k` with `u <= u_max`
+//! ([`Ctx::u_max`], the paper uses `u < 2^-7`). [`analysis`](crate::analysis)
+//! then solves for the smallest safe `k`.
+
+mod bounds;
+mod compare;
+mod elem;
+mod ops;
+
+pub use bounds::{badd, bdiv, bmul, exp_abs_to_rel, log_rel_to_abs, rel_chain, rel_chain2, rel_chain3, rel_inverse, sqrt_rel};
+pub use compare::{argmax_ambiguous, argmax_fp, max_many, min_many};
+
+use crate::interval::Interval;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Relative rounding bound, in units of u, of one correctly-rounded basic
+/// operation (the first FP error model, paper eq. (5)).
+pub const RND_BASIC: f64 = 0.5;
+
+/// Relative rounding bound of one faithful elementary-function evaluation
+/// (`exp`, `log`, `tanh`, ... are faithful but not correctly rounded on
+/// real libms; 1 ulp covers them).
+pub const RND_ELEM: f64 = 1.0;
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Analysis context: the symbolic-unit bound and feature toggles (the
+/// toggles exist for the ablation experiments A-caa-vs-ia and A-decorr;
+/// production analyses use [`Ctx::new`] which enables everything).
+#[derive(Clone, Debug)]
+pub struct Ctx {
+    /// Upper bound on `u = 2^(1-k)`; bounds hold for all `u <= u_max`.
+    pub u_max: f64,
+    /// Id-based decorrelation (paper §III: `x - x = 0` exactly).
+    pub decorrelation: bool,
+    /// Bound-label control-flow insight (paper §III: `q ≤ M ⇒ q - M ≤ 0`).
+    pub labels: bool,
+    /// Propagate absolute bounds (ablation switch).
+    pub track_abs: bool,
+    /// Propagate relative bounds (ablation switch).
+    pub track_rel: bool,
+}
+
+impl Ctx {
+    /// Full CAA with the paper's default `u_max = 2^-7`.
+    pub fn new() -> Ctx {
+        Ctx::with_u_max(2f64.powi(-7))
+    }
+
+    /// Full CAA with a custom `u_max` (must be in `(0, 2^-2]`).
+    pub fn with_u_max(u_max: f64) -> Ctx {
+        assert!(u_max > 0.0 && u_max <= 0.25, "unreasonable u_max {u_max}");
+        Ctx { u_max, decorrelation: true, labels: true, track_abs: true, track_rel: true }
+    }
+
+    /// IA-only ablation: no error bounds are propagated at all; the caller
+    /// falls back to interval widths.
+    pub fn ia_only(mut self) -> Ctx {
+        self.track_abs = false;
+        self.track_rel = false;
+        self
+    }
+
+    pub fn abs_only(mut self) -> Ctx {
+        self.track_rel = false;
+        self
+    }
+
+    pub fn rel_only(mut self) -> Ctx {
+        self.track_abs = false;
+        self
+    }
+
+    pub fn no_decorrelation(mut self) -> Ctx {
+        self.decorrelation = false;
+        self
+    }
+
+    pub fn no_labels(mut self) -> Ctx {
+        self.labels = false;
+        self
+    }
+}
+
+impl Default for Ctx {
+    fn default() -> Self {
+        Ctx::new()
+    }
+}
+
+/// A CAA-analyzed floating-point quantity. Flat value type: ops do **not**
+/// heap-allocate (bound labels are shared `Arc`s, attached only where the
+/// control-flow insight needs them) — this by-value design is what removes
+/// the MPFI allocation bottleneck the paper reports for MobileNet.
+#[derive(Clone, Debug)]
+pub struct Caa {
+    id: u64,
+    fp: f64,
+    ideal: Interval,
+    rounded: Interval,
+    /// Absolute error bound `δ̄` in units of u (`rounded = ideal + δ u`).
+    abs: f64,
+    /// Relative error bound `ε̄` in units of u (`rounded = ideal (1 + ε u)`).
+    rel: f64,
+    /// Optional upper bound label: a quantity this one is `<=` to.
+    upper: Option<Arc<Caa>>,
+    /// Optional lower bound label.
+    lower: Option<Arc<Caa>>,
+}
+
+impl Caa {
+    // ------------------------------------------------------------------
+    // Constructors
+    // ------------------------------------------------------------------
+
+    /// A constant that is **exactly representable in every analyzed format**
+    /// (0, ±1, small integers, powers of two): no representation error.
+    pub fn exact(x: f64) -> Caa {
+        debug_assert!(x.is_finite());
+        Caa {
+            id: fresh_id(),
+            fp: x,
+            ideal: Interval::point(x),
+            rounded: Interval::point(x),
+            abs: 0.0,
+            rel: 0.0,
+            upper: None,
+            lower: None,
+        }
+    }
+
+    /// A learned parameter (weight/bias): the ideal value is the trained
+    /// `x`, stored rounded to the target format, so it enters with the
+    /// representation error of one rounding: `ε̄ = 1/2`, `δ̄ = |x|/2`.
+    pub fn param(ctx: &Ctx, x: f64) -> Caa {
+        debug_assert!(x.is_finite());
+        if x == 0.0 {
+            // Zero is exact in every binary FP format.
+            return Caa::exact(0.0);
+        }
+        let ideal = Interval::point(x);
+        Caa {
+            id: fresh_id(),
+            fp: x,
+            ideal,
+            rounded: relative_blowup(ideal, RND_BASIC, ctx.u_max),
+            abs: if ctx.track_abs { bmul(RND_BASIC, x.abs()) } else { f64::INFINITY },
+            rel: if ctx.track_rel { RND_BASIC } else { f64::INFINITY },
+            upper: None,
+            lower: None,
+        }
+    }
+
+    /// An input quantity known only by a range (paper: image data annotated
+    /// with `[0, 255]`), stored rounded to the target format. `fp_witness`
+    /// is the concrete representative used for the reference fp trace.
+    pub fn input(ctx: &Ctx, range: Interval, fp_witness: f64) -> Caa {
+        debug_assert!(range.contains(fp_witness), "witness outside input range");
+        Caa {
+            id: fresh_id(),
+            fp: fp_witness,
+            ideal: range,
+            rounded: relative_blowup(range, RND_BASIC, ctx.u_max),
+            abs: if ctx.track_abs { bmul(RND_BASIC, range.mag()) } else { f64::INFINITY },
+            rel: if ctx.track_rel { RND_BASIC } else { f64::INFINITY },
+            upper: None,
+            lower: None,
+        }
+    }
+
+    /// An input that is exact in the target format (e.g. integer pixel
+    /// values when the format has enough mantissa bits — 8-bit data in
+    /// k >= 8 formats).
+    pub fn input_exact(range: Interval, fp_witness: f64) -> Caa {
+        debug_assert!(range.contains(fp_witness));
+        Caa {
+            id: fresh_id(),
+            fp: fp_witness,
+            ideal: range,
+            rounded: range,
+            abs: 0.0,
+            rel: 0.0,
+            upper: None,
+            lower: None,
+        }
+    }
+
+    /// Construct a quantity from externally-derived knowledge (fp trace
+    /// value, range enclosures and error bounds in units of u). The caller
+    /// is responsible for the soundness of the supplied entries; bounds are
+    /// cross-refined and the rounded range tightened exactly as for
+    /// operation results. This is the entry point for embedding analysis
+    /// results from *other* tools (e.g. SafeAI-style range certificates).
+    pub fn from_parts(
+        ctx: &Ctx,
+        fp: f64,
+        ideal: Interval,
+        rounded: Interval,
+        abs: f64,
+        rel: f64,
+    ) -> Caa {
+        Caa::make(ctx, fp, ideal, rounded, abs, rel)
+    }
+
+    /// Internal: assemble a result, refining each bound from the other and
+    /// intersecting range information (called by every operation).
+    pub(crate) fn make(
+        ctx: &Ctx,
+        fp: f64,
+        ideal: Interval,
+        rounded: Interval,
+        abs: f64,
+        rel: f64,
+    ) -> Caa {
+        let mut abs = if ctx.track_abs { abs } else { f64::INFINITY };
+        let mut rel = if ctx.track_rel { rel } else { f64::INFINITY };
+        debug_assert!(abs >= 0.0 || abs.is_nan());
+        debug_assert!(rel >= 0.0 || rel.is_nan());
+        if abs.is_nan() {
+            abs = f64::INFINITY;
+        }
+        if rel.is_nan() {
+            rel = f64::INFINITY;
+        }
+
+        // Cross-refinement (paper §III: "CAA improves the one bound using
+        // the other whenever possible").
+        if ctx.track_abs && rel.is_finite() {
+            // δ = ε q  =>  δ̄ <= ε̄ sup|q|
+            let via_rel = bmul(rel, ideal.mag());
+            if via_rel < abs {
+                abs = via_rel;
+            }
+        }
+        if ctx.track_rel && abs.is_finite() {
+            // ε = δ/q  =>  ε̄ <= δ̄ / inf|q| when q is bounded away from 0
+            let mig = ideal.mig();
+            if mig > 0.0 {
+                let via_abs = bdiv(abs, mig);
+                if via_abs < rel {
+                    rel = via_abs;
+                }
+            }
+        }
+
+        // Tighten the rounded enclosure with the bounds.
+        let mut rounded = rounded;
+        if abs.is_finite() {
+            let r = ideal.inflate(bmul(abs, ctx.u_max));
+            rounded = rounded.intersect(&r).unwrap_or(rounded);
+        }
+        if rel.is_finite() {
+            let r = relative_blowup(ideal, rel, ctx.u_max);
+            rounded = rounded.intersect(&r).unwrap_or(rounded);
+        }
+
+        Caa { id: fresh_id(), fp, ideal, rounded, abs, rel, upper: None, lower: None }
+    }
+
+    // ------------------------------------------------------------------
+    // Accessors (the eight entries)
+    // ------------------------------------------------------------------
+
+    /// Unique creation id (copies made with `clone()` share it — clone *is*
+    /// the paper's assignment).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The concrete value the plain-FP (f64 trace) program computes.
+    pub fn fp(&self) -> f64 {
+        self.fp
+    }
+
+    /// Reference entry: interval enclosing the actual error of [`Caa::fp`]
+    /// with respect to the unknown ideal value.
+    pub fn fp_error(&self) -> Interval {
+        Interval::point(self.fp) - self.ideal
+    }
+
+    /// Absolute error bound `δ̄` in units of u.
+    pub fn abs_bound(&self) -> f64 {
+        self.abs
+    }
+
+    /// Relative error bound `ε̄` in units of u.
+    pub fn rel_bound(&self) -> f64 {
+        self.rel
+    }
+
+    /// Enclosure of all ideal (roundoff-free) values.
+    pub fn ideal(&self) -> Interval {
+        self.ideal
+    }
+
+    /// Enclosure of all values computed with precision-k FP (any k with
+    /// `u <= u_max`).
+    pub fn rounded(&self) -> Interval {
+        self.rounded
+    }
+
+    pub fn upper_label(&self) -> Option<&Arc<Caa>> {
+        self.upper.as_ref()
+    }
+
+    pub fn lower_label(&self) -> Option<&Arc<Caa>> {
+        self.lower.as_ref()
+    }
+
+    /// Label this quantity as `<=` the given one (shared).
+    pub fn set_upper(&mut self, bound: &Arc<Caa>) {
+        self.upper = Some(Arc::clone(bound));
+    }
+
+    /// Label this quantity as `>=` the given one (shared).
+    pub fn set_lower(&mut self, bound: &Arc<Caa>) {
+        self.lower = Some(Arc::clone(bound));
+    }
+
+    /// Intersect the ideal and rounded enclosures with externally-known
+    /// range information (the paper's "just enough global insight": e.g.
+    /// softmax outputs are probabilities in `[0, 1]` by construction).
+    /// Sound only if the caller's claim holds for both the ideal and the
+    /// computed value; the id is preserved (this is knowledge refinement,
+    /// not a new quantity).
+    pub fn clamp_range(&self, range: Interval) -> Caa {
+        let mut r = self.clone();
+        r.ideal = r.ideal.intersect(&range).unwrap_or(range);
+        r.rounded = r.rounded.intersect(&range).unwrap_or(range);
+        r
+    }
+}
+
+/// `ideal * (1 + [-ε̄, ε̄] u)` for all `u <= u_max` — enclosure of the
+/// rounded range given a relative bound. Specialized (hot path): for
+/// `r = ε̄·u_max < 1` the factor interval `[1-r, 1+r]` is positive, so the
+/// product endpoints are `lo·(1±r)` / `hi·(1±r)` by sign — two rounded
+/// multiplications instead of a full interval multiplication.
+pub(crate) fn relative_blowup(ideal: Interval, rel: f64, u_max: f64) -> Interval {
+    if !rel.is_finite() {
+        return Interval::ENTIRE;
+    }
+    let r = bmul(rel, u_max);
+    if r >= 1.0 {
+        return ideal * Interval::new(1.0 - r, 1.0 + r);
+    }
+    let (lo, hi) = (ideal.lo(), ideal.hi());
+    let new_lo = if lo >= 0.0 { lo * (1.0 - r) } else { lo * (1.0 + r) };
+    let new_hi = if hi >= 0.0 { hi * (1.0 + r) } else { hi * (1.0 - r) };
+    Interval::new(
+        crate::interval::bump_down(new_lo, 1),
+        crate::interval::bump_up(new_hi, 1),
+    )
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,431 @@
+//! Basic CAA operations: `+`, `-`, `×`, `/`, negation.
+//!
+//! Every operation produces all entries of the result object: the concrete
+//! fp trace value, the ideal and rounded range enclosures (IA), and the
+//! absolute/relative bounds combined per the paper's §III rules, with all
+//! second-order terms kept (evaluated at `u_max`) and all bound arithmetic
+//! rounded upward.
+
+use super::bounds::{badd, bmul, rel_chain2, rel_chain3, rel_inverse};
+use super::{relative_blowup, Caa, Ctx, RND_BASIC};
+use crate::interval::Interval;
+
+impl Caa {
+    /// Is this quantity *exactly* zero (in both the ideal and every rounded
+    /// execution)? Adding/multiplying by it is error-free.
+    pub fn is_exact_zero(&self) -> bool {
+        self.ideal == Interval::ZERO && self.abs == 0.0
+    }
+
+    /// Is this quantity exactly one?
+    pub fn is_exact_one(&self) -> bool {
+        self.ideal == Interval::ONE && self.abs == 0.0 && self.rel == 0.0
+    }
+
+    /// FP addition `self ⊕ other`.
+    pub fn add(&self, other: &Caa, ctx: &Ctx) -> Caa {
+        // x + 0 = x exactly (IEEE): no rounding, no bound change. This is
+        // what keeps sparse inputs (background pixels) free.
+        if other.is_exact_zero() {
+            return self.clone();
+        }
+        if self.is_exact_zero() {
+            return other.clone();
+        }
+        if ctx.decorrelation && self.id == other.id {
+            // x + x = 2x: exact doubling of the error, no decorrelation loss;
+            // the doubling itself is exact in binary FP (exponent bump).
+            return Caa::make(
+                ctx,
+                self.fp + self.fp,
+                self.ideal.scale(2.0),
+                self.rounded.scale(2.0),
+                bmul(2.0, self.abs),
+                self.rel,
+            );
+        }
+        self.linear_combine(other, ctx, /*sub=*/ false)
+    }
+
+    /// FP subtraction `self ⊖ other`. Decorrelation: `x - x = 0` exactly.
+    /// Bound labels: if `other` is a known upper bound of `self`, the ideal
+    /// and rounded ranges are clipped to `(-inf, 0]` (and symmetrically).
+    pub fn sub(&self, other: &Caa, ctx: &Ctx) -> Caa {
+        if other.is_exact_zero() {
+            return self.clone();
+        }
+        if self.is_exact_zero() {
+            return other.neg();
+        }
+        if ctx.decorrelation && self.id == other.id {
+            return Caa::exact(0.0);
+        }
+        let mut r = self.linear_combine(other, ctx, /*sub=*/ true);
+        if ctx.labels {
+            let nonpos = Interval::new(f64::NEG_INFINITY, 0.0);
+            let nonneg = Interval::new(0.0, f64::INFINITY);
+            // self <= other (other is self's upper label, or self is
+            // other's lower label) => self - other <= 0.
+            let le = self.upper.as_ref().is_some_and(|m| m.id == other.id)
+                || other.lower.as_ref().is_some_and(|m| m.id == self.id);
+            // self >= other => self - other >= 0.
+            let ge = self.lower.as_ref().is_some_and(|m| m.id == other.id)
+                || other.upper.as_ref().is_some_and(|m| m.id == self.id);
+            if le {
+                r.ideal = r.ideal.intersect(&nonpos).unwrap_or(Interval::ZERO);
+                r.rounded = r.rounded.intersect(&nonpos).unwrap_or(Interval::ZERO);
+            }
+            if ge {
+                r.ideal = r.ideal.intersect(&nonneg).unwrap_or(Interval::ZERO);
+                r.rounded = r.rounded.intersect(&nonneg).unwrap_or(Interval::ZERO);
+            }
+        }
+        r
+    }
+
+    /// Shared implementation of ⊕ / ⊖ (paper eq. (7)–(8)).
+    fn linear_combine(&self, other: &Caa, ctx: &Ctx, sub: bool) -> Caa {
+        let (ob_ideal, ob_rounded) = if sub {
+            (-other.ideal, -other.rounded)
+        } else {
+            (other.ideal, other.rounded)
+        };
+        let fp = if sub { self.fp - other.fp } else { self.fp + other.fp };
+        let ideal = self.ideal + ob_ideal;
+        let rounded_pre = self.rounded + ob_rounded;
+        let rounded = relative_blowup(rounded_pre, RND_BASIC, ctx.u_max);
+
+        // Absolute: errors add; rounding contributes (1/2)·sup|r̂+ŝ| in u.
+        let abs = badd(
+            badd(self.abs, other.abs),
+            bmul(RND_BASIC, rounded_pre.mag()),
+        );
+
+        // Relative (paper eq. (8)): amplification factors α_r = r/(r+s),
+        // α_s = s/(r+s) bounded by IA on the ideal ranges; no finite bound
+        // when the ideal sum can vanish (catastrophic cancellation).
+        // (sup|r/(r+s)| <= sup|r| / inf|r+s|, one rounded division — much
+        // cheaper than a full interval division, identical bound.)
+        let rel = if self.rel.is_finite() && other.rel.is_finite() && ideal.excludes_zero() {
+            let denom = ideal.mig();
+            let alpha_r = crate::caa::bdiv(self.ideal.mag(), denom);
+            let alpha_s = crate::caa::bdiv(ob_ideal.mag(), denom);
+            let eps_in = badd(bmul(alpha_r, self.rel), bmul(alpha_s, other.rel));
+            rel_chain2(eps_in, RND_BASIC, ctx.u_max)
+        } else {
+            f64::INFINITY
+        };
+
+        Caa::make(ctx, fp, ideal, rounded, abs, rel)
+    }
+
+    /// FP multiplication `self ⊗ other`.
+    pub fn mul(&self, other: &Caa, ctx: &Ctx) -> Caa {
+        // x * 0 = 0 and x * 1 = x exactly. (The zero annihilation assumes
+        // the runtime value is finite — guaranteed for DNNs, whose
+        // quantities are bounded; the paper's analysis likewise excludes
+        // overflow.)
+        if self.is_exact_zero() || other.is_exact_zero() {
+            return Caa::exact(0.0);
+        }
+        if other.is_exact_one() {
+            return self.clone();
+        }
+        if self.is_exact_one() {
+            return other.clone();
+        }
+        if ctx.decorrelation && self.id == other.id {
+            // x * x = x²: use the square image (no decorrelation loss in
+            // the range) and the doubled relative bound.
+            let ideal = self.ideal.square();
+            let rounded_pre = self.rounded.square();
+            let rel = rel_chain3(self.rel, self.rel, RND_BASIC, ctx.u_max);
+            let abs = badd(
+                badd(bmul(2.0, bmul(self.ideal.mag(), self.abs)), bmul(bmul(self.abs, self.abs), ctx.u_max)),
+                bmul(RND_BASIC, rounded_pre.mag()),
+            );
+            return Caa::make(
+                ctx,
+                self.fp * self.fp,
+                ideal,
+                relative_blowup(rounded_pre, RND_BASIC, ctx.u_max),
+                abs,
+                rel,
+            );
+        }
+        let fp = self.fp * other.fp;
+        let ideal = self.ideal * other.ideal;
+        let rounded_pre = self.rounded * other.rounded;
+        let rounded = relative_blowup(rounded_pre, RND_BASIC, ctx.u_max);
+
+        // Relative: (1+ε_r u)(1+ε_s u)(1+ε_∘ u).
+        let rel = rel_chain3(self.rel, other.rel, RND_BASIC, ctx.u_max);
+
+        // Absolute, direct: r̂ŝ = rs + (r δ_s + s δ_r) u + δ_r δ_s u².
+        let abs = badd(
+            badd(
+                badd(
+                    bmul(self.ideal.mag(), other.abs),
+                    bmul(other.ideal.mag(), self.abs),
+                ),
+                bmul(bmul(self.abs, other.abs), ctx.u_max),
+            ),
+            bmul(RND_BASIC, rounded_pre.mag()),
+        );
+
+        Caa::make(ctx, fp, ideal, rounded, abs, rel)
+    }
+
+    /// FP division `self ⊘ other`. Decorrelation: `x / x = 1` exactly
+    /// (IEEE RN division of equal operands is exact).
+    pub fn div(&self, other: &Caa, ctx: &Ctx) -> Caa {
+        if ctx.decorrelation && self.id == other.id && self.ideal.excludes_zero() {
+            return Caa::exact(1.0);
+        }
+        if self.is_exact_zero() {
+            return Caa::exact(0.0);
+        }
+        if other.is_exact_one() {
+            return self.clone();
+        }
+        let fp = self.fp / other.fp;
+        let ideal = self.ideal / other.ideal;
+        let rounded_pre = self.rounded / other.rounded;
+        let rounded = relative_blowup(rounded_pre, RND_BASIC, ctx.u_max);
+
+        // Relative: (1+ε_r u) / (1+ε_s u) · (1+ε_∘ u).
+        let rel = rel_chain3(
+            self.eff_rel(),
+            rel_inverse(other.eff_rel(), ctx.u_max),
+            RND_BASIC,
+            ctx.u_max,
+        );
+
+        // Direct absolute rule (kicks in when the denominator's relative
+        // bound collapses, ε̄_s·u_max >= 1 — e.g. softmax sums over noisy
+        // exponentials at coarse u_max):
+        //   ŷ = (r + δ_r u)/(s + δ_s u) = y + (δ_r - y·δ_s)·u/ŝ
+        // so |δ_y| <= (δ̄_r + sup|y|·δ̄_s) / inf|ŝ|, with ŝ ranging over the
+        // denominator's *rounded* enclosure; plus the division rounding.
+        let abs = {
+            let den_mig = other.rounded.mig();
+            if den_mig > 0.0 && ideal.mag().is_finite() {
+                let num = badd(self.eff_abs(), bmul(ideal.mag(), other.eff_abs()));
+                badd(
+                    crate::caa::bdiv(num, den_mig),
+                    bmul(RND_BASIC, rounded_pre.mag()),
+                )
+            } else {
+                f64::INFINITY
+            }
+        };
+        Caa::make(ctx, fp, ideal, rounded, abs, rel)
+    }
+
+    /// Multiply by a learned scalar parameter `w` (the dot-product hot
+    /// path): semantically identical to `Caa::param(ctx, w).mul(self, ctx)`
+    /// but with the interval work reduced to scaling (w is a point) and
+    /// without materializing the intermediate parameter object.
+    pub fn mul_const(&self, w: f64, ctx: &Ctx) -> Caa {
+        if w == 0.0 || self.is_exact_zero() {
+            return Caa::exact(0.0);
+        }
+        if w == 1.0 {
+            return self.clone();
+        }
+        let fp = self.fp * w;
+        let ideal = self.ideal.scale(w);
+        let rounded_pre = self.rounded.scale(w);
+        let rounded = relative_blowup(rounded_pre, RND_BASIC, ctx.u_max);
+        // Relative: (1+ε_x u)(1+ε_w u)(1+ε_∘ u), ε̄_w = 1/2 representation.
+        let rel = rel_chain3(self.rel, RND_BASIC, RND_BASIC, ctx.u_max);
+        // Absolute: ŵx̂ = wx + (w δ_x + x δ_w) u + δ_w δ_x u², δ̄_w = |w|/2.
+        let aw = w.abs();
+        let dw = 0.5 * aw;
+        let abs = badd(
+            badd(
+                badd(bmul(aw, self.abs), bmul(self.ideal.mag(), dw)),
+                bmul(bmul(self.abs, dw), ctx.u_max),
+            ),
+            bmul(RND_BASIC, rounded_pre.mag()),
+        );
+        Caa::make(ctx, fp, ideal, rounded, abs, rel)
+    }
+
+    /// Exact negation (sign flip is error-free in IEEE FP).
+    pub fn neg(&self) -> Caa {
+        let mut r = self.clone();
+        r.id = super::fresh_id();
+        r.fp = -r.fp;
+        r.ideal = -r.ideal;
+        r.rounded = -r.rounded;
+        // A bound label x <= M becomes -x >= -M; we drop labels instead of
+        // negating them (sound, only loses optional insight).
+        r.upper = None;
+        r.lower = None;
+        r
+    }
+
+    /// Multiply by an exact constant scale that is a power of two
+    /// (error-free in binary FP: exponent shift only).
+    pub fn scale_pow2(&self, c: f64, ctx: &Ctx) -> Caa {
+        debug_assert!(c != 0.0 && c.abs().log2().fract() == 0.0, "{c} is not a power of 2");
+        Caa::make(
+            ctx,
+            self.fp * c,
+            self.ideal.scale(c),
+            self.rounded.scale(c),
+            bmul(self.abs, c.abs()),
+            self.rel,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Ctx {
+        Ctx::new()
+    }
+
+    #[test]
+    fn add_params_carry_half_ulp_each() {
+        let c = ctx();
+        let a = Caa::param(&c, 1.5);
+        let b = Caa::param(&c, 2.5);
+        let s = a.add(&b, &c);
+        assert_eq!(s.fp(), 4.0);
+        assert!(s.ideal().contains(4.0));
+        // δ̄ ~ 0.5*1.5 + 0.5*2.5 + 0.5*4 = 4.0 (± rounding slack)
+        assert!(s.abs_bound() >= 4.0 && s.abs_bound() < 4.2, "{}", s.abs_bound());
+        // ε̄ ~ α-weighted 1/2 + 1/2 rounding ~ 1.0
+        assert!(s.rel_bound() >= 1.0 && s.rel_bound() < 1.1, "{}", s.rel_bound());
+    }
+
+    #[test]
+    fn cancellation_kills_relative_not_absolute() {
+        let c = ctx();
+        let a = Caa::input(&c, Interval::new(0.0, 2.0), 1.0);
+        let b = Caa::input(&c, Interval::new(0.0, 2.0), 1.0);
+        let d = a.sub(&b, &c);
+        assert!(d.rel_bound().is_infinite(), "cancelling sub must lose rel bound");
+        assert!(d.abs_bound().is_finite(), "abs bound must survive");
+        assert!(d.ideal().contains(0.0));
+    }
+
+    #[test]
+    fn decorrelation_sub_is_exact_zero() {
+        let c = ctx();
+        let a = Caa::input(&c, Interval::new(-1.0, 1.0), 0.5);
+        let z = a.sub(&a.clone(), &c); // clone shares the id (assignment)
+        assert_eq!(z.ideal(), Interval::ZERO);
+        assert_eq!(z.abs_bound(), 0.0);
+        assert_eq!(z.rel_bound(), 0.0);
+
+        let no = ctx().no_decorrelation();
+        let a2 = Caa::input(&no, Interval::new(-1.0, 1.0), 0.5);
+        let z2 = a2.sub(&a2.clone(), &no);
+        assert!(z2.ideal().width() >= 4.0, "without decorrelation [-1,1]-[-1,1] = [-2,2]");
+    }
+
+    #[test]
+    fn decorrelation_div_is_exact_one() {
+        let c = ctx();
+        let a = Caa::input(&c, Interval::new(1.0, 2.0), 1.5);
+        let q = a.div(&a.clone(), &c);
+        assert_eq!(q.ideal(), Interval::ONE);
+        assert_eq!(q.rel_bound(), 0.0);
+    }
+
+    #[test]
+    fn mul_rel_is_sum_plus_rounding() {
+        let c = ctx();
+        let a = Caa::param(&c, 3.0);
+        let b = Caa::param(&c, -2.0);
+        let p = a.mul(&b, &c);
+        assert_eq!(p.fp(), -6.0);
+        assert!(p.ideal().contains(-6.0));
+        // ε̄ ~ 1/2 + 1/2 + 1/2 = 1.5 plus second order
+        assert!(p.rel_bound() >= 1.5 && p.rel_bound() < 1.6, "{}", p.rel_bound());
+        assert!(p.abs_bound().is_finite());
+    }
+
+    #[test]
+    fn div_by_zero_straddling_interval() {
+        let c = ctx();
+        let a = Caa::param(&c, 1.0);
+        let b = Caa::input(&c, Interval::new(-1.0, 1.0), 0.5);
+        let q = a.div(&b, &c);
+        // The value range is unbounded (divisor may vanish)...
+        assert_eq!(q.ideal(), Interval::ENTIRE);
+        // ...so no absolute bound exists; the *relative* bound is pointwise
+        // and survives (for any input with b != 0 the quotient's relative
+        // error is small even though its magnitude is unbounded).
+        assert!(q.abs_bound().is_infinite());
+        assert!(q.rel_bound().is_finite());
+        // But a divisor whose own relative error is unbounded kills it.
+        let bad = Caa::make(&c, 0.5, Interval::new(-1.0, 1.0), Interval::new(-1.0, 1.0), 1.0, f64::INFINITY);
+        let q2 = a.div(&bad, &c);
+        assert!(q2.rel_bound().is_infinite());
+    }
+
+    #[test]
+    fn neg_is_exact() {
+        let c = ctx();
+        let a = Caa::param(&c, 7.0);
+        let n = a.neg();
+        assert_eq!(n.fp(), -7.0);
+        assert_eq!(n.abs_bound(), a.abs_bound());
+        assert_eq!(n.rel_bound(), a.rel_bound());
+        assert!(n.ideal().contains(-7.0));
+    }
+
+    #[test]
+    fn scale_pow2_no_rounding() {
+        let c = ctx();
+        let a = Caa::param(&c, 3.0);
+        let s = a.scale_pow2(0.25, &c);
+        assert_eq!(s.fp(), 0.75);
+        assert_eq!(s.rel_bound(), a.rel_bound());
+    }
+
+    #[test]
+    fn exact_constants_are_free() {
+        let c = ctx();
+        let one = Caa::exact(1.0);
+        let x = Caa::param(&c, 5.0);
+        let y = x.mul(&one, &c);
+        // Only the multiplication rounding is added: 1/2 + 1/2 ~ 1.0.
+        assert!(y.rel_bound() < 1.01, "{}", y.rel_bound());
+    }
+
+    #[test]
+    fn label_clips_subtraction() {
+        let c = ctx();
+        let m = std::sync::Arc::new(Caa::input(&c, Interval::new(0.0, 10.0), 5.0));
+        let mut x = Caa::input(&c, Interval::new(0.0, 10.0), 3.0);
+        x.set_upper(&m);
+        let d = x.sub(&m, &c); // x <= m, so x - m <= 0
+        assert!(d.ideal().hi() <= 0.0, "ideal {} must be nonpositive", d.ideal());
+        assert!(d.rounded().hi() <= 0.0);
+
+        // Without labels the same subtraction spans [-10, 10].
+        let nl = ctx().no_labels();
+        let m2 = std::sync::Arc::new(Caa::input(&nl, Interval::new(0.0, 10.0), 5.0));
+        let mut x2 = Caa::input(&nl, Interval::new(0.0, 10.0), 3.0);
+        x2.set_upper(&m2);
+        let d2 = x2.sub(&m2, &nl);
+        assert!(d2.ideal().hi() > 0.0);
+    }
+
+    #[test]
+    fn ia_only_ctx_tracks_no_bounds() {
+        let c = ctx().ia_only();
+        let a = Caa::param(&c, 2.0);
+        let b = Caa::param(&c, 3.0);
+        let s = a.add(&b, &c);
+        assert!(s.abs_bound().is_infinite() && s.rel_bound().is_infinite());
+        assert!(s.ideal().contains(5.0)); // ranges still tracked
+    }
+}

@@ -1,0 +1,354 @@
+//! CAA soundness property tests.
+//!
+//! The central claim of the paper is that CAA bounds are *rigorous*: for
+//! every precision `k` with `u = 2^(1-k) <= u_max`, the true rounding error
+//! of a precision-k execution is below `δ̄·u` (absolutely) and `ε̄·u`
+//! (relatively). We witness this by evaluating *random expression DAGs*
+//! three ways — CAA, plain f64 (the ideal stand-in), and emulated
+//! precision-k ([`crate::quant::EmulatedFp`]) — and checking the bounds at
+//! every node, across random k in `[8, 24]`.
+
+use super::compare::{argmax_ambiguous, argmax_fp, max_many};
+use super::*;
+use crate::prop;
+use crate::quant::{check_against_bounds, round_to_precision, EmulatedFp};
+use crate::util::Rng;
+
+/// One value under the three interpretations.
+#[derive(Clone)]
+struct Tri {
+    caa: Caa,
+    ideal: f64,
+    emu: EmulatedFp,
+}
+
+fn leaf(ctx: &Ctx, rng: &mut Rng, k: u32) -> Tri {
+    let x = match rng.below(4) {
+        0 => rng.range(-1.0, 1.0),
+        1 => rng.range(-8.0, 8.0),
+        2 => rng.range(0.0, 255.0),
+        _ => rng.range(-0.05, 0.05),
+    };
+    Tri { caa: Caa::param(ctx, x), ideal: x, emu: EmulatedFp::new(x, k) }
+}
+
+/// Grow a random DAG, checking every freshly created node.
+fn run_random_dag(ctx: &Ctx, rng: &mut Rng, k: u32, n_ops: usize) {
+    let mut nodes: Vec<Tri> = (0..3).map(|_| leaf(ctx, rng, k)).collect();
+    let slack = |r: f64| 1e-9 * (1.0 + r.abs());
+
+    for step in 0..n_ops {
+        let a = nodes[rng.below(nodes.len())].clone();
+        let op = rng.below(12);
+        let b = nodes[rng.below(nodes.len())].clone();
+        let cand: Option<Tri> = match op {
+            0 => Some(Tri {
+                caa: a.caa.add(&b.caa, ctx),
+                ideal: a.ideal + b.ideal,
+                emu: a.emu.add(b.emu),
+            }),
+            1 => Some(Tri {
+                caa: a.caa.sub(&b.caa, ctx),
+                ideal: a.ideal - b.ideal,
+                emu: a.emu.sub(b.emu),
+            }),
+            2 => Some(Tri {
+                caa: a.caa.mul(&b.caa, ctx),
+                ideal: a.ideal * b.ideal,
+                emu: a.emu.mul(b.emu),
+            }),
+            3 => {
+                if b.caa.ideal().excludes_zero() && b.caa.ideal().mig() > 1e-3 {
+                    Some(Tri {
+                        caa: a.caa.div(&b.caa, ctx),
+                        ideal: a.ideal / b.ideal,
+                        emu: a.emu.div(b.emu),
+                    })
+                } else {
+                    None
+                }
+            }
+            4 => {
+                if a.caa.ideal().mag() < 20.0 {
+                    Some(Tri { caa: a.caa.exp(ctx), ideal: a.ideal.exp(), emu: a.emu.exp() })
+                } else {
+                    None
+                }
+            }
+            5 => {
+                if a.caa.ideal().lo() > 1e-3 {
+                    Some(Tri { caa: a.caa.ln(ctx), ideal: a.ideal.ln(), emu: a.emu.ln() })
+                } else {
+                    None
+                }
+            }
+            6 => {
+                if a.caa.ideal().lo() > 0.0 {
+                    Some(Tri { caa: a.caa.sqrt(ctx), ideal: a.ideal.sqrt(), emu: a.emu.sqrt() })
+                } else {
+                    None
+                }
+            }
+            7 => Some(Tri { caa: a.caa.tanh(ctx), ideal: a.ideal.tanh(), emu: a.emu.tanh() }),
+            8 => Some(Tri {
+                caa: a.caa.sigmoid(ctx),
+                ideal: 1.0 / (1.0 + (-a.ideal).exp()),
+                emu: a.emu.sigmoid(),
+            }),
+            9 => Some(Tri { caa: a.caa.relu(ctx), ideal: a.ideal.max(0.0), emu: a.emu.relu() }),
+            10 => Some(Tri {
+                caa: a.caa.max(&b.caa, ctx),
+                ideal: a.ideal.max(b.ideal),
+                emu: a.emu.max(b.emu),
+            }),
+            11 => Some(Tri { caa: a.caa.neg(), ideal: -a.ideal, emu: a.emu.neg() }),
+            _ => unreachable!(),
+        };
+        let Some(t) = cand else { continue };
+        if !t.ideal.is_finite() || t.ideal.abs() > 1e12 {
+            continue; // keep magnitudes in a regime where f64 ref ~ ideal
+        }
+        // The ideal stand-in must be inside the CAA ideal enclosure...
+        assert!(
+            t.caa.ideal().inflate(slack(t.ideal)).contains(t.ideal),
+            "step {step}: ideal {:.17e} outside {}",
+            t.ideal,
+            t.caa.ideal()
+        );
+        // ... the emulated value inside the rounded enclosure ...
+        assert!(
+            t.caa.rounded().inflate(slack(t.emu.v)).contains(t.emu.v),
+            "step {step}: emulated {:.17e} outside rounded {}",
+            t.emu.v,
+            t.caa.rounded()
+        );
+        // ... and the error bounds must hold.
+        if let Err(e) = check_against_bounds(&t.caa, t.ideal, t.emu.v, k, slack(t.ideal)) {
+            panic!("step {step} (op {op}): {e}");
+        }
+        nodes.push(t);
+        if nodes.len() > 24 {
+            nodes.remove(0);
+        }
+    }
+}
+
+#[test]
+fn soundness_random_dags_full_caa() {
+    prop::check_with(
+        prop::Config { cases: 150, base_seed: 0xABCD01 },
+        "caa-soundness",
+        |rng| {
+            let k = 8 + rng.below(17) as u32; // u = 2^(1-k) <= 2^-7 = u_max
+            let ctx = Ctx::new();
+            run_random_dag(&ctx, rng, k, 40);
+        },
+    );
+}
+
+#[test]
+fn soundness_random_dags_abs_only() {
+    prop::check_with(
+        prop::Config { cases: 60, base_seed: 0xABCD02 },
+        "caa-soundness-absonly",
+        |rng| {
+            let k = 8 + rng.below(17) as u32;
+            let ctx = Ctx::new().abs_only();
+            run_random_dag(&ctx, rng, k, 30);
+        },
+    );
+}
+
+#[test]
+fn soundness_random_dags_rel_only() {
+    prop::check_with(
+        prop::Config { cases: 60, base_seed: 0xABCD03 },
+        "caa-soundness-relonly",
+        |rng| {
+            let k = 8 + rng.below(17) as u32;
+            let ctx = Ctx::new().rel_only();
+            run_random_dag(&ctx, rng, k, 30);
+        },
+    );
+}
+
+#[test]
+fn soundness_without_decorrelation_or_labels() {
+    // Disabling the global-insight features must stay sound (just looser).
+    prop::check_with(
+        prop::Config { cases: 60, base_seed: 0xABCD04 },
+        "caa-soundness-nodecorr",
+        |rng| {
+            let k = 8 + rng.below(17) as u32;
+            let ctx = Ctx::new().no_decorrelation().no_labels();
+            run_random_dag(&ctx, rng, k, 30);
+        },
+    );
+}
+
+#[test]
+fn soundness_small_u_max() {
+    // Tighter u_max (float-16-like analyses, k >= 12).
+    prop::check_with(
+        prop::Config { cases: 60, base_seed: 0xABCD05 },
+        "caa-soundness-umax11",
+        |rng| {
+            let k = 12 + rng.below(13) as u32;
+            let ctx = Ctx::with_u_max(2f64.powi(-11));
+            run_random_dag(&ctx, rng, k, 30);
+        },
+    );
+}
+
+#[test]
+fn dot_product_bound_scales_linearly() {
+    // An n-term dot product's absolute bound should grow ~linearly in n
+    // (Wilkinson-style), not blow up: sanity of the summation rule.
+    let ctx = Ctx::new();
+    let mut rng = Rng::new(99);
+    let mut prev = 0.0;
+    for n in [4usize, 16, 64, 256] {
+        let acc = (0..n)
+            .map(|_| {
+                let w = Caa::param(&ctx, rng.range(-1.0, 1.0));
+                let x = Caa::param(&ctx, rng.range(0.0, 1.0));
+                w.mul(&x, &ctx)
+            })
+            .reduce(|a, b| a.add(&b, &ctx))
+            .unwrap();
+        let bound = acc.abs_bound();
+        assert!(bound.is_finite(), "n={n}");
+        assert!(bound > prev, "bound must grow with n");
+        // Linear-ish: bound/n stays within a small constant factor.
+        assert!(bound / n as f64 <= 4.0, "n={n} bound={bound} — superlinear blowup");
+        prev = bound;
+    }
+}
+
+#[test]
+fn softmax_pattern_end_to_end() {
+    // The paper's §IV flagship pattern: max-subtracted softmax. With
+    // decorrelation + labels the output keeps a finite relative bound.
+    let ctx = Ctx::new();
+    let softmax = |ctx: &Ctx, logits: &[f64]| -> Vec<Caa> {
+        let mut xs: Vec<Caa> = logits.iter().map(|&v| Caa::param(ctx, v)).collect();
+        let m = max_many(ctx, &mut xs);
+        let exps: Vec<Caa> = xs.iter().map(|x| x.sub(&m, ctx).exp(ctx)).collect();
+        let sum = exps.iter().cloned().reduce(|a, b| a.add(&b, ctx)).unwrap();
+        exps.iter().map(|e| e.div(&sum, ctx)).collect()
+    };
+    let out = softmax(&ctx, &[2.0, -1.0, 0.5, 0.1]);
+    let fp_sum: f64 = out.iter().map(|o| o.fp()).sum();
+    assert!((fp_sum - 1.0).abs() < 1e-12, "softmax fp trace sums to 1");
+    for (i, o) in out.iter().enumerate() {
+        assert!(o.ideal().lo() >= 0.0, "prob {i} nonneg");
+        assert!(o.ideal().hi() <= 1.0 + 1e-9, "prob {i} <= 1: {}", o.ideal());
+        assert!(o.rel_bound().is_finite(), "prob {i} needs a finite rel bound");
+        assert!(o.abs_bound().is_finite());
+        // Bounds must be *tight-ish*: a handful of u, not thousands
+        // (Table I reports 3.4u for a whole network).
+        assert!(o.rel_bound() < 60.0, "prob {i} rel bound too loose: {}", o.rel_bound());
+    }
+    assert_eq!(argmax_fp(&out), 0);
+    assert!(!argmax_ambiguous(&out), "confident logits must stay unambiguous");
+}
+
+#[test]
+fn softmax_without_labels_loses_exp_input_bound() {
+    // Ablation motivation (A-decorr): without labels, x - max(x..) is not
+    // known nonpositive, so exp's ideal range inflates.
+    let run = |ctx: &Ctx| -> f64 {
+        // Ranged inputs (an input box, as in per-class analysis), where the
+        // decorrelated x - max(x..) genuinely needs the label insight.
+        let mut xs = vec![
+            Caa::input(ctx, crate::interval::Interval::new(0.0, 4.0), 3.0),
+            Caa::input(ctx, crate::interval::Interval::new(0.0, 4.0), 1.0),
+        ];
+        let m = max_many(ctx, &mut xs);
+        let e = xs[0].sub(&m, ctx).exp(ctx);
+        e.ideal().hi()
+    };
+    let with = run(&Ctx::new());
+    let without = run(&Ctx::new().no_labels());
+    assert!(with <= 1.0 + 1e-9, "with labels e^(x-max) <= 1, got {with}");
+    assert!(without > with, "labels must tighten the softmax exp range");
+}
+
+#[test]
+fn emulated_softmax_within_caa_bounds() {
+    // Full softmax: CAA bound vs actual emulated-k error, many k.
+    prop::check_with(
+        prop::Config { cases: 80, base_seed: 0xABCD06 },
+        "softmax-sound",
+        |rng| {
+            let k = 8 + rng.below(17) as u32;
+            let ctx = Ctx::new();
+            let n = 2 + rng.below(6);
+            let logits: Vec<f64> = (0..n).map(|_| rng.range(-4.0, 4.0)).collect();
+
+            // CAA + f64 reference + emulated-k, sharing the max-subtraction
+            // structure.
+            let mut xs: Vec<Caa> = logits.iter().map(|&v| Caa::param(&ctx, v)).collect();
+            let m = max_many(&ctx, &mut xs);
+            let exps: Vec<Caa> = xs.iter().map(|x| x.sub(&m, &ctx).exp(&ctx)).collect();
+            let sum = exps.iter().cloned().reduce(|a, b| a.add(&b, &ctx)).unwrap();
+            let caa_out: Vec<Caa> = exps.iter().map(|e| e.div(&sum, &ctx)).collect();
+
+            let mref = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let eref: Vec<f64> = logits.iter().map(|&v| (v - mref).exp()).collect();
+            let sref: f64 = eref.iter().sum();
+
+            let el: Vec<EmulatedFp> = logits.iter().map(|&v| EmulatedFp::new(v, k)).collect();
+            let memu = el.iter().fold(EmulatedFp::new(f64::NEG_INFINITY, k), |a, &b| a.max(b));
+            let eemu: Vec<EmulatedFp> = el.iter().map(|&v| v.sub(memu).exp()).collect();
+            let semu = eemu.iter().fold(EmulatedFp::new(0.0, k), |a, &b| a.add(b));
+
+            for i in 0..n {
+                let ideal = eref[i] / sref;
+                let emu = eemu[i].div(semu).v;
+                if let Err(e) =
+                    check_against_bounds(&caa_out[i], ideal, emu, k, 1e-10)
+                {
+                    panic!("softmax[{i}] logits={logits:?} k={k}: {e}");
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn param_representation_error_witnessed() {
+    // Caa::param claims ε̄ = 1/2; rounding a param to k bits must stay
+    // within it for every k.
+    prop::check("param-repr", |rng| {
+        let x = prop::gen_f64_in(rng, -100.0, 100.0);
+        let k = 8 + rng.below(17) as u32;
+        let ctx = Ctx::new();
+        let p = Caa::param(&ctx, x);
+        let r = round_to_precision(x, k);
+        if let Err(e) = check_against_bounds(&p, x, r, k, 0.0) {
+            panic!("param({x}) k={k}: {e}");
+        }
+    });
+}
+
+#[test]
+fn ids_are_unique_and_clone_preserves() {
+    let ctx = Ctx::new();
+    let a = Caa::param(&ctx, 1.0);
+    let b = Caa::param(&ctx, 1.0);
+    assert_ne!(a.id(), b.id());
+    assert_eq!(a.id(), a.clone().id());
+    let s = a.add(&b, &ctx);
+    assert_ne!(s.id(), a.id());
+    assert_ne!(s.id(), b.id());
+}
+
+#[test]
+fn fp_error_reference_interval() {
+    let ctx = Ctx::new();
+    let x = Caa::input(&ctx, crate::interval::Interval::new(0.0, 10.0), 4.0);
+    let e = x.fp_error();
+    // fp = 4, ideal in [0,10] => actual error in [-6, 4].
+    assert!(e.contains(0.0) && e.contains(-6.0) && e.contains(4.0));
+}

@@ -1,0 +1,209 @@
+//! Declarative command-line parsing substrate (replaces clap, unavailable
+//! offline). Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! `--flag`, defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None => boolean flag; Some(default) => value option.
+    pub default: Option<String>,
+}
+
+/// Specification of a subcommand.
+#[derive(Clone)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// Parsed command line.
+#[derive(Debug)]
+pub struct Parsed {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing option --{name}"))?;
+        s.parse()
+            .map_err(|_| anyhow::anyhow!("option --{name}: '{s}' is not a number"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing option --{name}"))?;
+        s.parse()
+            .map_err(|_| anyhow::anyhow!("option --{name}: '{s}' is not an integer"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// A CLI application definition.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CmdSpec>,
+}
+
+impl App {
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "USAGE: {} <command> [options]\n", self.name);
+        let _ = writeln!(s, "COMMANDS:");
+        for c in &self.commands {
+            let _ = writeln!(s, "  {:<18} {}", c.name, c.help);
+            for o in &c.opts {
+                let d = match &o.default {
+                    Some(d) => format!(" (default: {d})"),
+                    None => " (flag)".to_string(),
+                };
+                let _ = writeln!(s, "      --{:<14} {}{}", o.name, o.help, d);
+            }
+        }
+        s
+    }
+
+    /// Parse an argv (excluding the program name).
+    pub fn parse(&self, args: &[String]) -> anyhow::Result<Parsed> {
+        let Some(cmd_name) = args.first() else {
+            anyhow::bail!("no command given\n\n{}", self.help());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            anyhow::bail!("{}", self.help());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown command '{cmd_name}'\n\n{}", self.help()))?;
+
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let mut positionals = Vec::new();
+        for o in &cmd.opts {
+            if let Some(d) = &o.default {
+                values.insert(o.name.to_string(), d.clone());
+            }
+        }
+
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(raw) = a.strip_prefix("--") {
+                let (name, inline_val) = match raw.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (raw, None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name} for '{cmd_name}'"))?;
+                if spec.default.is_none() {
+                    // boolean flag
+                    if inline_val.is_some() {
+                        anyhow::bail!("flag --{name} takes no value");
+                    }
+                    flags.insert(name.to_string(), true);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .ok_or_else(|| anyhow::anyhow!("option --{name} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    values.insert(name.to_string(), v);
+                }
+            } else {
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+
+        Ok(Parsed { command: cmd_name.clone(), values, flags, positionals })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App {
+            name: "rigor",
+            about: "test",
+            commands: vec![CmdSpec {
+                name: "analyze",
+                help: "run analysis",
+                opts: vec![
+                    OptSpec { name: "model", help: "model path", default: Some("m.json".into()) },
+                    OptSpec { name: "k", help: "precision", default: Some("24".into()) },
+                    OptSpec { name: "verbose", help: "chatty", default: None },
+                ],
+            }],
+        }
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = app().parse(&argv(&["analyze"])).unwrap();
+        assert_eq!(p.get("model"), Some("m.json"));
+        assert_eq!(p.get_usize("k").unwrap(), 24);
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let p = app()
+            .parse(&argv(&["analyze", "--model", "x.json", "--k=8", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(p.get("model"), Some("x.json"));
+        assert_eq!(p.get_usize("k").unwrap(), 8);
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(app().parse(&argv(&[])).is_err());
+        assert!(app().parse(&argv(&["nope"])).is_err());
+        assert!(app().parse(&argv(&["analyze", "--bogus", "1"])).is_err());
+        assert!(app().parse(&argv(&["analyze", "--model"])).is_err());
+        assert!(app().parse(&argv(&["analyze", "--verbose=1"])).is_err());
+        assert!(app().parse(&argv(&["analyze", "--k", "abc"])).unwrap().get_f64("k").is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = app().help();
+        assert!(h.contains("analyze") && h.contains("--model"));
+    }
+}

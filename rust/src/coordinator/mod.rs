@@ -1,0 +1,115 @@
+//! The analysis **coordinator**: a thread-pool job runtime (std::thread +
+//! condvars; the registry snapshot has no tokio) that fans analysis jobs
+//! out over workers with a bounded, backpressured queue and collects
+//! ordered results. This is the serving loop of the tool: one job per
+//! (model, class) pair; Python is never involved.
+
+mod pool;
+
+pub use pool::{Pool, PoolMetrics};
+
+use crate::analysis::{aggregate, analyze_class, AnalysisConfig, ClassAnalysis, ModelAnalysis};
+use crate::data::Dataset;
+use crate::model::Model;
+use crate::util::Stopwatch;
+use anyhow::Result;
+
+/// Analyze a model with per-class jobs fanned out over the pool —
+/// the parallel version of [`crate::analysis::analyze_model`].
+pub fn analyze_model_parallel(
+    model: &Model,
+    data: &Dataset,
+    cfg: &AnalysisConfig,
+    pool: &Pool,
+) -> Result<ModelAnalysis> {
+    let sw = Stopwatch::start();
+    let reps = if data.labels.is_empty() {
+        vec![(0usize, 0usize)]
+    } else {
+        data.class_representatives()
+    };
+    let jobs: Vec<(usize, Vec<f64>)> = reps
+        .into_iter()
+        .map(|(class, idx)| (class, data.inputs[idx].clone()))
+        .collect();
+    let results: Vec<Result<ClassAnalysis>> = pool.run_batch(jobs, {
+        let model = model.clone();
+        let cfg = cfg.clone();
+        move |(class, sample)| analyze_class(&model, &cfg, class, &sample)
+    });
+    let mut per_class = Vec::with_capacity(results.len());
+    for r in results {
+        per_class.push(r?);
+    }
+    per_class.sort_by_key(|c| c.class);
+    Ok(aggregate(model, cfg, per_class, sw.secs()))
+}
+
+/// A multi-model analysis request (what the CLI's `analyze` command and the
+/// Table-I bench submit).
+pub struct BatchRequest {
+    pub models: Vec<(Model, Dataset, AnalysisConfig)>,
+}
+
+/// Run a batch of model analyses, each internally parallel over classes.
+pub fn run_batch_request(req: &BatchRequest, pool: &Pool) -> Result<Vec<ModelAnalysis>> {
+    req.models
+        .iter()
+        .map(|(m, d, c)| analyze_model_parallel(m, d, c, pool))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze_model;
+    use crate::model::zoo;
+    use crate::util::Rng;
+
+    fn digits_like() -> (Model, Dataset) {
+        let m = zoo::tiny_mlp(42);
+        let mut rng = Rng::new(1);
+        let inputs: Vec<Vec<f64>> = (0..6)
+            .map(|_| (0..8).map(|_| rng.range(0.0, 1.0)).collect())
+            .collect();
+        let data = Dataset { input_shape: vec![8], inputs, labels: vec![0, 1, 2, 0, 1, 2] };
+        (m, data)
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let (m, data) = digits_like();
+        let cfg = AnalysisConfig::default();
+        let seq = analyze_model(&m, &data, &cfg).unwrap();
+        let pool = Pool::new(4, 16);
+        let par = analyze_model_parallel(&m, &data, &cfg, &pool).unwrap();
+        assert_eq!(seq.per_class.len(), par.per_class.len());
+        // CAA runs are deterministic: bounds must agree exactly.
+        for (a, b) in seq.per_class.iter().zip(&par.per_class) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.max_abs_u, b.max_abs_u, "class {}", a.class);
+            assert_eq!(a.max_rel_u, b.max_rel_u);
+            assert_eq!(a.predicted, b.predicted);
+        }
+        assert_eq!(seq.max_abs_u, par.max_abs_u);
+        assert_eq!(seq.required_k, par.required_k);
+    }
+
+    #[test]
+    fn batch_request_runs_multiple_models() {
+        let (m1, d1) = digits_like();
+        let m2 = zoo::tiny_pendulum(3);
+        let d2 = crate::data::synthetic::pendulum_grid(3);
+        let req = BatchRequest {
+            models: vec![
+                (m1, d1, AnalysisConfig::default()),
+                (m2, d2, AnalysisConfig::default()),
+            ],
+        };
+        let pool = Pool::new(2, 8);
+        let out = run_batch_request(&req, &pool).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].model_name, "tiny_mlp");
+        assert_eq!(out[1].model_name, "tiny_pendulum");
+    }
+}

@@ -1,0 +1,120 @@
+//! Datasets.
+//!
+//! Trained-model evaluation data is produced by `python/compile/aot.py`
+//! (the same synthetic generators that trained the models) and exported to
+//! JSON next to the model files; [`Dataset::load`] reads it. For tests and
+//! ablation benches that must run without artifacts, [`synthetic`] provides
+//! Rust-side generators of the same flavor.
+
+pub mod synthetic;
+
+use crate::json::Value;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A labeled dataset: row-major inputs (one flat vector per sample) plus
+/// integer labels (empty for regression data).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub input_shape: Vec<usize>,
+    pub inputs: Vec<Vec<f64>>,
+    pub labels: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.inputs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inputs.is_empty()
+    }
+
+    /// One representative sample index per class (first occurrence), in
+    /// class order — the paper analyzes "one representative of the class".
+    pub fn class_representatives(&self) -> Vec<(usize, usize)> {
+        let mut reps: Vec<(usize, usize)> = Vec::new();
+        for (i, &l) in self.labels.iter().enumerate() {
+            if !reps.iter().any(|&(c, _)| c == l) {
+                reps.push((l, i));
+            }
+        }
+        reps.sort_unstable();
+        reps
+    }
+
+    /// Load from the JSON the Python exporter writes:
+    /// `{"input_shape": [...], "inputs": [[...], ...], "labels": [...]}`.
+    pub fn from_json(v: &Value) -> Result<Dataset> {
+        let input_shape = v
+            .get("input_shape")
+            .and_then(|s| s.as_usize_vec())
+            .ok_or_else(|| anyhow!("dataset missing 'input_shape'"))?;
+        let n: usize = input_shape.iter().product();
+        let inputs_v = v
+            .get("inputs")
+            .and_then(|s| s.as_array())
+            .ok_or_else(|| anyhow!("dataset missing 'inputs'"))?;
+        let mut inputs = Vec::with_capacity(inputs_v.len());
+        for (i, row) in inputs_v.iter().enumerate() {
+            let row = row
+                .as_f64_vec()
+                .ok_or_else(|| anyhow!("dataset input {i} not numeric"))?;
+            if row.len() != n {
+                bail!("dataset input {i}: expected {n} values, got {}", row.len());
+            }
+            inputs.push(row);
+        }
+        let labels = match v.get("labels") {
+            Some(l) => l
+                .as_usize_vec()
+                .ok_or_else(|| anyhow!("dataset 'labels' must be integers"))?,
+            None => Vec::new(),
+        };
+        if !labels.is_empty() && labels.len() != inputs.len() {
+            bail!("dataset: {} labels for {} inputs", labels.len(), inputs.len());
+        }
+        Ok(Dataset { input_shape, inputs, labels })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Dataset> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading dataset {}", path.display()))?;
+        Dataset::from_json(&crate::json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    #[test]
+    fn from_json_and_representatives() {
+        let v = json::parse(
+            r#"{"input_shape": [2], "inputs": [[1,2],[3,4],[5,6],[7,8]],
+                "labels": [1, 0, 1, 0]}"#,
+        )
+        .unwrap();
+        let d = Dataset::from_json(&v).unwrap();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.class_representatives(), vec![(0, 1), (1, 0)]);
+    }
+
+    #[test]
+    fn rejects_mismatches() {
+        for bad in [
+            r#"{"inputs": [[1]]}"#,
+            r#"{"input_shape": [2], "inputs": [[1]]}"#,
+            r#"{"input_shape": [1], "inputs": [[1],[2]], "labels": [0]}"#,
+        ] {
+            assert!(Dataset::from_json(&json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn regression_data_has_no_labels() {
+        let v = json::parse(r#"{"input_shape": [1], "inputs": [[0.5]]}"#).unwrap();
+        let d = Dataset::from_json(&v).unwrap();
+        assert!(d.labels.is_empty());
+    }
+}

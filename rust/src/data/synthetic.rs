@@ -1,0 +1,161 @@
+//! Rust-side synthetic data generators (self-contained tests/benches).
+//!
+//! The digit generator draws crude stroke prototypes per class and
+//! perturbs them with noise and shifts — enough structure for a small MLP
+//! to learn, which is all the error analysis needs (DESIGN.md
+//! §Substitutions: Table I measures arithmetic error, not learning
+//! quality). The pendulum generator samples the 2-D input box `[-6, 6]²`.
+
+use super::Dataset;
+use crate::util::Rng;
+
+/// Render the prototype of digit `d` on an `s x s` grid (values in [0,1]).
+pub fn digit_prototype(d: usize, s: usize) -> Vec<f64> {
+    let mut img = vec![0.0f64; s * s];
+    let set = |x: usize, y: usize, img: &mut Vec<f64>| {
+        if x < s && y < s {
+            img[y * s + x] = 1.0;
+        }
+    };
+    let (lo, hi, mid) = (s / 5, s - 1 - s / 5, s / 2);
+    // Stroke segments per digit on a 7-segment-style layout.
+    //   a: top, b: top-right, c: bottom-right, d: bottom, e: bottom-left,
+    //   f: top-left, g: middle
+    let segs: [&[usize]; 10] = [
+        &[0, 1, 2, 3, 4, 5],    // 0
+        &[1, 2],                // 1
+        &[0, 1, 6, 4, 3],       // 2
+        &[0, 1, 6, 2, 3],       // 3
+        &[5, 6, 1, 2],          // 4
+        &[0, 5, 6, 2, 3],       // 5
+        &[0, 5, 4, 3, 2, 6],    // 6
+        &[0, 1, 2],             // 7
+        &[0, 1, 2, 3, 4, 5, 6], // 8
+        &[6, 5, 0, 1, 2, 3],    // 9
+    ];
+    for &seg in segs[d % 10] {
+        match seg {
+            0 => (lo..=hi).for_each(|x| set(x, lo, &mut img)),       // a
+            1 => (lo..=mid).for_each(|y| set(hi, y, &mut img)),      // b
+            2 => (mid..=hi).for_each(|y| set(hi, y, &mut img)),      // c
+            3 => (lo..=hi).for_each(|x| set(x, hi, &mut img)),       // d
+            4 => (mid..=hi).for_each(|y| set(lo, y, &mut img)),      // e
+            5 => (lo..=mid).for_each(|y| set(lo, y, &mut img)),      // f
+            6 => (lo..=hi).for_each(|x| set(x, mid, &mut img)),      // g
+            _ => unreachable!(),
+        }
+    }
+    img
+}
+
+/// Noisy, shifted digit samples: `n` per class, `s x s` pixels.
+pub fn digits(rng: &mut Rng, s: usize, n_per_class: usize, noise: f64) -> Dataset {
+    let mut inputs = Vec::with_capacity(10 * n_per_class);
+    let mut labels = Vec::with_capacity(10 * n_per_class);
+    for class in 0..10usize {
+        let proto = digit_prototype(class, s);
+        for _ in 0..n_per_class {
+            let (dx, dy) = (rng.int_range(-1, 1), rng.int_range(-1, 1));
+            let mut img = vec![0.0f64; s * s];
+            for y in 0..s {
+                for x in 0..s {
+                    let (sx, sy) = (x as i64 - dx, y as i64 - dy);
+                    if (0..s as i64).contains(&sx) && (0..s as i64).contains(&sy) {
+                        img[y * s + x] = proto[sy as usize * s + sx as usize];
+                    }
+                }
+            }
+            for p in img.iter_mut() {
+                *p = (*p + noise * rng.normal()).clamp(0.0, 1.0);
+            }
+            inputs.push(img);
+            labels.push(class);
+        }
+    }
+    Dataset { input_shape: vec![s * s], inputs, labels }
+}
+
+/// Pendulum-state samples over the Lyapunov-verification box `[-6, 6]²`.
+pub fn pendulum_grid(per_axis: usize) -> Dataset {
+    let mut inputs = Vec::with_capacity(per_axis * per_axis);
+    for i in 0..per_axis {
+        for j in 0..per_axis {
+            let x = -6.0 + 12.0 * (i as f64) / (per_axis - 1) as f64;
+            let y = -6.0 + 12.0 * (j as f64) / (per_axis - 1) as f64;
+            inputs.push(vec![x, y]);
+        }
+    }
+    Dataset { input_shape: vec![2], inputs, labels: Vec::new() }
+}
+
+/// Random low-resolution RGB "image" samples with class-dependent color
+/// statistics (for CNN smoke tests).
+pub fn color_blobs(rng: &mut Rng, s: usize, classes: usize, n_per_class: usize) -> Dataset {
+    let mut inputs = Vec::new();
+    let mut labels = Vec::new();
+    for class in 0..classes {
+        let phase = class as f64 / classes as f64;
+        for _ in 0..n_per_class {
+            let mut img = Vec::with_capacity(s * s * 3);
+            let (cx, cy) = (rng.range(0.3, 0.7) * s as f64, rng.range(0.3, 0.7) * s as f64);
+            for y in 0..s {
+                for x in 0..s {
+                    let d = ((x as f64 - cx).powi(2) + (y as f64 - cy).powi(2)).sqrt() / s as f64;
+                    let base = (1.0 - d).max(0.0);
+                    img.push((base * (0.3 + 0.7 * phase) + 0.05 * rng.normal()).clamp(0.0, 1.0));
+                    img.push((base * (1.0 - phase) + 0.05 * rng.normal()).clamp(0.0, 1.0));
+                    img.push((0.5 * base + 0.05 * rng.normal()).clamp(0.0, 1.0));
+                }
+            }
+            inputs.push(img);
+            labels.push(class);
+        }
+    }
+    Dataset { input_shape: vec![s, s, 3], inputs, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prototypes_distinct() {
+        let s = 12;
+        let protos: Vec<Vec<f64>> = (0..10).map(|d| digit_prototype(d, s)).collect();
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                assert_ne!(protos[i], protos[j], "digits {i} and {j} identical");
+            }
+        }
+    }
+
+    #[test]
+    fn digits_shapes_and_ranges() {
+        let mut rng = Rng::new(3);
+        let d = digits(&mut rng, 12, 4, 0.1);
+        assert_eq!(d.len(), 40);
+        assert_eq!(d.input_shape, vec![144]);
+        assert!(d
+            .inputs
+            .iter()
+            .all(|img| img.iter().all(|&p| (0.0..=1.0).contains(&p))));
+        assert_eq!(d.class_representatives().len(), 10);
+    }
+
+    #[test]
+    fn pendulum_grid_covers_box() {
+        let d = pendulum_grid(5);
+        assert_eq!(d.len(), 25);
+        assert_eq!(d.inputs[0], vec![-6.0, -6.0]);
+        assert_eq!(d.inputs[24], vec![6.0, 6.0]);
+    }
+
+    #[test]
+    fn color_blobs_shape() {
+        let mut rng = Rng::new(4);
+        let d = color_blobs(&mut rng, 8, 3, 2);
+        assert_eq!(d.len(), 6);
+        assert_eq!(d.input_shape, vec![8, 8, 3]);
+        assert_eq!(d.inputs[0].len(), 192);
+    }
+}

@@ -1,0 +1,347 @@
+//! Arithmetic operations on [`Interval`], all outward-rounded.
+
+use super::round::{rn_hi, rn_lo};
+use super::Interval;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// Was the f64 addition `a + b = s` exact? (2Sum error-term test.) When it
+/// was, no outward bump is needed — this keeps point arithmetic on exactly
+/// representable data (integers, max-subtracted logits, ...) point-tight.
+fn add_exact(a: f64, b: f64, s: f64) -> bool {
+    if !s.is_finite() {
+        return false;
+    }
+    let bb = s - a;
+    let err = (a - (s - bb)) + (b - bb);
+    err == 0.0
+}
+
+/// Was the f64 multiplication `a * b = p` exact? (FMA residual test.)
+fn mul_exact(a: f64, b: f64, p: f64) -> bool {
+    p.is_finite() && a.mul_add(b, -p) == 0.0
+}
+
+/// Lower endpoint of an addition result, bumped only if inexact.
+fn add_lo(a: f64, b: f64) -> f64 {
+    let s = a + b;
+    if add_exact(a, b, s) {
+        s
+    } else {
+        rn_lo(s)
+    }
+}
+
+/// Upper endpoint of an addition result, bumped only if inexact.
+fn add_hi(a: f64, b: f64) -> f64 {
+    let s = a + b;
+    if add_exact(a, b, s) {
+        s
+    } else {
+        rn_hi(s)
+    }
+}
+
+impl Add for Interval {
+    type Output = Interval;
+    fn add(self, rhs: Interval) -> Interval {
+        Interval::new(add_lo(self.lo, rhs.lo), add_hi(self.hi, rhs.hi))
+    }
+}
+
+impl Sub for Interval {
+    type Output = Interval;
+    fn sub(self, rhs: Interval) -> Interval {
+        Interval::new(add_lo(self.lo, -rhs.hi), add_hi(self.hi, -rhs.lo))
+    }
+}
+
+impl Neg for Interval {
+    type Output = Interval;
+    fn neg(self) -> Interval {
+        Interval::new(-self.hi, -self.lo)
+    }
+}
+
+/// Product of two endpoint values for interval multiplication, with the IEEE
+/// `0 * inf = NaN` case resolved to 0 (the exact image of `0 * anything` over
+/// a closed set containing finite points is 0).
+fn iprod(a: f64, b: f64) -> f64 {
+    if a == 0.0 || b == 0.0 {
+        0.0
+    } else {
+        a * b
+    }
+}
+
+impl Mul for Interval {
+    type Output = Interval;
+    fn mul(self, rhs: Interval) -> Interval {
+        let cands = [
+            iprod(self.lo, rhs.lo),
+            iprod(self.lo, rhs.hi),
+            iprod(self.hi, rhs.lo),
+            iprod(self.hi, rhs.hi),
+        ];
+        let args = [
+            (self.lo, rhs.lo),
+            (self.lo, rhs.hi),
+            (self.hi, rhs.lo),
+            (self.hi, rhs.hi),
+        ];
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let mut lo_args = args[0];
+        let mut hi_args = args[0];
+        for (c, a) in cands.iter().zip(args) {
+            if *c < lo {
+                lo = *c;
+                lo_args = a;
+            }
+            if *c > hi {
+                hi = *c;
+                hi_args = a;
+            }
+        }
+        let lo = if mul_exact(lo_args.0, lo_args.1, lo) { lo } else { rn_lo(lo) };
+        let hi = if mul_exact(hi_args.0, hi_args.1, hi) { hi } else { rn_hi(hi) };
+        Interval::new(lo, hi)
+    }
+}
+
+impl Div for Interval {
+    type Output = Interval;
+    /// Division. If the divisor contains 0, the exact image is unbounded;
+    /// we return [`Interval::ENTIRE`] (sound, maximally pessimistic), which
+    /// is how "no relative bound exists" propagates through the CAA layer.
+    fn div(self, rhs: Interval) -> Interval {
+        if rhs.contains(0.0) {
+            return Interval::ENTIRE;
+        }
+        let args = [
+            (self.lo, rhs.lo),
+            (self.lo, rhs.hi),
+            (self.hi, rhs.lo),
+            (self.hi, rhs.hi),
+        ];
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let mut lo_args = args[0];
+        let mut hi_args = args[0];
+        for (n, d) in args {
+            // inf/inf -> NaN cannot occur: rhs excludes 0 hence is bounded
+            // away from it, but rhs endpoints may be +-inf; a/inf = 0 is fine.
+            let c = n / d;
+            let c = if c.is_nan() { 0.0 } else { c };
+            if c < lo {
+                lo = c;
+                lo_args = (n, d);
+            }
+            if c > hi {
+                hi = c;
+                hi_args = (n, d);
+            }
+        }
+        // Exactness witness: q = n/d is exact iff fma(q, d, -n) == 0.
+        let lo = if lo.is_finite() && lo.mul_add(lo_args.1, -lo_args.0) == 0.0 {
+            lo
+        } else {
+            rn_lo(lo)
+        };
+        let hi = if hi.is_finite() && hi.mul_add(hi_args.1, -hi_args.0) == 0.0 {
+            hi
+        } else {
+            rn_hi(hi)
+        };
+        Interval::new(lo, hi)
+    }
+}
+
+impl Interval {
+    /// Elementwise absolute value image.
+    pub fn abs(&self) -> Interval {
+        if self.lo >= 0.0 {
+            *self
+        } else if self.hi <= 0.0 {
+            -*self
+        } else {
+            Interval::new(0.0, self.mag())
+        }
+    }
+
+    /// Image of `x^2` (tighter than `self * self`, no decorrelation loss).
+    pub fn square(&self) -> Interval {
+        let a = self.abs();
+        Interval::new(rn_lo(a.lo * a.lo).max(0.0), rn_hi(a.hi * a.hi))
+    }
+
+    /// Image of `max(x, y)` over both intervals.
+    pub fn max_i(&self, other: &Interval) -> Interval {
+        Interval::new(self.lo.max(other.lo), self.hi.max(other.hi))
+    }
+
+    /// Image of `min(x, y)` over both intervals.
+    pub fn min_i(&self, other: &Interval) -> Interval {
+        Interval::new(self.lo.min(other.lo), self.hi.min(other.hi))
+    }
+
+    /// Multiply by an exact scalar.
+    pub fn scale(&self, c: f64) -> Interval {
+        *self * Interval::point(c)
+    }
+
+    /// Add an exact scalar.
+    pub fn shift(&self, c: f64) -> Interval {
+        *self + Interval::point(c)
+    }
+
+    /// Reciprocal `1/x`; [`Interval::ENTIRE`] if 0 is contained.
+    pub fn recip(&self) -> Interval {
+        Interval::ONE / *self
+    }
+
+    /// Image of `sqrt(x)`. Negative parts of the operand are clipped (the
+    /// caller guarantees the ideal operand is in-domain; the clipped
+    /// enclosure is sound for the in-domain subset). Panics (debug) if the
+    /// whole interval is negative.
+    pub fn sqrt(&self) -> Interval {
+        debug_assert!(self.hi >= 0.0, "sqrt of all-negative interval {self}");
+        let lo = self.lo.max(0.0);
+        Interval::new(rn_lo(lo.sqrt()).max(0.0), rn_hi(self.hi.sqrt()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample(i: &Interval, r: &mut Rng) -> f64 {
+        if i.is_point() {
+            return i.lo();
+        }
+        let lo = i.lo().max(-1e300);
+        let hi = i.hi().min(1e300);
+        r.range(lo, hi)
+    }
+
+    /// Enclosure property: for random member points x in X, y in Y,
+    /// x op y must be inside X op Y.
+    #[test]
+    fn enclosure_random_points() {
+        let mut r = Rng::new(2024);
+        for _ in 0..2_000 {
+            let (a, b, c, d) = (
+                r.range(-10.0, 10.0),
+                r.range(-10.0, 10.0),
+                r.range(-10.0, 10.0),
+                r.range(-10.0, 10.0),
+            );
+            let x = Interval::new(a.min(b), a.max(b));
+            let y = Interval::new(c.min(d), c.max(d));
+            let px = sample(&x, &mut r);
+            let py = sample(&y, &mut r);
+            assert!((x + y).contains(px + py), "add");
+            assert!((x - y).contains(px - py), "sub");
+            assert!((x * y).contains(px * py), "mul");
+            if y.excludes_zero() {
+                assert!((x / y).contains(px / py), "div");
+            }
+            assert!(x.abs().contains(px.abs()), "abs");
+            assert!(x.square().contains(px * px), "square");
+            assert!(x.max_i(&y).contains(px.max(py)), "max");
+            assert!(x.min_i(&y).contains(px.min(py)), "min");
+            if x.hi() >= 0.0 && px >= 0.0 {
+                assert!(x.sqrt().contains(px.sqrt()), "sqrt");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_sign_cases() {
+        let pos = Interval::new(2.0, 3.0);
+        let neg = Interval::new(-3.0, -2.0);
+        let mix = Interval::new(-1.0, 4.0);
+        assert!((pos * pos).contains(6.0));
+        assert!((pos * neg).contains(-9.0) && (pos * neg).hi() <= bumped(-4.0));
+        assert!((mix * pos).contains(-3.0) && (mix * pos).contains(12.0));
+        assert!((neg * neg).contains(4.0) && (neg * neg).contains(9.0));
+    }
+
+    fn bumped(x: f64) -> f64 {
+        crate::interval::round::bump_up(x, 2)
+    }
+
+    #[test]
+    fn mul_with_infinite_endpoint() {
+        let z = Interval::new(0.0, 1.0);
+        let e = Interval::ENTIRE;
+        let p = z * e;
+        // 0 * ENTIRE must contain 0 and be well-formed (no NaN endpoints).
+        assert!(p.contains(0.0));
+        assert!(!p.lo().is_nan() && !p.hi().is_nan());
+        let zz = Interval::ZERO * e;
+        assert!(zz.contains(0.0));
+    }
+
+    #[test]
+    fn div_by_zero_containing_is_entire() {
+        let x = Interval::new(1.0, 2.0);
+        let y = Interval::new(-1.0, 1.0);
+        assert_eq!(x / y, Interval::ENTIRE);
+        assert_eq!(x / Interval::ZERO, Interval::ENTIRE);
+    }
+
+    #[test]
+    fn square_nonneg() {
+        let m = Interval::new(-2.0, 1.0);
+        let s = m.square();
+        assert!(s.lo() >= 0.0);
+        assert!(s.contains(4.0) && s.contains(0.0));
+    }
+
+    #[test]
+    fn outward_rounding_strict() {
+        // 0.1 + 0.2 in f64 is not 0.3; the interval sum of points must
+        // contain the *exact* rational 0.3. The f64 literal 0.3 is *below*
+        // exact 0.3, so lo <= f64(0.3) < exact 0.3 < hi certifies it.
+        let s = Interval::point(0.1) + Interval::point(0.2);
+        assert!(s.lo() <= 0.3 && 0.3 < s.hi());
+        assert!(s.lo() < s.hi(), "inexact sum must widen");
+    }
+
+    #[test]
+    fn exact_ops_stay_points() {
+        // Exactly representable arithmetic must not widen (2Sum/FMA
+        // exactness witnesses).
+        let a = Interval::point(3.0);
+        let b = Interval::point(4.0);
+        assert!((a + b).is_point());
+        assert!((a - b).is_point());
+        assert!((a * b).is_point());
+        assert!((Interval::point(1.0) / Interval::point(4.0)).is_point());
+        assert_eq!((a + b).lo(), 7.0);
+        assert_eq!((a * b).lo(), 12.0);
+        assert_eq!((Interval::point(1.0) / Interval::point(4.0)).lo(), 0.25);
+    }
+
+    #[test]
+    fn neg_reverses() {
+        let i = Interval::new(-1.0, 5.0);
+        assert_eq!(-i, Interval::new(-5.0, 1.0));
+    }
+
+    #[test]
+    fn scale_shift() {
+        let i = Interval::new(1.0, 2.0);
+        assert!(i.scale(-3.0).contains(-6.0) && i.scale(-3.0).contains(-3.0));
+        assert!(i.shift(10.0).contains(11.5));
+    }
+
+    #[test]
+    fn recip() {
+        let i = Interval::new(2.0, 4.0);
+        let r = i.recip();
+        assert!(r.contains(0.25) && r.contains(0.5));
+        assert_eq!(Interval::new(-1.0, 1.0).recip(), Interval::ENTIRE);
+    }
+}

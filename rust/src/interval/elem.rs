@@ -1,0 +1,184 @@
+//! Elementary functions on intervals: `exp`, `ln`, `log1p`, `expm1`,
+//! `tanh`, `sigmoid`. All are monotone increasing, so the image is
+//! `[f(lo), f(hi)]` widened by the libm slack ([`round::ELEM_SLACK_ULPS`]).
+//! Range clamps (e.g. `tanh ⊂ [-1,1]`) are applied after widening — they
+//! are mathematically exact so clamping preserves the enclosure.
+
+use super::round::{elem_hi, elem_lo};
+use super::Interval;
+
+impl Interval {
+    /// Image of `exp(x)`. Result is always `>= 0`. `exp(0) = 1` is treated
+    /// exactly — this keeps the softmax pattern `e^{x - max(x)} <= 1` tight.
+    pub fn exp(&self) -> Interval {
+        let lo = if self.lo == f64::NEG_INFINITY {
+            0.0
+        } else if self.lo == 0.0 {
+            1.0
+        } else {
+            elem_lo(self.lo.exp()).max(0.0)
+        };
+        let hi = if self.hi == f64::INFINITY {
+            f64::INFINITY
+        } else if self.hi == 0.0 {
+            1.0
+        } else {
+            elem_hi(self.hi.exp())
+        };
+        Interval::new(lo, hi)
+    }
+
+    /// Image of `ln(x)` for the in-domain part of the operand. The operand
+    /// must reach into `(0, inf)`; parts `<= 0` map the lower endpoint to
+    /// `-inf` (sound for the in-domain subset).
+    pub fn ln(&self) -> Interval {
+        debug_assert!(self.hi > 0.0, "ln of non-positive interval {self}");
+        let lo = if self.lo <= 0.0 {
+            f64::NEG_INFINITY
+        } else if self.lo == 1.0 {
+            0.0
+        } else {
+            elem_lo(self.lo.ln())
+        };
+        let hi = if self.hi == f64::INFINITY {
+            f64::INFINITY
+        } else if self.hi == 1.0 {
+            0.0
+        } else {
+            elem_hi(self.hi.ln())
+        };
+        Interval::new(lo, hi)
+    }
+
+    /// Image of `exp(x) - 1`, computed with `expm1` for accuracy near 0.
+    /// Result is always `>= -1`.
+    pub fn expm1(&self) -> Interval {
+        let lo = if self.lo == f64::NEG_INFINITY {
+            -1.0
+        } else {
+            elem_lo(self.lo.exp_m1()).max(-1.0)
+        };
+        let hi = if self.hi == f64::INFINITY {
+            f64::INFINITY
+        } else {
+            elem_hi(self.hi.exp_m1())
+        };
+        Interval::new(lo, hi)
+    }
+
+    /// Image of `ln(1 + x)` for the in-domain part (`x > -1`).
+    pub fn ln_1p(&self) -> Interval {
+        debug_assert!(self.hi > -1.0, "ln_1p out of domain {self}");
+        let lo = if self.lo <= -1.0 {
+            f64::NEG_INFINITY
+        } else {
+            elem_lo(self.lo.ln_1p())
+        };
+        let hi = if self.hi == f64::INFINITY {
+            f64::INFINITY
+        } else {
+            elem_hi(self.hi.ln_1p())
+        };
+        Interval::new(lo, hi)
+    }
+
+    /// Image of `tanh(x)`; clamped to `[-1, 1]`; `tanh(0) = 0` exact.
+    pub fn tanh(&self) -> Interval {
+        let lo = if self.lo == 0.0 { 0.0 } else { elem_lo(self.lo.tanh()).max(-1.0) };
+        let hi = if self.hi == 0.0 { 0.0 } else { elem_hi(self.hi.tanh()).min(1.0) };
+        Interval::new(lo, hi)
+    }
+
+    /// Image of the logistic sigmoid `1 / (1 + exp(-x))`; clamped to
+    /// `[0, 1]`. Evaluated monotonically endpoint-wise (not via composed
+    /// interval ops, which would decorrelate).
+    pub fn sigmoid(&self) -> Interval {
+        fn sig(x: f64) -> f64 {
+            if x >= 0.0 {
+                1.0 / (1.0 + (-x).exp())
+            } else {
+                let e = x.exp();
+                e / (1.0 + e)
+            }
+        }
+        // Two roundings (exp then add/div) => double slack is conservative.
+        let lo = elem_lo(elem_lo(sig(self.lo))).max(0.0);
+        let hi = elem_hi(elem_hi(sig(self.hi))).min(1.0);
+        Interval::new(lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn exp_encloses_random_points() {
+        let mut r = Rng::new(31);
+        for _ in 0..2_000 {
+            let a = r.range(-50.0, 50.0);
+            let b = r.range(-50.0, 50.0);
+            let i = Interval::new(a.min(b), a.max(b));
+            let p = r.range(i.lo(), i.hi());
+            assert!(i.exp().contains(p.exp()));
+            assert!(i.tanh().contains(p.tanh()));
+            if i.lo() > 0.0 {
+                assert!(i.ln().contains(p.abs().max(i.lo()).ln()));
+            }
+        }
+    }
+
+    #[test]
+    fn exp_nonneg_and_infinite_ends() {
+        assert!(Interval::ENTIRE.exp().lo() >= 0.0);
+        assert_eq!(Interval::ENTIRE.exp().hi(), f64::INFINITY);
+        let big = Interval::new(0.0, 1000.0).exp();
+        assert_eq!(big.hi(), f64::INFINITY); // overflow becomes +inf, sound
+        assert!(big.lo() <= 1.0);
+    }
+
+    #[test]
+    fn ln_domain_edges() {
+        let i = Interval::new(0.0, 1.0).ln();
+        assert_eq!(i.lo(), f64::NEG_INFINITY);
+        assert!(i.hi() >= 0.0);
+        let j = Interval::new(1.0, std::f64::consts::E).ln();
+        assert!(j.contains(0.0) && j.contains(1.0));
+    }
+
+    #[test]
+    fn tanh_clamped() {
+        let i = Interval::new(-1e9, 1e9).tanh();
+        assert!(i.lo() >= -1.0 && i.hi() <= 1.0);
+        assert!(i.contains(-1.0 + 1e-15) && i.contains(1.0 - 1e-15));
+        let z = Interval::ZERO.tanh();
+        assert!(z.contains(0.0) && z.width() < 1e-14);
+    }
+
+    #[test]
+    fn sigmoid_range_and_monotone() {
+        let i = Interval::new(-100.0, 100.0).sigmoid();
+        assert!(i.lo() >= 0.0 && i.hi() <= 1.0);
+        let z = Interval::ZERO.sigmoid();
+        assert!(z.contains(0.5));
+        let mut r = Rng::new(77);
+        for _ in 0..1_000 {
+            let a = r.range(-30.0, 30.0);
+            let b = r.range(-30.0, 30.0);
+            let i = Interval::new(a.min(b), a.max(b));
+            let p = r.range(i.lo(), i.hi());
+            let s = 1.0 / (1.0 + (-p).exp());
+            assert!(i.sigmoid().contains(s), "sigmoid({p}) = {s} not in {}", i.sigmoid());
+        }
+    }
+
+    #[test]
+    fn expm1_ln1p_inverse_ish() {
+        let i = Interval::new(-0.5, 0.5);
+        let fwd = i.expm1();
+        assert!(fwd.contains(0.0));
+        let back = fwd.ln_1p();
+        assert!(back.contains_interval(&Interval::new(-0.49, 0.49)));
+    }
+}

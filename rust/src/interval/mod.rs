@@ -1,0 +1,227 @@
+//! Interval Arithmetic (IA) substrate.
+//!
+//! Replaces MPFI/MPFR/GMP from the original tool (see DESIGN.md
+//! §Substitutions). Endpoints are `f64` and every operation rounds
+//! *outwards*: the result of the `f64` round-to-nearest computation is
+//! bumped by at least one ulp in each unsafe direction
+//! ([`round::bump_down`], [`round::bump_up`]), so the returned interval is a
+//! rigorous enclosure of the exact image set. Elementary functions (`exp`,
+//! `ln`, `tanh`, `sigmoid`) use the platform libm, which is faithful to
+//! within a couple of ulps; we bump those by [`round::ELEM_SLACK_ULPS`]
+//! (documented, conservative) ulps.
+//!
+//! f64 endpoints make enclosures slightly wider than MPFI's arbitrary
+//! precision, but the analysis consumes *bounds*, so wider is still sound —
+//! and the flat value representation removes the per-operation heap
+//! allocation that the paper itself identified as its MobileNet bottleneck.
+
+mod arith;
+mod elem;
+pub mod round;
+
+pub use round::{bump_down, bump_up};
+
+/// A closed interval `[lo, hi]` with `lo <= hi`; endpoints may be infinite.
+/// NaN endpoints are forbidden (checked in debug builds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Interval {
+    lo: f64,
+    hi: f64,
+}
+
+impl Interval {
+    /// The whole real line.
+    pub const ENTIRE: Interval = Interval { lo: f64::NEG_INFINITY, hi: f64::INFINITY };
+    /// The singleton `[0, 0]`.
+    pub const ZERO: Interval = Interval { lo: 0.0, hi: 0.0 };
+    /// The singleton `[1, 1]`.
+    pub const ONE: Interval = Interval { lo: 1.0, hi: 1.0 };
+
+    /// Construct from endpoints. Panics (debug) on NaN or `lo > hi`.
+    pub fn new(lo: f64, hi: f64) -> Interval {
+        debug_assert!(!lo.is_nan() && !hi.is_nan(), "NaN interval endpoint");
+        debug_assert!(lo <= hi, "inverted interval [{lo}, {hi}]");
+        Interval { lo, hi }
+    }
+
+    /// The singleton interval `[x, x]` (exact — `x` is representable).
+    pub fn point(x: f64) -> Interval {
+        Interval::new(x, x)
+    }
+
+    /// `[-r, r]`.
+    pub fn symmetric(r: f64) -> Interval {
+        debug_assert!(r >= 0.0);
+        Interval::new(-r, r)
+    }
+
+    pub fn lo(&self) -> f64 {
+        self.lo
+    }
+
+    pub fn hi(&self) -> f64 {
+        self.hi
+    }
+
+    /// Width `hi - lo` (may be infinite).
+    pub fn width(&self) -> f64 {
+        if self.lo == self.hi {
+            return 0.0;
+        }
+        // Round up: width used as an error radius must not shrink.
+        bump_up(self.hi - self.lo, 1).max(0.0)
+    }
+
+    /// An (approximate) midpoint; always a finite member for finite
+    /// intervals.
+    pub fn mid(&self) -> f64 {
+        if self.lo == f64::NEG_INFINITY && self.hi == f64::INFINITY {
+            0.0
+        } else if self.lo == f64::NEG_INFINITY {
+            self.hi
+        } else if self.hi == f64::INFINITY {
+            self.lo
+        } else {
+            let m = 0.5 * (self.lo + self.hi);
+            if m.is_finite() {
+                m
+            } else {
+                0.5 * self.lo + 0.5 * self.hi
+            }
+        }
+    }
+
+    /// Magnitude `sup |x|`.
+    pub fn mag(&self) -> f64 {
+        self.lo.abs().max(self.hi.abs())
+    }
+
+    /// Mignitude `inf |x|` (0 if the interval straddles 0).
+    pub fn mig(&self) -> f64 {
+        if self.contains(0.0) {
+            0.0
+        } else {
+            self.lo.abs().min(self.hi.abs())
+        }
+    }
+
+    pub fn contains(&self, x: f64) -> bool {
+        self.lo <= x && x <= self.hi
+    }
+
+    pub fn contains_interval(&self, other: &Interval) -> bool {
+        self.lo <= other.lo && other.hi <= self.hi
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.lo.is_finite() && self.hi.is_finite()
+    }
+
+    pub fn is_point(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    /// True iff every element is strictly positive.
+    pub fn is_strictly_pos(&self) -> bool {
+        self.lo > 0.0
+    }
+
+    /// True iff every element is strictly negative.
+    pub fn is_strictly_neg(&self) -> bool {
+        self.hi < 0.0
+    }
+
+    /// True iff 0 is not a member.
+    pub fn excludes_zero(&self) -> bool {
+        self.lo > 0.0 || self.hi < 0.0
+    }
+
+    /// Convex hull of two intervals.
+    pub fn hull(&self, other: &Interval) -> Interval {
+        Interval::new(self.lo.min(other.lo), self.hi.max(other.hi))
+    }
+
+    /// Intersection, or `None` if disjoint.
+    pub fn intersect(&self, other: &Interval) -> Option<Interval> {
+        let lo = self.lo.max(other.lo);
+        let hi = self.hi.min(other.hi);
+        if lo <= hi {
+            Some(Interval::new(lo, hi))
+        } else {
+            None
+        }
+    }
+
+    /// Widen both endpoints outward by `r >= 0` (rounded outward).
+    pub fn inflate(&self, r: f64) -> Interval {
+        debug_assert!(r >= 0.0);
+        Interval::new(bump_down(self.lo - r, 1), bump_up(self.hi + r, 1))
+    }
+}
+
+impl std::fmt::Display for Interval {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{:.6e}, {:.6e}]", self.lo, self.hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_predicates() {
+        let i = Interval::new(-1.0, 2.0);
+        assert!(i.contains(0.0) && i.contains(-1.0) && i.contains(2.0));
+        assert!(!i.contains(2.0000001));
+        assert!(!i.excludes_zero());
+        assert!(Interval::new(0.5, 3.0).is_strictly_pos());
+        assert!(Interval::new(-3.0, -0.5).is_strictly_neg());
+        assert!(Interval::point(4.0).is_point());
+        assert_eq!(i.mag(), 2.0);
+        assert_eq!(i.mig(), 0.0);
+        assert_eq!(Interval::new(1.0, 3.0).mig(), 1.0);
+        assert_eq!(Interval::new(-3.0, -1.0).mig(), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn inverted_panics() {
+        let _ = Interval::new(1.0, 0.0);
+    }
+
+    #[test]
+    fn hull_and_intersect() {
+        let a = Interval::new(0.0, 2.0);
+        let b = Interval::new(1.0, 3.0);
+        assert_eq!(a.hull(&b), Interval::new(0.0, 3.0));
+        assert_eq!(a.intersect(&b), Some(Interval::new(1.0, 2.0)));
+        let c = Interval::new(5.0, 6.0);
+        assert_eq!(a.intersect(&c), None);
+    }
+
+    #[test]
+    fn mid_is_member() {
+        for (lo, hi) in [(-1.0, 2.0), (1e300, 1.7e308), (-1.7e308, 1.7e308)] {
+            let i = Interval::new(lo, hi);
+            let m = i.mid();
+            assert!(m.is_finite());
+            assert!(i.contains(m), "mid {m} outside {i}");
+        }
+        assert_eq!(Interval::ENTIRE.mid(), 0.0);
+    }
+
+    #[test]
+    fn width_nonneg_and_outward() {
+        let i = Interval::new(1.0, 1.0 + f64::EPSILON);
+        assert!(i.width() >= f64::EPSILON);
+        assert_eq!(Interval::point(3.0).width(), 0.0);
+    }
+
+    #[test]
+    fn inflate_widens() {
+        let i = Interval::new(-1.0, 1.0).inflate(0.5);
+        assert!(i.lo <= -1.5 && i.hi >= 1.5);
+    }
+}

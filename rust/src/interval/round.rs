@@ -1,0 +1,113 @@
+//! Directed-rounding helpers.
+//!
+//! Rust gives no portable access to the FPU rounding mode, so outward
+//! rounding is implemented by *ulp bumping*: a round-to-nearest result is at
+//! most 0.5 ulp away from the exact value for the IEEE basic operations
+//! (+, -, ×, /, √), so moving one ulp in the unsafe direction yields a
+//! rigorous directed bound. Elementary libm functions (`exp`, `log`,
+//! `tanh`, ...) are not correctly rounded but are faithful to within ~1-2
+//! ulps on every libm we target; [`ELEM_SLACK_ULPS`] = 4 gives a documented
+//! safety margin (glibc's published worst-case errors for these functions
+//! are <= 2 ulps).
+
+/// Ulp slack applied to libm elementary-function results.
+pub const ELEM_SLACK_ULPS: u32 = 4;
+
+/// Largest-magnitude finite f64.
+const MAX: f64 = f64::MAX;
+
+/// Move `x` down by `n` ulps (towards -inf).
+///
+/// `-inf` stays `-inf`. `+inf` maps to `MAX` after the first step: if a
+/// round-to-nearest computation overflowed to `+inf`, the exact value is
+/// `> MAX`, so `MAX` is a valid lower bound.
+#[inline(always)]
+pub fn bump_down(x: f64, n: u32) -> f64 {
+    debug_assert!(!x.is_nan());
+    let mut v = x;
+    for _ in 0..n {
+        if v == f64::NEG_INFINITY {
+            return v;
+        }
+        v = if v == f64::INFINITY { MAX } else { v.next_down() };
+    }
+    v
+}
+
+/// Move `x` up by `n` ulps (towards +inf).
+#[inline(always)]
+pub fn bump_up(x: f64, n: u32) -> f64 {
+    debug_assert!(!x.is_nan());
+    let mut v = x;
+    for _ in 0..n {
+        if v == f64::INFINITY {
+            return v;
+        }
+        v = if v == f64::NEG_INFINITY { -MAX } else { v.next_up() };
+    }
+    v
+}
+
+/// Lower bound for the exact value of an RN basic operation that returned
+/// `x` (1 ulp down).
+#[inline(always)]
+pub fn rn_lo(x: f64) -> f64 {
+    bump_down(x, 1)
+}
+
+/// Upper bound for the exact value of an RN basic operation that returned
+/// `x` (1 ulp up).
+#[inline(always)]
+pub fn rn_hi(x: f64) -> f64 {
+    bump_up(x, 1)
+}
+
+/// Lower bound for the exact value of a libm elementary function call.
+pub fn elem_lo(x: f64) -> f64 {
+    bump_down(x, ELEM_SLACK_ULPS)
+}
+
+/// Upper bound for the exact value of a libm elementary function call.
+pub fn elem_hi(x: f64) -> f64 {
+    bump_up(x, ELEM_SLACK_ULPS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_brackets_value() {
+        for x in [0.0, 1.0, -1.0, 1e-300, -1e300, f64::MIN_POSITIVE, 5e-324] {
+            assert!(bump_down(x, 1) < x || x == f64::NEG_INFINITY);
+            assert!(bump_up(x, 1) > x || x == f64::INFINITY);
+            assert!(bump_down(x, 3) <= bump_down(x, 1));
+            assert!(bump_up(x, 3) >= bump_up(x, 1));
+        }
+    }
+
+    #[test]
+    fn infinity_handling() {
+        assert_eq!(bump_down(f64::INFINITY, 1), f64::MAX);
+        assert_eq!(bump_up(f64::INFINITY, 1), f64::INFINITY);
+        assert_eq!(bump_up(f64::NEG_INFINITY, 1), -f64::MAX);
+        assert_eq!(bump_down(f64::NEG_INFINITY, 1), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn zero_crossing() {
+        assert!(bump_down(0.0, 1) < 0.0);
+        assert!(bump_up(0.0, 1) > 0.0);
+        assert_eq!(bump_down(5e-324, 1), 0.0);
+    }
+
+    #[test]
+    fn rn_bounds_tight_one_ulp() {
+        // For RN +: exact a+b lies within [rn_lo, rn_hi] of the computed sum.
+        let a = 0.1f64;
+        let b = 0.2f64;
+        let s = a + b; // not exactly 0.3
+        assert!(rn_lo(s) < 0.1 + 0.2 && 0.1 + 0.2 < rn_hi(s) || s == a + b);
+        assert!(rn_lo(s) <= s && s <= rn_hi(s));
+    }
+}

@@ -1,0 +1,113 @@
+//! Minimal JSON substrate (parser + writer).
+//!
+//! The original tool consumes Keras models converted to JSON by
+//! frugally-deep; our models are exported to JSON by `python/compile/aot.py`
+//! and loaded here. The offline registry snapshot has no `serde_json`, so we
+//! implement the (small) subset of JSON we need: objects, arrays, strings
+//! with escapes, f64 numbers, booleans, null. Numbers are kept as f64, which
+//! round-trips every weight NumPy emits with `repr` precision.
+
+mod parse;
+mod value;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+pub use write::to_string_pretty;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(s: &str) -> Value {
+        let v = parse(s).expect("parse");
+        let s2 = to_string_pretty(&v);
+        parse(&s2).expect("reparse")
+    }
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse("42").unwrap().as_f64().unwrap(), 42.0);
+        assert_eq!(parse("-1.5e3").unwrap().as_f64().unwrap(), -1500.0);
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("false").unwrap(), Value::Bool(false));
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("\"hi\"").unwrap().as_str().unwrap(), "hi");
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": "c"}], "d": null}"#).unwrap();
+        let a = v.get("a").unwrap().as_array().unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[2].get("b").unwrap().as_str().unwrap(), "c");
+        assert_eq!(v.get("d"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#""a\"b\\c\nd\teA""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\"b\\c\nd\teA");
+    }
+
+    #[test]
+    fn unicode_escape_surrogate_pair() {
+        let v = parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{1F600}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+        assert!(parse("tru").is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse("").is_err());
+        assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn roundtrips_weights_like_payload() {
+        let v = roundtrip(
+            r#"{"layers":[{"type":"dense","w":[[0.123456789012345,-1e-30],[3.5,4.25]],"b":[0,1]}]}"#,
+        );
+        let w = v.get("layers").unwrap().as_array().unwrap()[0]
+            .get("w")
+            .unwrap()
+            .as_array()
+            .unwrap();
+        let row0 = w[0].as_array().unwrap();
+        assert_eq!(row0[0].as_f64().unwrap(), 0.123456789012345);
+        assert_eq!(row0[1].as_f64().unwrap(), -1e-30);
+    }
+
+    #[test]
+    fn roundtrips_extreme_doubles() {
+        for x in [
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            -f64::MAX,
+            1.0 + f64::EPSILON,
+            5e-324, // subnormal
+            0.1,
+        ] {
+            let s = to_string_pretty(&Value::Num(x));
+            let v = parse(&s).unwrap();
+            assert_eq!(v.as_f64().unwrap(), x, "failed for {x:e} (text {s})");
+        }
+    }
+
+    #[test]
+    fn object_get_path() {
+        let v = parse(r#"{"a":{"b":{"c":7}}}"#).unwrap();
+        assert_eq!(v.path(&["a", "b", "c"]).unwrap().as_f64().unwrap(), 7.0);
+        assert!(v.path(&["a", "x"]).is_none());
+    }
+
+    #[test]
+    fn deep_nesting_depth_limited() {
+        let deep = "[".repeat(10_000) + &"]".repeat(10_000);
+        assert!(parse(&deep).is_err(), "must refuse pathological depth");
+    }
+}

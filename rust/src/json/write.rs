@@ -1,0 +1,109 @@
+//! JSON writer. Numbers are emitted with shortest-round-trip formatting
+//! (Rust's `{}` for f64 is shortest-representation since 1.0), so every f64
+//! survives a write→parse cycle bit-exactly.
+
+use super::value::Value;
+
+/// Serialize with 2-space indentation.
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, 0, &mut out);
+    out
+}
+
+fn write_value(v: &Value, indent: usize, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Num(x) => write_num(*x, out),
+        Value::Str(s) => write_string(s, out),
+        Value::Array(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            // Numeric-only arrays (weight rows) are written on one line.
+            let flat = items.iter().all(|i| matches!(i, Value::Num(_)));
+            if flat {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    write_value(item, indent, out);
+                }
+                out.push(']');
+            } else {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(indent + 1, out);
+                    write_value(item, indent + 1, out);
+                }
+                out.push('\n');
+                push_indent(indent, out);
+                out.push(']');
+            }
+        }
+        Value::Object(m) => {
+            if m.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, val)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                push_indent(indent + 1, out);
+                write_string(k, out);
+                out.push_str(": ");
+                write_value(val, indent + 1, out);
+            }
+            out.push('\n');
+            push_indent(indent, out);
+            out.push('}');
+        }
+    }
+}
+
+fn push_indent(n: usize, out: &mut String) {
+    for _ in 0..n {
+        out.push_str("  ");
+    }
+}
+
+fn write_num(x: f64, out: &mut String) {
+    if x.is_nan() {
+        // JSON has no NaN; the analysis never emits one, but don't produce
+        // invalid documents if it does.
+        out.push_str("null");
+    } else if x.is_infinite() {
+        out.push_str(if x > 0.0 { "1e999" } else { "-1e999" });
+    } else if x == x.trunc() && x.abs() < 1e15 {
+        out.push_str(&format!("{}", x as i64));
+    } else {
+        out.push_str(&format!("{x}"));
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}

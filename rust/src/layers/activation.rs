@@ -1,0 +1,152 @@
+//! Activation layers (paper §II): elementwise ReLU/LeakyReLU/Tanh/Sigmoid
+//! and the softmax (eq. (3)) in its numerically-stable max-subtracted form.
+//!
+//! Softmax is *the* showcase of the paper's machinery: the max subtraction
+//! is a textbook decorrelation/control-flow hazard (`x_i - max(x)` with
+//! correlated operands), solved by the bound labels that
+//! [`Scalar::max_many`] attaches; and §IV proves the layer converts the
+//! absolute error of the preceding convolutional summation into a relative
+//! error of comparable size (eq. (11)).
+
+use crate::tensor::{Scalar, Tensor};
+
+pub fn leaky_relu<S: Scalar>(ctx: &S::Ctx, alpha: f64, x: &Tensor<S>) -> Tensor<S> {
+    // max(x, 0) + alpha * min(x, 0), evaluated per element via the scalar's
+    // primitives: relu(x) - alpha * relu(-x) needs a negation; use
+    // x.max(ax) for alpha in [0,1): leaky(x) = max(x, alpha*x).
+    let a = S::param(ctx, alpha);
+    x.map(|v| {
+        let scaled = v.mul(&a, ctx);
+        v.max(&scaled, ctx)
+    })
+}
+
+/// Softmax over the last axis of `x`.
+pub fn softmax<S: Scalar>(ctx: &S::Ctx, x: &Tensor<S>) -> Tensor<S> {
+    let n = *x.shape().last().expect("softmax needs rank >= 1");
+    let rows = x.len() / n;
+    let mut out = Vec::with_capacity(x.len());
+    for r in 0..rows {
+        let row = &x.data()[r * n..(r + 1) * n];
+        out.extend(softmax_vec(ctx, row));
+    }
+    Tensor::new(x.shape().to_vec(), out)
+}
+
+/// Numerically-stable softmax of one vector:
+/// `m = max(x); e_i = exp(x_i - m); y_i = e_i / sum(e)`.
+pub fn softmax_vec<S: Scalar>(ctx: &S::Ctx, xs: &[S]) -> Vec<S> {
+    let mut xs: Vec<S> = xs.to_vec();
+    // max_many labels each x_i with the max (CAA), so x_i - m is known
+    // nonpositive and exp stays in (0, 1].
+    let m = S::max_many(ctx, &mut xs);
+    let exps: Vec<S> = xs.iter().map(|x| x.sub(&m, ctx).exp(ctx)).collect();
+    let mut sum = exps[0].clone();
+    for e in &exps[1..] {
+        sum = sum.add(e, ctx);
+    }
+    // Probabilities are in [0, 1] by construction: every denominator
+    // summand is nonnegative, RN summation of nonnegatives dominates each
+    // summand, and RN division/rounding are monotone — so both the ideal
+    // and the computed quotient are <= 1. clamp01 injects that insight
+    // (no-op for concrete scalars).
+    exps.iter().map(|e| e.div(&sum, ctx).clamp01(ctx)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caa::{Caa, Ctx};
+    use crate::interval::Interval;
+    use crate::quant::EmulatedFp;
+    use crate::tensor::EmuCtx;
+
+    #[test]
+    fn softmax_f64_matches_definition() {
+        let x = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let y = softmax::<f64>(&(), &x);
+        let raw: Vec<f64> = [1.0f64, 2.0, 3.0].iter().map(|v| f64::exp(*v)).collect();
+        let s: f64 = raw.iter().sum();
+        for i in 0..3 {
+            assert!((y.data()[i] - raw[i] / s).abs() < 1e-14);
+        }
+        let total: f64 = y.data().iter().sum();
+        assert!((total - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn softmax_rows_independent() {
+        let x = Tensor::new(vec![2, 2], vec![0.0, 0.0, 100.0, 0.0]);
+        let y = softmax::<f64>(&(), &x);
+        assert!((y.data()[0] - 0.5).abs() < 1e-14);
+        assert!(y.data()[2] > 0.999);
+    }
+
+    #[test]
+    fn softmax_caa_probabilities_bounded() {
+        let ctx = Ctx::new();
+        let x = Tensor::new(
+            vec![4],
+            [2.0, -1.0, 0.0, 1.0]
+                .iter()
+                .map(|&v| Caa::param(&ctx, v))
+                .collect(),
+        );
+        let y = softmax::<Caa>(&ctx, &x);
+        for v in y.data() {
+            assert!(v.ideal().lo() >= 0.0);
+            assert!(v.ideal().hi() <= 1.0 + 1e-9);
+            assert!(v.rel_bound().is_finite(), "softmax output needs rel bound");
+        }
+    }
+
+    #[test]
+    fn softmax_caa_sound_vs_emulated() {
+        let ctx = Ctx::new();
+        let logits = [1.2, -0.3, 0.8, 2.5, -1.0];
+        let xc = Tensor::new(vec![5], logits.iter().map(|&v| Caa::param(&ctx, v)).collect());
+        let yc = softmax::<Caa>(&ctx, &xc);
+        let yr = softmax::<f64>(&(), &Tensor::new(vec![5], logits.to_vec()));
+        for k in [8u32, 10, 14, 20] {
+            let ec = EmuCtx { k };
+            let xe = Tensor::new(vec![5], logits.iter().map(|&v| EmulatedFp::new(v, k)).collect());
+            let ye = softmax::<EmulatedFp>(&ec, &xe);
+            for i in 0..5 {
+                crate::quant::check_against_bounds(
+                    &yc.data()[i],
+                    yr.data()[i],
+                    ye.data()[i].v,
+                    k,
+                    1e-12,
+                )
+                .unwrap_or_else(|e| panic!("k={k} i={i}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn leaky_relu_values() {
+        let x = Tensor::new(vec![3], vec![-2.0, 0.0, 3.0]);
+        let y = leaky_relu::<f64>(&(), 0.1, &x);
+        assert_eq!(y.data(), &[-0.2, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn softmax_caa_with_input_ranges() {
+        // Per-class analysis feeds input *boxes*; softmax must stay finite.
+        let ctx = Ctx::new();
+        let x = Tensor::new(
+            vec![3],
+            vec![
+                Caa::input(&ctx, Interval::new(1.5, 2.5), 2.0),
+                Caa::input(&ctx, Interval::new(-1.0, 0.0), -0.5),
+                Caa::input(&ctx, Interval::new(0.0, 1.0), 0.5),
+            ],
+        );
+        let y = softmax::<Caa>(&ctx, &x);
+        for v in y.data() {
+            assert!(v.ideal().lo() >= 0.0 && v.ideal().hi() <= 1.0 + 1e-9);
+            assert!(v.abs_bound().is_finite());
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! 2-D convolution layers (Keras semantics, channels-last).
+//!
+//! "Same" padding contributes zeros; zero terms are *skipped* rather than
+//! multiplied in, which is arithmetically identical (the product and the
+//! subsequent addition of an exact 0 are error-free) and keeps the CAA
+//! analysis tight at borders.
+
+use super::Padding;
+use crate::tensor::{Scalar, Tensor};
+use anyhow::{bail, Result};
+
+/// Padding offsets (top, left) for the given geometry.
+fn pad_offsets(
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padding: Padding,
+) -> (usize, usize, usize, usize) {
+    match padding {
+        Padding::Valid => (0, 0, (h - kh) / stride + 1, (w - kw) / stride + 1),
+        Padding::Same => {
+            let oh = h.div_ceil(stride);
+            let ow = w.div_ceil(stride);
+            let pad_h = ((oh - 1) * stride + kh).saturating_sub(h);
+            let pad_w = ((ow - 1) * stride + kw).saturating_sub(w);
+            (pad_h / 2, pad_w / 2, oh, ow)
+        }
+    }
+}
+
+pub fn conv2d_output_shape(
+    kshape: &[usize],
+    stride: usize,
+    padding: Padding,
+    input: &[usize],
+) -> Result<Vec<usize>> {
+    if kshape.len() != 4 {
+        bail!("conv2d kernel must be [kh, kw, cin, cout], got {kshape:?}");
+    }
+    let (kh, kw, cin, cout) = (kshape[0], kshape[1], kshape[2], kshape[3]);
+    let [h, w, c] = input else {
+        bail!("conv2d expects input [h, w, c], got {input:?}");
+    };
+    if *c != cin {
+        bail!("conv2d expects {cin} input channels, got {c}");
+    }
+    if padding == Padding::Valid && (*h < kh || *w < kw) {
+        bail!("conv2d valid padding: input {h}x{w} smaller than kernel {kh}x{kw}");
+    }
+    let (_, _, oh, ow) = pad_offsets(*h, *w, kh, kw, stride, padding);
+    Ok(vec![oh, ow, cout])
+}
+
+pub fn depthwise_output_shape(
+    kshape: &[usize],
+    stride: usize,
+    padding: Padding,
+    input: &[usize],
+) -> Result<Vec<usize>> {
+    if kshape.len() != 3 {
+        bail!("depthwise kernel must be [kh, kw, c], got {kshape:?}");
+    }
+    let (kh, kw, kc) = (kshape[0], kshape[1], kshape[2]);
+    let [h, w, c] = input else {
+        bail!("depthwise expects input [h, w, c], got {input:?}");
+    };
+    if *c != kc {
+        bail!("depthwise expects {kc} channels, got {c}");
+    }
+    if padding == Padding::Valid && (*h < kh || *w < kw) {
+        bail!("depthwise valid padding: input {h}x{w} smaller than kernel {kh}x{kw}");
+    }
+    let (_, _, oh, ow) = pad_offsets(*h, *w, kh, kw, stride, padding);
+    Ok(vec![oh, ow, *c])
+}
+
+/// Standard convolution. `kernel: [kh, kw, cin, cout]`, `x: [h, w, cin]`,
+/// output `[oh, ow, cout]` (precomputed by the caller).
+pub fn conv2d<S: Scalar>(
+    ctx: &S::Ctx,
+    kernel: &Tensor<f64>,
+    bias: &[f64],
+    stride: usize,
+    padding: Padding,
+    x: &Tensor<S>,
+    out_shape: &[usize],
+) -> Tensor<S> {
+    let (kh, kw, cin, cout) = (
+        kernel.shape()[0],
+        kernel.shape()[1],
+        kernel.shape()[2],
+        kernel.shape()[3],
+    );
+    let (h, w) = (x.shape()[0], x.shape()[1]);
+    let (oh, ow) = (out_shape[0], out_shape[1]);
+    let (pad_top, pad_left, _, _) = pad_offsets(h, w, kh, kw, stride, padding);
+    let kd = kernel.data();
+    let xd = x.data();
+
+    let mut out = Vec::with_capacity(oh * ow * cout);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for co in 0..cout {
+                let mut acc = S::param(ctx, bias[co]);
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad_top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // zero-padded row
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad_left as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue; // zero-padded column
+                        }
+                        let xoff = (iy as usize * w + ix as usize) * cin;
+                        let koff = ((ky * kw + kx) * cin) * cout + co;
+                        for ci in 0..cin {
+                            let wv = kd[koff + ci * cout];
+                            if wv == 0.0 {
+                                continue;
+                            }
+                            let term = xd[xoff + ci].mul_param(wv, ctx);
+                            acc = acc.add(&term, ctx);
+                        }
+                    }
+                }
+                out.push(acc);
+            }
+        }
+    }
+    Tensor::new(out_shape.to_vec(), out)
+}
+
+/// Depthwise convolution. `kernel: [kh, kw, c]`, output `[oh, ow, c]`.
+pub fn depthwise<S: Scalar>(
+    ctx: &S::Ctx,
+    kernel: &Tensor<f64>,
+    bias: &[f64],
+    stride: usize,
+    padding: Padding,
+    x: &Tensor<S>,
+    out_shape: &[usize],
+) -> Tensor<S> {
+    let (kh, kw, c) = (kernel.shape()[0], kernel.shape()[1], kernel.shape()[2]);
+    let (h, w) = (x.shape()[0], x.shape()[1]);
+    let (oh, ow) = (out_shape[0], out_shape[1]);
+    let (pad_top, pad_left, _, _) = pad_offsets(h, w, kh, kw, stride, padding);
+    let kd = kernel.data();
+    let xd = x.data();
+
+    let mut out = Vec::with_capacity(oh * ow * c);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..c {
+                let mut acc = S::param(ctx, bias[ch]);
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad_top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad_left as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let wv = kd[(ky * kw + kx) * c + ch];
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        let xv = &xd[(iy as usize * w + ix as usize) * c + ch];
+                        let term = xv.mul_param(wv, ctx);
+                        acc = acc.add(&term, ctx);
+                    }
+                }
+                out.push(acc);
+            }
+        }
+    }
+    Tensor::new(out_shape.to_vec(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ident3x3(cin: usize, cout: usize) -> Tensor<f64> {
+        // Kernel that copies the center pixel of channel 0 into every out
+        // channel.
+        let mut k = vec![0.0; 9 * cin * cout];
+        for co in 0..cout {
+            k[((1 * 3 + 1) * cin) * cout + co] = 1.0; // center tap, ci = 0
+        }
+        Tensor::new(vec![3, 3, cin, cout], k)
+    }
+
+    #[test]
+    fn shapes_same_vs_valid() {
+        let k = vec![3, 3, 2, 5];
+        assert_eq!(
+            conv2d_output_shape(&k, 1, Padding::Same, &[8, 8, 2]).unwrap(),
+            vec![8, 8, 5]
+        );
+        assert_eq!(
+            conv2d_output_shape(&k, 1, Padding::Valid, &[8, 8, 2]).unwrap(),
+            vec![6, 6, 5]
+        );
+        assert_eq!(
+            conv2d_output_shape(&k, 2, Padding::Same, &[8, 8, 2]).unwrap(),
+            vec![4, 4, 5]
+        );
+        assert!(conv2d_output_shape(&k, 1, Padding::Same, &[8, 8, 3]).is_err());
+        assert!(conv2d_output_shape(&[3, 3, 2], 1, Padding::Same, &[8, 8, 2]).is_err());
+    }
+
+    #[test]
+    fn identity_kernel_copies_center() {
+        let x = Tensor::new(vec![4, 4, 1], (0..16).map(|v| v as f64).collect());
+        let k = ident3x3(1, 1);
+        let shape = conv2d_output_shape(k.shape(), 1, Padding::Same, x.shape()).unwrap();
+        let y = conv2d::<f64>(&(), &k, &[0.0], 1, Padding::Same, &x, &shape);
+        assert_eq!(y.shape(), &[4, 4, 1]);
+        // Center-tap identity: output == input everywhere.
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn averaging_kernel_manual_check() {
+        // 2x2 valid conv with all-0.25 kernel = window average.
+        let x = Tensor::new(vec![2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let k = Tensor::new(vec![2, 2, 1, 1], vec![0.25; 4]);
+        let shape = conv2d_output_shape(k.shape(), 1, Padding::Valid, x.shape()).unwrap();
+        let y = conv2d::<f64>(&(), &k, &[0.5], 1, Padding::Valid, &x, &shape);
+        assert_eq!(y.shape(), &[1, 1, 1]);
+        assert_eq!(y.data()[0], 2.5 + 0.5);
+    }
+
+    #[test]
+    fn multi_channel_sums_channels() {
+        // 1x1 kernel summing 3 input channels into 1 output.
+        let x = Tensor::new(vec![1, 1, 3], vec![1.0, 10.0, 100.0]);
+        let k = Tensor::new(vec![1, 1, 3, 1], vec![1.0, 1.0, 1.0]);
+        let shape = conv2d_output_shape(k.shape(), 1, Padding::Valid, x.shape()).unwrap();
+        let y = conv2d::<f64>(&(), &k, &[0.0], 1, Padding::Valid, &x, &shape);
+        assert_eq!(y.data()[0], 111.0);
+    }
+
+    #[test]
+    fn depthwise_keeps_channels_separate() {
+        let x = Tensor::new(vec![1, 2, 2], vec![1.0, 10.0, 2.0, 20.0]);
+        // 1x2 depthwise kernel [[1, 1]] per channel.
+        let k = Tensor::new(vec![1, 2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let shape = depthwise_output_shape(k.shape(), 1, Padding::Valid, x.shape()).unwrap();
+        let y = depthwise::<f64>(&(), &k, &[0.0, 0.0], 1, Padding::Valid, &x, &shape);
+        assert_eq!(y.shape(), &[1, 1, 2]);
+        assert_eq!(y.data(), &[3.0, 30.0]);
+    }
+
+    #[test]
+    fn strided_same_padding_geometry() {
+        // 5x5 input, 3x3 kernel, stride 2, same: output 3x3; corners see
+        // the padded region. Use an all-ones kernel on an all-ones image:
+        // the corner output counts the in-bounds taps (4), center 9.
+        let x = Tensor::new(vec![5, 5, 1], vec![1.0; 25]);
+        let k = Tensor::new(vec![3, 3, 1, 1], vec![1.0; 9]);
+        let shape = conv2d_output_shape(k.shape(), 2, Padding::Same, x.shape()).unwrap();
+        let y = conv2d::<f64>(&(), &k, &[0.0], 2, Padding::Same, &x, &shape);
+        assert_eq!(y.shape(), &[3, 3, 1]);
+        assert_eq!(*y.at(&[0, 0, 0]), 4.0);
+        assert_eq!(*y.at(&[1, 1, 0]), 9.0);
+        assert_eq!(*y.at(&[0, 1, 0]), 6.0);
+        assert_eq!(*y.at(&[2, 2, 0]), 4.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Dense (fully connected) layer: `y = W x + b`.
+//!
+//! The dot products accumulate left-to-right, matching the straightforward
+//! summation the original tool analyzes (Kahan or pairwise variants would
+//! need the code-generation phase the paper lists as future work).
+
+use crate::tensor::{Scalar, Tensor};
+
+/// Apply `y_j = sum_i W[j,i] * x_i + b_j`. `w: [m, n]`, `x: [n]`.
+pub fn apply<S: Scalar>(ctx: &S::Ctx, w: &Tensor<f64>, b: &[f64], x: &Tensor<S>) -> Tensor<S> {
+    let m = w.shape()[0];
+    let n = w.shape()[1];
+    let wd = w.data();
+    let xd = x.data();
+    let mut out = Vec::with_capacity(m);
+    for j in 0..m {
+        let row = &wd[j * n..(j + 1) * n];
+        out.push(dot_bias(ctx, row, b[j], xd));
+    }
+    Tensor::new(vec![m], out)
+}
+
+/// One dot product plus bias in the scalar arithmetic `S` (sequential
+/// accumulation). Exposed for the conv layer (a convolution is a strided
+/// dot product) and for microbenchmarks.
+pub fn dot_bias<S: Scalar>(ctx: &S::Ctx, weights: &[f64], bias: f64, xs: &[S]) -> S {
+    debug_assert_eq!(weights.len(), xs.len());
+    let mut acc = S::param(ctx, bias);
+    for (wi, xi) in weights.iter().zip(xs) {
+        if *wi == 0.0 {
+            continue; // w=0 contributes exactly nothing (and stays sound)
+        }
+        let term = xi.mul_param(*wi, ctx);
+        acc = acc.add(&term, ctx);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caa::{Caa, Ctx};
+    use crate::interval::Interval;
+    use crate::quant::EmulatedFp;
+    use crate::tensor::EmuCtx;
+
+    #[test]
+    fn f64_matches_manual() {
+        let w = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.5, 0.0]);
+        let b = vec![0.5, -0.5];
+        let x = Tensor::new(vec![3], vec![1.0, 1.0, 2.0]);
+        let y = apply::<f64>(&(), &w, &b, &x);
+        assert_eq!(y.data(), &[1.0 + 2.0 + 6.0 + 0.5, -1.0 + 0.5 - 0.5]);
+    }
+
+    #[test]
+    fn caa_bounds_enclose_emulated_runs() {
+        let ctx = Ctx::new();
+        let w = Tensor::new(vec![2, 4], vec![0.3, -0.7, 0.1, 0.9, 0.2, 0.4, -0.6, 0.05]);
+        let b = vec![0.1, -0.2];
+        let xs_f = [0.5, 1.5, -0.25, 2.0];
+
+        let x_caa = Tensor::new(
+            vec![4],
+            xs_f.iter().map(|&v| Caa::input(&ctx, Interval::point(v), v)).collect(),
+        );
+        let y_caa = apply::<Caa>(&ctx, &w, &b, &x_caa);
+
+        let y_ref = apply::<f64>(&(), &w, &b, &Tensor::new(vec![4], xs_f.to_vec()));
+
+        for k in [8u32, 12, 16, 24] {
+            let ec = EmuCtx { k };
+            let x_emu = Tensor::new(
+                vec![4],
+                xs_f.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
+            );
+            let y_emu = apply::<EmulatedFp>(&ec, &w, &b, &x_emu);
+            for j in 0..2 {
+                crate::quant::check_against_bounds(
+                    &y_caa.data()[j],
+                    y_ref.data()[j],
+                    y_emu.data()[j].v,
+                    k,
+                    1e-12,
+                )
+                .unwrap_or_else(|e| panic!("k={k} j={j}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weights_skipped_exactly() {
+        let ctx = Ctx::new();
+        let w = Tensor::new(vec![1, 2], vec![0.0, 0.0]);
+        let b = vec![1.0];
+        let x = Tensor::new(
+            vec![2],
+            vec![
+                Caa::input(&ctx, Interval::new(-1e6, 1e6), 0.0),
+                Caa::input(&ctx, Interval::new(-1e6, 1e6), 0.0),
+            ],
+        );
+        let y = apply::<Caa>(&ctx, &w, &b, &x);
+        // Output is just the bias: huge inputs must not leak in.
+        assert!(y.data()[0].ideal().contains(1.0));
+        assert!(y.data()[0].ideal().mag() < 1.1);
+    }
+}

@@ -1,0 +1,193 @@
+//! DNN layer semantics (paper §II), generic over [`Scalar`].
+//!
+//! This replaces frugally-deep's evaluation engine: the same layer code
+//! runs the plain f64 reference trace, the emulated precision-k witness
+//! runs, and the CAA analysis, depending on the scalar type bound in.
+//! Computational layers: Dense, Conv2D, DepthwiseConv2D, Pooling,
+//! BatchNormalization. Activation layers: ReLU, LeakyReLU, Tanh, Sigmoid,
+//! Softmax.
+
+mod activation;
+mod conv;
+mod dense;
+mod norm;
+mod pool;
+
+pub use activation::softmax_vec;
+
+use crate::tensor::{Scalar, Tensor};
+use anyhow::{bail, Result};
+
+/// Padding mode for convolution (Keras semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Padding {
+    /// No padding: output spatial size `(in - kernel)/stride + 1`.
+    Valid,
+    /// Zero padding such that output size is `ceil(in/stride)`.
+    Same,
+}
+
+impl Padding {
+    pub fn parse(s: &str) -> Result<Padding> {
+        match s {
+            "valid" => Ok(Padding::Valid),
+            "same" => Ok(Padding::Same),
+            _ => bail!("unknown padding '{s}'"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Padding::Valid => "valid",
+            Padding::Same => "same",
+        }
+    }
+}
+
+/// A network layer with its learned parameters (held as f64; every `apply`
+/// embeds them into the target arithmetic as rounded parameters).
+#[derive(Clone, Debug)]
+pub enum Layer {
+    /// Fully connected: `y = W x + b`, `W: [units, in]`.
+    Dense { w: Tensor<f64>, b: Vec<f64> },
+    /// 2-D convolution, kernel `[kh, kw, cin, cout]`, input `[h, w, cin]`.
+    Conv2D { kernel: Tensor<f64>, bias: Vec<f64>, stride: usize, padding: Padding },
+    /// Depthwise 2-D convolution, kernel `[kh, kw, c]`.
+    DepthwiseConv2D { kernel: Tensor<f64>, bias: Vec<f64>, stride: usize, padding: Padding },
+    /// Max pooling over `[ph, pw]` windows with stride = pool size.
+    MaxPool2D { ph: usize, pw: usize },
+    /// Average pooling over `[ph, pw]` windows with stride = pool size.
+    AvgPool2D { ph: usize, pw: usize },
+    /// Inference-mode batch normalization over the last axis (channels).
+    BatchNorm { gamma: Vec<f64>, beta: Vec<f64>, mean: Vec<f64>, variance: Vec<f64>, eps: f64 },
+    /// Reshape to 1-D.
+    Flatten,
+    Relu,
+    LeakyRelu { alpha: f64 },
+    Tanh,
+    Sigmoid,
+    /// Numerically-stable softmax over the last axis.
+    Softmax,
+}
+
+impl Layer {
+    /// Short type tag (matches the JSON model format).
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Layer::Dense { .. } => "dense",
+            Layer::Conv2D { .. } => "conv2d",
+            Layer::DepthwiseConv2D { .. } => "depthwise_conv2d",
+            Layer::MaxPool2D { .. } => "max_pool2d",
+            Layer::AvgPool2D { .. } => "avg_pool2d",
+            Layer::BatchNorm { .. } => "batch_norm",
+            Layer::Flatten => "flatten",
+            Layer::Relu => "relu",
+            Layer::LeakyRelu { .. } => "leaky_relu",
+            Layer::Tanh => "tanh",
+            Layer::Sigmoid => "sigmoid",
+            Layer::Softmax => "softmax",
+        }
+    }
+
+    /// Number of learned parameters.
+    pub fn param_count(&self) -> usize {
+        match self {
+            Layer::Dense { w, b } => w.len() + b.len(),
+            Layer::Conv2D { kernel, bias, .. } => kernel.len() + bias.len(),
+            Layer::DepthwiseConv2D { kernel, bias, .. } => kernel.len() + bias.len(),
+            Layer::BatchNorm { gamma, beta, mean, variance, .. } => {
+                gamma.len() + beta.len() + mean.len() + variance.len()
+            }
+            _ => 0,
+        }
+    }
+
+    /// Output shape for a given input shape (validates compatibility).
+    pub fn output_shape(&self, input: &[usize]) -> Result<Vec<usize>> {
+        match self {
+            Layer::Dense { w, .. } => {
+                let (m, n) = (w.shape()[0], w.shape()[1]);
+                if input != [n] {
+                    bail!("dense expects input [{n}], got {input:?}");
+                }
+                Ok(vec![m])
+            }
+            Layer::Conv2D { kernel, stride, padding, .. } => {
+                conv::conv2d_output_shape(kernel.shape(), *stride, *padding, input)
+            }
+            Layer::DepthwiseConv2D { kernel, stride, padding, .. } => {
+                conv::depthwise_output_shape(kernel.shape(), *stride, *padding, input)
+            }
+            Layer::MaxPool2D { ph, pw } | Layer::AvgPool2D { ph, pw } => {
+                pool::pool_output_shape(*ph, *pw, input)
+            }
+            Layer::BatchNorm { gamma, .. } => {
+                let c = *input.last().ok_or_else(|| anyhow::anyhow!("batch_norm on scalar"))?;
+                if c != gamma.len() {
+                    bail!("batch_norm expects {} channels, got {c}", gamma.len());
+                }
+                Ok(input.to_vec())
+            }
+            Layer::Flatten => Ok(vec![input.iter().product()]),
+            _ => Ok(input.to_vec()),
+        }
+    }
+
+    /// Evaluate the layer in the arithmetic `S`.
+    pub fn apply<S: Scalar>(&self, ctx: &S::Ctx, x: &Tensor<S>) -> Result<Tensor<S>> {
+        // Shape check once here; the per-layer code can then index freely.
+        let out_shape = self.output_shape(x.shape())?;
+        let out = match self {
+            Layer::Dense { w, b } => dense::apply(ctx, w, b, x),
+            Layer::Conv2D { kernel, bias, stride, padding } => {
+                conv::conv2d(ctx, kernel, bias, *stride, *padding, x, &out_shape)
+            }
+            Layer::DepthwiseConv2D { kernel, bias, stride, padding } => {
+                conv::depthwise(ctx, kernel, bias, *stride, *padding, x, &out_shape)
+            }
+            Layer::MaxPool2D { ph, pw } => pool::max_pool(ctx, *ph, *pw, x, &out_shape),
+            Layer::AvgPool2D { ph, pw } => pool::avg_pool(ctx, *ph, *pw, x, &out_shape),
+            Layer::BatchNorm { gamma, beta, mean, variance, eps } => {
+                norm::batch_norm(ctx, gamma, beta, mean, variance, *eps, x)
+            }
+            Layer::Flatten => x.clone().reshape(out_shape),
+            Layer::Relu => x.map(|v| v.relu(ctx)),
+            Layer::LeakyRelu { alpha } => activation::leaky_relu(ctx, *alpha, x),
+            Layer::Tanh => x.map(|v| v.tanh(ctx)),
+            Layer::Sigmoid => x.map(|v| v.sigmoid(ctx)),
+            Layer::Softmax => activation::softmax(ctx, x),
+        };
+        debug_assert_eq!(out.shape(), self.output_shape(x.shape())?.as_slice());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn type_names_and_param_counts() {
+        let d = Layer::Dense { w: Tensor::new(vec![2, 3], vec![0.0; 6]), b: vec![0.0; 2] };
+        assert_eq!(d.type_name(), "dense");
+        assert_eq!(d.param_count(), 8);
+        assert_eq!(Layer::Softmax.param_count(), 0);
+    }
+
+    #[test]
+    fn output_shapes() {
+        let d = Layer::Dense { w: Tensor::new(vec![4, 3], vec![0.0; 12]), b: vec![0.0; 4] };
+        assert_eq!(d.output_shape(&[3]).unwrap(), vec![4]);
+        assert!(d.output_shape(&[5]).is_err());
+        assert_eq!(Layer::Flatten.output_shape(&[2, 3, 4]).unwrap(), vec![24]);
+        assert_eq!(Layer::Relu.output_shape(&[7, 7, 3]).unwrap(), vec![7, 7, 3]);
+    }
+
+    #[test]
+    fn padding_parse() {
+        assert_eq!(Padding::parse("same").unwrap(), Padding::Same);
+        assert_eq!(Padding::parse("valid").unwrap(), Padding::Valid);
+        assert!(Padding::parse("bogus").is_err());
+        assert_eq!(Padding::Same.as_str(), "same");
+    }
+}

@@ -1,0 +1,100 @@
+//! Inference-mode batch normalization (paper §II, eq. (4)).
+//!
+//! At inference the batch statistics are the stored moving averages, so the
+//! layer is `y = γ (x - μ) / sqrt(σ² + ε) + β` per channel. We evaluate the
+//! per-channel scale `γ / sqrt(σ² + ε)` *in the analyzed arithmetic* (one
+//! add, sqrt, div per channel) rather than folding it at load time: the
+//! folding itself is FP work the target device would perform, and its error
+//! belongs in the analysis.
+
+use crate::tensor::{Scalar, Tensor};
+
+pub fn batch_norm<S: Scalar>(
+    ctx: &S::Ctx,
+    gamma: &[f64],
+    beta: &[f64],
+    mean: &[f64],
+    variance: &[f64],
+    eps: f64,
+    x: &Tensor<S>,
+) -> Tensor<S> {
+    let c = *x.shape().last().expect("batch_norm input rank >= 1");
+    // Per-channel affine parameters, computed once in S.
+    let mut scale = Vec::with_capacity(c);
+    let mut shift_mu = Vec::with_capacity(c);
+    let mut shift_beta = Vec::with_capacity(c);
+    for ch in 0..c {
+        let var = S::param(ctx, variance[ch]);
+        let e = S::param(ctx, eps);
+        let denom = var.add(&e, ctx).sqrt(ctx);
+        let g = S::param(ctx, gamma[ch]);
+        scale.push(g.div(&denom, ctx));
+        shift_mu.push(S::param(ctx, mean[ch]));
+        shift_beta.push(S::param(ctx, beta[ch]));
+    }
+    let n = x.len();
+    let xd = x.data();
+    let mut out = Vec::with_capacity(n);
+    for (i, v) in xd.iter().enumerate() {
+        let ch = i % c;
+        let y = v
+            .sub(&shift_mu[ch], ctx)
+            .mul(&scale[ch], ctx)
+            .add(&shift_beta[ch], ctx);
+        out.push(y);
+    }
+    Tensor::new(x.shape().to_vec(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caa::{Caa, Ctx};
+    use crate::interval::Interval;
+
+    #[test]
+    fn f64_matches_formula() {
+        let x = Tensor::new(vec![2, 2], vec![1.0, 10.0, 3.0, 20.0]);
+        let y = batch_norm::<f64>(
+            &(),
+            &[2.0, 1.0],   // gamma
+            &[0.5, -1.0],  // beta
+            &[1.0, 10.0],  // mean
+            &[4.0, 25.0],  // variance
+            0.0,
+            &x,
+        );
+        // ch0: 2*(x-1)/2 + 0.5 ; ch1: (x-10)/5 - 1
+        assert_eq!(y.data()[0], 0.5);
+        assert_eq!(y.data()[1], -1.0);
+        assert_eq!(y.data()[2], 2.5);
+        assert_eq!(y.data()[3], 1.0);
+    }
+
+    #[test]
+    fn caa_bounds_finite_and_enclosing() {
+        let ctx = Ctx::new();
+        let x = Tensor::new(
+            vec![1, 2],
+            vec![
+                Caa::input(&ctx, Interval::new(0.0, 2.0), 1.0),
+                Caa::input(&ctx, Interval::new(5.0, 15.0), 10.0),
+            ],
+        );
+        let y = batch_norm::<Caa>(
+            &ctx,
+            &[2.0, 1.0],
+            &[0.5, -1.0],
+            &[1.0, 10.0],
+            &[4.0, 25.0],
+            1e-3,
+            &x,
+        );
+        for v in y.data() {
+            assert!(v.abs_bound().is_finite(), "batch norm abs bound");
+            assert!(v.ideal().is_finite());
+        }
+        // fp trace sits inside the ideal enclosure.
+        assert!(y.data()[0].ideal().contains(y.data()[0].fp()));
+    }
+}

@@ -1,0 +1,142 @@
+//! Pooling layers. Max pooling is comparison-only (error-free, the `if`s
+//! the paper's control-flow discussion covers); average pooling is a small
+//! summation followed by a division by the (exact) window size.
+
+use crate::tensor::{Scalar, Tensor};
+use anyhow::{bail, Result};
+
+pub fn pool_output_shape(ph: usize, pw: usize, input: &[usize]) -> Result<Vec<usize>> {
+    let [h, w, c] = input else {
+        bail!("pooling expects input [h, w, c], got {input:?}");
+    };
+    if ph == 0 || pw == 0 {
+        bail!("pool window must be nonzero");
+    }
+    if h % ph != 0 || w % pw != 0 {
+        bail!("pool window {ph}x{pw} must tile input {h}x{w} (Keras 'valid' with matching stride)");
+    }
+    Ok(vec![h / ph, w / pw, *c])
+}
+
+pub fn max_pool<S: Scalar>(
+    ctx: &S::Ctx,
+    ph: usize,
+    pw: usize,
+    x: &Tensor<S>,
+    out_shape: &[usize],
+) -> Tensor<S> {
+    let (w, c) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = (out_shape[0], out_shape[1]);
+    let xd = x.data();
+    let mut out = Vec::with_capacity(oh * ow * c);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..c {
+                let mut m: Option<S> = None;
+                for ky in 0..ph {
+                    for kx in 0..pw {
+                        let v = &xd[((oy * ph + ky) * w + (ox * pw + kx)) * c + ch];
+                        m = Some(match m {
+                            None => v.clone(),
+                            Some(acc) => acc.max(v, ctx),
+                        });
+                    }
+                }
+                out.push(m.expect("nonempty window"));
+            }
+        }
+    }
+    Tensor::new(out_shape.to_vec(), out)
+}
+
+pub fn avg_pool<S: Scalar>(
+    ctx: &S::Ctx,
+    ph: usize,
+    pw: usize,
+    x: &Tensor<S>,
+    out_shape: &[usize],
+) -> Tensor<S> {
+    let (w, c) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = (out_shape[0], out_shape[1]);
+    let n = S::exact(ctx, (ph * pw) as f64); // small integer: exact
+    let xd = x.data();
+    let mut out = Vec::with_capacity(oh * ow * c);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..c {
+                let mut acc: Option<S> = None;
+                for ky in 0..ph {
+                    for kx in 0..pw {
+                        let v = &xd[((oy * ph + ky) * w + (ox * pw + kx)) * c + ch];
+                        acc = Some(match acc {
+                            None => v.clone(),
+                            Some(a) => a.add(v, ctx),
+                        });
+                    }
+                }
+                out.push(acc.expect("nonempty window").div(&n, ctx));
+            }
+        }
+    }
+    Tensor::new(out_shape.to_vec(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caa::{Caa, Ctx};
+    use crate::interval::Interval;
+
+    #[test]
+    fn shapes() {
+        assert_eq!(pool_output_shape(2, 2, &[4, 6, 3]).unwrap(), vec![2, 3, 3]);
+        assert!(pool_output_shape(2, 2, &[5, 6, 3]).is_err());
+        assert!(pool_output_shape(0, 2, &[4, 6, 3]).is_err());
+        assert!(pool_output_shape(2, 2, &[4, 6]).is_err());
+    }
+
+    #[test]
+    fn max_pool_f64() {
+        let x = Tensor::new(vec![2, 2, 1], vec![1.0, 5.0, 3.0, 2.0]);
+        let y = max_pool::<f64>(&(), 2, 2, &x, &[1, 1, 1]);
+        assert_eq!(y.data(), &[5.0]);
+    }
+
+    #[test]
+    fn avg_pool_f64() {
+        let x = Tensor::new(vec![2, 2, 2], vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0]);
+        let y = avg_pool::<f64>(&(), 2, 2, &x, &[1, 1, 2]);
+        assert_eq!(y.data(), &[2.5, 25.0]);
+    }
+
+    #[test]
+    fn max_pool_channels_independent() {
+        let x = Tensor::new(vec![2, 2, 2], vec![1.0, 40.0, 2.0, 30.0, 3.0, 20.0, 4.0, 10.0]);
+        let y = max_pool::<f64>(&(), 2, 2, &x, &[1, 1, 2]);
+        assert_eq!(y.data(), &[4.0, 40.0]);
+    }
+
+    #[test]
+    fn max_pool_caa_keeps_abs_bound() {
+        let ctx = Ctx::new();
+        let mk = |v: f64| Caa::input(&ctx, Interval::new(v - 0.1, v + 0.1), v);
+        let x = Tensor::new(vec![2, 2, 1], vec![mk(1.0), mk(5.0), mk(3.0), mk(2.0)]);
+        let y = max_pool::<Caa>(&ctx, 2, 2, &x, &[1, 1, 1]);
+        assert_eq!(y.data()[0].fp(), 5.0);
+        assert!(y.data()[0].abs_bound().is_finite());
+        assert!(y.data()[0].ideal().contains(5.1));
+    }
+
+    #[test]
+    fn avg_pool_caa_divides_by_exact_count() {
+        let ctx = Ctx::new();
+        let mk = |v: f64| Caa::param(&ctx, v);
+        let x = Tensor::new(vec![2, 2, 1], vec![mk(1.0), mk(2.0), mk(3.0), mk(4.0)]);
+        let y = avg_pool::<Caa>(&ctx, 2, 2, &x, &[1, 1, 1]);
+        assert!((y.data()[0].fp() - 2.5).abs() < 1e-15);
+        assert!(y.data()[0].rel_bound().is_finite());
+        // 4 params (1/2 each, α-weighted) + 3 add roundings + div rounding:
+        // comfortably under a few u.
+        assert!(y.data()[0].rel_bound() < 4.0, "rel = {}", y.data()[0].rel_bound());
+    }
+}

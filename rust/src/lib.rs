@@ -1,0 +1,44 @@
+//! # rigor — Rigorous Precision & Accuracy Analysis for Deep Learning
+//!
+//! Reproduction of *"A Framework for Semi-Automatic Precision and Accuracy
+//! Analysis for Fast and Rigorous Deep Learning"* (Lauter & Volkova, 2020).
+//!
+//! The library re-evaluates a trained deep neural network with every scalar
+//! replaced by a [`caa::Caa`] object — a *Combined Affine Arithmetic* value
+//! carrying both an **absolute** and a **relative** rounding-error bound,
+//! expressed in units of `u = 2^(1-k)` where `k` is the floating-point
+//! precision. [`interval::Interval`] arithmetic supplies the range
+//! information needed to combine and convert the bounds rigorously. From the
+//! analysis output, [`analysis`] derives the minimum precision `k` that
+//! provably prevents rounding-induced misclassification given a top-1
+//! confidence margin `p* > 0.5`.
+//!
+//! Layer map (three-layer rust+JAX+Pallas architecture):
+//! * L3 (this crate): CAA+IA analysis engine, DNN inference engine, model
+//!   loader, precision tailoring, analysis [`coordinator`], PJRT [`runtime`].
+//! * L2 (`python/compile/model.py`): the evaluation networks in JAX,
+//!   AOT-lowered to HLO text artifacts.
+//! * L1 (`python/compile/kernels/`): Pallas kernels (dense, conv2d, softmax,
+//!   round-to-precision emulation).
+//!
+//! See `DESIGN.md` for the complete system inventory and experiment index.
+
+pub mod analysis;
+pub mod bench;
+pub mod caa;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod interval;
+pub mod json;
+pub mod layers;
+pub mod model;
+pub mod prop;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based).
+pub type Result<T> = anyhow::Result<T>;

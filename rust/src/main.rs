@@ -1,0 +1,229 @@
+//! `rigor` — the analysis tool's command-line front end (L3 leader).
+//!
+//! Commands:
+//! * `analyze` — per-class CAA analysis of a model JSON + dataset JSON,
+//!   fanned out over the coordinator pool; prints the Table-I row and the
+//!   minimum safe precision.
+//! * `table1`  — regenerate the paper's Table I over all trained artifact
+//!   models.
+//! * `sweep`   — accuracy-vs-precision sweep over the AOT k-variants
+//!   (PJRT).
+//! * `run`     — execute one artifact on an input vector (PJRT).
+
+use rigor::analysis::AnalysisConfig;
+use rigor::caa::Ctx;
+use rigor::cli::{App, CmdSpec, OptSpec};
+use rigor::coordinator::{analyze_model_parallel, Pool};
+use rigor::data::Dataset;
+use rigor::model::Model;
+use rigor::report::{per_class_console, table1_console, table1_markdown, TableRow};
+use rigor::runtime::Runtime;
+use std::path::Path;
+
+fn app() -> App {
+    let analysis_opts = vec![
+        OptSpec { name: "model", help: "model JSON path", default: Some("artifacts/models/digits.json".into()) },
+        OptSpec { name: "data", help: "dataset JSON path", default: Some("artifacts/data/digits_eval.json".into()) },
+        OptSpec { name: "p-star", help: "top-1 confidence floor p*", default: Some("0.60".into()) },
+        OptSpec { name: "u-max-log2", help: "-log2 of u_max (paper: 7)", default: Some("7".into()) },
+        OptSpec { name: "radius", help: "input box radius", default: Some("0".into()) },
+        OptSpec { name: "exact-inputs", help: "inputs exactly representable", default: None },
+        OptSpec { name: "workers", help: "pool workers (0 = host)", default: Some("0".into()) },
+        OptSpec { name: "per-class", help: "print per-class detail", default: None },
+    ];
+    App {
+        name: "rigor",
+        about: "semi-automatic precision & accuracy analysis for deep learning (CAA + IA)",
+        commands: vec![
+            CmdSpec { name: "analyze", help: "analyze one model", opts: analysis_opts },
+            CmdSpec {
+                name: "table1",
+                help: "regenerate the paper's Table I over the artifact models",
+                opts: vec![
+                    OptSpec { name: "artifacts", help: "artifacts dir", default: Some("artifacts".into()) },
+                    OptSpec { name: "p-star", help: "confidence floor", default: Some("0.60".into()) },
+                    OptSpec { name: "markdown", help: "emit markdown", default: None },
+                ],
+            },
+            CmdSpec {
+                name: "sweep",
+                help: "accuracy vs precision over AOT k-variants (PJRT)",
+                opts: vec![
+                    OptSpec { name: "artifacts", help: "artifacts dir", default: Some("artifacts".into()) },
+                    OptSpec { name: "model", help: "model name", default: Some("digits".into()) },
+                ],
+            },
+            CmdSpec {
+                name: "tune",
+                help: "mixed-precision tuning: per-layer minimal formats (paper §VI)",
+                opts: vec![
+                    OptSpec { name: "model", help: "model JSON path", default: Some("artifacts/models/digits.json".into()) },
+                    OptSpec { name: "data", help: "dataset JSON path", default: Some("artifacts/data/digits_eval.json".into()) },
+                    OptSpec { name: "p-star", help: "confidence floor", default: Some("0.60".into()) },
+                    OptSpec { name: "k-floor", help: "smallest k to try", default: Some("4".into()) },
+                    OptSpec { name: "exact-inputs", help: "inputs exactly representable", default: None },
+                ],
+            },
+            CmdSpec {
+                name: "run",
+                help: "execute one artifact on a comma-separated input vector",
+                opts: vec![
+                    OptSpec { name: "artifacts", help: "artifacts dir", default: Some("artifacts".into()) },
+                    OptSpec { name: "model", help: "model name", default: Some("pendulum".into()) },
+                    OptSpec { name: "variant", help: "f32 or k<bits>", default: Some("f32".into()) },
+                    OptSpec { name: "input", help: "comma-separated values", default: Some("1.0,-2.0".into()) },
+                ],
+            },
+        ],
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = app().parse(&args)?;
+    match parsed.command.as_str() {
+        "analyze" => cmd_analyze(&parsed),
+        "table1" => cmd_table1(&parsed),
+        "sweep" => cmd_sweep(&parsed),
+        "tune" => cmd_tune(&parsed),
+        "run" => cmd_run(&parsed),
+        _ => unreachable!(),
+    }
+}
+
+fn cmd_tune(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    use rigor::analysis::{certify_min_precision, mixed};
+    let model = Model::load(Path::new(p.get("model").unwrap()))?;
+    let data = Dataset::load(Path::new(p.get("data").unwrap()))?;
+    let cfg = AnalysisConfig {
+        ctx: Ctx::new(),
+        p_star: p.get_f64("p-star")?,
+        input_radius: 0.0,
+        exact_inputs: p.flag("exact-inputs"),
+    };
+    let k_floor = p.get_usize("k-floor")? as u32;
+    let Some((k0, _)) = certify_min_precision(&model, &data, &cfg, 8..=30)? else {
+        anyhow::bail!("no uniform k in [8, 30] certifies at p* = {}", cfg.p_star);
+    };
+    println!("uniform certified baseline: k = {k0}");
+    let tuned = mixed::tune_mixed(&model, &data, &cfg, k0, k_floor)?;
+    println!("tuned per-layer formats (layer: type = k):");
+    for (i, (layer, k)) in model.layers.iter().zip(&tuned.ks).enumerate() {
+        println!("  {i:2}: {:<18} k = {k}", layer.type_name());
+    }
+    let saved: i64 = tuned.ks.iter().map(|&k| k0 as i64 - k as i64).sum();
+    println!(
+        "certified: {} | max abs {:.3e} | max rel {:.3e} | {} mantissa bits saved vs uniform",
+        tuned.certified, tuned.max_abs, tuned.max_rel, saved
+    );
+    Ok(())
+}
+
+fn pool_from(parsed: &rigor::cli::Parsed) -> anyhow::Result<Pool> {
+    let w = parsed.get_usize("workers").unwrap_or(0);
+    Ok(if w == 0 { Pool::default_for_host() } else { Pool::new(w, w * 4) })
+}
+
+fn cmd_analyze(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    let model = Model::load(Path::new(p.get("model").unwrap()))?;
+    let data = Dataset::load(Path::new(p.get("data").unwrap()))?;
+    let u_log2 = p.get_usize("u-max-log2")?;
+    let cfg = AnalysisConfig {
+        ctx: Ctx::with_u_max(2f64.powi(-(u_log2 as i32))),
+        p_star: p.get_f64("p-star")?,
+        input_radius: p.get_f64("radius")?,
+        exact_inputs: p.flag("exact-inputs"),
+    };
+    let pool = pool_from(p)?;
+    let a = analyze_model_parallel(&model, &data, &cfg, &pool)?;
+    if p.flag("per-class") {
+        println!("{}", per_class_console(&a));
+    }
+    println!("{}", table1_console(&[TableRow::from_analysis(&a)], cfg.p_star));
+    match a.required_k {
+        Some(k) => println!("minimum safe precision: k = {k}"),
+        None => println!("no finite bound — cannot certify a precision"),
+    }
+    Ok(())
+}
+
+fn cmd_table1(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    let dir = Path::new(p.get("artifacts").unwrap());
+    let p_star = p.get_f64("p-star")?;
+    let pool = Pool::default_for_host();
+    let mut rows = Vec::new();
+    for (name, radius) in [("digits", 0.0), ("mobilenet_mini", 0.0), ("pendulum", 6.0)] {
+        let model = Model::load(&dir.join("models").join(format!("{name}.json")))?;
+        let data = if radius > 0.0 {
+            // Whole-box verification workload (Pendulum).
+            Dataset {
+                input_shape: model.input_shape.clone(),
+                inputs: vec![vec![0.0; model.input_shape.iter().product()]],
+                labels: vec![],
+            }
+        } else {
+            Dataset::load(&dir.join("data").join(format!("{name}_eval.json")))?
+        };
+        let cfg = AnalysisConfig {
+            ctx: Ctx::new(),
+            p_star,
+            input_radius: radius,
+            exact_inputs: true,
+        };
+        let a = analyze_model_parallel(&model, &data, &cfg, &pool)?;
+        rows.push(TableRow::from_analysis(&a));
+    }
+    if p.flag("markdown") {
+        println!("{}", table1_markdown(&rows, p_star, -7));
+    } else {
+        println!("{}", table1_console(&rows, p_star));
+    }
+    Ok(())
+}
+
+fn cmd_sweep(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    let dir = Path::new(p.get("artifacts").unwrap()).to_path_buf();
+    let name = p.get("model").unwrap().to_string();
+    let mut rt = Runtime::open(&dir)?;
+    let data = Dataset::load(&dir.join("data").join(format!("{name}_eval.json")))?;
+    println!("{:>4} {:>16} {:>16}", "k", "top-1 agreement", "max |dev|");
+    for k in rt.precision_variants(&name) {
+        let mut agree = 0;
+        let mut max_dev = 0.0f32;
+        for sample in &data.inputs {
+            let s: Vec<f32> = sample.iter().map(|&v| v as f32).collect();
+            let r = rt.run(&name, "f32", &s)?;
+            let e = rt.run(&name, &format!("k{k}"), &s)?;
+            let am = |xs: &[f32]| {
+                xs.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            };
+            if am(&r) == am(&e) {
+                agree += 1;
+            }
+            for (a, b) in r.iter().zip(&e) {
+                max_dev = max_dev.max((a - b).abs());
+            }
+        }
+        println!("{k:>4} {:>13}/{:<3} {max_dev:>16.3e}", agree, data.len());
+    }
+    Ok(())
+}
+
+fn cmd_run(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    let dir = Path::new(p.get("artifacts").unwrap()).to_path_buf();
+    let mut rt = Runtime::open(&dir)?;
+    let input: Vec<f32> = p
+        .get("input")
+        .unwrap()
+        .split(',')
+        .map(|s| s.trim().parse::<f32>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("bad --input: {e}"))?;
+    let out = rt.run(p.get("model").unwrap(), p.get("variant").unwrap(), &input)?;
+    println!("{out:?}");
+    Ok(())
+}

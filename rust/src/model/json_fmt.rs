@@ -1,0 +1,289 @@
+//! JSON exchange format for models.
+//!
+//! The format mirrors what `python/compile/aot.py` exports:
+//!
+//! ```json
+//! {
+//!   "name": "digits_mlp",
+//!   "input_shape": [784],
+//!   "layers": [
+//!     {"type": "dense", "units": 64, "in": 784, "weights": [...], "bias": [...]},
+//!     {"type": "relu"},
+//!     {"type": "conv2d", "kh": 3, "kw": 3, "cin": 1, "cout": 8,
+//!      "stride": 1, "padding": "same", "weights": [...], "bias": [...]},
+//!     {"type": "batch_norm", "gamma": [...], "beta": [...],
+//!      "mean": [...], "variance": [...], "eps": 0.001},
+//!     {"type": "max_pool2d", "ph": 2, "pw": 2},
+//!     {"type": "flatten"},
+//!     {"type": "softmax"}
+//!   ]
+//! }
+//! ```
+//!
+//! Weight arrays are flat, row-major: dense `[units, in]`, conv
+//! `[kh, kw, cin, cout]` (Keras layout).
+
+use crate::json::Value;
+use crate::layers::{Layer, Padding};
+use crate::model::Model;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+
+fn req<'a>(v: &'a Value, key: &str) -> Result<&'a Value> {
+    v.get(key).ok_or_else(|| anyhow!("missing field '{key}'"))
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    req(v, key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("field '{key}' must be a non-negative integer"))
+}
+
+fn req_f64(v: &Value, key: &str) -> Result<f64> {
+    req(v, key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("field '{key}' must be a number"))
+}
+
+fn req_f64_vec(v: &Value, key: &str) -> Result<Vec<f64>> {
+    req(v, key)?
+        .as_f64_vec()
+        .ok_or_else(|| anyhow!("field '{key}' must be a numeric array"))
+}
+
+fn layer_from_json(v: &Value) -> Result<Layer> {
+    let ty = req(v, "type")?
+        .as_str()
+        .ok_or_else(|| anyhow!("layer 'type' must be a string"))?;
+    Ok(match ty {
+        "dense" => {
+            let units = req_usize(v, "units")?;
+            let input = req_usize(v, "in")?;
+            let w = req_f64_vec(v, "weights")?;
+            let b = req_f64_vec(v, "bias")?;
+            if w.len() != units * input {
+                bail!("dense weights: expected {} values, got {}", units * input, w.len());
+            }
+            if b.len() != units {
+                bail!("dense bias: expected {units} values, got {}", b.len());
+            }
+            Layer::Dense { w: Tensor::new(vec![units, input], w), b }
+        }
+        "conv2d" => {
+            let (kh, kw) = (req_usize(v, "kh")?, req_usize(v, "kw")?);
+            let (cin, cout) = (req_usize(v, "cin")?, req_usize(v, "cout")?);
+            let stride = req_usize(v, "stride")?;
+            let padding = Padding::parse(
+                req(v, "padding")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("'padding' must be a string"))?,
+            )?;
+            let w = req_f64_vec(v, "weights")?;
+            let b = req_f64_vec(v, "bias")?;
+            if w.len() != kh * kw * cin * cout {
+                bail!("conv2d weights: expected {} values, got {}", kh * kw * cin * cout, w.len());
+            }
+            if b.len() != cout {
+                bail!("conv2d bias: expected {cout} values, got {}", b.len());
+            }
+            if stride == 0 {
+                bail!("conv2d stride must be >= 1");
+            }
+            Layer::Conv2D { kernel: Tensor::new(vec![kh, kw, cin, cout], w), bias: b, stride, padding }
+        }
+        "depthwise_conv2d" => {
+            let (kh, kw, c) = (req_usize(v, "kh")?, req_usize(v, "kw")?, req_usize(v, "c")?);
+            let stride = req_usize(v, "stride")?;
+            let padding = Padding::parse(
+                req(v, "padding")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("'padding' must be a string"))?,
+            )?;
+            let w = req_f64_vec(v, "weights")?;
+            let b = req_f64_vec(v, "bias")?;
+            if w.len() != kh * kw * c {
+                bail!("depthwise weights: expected {} values, got {}", kh * kw * c, w.len());
+            }
+            if b.len() != c {
+                bail!("depthwise bias: expected {c} values, got {}", b.len());
+            }
+            Layer::DepthwiseConv2D { kernel: Tensor::new(vec![kh, kw, c], w), bias: b, stride, padding }
+        }
+        "max_pool2d" => Layer::MaxPool2D { ph: req_usize(v, "ph")?, pw: req_usize(v, "pw")? },
+        "avg_pool2d" => Layer::AvgPool2D { ph: req_usize(v, "ph")?, pw: req_usize(v, "pw")? },
+        "batch_norm" => {
+            let gamma = req_f64_vec(v, "gamma")?;
+            let beta = req_f64_vec(v, "beta")?;
+            let mean = req_f64_vec(v, "mean")?;
+            let variance = req_f64_vec(v, "variance")?;
+            let eps = req_f64(v, "eps")?;
+            let c = gamma.len();
+            if beta.len() != c || mean.len() != c || variance.len() != c {
+                bail!("batch_norm parameter arrays must share a length");
+            }
+            if eps <= 0.0 {
+                bail!("batch_norm eps must be positive");
+            }
+            if variance.iter().any(|&x| x < 0.0) {
+                bail!("batch_norm variance must be nonnegative");
+            }
+            Layer::BatchNorm { gamma, beta, mean, variance, eps }
+        }
+        "flatten" => Layer::Flatten,
+        "relu" => Layer::Relu,
+        "leaky_relu" => Layer::LeakyRelu { alpha: req_f64(v, "alpha")? },
+        "tanh" => Layer::Tanh,
+        "sigmoid" => Layer::Sigmoid,
+        "softmax" => Layer::Softmax,
+        _ => bail!("unknown layer type '{ty}'"),
+    })
+}
+
+fn layer_to_json(l: &Layer) -> Value {
+    let mut pairs: Vec<(&str, Value)> = vec![("type", Value::from(l.type_name()))];
+    match l {
+        Layer::Dense { w, b } => {
+            pairs.push(("units", Value::from(w.shape()[0])));
+            pairs.push(("in", Value::from(w.shape()[1])));
+            pairs.push(("weights", Value::nums(w.data())));
+            pairs.push(("bias", Value::nums(b)));
+        }
+        Layer::Conv2D { kernel, bias, stride, padding } => {
+            pairs.push(("kh", Value::from(kernel.shape()[0])));
+            pairs.push(("kw", Value::from(kernel.shape()[1])));
+            pairs.push(("cin", Value::from(kernel.shape()[2])));
+            pairs.push(("cout", Value::from(kernel.shape()[3])));
+            pairs.push(("stride", Value::from(*stride)));
+            pairs.push(("padding", Value::from(padding.as_str())));
+            pairs.push(("weights", Value::nums(kernel.data())));
+            pairs.push(("bias", Value::nums(bias)));
+        }
+        Layer::DepthwiseConv2D { kernel, bias, stride, padding } => {
+            pairs.push(("kh", Value::from(kernel.shape()[0])));
+            pairs.push(("kw", Value::from(kernel.shape()[1])));
+            pairs.push(("c", Value::from(kernel.shape()[2])));
+            pairs.push(("stride", Value::from(*stride)));
+            pairs.push(("padding", Value::from(padding.as_str())));
+            pairs.push(("weights", Value::nums(kernel.data())));
+            pairs.push(("bias", Value::nums(bias)));
+        }
+        Layer::MaxPool2D { ph, pw } | Layer::AvgPool2D { ph, pw } => {
+            pairs.push(("ph", Value::from(*ph)));
+            pairs.push(("pw", Value::from(*pw)));
+        }
+        Layer::BatchNorm { gamma, beta, mean, variance, eps } => {
+            pairs.push(("gamma", Value::nums(gamma)));
+            pairs.push(("beta", Value::nums(beta)));
+            pairs.push(("mean", Value::nums(mean)));
+            pairs.push(("variance", Value::nums(variance)));
+            pairs.push(("eps", Value::Num(*eps)));
+        }
+        Layer::LeakyRelu { alpha } => {
+            pairs.push(("alpha", Value::Num(*alpha)));
+        }
+        _ => {}
+    }
+    Value::obj(pairs)
+}
+
+/// Parse a model from its JSON value.
+pub fn model_from_json(v: &Value) -> Result<Model> {
+    let name = req(v, "name")?
+        .as_str()
+        .ok_or_else(|| anyhow!("'name' must be a string"))?
+        .to_string();
+    let input_shape = req(v, "input_shape")?
+        .as_usize_vec()
+        .ok_or_else(|| anyhow!("'input_shape' must be an integer array"))?;
+    let layers_v = req(v, "layers")?
+        .as_array()
+        .ok_or_else(|| anyhow!("'layers' must be an array"))?;
+    let mut layers = Vec::with_capacity(layers_v.len());
+    for (i, lv) in layers_v.iter().enumerate() {
+        layers.push(layer_from_json(lv).with_context(|| format!("layer {i}"))?);
+    }
+    let m = Model { name, input_shape, layers };
+    m.output_shape().context("incompatible layer stack")?;
+    Ok(m)
+}
+
+/// Serialize a model to a JSON value.
+pub fn model_to_json(m: &Model) -> Value {
+    Value::obj(vec![
+        ("name", Value::from(m.name.as_str())),
+        (
+            "input_shape",
+            Value::Array(m.input_shape.iter().map(|&d| Value::from(d)).collect()),
+        ),
+        ("layers", Value::Array(m.layers.iter().map(layer_to_json).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    #[test]
+    fn minimal_model_parses() {
+        let text = r#"{
+            "name": "m", "input_shape": [2],
+            "layers": [
+                {"type": "dense", "units": 2, "in": 2,
+                 "weights": [1, 0, 0, 1], "bias": [0, 0]},
+                {"type": "tanh"},
+                {"type": "softmax"}
+            ]
+        }"#;
+        let m = model_from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(m.layers.len(), 3);
+        assert_eq!(m.output_shape().unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn rejects_bad_payloads() {
+        let cases = [
+            r#"{"input_shape": [2], "layers": []}"#,                   // no name
+            r#"{"name": "m", "layers": []}"#,                           // no shape
+            r#"{"name": "m", "input_shape": [2], "layers": [{"type": "nope"}]}"#,
+            // wrong weight count
+            r#"{"name": "m", "input_shape": [2], "layers": [
+                {"type": "dense", "units": 2, "in": 2, "weights": [1], "bias": [0, 0]}]}"#,
+            // incompatible stack: dense in=3 after input 2
+            r#"{"name": "m", "input_shape": [2], "layers": [
+                {"type": "dense", "units": 2, "in": 3,
+                 "weights": [0,0,0,0,0,0], "bias": [0,0]}]}"#,
+            // negative variance
+            r#"{"name": "m", "input_shape": [2], "layers": [
+                {"type": "batch_norm", "gamma": [1,1], "beta": [0,0],
+                 "mean": [0,0], "variance": [-1,1], "eps": 0.001}]}"#,
+        ];
+        for c in cases {
+            assert!(
+                model_from_json(&json::parse(c).unwrap()).is_err(),
+                "should reject: {c}"
+            );
+        }
+    }
+
+    #[test]
+    fn conv_roundtrip() {
+        let text = r#"{
+            "name": "c", "input_shape": [4, 4, 1],
+            "layers": [
+                {"type": "conv2d", "kh": 3, "kw": 3, "cin": 1, "cout": 2,
+                 "stride": 1, "padding": "same",
+                 "weights": [0.1,0.2,0.1,0.2,0.1,0.2,0.1,0.2,0.1,0.2,0.1,0.2,0.1,0.2,0.1,0.2,0.3,0.4],
+                 "bias": [0.5, -0.5]},
+                {"type": "relu"},
+                {"type": "max_pool2d", "ph": 2, "pw": 2},
+                {"type": "flatten"}
+            ]
+        }"#;
+        let m = model_from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(m.output_shape().unwrap(), vec![8]);
+        let re = model_from_json(&json::parse(&json::to_string_pretty(&model_to_json(&m))).unwrap())
+            .unwrap();
+        assert_eq!(re.param_count(), m.param_count());
+    }
+}

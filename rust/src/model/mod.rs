@@ -1,0 +1,187 @@
+//! Model = named layer stack + input shape. JSON (de)serialization of the
+//! exchange format `python/compile/aot.py` emits (replacing the
+//! frugally-deep Keras-to-JSON converter), plus a small builder zoo used by
+//! tests and ablation benches.
+
+mod json_fmt;
+pub mod zoo;
+
+pub use json_fmt::{model_from_json, model_to_json};
+
+use crate::layers::Layer;
+use crate::tensor::{Scalar, Tensor};
+use anyhow::{bail, Context, Result};
+
+/// A sequential DNN model.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<Layer>,
+}
+
+impl Model {
+    /// Validate layer compatibility and return the output shape.
+    pub fn output_shape(&self) -> Result<Vec<usize>> {
+        let mut shape = self.input_shape.clone();
+        for (i, layer) in self.layers.iter().enumerate() {
+            shape = layer
+                .output_shape(&shape)
+                .with_context(|| format!("layer {i} ({})", layer.type_name()))?;
+        }
+        Ok(shape)
+    }
+
+    /// Total learned parameter count.
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Run the network in the arithmetic `S`.
+    pub fn forward<S: Scalar>(&self, ctx: &S::Ctx, input: Tensor<S>) -> Result<Tensor<S>> {
+        if input.shape() != self.input_shape {
+            bail!(
+                "model '{}' expects input {:?}, got {:?}",
+                self.name,
+                self.input_shape,
+                input.shape()
+            );
+        }
+        let mut t = input;
+        for (i, layer) in self.layers.iter().enumerate() {
+            t = layer
+                .apply(ctx, &t)
+                .with_context(|| format!("layer {i} ({})", layer.type_name()))?;
+        }
+        Ok(t)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &std::path::Path) -> Result<Model> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading model file {}", path.display()))?;
+        let v = crate::json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        model_from_json(&v)
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let v = model_to_json(self);
+        std::fs::write(path, crate::json::to_string_pretty(&v))
+            .with_context(|| format!("writing model file {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caa::{Caa, Ctx};
+    use crate::interval::Interval;
+    use crate::quant::EmulatedFp;
+    use crate::tensor::EmuCtx;
+    use crate::util::Rng;
+
+    #[test]
+    fn forward_shapes_validate() {
+        let m = zoo::tiny_mlp(7);
+        assert_eq!(m.output_shape().unwrap(), vec![3]);
+        let bad = Tensor::filled(vec![5], 0.0f64);
+        assert!(m.forward::<f64>(&(), bad).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_forward() {
+        let m = zoo::tiny_cnn(11);
+        let v = model_to_json(&m);
+        let text = crate::json::to_string_pretty(&v);
+        let m2 = model_from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(m.name, m2.name);
+        assert_eq!(m.param_count(), m2.param_count());
+
+        let mut rng = Rng::new(5);
+        let n: usize = m.input_shape.iter().product();
+        let x: Vec<f64> = (0..n).map(|_| rng.range(0.0, 1.0)).collect();
+        let y1 = m
+            .forward::<f64>(&(), Tensor::new(m.input_shape.clone(), x.clone()))
+            .unwrap();
+        let y2 = m
+            .forward::<f64>(&(), Tensor::new(m2.input_shape.clone(), x))
+            .unwrap();
+        assert_eq!(y1.data(), y2.data(), "weights must round-trip bit-exactly");
+    }
+
+    #[test]
+    fn full_model_caa_sound_vs_emulated() {
+        // End-to-end soundness over a complete model with conv, pool,
+        // batchnorm, dense and softmax layers.
+        let m = zoo::tiny_cnn(23);
+        let mut rng = Rng::new(77);
+        let n: usize = m.input_shape.iter().product();
+        let xf: Vec<f64> = (0..n).map(|_| rng.range(0.0, 1.0)).collect();
+
+        let ctx = Ctx::new();
+        let xc = Tensor::new(
+            m.input_shape.clone(),
+            xf.iter().map(|&v| Caa::input(&ctx, Interval::point(v), v)).collect(),
+        );
+        let yc = m.forward::<Caa>(&ctx, xc).unwrap();
+        let yr = m
+            .forward::<f64>(&(), Tensor::new(m.input_shape.clone(), xf.clone()))
+            .unwrap();
+
+        for k in [8u32, 12, 16] {
+            let ec = EmuCtx { k };
+            let xe = Tensor::new(
+                m.input_shape.clone(),
+                xf.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
+            );
+            let ye = m.forward::<EmulatedFp>(&ec, xe).unwrap();
+            for i in 0..yr.len() {
+                crate::quant::check_against_bounds(
+                    &yc.data()[i],
+                    yr.data()[i],
+                    ye.data()[i].v,
+                    k,
+                    1e-12,
+                )
+                .unwrap_or_else(|e| panic!("k={k} output {i}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_caa_bounds_tight() {
+        // Table-I-style sanity: a small trained-ish MLP analyzed on a point
+        // input must give single-digit-u bounds.
+        let m = zoo::tiny_mlp(3);
+        let ctx = Ctx::new();
+        let n: usize = m.input_shape.iter().product();
+        let x = Tensor::new(
+            m.input_shape.clone(),
+            (0..n)
+                .map(|i| {
+                    let v = (i as f64) / (n as f64);
+                    Caa::input(&ctx, Interval::point(v), v)
+                })
+                .collect(),
+        );
+        let y = m.forward::<Caa>(&ctx, x).unwrap();
+        for v in y.data() {
+            assert!(v.abs_bound().is_finite());
+            assert!(v.abs_bound() < 100.0, "abs bound too loose: {}", v.abs_bound());
+        }
+    }
+
+    #[test]
+    fn load_save_tempfile() {
+        let m = zoo::tiny_mlp(1);
+        let dir = std::env::temp_dir().join("rigor_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.json");
+        m.save(&path).unwrap();
+        let l = Model::load(&path).unwrap();
+        assert_eq!(l.name, m.name);
+        assert_eq!(l.output_shape().unwrap(), m.output_shape().unwrap());
+    }
+}

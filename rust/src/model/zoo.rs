@@ -1,0 +1,159 @@
+//! Builder zoo: small randomly-initialized models with the topologies the
+//! paper evaluates, used by unit tests, property tests and ablation benches
+//! (the *trained* models come from `python/compile/aot.py` via JSON).
+
+use crate::layers::{Layer, Padding};
+use crate::model::Model;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+fn glorot(rng: &mut Rng, fan_in: usize, fan_out: usize, n: usize) -> Vec<f64> {
+    let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
+    (0..n).map(|_| rng.range(-limit, limit)).collect()
+}
+
+/// Dense layer with Glorot-uniform weights.
+pub fn dense(rng: &mut Rng, input: usize, units: usize) -> Layer {
+    Layer::Dense {
+        w: Tensor::new(vec![units, input], glorot(rng, input, units, units * input)),
+        b: (0..units).map(|_| rng.range(-0.05, 0.05)).collect(),
+    }
+}
+
+/// Conv2D layer with Glorot-uniform weights.
+pub fn conv2d(
+    rng: &mut Rng,
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    padding: Padding,
+) -> Layer {
+    let n = kh * kw * cin * cout;
+    Layer::Conv2D {
+        kernel: Tensor::new(vec![kh, kw, cin, cout], glorot(rng, kh * kw * cin, cout, n)),
+        bias: (0..cout).map(|_| rng.range(-0.05, 0.05)).collect(),
+        stride,
+        padding,
+    }
+}
+
+/// Depthwise Conv2D layer.
+pub fn depthwise(rng: &mut Rng, kh: usize, kw: usize, c: usize, stride: usize, padding: Padding) -> Layer {
+    let n = kh * kw * c;
+    Layer::DepthwiseConv2D {
+        kernel: Tensor::new(vec![kh, kw, c], glorot(rng, kh * kw, 1, n)),
+        bias: (0..c).map(|_| rng.range(-0.05, 0.05)).collect(),
+        stride,
+        padding,
+    }
+}
+
+/// BatchNorm with benign random statistics.
+pub fn batch_norm(rng: &mut Rng, c: usize) -> Layer {
+    Layer::BatchNorm {
+        gamma: (0..c).map(|_| rng.range(0.5, 1.5)).collect(),
+        beta: (0..c).map(|_| rng.range(-0.2, 0.2)).collect(),
+        mean: (0..c).map(|_| rng.range(-0.3, 0.3)).collect(),
+        variance: (0..c).map(|_| rng.range(0.2, 2.0)).collect(),
+        eps: 1e-3,
+    }
+}
+
+/// A 3-dense MLP classifier: `[8] -> 6 -> 4 -> 3` with ReLU + Softmax —
+/// the Digits topology in miniature.
+pub fn tiny_mlp(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    Model {
+        name: "tiny_mlp".into(),
+        input_shape: vec![8],
+        layers: vec![
+            dense(&mut rng, 8, 6),
+            Layer::Relu,
+            dense(&mut rng, 6, 4),
+            Layer::Relu,
+            dense(&mut rng, 4, 3),
+            Layer::Softmax,
+        ],
+    }
+}
+
+/// A small CNN: conv/batchnorm/relu, depthwise stage, pooling, dense,
+/// softmax — the MobileNet layer mix in miniature (`[6,6,1]` input).
+pub fn tiny_cnn(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    Model {
+        name: "tiny_cnn".into(),
+        input_shape: vec![6, 6, 1],
+        layers: vec![
+            conv2d(&mut rng, 3, 3, 1, 4, 1, Padding::Same),
+            batch_norm(&mut rng, 4),
+            Layer::Relu,
+            depthwise(&mut rng, 3, 3, 4, 1, Padding::Same),
+            Layer::Relu,
+            Layer::MaxPool2D { ph: 2, pw: 2 },
+            Layer::Flatten,
+            dense(&mut rng, 3 * 3 * 4, 5),
+            Layer::Softmax,
+        ],
+    }
+}
+
+/// The Pendulum topology (paper: two Dense layers, two tanh activations):
+/// `[2] -> Dense -> tanh -> Dense[1] -> tanh`.
+pub fn tiny_pendulum(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    Model {
+        name: "tiny_pendulum".into(),
+        input_shape: vec![2],
+        layers: vec![
+            dense(&mut rng, 2, 8),
+            Layer::Tanh,
+            dense(&mut rng, 8, 1),
+            Layer::Tanh,
+        ],
+    }
+}
+
+/// An MLP with configurable hidden width (perf-scaling experiments).
+pub fn scaled_mlp(seed: u64, input: usize, hidden: usize, classes: usize) -> Model {
+    let mut rng = Rng::new(seed);
+    Model {
+        name: format!("mlp_{input}_{hidden}_{classes}"),
+        input_shape: vec![input],
+        layers: vec![
+            dense(&mut rng, input, hidden),
+            Layer::Relu,
+            dense(&mut rng, hidden, hidden),
+            Layer::Relu,
+            dense(&mut rng, hidden, classes),
+            Layer::Softmax,
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_models_are_consistent() {
+        for m in [tiny_mlp(1), tiny_cnn(2), tiny_pendulum(3), scaled_mlp(4, 16, 32, 5)] {
+            let out = m.output_shape().expect("valid stack");
+            assert!(!out.is_empty());
+            assert!(m.param_count() > 0);
+        }
+    }
+
+    #[test]
+    fn zoo_deterministic_by_seed() {
+        let a = tiny_mlp(9);
+        let b = tiny_mlp(9);
+        let (Layer::Dense { w: wa, .. }, Layer::Dense { w: wb, .. }) = (&a.layers[0], &b.layers[0])
+        else {
+            panic!()
+        };
+        assert_eq!(wa.data(), wb.data());
+    }
+}

@@ -1,0 +1,153 @@
+//! Tiny property-based testing driver (replaces proptest, unavailable in
+//! the offline registry snapshot).
+//!
+//! A property is a closure over a [`crate::util::Rng`]; [`check`] runs it
+//! for `cases` seeds derived deterministically from a base seed and reports
+//! the first failing seed so a failure reproduces with
+//! `check_one(base, failing_case, f)`. No shrinking — generators are kept
+//! small-biased instead (mixing tiny magnitudes, zeros and sign flips),
+//! which in practice pinpoints failures as well for numeric code.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: u32,
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, base_seed: 0xC0FFEE }
+    }
+}
+
+/// Run `f` on `cfg.cases` independent deterministic RNGs. Panics with the
+/// case index and seed on first failure (so `cargo test` reports it).
+pub fn check_with<F: FnMut(&mut Rng)>(cfg: Config, name: &str, mut f: F) {
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed ^ ((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with prop::check_one({seed:#x}, ..)"
+            );
+        }
+    }
+}
+
+/// Run with the default config.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, f: F) {
+    check_with(Config::default(), name, f);
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_one<F: FnMut(&mut Rng)>(seed: u64, mut f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+/// Small-biased float generator: mixes exact zeros, tiny magnitudes, unit
+/// range, large magnitudes and sign flips — the corner cases numeric code
+/// actually trips on.
+pub fn gen_f64(rng: &mut Rng) -> f64 {
+    let sign = if rng.bool(0.5) { 1.0 } else { -1.0 };
+    match rng.below(10) {
+        0 => 0.0,
+        1 => sign * rng.range(1e-300, 1e-280),
+        2 => sign * rng.range(1e-10, 1e-6),
+        3 | 4 | 5 => sign * rng.range(0.0, 1.0),
+        6 | 7 => sign * rng.range(1.0, 100.0),
+        8 => sign * rng.range(100.0, 1e6),
+        _ => sign * rng.range(1e6, 1e12),
+    }
+}
+
+/// Float in a caller-given band, small-biased within it.
+pub fn gen_f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    debug_assert!(lo < hi);
+    if rng.bool(0.1) && lo <= 0.0 && 0.0 <= hi {
+        0.0
+    } else {
+        rng.range(lo, hi)
+    }
+}
+
+/// A random interval within [lo, hi], occasionally degenerate (a point).
+pub fn gen_interval(rng: &mut Rng, lo: f64, hi: f64) -> crate::interval::Interval {
+    let a = gen_f64_in(rng, lo, hi);
+    if rng.bool(0.15) {
+        crate::interval::Interval::point(a)
+    } else {
+        let b = gen_f64_in(rng, lo, hi);
+        crate::interval::Interval::new(a.min(b), a.max(b))
+    }
+}
+
+/// A random shape with bounded rank and elements.
+pub fn gen_shape(rng: &mut Rng, max_rank: usize, max_dim: usize) -> Vec<usize> {
+    let rank = 1 + rng.below(max_rank);
+    (0..rank).map(|_| 1 + rng.below(max_dim)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("commutativity", |rng| {
+            let a = gen_f64(rng);
+            let b = gen_f64(rng);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check_with(
+            Config { cases: 3, base_seed: 1 },
+            "always-fails",
+            |_| panic!("boom"),
+        );
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let mut out1 = Vec::new();
+        let mut out2 = Vec::new();
+        check_with(Config { cases: 5, base_seed: 9 }, "collect1", |rng| {
+            out1.push(gen_f64(rng))
+        });
+        check_with(Config { cases: 5, base_seed: 9 }, "collect2", |rng| {
+            out2.push(gen_f64(rng))
+        });
+        assert_eq!(out1, out2);
+    }
+
+    #[test]
+    fn gen_interval_well_formed() {
+        check("interval-wf", |rng| {
+            let i = gen_interval(rng, -100.0, 100.0);
+            assert!(i.lo() <= i.hi());
+        });
+    }
+
+    #[test]
+    fn gen_shape_bounds() {
+        check("shape-bounds", |rng| {
+            let s = gen_shape(rng, 4, 8);
+            assert!(!s.is_empty() && s.len() <= 4);
+            assert!(s.iter().all(|&d| (1..=8).contains(&d)));
+        });
+    }
+}

@@ -1,0 +1,257 @@
+//! Precision-k floating-point **emulation**.
+//!
+//! Rounds an f64 to a binary floating-point format with `k` mantissa bits
+//! (k includes the implicit leading 1, matching the paper's convention:
+//! binary32 has k = 24, so `u = 2^(1-k) = 2^-23`), round-to-nearest-even,
+//! unbounded exponent range (the paper's analysis excludes over/underflow;
+//! §IV argues DNN values are bounded so the exponent range is not the
+//! issue — precision is).
+//!
+//! This is the Rust twin of the Pallas `roundk` kernel
+//! (`python/compile/kernels/roundk.py`); `tests/` cross-check the two on
+//! the same inputs via the PJRT runtime, and the CAA soundness property
+//! tests use it to *witness* that real rounding errors stay below the CAA
+//! bounds.
+
+use crate::caa::Caa;
+
+/// The unit roundoff `u = 2^(1-k)` for precision `k`.
+pub fn unit_roundoff(k: u32) -> f64 {
+    debug_assert!((2..=53).contains(&k));
+    2f64.powi(1 - k as i32)
+}
+
+/// Round `x` to `k` mantissa bits (round-to-nearest-even), exponent range
+/// unbounded. `k = 53` is the identity on finite doubles.
+pub fn round_to_precision(x: f64, k: u32) -> f64 {
+    debug_assert!((2..=53).contains(&k));
+    if !x.is_finite() || x == 0.0 || k == 53 {
+        return x;
+    }
+    let drop = 53 - k; // mantissa bits to discard
+    let bits = x.to_bits();
+    let mantissa_mask = (1u64 << drop) - 1;
+    let tail = bits & mantissa_mask;
+    let truncated = bits & !mantissa_mask;
+    let half = 1u64 << (drop - 1);
+    // Round-to-nearest, ties to even (on the kept mantissa's LSB).
+    let round_up = tail > half || (tail == half && (truncated >> drop) & 1 == 1);
+    let out = if round_up {
+        truncated + (1u64 << drop) // may carry into the exponent: correct
+    } else {
+        truncated
+    };
+    f64::from_bits(out)
+    // NOTE on subnormals: because we interpret k against the f64
+    // representation, values down at the f64 subnormal floor lose the
+    // unbounded-exponent property; DNN quantities (|x| in ~[1e-45, 1e4])
+    // never get near it.
+}
+
+/// A scalar evaluated under emulated precision-k arithmetic: every binary
+/// operation result is re-rounded to `k` bits. Used by the soundness sweeps
+/// to *execute* the network the way a precision-k FPU would.
+#[derive(Clone, Copy, Debug)]
+pub struct EmulatedFp {
+    pub v: f64,
+    pub k: u32,
+}
+
+impl EmulatedFp {
+    pub fn new(x: f64, k: u32) -> Self {
+        EmulatedFp { v: round_to_precision(x, k), k }
+    }
+
+    fn wrap(&self, x: f64) -> Self {
+        EmulatedFp { v: round_to_precision(x, self.k), k: self.k }
+    }
+
+    pub fn add(self, o: Self) -> Self {
+        self.wrap(self.v + o.v)
+    }
+
+    pub fn sub(self, o: Self) -> Self {
+        self.wrap(self.v - o.v)
+    }
+
+    pub fn mul(self, o: Self) -> Self {
+        self.wrap(self.v * o.v)
+    }
+
+    pub fn div(self, o: Self) -> Self {
+        self.wrap(self.v / o.v)
+    }
+
+    pub fn exp(self) -> Self {
+        self.wrap(self.v.exp())
+    }
+
+    pub fn ln(self) -> Self {
+        self.wrap(self.v.ln())
+    }
+
+    pub fn sqrt(self) -> Self {
+        self.wrap(self.v.sqrt())
+    }
+
+    pub fn tanh(self) -> Self {
+        self.wrap(self.v.tanh())
+    }
+
+    pub fn sigmoid(self) -> Self {
+        self.wrap(1.0 / (1.0 + (-self.v).exp()))
+    }
+
+    pub fn max(self, o: Self) -> Self {
+        EmulatedFp { v: self.v.max(o.v), k: self.k }
+    }
+
+    pub fn min(self, o: Self) -> Self {
+        EmulatedFp { v: self.v.min(o.v), k: self.k }
+    }
+
+    pub fn relu(self) -> Self {
+        EmulatedFp { v: self.v.max(0.0), k: self.k }
+    }
+
+    pub fn neg(self) -> Self {
+        EmulatedFp { v: -self.v, k: self.k }
+    }
+}
+
+/// Check a concrete emulated run against CAA output bounds: given the CAA
+/// result for a quantity, the plain-f64 reference value `ref_v` for the same
+/// concrete input, and the emulated precision-k value `emu_v`, verify
+/// `|emu - ref| <= δ̄·u` and, when applicable, `|emu - ref|/|ref| <= ε̄·u`.
+/// The tiny `slack` covers the f64 reference's own roundoff (f64 is the
+/// "ideal" stand-in; its error is ~2^-52 per op, negligible vs u >= 2^-23).
+pub fn check_against_bounds(caa: &Caa, ref_v: f64, emu_v: f64, k: u32, slack: f64) -> Result<(), String> {
+    let u = unit_roundoff(k);
+    let err = (emu_v - ref_v).abs();
+    let abs_limit = caa.abs_bound() * u * (1.0 + 1e-9) + slack;
+    if caa.abs_bound().is_finite() && err > abs_limit {
+        return Err(format!(
+            "absolute error {err:.3e} exceeds δ̄·u = {:.3e} (δ̄ = {}, k = {k})",
+            caa.abs_bound() * u,
+            caa.abs_bound()
+        ));
+    }
+    if caa.rel_bound().is_finite() && ref_v != 0.0 {
+        let rel_err = err / ref_v.abs();
+        let rel_limit = caa.rel_bound() * u * (1.0 + 1e-9) + slack / ref_v.abs();
+        if rel_err > rel_limit {
+            return Err(format!(
+                "relative error {rel_err:.3e} exceeds ε̄·u = {:.3e} (ε̄ = {}, k = {k})",
+                caa.rel_bound() * u,
+                caa.rel_bound()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn unit_roundoff_values() {
+        assert_eq!(unit_roundoff(24), 2f64.powi(-23)); // binary32
+        assert_eq!(unit_roundoff(53), 2f64.powi(-52)); // binary64
+        assert_eq!(unit_roundoff(8), 2f64.powi(-7)); // the paper's Table I u
+    }
+
+    #[test]
+    fn round_is_idempotent() {
+        prop::check("roundk-idempotent", |rng| {
+            let x = prop::gen_f64(rng);
+            let k = 2 + rng.below(52) as u32;
+            let r = round_to_precision(x, k);
+            assert_eq!(round_to_precision(r, k), r, "x={x} k={k}");
+        });
+    }
+
+    #[test]
+    fn round_error_within_half_ulp() {
+        prop::check("roundk-halfulp", |rng| {
+            let x = prop::gen_f64(rng);
+            if x == 0.0 {
+                return;
+            }
+            let k = 4 + rng.below(50) as u32;
+            let r = round_to_precision(x, k);
+            let u = unit_roundoff(k);
+            // |r - x| <= (u/2)|x| up to the next-power-of-2 boundary niceties:
+            // use |x| (sound since |r-x| <= ulp(x)/2 <= u|x|/2 for normals).
+            assert!(
+                (r - x).abs() <= 0.5 * u * x.abs() * (1.0 + 1e-15),
+                "x={x:e} k={k} r={r:e} err={:e} lim={:e}",
+                (r - x).abs(),
+                0.5 * u * x.abs()
+            );
+        });
+    }
+
+    #[test]
+    fn round_monotone() {
+        prop::check("roundk-monotone", |rng| {
+            let a = prop::gen_f64(rng);
+            let b = prop::gen_f64(rng);
+            let k = 2 + rng.below(52) as u32;
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(round_to_precision(lo, k) <= round_to_precision(hi, k));
+        });
+    }
+
+    #[test]
+    fn known_values() {
+        // 1 + 2^-k rounds to 1 (tie to even); 1 + 1.5*2^-k rounds up.
+        for k in [8u32, 11, 24] {
+            let u = unit_roundoff(k); // 2^(1-k); mantissa step at 1.0 is u
+            assert_eq!(round_to_precision(1.0 + u / 4.0, k), 1.0);
+            assert_eq!(round_to_precision(1.0 + 0.76 * u, k), 1.0 + u);
+            // tie at exactly half a step: to even (stays 1.0)
+            assert_eq!(round_to_precision(1.0 + u / 2.0, k), 1.0);
+        }
+    }
+
+    #[test]
+    fn carry_into_exponent() {
+        // Just below a power of two, rounding up must carry cleanly.
+        let k = 8;
+        let x = 2.0 - 1e-12;
+        let r = round_to_precision(x, k);
+        assert_eq!(r, 2.0);
+    }
+
+    #[test]
+    fn k53_is_identity() {
+        prop::check("round53-id", |rng| {
+            let x = prop::gen_f64(rng);
+            assert_eq!(round_to_precision(x, 53), x);
+        });
+    }
+
+    #[test]
+    fn ties_to_even() {
+        let k = 4; // mantissa: 1.xxx
+        // 1.0625 = 1 + 1/16 is exactly between 1.000 and 1.125 (step 1/8):
+        // kept LSB of 1.000 is even -> stays down; of 1.125 we test next tie.
+        assert_eq!(round_to_precision(1.0625, k), 1.0);
+        // 1.1875 = 1.125 + 1/16, between 1.125 (odd LSB) and 1.25 -> up.
+        assert_eq!(round_to_precision(1.1875, k), 1.25);
+    }
+
+    #[test]
+    fn emulated_ops_round_each_step() {
+        let k = 8;
+        let a = EmulatedFp::new(1.0, k);
+        let b = EmulatedFp::new(3.0, k);
+        let q = a.div(b);
+        // 1/3 at 8 bits: error vs exact must be <= u/2 * |1/3|.
+        assert!((q.v - 1.0 / 3.0).abs() <= 0.5 * unit_roundoff(k) / 3.0 * 1.0001);
+        // And q.v must be representable at k bits.
+        assert_eq!(round_to_precision(q.v, k), q.v);
+    }
+}

@@ -1,0 +1,158 @@
+//! Result reporting: Table-I-style tables (console + markdown).
+
+use crate::analysis::ModelAnalysis;
+use crate::util::timing::human_duration;
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// Format a bound in units of u the way the paper prints them (`1.1u`,
+/// `22.4u`, or `-` when none exists).
+pub fn fmt_bound_u(b: f64) -> String {
+    if b.is_infinite() {
+        "-".to_string()
+    } else if b == 0.0 {
+        "0u".to_string()
+    } else if b >= 100.0 {
+        format!("{b:.0}u")
+    } else {
+        format!("{b:.1}u")
+    }
+}
+
+/// One row of the Table-I reproduction.
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    pub name: String,
+    pub max_abs_u: f64,
+    pub max_rel_u: f64,
+    pub time_per_class: Duration,
+    pub required_k: Option<u32>,
+}
+
+impl TableRow {
+    pub fn from_analysis(a: &ModelAnalysis) -> TableRow {
+        TableRow {
+            name: a.model_name.clone(),
+            max_abs_u: a.max_abs_u,
+            max_rel_u: a.max_rel_u,
+            time_per_class: Duration::from_secs_f64(a.secs_per_class()),
+            required_k: a.required_k,
+        }
+    }
+}
+
+/// Render rows as the paper's Table I (markdown).
+pub fn table1_markdown(rows: &[TableRow], p_star: f64, u_max_log2: i32) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "| model | max absolute error in u | max relative error in u | analysis time | required precision (p* = {p_star}) |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|");
+    for r in rows {
+        let k = match r.required_k {
+            Some(k) => format!("k = {k}"),
+            None => "-".to_string(),
+        };
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} per class | {} |",
+            r.name,
+            fmt_bound_u(r.max_abs_u),
+            fmt_bound_u(r.max_rel_u),
+            human_duration(r.time_per_class),
+            k
+        );
+    }
+    let _ = writeln!(s, "\nNumerical results for experiments with u < 2^{u_max_log2}.");
+    s
+}
+
+/// Render rows as an aligned console table.
+pub fn table1_console(rows: &[TableRow], p_star: f64) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<16} {:>12} {:>12} {:>16} {:>14}",
+        "model", "max abs (u)", "max rel (u)", "time/class", "required k"
+    );
+    let _ = writeln!(s, "{}", "-".repeat(74));
+    for r in rows {
+        let k = match r.required_k {
+            Some(k) => format!("k = {k}"),
+            None => "-".into(),
+        };
+        let _ = writeln!(
+            s,
+            "{:<16} {:>12} {:>12} {:>16} {:>14}",
+            r.name,
+            fmt_bound_u(r.max_abs_u),
+            fmt_bound_u(r.max_rel_u),
+            human_duration(r.time_per_class),
+            k
+        );
+    }
+    let _ = writeln!(s, "(p* = {p_star})");
+    s
+}
+
+/// Per-class detail table for one model analysis.
+pub fn per_class_console(a: &ModelAnalysis) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<8} {:>12} {:>12} {:>14} {:>10} {:>10}",
+        "class", "abs (u)", "rel (u)", "top-1 rel (u)", "predicted", "ambiguous"
+    );
+    for c in &a.per_class {
+        let _ = writeln!(
+            s,
+            "{:<8} {:>12} {:>12} {:>14} {:>10} {:>10}",
+            c.class,
+            fmt_bound_u(c.max_abs_u),
+            fmt_bound_u(c.max_rel_u),
+            fmt_bound_u(c.top1_rel_u),
+            c.predicted,
+            c.ambiguous
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> TableRow {
+        TableRow {
+            name: "digits".into(),
+            max_abs_u: 1.1,
+            max_rel_u: 3.4,
+            time_per_class: Duration::from_secs(12),
+            required_k: Some(8),
+        }
+    }
+
+    #[test]
+    fn bound_formatting() {
+        assert_eq!(fmt_bound_u(1.1), "1.1u");
+        assert_eq!(fmt_bound_u(22.43), "22.4u");
+        assert_eq!(fmt_bound_u(f64::INFINITY), "-");
+        assert_eq!(fmt_bound_u(0.0), "0u");
+        assert_eq!(fmt_bound_u(12345.0), "12345u");
+    }
+
+    #[test]
+    fn markdown_contains_paper_columns() {
+        let md = table1_markdown(&[row()], 0.60, -7);
+        assert!(md.contains("max absolute error in u"));
+        assert!(md.contains("| digits | 1.1u | 3.4u | 12.00 s per class | k = 8 |"));
+        assert!(md.contains("u < 2^-7"));
+    }
+
+    #[test]
+    fn console_renders() {
+        let c = table1_console(&[row()], 0.60);
+        assert!(c.contains("digits") && c.contains("k = 8"));
+    }
+}

@@ -1,0 +1,128 @@
+//! The artifact manifest (`artifacts/manifest.json`), written by
+//! `python/compile/aot.py`:
+//!
+//! ```json
+//! {
+//!   "artifacts": [
+//!     {"name": "digits", "variant": "f32", "path": "digits.f32.hlo.txt",
+//!      "input_shape": [784], "output_shape": [10]},
+//!     {"name": "digits", "variant": "k8", "path": "digits.k8.hlo.txt",
+//!      "input_shape": [784], "output_shape": [10]}
+//!   ]
+//! }
+//! ```
+
+use crate::json::Value;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// `"f32"` for the reference inference, `"k<bits>"` for emulated
+    /// precision-k variants (the Pallas roundk kernel baked into the HLO).
+    pub variant: String,
+    /// HLO text file, relative to the artifacts directory.
+    pub path: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn from_json(v: &Value) -> Result<Manifest> {
+        let arr = v
+            .get("artifacts")
+            .and_then(|a| a.as_array())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let get_str = |k: &str| -> Result<String> {
+                e.get(k)
+                    .and_then(|x| x.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow!("artifact {i}: missing string '{k}'"))
+            };
+            let get_shape = |k: &str| -> Result<Vec<usize>> {
+                e.get(k)
+                    .and_then(|x| x.as_usize_vec())
+                    .ok_or_else(|| anyhow!("artifact {i}: missing shape '{k}'"))
+            };
+            artifacts.push(ArtifactEntry {
+                name: get_str("name")?,
+                variant: get_str("variant")?,
+                path: get_str("path")?,
+                input_shape: get_shape("input_shape")?,
+                output_shape: get_shape("output_shape")?,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Manifest::from_json(&crate::json::parse(&text)?)
+    }
+
+    pub fn find(&self, name: &str, variant: &str) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name && a.variant == variant)
+    }
+
+    /// Distinct model names, in manifest order.
+    pub fn model_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for a in &self.artifacts {
+            if !names.contains(&a.name) {
+                names.push(a.name.clone());
+            }
+        }
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    #[test]
+    fn parse_and_lookup() {
+        let v = json::parse(
+            r#"{"artifacts": [
+                {"name": "digits", "variant": "f32", "path": "d.f32.hlo.txt",
+                 "input_shape": [784], "output_shape": [10]},
+                {"name": "digits", "variant": "k8", "path": "d.k8.hlo.txt",
+                 "input_shape": [784], "output_shape": [10]},
+                {"name": "pendulum", "variant": "f32", "path": "p.hlo.txt",
+                 "input_shape": [2], "output_shape": [1]}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::from_json(&v).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert!(m.find("digits", "k8").is_some());
+        assert!(m.find("digits", "k9").is_none());
+        assert_eq!(m.model_names(), vec!["digits", "pendulum"]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            r#"{}"#,
+            r#"{"artifacts": [{"name": "x"}]}"#,
+            r#"{"artifacts": [{"name": "x", "variant": "f32", "path": "p",
+                "input_shape": ["a"], "output_shape": [1]}]}"#,
+        ] {
+            assert!(Manifest::from_json(&json::parse(bad).unwrap()).is_err());
+        }
+    }
+}

@@ -1,0 +1,378 @@
+//! Tensors generic over the scalar arithmetic.
+//!
+//! The inference engine (replacing frugally-deep + Eigen) is written once,
+//! generic over [`Scalar`]; binding a different arithmetic into the same
+//! network evaluation is exactly the original tool's trick of overloading
+//! Eigen's scalar type. Three arithmetics are provided:
+//!
+//! * `f64` — the plain high-precision trace (the "reference" run),
+//! * [`crate::quant::EmulatedFp`] — emulated precision-k FP (witness runs),
+//! * [`crate::caa::Caa`] — the paper's analysis arithmetic.
+
+use crate::caa::{self, Caa};
+use crate::quant::EmulatedFp;
+
+/// Scalar arithmetic the inference engine is generic over. `Ctx` carries
+/// per-analysis configuration (the CAA context; `()` for plain floats; the
+/// precision for emulated FP).
+pub trait Scalar: Clone {
+    type Ctx: Sync;
+
+    /// Embed a learned parameter (pays a representation rounding).
+    fn param(ctx: &Self::Ctx, x: f64) -> Self;
+    /// Embed an exactly-representable constant (0, 1, small integers).
+    fn exact(ctx: &Self::Ctx, x: f64) -> Self;
+
+    fn add(&self, o: &Self, ctx: &Self::Ctx) -> Self;
+    fn sub(&self, o: &Self, ctx: &Self::Ctx) -> Self;
+    fn mul(&self, o: &Self, ctx: &Self::Ctx) -> Self;
+    fn div(&self, o: &Self, ctx: &Self::Ctx) -> Self;
+    fn exp(&self, ctx: &Self::Ctx) -> Self;
+    fn sqrt(&self, ctx: &Self::Ctx) -> Self;
+    fn tanh(&self, ctx: &Self::Ctx) -> Self;
+    fn sigmoid(&self, ctx: &Self::Ctx) -> Self;
+    fn relu(&self, ctx: &Self::Ctx) -> Self;
+    fn max(&self, o: &Self, ctx: &Self::Ctx) -> Self;
+
+    /// Maximum over a slice. The CAA implementation additionally labels
+    /// every element with the result (the paper's control-flow insight),
+    /// which is why this takes `&mut`.
+    fn max_many(ctx: &Self::Ctx, xs: &mut [Self]) -> Self {
+        assert!(!xs.is_empty());
+        let mut m = xs[0].clone();
+        for x in &xs[1..] {
+            m = m.max(x, ctx);
+        }
+        m
+    }
+
+    /// Multiply by a learned scalar parameter (pays the parameter's
+    /// representation rounding plus the multiplication rounding). The dot
+    /// product hot path; CAA overrides it with a fused implementation.
+    fn mul_param(&self, w: f64, ctx: &Self::Ctx) -> Self {
+        Self::param(ctx, w).mul(self, ctx)
+    }
+
+    /// Clamp the *knowledge* about this value to `[0, 1]` without touching
+    /// the value itself: a no-op for concrete arithmetics; for CAA it
+    /// intersects the range enclosures. Callers may only use it where the
+    /// membership is mathematically guaranteed (e.g. softmax outputs: each
+    /// summand of the denominator is nonnegative and RN summation of
+    /// nonnegatives dominates every summand, so the computed quotient is
+    /// `<= 1`, and rounding is monotone).
+    fn clamp01(&self, _ctx: &Self::Ctx) -> Self {
+        self.clone()
+    }
+
+    /// The concrete trace value (for argmax / reporting).
+    fn value(&self) -> f64;
+}
+
+impl Scalar for f64 {
+    type Ctx = ();
+
+    fn param(_: &(), x: f64) -> f64 {
+        x
+    }
+    fn exact(_: &(), x: f64) -> f64 {
+        x
+    }
+    fn add(&self, o: &f64, _: &()) -> f64 {
+        self + o
+    }
+    fn sub(&self, o: &f64, _: &()) -> f64 {
+        self - o
+    }
+    fn mul(&self, o: &f64, _: &()) -> f64 {
+        self * o
+    }
+    fn div(&self, o: &f64, _: &()) -> f64 {
+        self / o
+    }
+    fn exp(&self, _: &()) -> f64 {
+        f64::exp(*self)
+    }
+    fn sqrt(&self, _: &()) -> f64 {
+        f64::sqrt(*self)
+    }
+    fn tanh(&self, _: &()) -> f64 {
+        f64::tanh(*self)
+    }
+    fn sigmoid(&self, _: &()) -> f64 {
+        1.0 / (1.0 + f64::exp(-self))
+    }
+    fn relu(&self, _: &()) -> f64 {
+        f64::max(*self, 0.0)
+    }
+    fn max(&self, o: &f64, _: &()) -> f64 {
+        f64::max(*self, *o)
+    }
+    fn value(&self) -> f64 {
+        *self
+    }
+}
+
+/// Context for emulated precision-k runs: the mantissa bit count.
+#[derive(Clone, Copy, Debug)]
+pub struct EmuCtx {
+    pub k: u32,
+}
+
+impl Scalar for EmulatedFp {
+    type Ctx = EmuCtx;
+
+    fn param(c: &EmuCtx, x: f64) -> Self {
+        EmulatedFp::new(x, c.k)
+    }
+    fn exact(c: &EmuCtx, x: f64) -> Self {
+        debug_assert_eq!(crate::quant::round_to_precision(x, c.k), x);
+        EmulatedFp { v: x, k: c.k }
+    }
+    fn add(&self, o: &Self, _: &EmuCtx) -> Self {
+        EmulatedFp::add(*self, *o)
+    }
+    fn sub(&self, o: &Self, _: &EmuCtx) -> Self {
+        EmulatedFp::sub(*self, *o)
+    }
+    fn mul(&self, o: &Self, _: &EmuCtx) -> Self {
+        EmulatedFp::mul(*self, *o)
+    }
+    fn div(&self, o: &Self, _: &EmuCtx) -> Self {
+        EmulatedFp::div(*self, *o)
+    }
+    fn exp(&self, _: &EmuCtx) -> Self {
+        EmulatedFp::exp(*self)
+    }
+    fn sqrt(&self, _: &EmuCtx) -> Self {
+        EmulatedFp::sqrt(*self)
+    }
+    fn tanh(&self, _: &EmuCtx) -> Self {
+        EmulatedFp::tanh(*self)
+    }
+    fn sigmoid(&self, _: &EmuCtx) -> Self {
+        EmulatedFp::sigmoid(*self)
+    }
+    fn relu(&self, _: &EmuCtx) -> Self {
+        EmulatedFp::relu(*self)
+    }
+    fn max(&self, o: &Self, _: &EmuCtx) -> Self {
+        EmulatedFp::max(*self, *o)
+    }
+    fn value(&self) -> f64 {
+        self.v
+    }
+}
+
+impl Scalar for Caa {
+    type Ctx = caa::Ctx;
+
+    fn param(ctx: &caa::Ctx, x: f64) -> Self {
+        Caa::param(ctx, x)
+    }
+    fn exact(_: &caa::Ctx, x: f64) -> Self {
+        Caa::exact(x)
+    }
+    fn add(&self, o: &Self, ctx: &caa::Ctx) -> Self {
+        Caa::add(self, o, ctx)
+    }
+    fn sub(&self, o: &Self, ctx: &caa::Ctx) -> Self {
+        Caa::sub(self, o, ctx)
+    }
+    fn mul(&self, o: &Self, ctx: &caa::Ctx) -> Self {
+        Caa::mul(self, o, ctx)
+    }
+    fn div(&self, o: &Self, ctx: &caa::Ctx) -> Self {
+        Caa::div(self, o, ctx)
+    }
+    fn exp(&self, ctx: &caa::Ctx) -> Self {
+        Caa::exp(self, ctx)
+    }
+    fn sqrt(&self, ctx: &caa::Ctx) -> Self {
+        Caa::sqrt(self, ctx)
+    }
+    fn tanh(&self, ctx: &caa::Ctx) -> Self {
+        Caa::tanh(self, ctx)
+    }
+    fn sigmoid(&self, ctx: &caa::Ctx) -> Self {
+        Caa::sigmoid(self, ctx)
+    }
+    fn relu(&self, ctx: &caa::Ctx) -> Self {
+        Caa::relu(self, ctx)
+    }
+    fn max(&self, o: &Self, ctx: &caa::Ctx) -> Self {
+        Caa::max(self, o, ctx)
+    }
+    fn max_many(ctx: &caa::Ctx, xs: &mut [Self]) -> Self {
+        crate::caa::max_many(ctx, xs)
+    }
+    fn mul_param(&self, w: f64, ctx: &caa::Ctx) -> Self {
+        Caa::mul_const(self, w, ctx)
+    }
+    fn clamp01(&self, _ctx: &caa::Ctx) -> Self {
+        self.clamp_range(crate::interval::Interval::new(0.0, 1.0))
+    }
+    fn value(&self) -> f64 {
+        self.fp()
+    }
+}
+
+/// A dense row-major tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor<S> {
+    shape: Vec<usize>,
+    data: Vec<S>,
+}
+
+impl<S: Clone> Tensor<S> {
+    pub fn new(shape: Vec<usize>, data: Vec<S>) -> Tensor<S> {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn filled(shape: Vec<usize>, v: S) -> Tensor<S> {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[S] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [S] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<S> {
+        self.data
+    }
+
+    /// Flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(ix < dim, "index {ix} out of bound {dim} at axis {i}");
+            off = off * dim + ix;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> &S {
+        &self.data[self.offset(idx)]
+    }
+
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut S {
+        let off = self.offset(idx);
+        &mut self.data[off]
+    }
+
+    /// Reshape without moving data (sizes must agree).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor<S> {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape size mismatch"
+        );
+        self.shape = shape;
+        self
+    }
+
+    pub fn map<T: Clone>(&self, f: impl Fn(&S) -> T) -> Tensor<T> {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(f).collect() }
+    }
+}
+
+impl Tensor<f64> {
+    /// Lift an f64 tensor into another arithmetic as parameters.
+    pub fn lift_params<S: Scalar>(&self, ctx: &S::Ctx) -> Tensor<S> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| S::param(ctx, x)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_row_major() {
+        let t = Tensor::new(vec![2, 3, 4], (0..24).map(|x| x as f64).collect());
+        assert_eq!(*t.at(&[0, 0, 0]), 0.0);
+        assert_eq!(*t.at(&[0, 0, 3]), 3.0);
+        assert_eq!(*t.at(&[0, 1, 0]), 4.0);
+        assert_eq!(*t.at(&[1, 0, 0]), 12.0);
+        assert_eq!(*t.at(&[1, 2, 3]), 23.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = t.reshape(vec![6]);
+        assert_eq!(*r.at(&[4]), 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let _ = Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn scalar_f64_roundtrip() {
+        let c = ();
+        let a = <f64 as Scalar>::param(&c, 2.0);
+        let b = a.mul(&a, &c).add(&<f64 as Scalar>::exact(&c, 1.0), &c);
+        assert_eq!(b.value(), 5.0);
+    }
+
+    #[test]
+    fn scalar_emulated_rounds() {
+        let c = EmuCtx { k: 8 };
+        let third = Scalar::div(
+            &<EmulatedFp as Scalar>::param(&c, 1.0),
+            &<EmulatedFp as Scalar>::param(&c, 3.0),
+            &c,
+        );
+        assert_ne!(third.value(), 1.0 / 3.0, "8-bit third differs from f64 third");
+        assert!((third.value() - 1.0 / 3.0).abs() < 3e-3);
+    }
+
+    #[test]
+    fn scalar_caa_same_engine_code() {
+        let ctx = crate::caa::Ctx::new();
+        let a = <Caa as Scalar>::param(&ctx, 1.5);
+        let b = Scalar::tanh(&Scalar::relu(&a, &ctx), &ctx);
+        assert!((b.value() - f64::tanh(1.5)).abs() < 1e-15);
+        assert!(b.abs_bound().is_finite());
+    }
+
+    #[test]
+    fn lift_params() {
+        let t = Tensor::new(vec![2], vec![0.5, -0.25]);
+        let ctx = crate::caa::Ctx::new();
+        let l: Tensor<Caa> = t.lift_params(&ctx);
+        assert_eq!(l.at(&[1]).fp(), -0.25);
+    }
+
+    #[test]
+    fn max_many_default_impl() {
+        let c = ();
+        let mut xs = vec![1.0f64, 5.0, 3.0];
+        let m = <f64 as Scalar>::max_many(&c, &mut xs);
+        assert_eq!(m, 5.0);
+    }
+}

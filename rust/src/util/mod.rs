@@ -1,0 +1,7 @@
+//! Small shared utilities: deterministic PRNG, timing helpers.
+
+pub mod rng;
+pub mod timing;
+
+pub use rng::Rng;
+pub use timing::Stopwatch;

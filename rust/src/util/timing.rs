@@ -1,0 +1,72 @@
+//! Wall-clock timing helpers used by the analysis driver and the bench
+//! harness (Table I reports an "analysis time" column).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the elapsed time of the lap just finished.
+    pub fn lap(&mut self) -> Duration {
+        let d = self.start.elapsed();
+        self.start = Instant::now();
+        d
+    }
+}
+
+/// Render a duration in a human unit (`12.3 s`, `4.5 ms`, `780 µs`, `2.1 h`),
+/// matching the mixed units the paper's Table I uses.
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 3600.0 {
+        format!("{:.1} h", s / 3600.0)
+    } else if s >= 60.0 {
+        format!("{:.1} min", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{:.2} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.0} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_units() {
+        assert_eq!(human_duration(Duration::from_secs_f64(7200.0)), "2.0 h");
+        assert_eq!(human_duration(Duration::from_secs_f64(90.0)), "1.5 min");
+        assert_eq!(human_duration(Duration::from_secs_f64(12.0)), "12.00 s");
+        assert_eq!(human_duration(Duration::from_secs_f64(0.1)), "100.00 ms");
+        assert_eq!(human_duration(Duration::from_secs_f64(5e-5)), "50 µs");
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.secs();
+        let b = sw.secs();
+        assert!(b >= a);
+    }
+}

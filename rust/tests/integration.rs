@@ -1,0 +1,341 @@
+//! Cross-module integration tests that need no AOT artifacts: the full
+//! analysis pipeline (model zoo -> engine -> CAA -> margins -> report)
+//! plus coordinator fan-out, on small randomly-initialized networks.
+
+use rigor::analysis::{self, analyze_model, AnalysisConfig, Margins};
+use rigor::caa::{Caa, Ctx};
+use rigor::coordinator::{analyze_model_parallel, Pool};
+use rigor::data::{synthetic, Dataset};
+use rigor::model::{model_from_json, model_to_json, zoo, Model};
+use rigor::quant::EmulatedFp;
+use rigor::report::{table1_console, table1_markdown, TableRow};
+use rigor::tensor::{EmuCtx, Tensor};
+use rigor::util::Rng;
+
+fn digits_like_dataset(n: usize) -> Dataset {
+    let mut rng = Rng::new(3);
+    synthetic::digits(&mut rng, 8, n.div_ceil(10), 0.05)
+}
+
+#[test]
+fn full_pipeline_zoo_mlp_to_table() {
+    // Build a digits-like dataset + mlp, analyze, and render a Table-I row.
+    let mut rng = Rng::new(10);
+    let data = synthetic::digits(&mut rng, 8, 2, 0.05);
+    let model = zoo::scaled_mlp(1, 64, 32, 10);
+    let mut cfg = AnalysisConfig::default();
+    cfg.exact_inputs = true; // integer pixels
+    let a = analyze_model(&model, &data, &cfg).unwrap();
+    assert_eq!(a.per_class.len(), 10);
+    assert!(a.max_abs_u.is_finite());
+    assert!(a.required_k.is_some());
+
+    let row = TableRow::from_analysis(&a);
+    let md = table1_markdown(&[row.clone()], 0.60, -7);
+    assert!(md.contains(&a.model_name));
+    let console = table1_console(&[row], 0.60);
+    assert!(console.contains("required k"));
+}
+
+#[test]
+fn parallel_equals_sequential_on_real_sized_fanout() {
+    let data = digits_like_dataset(30);
+    let model = zoo::scaled_mlp(2, 64, 48, 10);
+    let cfg = AnalysisConfig::default();
+    let seq = analyze_model(&model, &data, &cfg).unwrap();
+    let pool = Pool::new(4, 8);
+    let par = analyze_model_parallel(&model, &data, &cfg, &pool).unwrap();
+    assert_eq!(seq.max_abs_u, par.max_abs_u);
+    assert_eq!(seq.max_rel_u, par.max_rel_u);
+    assert_eq!(seq.required_k, par.required_k);
+    assert_eq!(pool.metrics().submitted, 10);
+    // The worker-side completion counter may lag the batch's own result
+    // barrier by a few instructions; give it a moment.
+    for _ in 0..100 {
+        if pool.metrics().completed == 10 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert_eq!(pool.metrics().completed, 10);
+}
+
+#[test]
+fn model_json_roundtrip_through_files_preserves_analysis() {
+    let model = zoo::tiny_cnn(5);
+    let dir = std::env::temp_dir().join("rigor_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cnn.json");
+    model.save(&path).unwrap();
+    let loaded = Model::load(&path).unwrap();
+
+    let mut rng = Rng::new(8);
+    let data = synthetic::color_blobs(&mut rng, 6, 3, 1);
+    // tiny_cnn takes [6,6,1]; adapt: grayscale one channel of blobs.
+    let inputs: Vec<Vec<f64>> = data
+        .inputs
+        .iter()
+        .map(|img| img.iter().step_by(3).cloned().collect())
+        .collect();
+    let ds = Dataset { input_shape: vec![6, 6, 1], inputs, labels: data.labels.clone() };
+
+    let a1 = analyze_model(&model, &ds, &AnalysisConfig::default()).unwrap();
+    let a2 = analyze_model(&loaded, &ds, &AnalysisConfig::default()).unwrap();
+    assert_eq!(a1.max_abs_u, a2.max_abs_u, "JSON round-trip must not perturb analysis");
+}
+
+#[test]
+fn emulated_precision_argmax_agreement_rises_with_k() {
+    // The motivating observation (E-acc-vs-k) on the engine-only stack:
+    // classification agreement with the f64 reference improves with k.
+    let model = zoo::scaled_mlp(7, 64, 48, 10);
+    let data = digits_like_dataset(40);
+    let mut agree = Vec::new();
+    for k in [3u32, 6, 10, 16] {
+        let ec = EmuCtx { k };
+        let mut same = 0;
+        for input in &data.inputs {
+            let xr = Tensor::new(model.input_shape.clone(), input.clone());
+            let yr = model.forward::<f64>(&(), xr).unwrap();
+            let xe = Tensor::new(
+                model.input_shape.clone(),
+                input.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
+            );
+            let ye = model.forward::<EmulatedFp>(&ec, xe).unwrap();
+            let am_r = argmax(yr.data());
+            let am_e = argmax_emu(ye.data());
+            if am_r == am_e {
+                same += 1;
+            }
+        }
+        agree.push(same);
+    }
+    assert!(
+        agree.last().unwrap() >= agree.first().unwrap(),
+        "agreement must not degrade with precision: {agree:?}"
+    );
+    assert_eq!(
+        *agree.last().unwrap(),
+        data.inputs.len(),
+        "k=16 must match f64 argmax everywhere: {agree:?}"
+    );
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+fn argmax_emu(xs: &[EmulatedFp]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.v.partial_cmp(&b.1.v).unwrap())
+        .unwrap()
+        .0
+}
+
+#[test]
+fn required_k_guarantee_holds_empirically() {
+    // If the analysis says precision k is safe for p* and the top-1 trace
+    // confidence is >= p*, then the emulated-k run must predict the same
+    // class. (The *contract* of the paper's §IV.)
+    let model = zoo::scaled_mlp(21, 64, 48, 10);
+    let data = digits_like_dataset(30);
+    let mut cfg = AnalysisConfig::default();
+    cfg.exact_inputs = true;
+    cfg.p_star = 0.60;
+    let a = analyze_model(&model, &data, &cfg).unwrap();
+    let Some(k) = a.required_k else {
+        return; // no guarantee possible for this random net — vacuous
+    };
+    let k = k.min(24);
+    let ec = EmuCtx { k };
+    for input in &data.inputs {
+        let xr = Tensor::new(model.input_shape.clone(), input.clone());
+        let yr = model.forward::<f64>(&(), xr).unwrap();
+        let top = argmax(yr.data());
+        if yr.data()[top] < cfg.p_star {
+            continue; // contract only covers confident predictions
+        }
+        let xe = Tensor::new(
+            model.input_shape.clone(),
+            input.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
+        );
+        let ye = model.forward::<EmulatedFp>(&ec, xe).unwrap();
+        assert_eq!(
+            argmax_emu(ye.data()),
+            top,
+            "k={k} flipped a confident prediction — the §IV guarantee failed"
+        );
+    }
+}
+
+#[test]
+fn softmax_theory_vs_caa_consistency() {
+    // The 11/2 softmax bound (eq. 11) must also be visible in CAA output:
+    // feeding logits with absolute bound δ̄ through the CAA softmax yields
+    // relative bounds <= ~5.5 δ̄ + rounding terms.
+    let ctx = Ctx::new();
+    let delta = 2.0; // logits carry 2u absolute error
+    let logits: Vec<Caa> = [1.0f64, 0.2, -0.7, 2.2]
+        .iter()
+        .map(|&v| {
+            Caa::from_parts(
+                &ctx,
+                v,
+                rigor::interval::Interval::point(v),
+                rigor::interval::Interval::new(v - delta * ctx.u_max, v + delta * ctx.u_max),
+                delta,
+                f64::INFINITY,
+            )
+        })
+        .collect();
+    let out = rigor::layers::softmax_vec(&ctx, &logits);
+    for o in &out {
+        assert!(o.rel_bound().is_finite());
+        // eq. (11) scale: 5.5 * δ̄ = 11; allow rounding-term headroom.
+        assert!(
+            o.rel_bound() <= 5.5 * delta + 8.0,
+            "rel bound {} far above the 11/2 law",
+            o.rel_bound()
+        );
+    }
+    // Empirical cross-check of the law itself.
+    let worst = analysis::softmax_theory::max_amplification(3, 10, 1e-4, 100);
+    assert!(worst <= 5.5);
+}
+
+#[test]
+fn margins_and_report_end_to_end() {
+    let m = Margins::new(0.6).unwrap();
+    assert!(m.abs_margin() > 0.0 && m.rel_margin() > 0.0);
+    // Rendering with a missing bound (pendulum-style).
+    let rows = vec![TableRow {
+        name: "pendulum".into(),
+        max_abs_u: 1.7,
+        max_rel_u: f64::INFINITY,
+        time_per_class: std::time::Duration::from_millis(100),
+        required_k: None,
+    }];
+    let md = table1_markdown(&rows, 0.6, -7);
+    assert!(md.contains("| pendulum | 1.7u | - |"));
+}
+
+#[test]
+fn model_to_json_value_is_parseable_text() {
+    let m = zoo::tiny_pendulum(9);
+    let text = rigor::json::to_string_pretty(&model_to_json(&m));
+    let back = model_from_json(&rigor::json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.name, "tiny_pendulum");
+}
+
+// ---------------------------------------------------------------------------
+// Mixed precision (paper §VI future work, implemented in analysis::mixed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixed_tuning_on_trained_pendulum() {
+    use rigor::analysis::{certify_min_precision, mixed};
+    use rigor::runtime::Runtime;
+    let model_path = Runtime::default_dir().join("models/pendulum.json");
+    let (model, data) = if model_path.exists() {
+        (
+            Model::load(&model_path).unwrap(),
+            Dataset::load(&Runtime::default_dir().join("data/pendulum_eval.json")).unwrap(),
+        )
+    } else {
+        (zoo::tiny_pendulum(3), synthetic::pendulum_grid(3))
+    };
+    let mut cfg = AnalysisConfig::default();
+    cfg.p_star = 0.75;
+    cfg.exact_inputs = true;
+    let Some((k0, _)) = certify_min_precision(&model, &data, &cfg, 6..=30).unwrap() else {
+        return; // cannot certify this net at all — vacuous for random nets
+    };
+    let tuned = mixed::tune_mixed(&model, &data, &cfg, k0, 4).unwrap();
+    assert!(tuned.certified);
+    assert_eq!(tuned.ks.len(), model.layers.len());
+    assert!(tuned.ks.iter().all(|&k| k <= k0));
+
+    // Witness: the emulated mixed execution stays within the mixed bounds.
+    for sample in data.inputs.iter().take(5) {
+        let bounds = mixed::analyze_sample_mixed(&model, &cfg, &tuned.ks, sample).unwrap();
+        let emu = mixed::forward_mixed_emulated(&model, &tuned.ks, sample).unwrap();
+        let reference = model
+            .forward::<f64>(&(), Tensor::new(model.input_shape.clone(), sample.clone()))
+            .unwrap();
+        let u_out = rigor::quant::unit_roundoff(*tuned.ks.last().unwrap());
+        for i in 0..emu.len() {
+            let err = (emu[i] - reference.data()[i]).abs();
+            let bound = bounds[i].abs_bound() * u_out;
+            assert!(err <= bound * (1.0 + 1e-9) + 1e-12, "mixed bound violated");
+        }
+    }
+}
+
+#[test]
+fn cli_app_parses_all_commands() {
+    // The CLI is part of the public surface; exercise its parser against
+    // every documented command line from the README.
+    use rigor::cli::{App, CmdSpec, OptSpec};
+    let app = App {
+        name: "t",
+        about: "t",
+        commands: vec![CmdSpec {
+            name: "analyze",
+            help: "",
+            opts: vec![
+                OptSpec { name: "model", help: "", default: Some("m".into()) },
+                OptSpec { name: "exact-inputs", help: "", default: None },
+            ],
+        }],
+    };
+    let p = app
+        .parse(&["analyze".into(), "--model=x.json".into(), "--exact-inputs".into()])
+        .unwrap();
+    assert_eq!(p.get("model"), Some("x.json"));
+    assert!(p.flag("exact-inputs"));
+}
+
+#[test]
+fn layer_error_paths_report_context() {
+    // Wrong-shape inputs produce contextual errors, not panics.
+    let m = zoo::tiny_cnn(1);
+    let bad = Tensor::filled(vec![5, 5, 1], 0.5f64);
+    let err = m.forward::<f64>(&(), bad).unwrap_err().to_string();
+    assert!(err.contains("expects input"), "{err}");
+
+    let d = Layer::Dense {
+        w: rigor::tensor::Tensor::new(vec![2, 3], vec![0.0; 6]),
+        b: vec![0.0; 2],
+    };
+    assert!(d.output_shape(&[4]).is_err());
+}
+
+use rigor::layers::Layer;
+
+#[test]
+fn caa_analysis_deterministic_across_runs() {
+    // The whole pipeline is deterministic: same model + sample => exact
+    // same bounds (needed for reproducible EXPERIMENTS.md numbers).
+    let m = zoo::tiny_cnn(77);
+    let n: usize = m.input_shape.iter().product();
+    let sample: Vec<f64> = (0..n).map(|i| (i % 5) as f64 / 5.0).collect();
+    let cfg = AnalysisConfig::default();
+    let a = rigor::analysis::analyze_class(&m, &cfg, 0, &sample).unwrap();
+    let b = rigor::analysis::analyze_class(&m, &cfg, 0, &sample).unwrap();
+    assert_eq!(a.max_abs_u, b.max_abs_u);
+    assert_eq!(a.max_rel_u, b.max_rel_u);
+    assert_eq!(a.predicted, b.predicted);
+}
+
+#[test]
+fn report_handles_all_bound_shapes() {
+    use rigor::report::fmt_bound_u;
+    assert_eq!(fmt_bound_u(f64::INFINITY), "-");
+    assert_eq!(fmt_bound_u(0.0), "0u");
+    assert!(fmt_bound_u(1e9).ends_with('u'));
+}

@@ -1,0 +1,164 @@
+//! End-to-end tests over the AOT artifacts: PJRT execution, agreement
+//! between the Rust engine and the lowered JAX/Pallas computation, and the
+//! Rust/Pallas roundk cross-check. All tests skip (with a notice) until
+//! `make artifacts` has produced `artifacts/manifest.json`.
+
+use rigor::data::Dataset;
+use rigor::model::Model;
+use rigor::quant::round_to_precision;
+use rigor::runtime::Runtime;
+use rigor::tensor::Tensor;
+use rigor::util::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !Runtime::artifacts_available() {
+        eprintln!("[skip] artifacts not built; run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::open(&Runtime::default_dir()).expect("open artifacts"))
+}
+
+fn load_model(name: &str) -> Model {
+    Model::load(&Runtime::default_dir().join("models").join(format!("{name}.json")))
+        .expect("load model json")
+}
+
+fn load_data(name: &str) -> Dataset {
+    Dataset::load(
+        &Runtime::default_dir()
+            .join("data")
+            .join(format!("{name}_eval.json")),
+    )
+    .expect("load dataset")
+}
+
+#[test]
+fn manifest_covers_all_models_and_variants() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let names = rt.manifest.model_names();
+    for m in ["digits", "mobilenet_mini", "pendulum", "roundk"] {
+        assert!(names.iter().any(|n| n == m), "missing artifact family {m}");
+    }
+    for m in ["digits", "mobilenet_mini", "pendulum"] {
+        assert!(rt.manifest.find(m, "f32").is_some());
+        assert!(!rt.precision_variants(m).is_empty());
+    }
+}
+
+#[test]
+fn pjrt_runs_and_matches_rust_engine_f64() {
+    // The same trained weights evaluated by (a) the PJRT-compiled
+    // JAX/Pallas graph in f32 and (b) the Rust engine in f64 must agree to
+    // f32 tolerance — proving the JSON export, the engine semantics and
+    // the AOT path all describe the same network.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    for name in ["digits", "mobilenet_mini", "pendulum"] {
+        let model = load_model(name);
+        let data = load_data(name);
+        for (si, sample) in data.inputs.iter().take(5).enumerate() {
+            let input_f32: Vec<f32> = sample.iter().map(|&v| v as f32).collect();
+            let got = rt.run(name, "f32", &input_f32).expect("pjrt run");
+            let want = model
+                .forward::<f64>(&(), Tensor::new(model.input_shape.clone(), sample.clone()))
+                .expect("rust engine run");
+            assert_eq!(got.len(), want.len(), "{name} output size");
+            for (i, (g, w)) in got.iter().zip(want.data()).enumerate() {
+                let tol = 1e-3 * (1.0 + w.abs());
+                assert!(
+                    ((*g as f64) - w).abs() < tol,
+                    "{name} sample {si} output {i}: pjrt={g} rust={w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn roundk_kernel_matches_rust_quant() {
+    // The Pallas roundk kernel (through PJRT) and quant::round_to_precision
+    // are twins: bit-identical on f32 inputs.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(1234);
+    for k in rt.precision_variants("roundk") {
+        let input: Vec<f32> = (0..64)
+            .map(|i| match i % 4 {
+                0 => rng.range(-1.0, 1.0) as f32,
+                1 => rng.range(-1e4, 1e4) as f32,
+                2 => rng.range(-1e-4, 1e-4) as f32,
+                _ => rng.below(256) as f32,
+            })
+            .collect();
+        let got = rt
+            .run("roundk", &format!("k{k}"), &input)
+            .expect("roundk run");
+        for (i, (g, x)) in got.iter().zip(&input).enumerate() {
+            // Round the f32 (exactly representable in f64) with the Rust
+            // twin; results must agree bit-for-bit.
+            let want = round_to_precision(*x as f64, k) as f32;
+            assert!(
+                g.to_bits() == want.to_bits(),
+                "k={k} elem {i}: pallas {g:?} vs rust {want:?} (x={x:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn precision_variants_degrade_gracefully() {
+    // Storage-emulated k variants stay close to f32 for large k and drift
+    // monotonically-ish as k shrinks; argmax survives at k=8 on confident
+    // samples (the paper's headline).
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let data = load_data("digits");
+    let sample: Vec<f32> = data.inputs[0].iter().map(|&v| v as f32).collect();
+    let ref_out = rt.run("digits", "f32", &sample).unwrap();
+    let ref_top = argmax(&ref_out);
+    let mut prev_dev = f64::INFINITY;
+    for k in [8u32, 12, 16, 20] {
+        let out = rt.run("digits", &format!("k{k}"), &sample).unwrap();
+        let dev = out
+            .iter()
+            .zip(&ref_out)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max);
+        assert!(
+            dev <= prev_dev * 4.0 + 1e-6,
+            "k={k} deviation {dev} vs previous {prev_dev}"
+        );
+        prev_dev = dev;
+        if ref_out[ref_top] > 0.6 {
+            assert_eq!(argmax(&out), ref_top, "k={k} flipped a confident argmax");
+        }
+    }
+}
+
+#[test]
+fn whole_eval_set_classified_consistently_at_k8() {
+    // E-acc-vs-k headline at k=8 over the full exported eval set.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let data = load_data("digits");
+    let mut flips = 0;
+    let mut total = 0;
+    for sample in &data.inputs {
+        let s: Vec<f32> = sample.iter().map(|&v| v as f32).collect();
+        let r = rt.run("digits", "f32", &s).unwrap();
+        let e = rt.run("digits", "k8", &s).unwrap();
+        total += 1;
+        if argmax(&r) != argmax(&e) {
+            flips += 1;
+        }
+    }
+    assert!(total >= 20);
+    assert!(
+        flips * 10 <= total,
+        "k=8 flipped {flips}/{total} — far above the paper's observation"
+    );
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}

@@ -1,0 +1,125 @@
+//! Whole-model soundness: CAA bounds versus actual emulated-precision
+//! errors, across the zoo models, many precisions and many inputs — the
+//! rigor contract of the paper at system scale (E-soundness without
+//! artifacts; the artifact-based variant lives in the soundness_sweep
+//! bench).
+
+use rigor::analysis::{analyze_class, AnalysisConfig};
+use rigor::caa::Ctx;
+use rigor::model::{zoo, Model};
+use rigor::prop;
+use rigor::quant::{unit_roundoff, EmulatedFp};
+use rigor::tensor::{EmuCtx, Tensor};
+
+fn check_model_soundness(model: &Model, sample: &[f64], ks: &[u32]) {
+    let cfg = AnalysisConfig::default(); // rounded (non-exact) inputs
+    let a = analyze_class(model, &cfg, 0, sample).unwrap();
+    let xr = Tensor::new(model.input_shape.clone(), sample.to_vec());
+    let yr = model.forward::<f64>(&(), xr).unwrap();
+
+    // Re-run the CAA forward to get per-output bounds (analyze_class only
+    // aggregates; we want elementwise checks).
+    let input = rigor::analysis::caa_input(&cfg.ctx, &model.input_shape, sample, 0.0);
+    let yc = model
+        .forward::<rigor::caa::Caa>(&cfg.ctx, input)
+        .unwrap();
+
+    for &k in ks {
+        let ec = EmuCtx { k };
+        let xe = Tensor::new(
+            model.input_shape.clone(),
+            sample.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
+        );
+        let ye = model.forward::<EmulatedFp>(&ec, xe).unwrap();
+        let u = unit_roundoff(k);
+        for i in 0..yr.len() {
+            let err = (ye.data()[i].v - yr.data()[i]).abs();
+            let bound = yc.data()[i].abs_bound();
+            assert!(
+                err <= bound * u * (1.0 + 1e-9) + 1e-10,
+                "{} output {i} k={k}: |err| {err:.3e} > δ̄·u = {:.3e} (δ̄ = {bound})",
+                model.name,
+                bound * u,
+            );
+        }
+    }
+    let _ = a;
+}
+
+#[test]
+fn mlp_sound_across_precisions_and_inputs() {
+    prop::check_with(
+        prop::Config { cases: 12, base_seed: 0x50FA },
+        "mlp-soundness",
+        |rng| {
+            let model = zoo::scaled_mlp(rng.next_u64(), 24, 16, 6);
+            let sample: Vec<f64> = (0..24).map(|_| rng.range(0.0, 1.0)).collect();
+            check_model_soundness(&model, &sample, &[8, 10, 13, 17, 22]);
+        },
+    );
+}
+
+#[test]
+fn cnn_sound_across_precisions() {
+    prop::check_with(
+        prop::Config { cases: 5, base_seed: 0x50FB },
+        "cnn-soundness",
+        |rng| {
+            let model = zoo::tiny_cnn(rng.next_u64());
+            let n: usize = model.input_shape.iter().product();
+            let sample: Vec<f64> = (0..n).map(|_| rng.range(0.0, 1.0)).collect();
+            check_model_soundness(&model, &sample, &[8, 12, 18]);
+        },
+    );
+}
+
+#[test]
+fn pendulum_sound_across_precisions() {
+    prop::check_with(
+        prop::Config { cases: 8, base_seed: 0x50FC },
+        "pendulum-soundness",
+        |rng| {
+            let model = zoo::tiny_pendulum(rng.next_u64());
+            let sample = vec![rng.range(-6.0, 6.0), rng.range(-6.0, 6.0)];
+            check_model_soundness(&model, &sample, &[8, 11, 16, 24]);
+        },
+    );
+}
+
+#[test]
+fn box_analysis_encloses_every_point_in_the_box() {
+    // An input-box analysis must dominate point runs anywhere in the box.
+    let model = zoo::tiny_pendulum(99);
+    let ctx = Ctx::new();
+    let cfg = AnalysisConfig { ctx: ctx.clone(), p_star: 0.6, input_radius: 0.5, exact_inputs: false };
+    let center = [1.0, -2.0];
+    let input = rigor::analysis::caa_input_cfg(&ctx, &model.input_shape, &center, 0.5, false);
+    let yc = model.forward::<rigor::caa::Caa>(&ctx, input).unwrap();
+
+    let mut rng = rigor::util::Rng::new(5);
+    for _ in 0..50 {
+        let p = [
+            center[0] + rng.range(-0.5, 0.5),
+            center[1] + rng.range(-0.5, 0.5),
+        ];
+        let yr = model
+            .forward::<f64>(&(), Tensor::new(vec![2], p.to_vec()))
+            .unwrap();
+        assert!(
+            yc.data()[0].ideal().inflate(1e-9).contains(yr.data()[0]),
+            "point run {} outside box ideal {}",
+            yr.data()[0],
+            yc.data()[0].ideal()
+        );
+        for k in [8u32, 12] {
+            let ec = EmuCtx { k };
+            let xe = Tensor::new(vec![2], p.iter().map(|&v| EmulatedFp::new(v, k)).collect());
+            let ye = model.forward::<EmulatedFp>(&ec, xe).unwrap();
+            assert!(
+                yc.data()[0].rounded().inflate(1e-9).contains(ye.data()[0].v),
+                "emulated k={k} run outside box rounded range"
+            );
+        }
+    }
+    let _ = cfg;
+}
