@@ -2,33 +2,36 @@
 //! three-layer stack on the Digits workload.
 //!
 //! 1. loads the *trained* Digits MLP (exported by `python/compile/aot.py`),
-//! 2. runs the paper's per-class CAA analysis fanned out over the
-//!    coordinator's worker pool (L3),
+//! 2. runs the paper's per-class CAA analysis through an `api::Session`
+//!    fanned out over the session's worker pool (L3),
 //! 3. derives the minimum safe precision k from the p* margin (§IV),
 //! 4. validates the guarantee *empirically* against the AOT-compiled
 //!    JAX/Pallas inference (L2/L1) through the PJRT runtime: classification
 //!    at the k-variant artifacts must agree with f32 on confident samples,
 //! 5. prints the Table-I-style row.
 //!
-//! Run: `make artifacts && cargo run --release --example digits_analysis`
+//! Needs the `pjrt` feature, which also requires adding the `xla`
+//! dependency by hand first (see the feature comment in rust/Cargo.toml —
+//! the offline registry snapshot does not carry it).
+//! Run: `make artifacts && cargo run --release --features pjrt --example digits_analysis`
 
-use rigor::analysis::{certify_min_precision, AnalysisConfig};
-use rigor::coordinator::{analyze_model_parallel, Pool};
+use rigor::api::{AnalysisRequest, ExecMode, Session};
 use rigor::data::Dataset;
-use rigor::model::Model;
 use rigor::quant::unit_roundoff;
-use rigor::report::{per_class_console, table1_console, TableRow};
+use rigor::report::{per_class_console, table1_console};
 use rigor::runtime::Runtime;
 use rigor::tensor::Tensor;
 use rigor::util::Stopwatch;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    if !Runtime::artifacts_available() {
+    if !rigor::runtime::artifacts_available() {
         anyhow::bail!("artifacts missing — run `make artifacts` first");
     }
-    let dir = Runtime::default_dir();
-    let model = Model::load(&dir.join("models/digits.json"))?;
-    let data = Dataset::load(&dir.join("data/digits_eval.json"))?;
+    let dir = rigor::runtime::default_dir();
+    let session = Session::new();
+    let model = session.load_model(&dir.join("models/digits.json"))?;
+    let data = Arc::new(Dataset::load(&dir.join("data/digits_eval.json"))?);
     println!(
         "digits MLP: {} parameters, {} eval samples, {} classes",
         model.param_count(),
@@ -36,34 +39,38 @@ fn main() -> anyhow::Result<()> {
         data.class_representatives().len()
     );
 
-    // ---- L3: per-class CAA analysis on the coordinator ------------------
-    let mut cfg = AnalysisConfig::default();
-    cfg.exact_inputs = true; // integer pixels in [0, 255]: exact for k >= 8
-    cfg.p_star = 0.60;
-    let pool = Pool::default_for_host();
+    // ---- L3: per-class CAA analysis on the session pool -----------------
+    let req = AnalysisRequest::builder()
+        .model_path(dir.join("models/digits.json"))
+        .data_arc(Arc::clone(&data))
+        .p_star(0.60)
+        .exact_inputs(true) // integer pixels in [0, 255]: exact for k >= 8
+        .mode(ExecMode::Pooled { workers: 0 })
+        .build()?;
     let sw = Stopwatch::start();
-    let analysis = analyze_model_parallel(&model, &data, &cfg, &pool)?;
+    let outcome = session.run(&req)?;
+    let analysis = &outcome.analysis;
     println!(
         "\nCAA analysis over {} classes in {:.2} s (pool: {} workers)",
         analysis.per_class.len(),
         sw.secs(),
-        pool.worker_count()
+        session.pool().worker_count()
     );
-    println!("{}", per_class_console(&analysis));
-    println!("{}", table1_console(&[TableRow::from_analysis(&analysis)], cfg.p_star));
+    println!("{}", per_class_console(analysis));
+    println!("{}", table1_console(&[outcome.table_row()], req.p_star()));
 
     // The fixed-u_max run above may be vacuous for a deep 784-dim net (its
     // worst-case logit error times 2^-7 swamps the softmax exponentials);
     // the paper's semi-automatic workflow then *tailors u*: re-analyze per
     // candidate k until the p* margin certifies.
-    let (required_k, certified) =
-        certify_min_precision(&model, &data, &cfg, 8..=24)?
-            .ok_or_else(|| anyhow::anyhow!("no k in [8, 24] certifies — cannot proceed"))?;
+    let (required_k, certified) = session
+        .certify_min_precision(&req, 8..=24)?
+        .ok_or_else(|| anyhow::anyhow!("no k in [8, 24] certifies — cannot proceed"))?;
     println!(
         "=> precision tailoring: smallest certified k = {required_k} \
          (bounds there: {:.1}u abs / {} rel)",
-        certified.max_abs_u,
-        rigor::report::fmt_bound_u(certified.max_rel_u)
+        certified.analysis.max_abs_u,
+        rigor::report::fmt_bound_u(certified.analysis.max_rel_u)
     );
 
     // ---- L2/L1 empirical validation through PJRT ------------------------
@@ -84,7 +91,7 @@ fn main() -> anyhow::Result<()> {
             let (tr, te) = (argmax(&r), argmax(&e));
             if tr != te {
                 flips_all += 1;
-                if r[tr] >= cfg.p_star as f32 {
+                if r[tr] >= req.p_star() as f32 {
                     flips_confident += 1;
                 }
             }
@@ -95,7 +102,7 @@ fn main() -> anyhow::Result<()> {
         // The certified analysis's bounds hold for every u <= 2^(1-required_k),
         // i.e. for every k >= required_k.
         let bound = if k >= required_k {
-            certified.max_abs_u * unit_roundoff(k)
+            certified.analysis.max_abs_u * unit_roundoff(k)
         } else {
             f64::INFINITY
         };

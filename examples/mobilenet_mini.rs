@@ -1,24 +1,25 @@
 //! Table I row 2 workload: per-class CAA analysis of the MobileNet-mini
 //! CNN (Conv / BatchNorm / ReLU / depthwise-separable stages / Softmax —
 //! the layer mix of the paper's 27M-parameter MobileNet run, scaled per
-//! DESIGN.md §Substitutions), with the CAA-vs-IA-only comparison.
+//! DESIGN.md §Substitutions), with the CAA-vs-IA-only comparison, all
+//! driven through the `api::Session` service layer.
 //!
 //! Run: `make artifacts && cargo run --release --example mobilenet_mini`
 
-use rigor::analysis::{analyze_class, baseline, certify_min_precision, AnalysisConfig};
-use rigor::coordinator::{analyze_model_parallel, Pool};
+use rigor::analysis::{analyze_class, baseline};
+use rigor::api::{AnalysisRequest, ExecMode, Session};
 use rigor::data::Dataset;
-use rigor::model::Model;
-use rigor::report::{fmt_bound_u, per_class_console, table1_console, TableRow};
-use rigor::runtime::Runtime;
+use rigor::report::{fmt_bound_u, per_class_console, table1_console};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    if !Runtime::artifacts_available() {
+    if !rigor::runtime::artifacts_available() {
         anyhow::bail!("artifacts missing — run `make artifacts` first");
     }
-    let dir = Runtime::default_dir();
-    let model = Model::load(&dir.join("models/mobilenet_mini.json"))?;
-    let data = Dataset::load(&dir.join("data/mobilenet_mini_eval.json"))?;
+    let dir = rigor::runtime::default_dir();
+    let session = Session::new();
+    let model = session.load_model(&dir.join("models/mobilenet_mini.json"))?;
+    let data = Arc::new(Dataset::load(&dir.join("data/mobilenet_mini_eval.json"))?);
     println!(
         "mobilenet_mini: {} parameters, layer stack:",
         model.param_count()
@@ -27,13 +28,17 @@ fn main() -> anyhow::Result<()> {
         println!("  {i:2}: {}", l.type_name());
     }
 
-    let mut cfg = AnalysisConfig::default();
-    cfg.exact_inputs = true;
-    cfg.p_star = 0.60;
-    let pool = Pool::default_for_host();
-    let analysis = analyze_model_parallel(&model, &data, &cfg, &pool)?;
-    println!("\n{}", per_class_console(&analysis));
-    println!("{}", table1_console(&[TableRow::from_analysis(&analysis)], cfg.p_star));
+    let req = AnalysisRequest::builder()
+        .model_path(dir.join("models/mobilenet_mini.json"))
+        .data_arc(Arc::clone(&data))
+        .p_star(0.60)
+        .exact_inputs(true)
+        .mode(ExecMode::Pooled { workers: 0 })
+        .build()?;
+    let outcome = session.run(&req)?;
+    let analysis = &outcome.analysis;
+    println!("\n{}", per_class_console(analysis));
+    println!("{}", table1_console(&[outcome.table_row()], req.p_star()));
     println!(
         "(paper's full MobileNet: 22.4u abs / 11.5u rel, 4.2 h per class on MPFI;\n\
          the by-value CAA engine analyzes this CNN in {:.2} s per class)",
@@ -41,18 +46,21 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Precision tailoring (paper §V): find the smallest certified k.
-    match certify_min_precision(&model, &data, &cfg, 8..=26)? {
-        Some((k, a)) => println!(
+    match session.certify_min_precision(&req, 8..=26)? {
+        Some((k, o)) => println!(
             "precision tailoring: smallest certified k = {k} \
              ({:.1}u abs / {} rel at u_max = 2^{})",
-            a.max_abs_u,
-            fmt_bound_u(a.max_rel_u),
+            o.analysis.max_abs_u,
+            fmt_bound_u(o.analysis.max_rel_u),
             1 - k as i32
         ),
-        None => println!("no k in [8, 26] certifies at p* = {}", cfg.p_star),
+        None => println!("no k in [8, 26] certifies at p* = {}", req.p_star()),
     }
 
     // CAA vs IA-only on one class (the A-caa-vs-ia ablation, small cut).
+    // The baselines speak the engine vocabulary; their config comes from
+    // the same request.
+    let cfg = req.analysis_config();
     let rep = data.class_representatives()[0];
     let caa = analyze_class(&model, &cfg, rep.0, &data.inputs[rep.1])?;
     let ia = baseline::ia_only_class(&model, &cfg, rep.0, &data.inputs[rep.1])?;

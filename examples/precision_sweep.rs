@@ -4,17 +4,20 @@
 //! roundk baked into the graph) for all three models, served through the
 //! PJRT runtime.
 //!
-//! Run: `make artifacts && cargo run --release --example precision_sweep`
+//! Needs the `pjrt` feature, which also requires adding the `xla`
+//! dependency by hand first (see the feature comment in rust/Cargo.toml —
+//! the offline registry snapshot does not carry it).
+//! Run: `make artifacts && cargo run --release --features pjrt --example precision_sweep`
 
 use rigor::data::Dataset;
 use rigor::quant::unit_roundoff;
 use rigor::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    if !Runtime::artifacts_available() {
+    if !rigor::runtime::artifacts_available() {
         anyhow::bail!("artifacts missing — run `make artifacts` first");
     }
-    let dir = Runtime::default_dir();
+    let dir = rigor::runtime::default_dir();
     let mut rt = Runtime::open(&dir)?;
 
     for name in ["digits", "mobilenet_mini"] {

@@ -1,42 +1,51 @@
 //! Quickstart: rigorous FP error analysis of the Pendulum network in a few
-//! lines — the paper's smallest example (Table I row 3).
+//! lines through the service API — the paper's smallest example (Table I
+//! row 3).
 //!
 //! Run: `cargo run --release --example quickstart`
 //! (uses the trained artifact model if `make artifacts` has run; falls back
 //! to a randomly-initialized net with the same topology otherwise.)
 
-use rigor::analysis::{analyze_model, AnalysisConfig};
-use rigor::data::{synthetic, Dataset};
-use rigor::model::{zoo, Model};
+use rigor::api::{AnalysisRequest, Session};
+use rigor::data::synthetic;
+use rigor::model::zoo;
 use rigor::report::{fmt_bound_u, per_class_console};
-use rigor::runtime::Runtime;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    // 1. A trained model (JSON exported by the build path), or a zoo net.
-    let model_path = Runtime::default_dir().join("models/pendulum.json");
-    let (model, source) = if model_path.exists() {
-        (Model::load(&model_path)?, "trained artifact")
-    } else {
+    // 1. A session: the service front door (worker pool + model cache).
+    let session = Session::new();
+
+    // 2. The model: a trained artifact (JSON exported by the build path),
+    //    or a zoo net with the same topology.
+    let model_path = rigor::runtime::default_dir().join("models/pendulum.json");
+    let (builder, model, source) = if model_path.exists() {
         (
-            zoo::tiny_pendulum(7),
+            AnalysisRequest::builder().model_path(&model_path),
+            session.load_model(&model_path)?,
+            "trained artifact",
+        )
+    } else {
+        let model = Arc::new(zoo::tiny_pendulum(7));
+        (
+            AnalysisRequest::builder().model_arc(Arc::clone(&model)),
+            model,
             "randomly initialized (run `make artifacts` for the trained one)",
         )
     };
     println!("model: {} ({source}), {} parameters", model.name, model.param_count());
 
-    // 2. The verification workload: the whole input box [-6, 6]^2, queried
+    // 3. The verification workload: the whole input box [-6, 6]^2, queried
     //    at exactly-representable points (the paper's Pendulum setting).
-    let data = Dataset {
-        input_shape: vec![2],
-        inputs: vec![vec![0.0, 0.0]],
-        labels: vec![],
-    };
-    let mut cfg = AnalysisConfig::default();
-    cfg.input_radius = 6.0;
-    cfg.exact_inputs = true;
+    let req = builder
+        .input_box()
+        .input_radius(6.0)
+        .exact_inputs(true)
+        .build()?;
 
-    // 3. One CAA analysis run = rigorous bounds for every u = 2^(1-k) <= 2^-7.
-    let a = analyze_model(&model, &data, &cfg)?;
+    // 4. One CAA analysis run = rigorous bounds for every u = 2^(1-k) <= 2^-7.
+    let outcome = session.run(&req)?;
+    let a = &outcome.analysis;
     println!(
         "\nabsolute error bound : {} (in units of u = 2^(1-k))",
         fmt_bound_u(a.max_abs_u)
@@ -46,9 +55,9 @@ fn main() -> anyhow::Result<()> {
         fmt_bound_u(a.max_rel_u)
     );
     println!("analysis time        : {:.1} ms", a.total_secs * 1e3);
-    println!("\nper-class detail:\n{}", per_class_console(&a));
+    println!("\nper-class detail:\n{}", per_class_console(a));
 
-    // 4. Turn the bound into a concrete guarantee: at precision k the
+    // 5. Turn the bound into a concrete guarantee: at precision k the
     //    computed Lyapunov value differs from the ideal one by at most
     //    δ̄ · 2^(1-k) — pluggable into the SAT-based verification of
     //    Chang et al. as an interval widening.
@@ -61,7 +70,10 @@ fn main() -> anyhow::Result<()> {
     }
     println!("\n(Table I reports 1.7u and ~100 ms for this network.)");
 
-    // 5. The synthetic grid is also available for spot checks.
+    // 6. The stable wire form of the same result (schema_version: 1).
+    println!("\noutcome JSON:\n{}", outcome.to_json_string());
+
+    // 7. The synthetic grid is also available for spot checks.
     let grid = synthetic::pendulum_grid(5);
     println!("grid spot-check over {} points: OK", grid.len());
     Ok(())

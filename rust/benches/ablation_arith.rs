@@ -7,15 +7,30 @@
 //! * rel-only dies at the first cancellation (softmax max-subtraction),
 //! * abs-only survives but cannot serve relative margins,
 //! * CAA keeps both.
+//!
+//! The ablations drive the engine's `analyze_class` directly with
+//! feature-toggled contexts; the configs come from the api request builder
+//! (its ablation escape hatch), not hand-rolled `AnalysisConfig`s.
 
 mod common;
 
 use rigor::analysis::baseline::ia_only_class;
 use rigor::analysis::{analyze_class, AnalysisConfig};
+use rigor::api::AnalysisRequest;
 use rigor::bench::Bencher;
 use rigor::caa::Ctx;
 use rigor::model::zoo;
 use rigor::report::fmt_bound_u;
+
+fn cfg_with(ctx: Ctx, radius: f64) -> AnalysisConfig {
+    AnalysisRequest::builder()
+        .ctx(ctx)
+        .p_star(0.6)
+        .input_radius(radius)
+        .exact_inputs(true)
+        .build_config()
+        .expect("ablation config")
+}
 
 fn main() {
     let mut b = Bencher::new("ablation_arith");
@@ -46,7 +61,7 @@ fn main() {
         ("digits/rel-only", Ctx::with_u_max(u21).rel_only()),
     ];
     for (name, ctx) in variants {
-        let cfg = AnalysisConfig { ctx, p_star: 0.6, input_radius: 0.0, exact_inputs: true };
+        let cfg = cfg_with(ctx, 0.0);
         let mut out = None;
         b.bench_once(name, || out = Some(analyze_class(&digits, &cfg, 0, sample).unwrap()));
         let a = out.unwrap();
@@ -56,12 +71,7 @@ fn main() {
             fmt_bound_u(a.max_rel_u)
         );
     }
-    let cfg = AnalysisConfig {
-        ctx: Ctx::with_u_max(u21),
-        p_star: 0.6,
-        input_radius: 0.0,
-        exact_inputs: true,
-    };
+    let cfg = cfg_with(Ctx::with_u_max(u21), 0.0);
     let mut ia = None;
     b.bench_once("digits/IA-only", || ia = Some(ia_only_class(&digits, &cfg, 0, sample).unwrap()));
     let ia = ia.unwrap();
@@ -80,7 +90,7 @@ fn main() {
         ("pendulum-box/abs-only", Ctx::new().abs_only()),
         ("pendulum-box/rel-only", Ctx::new().rel_only()),
     ] {
-        let cfg = AnalysisConfig { ctx, p_star: 0.6, input_radius: 6.0, exact_inputs: true };
+        let cfg = cfg_with(ctx, 6.0);
         let mut out = None;
         b.bench_once(name, || out = Some(analyze_class(&pendulum, &cfg, 0, &center).unwrap()));
         let a = out.unwrap();
@@ -90,7 +100,7 @@ fn main() {
             fmt_bound_u(a.max_rel_u)
         );
     }
-    let cfg = AnalysisConfig { ctx: Ctx::new(), p_star: 0.6, input_radius: 6.0, exact_inputs: true };
+    let cfg = cfg_with(Ctx::new(), 6.0);
     let mut iab = None;
     b.bench_once("pendulum-box/IA-only", || {
         iab = Some(ia_only_class(&pendulum, &cfg, 0, &center).unwrap())

@@ -4,7 +4,8 @@
 
 mod common;
 
-use rigor::analysis::{analyze_class, AnalysisConfig};
+use rigor::analysis::analyze_class;
+use rigor::api::AnalysisRequest;
 use rigor::bench::Bencher;
 use rigor::caa::{max_many, Caa, Ctx};
 use rigor::interval::Interval;
@@ -68,7 +69,12 @@ fn main() {
         ("no decorrelation", Ctx::with_u_max(u21).no_decorrelation()),
         ("neither", Ctx::with_u_max(u21).no_labels().no_decorrelation()),
     ] {
-        let cfg = AnalysisConfig { ctx, p_star: 0.6, input_radius: 0.0, exact_inputs: true };
+        let cfg = AnalysisRequest::builder()
+            .ctx(ctx)
+            .p_star(0.6)
+            .exact_inputs(true)
+            .build_config()
+            .expect("ablation config");
         let mut out = None;
         let (_, stats) = b.bench_once(&format!("digits/{name}"), || {
             out = Some(analyze_class(&model, &cfg, 0, sample).unwrap())

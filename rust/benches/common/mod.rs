@@ -2,18 +2,17 @@
 
 use rigor::data::Dataset;
 use rigor::model::Model;
-use rigor::runtime::Runtime;
 
 /// Load a trained artifact model + its eval dataset, or `None` (with a
 /// notice) when `make artifacts` has not run — benches then fall back to
 /// zoo models so `cargo bench` always produces output.
 #[allow(dead_code)]
 pub fn trained(name: &str) -> Option<(Model, Dataset)> {
-    if !Runtime::artifacts_available() {
+    if !rigor::runtime::artifacts_available() {
         eprintln!("[note] artifacts missing — run `make artifacts` for trained-model benches");
         return None;
     }
-    let dir = Runtime::default_dir();
+    let dir = rigor::runtime::default_dir();
     let model = Model::load(&dir.join("models").join(format!("{name}.json"))).ok()?;
     let data = Dataset::load(&dir.join("data").join(format!("{name}_eval.json"))).ok()?;
     Some((model, data))

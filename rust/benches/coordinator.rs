@@ -1,10 +1,11 @@
 //! **A-scale (coordinator)** — throughput and parallel speedup of the L3
 //! job runtime: raw job throughput, backpressure behavior, and the
-//! end-to-end speedup of parallel per-class analysis over sequential.
+//! end-to-end speedup of pooled per-class analysis over serial, measured
+//! through the `api::Session` service layer.
 
-use rigor::analysis::{analyze_model, AnalysisConfig};
+use rigor::api::{AnalysisRequest, ExecMode, Session};
 use rigor::bench::Bencher;
-use rigor::coordinator::{analyze_model_parallel, Pool};
+use rigor::coordinator::Pool;
 use rigor::data::synthetic;
 use rigor::model::zoo;
 use rigor::util::Rng;
@@ -12,7 +13,7 @@ use rigor::util::Rng;
 fn main() {
     let mut b = Bencher::new("coordinator");
 
-    // ---- raw job throughput -------------------------------------------------
+    // ---- raw job throughput (the pool substrate itself) ---------------------
     for workers in [1usize, 2, 4, 8] {
         let pool = Pool::new(workers, workers * 4);
         let stats = b.bench(&format!("throughput/noop-jobs/w={workers}"), || {
@@ -35,27 +36,35 @@ fn main() {
         inputs: data,
         labels: (0..20).map(|i| i % 10).collect(),
     };
-    let cfg = AnalysisConfig::default();
+    let request = |mode: ExecMode| {
+        AnalysisRequest::builder()
+            .model(model.clone())
+            .data(data.clone())
+            .mode(mode)
+            .build()
+            .expect("request")
+    };
 
+    let serial_session = Session::builder().workers(1).build();
     let seq = b
         .bench_once("analysis/sequential", || {
-            analyze_model(&model, &data, &cfg).unwrap()
+            serial_session.run(&request(ExecMode::Serial)).unwrap()
         })
         .1
         .mean;
     println!("\nsequential 10-class analysis: {seq:.2?}");
     for workers in [2usize, 4, 8] {
-        let pool = Pool::new(workers, 32);
+        let session = Session::builder().workers(workers).build();
         let par = b
             .bench_once(&format!("analysis/parallel/w={workers}"), || {
-                analyze_model_parallel(&model, &data, &cfg, &pool).unwrap()
+                session.run(&request(ExecMode::Pooled { workers: 0 })).unwrap()
             })
             .1
             .mean;
         println!(
             "parallel w={workers}: {par:.2?}  speedup {:.2}x  (queue high-water {})",
             seq.as_secs_f64() / par.as_secs_f64(),
-            pool.metrics().queue_high_water
+            session.pool().metrics().queue_high_water
         );
     }
 

@@ -8,7 +8,8 @@
 //! 3. analysis-time scaling vs parameter count (should be ~linear),
 //! 4. projected time for the paper's 27M-parameter MobileNet.
 
-use rigor::analysis::{analyze_class, AnalysisConfig};
+use rigor::analysis::analyze_class;
+use rigor::api::AnalysisRequest;
 use rigor::bench::Bencher;
 use rigor::caa::{Caa, Ctx};
 use rigor::model::zoo;
@@ -63,7 +64,7 @@ fn main() {
         let model = zoo::scaled_mlp(1, 256, hidden, 10);
         let params = model.param_count();
         let sample: Vec<f64> = (0..256).map(|i| (i % 7) as f64 / 7.0).collect();
-        let cfg = AnalysisConfig::default();
+        let cfg = AnalysisRequest::builder().build_config().expect("config");
         let mut out = None;
         let (_, stats) = b.bench_once(&format!("analyze/mlp-h{hidden}"), || {
             out = Some(analyze_class(&model, &cfg, 0, &sample).unwrap())

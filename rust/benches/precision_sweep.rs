@@ -1,24 +1,34 @@
 //! **E-acc-vs-k** — the motivating observation (paper §I): classification
 //! agreement with the reference stays high down to very low precision.
-//! Sweeps the AOT k-variant artifacts through PJRT (falls back to the Rust
-//! per-op emulation when artifacts are missing) and reports agreement and
-//! worst probability deviation per k.
+//! With the `pjrt` feature and artifacts built, sweeps the AOT k-variant
+//! artifacts through PJRT; otherwise falls back to the Rust per-op
+//! emulation and reports agreement per k.
 
 mod common;
 
 use rigor::bench::Bencher;
-use rigor::quant::unit_roundoff;
-use rigor::runtime::Runtime;
 
 fn main() {
-    let mut b = Bencher::new("precision_sweep");
-
-    if !Runtime::artifacts_available() {
+    #[cfg(feature = "pjrt")]
+    {
+        if rigor::runtime::artifacts_available() {
+            pjrt_sweep();
+            return;
+        }
         eprintln!("[skip] artifacts missing — run `make artifacts`; falling back to engine sweep");
-        engine_fallback();
-        return;
     }
-    let dir = Runtime::default_dir();
+    #[cfg(not(feature = "pjrt"))]
+    eprintln!("[note] built without the `pjrt` feature — running the engine-only sweep");
+    engine_fallback();
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_sweep() {
+    use rigor::quant::unit_roundoff;
+    use rigor::runtime::Runtime;
+
+    let mut b = Bencher::new("precision_sweep");
+    let dir = rigor::runtime::default_dir();
     let mut rt = Runtime::open(&dir).expect("runtime");
 
     for name in ["digits", "mobilenet_mini"] {
@@ -61,6 +71,7 @@ fn engine_fallback() {
     use rigor::quant::EmulatedFp;
     use rigor::tensor::{EmuCtx, Tensor};
 
+    let mut b = Bencher::new("precision_sweep_engine");
     let model = zoo::scaled_mlp(7, 64, 48, 10);
     let mut rng = rigor::util::Rng::new(9);
     let data = rigor::data::synthetic::digits(&mut rng, 8, 4, 0.05);
@@ -68,33 +79,36 @@ fn engine_fallback() {
     for k in [4u32, 6, 8, 10, 12, 16, 20] {
         let ec = EmuCtx { k };
         let mut agree = 0;
-        for input in &data.inputs {
-            let yr = model
-                .forward::<f64>(&(), Tensor::new(model.input_shape.clone(), input.clone()))
-                .unwrap();
-            let xe = Tensor::new(
-                model.input_shape.clone(),
-                input.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
-            );
-            let ye = model.forward::<EmulatedFp>(&ec, xe).unwrap();
-            let am_r = yr
-                .data()
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            let am_e = ye
-                .data()
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.v.partial_cmp(&b.1.v).unwrap())
-                .unwrap()
-                .0;
-            if am_r == am_e {
-                agree += 1;
+        let (_, _stats) = b.bench_once(&format!("engine/k={k}"), || {
+            for input in &data.inputs {
+                let yr = model
+                    .forward::<f64>(&(), Tensor::new(model.input_shape.clone(), input.clone()))
+                    .unwrap();
+                let xe = Tensor::new(
+                    model.input_shape.clone(),
+                    input.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
+                );
+                let ye = model.forward::<EmulatedFp>(&ec, xe).unwrap();
+                let am_r = yr
+                    .data()
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                let am_e = ye
+                    .data()
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.v.partial_cmp(&b.1.v).unwrap())
+                    .unwrap()
+                    .0;
+                if am_r == am_e {
+                    agree += 1;
+                }
             }
-        }
+        });
         println!("{k:>4} {:>9}/{:<3}", agree, data.inputs.len());
     }
+    b.report();
 }

@@ -4,22 +4,89 @@
 //! `δ̄·u`. Reported as the ratio bound/observed (the "rigor margin" —
 //! >= 1 always; close to 1 means the bound is tight).
 //!
-//! Two emulation paths are exercised:
+//! Analyses are served by an `api::Session`; each sample is submitted as
+//! its own "class" so the outcome carries per-sample bounds. Two emulation
+//! paths are exercised:
 //! * Rust `EmulatedFp` (per-operation rounding — the model CAA covers), and
 //! * the AOT Pallas `roundk` artifacts through PJRT (storage rounding),
-//!   when artifacts are available.
+//!   when the `pjrt` feature and artifacts are available.
 
 mod common;
 
-use rigor::analysis::{analyze_class, AnalysisConfig};
+use rigor::api::{AnalysisRequest, Session};
 use rigor::bench::Bencher;
-use rigor::model::zoo;
+use rigor::data::Dataset;
+use rigor::model::{zoo, Model};
 use rigor::quant::{unit_roundoff, EmulatedFp};
-use rigor::runtime::Runtime;
 use rigor::tensor::{EmuCtx, Tensor};
+use std::sync::Arc;
+
+/// One sample per "class": the per-class results of the outcome are then
+/// per-sample bounds.
+fn per_sample_dataset(model: &Model, samples: &[Vec<f64>]) -> Dataset {
+    Dataset {
+        input_shape: model.input_shape.clone(),
+        inputs: samples.to_vec(),
+        labels: (0..samples.len()).collect(),
+    }
+}
+
+/// Worst observed emulated-vs-reference deviation over the samples.
+fn worst_observed(model: &Model, samples: &[Vec<f64>], k: u32) -> f64 {
+    let ec = EmuCtx { k };
+    let mut worst = 0.0f64;
+    for sample in samples {
+        let xr = Tensor::new(model.input_shape.clone(), sample.clone());
+        let yr = model.forward::<f64>(&(), xr).unwrap();
+        let xe = Tensor::new(
+            model.input_shape.clone(),
+            sample.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
+        );
+        let ye = model.forward::<EmulatedFp>(&ec, xe).unwrap();
+        for i in 0..yr.len() {
+            worst = worst.max((ye.data()[i].v - yr.data()[i]).abs());
+        }
+    }
+    worst
+}
+
+fn sweep(
+    b: &mut Bencher,
+    session: &Session,
+    tag: &str,
+    model: &Arc<Model>,
+    samples: &[Vec<f64>],
+    ks: &[u32],
+    exact_inputs: bool,
+) {
+    let data = Arc::new(per_sample_dataset(model, samples));
+    println!("{:>4} {:>14} {:>14} {:>12}", "k", "observed", "bound·u", "margin");
+    for &k in ks {
+        // Analyze *at* this precision (u_max = 2^(1-k)) — the paper's
+        // tailoring workflow; the parametric bound then applies to k.
+        let req = AnalysisRequest::builder()
+            .model_arc(Arc::clone(model))
+            .data_arc(Arc::clone(&data))
+            .exact_inputs(exact_inputs)
+            .u_max(2f64.powi(1 - k as i32))
+            .build()
+            .expect("request");
+        let mut worst_obs = 0.0f64;
+        let mut worst_bound = 0.0f64;
+        let (_, _stats) = b.bench_once(&format!("{tag}/k={k}"), || {
+            let outcome = session.run(&req).unwrap();
+            worst_bound = outcome.analysis.max_abs_u * unit_roundoff(k);
+            worst_obs = worst_observed(model, samples, k);
+        });
+        let margin = if worst_obs > 0.0 { worst_bound / worst_obs } else { f64::INFINITY };
+        println!("{k:>4} {worst_obs:>14.3e} {worst_bound:>14.3e} {margin:>11.1e}x");
+        assert!(worst_obs <= worst_bound, "SOUNDNESS VIOLATION at k={k}");
+    }
+}
 
 fn main() {
     let mut b = Bencher::new("soundness_sweep");
+    let session = Session::new();
 
     let (model, data) = common::trained("digits").unwrap_or_else(|| {
         let mut rng = rigor::util::Rng::new(4);
@@ -28,77 +95,26 @@ fn main() {
             rigor::data::synthetic::digits(&mut rng, 8, 2, 0.05),
         )
     });
+    let model = Arc::new(model);
 
     println!("per-op emulation (Rust EmulatedFp) vs CAA bound, {}:", model.name);
-    println!("{:>4} {:>14} {:>14} {:>12}", "k", "observed", "bound·u", "margin");
-    let samples: Vec<&Vec<f64>> = data.inputs.iter().take(8).collect();
-    for &k in &[8u32, 10, 12, 16, 20, 24] {
-        // Analyze *at* this precision (u_max = 2^(1-k)) — the paper's
-        // tailoring workflow; the parametric bound then applies to k.
-        let mut cfg = AnalysisConfig::default();
-        cfg.exact_inputs = true;
-        cfg.ctx = rigor::caa::Ctx::with_u_max(2f64.powi(1 - k as i32));
-        let mut worst_obs = 0.0f64;
-        let mut worst_bound = 0.0f64;
-        let (_, _stats) = b.bench_once(&format!("emulated/k={k}"), || {
-            for sample in &samples {
-                let a = analyze_class(&model, &cfg, 0, sample).unwrap();
-                let xr = Tensor::new(model.input_shape.clone(), (*sample).clone());
-                let yr = model.forward::<f64>(&(), xr).unwrap();
-                let ec = EmuCtx { k };
-                let xe = Tensor::new(
-                    model.input_shape.clone(),
-                    sample.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
-                );
-                let ye = model.forward::<EmulatedFp>(&ec, xe).unwrap();
-                for i in 0..yr.len() {
-                    let err = (ye.data()[i].v - yr.data()[i]).abs();
-                    worst_obs = worst_obs.max(err);
-                }
-                worst_bound = worst_bound.max(a.max_abs_u * unit_roundoff(k));
-            }
-        });
-        let margin = if worst_obs > 0.0 { worst_bound / worst_obs } else { f64::INFINITY };
-        println!("{k:>4} {worst_obs:>14.3e} {worst_bound:>14.3e} {margin:>11.1e}x");
-        assert!(worst_obs <= worst_bound, "SOUNDNESS VIOLATION at k={k}");
-    }
+    let samples: Vec<Vec<f64>> = data.inputs.iter().take(8).cloned().collect();
+    sweep(&mut b, &session, "emulated", &model, &samples, &[8, 10, 12, 16, 20, 24], true);
 
     // Small well-conditioned net: margins here show the *tightness* of the
     // bounds (the deep 784-dim net above shows worst-case-vs-average gap).
-    let small = zoo::tiny_mlp(42);
+    let small = Arc::new(zoo::tiny_mlp(42));
     let mut rng = rigor::util::Rng::new(11);
     let small_samples: Vec<Vec<f64>> =
         (0..6).map(|_| (0..8).map(|_| rng.range(0.0, 1.0)).collect()).collect();
     println!("\nper-op emulation vs CAA bound, tiny_mlp (well-conditioned):");
-    println!("{:>4} {:>14} {:>14} {:>12}", "k", "observed", "bound·u", "margin");
-    for &k in &[8u32, 12, 16, 20, 24] {
-        let mut cfg = AnalysisConfig::default();
-        cfg.ctx = rigor::caa::Ctx::with_u_max(2f64.powi(1 - k as i32));
-        let mut worst_obs = 0.0f64;
-        let mut worst_bound = 0.0f64;
-        for sample in &small_samples {
-            let a = analyze_class(&small, &cfg, 0, sample).unwrap();
-            let xr = Tensor::new(small.input_shape.clone(), sample.clone());
-            let yr = small.forward::<f64>(&(), xr).unwrap();
-            let ec = EmuCtx { k };
-            let xe = Tensor::new(
-                small.input_shape.clone(),
-                sample.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
-            );
-            let ye = small.forward::<EmulatedFp>(&ec, xe).unwrap();
-            for i in 0..yr.len() {
-                worst_obs = worst_obs.max((ye.data()[i].v - yr.data()[i]).abs());
-            }
-            worst_bound = worst_bound.max(a.max_abs_u * unit_roundoff(k));
-        }
-        let margin = if worst_obs > 0.0 { worst_bound / worst_obs } else { f64::INFINITY };
-        println!("{k:>4} {worst_obs:>14.3e} {worst_bound:>14.3e} {margin:>11.1e}x");
-        assert!(worst_obs <= worst_bound, "SOUNDNESS VIOLATION (tiny) at k={k}");
-    }
+    sweep(&mut b, &session, "tiny", &small, &small_samples, &[8, 12, 16, 20, 24], false);
 
-    // Storage emulation through the AOT artifacts.
-    if Runtime::artifacts_available() {
-        let dir = Runtime::default_dir();
+    // Storage emulation through the AOT artifacts (pjrt builds only).
+    #[cfg(feature = "pjrt")]
+    if rigor::runtime::artifacts_available() {
+        use rigor::runtime::Runtime;
+        let dir = rigor::runtime::default_dir();
         let mut rt = Runtime::open(&dir).expect("runtime");
         println!("\nstorage emulation (PJRT roundk artifacts) vs CAA bound, digits:");
         println!("{:>4} {:>14} {:>14} {:>12}", "k", "observed", "bound·u", "margin");
@@ -106,10 +122,14 @@ fn main() {
             if k < 8 {
                 continue; // coarser than any certifiable precision here
             }
-            let mut cfg = AnalysisConfig::default();
-            cfg.exact_inputs = true;
-            cfg.ctx = rigor::caa::Ctx::with_u_max(2f64.powi(1 - k as i32));
-            let a = analyze_class(&model, &cfg, 0, &data.inputs[0]).unwrap();
+            let req = AnalysisRequest::builder()
+                .model_arc(Arc::clone(&model))
+                .data(per_sample_dataset(&model, &data.inputs[..1]))
+                .exact_inputs(true)
+                .u_max(2f64.powi(1 - k as i32))
+                .build()
+                .expect("request");
+            let a = session.run(&req).unwrap().analysis;
             let mut worst = 0.0f64;
             for sample in data.inputs.iter().take(10) {
                 let s: Vec<f32> = sample.iter().map(|&v| v as f32).collect();

@@ -1,7 +1,8 @@
-//! **T1 — the paper's Table I**, regenerated end to end: per-class CAA
-//! analysis of the three trained workloads, reporting max absolute /
-//! relative error bounds (units of u), analysis time per class, and the
-//! minimum precision preventing misclassification at p* = 0.60.
+//! **T1 — the paper's Table I**, regenerated end to end through the
+//! `api::Session` service layer: per-class CAA analysis of the three
+//! trained workloads, reporting max absolute / relative error bounds
+//! (units of u), analysis time per class, and the minimum precision
+//! preventing misclassification at p* = 0.60.
 //!
 //! Paper values for comparison (their testbed, MPFI backend):
 //!   Digits     1.1u   3.4u    12 s/class   k = 8
@@ -10,7 +11,8 @@
 
 mod common;
 
-use rigor::analysis::{analyze_model, certify_min_precision, AnalysisConfig, Margins};
+use rigor::analysis::Margins;
+use rigor::api::{AnalysisRequest, AnalysisRequestBuilder, Session};
 use rigor::data::Dataset;
 use rigor::model::zoo;
 use rigor::report::{table1_console, table1_markdown, TableRow};
@@ -18,26 +20,25 @@ use rigor::report::{table1_console, table1_markdown, TableRow};
 /// Analyze at the paper's u_max = 2^-7; when the worst-case bounds are
 /// vacuous there (deep nets), run the paper's §V precision-tailoring loop
 /// and report the row at the certified u_max instead (footnoted).
-fn analyze_tailored(
-    model: &rigor::model::Model,
-    data: &Dataset,
-    cfg: &AnalysisConfig,
-) -> (TableRow, Option<u32>) {
-    let a = analyze_model(model, data, cfg).expect("analysis");
-    if a.required_k.is_some() {
-        return (TableRow::from_analysis(&a), None);
+fn analyze_tailored(session: &Session, builder: AnalysisRequestBuilder) -> (TableRow, Option<u32>) {
+    let req = builder.build().expect("request");
+    let out = session.run(&req).expect("analysis");
+    if out.required_k().is_some() {
+        return (out.table_row(), None);
     }
-    match certify_min_precision(model, data, cfg, 8..=26).expect("certify") {
-        Some((k, a2)) => {
-            let mut row = TableRow::from_analysis(&a2);
-            row.time_per_class = std::time::Duration::from_secs_f64(a.secs_per_class());
+    match session.certify_min_precision(&req, 8..=26).expect("certify") {
+        Some((k, o2)) => {
+            let mut row = o2.table_row();
+            row.time_per_class =
+                std::time::Duration::from_secs_f64(out.analysis.secs_per_class());
             (row, Some(k))
         }
-        None => (TableRow::from_analysis(&a), None),
+        None => (out.table_row(), None),
     }
 }
 
 fn main() {
+    let session = Session::new();
     let mut rows = Vec::new();
     let mut notes = Vec::new();
 
@@ -49,13 +50,17 @@ fn main() {
             rigor::data::synthetic::digits(&mut rng, 28, 1, 0.05),
         )
     });
-    let mut cfg = AnalysisConfig::default();
-    cfg.exact_inputs = true; // integer pixels
-    let (row, tailored) = analyze_tailored(&model, &data, &cfg);
+    let classes = data.class_representatives().len();
+    let params = model.param_count();
+    let (row, tailored) = analyze_tailored(
+        &session,
+        AnalysisRequest::builder()
+            .model(model)
+            .data(data)
+            .exact_inputs(true), // integer pixels
+    );
     println!(
-        "digits: {} params, {} classes, {:?}/class (paper: 12 s/class)",
-        model.param_count(),
-        data.class_representatives().len(),
+        "digits: {params} params, {classes} classes, {:?}/class (paper: 12 s/class)",
         row.time_per_class
     );
     if let Some(k) = tailored {
@@ -77,10 +82,16 @@ fn main() {
             Dataset { input_shape: vec![6, 6, 1], inputs, labels: blobs.labels },
         )
     });
-    let (row, tailored) = analyze_tailored(&model, &data, &cfg);
+    let params = model.param_count();
+    let (row, tailored) = analyze_tailored(
+        &session,
+        AnalysisRequest::builder()
+            .model(model)
+            .data(data)
+            .exact_inputs(true),
+    );
     println!(
-        "mobilenet_mini: {} params, {:?}/class (paper's 27M-param MobileNet: 4.2 h/class)",
-        model.param_count(),
+        "mobilenet_mini: {params} params, {:?}/class (paper's 27M-param MobileNet: 4.2 h/class)",
         row.time_per_class
     );
     if let Some(k) = tailored {
@@ -92,17 +103,20 @@ fn main() {
     let model = common::trained("pendulum")
         .map(|(m, _)| m)
         .unwrap_or_else(|| zoo::tiny_pendulum(3));
-    let box_data = Dataset { input_shape: vec![2], inputs: vec![vec![0.0, 0.0]], labels: vec![] };
-    let mut pcfg = AnalysisConfig::default();
-    pcfg.input_radius = 6.0;
-    pcfg.exact_inputs = true;
-    let a = analyze_model(&model, &box_data, &pcfg).expect("pendulum analysis");
+    let params = model.param_count();
+    let preq = AnalysisRequest::builder()
+        .model(model)
+        .input_box()
+        .input_radius(6.0)
+        .exact_inputs(true)
+        .build()
+        .expect("pendulum request");
+    let a = session.run(&preq).expect("pendulum analysis");
     println!(
-        "pendulum: {} params, {:.1} ms (paper: 100 ms)",
-        model.param_count(),
-        a.total_secs * 1e3
+        "pendulum: {params} params, {:.1} ms (paper: 100 ms)",
+        a.analysis.total_secs * 1e3
     );
-    rows.push(TableRow::from_analysis(&a));
+    rows.push(a.table_row());
 
     // -- the table -----------------------------------------------------------
     println!("\n================= TABLE I (reproduced) =================");

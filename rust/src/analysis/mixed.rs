@@ -216,7 +216,7 @@ mod tests {
 
         let mut ucfg = cfg.clone();
         ucfg.ctx = Ctx::with_u_max(unit_roundoff(20));
-        let uniform = super::super::analyze_model(&m, &data, &ucfg).unwrap();
+        let uniform = super::super::analyze_model_impl(&m, &data, &ucfg).unwrap();
         let uniform_abs = uniform.max_abs_u * unit_roundoff(20);
         // No boundary conversions happen (single format), but input/ctx
         // bookkeeping differs slightly; same order of magnitude.

@@ -158,17 +158,37 @@ pub fn analyze_class(
     })
 }
 
-/// Analyze a model over one representative per class (the paper's
-/// workflow: "we run the resulting program for all possible classes ...
-/// only for one representative of the class").
-pub fn analyze_model(model: &Model, data: &Dataset, cfg: &AnalysisConfig) -> Result<ModelAnalysis> {
-    let sw = Stopwatch::start();
-    let reps = if data.labels.is_empty() {
-        // Regression data (Pendulum): a single "class" over the input box.
+/// The (class, sample-index) jobs an analysis of `data` consists of: one
+/// representative per class, or a single job over the input box for
+/// regression data (Pendulum) with no labels.
+pub(crate) fn representatives(data: &Dataset) -> Vec<(usize, usize)> {
+    if data.labels.is_empty() {
         vec![(0usize, 0usize)]
     } else {
         data.class_representatives()
-    };
+    }
+}
+
+/// Analyze a model over one representative per class (the paper's
+/// workflow: "we run the resulting program for all possible classes ...
+/// only for one representative of the class").
+#[deprecated(
+    since = "0.2.0",
+    note = "use `api::Session::run` with an `api::AnalysisRequest` (ExecMode::Serial)"
+)]
+pub fn analyze_model(model: &Model, data: &Dataset, cfg: &AnalysisConfig) -> Result<ModelAnalysis> {
+    analyze_model_impl(model, data, cfg)
+}
+
+/// Serial analysis loop — the engine behind the deprecated
+/// [`analyze_model`] shim and the [`crate::api`] service layer.
+pub(crate) fn analyze_model_impl(
+    model: &Model,
+    data: &Dataset,
+    cfg: &AnalysisConfig,
+) -> Result<ModelAnalysis> {
+    let sw = Stopwatch::start();
+    let reps = representatives(data);
     let mut per_class = Vec::with_capacity(reps.len());
     for (class, idx) in reps {
         per_class.push(analyze_class(model, cfg, class, &data.inputs[idx])?);
@@ -218,7 +238,7 @@ pub fn certify_min_precision(
     for k in k_range {
         let mut cfg = base.clone();
         cfg.ctx.u_max = 2f64.powi(1 - k as i32);
-        let a = analyze_model(model, data, &cfg)?;
+        let a = analyze_model_impl(model, data, &cfg)?;
         if let Some(rk) = a.required_k {
             if rk <= k {
                 return Ok(Some((k, a)));
@@ -231,6 +251,9 @@ pub fn certify_min_precision(
 #[cfg(test)]
 mod tests {
     use super::*;
+    // The unit tests exercise the engine loop directly (the public shim is
+    // deprecated in favor of `api::Session`).
+    use super::analyze_model_impl as analyze_model;
     use crate::data::synthetic;
     use crate::model::zoo;
     use crate::util::Rng;

@@ -1,0 +1,209 @@
+//! The [`Session`](super::Session) model cache: a small LRU keyed by file
+//! path, validated by content hash. Repeated requests against the same
+//! model file skip the JSON parse (the dominant cost for large weight
+//! files); an edited file is transparently re-parsed because its content
+//! hash no longer matches.
+
+use crate::model::{model_from_json, Model};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// FNV-1a over the raw file bytes — cheap, dependency-free, and collision
+/// resistance far beyond what "did this file change between two requests"
+/// needs.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Snapshot of cache effectiveness counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Requests answered without re-parsing the model JSON.
+    pub hits: u64,
+    /// Requests that had to parse (cold, evicted, or content changed).
+    pub misses: u64,
+    /// Models currently resident.
+    pub entries: usize,
+    /// Maximum resident models before LRU eviction.
+    pub capacity: usize,
+}
+
+struct CacheEntry {
+    content_hash: u64,
+    model: Arc<Model>,
+    last_used: u64,
+}
+
+/// LRU model cache. Not internally synchronized — [`super::Session`] wraps
+/// it in a `Mutex`.
+pub(crate) struct ModelCache {
+    capacity: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    entries: HashMap<PathBuf, CacheEntry>,
+}
+
+/// Read a model file and hash its content — the part of a cached load
+/// that must happen *outside* the cache lock (file I/O).
+pub(crate) fn read_and_hash(path: &Path) -> Result<(String, u64)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading model file {}", path.display()))?;
+    let hash = fnv1a64(text.as_bytes());
+    Ok((text, hash))
+}
+
+/// Parse model JSON text — also lock-free work.
+pub(crate) fn parse_model(text: &str, path: &Path) -> Result<Arc<Model>> {
+    let v = crate::json::parse(text)
+        .with_context(|| format!("parsing model file {}", path.display()))?;
+    Ok(Arc::new(
+        model_from_json(&v).with_context(|| format!("model file {}", path.display()))?,
+    ))
+}
+
+impl ModelCache {
+    pub(crate) fn new(capacity: usize) -> ModelCache {
+        ModelCache {
+            capacity: capacity.max(1),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            entries: HashMap::new(),
+        }
+    }
+
+    /// Cache probe for a file whose content hash is already known. A
+    /// mismatching hash counts as a miss (the file changed — the stale
+    /// model must never be served).
+    pub(crate) fn lookup(&mut self, path: &Path, content_hash: u64) -> Option<Arc<Model>> {
+        self.tick += 1;
+        if let Some(e) = self.entries.get_mut(path) {
+            if e.content_hash == content_hash {
+                e.last_used = self.tick;
+                self.hits += 1;
+                return Some(Arc::clone(&e.model));
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Insert a freshly parsed model, evicting the least-recently-used
+    /// entry when at capacity.
+    pub(crate) fn insert(&mut self, path: &Path, content_hash: u64, model: Arc<Model>) {
+        self.tick += 1;
+        if !self.entries.contains_key(path) && self.entries.len() >= self.capacity {
+            if let Some(lru) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.entries.remove(&lru);
+            }
+        }
+        self.entries.insert(
+            path.to_path_buf(),
+            CacheEntry { content_hash, model, last_used: self.tick },
+        );
+    }
+
+    /// Single-threaded convenience (unit tests): read + hash + probe +
+    /// parse + insert in one call. `Session::load_model` stages these
+    /// around its mutex instead, so the lock is never held across I/O.
+    #[cfg(test)]
+    pub(crate) fn load(&mut self, path: &Path) -> Result<Arc<Model>> {
+        let (text, hash) = read_and_hash(path)?;
+        if let Some(m) = self.lookup(path, hash) {
+            return Ok(m);
+        }
+        let model = parse_model(&text, path)?;
+        self.insert(path, hash, Arc::clone(&model));
+        Ok(model)
+    }
+
+    pub(crate) fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            entries: self.entries.len(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("rigor_api_cache").join(name);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn fnv_distinguishes_contents() {
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+        assert_eq!(fnv1a64(b"model"), fnv1a64(b"model"));
+    }
+
+    #[test]
+    fn hit_on_second_load_miss_after_edit() {
+        let dir = tmpdir("hits");
+        let path = dir.join("m.json");
+        zoo::tiny_mlp(1).save(&path).unwrap();
+
+        let mut cache = ModelCache::new(4);
+        let a = cache.load(&path).unwrap();
+        let b = cache.load(&path).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second load must be served from cache");
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().misses, 1);
+
+        // Rewrite with a different model: the hash changes, so the cache
+        // must re-parse rather than serve the stale weights.
+        zoo::tiny_mlp(2).save(&path).unwrap();
+        let c = cache.load(&path).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "edited file must not be served stale");
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let dir = tmpdir("lru");
+        let paths: Vec<PathBuf> = (0..3)
+            .map(|i| {
+                let p = dir.join(format!("m{i}.json"));
+                zoo::tiny_mlp(i as u64).save(&p).unwrap();
+                p
+            })
+            .collect();
+        let mut cache = ModelCache::new(2);
+        cache.load(&paths[0]).unwrap();
+        cache.load(&paths[1]).unwrap();
+        cache.load(&paths[0]).unwrap(); // 0 is now most recent
+        cache.load(&paths[2]).unwrap(); // evicts 1
+        assert_eq!(cache.stats().entries, 2);
+        cache.load(&paths[0]).unwrap();
+        assert_eq!(cache.stats().hits, 2, "path 0 must still be resident");
+        cache.load(&paths[1]).unwrap();
+        assert_eq!(cache.stats().misses, 4, "path 1 must have been evicted");
+    }
+
+    #[test]
+    fn missing_file_is_a_clean_error() {
+        let mut cache = ModelCache::new(2);
+        let err = cache.load(Path::new("/nonexistent/model.json")).unwrap_err();
+        assert!(err.to_string().contains("reading model file"), "{err}");
+    }
+}

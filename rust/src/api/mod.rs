@@ -1,0 +1,386 @@
+//! **The service API — the one public front door to the analysis engine.**
+//!
+//! Every consumer (CLI, benches, examples, tests, and eventually network
+//! front ends) talks to a [`Session`]: a long-lived service object that
+//! owns the worker [`Pool`] and an LRU model cache, accepts declarative
+//! [`AnalysisRequest`]s, and returns [`AnalysisOutcome`]s with a stable,
+//! versioned JSON serialization.
+//!
+//! ```no_run
+//! use rigor::api::{AnalysisRequest, ExecMode, Session};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let session = Session::new();
+//! let req = AnalysisRequest::builder()
+//!     .model_path("artifacts/models/digits.json")
+//!     .data_path("artifacts/data/digits_eval.json")
+//!     .p_star(0.60)
+//!     .exact_inputs(true)
+//!     .mode(ExecMode::Pooled { workers: 0 })
+//!     .build()?;
+//! let outcome = session.run(&req)?;
+//! println!("{}", outcome.to_json_string());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The free functions this replaces —
+//! [`analysis::analyze_model`](crate::analysis::analyze_model),
+//! [`coordinator::analyze_model_parallel`](crate::coordinator::analyze_model_parallel)
+//! and [`coordinator::BatchRequest`](crate::coordinator::BatchRequest) —
+//! remain as thin `#[deprecated]` shims.
+
+mod cache;
+mod outcome;
+mod request;
+
+pub use cache::CacheStats;
+pub use outcome::{AnalysisOutcome, SCHEMA_VERSION};
+pub use request::{AnalysisRequest, AnalysisRequestBuilder, DataRef, ExecMode, ModelRef, ProgressFn};
+
+// Re-exported so API consumers need no imports from the engine layer.
+pub use crate::analysis::{ClassAnalysis, ModelAnalysis};
+
+use crate::analysis::{self, mixed};
+use crate::coordinator::Pool;
+use crate::data::Dataset;
+use crate::model::Model;
+use crate::util::Stopwatch;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// A long-lived analysis service: worker pool + model cache. Cheap to keep
+/// around, safe to share behind an `Arc` (all methods take `&self`).
+pub struct Session {
+    pool: Pool,
+    cache: Mutex<cache::ModelCache>,
+}
+
+/// Configures a [`Session`]. Zero-config default: one worker per available
+/// core, a 16-model cache.
+pub struct SessionBuilder {
+    workers: Option<usize>,
+    cache_capacity: usize,
+}
+
+impl SessionBuilder {
+    /// Worker-pool size. Unset = `std::thread::available_parallelism()`.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers.max(1));
+        self
+    }
+
+    /// Maximum resident models in the LRU cache (minimum 1).
+    pub fn cache_capacity(mut self, capacity: usize) -> Self {
+        self.cache_capacity = capacity;
+        self
+    }
+
+    pub fn build(self) -> Session {
+        let pool = match self.workers {
+            Some(w) => Pool::new(w, w * 4),
+            None => Pool::with_default_workers(),
+        };
+        Session { pool, cache: Mutex::new(cache::ModelCache::new(self.cache_capacity)) }
+    }
+}
+
+impl Default for Session {
+    fn default() -> Session {
+        Session::new()
+    }
+}
+
+impl Session {
+    /// A session with default sizing (host-parallel pool, 16-model cache).
+    pub fn new() -> Session {
+        Session::builder().build()
+    }
+
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder { workers: None, cache_capacity: 16 }
+    }
+
+    /// The session's shared worker pool (metrics, direct job submission).
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// Model-cache effectiveness counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.lock().unwrap().stats()
+    }
+
+    /// Load a model through the session cache (content-hash validated).
+    /// File I/O and JSON parsing happen outside the cache lock, so
+    /// concurrent requests for different models don't serialize; two
+    /// threads racing on the same cold model may both parse it (last
+    /// insert wins), which is benign.
+    pub fn load_model(&self, path: &Path) -> Result<Arc<Model>> {
+        let (text, hash) = cache::read_and_hash(path)?;
+        if let Some(m) = self.cache.lock().unwrap().lookup(path, hash) {
+            return Ok(m);
+        }
+        let model = cache::parse_model(&text, path)?;
+        self.cache.lock().unwrap().insert(path, hash, Arc::clone(&model));
+        Ok(model)
+    }
+
+    fn resolve(&self, req: &AnalysisRequest) -> Result<(Arc<Model>, Arc<Dataset>)> {
+        let model = match &req.model {
+            ModelRef::Path(p) => self.load_model(p)?,
+            ModelRef::Inline(m) => Arc::clone(m),
+        };
+        let data = match &req.data {
+            DataRef::Path(p) => Arc::new(Dataset::load(p)?),
+            DataRef::Inline(d) => Arc::clone(d),
+            DataRef::InputBox => Arc::new(Dataset {
+                input_shape: model.input_shape.clone(),
+                inputs: vec![vec![0.0; model.input_shape.iter().product()]],
+                labels: vec![],
+            }),
+        };
+        Ok((model, data))
+    }
+
+    /// Serve one analysis request: one CAA run per class representative,
+    /// serial or fanned out per [`ExecMode`], streamed through the
+    /// request's progress callback if one is set.
+    pub fn run(&self, req: &AnalysisRequest) -> Result<AnalysisOutcome> {
+        let (model, data) = self.resolve(req)?;
+        self.run_resolved(req, &model, &data)
+    }
+
+    /// [`Self::run`] with model and data already resolved — the tailoring
+    /// loop calls this so path-based requests are read and parsed once,
+    /// not once per candidate precision.
+    fn run_resolved(
+        &self,
+        req: &AnalysisRequest,
+        model: &Arc<Model>,
+        data: &Arc<Dataset>,
+    ) -> Result<AnalysisOutcome> {
+        let cfg = req.analysis_config();
+        let sw = Stopwatch::start();
+        let reps = analysis::representatives(&data);
+        let per_class = match req.mode {
+            ExecMode::Serial => {
+                let mut v = Vec::with_capacity(reps.len());
+                for (class, idx) in reps {
+                    let c = analysis::analyze_class(&model, &cfg, class, &data.inputs[idx])?;
+                    if let Some(cb) = &req.progress {
+                        (cb.as_ref())(&c);
+                    }
+                    v.push(c);
+                }
+                v
+            }
+            ExecMode::Pooled { workers } => {
+                let jobs: Vec<(usize, Vec<f64>)> = reps
+                    .into_iter()
+                    .map(|(class, idx)| (class, data.inputs[idx].clone()))
+                    .collect();
+                let job = {
+                    let model = Arc::clone(&model);
+                    let cfg = cfg.clone();
+                    let progress = req.progress.clone();
+                    move |(class, sample): (usize, Vec<f64>)| {
+                        let r = analysis::analyze_class(&model, &cfg, class, &sample);
+                        if let (Ok(c), Some(cb)) = (&r, &progress) {
+                            (cb.as_ref())(c);
+                        }
+                        r
+                    }
+                };
+                let results = if workers == 0 {
+                    self.pool.run_batch(jobs, job)
+                } else {
+                    Pool::new(workers, workers * 4).run_batch(jobs, job)
+                };
+                let mut v = Vec::with_capacity(results.len());
+                for r in results {
+                    v.push(r?);
+                }
+                v.sort_by_key(|c| c.class);
+                v
+            }
+        };
+        Ok(AnalysisOutcome::new(analysis::aggregate(&model, &cfg, per_class, sw.secs())))
+    }
+
+    /// Serve a batch of requests (the multi-model workload `BatchRequest`
+    /// used to express). Requests run in order; each is internally
+    /// parallel per its own [`ExecMode`].
+    pub fn run_all(&self, reqs: &[AnalysisRequest]) -> Result<Vec<AnalysisOutcome>> {
+        reqs.iter().map(|r| self.run(r)).collect()
+    }
+
+    /// The paper's §V semi-automatic precision-tailoring loop: re-run the
+    /// analysis at `u_max = 2^(1-k)` for each candidate `k` and return the
+    /// smallest `k` whose own bounds certify at the request's `p*`, with
+    /// that certifying outcome. Candidates below `k = 3` are skipped
+    /// (`u_max` would exceed the CAA validity range).
+    pub fn certify_min_precision(
+        &self,
+        req: &AnalysisRequest,
+        k_range: std::ops::RangeInclusive<u32>,
+    ) -> Result<Option<(u32, AnalysisOutcome)>> {
+        // Resolve once: path-based model/data are read and parsed a single
+        // time for the whole loop, not once per candidate k.
+        let (model, data) = self.resolve(req)?;
+        for k in k_range {
+            if k < 3 {
+                continue;
+            }
+            let outcome = self.run_resolved(&req.at_precision(k), &model, &data)?;
+            if let Some(rk) = outcome.required_k() {
+                if rk <= k {
+                    return Ok(Some((k, outcome)));
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// Greedy per-layer mixed-precision tuning (paper §VI) starting from a
+    /// certified uniform precision `k_uniform`, lowering layers toward
+    /// `k_floor`.
+    pub fn tune_mixed(
+        &self,
+        req: &AnalysisRequest,
+        k_uniform: u32,
+        k_floor: u32,
+    ) -> Result<mixed::MixedAnalysis> {
+        let (model, data) = self.resolve(req)?;
+        let cfg = req.analysis_config();
+        mixed::tune_mixed(&model, &data, &cfg, k_uniform, k_floor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::util::Rng;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn digits_like() -> Dataset {
+        let mut rng = Rng::new(1);
+        let inputs: Vec<Vec<f64>> = (0..6)
+            .map(|_| (0..8).map(|_| rng.range(0.0, 1.0)).collect())
+            .collect();
+        Dataset { input_shape: vec![8], inputs, labels: vec![0, 1, 2, 0, 1, 2] }
+    }
+
+    #[test]
+    fn serial_and_pooled_agree_exactly() {
+        let session = Session::builder().workers(4).build();
+        let base = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(42))
+            .data(digits_like());
+        let req_serial = base.build().unwrap();
+        let req_pooled = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(42))
+            .data(digits_like())
+            .mode(ExecMode::Pooled { workers: 0 })
+            .build()
+            .unwrap();
+        let a = session.run(&req_serial).unwrap().analysis;
+        let b = session.run(&req_pooled).unwrap().analysis;
+        assert_eq!(a.per_class.len(), b.per_class.len());
+        for (x, y) in a.per_class.iter().zip(&b.per_class) {
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.max_abs_u, y.max_abs_u);
+            assert_eq!(x.max_rel_u, y.max_rel_u);
+            assert_eq!(x.predicted, y.predicted);
+        }
+        assert_eq!(a.required_k, b.required_k);
+    }
+
+    #[test]
+    fn dedicated_pool_mode_works() {
+        let session = Session::builder().workers(1).build();
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(7))
+            .data(digits_like())
+            .mode(ExecMode::Pooled { workers: 3 })
+            .build()
+            .unwrap();
+        let out = session.run(&req).unwrap();
+        assert_eq!(out.analysis.per_class.len(), 3);
+        // The session pool saw none of the jobs.
+        assert_eq!(session.pool().metrics().submitted, 0);
+    }
+
+    #[test]
+    fn progress_callback_streams_every_class() {
+        let session = Session::new();
+        let seen = Arc::new(AtomicUsize::new(0));
+        let seen2 = Arc::clone(&seen);
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(42))
+            .data(digits_like())
+            .mode(ExecMode::Pooled { workers: 0 })
+            .on_class(move |c| {
+                assert!(c.class < 3);
+                seen2.fetch_add(1, Ordering::SeqCst);
+            })
+            .build()
+            .unwrap();
+        let out = session.run(&req).unwrap();
+        assert_eq!(seen.load(Ordering::SeqCst), out.analysis.per_class.len());
+    }
+
+    #[test]
+    fn input_box_analyzes_whole_box() {
+        let session = Session::new();
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_pendulum(7))
+            .input_box()
+            .input_radius(6.0)
+            .exact_inputs(true)
+            .build()
+            .unwrap();
+        let out = session.run(&req).unwrap();
+        assert_eq!(out.analysis.per_class.len(), 1);
+        assert!(out.analysis.max_abs_u.is_finite());
+    }
+
+    #[test]
+    fn model_path_requests_hit_the_cache() {
+        let dir = std::env::temp_dir().join("rigor_api_session");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mlp.json");
+        zoo::tiny_mlp(42).save(&path).unwrap();
+
+        let session = Session::new();
+        let req = AnalysisRequest::builder()
+            .model_path(&path)
+            .data(digits_like())
+            .build()
+            .unwrap();
+        let a = session.run(&req).unwrap();
+        let b = session.run(&req).unwrap();
+        assert_eq!(a.analysis.max_abs_u, b.analysis.max_abs_u);
+        let stats = session.cache_stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.entries, 1);
+    }
+
+    #[test]
+    fn certify_finds_a_precision() {
+        let session = Session::new();
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(42))
+            .data(digits_like())
+            .build()
+            .unwrap();
+        let (k, out) = session
+            .certify_min_precision(&req, 4..=30)
+            .unwrap()
+            .expect("small MLP must certify in [4, 30]");
+        assert!(out.required_k().unwrap() <= k);
+    }
+}

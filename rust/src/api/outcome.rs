@@ -1,0 +1,224 @@
+//! [`AnalysisOutcome`]: the stable result type of the service API — the
+//! engine's [`ModelAnalysis`] plus a **versioned** JSON serialization
+//! (`schema_version`) through the in-tree [`json`](crate::json) module, so
+//! downstream consumers (dashboards, report tooling, other languages) can
+//! rely on a stable, evolvable wire shape.
+
+use crate::analysis::{ClassAnalysis, ModelAnalysis};
+use crate::json::Value;
+use crate::report::TableRow;
+use anyhow::{anyhow, bail, Result};
+
+/// Version of [`AnalysisOutcome::to_json`]'s shape. Bump when a field is
+/// renamed, removed, or changes meaning; additions are backwards
+/// compatible and need no bump.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Result of one [`AnalysisRequest`](super::AnalysisRequest).
+#[derive(Clone, Debug)]
+pub struct AnalysisOutcome {
+    /// The engine-level analysis (bounds in units of `u`, per-class detail,
+    /// required precision).
+    pub analysis: ModelAnalysis,
+}
+
+impl AnalysisOutcome {
+    pub(crate) fn new(analysis: ModelAnalysis) -> AnalysisOutcome {
+        AnalysisOutcome { analysis }
+    }
+
+    /// Minimum precision that provably preserves the argmax at `p*`.
+    pub fn required_k(&self) -> Option<u32> {
+        self.analysis.required_k
+    }
+
+    /// The Table-I row for this outcome.
+    pub fn table_row(&self) -> TableRow {
+        TableRow::from_analysis(&self.analysis)
+    }
+
+    /// Versioned JSON serialization (`schema_version: 1`). Infinite bounds
+    /// (e.g. no relative bound for outputs straddling zero) are emitted as
+    /// `1e999`, which the in-tree parser reads back as `+inf`.
+    pub fn to_json(&self) -> Value {
+        let a = &self.analysis;
+        let per_class: Vec<Value> = a.per_class.iter().map(class_to_json).collect();
+        Value::obj(vec![
+            ("schema_version", Value::from(SCHEMA_VERSION as usize)),
+            ("model", Value::from(a.model_name.as_str())),
+            ("p_star", Value::Num(a.p_star)),
+            ("u_max", Value::Num(a.u_max)),
+            ("max_abs_u", Value::Num(a.max_abs_u)),
+            ("max_rel_u", Value::Num(a.max_rel_u)),
+            (
+                "required_k",
+                match a.required_k {
+                    Some(k) => Value::from(k as usize),
+                    None => Value::Null,
+                },
+            ),
+            ("total_secs", Value::Num(a.total_secs)),
+            ("per_class", Value::Array(per_class)),
+        ])
+    }
+
+    /// [`Self::to_json`] rendered as a pretty-printed document.
+    pub fn to_json_string(&self) -> String {
+        crate::json::to_string_pretty(&self.to_json())
+    }
+
+    /// Parse an outcome back from its [`Self::to_json`] form. Rejects
+    /// documents with a missing or different `schema_version`.
+    pub fn from_json(v: &Value) -> Result<AnalysisOutcome> {
+        let version = v
+            .get("schema_version")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!("outcome document missing 'schema_version'"))?;
+        if version != SCHEMA_VERSION as usize {
+            bail!("unsupported outcome schema_version {version} (this build reads {SCHEMA_VERSION})");
+        }
+        let f = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| anyhow!("outcome missing number '{k}'"))
+        };
+        let model_name = v
+            .get("model")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("outcome missing 'model'"))?
+            .to_string();
+        let required_k = match v.get("required_k") {
+            None | Some(Value::Null) => None,
+            Some(x) => Some(
+                x.as_usize()
+                    .ok_or_else(|| anyhow!("'required_k' must be an integer or null"))?
+                    as u32,
+            ),
+        };
+        let per_class = v
+            .get("per_class")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("outcome missing 'per_class' array"))?
+            .iter()
+            .map(class_from_json)
+            .collect::<Result<Vec<ClassAnalysis>>>()?;
+        Ok(AnalysisOutcome {
+            analysis: ModelAnalysis {
+                model_name,
+                per_class,
+                max_abs_u: f("max_abs_u")?,
+                max_rel_u: f("max_rel_u")?,
+                total_secs: f("total_secs")?,
+                required_k,
+                p_star: f("p_star")?,
+                u_max: f("u_max")?,
+            },
+        })
+    }
+}
+
+fn class_to_json(c: &ClassAnalysis) -> Value {
+    Value::obj(vec![
+        ("class", Value::from(c.class)),
+        ("max_abs_u", Value::Num(c.max_abs_u)),
+        ("max_rel_u", Value::Num(c.max_rel_u)),
+        ("top1_rel_u", Value::Num(c.top1_rel_u)),
+        ("predicted", Value::from(c.predicted)),
+        ("ambiguous", Value::from(c.ambiguous)),
+        ("secs", Value::Num(c.secs)),
+    ])
+}
+
+fn class_from_json(v: &Value) -> Result<ClassAnalysis> {
+    let f = |k: &str| -> Result<f64> {
+        v.get(k)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| anyhow!("per_class entry missing number '{k}'"))
+    };
+    let u = |k: &str| -> Result<usize> {
+        v.get(k)
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!("per_class entry missing integer '{k}'"))
+    };
+    Ok(ClassAnalysis {
+        class: u("class")?,
+        max_abs_u: f("max_abs_u")?,
+        max_rel_u: f("max_rel_u")?,
+        top1_rel_u: f("top1_rel_u")?,
+        predicted: u("predicted")?,
+        ambiguous: v
+            .get("ambiguous")
+            .and_then(Value::as_bool)
+            .ok_or_else(|| anyhow!("per_class entry missing bool 'ambiguous'"))?,
+        secs: f("secs")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_outcome() -> AnalysisOutcome {
+        AnalysisOutcome::new(ModelAnalysis {
+            model_name: "pendulum".into(),
+            per_class: vec![ClassAnalysis {
+                class: 0,
+                max_abs_u: 1.7,
+                max_rel_u: f64::INFINITY,
+                top1_rel_u: f64::INFINITY,
+                predicted: 0,
+                ambiguous: false,
+                secs: 0.1,
+            }],
+            max_abs_u: 1.7,
+            max_rel_u: f64::INFINITY,
+            total_secs: 0.1,
+            required_k: None,
+            p_star: 0.6,
+            u_max: 2f64.powi(-7),
+        })
+    }
+
+    #[test]
+    fn json_carries_schema_version() {
+        let v = sample_outcome().to_json();
+        assert_eq!(
+            v.get("schema_version").and_then(Value::as_usize),
+            Some(SCHEMA_VERSION as usize)
+        );
+        let text = crate::json::to_string_pretty(&v);
+        assert!(text.contains("\"schema_version\": 1"), "{text}");
+    }
+
+    #[test]
+    fn roundtrips_through_parser_including_infinities() {
+        let out = sample_outcome();
+        let text = out.to_json_string();
+        let back = AnalysisOutcome::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        let (a, b) = (&out.analysis, &back.analysis);
+        assert_eq!(a.model_name, b.model_name);
+        assert_eq!(a.max_abs_u, b.max_abs_u);
+        assert!(b.max_rel_u.is_infinite(), "infinite bound must survive the trip");
+        assert_eq!(a.required_k, b.required_k);
+        assert_eq!(a.p_star, b.p_star);
+        assert_eq!(a.u_max, b.u_max);
+        assert_eq!(a.per_class.len(), b.per_class.len());
+        assert_eq!(a.per_class[0].class, b.per_class[0].class);
+        assert_eq!(a.per_class[0].max_abs_u, b.per_class[0].max_abs_u);
+        assert!(b.per_class[0].top1_rel_u.is_infinite());
+        assert_eq!(a.per_class[0].ambiguous, b.per_class[0].ambiguous);
+    }
+
+    #[test]
+    fn rejects_wrong_or_missing_schema_version() {
+        let mut v = sample_outcome().to_json();
+        if let Value::Object(m) = &mut v {
+            m.insert("schema_version".into(), Value::from(99usize));
+        }
+        assert!(AnalysisOutcome::from_json(&v).is_err());
+        if let Value::Object(m) = &mut v {
+            m.remove("schema_version");
+        }
+        assert!(AnalysisOutcome::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,381 @@
+//! [`AnalysisRequest`]: the one description of "analyze this model, this
+//! way" that every front end (CLI, benches, examples, tests, future RPC
+//! servers) submits to a [`Session`](super::Session).
+
+use crate::analysis::{AnalysisConfig, ClassAnalysis};
+use crate::caa::Ctx;
+use crate::data::Dataset;
+use crate::model::Model;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// How a request's per-class jobs are executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Run all class jobs on the calling thread, in class order.
+    Serial,
+    /// Fan class jobs out over a worker pool. `workers == 0` uses the
+    /// session's shared pool; `workers > 0` spins up a dedicated pool of
+    /// that size for this request (useful for scaling experiments).
+    Pooled { workers: usize },
+}
+
+/// Streaming per-class progress callback: invoked once per completed class
+/// (from worker threads under [`ExecMode::Pooled`]).
+pub type ProgressFn = dyn Fn(&ClassAnalysis) + Send + Sync;
+
+/// The model a request analyzes.
+#[derive(Clone)]
+pub enum ModelRef {
+    /// Load from a JSON file through the session's LRU cache.
+    Path(PathBuf),
+    /// An in-memory model (zoo builders, programmatic construction).
+    Inline(Arc<Model>),
+}
+
+/// The inputs a request analyzes the model over.
+#[derive(Clone)]
+pub enum DataRef {
+    /// Load a dataset JSON file.
+    Path(PathBuf),
+    /// An in-memory dataset.
+    Inline(Arc<Dataset>),
+    /// A single unlabeled sample at the input-space origin — combined with
+    /// `input_radius` this is the whole-box verification workload (the
+    /// paper's Pendulum setting).
+    InputBox,
+}
+
+/// A validated analysis request. Build with [`AnalysisRequest::builder`].
+#[derive(Clone)]
+pub struct AnalysisRequest {
+    pub(crate) model: ModelRef,
+    pub(crate) data: DataRef,
+    pub(crate) p_star: f64,
+    pub(crate) u_max: f64,
+    pub(crate) input_radius: f64,
+    pub(crate) exact_inputs: bool,
+    pub(crate) mode: ExecMode,
+    pub(crate) ctx_override: Option<Ctx>,
+    pub(crate) progress: Option<Arc<ProgressFn>>,
+}
+
+impl AnalysisRequest {
+    pub fn builder() -> AnalysisRequestBuilder {
+        AnalysisRequestBuilder::new()
+    }
+
+    pub fn p_star(&self) -> f64 {
+        self.p_star
+    }
+
+    pub fn u_max(&self) -> f64 {
+        self.u_max
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// The engine-level configuration this request resolves to. Together
+    /// with [`AnalysisRequestBuilder::build_config`] (which shares the same
+    /// derivation) this is the single place an [`AnalysisConfig`] is
+    /// manufactured; layer-level tools (baselines, ablations, mixed tuning)
+    /// that still speak the engine vocabulary obtain their config here
+    /// instead of constructing one.
+    pub fn analysis_config(&self) -> AnalysisConfig {
+        derive_config(
+            self.ctx_override.clone(),
+            self.u_max,
+            self.p_star,
+            self.input_radius,
+            self.exact_inputs,
+        )
+    }
+
+    /// A copy of this request re-targeted at precision `k`
+    /// (`u_max = 2^(1-k)`) — the precision-tailoring loop's step.
+    pub(crate) fn at_precision(&self, k: u32) -> AnalysisRequest {
+        let u = 2f64.powi(1 - k as i32);
+        let mut req = self.clone();
+        req.u_max = u;
+        if let Some(ctx) = &mut req.ctx_override {
+            ctx.u_max = u;
+        }
+        req
+    }
+}
+
+/// Builder for [`AnalysisRequest`]. Defaults mirror the paper's setup:
+/// `p* = 0.60`, `u_max = 2^-7`, point inputs, rounded input representation,
+/// serial execution.
+pub struct AnalysisRequestBuilder {
+    model: Option<ModelRef>,
+    data: Option<DataRef>,
+    p_star: f64,
+    u_max: f64,
+    input_radius: f64,
+    exact_inputs: bool,
+    mode: ExecMode,
+    ctx_override: Option<Ctx>,
+    progress: Option<Arc<ProgressFn>>,
+}
+
+impl AnalysisRequestBuilder {
+    fn new() -> AnalysisRequestBuilder {
+        AnalysisRequestBuilder {
+            model: None,
+            data: None,
+            p_star: 0.60,
+            u_max: 2f64.powi(-7),
+            input_radius: 0.0,
+            exact_inputs: false,
+            mode: ExecMode::Serial,
+            ctx_override: None,
+            progress: None,
+        }
+    }
+
+    /// Analyze the model stored at `path` (served through the session's
+    /// LRU cache).
+    pub fn model_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.model = Some(ModelRef::Path(path.into()));
+        self
+    }
+
+    /// Analyze an in-memory model.
+    pub fn model(mut self, model: Model) -> Self {
+        self.model = Some(ModelRef::Inline(Arc::new(model)));
+        self
+    }
+
+    /// Analyze an already-shared in-memory model.
+    pub fn model_arc(mut self, model: Arc<Model>) -> Self {
+        self.model = Some(ModelRef::Inline(model));
+        self
+    }
+
+    /// Evaluate over the dataset stored at `path`.
+    pub fn data_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.data = Some(DataRef::Path(path.into()));
+        self
+    }
+
+    /// Evaluate over an in-memory dataset.
+    pub fn data(mut self, data: Dataset) -> Self {
+        self.data = Some(DataRef::Inline(Arc::new(data)));
+        self
+    }
+
+    /// Evaluate over an already-shared in-memory dataset.
+    pub fn data_arc(mut self, data: Arc<Dataset>) -> Self {
+        self.data = Some(DataRef::Inline(data));
+        self
+    }
+
+    /// Evaluate the whole input box: one unlabeled sample at the origin,
+    /// widened by [`input_radius`](Self::input_radius).
+    pub fn input_box(mut self) -> Self {
+        self.data = Some(DataRef::InputBox);
+        self
+    }
+
+    /// Top-1 confidence floor `p*` for precision tailoring (must satisfy
+    /// `0.5 < p* < 1`).
+    pub fn p_star(mut self, p_star: f64) -> Self {
+        self.p_star = p_star;
+        self
+    }
+
+    /// Upper bound on `u = 2^(1-k)`; bounds hold for all `u <= u_max`.
+    pub fn u_max(mut self, u_max: f64) -> Self {
+        self.u_max = u_max;
+        self
+    }
+
+    /// Convenience: `u_max = 2^-log2` (the paper's Table I uses `log2 = 7`).
+    pub fn u_max_log2(mut self, log2: u32) -> Self {
+        self.u_max = 2f64.powi(-(log2 as i32));
+        self
+    }
+
+    /// Radius of the input box around each sample (0 = point analysis).
+    pub fn input_radius(mut self, radius: f64) -> Self {
+        self.input_radius = radius;
+        self
+    }
+
+    /// Treat inputs as exactly representable in every analyzed format
+    /// (integer pixel data, verification queries at representable points).
+    pub fn exact_inputs(mut self, exact: bool) -> Self {
+        self.exact_inputs = exact;
+        self
+    }
+
+    /// Execution mode (default [`ExecMode::Serial`]).
+    pub fn mode(mut self, mode: ExecMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Replace the derived CAA context entirely — the ablation escape hatch
+    /// (feature-toggled contexts like `Ctx::new().no_labels()`). Production
+    /// requests should set [`u_max`](Self::u_max) instead.
+    pub fn ctx(mut self, ctx: Ctx) -> Self {
+        self.ctx_override = Some(ctx);
+        self
+    }
+
+    /// Per-class streaming callback, invoked as each class analysis
+    /// completes (possibly from a worker thread).
+    pub fn on_class(mut self, f: impl Fn(&ClassAnalysis) + Send + Sync + 'static) -> Self {
+        self.progress = Some(Arc::new(f));
+        self
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !(self.p_star > 0.5 && self.p_star < 1.0) {
+            bail!("p_star must be in (0.5, 1.0), got {}", self.p_star);
+        }
+        if self.ctx_override.is_none() && !(self.u_max > 0.0 && self.u_max <= 0.25) {
+            bail!("u_max must be in (0, 0.25], got {}", self.u_max);
+        }
+        if !(self.input_radius >= 0.0 && self.input_radius.is_finite()) {
+            bail!("input_radius must be finite and >= 0, got {}", self.input_radius);
+        }
+        if let ExecMode::Pooled { workers } = self.mode {
+            if workers > 4096 {
+                bail!("unreasonable worker count {workers}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Finish the request. Fails on out-of-range parameters or a missing
+    /// model/data reference.
+    pub fn build(self) -> Result<AnalysisRequest> {
+        self.validate()?;
+        let Some(model) = self.model else {
+            bail!("analysis request needs a model (model_path / model / model_arc)");
+        };
+        let Some(data) = self.data else {
+            bail!("analysis request needs data (data_path / data / data_arc / input_box)");
+        };
+        Ok(AnalysisRequest {
+            model,
+            data,
+            p_star: self.p_star,
+            u_max: self.u_max,
+            input_radius: self.input_radius,
+            exact_inputs: self.exact_inputs,
+            mode: self.mode,
+            ctx_override: self.ctx_override,
+            progress: self.progress,
+        })
+    }
+
+    /// Build only the engine-level [`AnalysisConfig`] — for layer-level
+    /// tools (baselines, ablation benches) that drive `analyze_class`
+    /// directly and need no model/data reference in the request.
+    pub fn build_config(self) -> Result<AnalysisConfig> {
+        self.validate()?;
+        Ok(derive_config(
+            self.ctx_override,
+            self.u_max,
+            self.p_star,
+            self.input_radius,
+            self.exact_inputs,
+        ))
+    }
+}
+
+/// The one derivation of an engine config from request-level parameters
+/// (shared by [`AnalysisRequest::analysis_config`] and
+/// [`AnalysisRequestBuilder::build_config`]).
+fn derive_config(
+    ctx_override: Option<Ctx>,
+    u_max: f64,
+    p_star: f64,
+    input_radius: f64,
+    exact_inputs: bool,
+) -> AnalysisConfig {
+    let ctx = ctx_override.unwrap_or_else(|| Ctx::with_u_max(u_max));
+    AnalysisConfig { ctx, p_star, input_radius, exact_inputs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn builder_validates_ranges() {
+        let ok = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .build();
+        assert!(ok.is_ok());
+
+        assert!(AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .p_star(0.5)
+            .build()
+            .is_err());
+        assert!(AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .u_max(0.5)
+            .build()
+            .is_err());
+        assert!(AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .input_radius(f64::NAN)
+            .build()
+            .is_err());
+        assert!(AnalysisRequest::builder().input_box().build().is_err(), "missing model");
+        assert!(AnalysisRequest::builder().model(zoo::tiny_mlp(1)).build().is_err(), "missing data");
+    }
+
+    #[test]
+    fn u_max_log2_matches_paper_default() {
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .u_max_log2(7)
+            .build()
+            .unwrap();
+        assert_eq!(req.u_max(), 2f64.powi(-7));
+        let cfg = req.analysis_config();
+        assert_eq!(cfg.ctx.u_max, 2f64.powi(-7));
+        assert_eq!(cfg.p_star, 0.60);
+    }
+
+    #[test]
+    fn at_precision_retargets_u_max() {
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .build()
+            .unwrap();
+        let req8 = req.at_precision(8);
+        assert_eq!(req8.u_max(), 2f64.powi(-7));
+        let req12 = req.at_precision(12);
+        assert_eq!(req12.u_max(), 2f64.powi(-11));
+    }
+
+    #[test]
+    fn build_config_applies_ctx_override() {
+        let cfg = AnalysisRequest::builder()
+            .ctx(crate::caa::Ctx::with_u_max(2f64.powi(-21)))
+            .p_star(0.7)
+            .exact_inputs(true)
+            .build_config()
+            .unwrap();
+        assert_eq!(cfg.ctx.u_max, 2f64.powi(-21));
+        assert_eq!(cfg.p_star, 0.7);
+        assert!(cfg.exact_inputs);
+    }
+}

@@ -1,14 +1,18 @@
 //! The analysis **coordinator**: a thread-pool job runtime (std::thread +
 //! condvars; the registry snapshot has no tokio) that fans analysis jobs
 //! out over workers with a bounded, backpressured queue and collects
-//! ordered results. This is the serving loop of the tool: one job per
-//! (model, class) pair; Python is never involved.
+//! ordered results. One job per (model, class) pair; Python is never
+//! involved.
+//!
+//! The [`Pool`] is the serving substrate; request-level orchestration
+//! lives in [`crate::api::Session`]. The free functions here remain as
+//! deprecated shims for old callers.
 
 mod pool;
 
 pub use pool::{Pool, PoolMetrics};
 
-use crate::analysis::{aggregate, analyze_class, AnalysisConfig, ClassAnalysis, ModelAnalysis};
+use crate::analysis::{aggregate, analyze_class, representatives, AnalysisConfig, ClassAnalysis, ModelAnalysis};
 use crate::data::Dataset;
 use crate::model::Model;
 use crate::util::Stopwatch;
@@ -16,19 +20,29 @@ use anyhow::Result;
 
 /// Analyze a model with per-class jobs fanned out over the pool —
 /// the parallel version of [`crate::analysis::analyze_model`].
+#[deprecated(
+    since = "0.2.0",
+    note = "use `api::Session::run` with an `api::AnalysisRequest` (ExecMode::Pooled)"
+)]
 pub fn analyze_model_parallel(
     model: &Model,
     data: &Dataset,
     cfg: &AnalysisConfig,
     pool: &Pool,
 ) -> Result<ModelAnalysis> {
+    analyze_model_parallel_impl(model, data, cfg, pool)
+}
+
+/// Pooled analysis loop — the engine behind the deprecated
+/// [`analyze_model_parallel`] shim and the [`crate::api`] service layer.
+pub(crate) fn analyze_model_parallel_impl(
+    model: &Model,
+    data: &Dataset,
+    cfg: &AnalysisConfig,
+    pool: &Pool,
+) -> Result<ModelAnalysis> {
     let sw = Stopwatch::start();
-    let reps = if data.labels.is_empty() {
-        vec![(0usize, 0usize)]
-    } else {
-        data.class_representatives()
-    };
-    let jobs: Vec<(usize, Vec<f64>)> = reps
+    let jobs: Vec<(usize, Vec<f64>)> = representatives(data)
         .into_iter()
         .map(|(class, idx)| (class, data.inputs[idx].clone()))
         .collect();
@@ -46,23 +60,28 @@ pub fn analyze_model_parallel(
 }
 
 /// A multi-model analysis request (what the CLI's `analyze` command and the
-/// Table-I bench submit).
+/// Table-I bench used to submit).
+#[deprecated(since = "0.2.0", note = "use `api::Session::run_all` with `api::AnalysisRequest`s")]
 pub struct BatchRequest {
     pub models: Vec<(Model, Dataset, AnalysisConfig)>,
 }
 
 /// Run a batch of model analyses, each internally parallel over classes.
+#[deprecated(since = "0.2.0", note = "use `api::Session::run_all`")]
 pub fn run_batch_request(req: &BatchRequest, pool: &Pool) -> Result<Vec<ModelAnalysis>> {
     req.models
         .iter()
-        .map(|(m, d, c)| analyze_model_parallel(m, d, c, pool))
+        .map(|(m, d, c)| analyze_model_parallel_impl(m, d, c, pool))
         .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::analysis::analyze_model;
+    // The unit tests exercise the engine loops directly (the public shims
+    // are deprecated in favor of `api::Session`).
+    use super::analyze_model_parallel_impl as analyze_model_parallel;
+    use crate::analysis::analyze_model_impl as analyze_model;
     use crate::model::zoo;
     use crate::util::Rng;
 
@@ -96,7 +115,8 @@ mod tests {
     }
 
     #[test]
-    fn batch_request_runs_multiple_models() {
+    #[allow(deprecated)]
+    fn batch_request_shim_runs_multiple_models() {
         let (m1, d1) = digits_like();
         let m2 = zoo::tiny_pendulum(3);
         let d2 = crate::data::synthetic::pendulum_grid(3);

@@ -76,10 +76,19 @@ impl Pool {
         Pool { shared, workers: handles }
     }
 
-    /// A pool sized to the machine (for CLI use).
-    pub fn default_for_host() -> Pool {
+    /// A pool with one worker per available core
+    /// (`std::thread::available_parallelism`, falling back to 4) and a
+    /// 4x-deep queue — the zero-config default the `api::Session` builder
+    /// uses.
+    pub fn with_default_workers() -> Pool {
         let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
         Pool::new(n, n * 4)
+    }
+
+    /// A pool sized to the machine (for CLI use).
+    #[deprecated(since = "0.2.0", note = "use `Pool::with_default_workers`")]
+    pub fn default_for_host() -> Pool {
+        Pool::with_default_workers()
     }
 
     pub fn worker_count(&self) -> usize {

@@ -13,9 +13,16 @@
 //! provably prevents rounding-induced misclassification given a top-1
 //! confidence margin `p* > 0.5`.
 //!
+//! The one public front door is [`api::Session`]: it owns the worker pool
+//! and an LRU model cache, serves [`api::AnalysisRequest`]s serially or
+//! fanned out, and returns [`api::AnalysisOutcome`]s with a versioned JSON
+//! serialization.
+//!
 //! Layer map (three-layer rust+JAX+Pallas architecture):
-//! * L3 (this crate): CAA+IA analysis engine, DNN inference engine, model
-//!   loader, precision tailoring, analysis [`coordinator`], PJRT [`runtime`].
+//! * L3 (this crate): [`api`] service layer over the CAA+IA analysis
+//!   engine, DNN inference engine, model loader, precision tailoring,
+//!   analysis [`coordinator`], PJRT [`runtime`] (behind the `pjrt`
+//!   feature).
 //! * L2 (`python/compile/model.py`): the evaluation networks in JAX,
 //!   AOT-lowered to HLO text artifacts.
 //! * L1 (`python/compile/kernels/`): Pallas kernels (dense, conv2d, softmax,
@@ -24,6 +31,7 @@
 //! See `DESIGN.md` for the complete system inventory and experiment index.
 
 pub mod analysis;
+pub mod api;
 pub mod bench;
 pub mod caa;
 pub mod cli;

@@ -1,23 +1,23 @@
 //! `rigor` — the analysis tool's command-line front end (L3 leader).
 //!
+//! Every analysis command is a thin shell over [`rigor::api::Session`]:
+//! the CLI parses flags into an [`rigor::api::AnalysisRequest`] and
+//! renders the returned [`rigor::api::AnalysisOutcome`].
+//!
 //! Commands:
 //! * `analyze` — per-class CAA analysis of a model JSON + dataset JSON,
-//!   fanned out over the coordinator pool; prints the Table-I row and the
-//!   minimum safe precision.
+//!   fanned out over the session pool; prints the Table-I row and the
+//!   minimum safe precision (`--json` emits the versioned outcome JSON).
 //! * `table1`  — regenerate the paper's Table I over all trained artifact
 //!   models.
+//! * `tune`    — mixed-precision tuning: per-layer minimal formats (§VI).
 //! * `sweep`   — accuracy-vs-precision sweep over the AOT k-variants
-//!   (PJRT).
-//! * `run`     — execute one artifact on an input vector (PJRT).
+//!   (needs the `pjrt` feature).
+//! * `run`     — execute one artifact on an input vector (needs `pjrt`).
 
-use rigor::analysis::AnalysisConfig;
-use rigor::caa::Ctx;
+use rigor::api::{AnalysisRequest, ExecMode, Session};
 use rigor::cli::{App, CmdSpec, OptSpec};
-use rigor::coordinator::{analyze_model_parallel, Pool};
-use rigor::data::Dataset;
-use rigor::model::Model;
 use rigor::report::{per_class_console, table1_console, table1_markdown, TableRow};
-use rigor::runtime::Runtime;
 use std::path::Path;
 
 fn app() -> App {
@@ -30,6 +30,8 @@ fn app() -> App {
         OptSpec { name: "exact-inputs", help: "inputs exactly representable", default: None },
         OptSpec { name: "workers", help: "pool workers (0 = host)", default: Some("0".into()) },
         OptSpec { name: "per-class", help: "print per-class detail", default: None },
+        OptSpec { name: "progress", help: "stream per-class results as they finish", default: None },
+        OptSpec { name: "json", help: "emit the versioned outcome JSON", default: None },
     ];
     App {
         name: "rigor",
@@ -91,22 +93,97 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
+fn session_from(p: &rigor::cli::Parsed) -> Session {
+    let w = p.get_usize("workers").unwrap_or(0);
+    if w == 0 {
+        Session::new()
+    } else {
+        Session::builder().workers(w).build()
+    }
+}
+
+fn cmd_analyze(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    let session = session_from(p);
+    let u_log2 = p.get_usize("u-max-log2")?;
+    let mut builder = AnalysisRequest::builder()
+        .model_path(p.get("model").unwrap())
+        .data_path(p.get("data").unwrap())
+        .p_star(p.get_f64("p-star")?)
+        .u_max_log2(u_log2 as u32)
+        .input_radius(p.get_f64("radius")?)
+        .exact_inputs(p.flag("exact-inputs"))
+        .mode(ExecMode::Pooled { workers: 0 });
+    if p.flag("progress") {
+        // Stream on stderr: stdout must stay a clean document when
+        // combined with --json.
+        builder = builder.on_class(|c| {
+            eprintln!(
+                "class {:>3}: abs {:>10.3e}u  rel {:>10.3e}u  predicted {}  ({:.2} s)",
+                c.class, c.max_abs_u, c.max_rel_u, c.predicted, c.secs
+            );
+        });
+    }
+    let req = builder.build()?;
+    let outcome = session.run(&req)?;
+    if p.flag("json") {
+        println!("{}", outcome.to_json_string());
+        return Ok(());
+    }
+    if p.flag("per-class") {
+        println!("{}", per_class_console(&outcome.analysis));
+    }
+    println!("{}", table1_console(&[outcome.table_row()], req.p_star()));
+    match outcome.required_k() {
+        Some(k) => println!("minimum safe precision: k = {k}"),
+        None => println!("no finite bound — cannot certify a precision"),
+    }
+    Ok(())
+}
+
+fn cmd_table1(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    let dir = Path::new(p.get("artifacts").unwrap());
+    let p_star = p.get_f64("p-star")?;
+    let session = Session::new();
+    let mut reqs = Vec::new();
+    for (name, radius) in [("digits", 0.0), ("mobilenet_mini", 0.0), ("pendulum", 6.0)] {
+        let builder = AnalysisRequest::builder()
+            .model_path(dir.join("models").join(format!("{name}.json")))
+            .p_star(p_star)
+            .exact_inputs(true)
+            .mode(ExecMode::Pooled { workers: 0 });
+        let builder = if radius > 0.0 {
+            // Whole-box verification workload (Pendulum).
+            builder.input_box().input_radius(radius)
+        } else {
+            builder.data_path(dir.join("data").join(format!("{name}_eval.json")))
+        };
+        reqs.push(builder.build()?);
+    }
+    let outcomes = session.run_all(&reqs)?;
+    let rows: Vec<TableRow> = outcomes.iter().map(|o| o.table_row()).collect();
+    if p.flag("markdown") {
+        println!("{}", table1_markdown(&rows, p_star, -7));
+    } else {
+        println!("{}", table1_console(&rows, p_star));
+    }
+    Ok(())
+}
+
 fn cmd_tune(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
-    use rigor::analysis::{certify_min_precision, mixed};
-    let model = Model::load(Path::new(p.get("model").unwrap()))?;
-    let data = Dataset::load(Path::new(p.get("data").unwrap()))?;
-    let cfg = AnalysisConfig {
-        ctx: Ctx::new(),
-        p_star: p.get_f64("p-star")?,
-        input_radius: 0.0,
-        exact_inputs: p.flag("exact-inputs"),
-    };
+    let session = Session::new();
+    let req = AnalysisRequest::builder()
+        .model_path(p.get("model").unwrap())
+        .data_path(p.get("data").unwrap())
+        .p_star(p.get_f64("p-star")?)
+        .exact_inputs(p.flag("exact-inputs"))
+        .build()?;
     let k_floor = p.get_usize("k-floor")? as u32;
-    let Some((k0, _)) = certify_min_precision(&model, &data, &cfg, 8..=30)? else {
-        anyhow::bail!("no uniform k in [8, 30] certifies at p* = {}", cfg.p_star);
+    let Some((k0, _)) = session.certify_min_precision(&req, 8..=30)? else {
+        anyhow::bail!("no uniform k in [8, 30] certifies at p* = {}", req.p_star());
     };
     println!("uniform certified baseline: k = {k0}");
-    let tuned = mixed::tune_mixed(&model, &data, &cfg, k0, k_floor)?;
+    let model = session.load_model(Path::new(p.get("model").unwrap()))?;
+    let tuned = session.tune_mixed(&req, k0, k_floor)?;
     println!("tuned per-layer formats (layer: type = k):");
     for (i, (layer, k)) in model.layers.iter().zip(&tuned.ks).enumerate() {
         println!("  {i:2}: {:<18} k = {k}", layer.type_name());
@@ -119,69 +196,10 @@ fn cmd_tune(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn pool_from(parsed: &rigor::cli::Parsed) -> anyhow::Result<Pool> {
-    let w = parsed.get_usize("workers").unwrap_or(0);
-    Ok(if w == 0 { Pool::default_for_host() } else { Pool::new(w, w * 4) })
-}
-
-fn cmd_analyze(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
-    let model = Model::load(Path::new(p.get("model").unwrap()))?;
-    let data = Dataset::load(Path::new(p.get("data").unwrap()))?;
-    let u_log2 = p.get_usize("u-max-log2")?;
-    let cfg = AnalysisConfig {
-        ctx: Ctx::with_u_max(2f64.powi(-(u_log2 as i32))),
-        p_star: p.get_f64("p-star")?,
-        input_radius: p.get_f64("radius")?,
-        exact_inputs: p.flag("exact-inputs"),
-    };
-    let pool = pool_from(p)?;
-    let a = analyze_model_parallel(&model, &data, &cfg, &pool)?;
-    if p.flag("per-class") {
-        println!("{}", per_class_console(&a));
-    }
-    println!("{}", table1_console(&[TableRow::from_analysis(&a)], cfg.p_star));
-    match a.required_k {
-        Some(k) => println!("minimum safe precision: k = {k}"),
-        None => println!("no finite bound — cannot certify a precision"),
-    }
-    Ok(())
-}
-
-fn cmd_table1(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
-    let dir = Path::new(p.get("artifacts").unwrap());
-    let p_star = p.get_f64("p-star")?;
-    let pool = Pool::default_for_host();
-    let mut rows = Vec::new();
-    for (name, radius) in [("digits", 0.0), ("mobilenet_mini", 0.0), ("pendulum", 6.0)] {
-        let model = Model::load(&dir.join("models").join(format!("{name}.json")))?;
-        let data = if radius > 0.0 {
-            // Whole-box verification workload (Pendulum).
-            Dataset {
-                input_shape: model.input_shape.clone(),
-                inputs: vec![vec![0.0; model.input_shape.iter().product()]],
-                labels: vec![],
-            }
-        } else {
-            Dataset::load(&dir.join("data").join(format!("{name}_eval.json")))?
-        };
-        let cfg = AnalysisConfig {
-            ctx: Ctx::new(),
-            p_star,
-            input_radius: radius,
-            exact_inputs: true,
-        };
-        let a = analyze_model_parallel(&model, &data, &cfg, &pool)?;
-        rows.push(TableRow::from_analysis(&a));
-    }
-    if p.flag("markdown") {
-        println!("{}", table1_markdown(&rows, p_star, -7));
-    } else {
-        println!("{}", table1_console(&rows, p_star));
-    }
-    Ok(())
-}
-
+#[cfg(feature = "pjrt")]
 fn cmd_sweep(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    use rigor::data::Dataset;
+    use rigor::runtime::Runtime;
     let dir = Path::new(p.get("artifacts").unwrap()).to_path_buf();
     let name = p.get("model").unwrap().to_string();
     let mut rt = Runtime::open(&dir)?;
@@ -213,7 +231,18 @@ fn cmd_sweep(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_sweep(_p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "the 'sweep' command executes AOT artifacts and needs the `pjrt` \
+         feature: rebuild with `cargo build --features pjrt` (requires the \
+         `xla` crate; see rust/Cargo.toml)"
+    );
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_run(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    use rigor::runtime::Runtime;
     let dir = Path::new(p.get("artifacts").unwrap()).to_path_buf();
     let mut rt = Runtime::open(&dir)?;
     let input: Vec<f32> = p
@@ -226,4 +255,13 @@ fn cmd_run(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
     let out = rt.run(p.get("model").unwrap(), p.get("variant").unwrap(), &input)?;
     println!("{out:?}");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_run(_p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "the 'run' command executes AOT artifacts and needs the `pjrt` \
+         feature: rebuild with `cargo build --features pjrt` (requires the \
+         `xla` crate; see rust/Cargo.toml)"
+    );
 }

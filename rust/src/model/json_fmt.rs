@@ -267,6 +267,92 @@ mod tests {
     }
 
     #[test]
+    fn zoo_builders_roundtrip_to_identical_json() {
+        // Strong round-trip contract on every zoo topology:
+        // model_to_json(model_from_json(x)) == x (Value equality, which is
+        // bit-exact on weights since numbers stay f64 end to end).
+        use crate::model::zoo;
+        for m in [
+            zoo::tiny_mlp(1),
+            zoo::tiny_cnn(2),
+            zoo::tiny_pendulum(3),
+            zoo::scaled_mlp(4, 12, 8, 5),
+        ] {
+            let v = model_to_json(&m);
+            let reparsed = model_from_json(&v).unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            assert_eq!(
+                model_to_json(&reparsed),
+                v,
+                "{}: JSON value must be a fixed point of parse∘serialize",
+                m.name
+            );
+            // And through text, too (writer + parser).
+            let text = json::to_string_pretty(&v);
+            let reparsed2 = model_from_json(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(model_to_json(&reparsed2), v, "{}: text round-trip", m.name);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_layers_with_context() {
+        // (payload, expected error fragment)
+        let cases = [
+            // missing 'type'
+            (
+                r#"{"name": "m", "input_shape": [2], "layers": [{"units": 2}]}"#,
+                "type",
+            ),
+            // bad padding string
+            (
+                r#"{"name": "m", "input_shape": [4, 4, 1], "layers": [
+                    {"type": "conv2d", "kh": 1, "kw": 1, "cin": 1, "cout": 1,
+                     "stride": 1, "padding": "diagonal",
+                     "weights": [1.0], "bias": [0.0]}]}"#,
+                "padding",
+            ),
+            // dense weight length mismatch
+            (
+                r#"{"name": "m", "input_shape": [2], "layers": [
+                    {"type": "dense", "units": 2, "in": 2,
+                     "weights": [1, 2, 3], "bias": [0, 0]}]}"#,
+                "weights",
+            ),
+            // dense bias length mismatch
+            (
+                r#"{"name": "m", "input_shape": [2], "layers": [
+                    {"type": "dense", "units": 2, "in": 2,
+                     "weights": [1, 2, 3, 4], "bias": [0]}]}"#,
+                "bias",
+            ),
+            // conv2d weight length mismatch
+            (
+                r#"{"name": "m", "input_shape": [4, 4, 1], "layers": [
+                    {"type": "conv2d", "kh": 3, "kw": 3, "cin": 1, "cout": 2,
+                     "stride": 1, "padding": "same",
+                     "weights": [1.0, 2.0], "bias": [0.0, 0.0]}]}"#,
+                "weights",
+            ),
+            // depthwise weight length mismatch
+            (
+                r#"{"name": "m", "input_shape": [4, 4, 2], "layers": [
+                    {"type": "depthwise_conv2d", "kh": 3, "kw": 3, "c": 2,
+                     "stride": 1, "padding": "same",
+                     "weights": [1.0], "bias": [0.0, 0.0]}]}"#,
+                "weights",
+            ),
+        ];
+        for (payload, fragment) in cases {
+            let err = model_from_json(&json::parse(payload).unwrap())
+                .expect_err(&format!("should reject: {payload}"));
+            let chain = format!("{err:#}");
+            assert!(
+                chain.contains(fragment),
+                "error for {payload}\nmust mention '{fragment}', got: {chain}"
+            );
+        }
+    }
+
+    #[test]
     fn conv_roundtrip() {
         let text = r#"{
             "name": "c", "input_shape": [4, 4, 1],

@@ -1,159 +1,43 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
-//! once by `python/compile/aot.py`) and executes them on the PJRT CPU
-//! client via the `xla` crate. This is the only place the L2/L1 output is
-//! touched at runtime — Python itself is never on this path.
-//!
-//! Interchange is **HLO text**, not serialized protos: jax >= 0.5 emits
-//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
-//! the text parser reassigns ids (see /opt/xla-example/README.md).
+//! AOT artifact handling: the manifest schema and artifact-directory
+//! helpers are always available; actually *executing* the artifacts on the
+//! PJRT CPU client (the [`Runtime`] in [`exec`]) needs the `xla` crate and
+//! is gated behind the off-by-default `pjrt` cargo feature, so the default
+//! build has no native dependencies.
 
 mod manifest;
 
 pub use manifest::{ArtifactEntry, Manifest};
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+mod exec;
+#[cfg(feature = "pjrt")]
+pub use exec::{LoadedExec, Runtime};
 
-/// A compiled artifact ready to execute.
-pub struct LoadedExec {
-    exe: xla::PjRtLoadedExecutable,
-    pub entry: ArtifactEntry,
+use std::path::PathBuf;
+
+/// Default artifacts location (`$RIGOR_ARTIFACTS` or `./artifacts`).
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("RIGOR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-impl LoadedExec {
-    /// Run on one f32 input vector; returns the flat f32 output.
-    pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
-        let n: usize = self.entry.input_shape.iter().product();
-        if input.len() != n {
-            anyhow::bail!(
-                "artifact '{}:{}' expects {} input values, got {}",
-                self.entry.name,
-                self.entry.variant,
-                n,
-                input.len()
-            );
-        }
-        let dims: Vec<i64> = self.entry.input_shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshape input literal: {e:?}"))?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[lit])
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result
-            .to_tuple1()
-            .map_err(|e| anyhow!("untuple result: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("read result: {e:?}"))
-    }
-}
-
-/// The artifact runtime: a PJRT CPU client plus a compile cache keyed by
-/// (model, variant).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Manifest,
-    cache: HashMap<(String, String), std::rc::Rc<LoadedExec>>,
-}
-
-impl Runtime {
-    /// Open an artifacts directory (must contain `manifest.json`).
-    pub fn open(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(&dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, cache: HashMap::new() })
-    }
-
-    /// Default artifacts location (`$RIGOR_ARTIFACTS` or `./artifacts`).
-    pub fn default_dir() -> PathBuf {
-        std::env::var_os("RIGOR_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
-    }
-
-    /// True if the default artifacts directory exists with a manifest
-    /// (lets tests and benches skip gracefully before `make artifacts`).
-    pub fn artifacts_available() -> bool {
-        Self::default_dir().join("manifest.json").exists()
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load (compile-once, cached) an artifact by model name and variant
-    /// (`"f32"`, `"k8"`, ...).
-    pub fn load(&mut self, name: &str, variant: &str) -> Result<std::rc::Rc<LoadedExec>> {
-        let key = (name.to_string(), variant.to_string());
-        if let Some(e) = self.cache.get(&key) {
-            return Ok(std::rc::Rc::clone(e));
-        }
-        let entry = self
-            .manifest
-            .find(name, variant)
-            .ok_or_else(|| anyhow!("artifact '{name}:{variant}' not in manifest"))?
-            .clone();
-        let path = self.dir.join(&entry.path);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile '{name}:{variant}': {e:?}"))?;
-        let loaded = std::rc::Rc::new(LoadedExec { exe, entry });
-        self.cache.insert(key, std::rc::Rc::clone(&loaded));
-        Ok(loaded)
-    }
-
-    /// Convenience: load + run.
-    pub fn run(&mut self, name: &str, variant: &str, input: &[f32]) -> Result<Vec<f32>> {
-        self.load(name, variant)?
-            .run_f32(input)
-            .with_context(|| format!("running {name}:{variant}"))
-    }
-
-    /// The k-variants available for a model, sorted ascending.
-    pub fn precision_variants(&self, name: &str) -> Vec<u32> {
-        let mut ks: Vec<u32> = self
-            .manifest
-            .artifacts
-            .iter()
-            .filter(|a| a.name == name)
-            .filter_map(|a| a.variant.strip_prefix('k').and_then(|s| s.parse().ok()))
-            .collect();
-        ks.sort_unstable();
-        ks
-    }
+/// True if the default artifacts directory exists with a manifest
+/// (lets tests and benches skip gracefully before `make artifacts`).
+pub fn artifacts_available() -> bool {
+    default_dir().join("manifest.json").exists()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    // Full runtime round-trips are exercised by `rust/tests/runtime_e2e.rs`
-    // and the examples once artifacts exist; here we test the pieces that
-    // need no artifacts.
-
     #[test]
     fn default_dir_env_override() {
         // Don't mutate the process env (tests run in parallel); just check
         // the fallback.
         if std::env::var_os("RIGOR_ARTIFACTS").is_none() {
-            assert_eq!(Runtime::default_dir(), PathBuf::from("artifacts"));
+            assert_eq!(default_dir(), PathBuf::from("artifacts"));
         }
-    }
-
-    #[test]
-    fn open_missing_dir_errors() {
-        let r = Runtime::open(Path::new("/nonexistent/rigor-artifacts"));
-        assert!(r.is_err());
     }
 }

@@ -1,16 +1,18 @@
 //! Cross-module integration tests that need no AOT artifacts: the full
-//! analysis pipeline (model zoo -> engine -> CAA -> margins -> report)
-//! plus coordinator fan-out, on small randomly-initialized networks.
+//! analysis pipeline (model zoo -> api::Session -> engine -> CAA ->
+//! margins -> report), the service API's caching / streaming / JSON
+//! contract, plus the deprecated shims' equivalence.
 
-use rigor::analysis::{self, analyze_model, AnalysisConfig, Margins};
+use rigor::api::{AnalysisOutcome, AnalysisRequest, ExecMode, Session, SCHEMA_VERSION};
 use rigor::caa::{Caa, Ctx};
-use rigor::coordinator::{analyze_model_parallel, Pool};
 use rigor::data::{synthetic, Dataset};
 use rigor::model::{model_from_json, model_to_json, zoo, Model};
 use rigor::quant::EmulatedFp;
 use rigor::report::{table1_console, table1_markdown, TableRow};
 use rigor::tensor::{EmuCtx, Tensor};
 use rigor::util::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 fn digits_like_dataset(n: usize) -> Dataset {
     let mut rng = Rng::new(3);
@@ -19,18 +21,25 @@ fn digits_like_dataset(n: usize) -> Dataset {
 
 #[test]
 fn full_pipeline_zoo_mlp_to_table() {
-    // Build a digits-like dataset + mlp, analyze, and render a Table-I row.
+    // Build a digits-like dataset + mlp, analyze through the service API,
+    // and render a Table-I row.
     let mut rng = Rng::new(10);
     let data = synthetic::digits(&mut rng, 8, 2, 0.05);
     let model = zoo::scaled_mlp(1, 64, 32, 10);
-    let mut cfg = AnalysisConfig::default();
-    cfg.exact_inputs = true; // integer pixels
-    let a = analyze_model(&model, &data, &cfg).unwrap();
+    let session = Session::new();
+    let req = AnalysisRequest::builder()
+        .model(model)
+        .data(data)
+        .exact_inputs(true) // integer pixels
+        .build()
+        .unwrap();
+    let out = session.run(&req).unwrap();
+    let a = &out.analysis;
     assert_eq!(a.per_class.len(), 10);
     assert!(a.max_abs_u.is_finite());
     assert!(a.required_k.is_some());
 
-    let row = TableRow::from_analysis(&a);
+    let row = out.table_row();
     let md = table1_markdown(&[row.clone()], 0.60, -7);
     assert!(md.contains(&a.model_name));
     let console = table1_console(&[row], 0.60);
@@ -38,36 +47,66 @@ fn full_pipeline_zoo_mlp_to_table() {
 }
 
 #[test]
-fn parallel_equals_sequential_on_real_sized_fanout() {
+fn pooled_equals_serial_on_real_sized_fanout() {
     let data = digits_like_dataset(30);
     let model = zoo::scaled_mlp(2, 64, 48, 10);
-    let cfg = AnalysisConfig::default();
-    let seq = analyze_model(&model, &data, &cfg).unwrap();
-    let pool = Pool::new(4, 8);
-    let par = analyze_model_parallel(&model, &data, &cfg, &pool).unwrap();
+    let session = Session::builder().workers(4).build();
+    let serial = AnalysisRequest::builder()
+        .model(model.clone())
+        .data(data.clone())
+        .build()
+        .unwrap();
+    let pooled = AnalysisRequest::builder()
+        .model(model)
+        .data(data)
+        .mode(ExecMode::Pooled { workers: 0 })
+        .build()
+        .unwrap();
+    let seq = session.run(&serial).unwrap().analysis;
+    let par = session.run(&pooled).unwrap().analysis;
     assert_eq!(seq.max_abs_u, par.max_abs_u);
     assert_eq!(seq.max_rel_u, par.max_rel_u);
     assert_eq!(seq.required_k, par.required_k);
-    assert_eq!(pool.metrics().submitted, 10);
+    assert_eq!(session.pool().metrics().submitted, 10);
     // The worker-side completion counter may lag the batch's own result
     // barrier by a few instructions; give it a moment.
     for _ in 0..100 {
-        if pool.metrics().completed == 10 {
+        if session.pool().metrics().completed == 10 {
             break;
         }
         std::thread::sleep(std::time::Duration::from_millis(1));
     }
-    assert_eq!(pool.metrics().completed, 10);
+    assert_eq!(session.pool().metrics().completed, 10);
 }
 
 #[test]
-fn model_json_roundtrip_through_files_preserves_analysis() {
+fn progress_callback_streams_from_pooled_workers() {
+    let data = digits_like_dataset(30);
+    let model = zoo::scaled_mlp(2, 64, 48, 10);
+    let session = Session::builder().workers(4).build();
+    let seen = Arc::new(AtomicUsize::new(0));
+    let seen2 = Arc::clone(&seen);
+    let req = AnalysisRequest::builder()
+        .model(model)
+        .data(data)
+        .mode(ExecMode::Pooled { workers: 0 })
+        .on_class(move |c| {
+            assert!(c.max_abs_u >= 0.0);
+            seen2.fetch_add(1, Ordering::SeqCst);
+        })
+        .build()
+        .unwrap();
+    let out = session.run(&req).unwrap();
+    assert_eq!(seen.load(Ordering::SeqCst), out.analysis.per_class.len());
+}
+
+#[test]
+fn model_json_roundtrip_through_files_preserves_analysis_and_caches() {
     let model = zoo::tiny_cnn(5);
     let dir = std::env::temp_dir().join("rigor_integration");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("cnn.json");
     model.save(&path).unwrap();
-    let loaded = Model::load(&path).unwrap();
 
     let mut rng = Rng::new(8);
     let data = synthetic::color_blobs(&mut rng, 6, 3, 1);
@@ -79,9 +118,75 @@ fn model_json_roundtrip_through_files_preserves_analysis() {
         .collect();
     let ds = Dataset { input_shape: vec![6, 6, 1], inputs, labels: data.labels.clone() };
 
-    let a1 = analyze_model(&model, &ds, &AnalysisConfig::default()).unwrap();
-    let a2 = analyze_model(&loaded, &ds, &AnalysisConfig::default()).unwrap();
+    let session = Session::new();
+    let inline = AnalysisRequest::builder()
+        .model(model)
+        .data(ds.clone())
+        .build()
+        .unwrap();
+    let from_file = AnalysisRequest::builder()
+        .model_path(&path)
+        .data(ds)
+        .build()
+        .unwrap();
+    let a1 = session.run(&inline).unwrap().analysis;
+    let a2 = session.run(&from_file).unwrap().analysis;
     assert_eq!(a1.max_abs_u, a2.max_abs_u, "JSON round-trip must not perturb analysis");
+
+    // A repeated file-backed request is served from the model cache.
+    let a3 = session.run(&from_file).unwrap().analysis;
+    assert_eq!(a2.max_abs_u, a3.max_abs_u);
+    let stats = session.cache_stats();
+    assert_eq!(stats.misses, 1);
+    assert_eq!(stats.hits, 1);
+}
+
+#[test]
+fn outcome_json_is_versioned_and_roundtrips() {
+    let session = Session::new();
+    let req = AnalysisRequest::builder()
+        .model(zoo::tiny_pendulum(7))
+        .input_box()
+        .input_radius(6.0)
+        .exact_inputs(true)
+        .build()
+        .unwrap();
+    let out = session.run(&req).unwrap();
+    let text = out.to_json_string();
+    let v = rigor::json::parse(&text).expect("outcome JSON must parse");
+    assert_eq!(
+        v.get("schema_version").and_then(rigor::json::Value::as_usize),
+        Some(SCHEMA_VERSION as usize)
+    );
+    let back = AnalysisOutcome::from_json(&v).unwrap();
+    assert_eq!(back.analysis.model_name, out.analysis.model_name);
+    assert_eq!(back.analysis.max_abs_u, out.analysis.max_abs_u);
+    assert_eq!(back.analysis.required_k, out.analysis.required_k);
+    assert_eq!(back.analysis.per_class.len(), out.analysis.per_class.len());
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_match_session_results() {
+    // The migration contract: old callers still get the exact numbers the
+    // new front door serves.
+    let data = digits_like_dataset(20);
+    let model = zoo::scaled_mlp(9, 64, 32, 10);
+    let session = Session::builder().workers(2).build();
+    let req = AnalysisRequest::builder()
+        .model(model.clone())
+        .data(data.clone())
+        .build()
+        .unwrap();
+    let via_api = session.run(&req).unwrap().analysis;
+    let cfg = req.analysis_config();
+    let via_shim = rigor::analysis::analyze_model(&model, &data, &cfg).unwrap();
+    assert_eq!(via_api.max_abs_u, via_shim.max_abs_u);
+    assert_eq!(via_api.required_k, via_shim.required_k);
+    let pool = rigor::coordinator::Pool::new(2, 8);
+    let via_par_shim =
+        rigor::coordinator::analyze_model_parallel(&model, &data, &cfg, &pool).unwrap();
+    assert_eq!(via_api.max_abs_u, via_par_shim.max_abs_u);
 }
 
 #[test]
@@ -144,11 +249,16 @@ fn required_k_guarantee_holds_empirically() {
     // class. (The *contract* of the paper's §IV.)
     let model = zoo::scaled_mlp(21, 64, 48, 10);
     let data = digits_like_dataset(30);
-    let mut cfg = AnalysisConfig::default();
-    cfg.exact_inputs = true;
-    cfg.p_star = 0.60;
-    let a = analyze_model(&model, &data, &cfg).unwrap();
-    let Some(k) = a.required_k else {
+    let session = Session::new();
+    let req = AnalysisRequest::builder()
+        .model(model.clone())
+        .data(data.clone())
+        .exact_inputs(true)
+        .p_star(0.60)
+        .build()
+        .unwrap();
+    let out = session.run(&req).unwrap();
+    let Some(k) = out.required_k() else {
         return; // no guarantee possible for this random net — vacuous
     };
     let k = k.min(24);
@@ -157,7 +267,7 @@ fn required_k_guarantee_holds_empirically() {
         let xr = Tensor::new(model.input_shape.clone(), input.clone());
         let yr = model.forward::<f64>(&(), xr).unwrap();
         let top = argmax(yr.data());
-        if yr.data()[top] < cfg.p_star {
+        if yr.data()[top] < req.p_star() {
             continue; // contract only covers confident predictions
         }
         let xe = Tensor::new(
@@ -204,13 +314,13 @@ fn softmax_theory_vs_caa_consistency() {
         );
     }
     // Empirical cross-check of the law itself.
-    let worst = analysis::softmax_theory::max_amplification(3, 10, 1e-4, 100);
+    let worst = rigor::analysis::softmax_theory::max_amplification(3, 10, 1e-4, 100);
     assert!(worst <= 5.5);
 }
 
 #[test]
 fn margins_and_report_end_to_end() {
-    let m = Margins::new(0.6).unwrap();
+    let m = rigor::analysis::Margins::new(0.6).unwrap();
     assert!(m.abs_margin() > 0.0 && m.rel_margin() > 0.0);
     // Rendering with a missing bound (pendulum-style).
     let rows = vec![TableRow {
@@ -233,34 +343,39 @@ fn model_to_json_value_is_parseable_text() {
 }
 
 // ---------------------------------------------------------------------------
-// Mixed precision (paper §VI future work, implemented in analysis::mixed)
+// Mixed precision (paper §VI future work, served through the Session API)
 // ---------------------------------------------------------------------------
 
 #[test]
 fn mixed_tuning_on_trained_pendulum() {
-    use rigor::analysis::{certify_min_precision, mixed};
-    use rigor::runtime::Runtime;
-    let model_path = Runtime::default_dir().join("models/pendulum.json");
+    use rigor::analysis::mixed;
+    let model_path = rigor::runtime::default_dir().join("models/pendulum.json");
     let (model, data) = if model_path.exists() {
         (
             Model::load(&model_path).unwrap(),
-            Dataset::load(&Runtime::default_dir().join("data/pendulum_eval.json")).unwrap(),
+            Dataset::load(&rigor::runtime::default_dir().join("data/pendulum_eval.json")).unwrap(),
         )
     } else {
         (zoo::tiny_pendulum(3), synthetic::pendulum_grid(3))
     };
-    let mut cfg = AnalysisConfig::default();
-    cfg.p_star = 0.75;
-    cfg.exact_inputs = true;
-    let Some((k0, _)) = certify_min_precision(&model, &data, &cfg, 6..=30).unwrap() else {
+    let session = Session::new();
+    let req = AnalysisRequest::builder()
+        .model(model.clone())
+        .data(data.clone())
+        .p_star(0.75)
+        .exact_inputs(true)
+        .build()
+        .unwrap();
+    let Some((k0, _)) = session.certify_min_precision(&req, 6..=30).unwrap() else {
         return; // cannot certify this net at all — vacuous for random nets
     };
-    let tuned = mixed::tune_mixed(&model, &data, &cfg, k0, 4).unwrap();
+    let tuned = session.tune_mixed(&req, k0, 4).unwrap();
     assert!(tuned.certified);
     assert_eq!(tuned.ks.len(), model.layers.len());
     assert!(tuned.ks.iter().all(|&k| k <= k0));
 
     // Witness: the emulated mixed execution stays within the mixed bounds.
+    let cfg = req.analysis_config();
     for sample in data.inputs.iter().take(5) {
         let bounds = mixed::analyze_sample_mixed(&model, &cfg, &tuned.ks, sample).unwrap();
         let emu = mixed::forward_mixed_emulated(&model, &tuned.ks, sample).unwrap();
@@ -324,7 +439,7 @@ fn caa_analysis_deterministic_across_runs() {
     let m = zoo::tiny_cnn(77);
     let n: usize = m.input_shape.iter().product();
     let sample: Vec<f64> = (0..n).map(|i| (i % 5) as f64 / 5.0).collect();
-    let cfg = AnalysisConfig::default();
+    let cfg = AnalysisRequest::builder().build_config().unwrap();
     let a = rigor::analysis::analyze_class(&m, &cfg, 0, &sample).unwrap();
     let b = rigor::analysis::analyze_class(&m, &cfg, 0, &sample).unwrap();
     assert_eq!(a.max_abs_u, b.max_abs_u);

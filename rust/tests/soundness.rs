@@ -4,7 +4,6 @@
 //! artifacts; the artifact-based variant lives in the soundness_sweep
 //! bench).
 
-use rigor::analysis::{analyze_class, AnalysisConfig};
 use rigor::caa::Ctx;
 use rigor::model::{zoo, Model};
 use rigor::prop;
@@ -12,16 +11,16 @@ use rigor::quant::{unit_roundoff, EmulatedFp};
 use rigor::tensor::{EmuCtx, Tensor};
 
 fn check_model_soundness(model: &Model, sample: &[f64], ks: &[u32]) {
-    let cfg = AnalysisConfig::default(); // rounded (non-exact) inputs
-    let a = analyze_class(model, &cfg, 0, sample).unwrap();
+    let ctx = Ctx::new(); // paper default u_max = 2^-7, rounded inputs
     let xr = Tensor::new(model.input_shape.clone(), sample.to_vec());
     let yr = model.forward::<f64>(&(), xr).unwrap();
 
-    // Re-run the CAA forward to get per-output bounds (analyze_class only
-    // aggregates; we want elementwise checks).
-    let input = rigor::analysis::caa_input(&cfg.ctx, &model.input_shape, sample, 0.0);
+    // The CAA forward gives per-output bounds (the aggregate path through
+    // `api::Session` is exercised by integration.rs and the soundness_sweep
+    // bench; here we want elementwise checks).
+    let input = rigor::analysis::caa_input(&ctx, &model.input_shape, sample, 0.0);
     let yc = model
-        .forward::<rigor::caa::Caa>(&cfg.ctx, input)
+        .forward::<rigor::caa::Caa>(&ctx, input)
         .unwrap();
 
     for &k in ks {
@@ -43,7 +42,6 @@ fn check_model_soundness(model: &Model, sample: &[f64], ks: &[u32]) {
             );
         }
     }
-    let _ = a;
 }
 
 #[test]
@@ -91,7 +89,6 @@ fn box_analysis_encloses_every_point_in_the_box() {
     // An input-box analysis must dominate point runs anywhere in the box.
     let model = zoo::tiny_pendulum(99);
     let ctx = Ctx::new();
-    let cfg = AnalysisConfig { ctx: ctx.clone(), p_star: 0.6, input_radius: 0.5, exact_inputs: false };
     let center = [1.0, -2.0];
     let input = rigor::analysis::caa_input_cfg(&ctx, &model.input_shape, &center, 0.5, false);
     let yc = model.forward::<rigor::caa::Caa>(&ctx, input).unwrap();
@@ -121,5 +118,4 @@ fn box_analysis_encloses_every_point_in_the_box() {
             );
         }
     }
-    let _ = cfg;
 }
