@@ -6,13 +6,25 @@
 //! 2. the same dot-product loop with per-op heap boxing (an MPFI-style
 //!    allocation pattern) for comparison,
 //! 3. analysis-time scaling vs parameter count (should be ~linear),
-//! 4. projected time for the paper's 27M-parameter MobileNet.
+//! 4. projected time for the paper's 27M-parameter MobileNet,
+//! 5. the legacy per-layer interpreter vs the compiled `plan::Plan`
+//!    executor, side by side per arithmetic (f64 reference, emulated-k
+//!    witness, CAA analysis) — written to `BENCH_plan.json` so the perf
+//!    trajectory of the compiled path is machine-trackable from this PR
+//!    onward.
+
+#![allow(deprecated)] // forward_interpreted is the baseline under test
 
 use rigor::analysis::analyze_class;
 use rigor::api::AnalysisRequest;
 use rigor::bench::Bencher;
 use rigor::caa::{Caa, Ctx};
+use rigor::interval::Interval;
+use rigor::json::Value;
 use rigor::model::zoo;
+use rigor::plan::{Arena, Plan};
+use rigor::quant::EmulatedFp;
+use rigor::tensor::{EmuCtx, Tensor};
 use rigor::util::Rng;
 
 fn main() {
@@ -84,6 +96,138 @@ fn main() {
         "\nprojected 27M-parameter MobileNet analysis at {nspp:.0} ns/param: \
          ~{projected:.0} s/class (paper: 15120 s/class on MPFI)"
     );
+
+    // ---- 5: interpreter vs compiled plan ------------------------------------
+    // Same model, same arithmetic; only the execution substrate differs:
+    // the legacy Vec<Layer> walk (shape checks + a fresh tensor per layer)
+    // vs the compiled plan (AOT shapes, fusion, arena reuse).
+    println!("\ninterpreter vs compiled plan:");
+    let mut comparisons: Vec<(String, f64, f64)> = Vec::new();
+
+    let mlp = zoo::scaled_mlp(2, 256, 256, 10);
+    let cnn = zoo::tiny_cnn(3);
+    let mlp_x: Vec<f64> = (0..256).map(|i| (i % 11) as f64 / 11.0).collect();
+    let cnn_n: usize = cnn.input_shape.iter().product();
+    let cnn_x: Vec<f64> = (0..cnn_n).map(|i| (i % 7) as f64 / 7.0).collect();
+
+    // f64 reference trace (the fused witness path: BN folded, acts paired).
+    for (name, model, x) in [("f64/mlp-256", &mlp, &mlp_x), ("f64/tiny-cnn", &cnn, &cnn_x)] {
+        let interp = b
+            .bench(&format!("{name}/interpreter"), || {
+                model
+                    .forward_interpreted::<f64>(
+                        &(),
+                        Tensor::new(model.input_shape.clone(), x.clone()),
+                    )
+                    .unwrap()
+            })
+            .mean;
+        let plan = Plan::for_reference(model).expect("compile");
+        let mut arena: Arena<f64> = Arena::new();
+        let planned = b
+            .bench(&format!("{name}/plan"), || {
+                plan.execute::<f64>(&(), x, &mut arena).unwrap().len()
+            })
+            .mean;
+        comparisons.push((name.to_string(), interp.as_nanos() as f64, planned.as_nanos() as f64));
+    }
+
+    // Emulated precision-k witness run (unfused: must match the analyzed
+    // computation).
+    {
+        let k = 12u32;
+        let ec = EmuCtx { k };
+        let xe: Vec<EmulatedFp> = cnn_x.iter().map(|&v| EmulatedFp::new(v, k)).collect();
+        let interp = b
+            .bench("emu-k12/tiny-cnn/interpreter", || {
+                cnn.forward_interpreted::<EmulatedFp>(
+                    &ec,
+                    Tensor::new(cnn.input_shape.clone(), xe.clone()),
+                )
+                .unwrap()
+            })
+            .mean;
+        let plan = Plan::unfused(&cnn).expect("compile");
+        let mut arena: Arena<EmulatedFp> = Arena::new();
+        let planned = b
+            .bench("emu-k12/tiny-cnn/plan", || {
+                plan.execute::<EmulatedFp>(&ec, &xe, &mut arena).unwrap().len()
+            })
+            .mean;
+        let row = ("emu-k12/tiny-cnn".into(), interp.as_nanos() as f64, planned.as_nanos() as f64);
+        comparisons.push(row);
+    }
+
+    // CAA analysis run (Fusion::Pair — bit-identical bounds).
+    {
+        let interp = b
+            .bench("caa/tiny-cnn/interpreter", || {
+                let input = Tensor::new(
+                    cnn.input_shape.clone(),
+                    cnn_x
+                        .iter()
+                        .map(|&v| Caa::input(&ctx, Interval::point(v), v))
+                        .collect::<Vec<_>>(),
+                );
+                cnn.forward_interpreted::<Caa>(&ctx, input).unwrap()
+            })
+            .mean;
+        let plan = Plan::for_analysis(&cnn).expect("compile");
+        let mut arena: Arena<Caa> = Arena::new();
+        let planned = b
+            .bench("caa/tiny-cnn/plan", || {
+                let input: Vec<Caa> = cnn_x
+                    .iter()
+                    .map(|&v| Caa::input(&ctx, Interval::point(v), v))
+                    .collect();
+                plan.execute::<Caa>(&ctx, &input, &mut arena).unwrap().len()
+            })
+            .mean;
+        let row = ("caa/tiny-cnn".into(), interp.as_nanos() as f64, planned.as_nanos() as f64);
+        comparisons.push(row);
+    }
+
+    println!("{:<20} {:>14} {:>14} {:>9}", "workload", "interpreter", "plan", "speedup");
+    for (name, i_ns, p_ns) in &comparisons {
+        println!(
+            "{name:<20} {:>12.1} us {:>12.1} us {:>8.2}x",
+            i_ns / 1e3,
+            p_ns / 1e3,
+            i_ns / p_ns
+        );
+    }
+
+    // Machine-readable trajectory record.
+    let json = Value::obj(vec![
+        ("schema_version", Value::from(1usize)),
+        ("bench", Value::from("perf_scaling")),
+        (
+            "comparisons",
+            Value::arr(
+                comparisons
+                    .iter()
+                    .map(|(name, i_ns, p_ns)| {
+                        Value::obj(vec![
+                            ("name", Value::from(name.clone())),
+                            ("interpreter_ns", Value::from(*i_ns)),
+                            ("plan_ns", Value::from(*p_ns)),
+                            ("speedup", Value::from(i_ns / p_ns)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("ns_per_param_largest_mlp", Value::from(*nspp)),
+    ]);
+    let out_path = std::env::var("RIGOR_BENCH_OUT").unwrap_or_else(|_| "BENCH_plan.json".into());
+    match std::fs::write(&out_path, rigor::json::to_string_pretty(&json)) {
+        Ok(()) => println!(
+            "\nwrote {} (cwd {})",
+            out_path,
+            std::env::current_dir().map(|d| d.display().to_string()).unwrap_or_default()
+        ),
+        Err(e) => eprintln!("[warn] could not write {out_path}: {e}"),
+    }
 
     b.report();
 }

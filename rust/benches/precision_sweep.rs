@@ -65,14 +65,20 @@ fn pjrt_sweep() {
     b.report();
 }
 
-/// Engine-only fallback: per-op emulation over a zoo model.
+/// Engine-only fallback: per-op emulation over a zoo model, driven
+/// through a plan compiled once for the whole sweep (unfused, so the
+/// emulated run matches the analyzed computation).
 fn engine_fallback() {
     use rigor::model::zoo;
+    use rigor::plan::{Arena, Plan};
     use rigor::quant::EmulatedFp;
-    use rigor::tensor::{EmuCtx, Tensor};
+    use rigor::tensor::EmuCtx;
 
     let mut b = Bencher::new("precision_sweep_engine");
     let model = zoo::scaled_mlp(7, 64, 48, 10);
+    let plan = Plan::unfused(&model).expect("compile");
+    let mut ref_arena: Arena<f64> = Arena::new();
+    let mut emu_arena: Arena<EmulatedFp> = Arena::new();
     let mut rng = rigor::util::Rng::new(9);
     let data = rigor::data::synthetic::digits(&mut rng, 8, 4, 0.05);
     println!("{:>4} {:>12}", "k", "agreement");
@@ -81,23 +87,17 @@ fn engine_fallback() {
         let mut agree = 0;
         let (_, _stats) = b.bench_once(&format!("engine/k={k}"), || {
             for input in &data.inputs {
-                let yr = model
-                    .forward::<f64>(&(), Tensor::new(model.input_shape.clone(), input.clone()))
-                    .unwrap();
-                let xe = Tensor::new(
-                    model.input_shape.clone(),
-                    input.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
-                );
-                let ye = model.forward::<EmulatedFp>(&ec, xe).unwrap();
+                let yr = plan.execute::<f64>(&(), input, &mut ref_arena).unwrap().to_vec();
+                let xe: Vec<EmulatedFp> =
+                    input.iter().map(|&v| EmulatedFp::new(v, k)).collect();
+                let ye = plan.execute::<EmulatedFp>(&ec, &xe, &mut emu_arena).unwrap();
                 let am_r = yr
-                    .data()
                     .iter()
                     .enumerate()
                     .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                     .unwrap()
                     .0;
                 let am_e = ye
-                    .data()
                     .iter()
                     .enumerate()
                     .max_by(|a, b| a.1.v.partial_cmp(&b.1.v).unwrap())

@@ -17,8 +17,9 @@ use rigor::api::{AnalysisRequest, Session};
 use rigor::bench::Bencher;
 use rigor::data::Dataset;
 use rigor::model::{zoo, Model};
+use rigor::plan::{Arena, Plan};
 use rigor::quant::{unit_roundoff, EmulatedFp};
-use rigor::tensor::{EmuCtx, Tensor};
+use rigor::tensor::EmuCtx;
 use std::sync::Arc;
 
 /// One sample per "class": the per-class results of the outcome are then
@@ -31,20 +32,20 @@ fn per_sample_dataset(model: &Model, samples: &[Vec<f64>]) -> Dataset {
     }
 }
 
-/// Worst observed emulated-vs-reference deviation over the samples.
-fn worst_observed(model: &Model, samples: &[Vec<f64>], k: u32) -> f64 {
+/// Worst observed emulated-vs-reference deviation over the samples, driven
+/// through a precompiled **unfused** plan (the witness must execute the
+/// analyzed computation; the plan is compiled once for the whole sweep).
+fn worst_observed(plan: &Plan, samples: &[Vec<f64>], k: u32) -> f64 {
     let ec = EmuCtx { k };
+    let mut ref_arena: Arena<f64> = Arena::new();
+    let mut emu_arena: Arena<EmulatedFp> = Arena::new();
     let mut worst = 0.0f64;
     for sample in samples {
-        let xr = Tensor::new(model.input_shape.clone(), sample.clone());
-        let yr = model.forward::<f64>(&(), xr).unwrap();
-        let xe = Tensor::new(
-            model.input_shape.clone(),
-            sample.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
-        );
-        let ye = model.forward::<EmulatedFp>(&ec, xe).unwrap();
+        let yr = plan.execute::<f64>(&(), sample, &mut ref_arena).unwrap().to_vec();
+        let xe: Vec<EmulatedFp> = sample.iter().map(|&v| EmulatedFp::new(v, k)).collect();
+        let ye = plan.execute::<EmulatedFp>(&ec, &xe, &mut emu_arena).unwrap();
         for i in 0..yr.len() {
-            worst = worst.max((ye.data()[i].v - yr.data()[i]).abs());
+            worst = worst.max((ye[i].v - yr[i]).abs());
         }
     }
     worst
@@ -60,6 +61,7 @@ fn sweep(
     exact_inputs: bool,
 ) {
     let data = Arc::new(per_sample_dataset(model, samples));
+    let witness_plan = Plan::unfused(model).expect("compile");
     println!("{:>4} {:>14} {:>14} {:>12}", "k", "observed", "bound·u", "margin");
     for &k in ks {
         // Analyze *at* this precision (u_max = 2^(1-k)) — the paper's
@@ -76,7 +78,7 @@ fn sweep(
         let (_, _stats) = b.bench_once(&format!("{tag}/k={k}"), || {
             let outcome = session.run(&req).unwrap();
             worst_bound = outcome.analysis.max_abs_u * unit_roundoff(k);
-            worst_obs = worst_observed(model, samples, k);
+            worst_obs = worst_observed(&witness_plan, samples, k);
         });
         let margin = if worst_obs > 0.0 { worst_bound / worst_obs } else { f64::INFINITY };
         println!("{k:>4} {worst_obs:>14.3e} {worst_bound:>14.3e} {margin:>11.1e}x");

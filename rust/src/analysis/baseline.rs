@@ -11,9 +11,11 @@
 
 use super::{AnalysisConfig, ClassAnalysis};
 use crate::caa::Caa;
+use crate::coordinator::with_worker_scratch;
 use crate::model::Model;
+use crate::plan::{Arena, Plan};
 use crate::quant::{unit_roundoff, EmulatedFp};
-use crate::tensor::{EmuCtx, Tensor};
+use crate::tensor::EmuCtx;
 use crate::util::Stopwatch;
 use anyhow::Result;
 
@@ -27,33 +29,35 @@ pub fn ia_only_class(
     sample: &[f64],
 ) -> Result<ClassAnalysis> {
     let sw = Stopwatch::start();
+    let plan = Plan::for_analysis(model)?;
     let ctx = cfg.ctx.clone().ia_only();
     let input = super::caa_input_cfg(
         &ctx,
-        &model.input_shape,
+        plan.input_shape(),
         sample,
         cfg.input_radius,
         cfg.exact_inputs,
     );
-    let out = model.forward::<Caa>(&ctx, input)?;
-    let outs = out.data();
-    let max_abs_u = outs
-        .iter()
-        .map(|o| ia_abs_estimate_u(o, ctx.u_max))
-        .fold(0.0f64, f64::max);
-    let max_rel_u = outs
-        .iter()
-        .map(|o| ia_rel_estimate_u(o, ctx.u_max))
-        .fold(0.0f64, f64::max);
-    let predicted = crate::caa::argmax_fp(outs);
-    Ok(ClassAnalysis {
-        class,
-        max_abs_u,
-        max_rel_u,
-        top1_rel_u: ia_rel_estimate_u(&outs[predicted], ctx.u_max),
-        predicted,
-        ambiguous: outs.len() > 1 && crate::caa::argmax_ambiguous(outs),
-        secs: sw.secs(),
+    with_worker_scratch(|arena: &mut Arena<Caa>| {
+        let outs = plan.execute::<Caa>(&ctx, input.data(), arena)?;
+        let max_abs_u = outs
+            .iter()
+            .map(|o| ia_abs_estimate_u(o, ctx.u_max))
+            .fold(0.0f64, f64::max);
+        let max_rel_u = outs
+            .iter()
+            .map(|o| ia_rel_estimate_u(o, ctx.u_max))
+            .fold(0.0f64, f64::max);
+        let predicted = crate::caa::argmax_fp(outs);
+        Ok(ClassAnalysis {
+            class,
+            max_abs_u,
+            max_rel_u,
+            top1_rel_u: ia_rel_estimate_u(&outs[predicted], ctx.u_max),
+            predicted,
+            ambiguous: outs.len() > 1 && crate::caa::argmax_ambiguous(outs),
+            secs: sw.secs(),
+        })
     })
 }
 
@@ -90,17 +94,20 @@ pub fn sampling_estimate(
 ) -> Result<(f64, f64)> {
     let u = unit_roundoff(k);
     let ec = EmuCtx { k };
+    // Unfused plan: the witness must execute the very computation the
+    // analysis covers (batch-norm folding would change its rounding).
+    let plan = Plan::unfused(model)?;
+    let mut ref_arena = Arena::new();
+    let mut emu_arena = Arena::new();
     let mut max_abs = 0.0f64;
     let mut max_rel = 0.0f64;
+    let mut xe: Vec<EmulatedFp> = Vec::new();
     for s in samples {
-        let xr = Tensor::new(model.input_shape.clone(), s.clone());
-        let yr = model.forward::<f64>(&(), xr)?;
-        let xe = Tensor::new(
-            model.input_shape.clone(),
-            s.iter().map(|&v| EmulatedFp::new(v, k)).collect(),
-        );
-        let ye = model.forward::<EmulatedFp>(&ec, xe)?;
-        for (r, e) in yr.data().iter().zip(ye.data()) {
+        let yr = plan.execute::<f64>(&(), s, &mut ref_arena)?;
+        xe.clear();
+        xe.extend(s.iter().map(|&v| EmulatedFp::new(v, k)));
+        let ye = plan.execute::<EmulatedFp>(&ec, &xe, &mut emu_arena)?;
+        for (r, e) in yr.iter().zip(ye) {
             let d = (e.v - r).abs();
             max_abs = max_abs.max(d / u);
             if *r != 0.0 {

@@ -18,8 +18,8 @@ use super::{caa_input_cfg, AnalysisConfig, Margins};
 use crate::caa::{badd, bmul, Caa, Ctx, RND_BASIC};
 use crate::data::Dataset;
 use crate::model::Model;
+use crate::plan::{Arena, Fusion, Plan};
 use crate::quant::{round_to_precision, unit_roundoff};
-use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
 /// Result of a mixed-precision analysis over one assignment.
@@ -55,8 +55,14 @@ fn rescale(v: &Caa, u_from: f64, u_to: f64) -> Caa {
     )
 }
 
-/// Analyze one sample under a per-layer precision assignment. Returns the
-/// output values in the *last* layer's unit.
+/// The shared per-entry rule: every `k` must be a real mantissa width.
+fn validate_ks_range(ks: &[u32]) -> Result<()> {
+    if let Some(&bad) = ks.iter().find(|&&k| !(2..=53).contains(&k)) {
+        bail!("invalid per-layer precision {bad}");
+    }
+    Ok(())
+}
+
 /// Validate an assignment against a model (shared by analysis and tuning).
 pub fn validate_assignment(model: &Model, ks: &[u32]) -> Result<()> {
     if ks.len() != model.layers.len() {
@@ -66,45 +72,94 @@ pub fn validate_assignment(model: &Model, ks: &[u32]) -> Result<()> {
             model.layers.len()
         );
     }
-    if let Some(&bad) = ks.iter().find(|&&k| !(2..=53).contains(&k)) {
-        bail!("invalid per-layer precision {bad}");
-    }
-    Ok(())
+    validate_ks_range(ks)
 }
 
+/// Validate an assignment against an **unfused** plan (1 step = 1 layer).
+fn validate_assignment_plan(plan: &Plan, ks: &[u32]) -> Result<()> {
+    if plan.fusion() != Fusion::None {
+        bail!("mixed-precision analysis needs an unfused plan (Plan::unfused)");
+    }
+    if ks.len() != plan.steps().len() {
+        bail!(
+            "assignment has {} entries for {} layers",
+            ks.len(),
+            plan.steps().len()
+        );
+    }
+    validate_ks_range(ks)
+}
+
+/// Analyze one sample under a per-layer precision assignment. Returns the
+/// output values in the *last* layer's unit. Convenience wrapper that
+/// compiles a throwaway unfused plan; see [`analyze_sample_mixed_plan`].
 pub fn analyze_sample_mixed(
     model: &Model,
     cfg: &AnalysisConfig,
     ks: &[u32],
     sample: &[f64],
 ) -> Result<Vec<Caa>> {
-    validate_assignment(model, ks)?;
+    analyze_sample_mixed_plan(&Plan::unfused(model)?, cfg, ks, sample)
+}
+
+/// [`analyze_sample_mixed`] against a precompiled **unfused** plan: steps
+/// map 1:1 to layers, so per-layer format boundaries stay addressable.
+/// The driver interleaves the plan's step execution with the boundary
+/// rescaling + conversion charge.
+pub fn analyze_sample_mixed_plan(
+    plan: &Plan,
+    cfg: &AnalysisConfig,
+    ks: &[u32],
+    sample: &[f64],
+) -> Result<Vec<Caa>> {
+    validate_assignment_plan(plan, ks)?;
     let mut u_prev = unit_roundoff(ks[0]);
     let ctx0 = Ctx::with_u_max(u_prev);
-    let mut t = caa_input_cfg(&ctx0, &model.input_shape, sample, cfg.input_radius, cfg.exact_inputs);
-    for (layer, &k) in model.layers.iter().zip(ks) {
-        let u = unit_roundoff(k);
-        if u != u_prev {
-            // Format boundary: rescale bounds + charge the conversion.
-            let rescaled: Vec<Caa> = t.data().iter().map(|v| rescale(v, u_prev, u)).collect();
-            t = Tensor::new(t.shape().to_vec(), rescaled);
-            u_prev = u;
+    let input =
+        caa_input_cfg(&ctx0, plan.input_shape(), sample, cfg.input_radius, cfg.exact_inputs);
+    // Reuse this thread's arena: the tuning loop calls this O(layers ×
+    // k-range × classes) times, and only the (small) output is copied out.
+    crate::coordinator::with_worker_scratch(|arena: &mut Arena<Caa>| {
+        arena.reserve_for(plan);
+        arena.load(input.data());
+        for (i, &k) in ks.iter().enumerate() {
+            let u = unit_roundoff(k);
+            if u != u_prev {
+                // Format boundary: rescale bounds + charge the conversion.
+                for v in arena.current_mut() {
+                    *v = rescale(v, u_prev, u);
+                }
+                u_prev = u;
+            }
+            let ctx = Ctx::with_u_max(u);
+            plan.execute_step::<Caa>(i, &ctx, arena);
         }
-        let ctx = Ctx::with_u_max(u);
-        t = layer.apply::<Caa>(&ctx, &t)?;
-    }
-    Ok(t.into_data())
+        Ok(arena.current().to_vec())
+    })
 }
 
 /// Analyze all class representatives under an assignment and check the
-/// p*-margin certification.
+/// p*-margin certification. Convenience wrapper compiling a throwaway
+/// unfused plan; the tuning loop uses [`analyze_mixed_plan`].
 pub fn analyze_mixed(
     model: &Model,
     data: &Dataset,
     cfg: &AnalysisConfig,
     ks: &[u32],
 ) -> Result<MixedAnalysis> {
-    validate_assignment(model, ks)?;
+    // The plan variant re-validates against the (1:1) step list, so no
+    // model-level pre-check is needed here.
+    analyze_mixed_plan(&Plan::unfused(model)?, data, cfg, ks)
+}
+
+/// [`analyze_mixed`] against a precompiled unfused plan.
+pub fn analyze_mixed_plan(
+    plan: &Plan,
+    data: &Dataset,
+    cfg: &AnalysisConfig,
+    ks: &[u32],
+) -> Result<MixedAnalysis> {
+    validate_assignment_plan(plan, ks)?;
     let reps = if data.labels.is_empty() {
         vec![(0usize, 0usize)]
     } else {
@@ -116,7 +171,7 @@ pub fn analyze_mixed(
     let mut max_rel = 0.0f64;
     let mut certified = true;
     for (_, idx) in reps {
-        let out = analyze_sample_mixed(model, cfg, ks, &data.inputs[idx])?;
+        let out = analyze_sample_mixed_plan(plan, cfg, ks, &data.inputs[idx])?;
         for o in &out {
             max_abs = max_abs.max(o.abs_bound() * u_out);
             max_rel = max_rel.max(o.rel_bound() * u_out);
@@ -141,9 +196,12 @@ pub fn tune_mixed(
     k_uniform: u32,
     k_floor: u32,
 ) -> Result<MixedAnalysis> {
-    let n = model.layers.len();
+    // One compile serves the entire greedy search (O(layers * k-range)
+    // analyses).
+    let plan = Plan::unfused(model)?;
+    let n = plan.steps().len();
     let mut ks = vec![k_uniform; n];
-    let base = analyze_mixed(model, data, cfg, &ks)?;
+    let base = analyze_mixed_plan(&plan, data, cfg, &ks)?;
     if !base.certified {
         bail!("uniform k = {k_uniform} does not certify; tune from a certified baseline");
     }
@@ -155,7 +213,7 @@ pub fn tune_mixed(
         while k > k_floor {
             k -= 1;
             ks[layer] = k;
-            if analyze_mixed(model, data, cfg, &ks)?.certified {
+            if analyze_mixed_plan(&plan, data, cfg, &ks)?.certified {
                 best = k;
             } else {
                 break;
@@ -163,36 +221,39 @@ pub fn tune_mixed(
         }
         ks[layer] = best;
     }
-    analyze_mixed(model, data, cfg, &ks)
+    analyze_mixed_plan(&plan, data, cfg, &ks)
 }
 
 /// Emulated mixed-precision *execution* (witness for the analysis): runs
 /// the model in f64 but rounds every layer output (and the lifted
 /// parameters) to the layer's format — storage emulation with per-layer
-/// formats.
+/// formats. Driven step-by-step through an unfused plan.
 pub fn forward_mixed_emulated(model: &Model, ks: &[u32], sample: &[f64]) -> Result<Vec<f64>> {
     if ks.len() != model.layers.len() {
         bail!("assignment length mismatch");
     }
-    let mut t = Tensor::new(
-        model.input_shape.clone(),
-        sample
-            .iter()
-            .map(|&v| round_to_precision(v, ks[0]))
-            .collect::<Vec<f64>>(),
-    );
-    for (layer, &k) in model.layers.iter().zip(ks) {
-        t = layer.apply::<f64>(&(), &t)?;
-        let rounded: Vec<f64> = t.data().iter().map(|&v| round_to_precision(v, k)).collect();
-        t = Tensor::new(t.shape().to_vec(), rounded);
+    let plan = Plan::unfused(model)?;
+    let rounded_input: Vec<f64> = sample.iter().map(|&v| round_to_precision(v, ks[0])).collect();
+    if rounded_input.len() != plan.input_len() {
+        bail!("sample has {} values for input {:?}", rounded_input.len(), plan.input_shape());
     }
-    Ok(t.into_data())
+    let mut arena = Arena::new();
+    arena.reserve_for(&plan);
+    arena.load(&rounded_input);
+    for (i, &k) in ks.iter().enumerate() {
+        plan.execute_step::<f64>(i, &(), &mut arena);
+        for v in arena.current_mut() {
+            *v = round_to_precision(*v, k);
+        }
+    }
+    Ok(arena.current().to_vec())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::zoo;
+    use crate::tensor::Tensor;
     use crate::util::Rng;
 
     fn small_setup() -> (Model, Dataset) {

@@ -10,9 +10,11 @@ pub mod softmax_theory;
 pub use margins::{required_precision, validity_floor, Margins};
 
 use crate::caa::{argmax_ambiguous, argmax_fp, Caa, Ctx};
+use crate::coordinator::with_worker_scratch;
 use crate::data::Dataset;
 use crate::interval::Interval;
 use crate::model::Model;
+use crate::plan::{Arena, Plan};
 use crate::tensor::Tensor;
 use crate::util::Stopwatch;
 use anyhow::Result;
@@ -125,9 +127,25 @@ pub fn caa_input(ctx: &Ctx, shape: &[usize], sample: &[f64], r: f64) -> Tensor<C
 }
 
 /// Analyze one class representative: run the model once under CAA and
-/// aggregate the output bounds.
+/// aggregate the output bounds. Convenience wrapper that compiles a
+/// throwaway analysis [`Plan`]; loops should compile once and call
+/// [`analyze_class_with_plan`] (as the [`crate::api::Session`] paths do).
 pub fn analyze_class(
     model: &Model,
+    cfg: &AnalysisConfig,
+    class: usize,
+    sample: &[f64],
+) -> Result<ClassAnalysis> {
+    let plan = Plan::for_analysis(model)?;
+    analyze_class_with_plan(&plan, cfg, class, sample)
+}
+
+/// Analyze one class representative against a precompiled analysis plan
+/// (the hot path: shapes are pre-resolved, and the executor reuses this
+/// worker thread's arena, so the CAA run itself is allocation-free at the
+/// tensor level).
+pub fn analyze_class_with_plan(
+    plan: &Plan,
     cfg: &AnalysisConfig,
     class: usize,
     sample: &[f64],
@@ -135,26 +153,27 @@ pub fn analyze_class(
     let sw = Stopwatch::start();
     let input = caa_input_cfg(
         &cfg.ctx,
-        &model.input_shape,
+        plan.input_shape(),
         sample,
         cfg.input_radius,
         cfg.exact_inputs,
     );
-    let out = model.forward::<Caa>(&cfg.ctx, input)?;
-    let outs = out.data();
-    let max_abs_u = outs.iter().map(|o| o.abs_bound()).fold(0.0f64, f64::max);
-    let max_rel_u = outs.iter().map(|o| o.rel_bound()).fold(0.0f64, f64::max);
-    let predicted = argmax_fp(outs);
-    let top1_rel_u = outs[predicted].rel_bound();
-    let ambiguous = outs.len() > 1 && argmax_ambiguous(outs);
-    Ok(ClassAnalysis {
-        class,
-        max_abs_u,
-        max_rel_u,
-        top1_rel_u,
-        predicted,
-        ambiguous,
-        secs: sw.secs(),
+    with_worker_scratch(|arena: &mut Arena<Caa>| {
+        let outs = plan.execute::<Caa>(&cfg.ctx, input.data(), arena)?;
+        let max_abs_u = outs.iter().map(|o| o.abs_bound()).fold(0.0f64, f64::max);
+        let max_rel_u = outs.iter().map(|o| o.rel_bound()).fold(0.0f64, f64::max);
+        let predicted = argmax_fp(outs);
+        let top1_rel_u = outs[predicted].rel_bound();
+        let ambiguous = outs.len() > 1 && argmax_ambiguous(outs);
+        Ok(ClassAnalysis {
+            class,
+            max_abs_u,
+            max_rel_u,
+            top1_rel_u,
+            predicted,
+            ambiguous,
+            secs: sw.secs(),
+        })
     })
 }
 
@@ -188,10 +207,11 @@ pub(crate) fn analyze_model_impl(
     cfg: &AnalysisConfig,
 ) -> Result<ModelAnalysis> {
     let sw = Stopwatch::start();
+    let plan = Plan::for_analysis(model)?;
     let reps = representatives(data);
     let mut per_class = Vec::with_capacity(reps.len());
     for (class, idx) in reps {
-        per_class.push(analyze_class(model, cfg, class, &data.inputs[idx])?);
+        per_class.push(analyze_class_with_plan(&plan, cfg, class, &data.inputs[idx])?);
     }
     Ok(aggregate(model, cfg, per_class, sw.secs()))
 }

@@ -1,10 +1,13 @@
 //! The [`Session`](super::Session) model cache: a small LRU keyed by file
-//! path, validated by content hash. Repeated requests against the same
-//! model file skip the JSON parse (the dominant cost for large weight
-//! files); an edited file is transparently re-parsed because its content
-//! hash no longer matches.
+//! path, validated by content hash. Each entry holds the parsed model
+//! **and its compiled analysis [`Plan`]**, so repeated requests against
+//! the same model file skip both the JSON parse (the dominant cost for
+//! large weight files) and the plan compile; an edited file is
+//! transparently re-parsed and re-compiled because its content hash no
+//! longer matches.
 
 use crate::model::{model_from_json, Model};
+use crate::plan::Plan;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -38,6 +41,9 @@ pub struct CacheStats {
 struct CacheEntry {
     content_hash: u64,
     model: Arc<Model>,
+    /// The compiled analysis plan ([`Plan::for_analysis`]) — cached next
+    /// to the model so every `Session` request skips recompilation.
+    plan: Arc<Plan>,
     last_used: u64,
 }
 
@@ -69,6 +75,14 @@ pub(crate) fn parse_model(text: &str, path: &Path) -> Result<Arc<Model>> {
     ))
 }
 
+/// Compile the analysis plan for a freshly parsed model — lock-free work
+/// staged outside the cache mutex like the parse itself.
+pub(crate) fn compile_analysis(model: &Model, path: &Path) -> Result<Arc<Plan>> {
+    Ok(Arc::new(Plan::for_analysis(model).with_context(|| {
+        format!("compiling model file {}", path.display())
+    })?))
+}
+
 impl ModelCache {
     pub(crate) fn new(capacity: usize) -> ModelCache {
         ModelCache {
@@ -83,22 +97,32 @@ impl ModelCache {
     /// Cache probe for a file whose content hash is already known. A
     /// mismatching hash counts as a miss (the file changed — the stale
     /// model must never be served).
-    pub(crate) fn lookup(&mut self, path: &Path, content_hash: u64) -> Option<Arc<Model>> {
+    pub(crate) fn lookup(
+        &mut self,
+        path: &Path,
+        content_hash: u64,
+    ) -> Option<(Arc<Model>, Arc<Plan>)> {
         self.tick += 1;
         if let Some(e) = self.entries.get_mut(path) {
             if e.content_hash == content_hash {
                 e.last_used = self.tick;
                 self.hits += 1;
-                return Some(Arc::clone(&e.model));
+                return Some((Arc::clone(&e.model), Arc::clone(&e.plan)));
             }
         }
         self.misses += 1;
         None
     }
 
-    /// Insert a freshly parsed model, evicting the least-recently-used
-    /// entry when at capacity.
-    pub(crate) fn insert(&mut self, path: &Path, content_hash: u64, model: Arc<Model>) {
+    /// Insert a freshly parsed + compiled model, evicting the
+    /// least-recently-used entry when at capacity.
+    pub(crate) fn insert(
+        &mut self,
+        path: &Path,
+        content_hash: u64,
+        model: Arc<Model>,
+        plan: Arc<Plan>,
+    ) {
         self.tick += 1;
         if !self.entries.contains_key(path) && self.entries.len() >= self.capacity {
             if let Some(lru) = self
@@ -112,21 +136,23 @@ impl ModelCache {
         }
         self.entries.insert(
             path.to_path_buf(),
-            CacheEntry { content_hash, model, last_used: self.tick },
+            CacheEntry { content_hash, model, plan, last_used: self.tick },
         );
     }
 
     /// Single-threaded convenience (unit tests): read + hash + probe +
-    /// parse + insert in one call. `Session::load_model` stages these
-    /// around its mutex instead, so the lock is never held across I/O.
+    /// parse + compile + insert in one call. `Session::load_compiled`
+    /// stages these around its mutex instead, so the lock is never held
+    /// across I/O.
     #[cfg(test)]
     pub(crate) fn load(&mut self, path: &Path) -> Result<Arc<Model>> {
         let (text, hash) = read_and_hash(path)?;
-        if let Some(m) = self.lookup(path, hash) {
+        if let Some((m, _)) = self.lookup(path, hash) {
             return Ok(m);
         }
         let model = parse_model(&text, path)?;
-        self.insert(path, hash, Arc::clone(&model));
+        let plan = compile_analysis(&model, path)?;
+        self.insert(path, hash, Arc::clone(&model), plan);
         Ok(model)
     }
 

@@ -4,7 +4,10 @@
 //! front ends) talks to a [`Session`]: a long-lived service object that
 //! owns the worker [`Pool`] and an LRU model cache, accepts declarative
 //! [`AnalysisRequest`]s, and returns [`AnalysisOutcome`]s with a stable,
-//! versioned JSON serialization.
+//! versioned JSON serialization. Each cached model carries its compiled
+//! [`crate::plan::Plan`]; every analysis the session serves executes
+//! through that plan's arena-backed executor (one arena per worker
+//! thread), not the legacy per-layer interpreter.
 //!
 //! ```no_run
 //! use rigor::api::{AnalysisRequest, ExecMode, Session};
@@ -45,6 +48,7 @@ use crate::analysis::{self, mixed};
 use crate::coordinator::Pool;
 use crate::data::Dataset;
 use crate::model::Model;
+use crate::plan::Plan;
 use crate::util::Stopwatch;
 use anyhow::Result;
 use std::path::Path;
@@ -55,6 +59,13 @@ use std::sync::{Arc, Mutex};
 pub struct Session {
     pool: Pool,
     cache: Mutex<cache::ModelCache>,
+    /// Compiled analysis plans for inline (`ModelRef::Inline`) models,
+    /// keyed by the model allocation itself (`Weak<Model>`): repeated
+    /// requests against the same `Arc<Model>` — sweep loops, batch
+    /// workloads — compile once. Identity is sound because a hit requires
+    /// the weak to upgrade to the *same live allocation* as the request's
+    /// Arc (no ABA). Bounded; dead entries are evicted on insert.
+    inline_plans: Mutex<Vec<(std::sync::Weak<Model>, Arc<Plan>)>>,
 }
 
 /// Configures a [`Session`]. Zero-config default: one worker per available
@@ -82,7 +93,11 @@ impl SessionBuilder {
             Some(w) => Pool::new(w, w * 4),
             None => Pool::with_default_workers(),
         };
-        Session { pool, cache: Mutex::new(cache::ModelCache::new(self.cache_capacity)) }
+        Session {
+            pool,
+            cache: Mutex::new(cache::ModelCache::new(self.cache_capacity)),
+            inline_plans: Mutex::new(Vec::new()),
+        }
     }
 }
 
@@ -113,26 +128,81 @@ impl Session {
     }
 
     /// Load a model through the session cache (content-hash validated).
-    /// File I/O and JSON parsing happen outside the cache lock, so
-    /// concurrent requests for different models don't serialize; two
-    /// threads racing on the same cold model may both parse it (last
-    /// insert wins), which is benign.
     pub fn load_model(&self, path: &Path) -> Result<Arc<Model>> {
-        let (text, hash) = cache::read_and_hash(path)?;
-        if let Some(m) = self.cache.lock().unwrap().lookup(path, hash) {
-            return Ok(m);
-        }
-        let model = cache::parse_model(&text, path)?;
-        self.cache.lock().unwrap().insert(path, hash, Arc::clone(&model));
-        Ok(model)
+        Ok(self.load_compiled(path)?.0)
     }
 
-    fn resolve(&self, req: &AnalysisRequest) -> Result<(Arc<Model>, Arc<Dataset>)> {
+    /// Load a model **and its compiled analysis plan** through the session
+    /// cache (content-hash validated). File I/O, JSON parsing and the plan
+    /// compile happen outside the cache lock, so concurrent requests for
+    /// different models don't serialize; two threads racing on the same
+    /// cold model may both parse+compile it (last insert wins), which is
+    /// benign.
+    pub fn load_compiled(&self, path: &Path) -> Result<(Arc<Model>, Arc<Plan>)> {
+        let (text, hash) = cache::read_and_hash(path)?;
+        if let Some(hit) = self.cache.lock().unwrap().lookup(path, hash) {
+            return Ok(hit);
+        }
+        let model = cache::parse_model(&text, path)?;
+        let plan = cache::compile_analysis(&model, path)?;
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path, hash, Arc::clone(&model), Arc::clone(&plan));
+        Ok((model, plan))
+    }
+
+    fn resolve(&self, req: &AnalysisRequest) -> Result<(Arc<Model>, Arc<Plan>, Arc<Dataset>)> {
+        let (model, plan) = match &req.model {
+            ModelRef::Path(p) => self.load_compiled(p)?,
+            ModelRef::Inline(m) => (Arc::clone(m), self.inline_plan(m)?),
+        };
+        let data = self.resolve_data(req, &model)?;
+        Ok((model, plan, data))
+    }
+
+    /// Analysis plan for an inline model, memoized by allocation identity
+    /// so repeated requests against the same `Arc<Model>` compile once.
+    fn inline_plan(&self, model: &Arc<Model>) -> Result<Arc<Plan>> {
+        const MAX_INLINE_PLANS: usize = 8;
+        {
+            let plans = self.inline_plans.lock().unwrap();
+            for (weak, plan) in plans.iter() {
+                if let Some(live) = weak.upgrade() {
+                    if Arc::ptr_eq(&live, model) {
+                        return Ok(Arc::clone(plan));
+                    }
+                }
+            }
+        }
+        // Compile outside the lock (racing threads may both compile; the
+        // duplicate insert is benign).
+        let plan = Arc::new(Plan::for_analysis(model)?);
+        let mut plans = self.inline_plans.lock().unwrap();
+        plans.retain(|(weak, _)| weak.strong_count() > 0);
+        if plans.len() >= MAX_INLINE_PLANS {
+            plans.remove(0);
+        }
+        plans.push((Arc::downgrade(model), Arc::clone(&plan)));
+        Ok(plan)
+    }
+
+    /// [`Self::resolve`] without the analysis-plan compile — for paths
+    /// that compile their own plan flavor (mixed tuning needs an unfused
+    /// one), so no throwaway `Fusion::Pair` compile happens for inline
+    /// models. Path-based models still go through the cache (the cached
+    /// plan rides along for free).
+    fn resolve_uncompiled(&self, req: &AnalysisRequest) -> Result<(Arc<Model>, Arc<Dataset>)> {
         let model = match &req.model {
-            ModelRef::Path(p) => self.load_model(p)?,
+            ModelRef::Path(p) => self.load_compiled(p)?.0,
             ModelRef::Inline(m) => Arc::clone(m),
         };
-        let data = match &req.data {
+        let data = self.resolve_data(req, &model)?;
+        Ok((model, data))
+    }
+
+    fn resolve_data(&self, req: &AnalysisRequest, model: &Model) -> Result<Arc<Dataset>> {
+        Ok(match &req.data {
             DataRef::Path(p) => Arc::new(Dataset::load(p)?),
             DataRef::Inline(d) => Arc::clone(d),
             DataRef::InputBox => Arc::new(Dataset {
@@ -140,25 +210,27 @@ impl Session {
                 inputs: vec![vec![0.0; model.input_shape.iter().product()]],
                 labels: vec![],
             }),
-        };
-        Ok((model, data))
+        })
     }
 
     /// Serve one analysis request: one CAA run per class representative,
     /// serial or fanned out per [`ExecMode`], streamed through the
-    /// request's progress callback if one is set.
+    /// request's progress callback if one is set. Every run executes
+    /// through the compiled analysis [`Plan`] (cached for path-based
+    /// models), never the per-layer interpreter.
     pub fn run(&self, req: &AnalysisRequest) -> Result<AnalysisOutcome> {
-        let (model, data) = self.resolve(req)?;
-        self.run_resolved(req, &model, &data)
+        let (model, plan, data) = self.resolve(req)?;
+        self.run_resolved(req, &model, &plan, &data)
     }
 
-    /// [`Self::run`] with model and data already resolved — the tailoring
-    /// loop calls this so path-based requests are read and parsed once,
-    /// not once per candidate precision.
+    /// [`Self::run`] with model, plan and data already resolved — the
+    /// tailoring loop calls this so path-based requests are read, parsed
+    /// and compiled once, not once per candidate precision.
     fn run_resolved(
         &self,
         req: &AnalysisRequest,
         model: &Arc<Model>,
+        plan: &Arc<Plan>,
         data: &Arc<Dataset>,
     ) -> Result<AnalysisOutcome> {
         let cfg = req.analysis_config();
@@ -168,7 +240,8 @@ impl Session {
             ExecMode::Serial => {
                 let mut v = Vec::with_capacity(reps.len());
                 for (class, idx) in reps {
-                    let c = analysis::analyze_class(&model, &cfg, class, &data.inputs[idx])?;
+                    let c =
+                        analysis::analyze_class_with_plan(&plan, &cfg, class, &data.inputs[idx])?;
                     if let Some(cb) = &req.progress {
                         (cb.as_ref())(&c);
                     }
@@ -182,11 +255,11 @@ impl Session {
                     .map(|(class, idx)| (class, data.inputs[idx].clone()))
                     .collect();
                 let job = {
-                    let model = Arc::clone(&model);
+                    let plan = Arc::clone(plan);
                     let cfg = cfg.clone();
                     let progress = req.progress.clone();
                     move |(class, sample): (usize, Vec<f64>)| {
-                        let r = analysis::analyze_class(&model, &cfg, class, &sample);
+                        let r = analysis::analyze_class_with_plan(&plan, &cfg, class, &sample);
                         if let (Ok(c), Some(cb)) = (&r, &progress) {
                             (cb.as_ref())(c);
                         }
@@ -226,14 +299,16 @@ impl Session {
         req: &AnalysisRequest,
         k_range: std::ops::RangeInclusive<u32>,
     ) -> Result<Option<(u32, AnalysisOutcome)>> {
-        // Resolve once: path-based model/data are read and parsed a single
-        // time for the whole loop, not once per candidate k.
-        let (model, data) = self.resolve(req)?;
+        // Resolve once: path-based model/data are read, parsed and
+        // compiled a single time for the whole loop, not once per
+        // candidate k (the plan is shape-only, so it is valid at every
+        // u_max).
+        let (model, plan, data) = self.resolve(req)?;
         for k in k_range {
             if k < 3 {
                 continue;
             }
-            let outcome = self.run_resolved(&req.at_precision(k), &model, &data)?;
+            let outcome = self.run_resolved(&req.at_precision(k), &model, &plan, &data)?;
             if let Some(rk) = outcome.required_k() {
                 if rk <= k {
                     return Ok(Some((k, outcome)));
@@ -252,7 +327,10 @@ impl Session {
         k_uniform: u32,
         k_floor: u32,
     ) -> Result<mixed::MixedAnalysis> {
-        let (model, data) = self.resolve(req)?;
+        // The mixed path compiles its own *unfused* plan internally: per
+        // layer format boundaries need the 1:1 step-per-layer mapping, not
+        // the session's fused analysis plan.
+        let (model, data) = self.resolve_uncompiled(req)?;
         let cfg = req.analysis_config();
         mixed::tune_mixed(&model, &data, &cfg, k_uniform, k_floor)
     }

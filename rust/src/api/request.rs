@@ -1,6 +1,12 @@
 //! [`AnalysisRequest`]: the one description of "analyze this model, this
 //! way" that every front end (CLI, benches, examples, tests, future RPC
 //! servers) submits to a [`Session`](super::Session).
+//!
+//! Requests are execution-plan agnostic: the session compiles (and
+//! caches) a [`crate::plan::Plan`] per model and serves every request —
+//! serial or pooled, point or tailoring loop — through the same compiled
+//! steps. A request never needs to know about fusion levels; the session
+//! always analyzes with the CAA-sound level ([`crate::plan::Fusion::Pair`]).
 
 use crate::analysis::{AnalysisConfig, ClassAnalysis};
 use crate::caa::Ctx;

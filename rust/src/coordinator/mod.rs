@@ -10,13 +10,18 @@
 
 mod pool;
 
-pub use pool::{Pool, PoolMetrics};
+pub use pool::{with_worker_scratch, Pool, PoolMetrics};
 
-use crate::analysis::{aggregate, analyze_class, representatives, AnalysisConfig, ClassAnalysis, ModelAnalysis};
+use crate::analysis::{
+    aggregate, analyze_class_with_plan, representatives, AnalysisConfig, ClassAnalysis,
+    ModelAnalysis,
+};
 use crate::data::Dataset;
 use crate::model::Model;
+use crate::plan::Plan;
 use crate::util::Stopwatch;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Analyze a model with per-class jobs fanned out over the pool —
 /// the parallel version of [`crate::analysis::analyze_model`].
@@ -42,14 +47,17 @@ pub(crate) fn analyze_model_parallel_impl(
     pool: &Pool,
 ) -> Result<ModelAnalysis> {
     let sw = Stopwatch::start();
+    // Compile once; every worker executes the same shared plan with its
+    // own thread-local arena.
+    let plan = Arc::new(Plan::for_analysis(model)?);
     let jobs: Vec<(usize, Vec<f64>)> = representatives(data)
         .into_iter()
         .map(|(class, idx)| (class, data.inputs[idx].clone()))
         .collect();
     let results: Vec<Result<ClassAnalysis>> = pool.run_batch(jobs, {
-        let model = model.clone();
+        let plan = Arc::clone(&plan);
         let cfg = cfg.clone();
-        move |(class, sample)| analyze_class(&model, &cfg, class, &sample)
+        move |(class, sample)| analyze_class_with_plan(&plan, &cfg, class, &sample)
     });
     let mut per_class = Vec::with_capacity(results.len());
     for r in results {

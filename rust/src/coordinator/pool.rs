@@ -8,11 +8,41 @@
 //! * a panicking job does not take the pool down (it is reported to the
 //!   submitter).
 
-use std::collections::VecDeque;
+use std::any::{Any, TypeId};
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+thread_local! {
+    /// Per-thread scratch registry, keyed by type. This is how each worker
+    /// owns long-lived execution state (e.g. a [`crate::plan::Arena`])
+    /// without the job closures having to thread it through: jobs running
+    /// on the same worker reuse the same scratch across submissions.
+    static WORKER_SCRATCH: RefCell<HashMap<TypeId, Box<dyn Any>>> = RefCell::new(HashMap::new());
+}
+
+/// Run `f` with this thread's scratch value of type `T`, creating it with
+/// `Default` on first use. Each pool worker (and any caller thread, for
+/// `ExecMode::Serial`) keeps its own `T` for the lifetime of the thread —
+/// the plan executor uses this to reuse its preallocated double-buffer
+/// arena across jobs. Reentrant calls for the same `T` see a fresh value
+/// (the held one is checked out for the duration of `f`); a panic inside
+/// `f` drops the scratch rather than poisoning it.
+pub fn with_worker_scratch<T, R, F>(f: F) -> R
+where
+    T: Any + Default,
+    F: FnOnce(&mut T) -> R,
+{
+    let mut slot: Box<dyn Any> = WORKER_SCRATCH
+        .with(|s| s.borrow_mut().remove(&TypeId::of::<T>()))
+        .unwrap_or_else(|| Box::<T>::default());
+    let r = f(slot.downcast_mut::<T>().expect("scratch keyed by TypeId"));
+    WORKER_SCRATCH.with(|s| s.borrow_mut().insert(TypeId::of::<T>(), slot));
+    r
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -354,6 +384,41 @@ mod tests {
         };
         assert_eq!(shared_metrics.panicked, 1);
         assert_eq!(shared_metrics.completed, 2);
+    }
+
+    #[test]
+    fn worker_scratch_persists_per_thread() {
+        // Same thread, same type -> same scratch instance (state persists).
+        with_worker_scratch(|v: &mut Vec<u32>| v.push(7));
+        let len = with_worker_scratch(|v: &mut Vec<u32>| {
+            v.push(8);
+            v.len()
+        });
+        assert_eq!(len, 2);
+        // Different type -> independent scratch.
+        let other = with_worker_scratch(|v: &mut Vec<u64>| v.len());
+        assert_eq!(other, 0);
+        // Another thread -> its own scratch.
+        let remote = std::thread::spawn(|| with_worker_scratch(|v: &mut Vec<u32>| v.len()))
+            .join()
+            .unwrap();
+        assert_eq!(remote, 0);
+    }
+
+    #[test]
+    fn worker_scratch_reentrant_same_type() {
+        // A nested checkout of the same type must not panic; the inner call
+        // sees a fresh value while the outer one is held out.
+        let outer = with_worker_scratch(|v: &mut Vec<u8>| {
+            v.push(1);
+            let inner = with_worker_scratch(|w: &mut Vec<u8>| {
+                w.push(2);
+                w.len()
+            });
+            (v.len(), inner)
+        });
+        assert_eq!(outer.0, 1);
+        assert_eq!(outer.1, 1);
     }
 
     #[test]

@@ -24,13 +24,44 @@ pub fn leaky_relu<S: Scalar>(ctx: &S::Ctx, alpha: f64, x: &Tensor<S>) -> Tensor<
 /// Softmax over the last axis of `x`.
 pub fn softmax<S: Scalar>(ctx: &S::Ctx, x: &Tensor<S>) -> Tensor<S> {
     let n = *x.shape().last().expect("softmax needs rank >= 1");
-    let rows = x.len() / n;
     let mut out = Vec::with_capacity(x.len());
-    for r in 0..rows {
-        let row = &x.data()[r * n..(r + 1) * n];
-        out.extend(softmax_vec(ctx, row));
-    }
+    let mut scratch = Vec::with_capacity(n);
+    softmax_into(ctx, n, x.data(), &mut scratch, &mut out);
     Tensor::new(x.shape().to_vec(), out)
+}
+
+/// Slice-level softmax behind [`softmax`]: rows of length `n`, appended to
+/// `out`. `scratch` holds the max-labelled row copy ([`Scalar::max_many`]
+/// mutates its operands to attach CAA bound labels); both buffers keep
+/// their capacity across calls, so the plan executor's steady state does
+/// not allocate. The operation order is identical to [`softmax_vec`].
+pub fn softmax_into<S: Scalar>(
+    ctx: &S::Ctx,
+    n: usize,
+    x: &[S],
+    scratch: &mut Vec<S>,
+    out: &mut Vec<S>,
+) {
+    debug_assert!(n > 0 && x.len() % n == 0);
+    let rows = x.len() / n;
+    for r in 0..rows {
+        let row = &x[r * n..(r + 1) * n];
+        scratch.clear();
+        scratch.extend_from_slice(row);
+        let m = S::max_many(ctx, scratch);
+        let base = out.len();
+        for xv in scratch.iter() {
+            out.push(xv.sub(&m, ctx).exp(ctx));
+        }
+        let mut sum = out[base].clone();
+        for e in &out[base + 1..] {
+            sum = sum.add(e, ctx);
+        }
+        for slot in out[base..].iter_mut() {
+            let y = slot.div(&sum, ctx).clamp01(ctx);
+            *slot = y;
+        }
+    }
 }
 
 /// Numerically-stable softmax of one vector:

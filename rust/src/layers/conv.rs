@@ -87,19 +87,36 @@ pub fn conv2d<S: Scalar>(
     x: &Tensor<S>,
     out_shape: &[usize],
 ) -> Tensor<S> {
+    let mut out = Vec::with_capacity(out_shape.iter().product());
+    conv2d_into(ctx, kernel, bias, stride, padding, x.data(), x.shape(), out_shape, &mut out);
+    Tensor::new(out_shape.to_vec(), out)
+}
+
+/// Slice-level kernel behind [`conv2d`]: appends the `oh*ow*cout` outputs
+/// to `out` (arena buffer; geometry is validated by the caller, so the
+/// inner loop is check-free).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_into<S: Scalar>(
+    ctx: &S::Ctx,
+    kernel: &Tensor<f64>,
+    bias: &[f64],
+    stride: usize,
+    padding: Padding,
+    xd: &[S],
+    in_shape: &[usize],
+    out_shape: &[usize],
+    out: &mut Vec<S>,
+) {
     let (kh, kw, cin, cout) = (
         kernel.shape()[0],
         kernel.shape()[1],
         kernel.shape()[2],
         kernel.shape()[3],
     );
-    let (h, w) = (x.shape()[0], x.shape()[1]);
+    let (h, w) = (in_shape[0], in_shape[1]);
     let (oh, ow) = (out_shape[0], out_shape[1]);
     let (pad_top, pad_left, _, _) = pad_offsets(h, w, kh, kw, stride, padding);
     let kd = kernel.data();
-    let xd = x.data();
-
-    let mut out = Vec::with_capacity(oh * ow * cout);
     for oy in 0..oh {
         for ox in 0..ow {
             for co in 0..cout {
@@ -130,7 +147,6 @@ pub fn conv2d<S: Scalar>(
             }
         }
     }
-    Tensor::new(out_shape.to_vec(), out)
 }
 
 /// Depthwise convolution. `kernel: [kh, kw, c]`, output `[oh, ow, c]`.
@@ -143,14 +159,29 @@ pub fn depthwise<S: Scalar>(
     x: &Tensor<S>,
     out_shape: &[usize],
 ) -> Tensor<S> {
+    let mut out = Vec::with_capacity(out_shape.iter().product());
+    depthwise_into(ctx, kernel, bias, stride, padding, x.data(), x.shape(), out_shape, &mut out);
+    Tensor::new(out_shape.to_vec(), out)
+}
+
+/// Slice-level kernel behind [`depthwise`] (arena buffer variant).
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_into<S: Scalar>(
+    ctx: &S::Ctx,
+    kernel: &Tensor<f64>,
+    bias: &[f64],
+    stride: usize,
+    padding: Padding,
+    xd: &[S],
+    in_shape: &[usize],
+    out_shape: &[usize],
+    out: &mut Vec<S>,
+) {
     let (kh, kw, c) = (kernel.shape()[0], kernel.shape()[1], kernel.shape()[2]);
-    let (h, w) = (x.shape()[0], x.shape()[1]);
+    let (h, w) = (in_shape[0], in_shape[1]);
     let (oh, ow) = (out_shape[0], out_shape[1]);
     let (pad_top, pad_left, _, _) = pad_offsets(h, w, kh, kw, stride, padding);
     let kd = kernel.data();
-    let xd = x.data();
-
-    let mut out = Vec::with_capacity(oh * ow * c);
     for oy in 0..oh {
         for ox in 0..ow {
             for ch in 0..c {
@@ -178,7 +209,6 @@ pub fn depthwise<S: Scalar>(
             }
         }
     }
-    Tensor::new(out_shape.to_vec(), out)
 }
 
 #[cfg(test)]

@@ -8,16 +8,22 @@ use crate::tensor::{Scalar, Tensor};
 
 /// Apply `y_j = sum_i W[j,i] * x_i + b_j`. `w: [m, n]`, `x: [n]`.
 pub fn apply<S: Scalar>(ctx: &S::Ctx, w: &Tensor<f64>, b: &[f64], x: &Tensor<S>) -> Tensor<S> {
+    let mut out = Vec::with_capacity(w.shape()[0]);
+    apply_into(ctx, w, b, x.data(), &mut out);
+    Tensor::new(vec![w.shape()[0]], out)
+}
+
+/// Slice-level kernel behind [`apply`]: appends the `m` outputs to `out`
+/// (the plan executor's arena buffer — callers clear it, capacity is
+/// reused so steady-state runs do not allocate).
+pub fn apply_into<S: Scalar>(ctx: &S::Ctx, w: &Tensor<f64>, b: &[f64], x: &[S], out: &mut Vec<S>) {
     let m = w.shape()[0];
     let n = w.shape()[1];
     let wd = w.data();
-    let xd = x.data();
-    let mut out = Vec::with_capacity(m);
     for j in 0..m {
         let row = &wd[j * n..(j + 1) * n];
-        out.push(dot_bias(ctx, row, b[j], xd));
+        out.push(dot_bias(ctx, row, b[j], x));
     }
-    Tensor::new(vec![m], out)
 }
 
 /// One dot product plus bias in the scalar arithmetic `S` (sequential

@@ -7,11 +7,14 @@
 //! BatchNormalization. Activation layers: ReLU, LeakyReLU, Tanh, Sigmoid,
 //! Softmax.
 
-mod activation;
-mod conv;
-mod dense;
-mod norm;
-mod pool;
+// Kernel modules are crate-visible: the plan executor
+// (`crate::plan::exec`) drives the slice-level `*_into` kernels directly
+// against its arena buffers.
+pub(crate) mod activation;
+pub(crate) mod conv;
+pub(crate) mod dense;
+pub(crate) mod norm;
+pub(crate) mod pool;
 
 pub use activation::softmax_vec;
 

@@ -19,6 +19,27 @@ pub fn batch_norm<S: Scalar>(
     x: &Tensor<S>,
 ) -> Tensor<S> {
     let c = *x.shape().last().expect("batch_norm input rank >= 1");
+    let mut out = Vec::with_capacity(x.len());
+    batch_norm_into(ctx, gamma, beta, mean, variance, eps, x.data(), c, &mut out);
+    Tensor::new(x.shape().to_vec(), out)
+}
+
+/// Slice-level kernel behind [`batch_norm`] (arena buffer variant). The
+/// per-channel affine parameters are small `O(channels)` temporaries,
+/// recomputed *in the analyzed arithmetic* on every run — the folding is FP
+/// work whose error belongs in the analysis (see module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn batch_norm_into<S: Scalar>(
+    ctx: &S::Ctx,
+    gamma: &[f64],
+    beta: &[f64],
+    mean: &[f64],
+    variance: &[f64],
+    eps: f64,
+    xd: &[S],
+    c: usize,
+    out: &mut Vec<S>,
+) {
     // Per-channel affine parameters, computed once in S.
     let mut scale = Vec::with_capacity(c);
     let mut shift_mu = Vec::with_capacity(c);
@@ -32,9 +53,6 @@ pub fn batch_norm<S: Scalar>(
         shift_mu.push(S::param(ctx, mean[ch]));
         shift_beta.push(S::param(ctx, beta[ch]));
     }
-    let n = x.len();
-    let xd = x.data();
-    let mut out = Vec::with_capacity(n);
     for (i, v) in xd.iter().enumerate() {
         let ch = i % c;
         let y = v
@@ -43,7 +61,6 @@ pub fn batch_norm<S: Scalar>(
             .add(&shift_beta[ch], ctx);
         out.push(y);
     }
-    Tensor::new(x.shape().to_vec(), out)
 }
 
 #[cfg(test)]

@@ -25,10 +25,23 @@ pub fn max_pool<S: Scalar>(
     x: &Tensor<S>,
     out_shape: &[usize],
 ) -> Tensor<S> {
-    let (w, c) = (x.shape()[1], x.shape()[2]);
+    let mut out = Vec::with_capacity(out_shape.iter().product());
+    max_pool_into(ctx, ph, pw, x.data(), x.shape(), out_shape, &mut out);
+    Tensor::new(out_shape.to_vec(), out)
+}
+
+/// Slice-level kernel behind [`max_pool`] (arena buffer variant).
+pub fn max_pool_into<S: Scalar>(
+    ctx: &S::Ctx,
+    ph: usize,
+    pw: usize,
+    xd: &[S],
+    in_shape: &[usize],
+    out_shape: &[usize],
+    out: &mut Vec<S>,
+) {
+    let (w, c) = (in_shape[1], in_shape[2]);
     let (oh, ow) = (out_shape[0], out_shape[1]);
-    let xd = x.data();
-    let mut out = Vec::with_capacity(oh * ow * c);
     for oy in 0..oh {
         for ox in 0..ow {
             for ch in 0..c {
@@ -46,7 +59,6 @@ pub fn max_pool<S: Scalar>(
             }
         }
     }
-    Tensor::new(out_shape.to_vec(), out)
 }
 
 pub fn avg_pool<S: Scalar>(
@@ -56,11 +68,24 @@ pub fn avg_pool<S: Scalar>(
     x: &Tensor<S>,
     out_shape: &[usize],
 ) -> Tensor<S> {
-    let (w, c) = (x.shape()[1], x.shape()[2]);
+    let mut out = Vec::with_capacity(out_shape.iter().product());
+    avg_pool_into(ctx, ph, pw, x.data(), x.shape(), out_shape, &mut out);
+    Tensor::new(out_shape.to_vec(), out)
+}
+
+/// Slice-level kernel behind [`avg_pool`] (arena buffer variant).
+pub fn avg_pool_into<S: Scalar>(
+    ctx: &S::Ctx,
+    ph: usize,
+    pw: usize,
+    xd: &[S],
+    in_shape: &[usize],
+    out_shape: &[usize],
+    out: &mut Vec<S>,
+) {
+    let (w, c) = (in_shape[1], in_shape[2]);
     let (oh, ow) = (out_shape[0], out_shape[1]);
     let n = S::exact(ctx, (ph * pw) as f64); // small integer: exact
-    let xd = x.data();
-    let mut out = Vec::with_capacity(oh * ow * c);
     for oy in 0..oh {
         for ox in 0..ow {
             for ch in 0..c {
@@ -78,7 +103,6 @@ pub fn avg_pool<S: Scalar>(
             }
         }
     }
-    Tensor::new(out_shape.to_vec(), out)
 }
 
 #[cfg(test)]

@@ -16,7 +16,10 @@
 //! The one public front door is [`api::Session`]: it owns the worker pool
 //! and an LRU model cache, serves [`api::AnalysisRequest`]s serially or
 //! fanned out, and returns [`api::AnalysisOutcome`]s with a versioned JSON
-//! serialization.
+//! serialization. Internally every analysis executes through a compiled
+//! [`plan::Plan`] — shape-resolved, optionally fused, arena-backed — that
+//! is cached next to the model; the per-layer interpreter survives only as
+//! a deprecated equivalence oracle.
 //!
 //! Layer map (three-layer rust+JAX+Pallas architecture):
 //! * L3 (this crate): [`api`] service layer over the CAA+IA analysis
@@ -41,6 +44,7 @@ pub mod interval;
 pub mod json;
 pub mod layers;
 pub mod model;
+pub mod plan;
 pub mod prop;
 pub mod quant;
 pub mod report;

@@ -38,7 +38,37 @@ impl Model {
     }
 
     /// Run the network in the arithmetic `S`.
+    ///
+    /// Convenience path: compiles a throwaway **unfused**
+    /// [`Plan`](crate::plan::Plan) (exact legacy interpreter semantics) and
+    /// executes it. Hot loops should compile once with
+    /// [`Model::compile`] and drive [`crate::plan::Plan::execute`] with a
+    /// reused [`crate::plan::Arena`].
     pub fn forward<S: Scalar>(&self, ctx: &S::Ctx, input: Tensor<S>) -> Result<Tensor<S>> {
+        // Input-shape validation (same message as before) happens in
+        // `Plan::forward`.
+        crate::plan::Plan::unfused(self)?.forward(ctx, input)
+    }
+
+    /// Compile this model into an execution plan at the given fusion
+    /// level (see [`crate::plan`] for the soundness contract per level).
+    pub fn compile(&self, fusion: crate::plan::Fusion) -> Result<crate::plan::Plan> {
+        crate::plan::Plan::build(self, fusion)
+    }
+
+    /// The pre-plan reference interpreter: walks `Vec<Layer>` directly,
+    /// re-deriving shapes and allocating a fresh tensor per layer. Kept as
+    /// the independent oracle the plan executor is regression-tested
+    /// against (bit-identical CAA bounds) and benchmarked over.
+    #[deprecated(
+        since = "0.3.0",
+        note = "legacy interpreter; compile a `plan::Plan` and use its executor"
+    )]
+    pub fn forward_interpreted<S: Scalar>(
+        &self,
+        ctx: &S::Ctx,
+        input: Tensor<S>,
+    ) -> Result<Tensor<S>> {
         if input.shape() != self.input_shape {
             bail!(
                 "model '{}' expects input {:?}, got {:?}",

@@ -1,0 +1,244 @@
+//! The plan **executor**: runs a compiled [`Plan`] over any
+//! [`Scalar`] arithmetic with a caller-owned double-buffer [`Arena`].
+//!
+//! The executor ping-pongs between `cur` and `next`: compute steps read
+//! `cur`, write `next`, then the buffers swap; shape-only steps
+//! (`Flatten`) and standalone activations operate in place on `cur`.
+//! All buffers keep their capacity between calls, so repeated execution of
+//! the same plan (the per-class analysis loop, witness sweeps, serving
+//! traffic) performs zero tensor allocations after the first run.
+
+use super::{Act, Plan, StepKind};
+use crate::layers::{activation, conv, dense, norm, pool};
+use crate::tensor::{Scalar, Tensor};
+use anyhow::{bail, Result};
+
+/// Reusable executor scratch: two ping-pong layer buffers plus a row
+/// scratch (softmax). One arena per worker thread — obtain a per-thread
+/// one with [`crate::coordinator::with_worker_scratch`].
+#[derive(Clone, Debug)]
+pub struct Arena<S> {
+    pub(crate) cur: Vec<S>,
+    pub(crate) next: Vec<S>,
+    pub(crate) scratch: Vec<S>,
+}
+
+impl<S> Arena<S> {
+    pub fn new() -> Arena<S> {
+        Arena { cur: Vec::new(), next: Vec::new(), scratch: Vec::new() }
+    }
+
+    /// Pre-size the buffers for `plan` so even the first execution does
+    /// not reallocate mid-run.
+    pub fn reserve_for(&mut self, plan: &Plan) {
+        let n = plan.max_buffer_len();
+        if self.cur.capacity() < n {
+            self.cur.reserve(n - self.cur.len());
+        }
+        if self.next.capacity() < n {
+            self.next.reserve(n - self.next.len());
+        }
+    }
+
+    /// The buffer currently holding the latest step output.
+    pub fn current(&self) -> &[S] {
+        &self.cur
+    }
+
+    /// Mutable view of the current buffer — for drivers that transform
+    /// values between steps (mixed-precision rescaling, per-layer storage
+    /// rounding).
+    pub fn current_mut(&mut self) -> &mut [S] {
+        &mut self.cur
+    }
+
+    /// Seed the arena with an input vector (used by callers that drive
+    /// steps one at a time, e.g. the mixed-precision analysis).
+    pub fn load(&mut self, input: &[S])
+    where
+        S: Clone,
+    {
+        self.cur.clear();
+        self.cur.extend_from_slice(input);
+    }
+}
+
+impl<S> Default for Arena<S> {
+    fn default() -> Arena<S> {
+        Arena::new()
+    }
+}
+
+impl Plan {
+    /// Execute the whole plan on `input`, returning a borrow of the arena
+    /// buffer holding the output (length [`Plan::output_len`]). The only
+    /// runtime check is the input length — every shape was resolved at
+    /// build time.
+    pub fn execute<'a, S: Scalar>(
+        &self,
+        ctx: &S::Ctx,
+        input: &[S],
+        arena: &'a mut Arena<S>,
+    ) -> Result<&'a [S]> {
+        if input.len() != self.input_len() {
+            bail!(
+                "plan '{}' expects input {:?} ({} values), got {}",
+                self.model_name(),
+                self.input_shape(),
+                self.input_len(),
+                input.len()
+            );
+        }
+        arena.reserve_for(self);
+        arena.load(input);
+        for idx in 0..self.steps().len() {
+            self.execute_step(idx, ctx, arena);
+        }
+        Ok(&arena.cur)
+    }
+
+    /// Execute one step against the arena (input in `arena.current()`,
+    /// result left in `arena.current()`). Exposed for drivers that
+    /// interleave per-step work — the mixed-precision analysis rescales
+    /// bounds and switches contexts between steps.
+    pub fn execute_step<S: Scalar>(&self, idx: usize, ctx: &S::Ctx, arena: &mut Arena<S>) {
+        let step = &self.steps()[idx];
+        debug_assert_eq!(arena.cur.len(), step.in_len(), "step {idx} input length");
+        match &step.kind {
+            StepKind::Flatten => {}
+            StepKind::Act(a) => apply_act_inplace(ctx, a, &mut arena.cur),
+            kind => {
+                arena.next.clear();
+                match kind {
+                    StepKind::Dense { w, b } => {
+                        dense::apply_into(ctx, w, b, &arena.cur, &mut arena.next)
+                    }
+                    StepKind::Conv2D { kernel, bias, stride, padding } => conv::conv2d_into(
+                        ctx,
+                        kernel,
+                        bias,
+                        *stride,
+                        *padding,
+                        &arena.cur,
+                        &step.in_shape,
+                        &step.out_shape,
+                        &mut arena.next,
+                    ),
+                    StepKind::DepthwiseConv2D { kernel, bias, stride, padding } => {
+                        conv::depthwise_into(
+                            ctx,
+                            kernel,
+                            bias,
+                            *stride,
+                            *padding,
+                            &arena.cur,
+                            &step.in_shape,
+                            &step.out_shape,
+                            &mut arena.next,
+                        )
+                    }
+                    StepKind::MaxPool2D { ph, pw } => pool::max_pool_into(
+                        ctx,
+                        *ph,
+                        *pw,
+                        &arena.cur,
+                        &step.in_shape,
+                        &step.out_shape,
+                        &mut arena.next,
+                    ),
+                    StepKind::AvgPool2D { ph, pw } => pool::avg_pool_into(
+                        ctx,
+                        *ph,
+                        *pw,
+                        &arena.cur,
+                        &step.in_shape,
+                        &step.out_shape,
+                        &mut arena.next,
+                    ),
+                    StepKind::BatchNorm { gamma, beta, mean, variance, eps } => {
+                        let c = *step.in_shape.last().expect("batch_norm rank >= 1");
+                        norm::batch_norm_into(
+                            ctx,
+                            gamma,
+                            beta,
+                            mean,
+                            variance,
+                            *eps,
+                            &arena.cur,
+                            c,
+                            &mut arena.next,
+                        )
+                    }
+                    StepKind::Softmax => {
+                        let n = *step.in_shape.last().expect("softmax rank >= 1");
+                        activation::softmax_into(
+                            ctx,
+                            n,
+                            &arena.cur,
+                            &mut arena.scratch,
+                            &mut arena.next,
+                        )
+                    }
+                    StepKind::Flatten | StepKind::Act(_) => unreachable!("handled above"),
+                }
+                if let Some(a) = &step.fused_act {
+                    apply_act_inplace(ctx, a, &mut arena.next);
+                }
+                std::mem::swap(&mut arena.cur, &mut arena.next);
+            }
+        }
+        debug_assert_eq!(arena.cur.len(), step.out_len(), "step {idx} output length");
+    }
+
+    /// Convenience tensor-in/tensor-out execution with a throwaway arena —
+    /// the compatibility path behind [`crate::model::Model::forward`].
+    /// Hot paths should hold an [`Arena`] and call [`Plan::execute`].
+    pub fn forward<S: Scalar>(&self, ctx: &S::Ctx, input: Tensor<S>) -> Result<Tensor<S>> {
+        if input.shape() != self.input_shape() {
+            bail!(
+                "model '{}' expects input {:?}, got {:?}",
+                self.model_name(),
+                self.input_shape(),
+                input.shape()
+            );
+        }
+        let mut arena = Arena::new();
+        let out = self.execute(ctx, input.data(), &mut arena)?.to_vec();
+        Ok(Tensor::new(self.output_shape().to_vec(), out))
+    }
+}
+
+/// Apply an elementwise activation in place, mirroring the interpreter's
+/// per-element operation order exactly (bit-identical CAA bounds).
+fn apply_act_inplace<S: Scalar>(ctx: &S::Ctx, act: &Act, buf: &mut [S]) {
+    match act {
+        Act::Relu => {
+            for v in buf.iter_mut() {
+                let y = v.relu(ctx);
+                *v = y;
+            }
+        }
+        Act::LeakyRelu { alpha } => {
+            // Same form as layers::activation::leaky_relu:
+            // leaky(x) = max(x, alpha * x) with alpha embedded once.
+            let a = S::param(ctx, *alpha);
+            for v in buf.iter_mut() {
+                let scaled = v.mul(&a, ctx);
+                let y = v.max(&scaled, ctx);
+                *v = y;
+            }
+        }
+        Act::Tanh => {
+            for v in buf.iter_mut() {
+                let y = v.tanh(ctx);
+                *v = y;
+            }
+        }
+        Act::Sigmoid => {
+            for v in buf.iter_mut() {
+                let y = v.sigmoid(ctx);
+                *v = y;
+            }
+        }
+    }
+}

@@ -1,0 +1,394 @@
+//! **The compiled execution plan** — a model lowered, once per
+//! `(model, input_shape)`, into a straight-line sequence of shape-resolved
+//! [`Step`]s that a generic executor runs with a preallocated double-buffer
+//! [`Arena`].
+//!
+//! This is the Rust analogue of the paper's compile-first design: the
+//! original tool turns a Keras model into straight-line C++ (via
+//! frugally-deep) precisely so the *same compiled evaluation* drives both
+//! the FP inference and the error analysis. Here, [`Plan::build`]:
+//!
+//! 1. **Resolves all shapes ahead of time** — every geometry check that the
+//!    per-layer interpreter re-ran inside the inner loop
+//!    ([`Layer::output_shape`]'s `Result`s) happens once at build; the
+//!    executor's steady state is check-free.
+//! 2. **Fuses statically** per the requested [`Fusion`] level:
+//!    * [`Fusion::Pair`] attaches elementwise activations to the preceding
+//!      compute step (applied in place on its output buffer — the same
+//!      operations in the same order, so CAA bounds are bit-identical to
+//!      the interpreter; this level is safe for analysis).
+//!    * [`Fusion::Full`] additionally folds `BatchNormalization` into the
+//!      preceding `Conv2D`/`Dense`/`DepthwiseConv2D` affine form. Folding
+//!      *changes the rounding profile* (the per-channel scale is absorbed
+//!      into the weights at build time in f64), so it is reserved for the
+//!      f64 reference trace and throughput-oriented witness runs — never
+//!      for CAA, whose rounding-error bookkeeping must match the analyzed
+//!      computation exactly (the "unfused-for-CAA" mode).
+//!    * [`Fusion::None`] keeps a 1:1 step-per-layer mapping — the mode the
+//!      mixed-precision path uses so per-layer format boundaries stay
+//!      addressable.
+//! 3. **Preallocates**: the executor ping-pongs between two arena buffers
+//!    sized at first use; steady-state inference performs zero tensor
+//!    allocations (`O(channels)`/`O(classes)` scalar temporaries remain for
+//!    batch-norm parameter embedding and softmax rows).
+//!
+//! The executor ([`Plan::execute`]) is generic over [`Scalar`], so the f64
+//! baseline, the interval/CAA analysis pass, and the emulated precision-k
+//! witness runs all execute the same compiled steps. [`crate::api::Session`]
+//! caches an `Arc<Plan>` next to each model in its content-hash LRU;
+//! [`crate::coordinator`] hands every worker thread its own arena.
+//!
+//! The IR is deliberately sequential for now; the step list (rather than
+//! the `Vec<Layer>` it replaces) is where graph topologies and per-step
+//! precision assignments will hang (see ROADMAP.md "Open items").
+
+mod exec;
+
+pub use exec::Arena;
+
+use crate::layers::{Layer, Padding};
+use crate::model::Model;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+
+/// Fusion level a plan is compiled at. See the module docs for the
+/// soundness contract of each level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fusion {
+    /// One step per layer, no pairing — exact legacy interpreter
+    /// semantics; required by the mixed-precision path (per-layer format
+    /// boundaries address steps 1:1).
+    None,
+    /// Pair elementwise activations with the preceding compute step.
+    /// Arithmetic is unchanged (CAA-safe).
+    Pair,
+    /// [`Fusion::Pair`] plus batch-norm folding into the preceding affine
+    /// step. f64/witness executions only — **not** CAA-sound.
+    Full,
+}
+
+/// An elementwise activation a compute step can apply in place on its
+/// output buffer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Act {
+    Relu,
+    LeakyRelu { alpha: f64 },
+    Tanh,
+    Sigmoid,
+}
+
+/// What a step computes. Parameters are owned (folded copies where fusion
+/// rewrote them), so a plan is self-contained and shareable via `Arc`.
+#[derive(Clone, Debug)]
+pub enum StepKind {
+    /// `y = W x + b`, `w: [units, in]`.
+    Dense { w: Tensor<f64>, b: Vec<f64> },
+    /// 2-D convolution, kernel `[kh, kw, cin, cout]`.
+    Conv2D { kernel: Tensor<f64>, bias: Vec<f64>, stride: usize, padding: Padding },
+    /// Depthwise 2-D convolution, kernel `[kh, kw, c]`.
+    DepthwiseConv2D { kernel: Tensor<f64>, bias: Vec<f64>, stride: usize, padding: Padding },
+    /// Max pooling over `[ph, pw]` windows.
+    MaxPool2D { ph: usize, pw: usize },
+    /// Average pooling over `[ph, pw]` windows.
+    AvgPool2D { ph: usize, pw: usize },
+    /// Inference-mode batch normalization (kept materialized at
+    /// [`Fusion::None`]/[`Fusion::Pair`]; folded away at [`Fusion::Full`]).
+    BatchNorm { gamma: Vec<f64>, beta: Vec<f64>, mean: Vec<f64>, variance: Vec<f64>, eps: f64 },
+    /// Shape-only: the executor treats this as a no-op on the flat buffer.
+    Flatten,
+    /// A standalone elementwise activation (not paired; applied in place).
+    Act(Act),
+    /// Numerically-stable softmax over the last axis.
+    Softmax,
+}
+
+impl StepKind {
+    /// Whether this step produces a fresh output buffer (as opposed to
+    /// operating in place / being shape-only).
+    fn writes_output(&self) -> bool {
+        !matches!(self, StepKind::Flatten | StepKind::Act(_))
+    }
+
+    /// Whether an activation may be paired onto this step's output.
+    fn accepts_fused_act(&self) -> bool {
+        self.writes_output() && !matches!(self, StepKind::Softmax)
+    }
+
+    /// Short tag for diagnostics and plan dumps.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepKind::Dense { .. } => "dense",
+            StepKind::Conv2D { .. } => "conv2d",
+            StepKind::DepthwiseConv2D { .. } => "depthwise_conv2d",
+            StepKind::MaxPool2D { .. } => "max_pool2d",
+            StepKind::AvgPool2D { .. } => "avg_pool2d",
+            StepKind::BatchNorm { .. } => "batch_norm",
+            StepKind::Flatten => "flatten",
+            StepKind::Act(Act::Relu) => "relu",
+            StepKind::Act(Act::LeakyRelu { .. }) => "leaky_relu",
+            StepKind::Act(Act::Tanh) => "tanh",
+            StepKind::Act(Act::Sigmoid) => "sigmoid",
+            StepKind::Softmax => "softmax",
+        }
+    }
+}
+
+/// One compiled step: kind + statically resolved geometry + provenance.
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub kind: StepKind,
+    /// Input shape, validated at build time.
+    pub in_shape: Vec<usize>,
+    /// Output shape (after the fused activation, which preserves shape).
+    pub out_shape: Vec<usize>,
+    /// Elementwise activation applied in place on this step's output
+    /// buffer, if fusion paired one.
+    pub fused_act: Option<Act>,
+    /// Model layer indices `[lo, hi)` this step covers (provenance for
+    /// diagnostics and per-layer precision maps).
+    pub layer_range: (usize, usize),
+}
+
+impl Step {
+    pub fn in_len(&self) -> usize {
+        self.in_shape.iter().product()
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+}
+
+/// A compiled, shape-resolved, optionally fused execution plan for one
+/// model. Build once, execute many times (generic over [`crate::tensor::Scalar`]).
+#[derive(Clone, Debug)]
+pub struct Plan {
+    model_name: String,
+    input_shape: Vec<usize>,
+    output_shape: Vec<usize>,
+    steps: Vec<Step>,
+    fusion: Fusion,
+    max_buf: usize,
+}
+
+impl Plan {
+    /// Compile `model` at the given fusion level. All shape inference and
+    /// geometry validation happens here; a returned plan executes
+    /// check-free.
+    pub fn build(model: &Model, fusion: Fusion) -> Result<Plan> {
+        let mut steps = Vec::with_capacity(model.layers.len());
+        let mut shape = model.input_shape.clone();
+        for (i, layer) in model.layers.iter().enumerate() {
+            let out_shape = layer
+                .output_shape(&shape)
+                .with_context(|| format!("plan: layer {i} ({})", layer.type_name()))?;
+            steps.push(Step {
+                kind: lower_layer(layer),
+                in_shape: shape,
+                out_shape: out_shape.clone(),
+                fused_act: None,
+                layer_range: (i, i + 1),
+            });
+            shape = out_shape;
+        }
+        if fusion == Fusion::Full {
+            fold_batch_norms(&mut steps);
+        }
+        if fusion != Fusion::None {
+            pair_activations(&mut steps);
+        }
+        let max_buf = steps
+            .iter()
+            .map(Step::out_len)
+            .chain(std::iter::once(model.input_shape.iter().product()))
+            .max()
+            .unwrap_or(0);
+        Ok(Plan {
+            model_name: model.name.clone(),
+            input_shape: model.input_shape.clone(),
+            output_shape: shape,
+            steps,
+            fusion,
+            max_buf,
+        })
+    }
+
+    /// The analysis plan: activation pairing only — arithmetic identical
+    /// to the interpreter, so CAA bounds are unchanged.
+    pub fn for_analysis(model: &Model) -> Result<Plan> {
+        Plan::build(model, Fusion::Pair)
+    }
+
+    /// The reference/witness plan: batch norms folded into the preceding
+    /// affine steps (f64 trace and throughput witness runs only).
+    pub fn for_reference(model: &Model) -> Result<Plan> {
+        Plan::build(model, Fusion::Full)
+    }
+
+    /// A 1:1 step-per-layer plan (legacy interpreter semantics; the
+    /// mixed-precision path's addressing mode).
+    pub fn unfused(model: &Model) -> Result<Plan> {
+        Plan::build(model, Fusion::None)
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.model_name
+    }
+
+    pub fn fusion(&self) -> Fusion {
+        self.fusion
+    }
+
+    pub fn steps(&self) -> &[Step] {
+        &self.steps
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    pub fn output_shape(&self) -> &[usize] {
+        &self.output_shape
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    /// Largest element count any step buffer reaches (arena sizing).
+    pub fn max_buffer_len(&self) -> usize {
+        self.max_buf
+    }
+}
+
+/// Lower one layer into its (unfused) step kind, cloning the parameters so
+/// the plan owns them.
+fn lower_layer(layer: &Layer) -> StepKind {
+    match layer {
+        Layer::Dense { w, b } => StepKind::Dense { w: w.clone(), b: b.clone() },
+        Layer::Conv2D { kernel, bias, stride, padding } => StepKind::Conv2D {
+            kernel: kernel.clone(),
+            bias: bias.clone(),
+            stride: *stride,
+            padding: *padding,
+        },
+        Layer::DepthwiseConv2D { kernel, bias, stride, padding } => StepKind::DepthwiseConv2D {
+            kernel: kernel.clone(),
+            bias: bias.clone(),
+            stride: *stride,
+            padding: *padding,
+        },
+        Layer::MaxPool2D { ph, pw } => StepKind::MaxPool2D { ph: *ph, pw: *pw },
+        Layer::AvgPool2D { ph, pw } => StepKind::AvgPool2D { ph: *ph, pw: *pw },
+        Layer::BatchNorm { gamma, beta, mean, variance, eps } => StepKind::BatchNorm {
+            gamma: gamma.clone(),
+            beta: beta.clone(),
+            mean: mean.clone(),
+            variance: variance.clone(),
+            eps: *eps,
+        },
+        Layer::Flatten => StepKind::Flatten,
+        Layer::Relu => StepKind::Act(Act::Relu),
+        Layer::LeakyRelu { alpha } => StepKind::Act(Act::LeakyRelu { alpha: *alpha }),
+        Layer::Tanh => StepKind::Act(Act::Tanh),
+        Layer::Sigmoid => StepKind::Act(Act::Sigmoid),
+        Layer::Softmax => StepKind::Softmax,
+    }
+}
+
+/// Fold every `BatchNorm` that directly follows a `Dense`/`Conv2D`/
+/// `DepthwiseConv2D` into that step's weights and bias:
+/// `y = s (W x + b - mu) + beta` with `s = gamma / sqrt(var + eps)`
+/// becomes `W' = s W` (per output channel), `b' = s (b - mu) + beta`.
+/// The scale is computed in f64 at build time — this changes the rounding
+/// profile and is why [`Fusion::Full`] is not CAA-sound.
+fn fold_batch_norms(steps: &mut Vec<Step>) {
+    let mut i = 1;
+    while i < steps.len() {
+        let foldable = matches!(steps[i].kind, StepKind::BatchNorm { .. })
+            && matches!(
+                steps[i - 1].kind,
+                StepKind::Dense { .. } | StepKind::Conv2D { .. } | StepKind::DepthwiseConv2D { .. }
+            );
+        if !foldable {
+            i += 1;
+            continue;
+        }
+        let bn = steps.remove(i);
+        let StepKind::BatchNorm { gamma, beta, mean, variance, eps } = bn.kind else {
+            unreachable!("checked above");
+        };
+        let scale: Vec<f64> = gamma
+            .iter()
+            .zip(&variance)
+            .map(|(&g, &v)| g / (v + eps).sqrt())
+            .collect();
+        let prev = &mut steps[i - 1];
+        match &mut prev.kind {
+            StepKind::Dense { w, b } => {
+                let (m, n) = (w.shape()[0], w.shape()[1]);
+                let wd = w.data_mut();
+                for j in 0..m {
+                    for col in 0..n {
+                        wd[j * n + col] *= scale[j];
+                    }
+                    b[j] = scale[j] * (b[j] - mean[j]) + beta[j];
+                }
+            }
+            StepKind::Conv2D { kernel, bias, .. } => {
+                let cout = *kernel.shape().last().expect("conv kernel rank 4");
+                for (idx, v) in kernel.data_mut().iter_mut().enumerate() {
+                    *v *= scale[idx % cout];
+                }
+                for co in 0..cout {
+                    bias[co] = scale[co] * (bias[co] - mean[co]) + beta[co];
+                }
+            }
+            StepKind::DepthwiseConv2D { kernel, bias, .. } => {
+                let c = *kernel.shape().last().expect("depthwise kernel rank 3");
+                for (idx, v) in kernel.data_mut().iter_mut().enumerate() {
+                    *v *= scale[idx % c];
+                }
+                for ch in 0..c {
+                    bias[ch] = scale[ch] * (bias[ch] - mean[ch]) + beta[ch];
+                }
+            }
+            _ => unreachable!("checked above"),
+        }
+        prev.out_shape = bn.out_shape;
+        prev.layer_range.1 = bn.layer_range.1;
+    }
+}
+
+/// Pair each standalone elementwise activation with the compute step
+/// directly before it. The activation is applied in place on that step's
+/// finished output buffer — identical operations in identical order, just
+/// without the extra buffer pass, so this is sound at every fusion level
+/// that enables it.
+fn pair_activations(steps: &mut Vec<Step>) {
+    let mut i = 1;
+    while i < steps.len() {
+        let pairable = matches!(steps[i].kind, StepKind::Act(_))
+            && steps[i - 1].kind.accepts_fused_act()
+            && steps[i - 1].fused_act.is_none();
+        if !pairable {
+            i += 1;
+            continue;
+        }
+        let act_step = steps.remove(i);
+        let StepKind::Act(a) = act_step.kind else {
+            unreachable!("checked above");
+        };
+        let prev = &mut steps[i - 1];
+        prev.fused_act = Some(a);
+        prev.out_shape = act_step.out_shape;
+        prev.layer_range.1 = act_step.layer_range.1;
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,288 @@
+//! Unit tests for the plan IR: build-time shape resolution, fusion
+//! structure, folding math, executor equivalence against the legacy
+//! interpreter, and arena reuse.
+
+#![allow(deprecated)] // the legacy interpreter is the equivalence oracle
+
+use super::*;
+use crate::caa::{Caa, Ctx};
+use crate::interval::Interval;
+use crate::layers::Layer;
+use crate::model::{zoo, Model};
+use crate::quant::EmulatedFp;
+use crate::tensor::{EmuCtx, Tensor};
+use crate::util::Rng;
+
+fn zoo_models() -> Vec<Model> {
+    vec![
+        zoo::tiny_mlp(11),
+        zoo::tiny_cnn(12),
+        zoo::tiny_pendulum(13),
+        zoo::scaled_mlp(14, 16, 24, 5),
+    ]
+}
+
+fn rand_input(model: &Model, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let n: usize = model.input_shape.iter().product();
+    (0..n).map(|_| rng.range(0.0, 1.0)).collect()
+}
+
+#[test]
+fn unfused_steps_match_legacy_shape_path() {
+    for model in zoo_models() {
+        let plan = Plan::unfused(&model).unwrap();
+        assert_eq!(plan.steps().len(), model.layers.len());
+        let mut shape = model.input_shape.clone();
+        for (step, layer) in plan.steps().iter().zip(&model.layers) {
+            assert_eq!(step.in_shape, shape);
+            shape = layer.output_shape(&shape).unwrap();
+            assert_eq!(step.out_shape, shape, "{}: {}", model.name, step.kind.name());
+        }
+        assert_eq!(plan.output_shape(), model.output_shape().unwrap().as_slice());
+    }
+}
+
+#[test]
+fn step_shapes_chain_at_every_fusion_level() {
+    for model in zoo_models() {
+        for fusion in [Fusion::None, Fusion::Pair, Fusion::Full] {
+            let plan = Plan::build(&model, fusion).unwrap();
+            let mut shape = model.input_shape.clone();
+            let mut next_layer = 0;
+            for step in plan.steps() {
+                assert_eq!(step.in_shape, shape, "{:?} {}", fusion, step.kind.name());
+                assert_eq!(step.layer_range.0, next_layer, "layer provenance is contiguous");
+                assert!(step.layer_range.1 > step.layer_range.0);
+                next_layer = step.layer_range.1;
+                shape = step.out_shape.clone();
+            }
+            assert_eq!(next_layer, model.layers.len(), "every layer is covered");
+            assert_eq!(plan.output_shape(), shape.as_slice());
+            assert!(plan.max_buffer_len() > 0);
+        }
+    }
+}
+
+#[test]
+fn pairing_attaches_activations() {
+    let plan = Plan::for_analysis(&zoo::tiny_mlp(1)).unwrap();
+    // dense+relu, dense+relu, dense, softmax -> 4 steps.
+    assert_eq!(plan.steps().len(), 4);
+    assert_eq!(plan.steps()[0].fused_act, Some(Act::Relu));
+    assert_eq!(plan.steps()[1].fused_act, Some(Act::Relu));
+    assert!(plan.steps()[2].fused_act.is_none());
+    assert!(matches!(plan.steps()[3].kind, StepKind::Softmax));
+}
+
+#[test]
+fn full_fusion_folds_batch_norm() {
+    let model = zoo::tiny_cnn(2);
+    let unfused = Plan::unfused(&model).unwrap();
+    let fused = Plan::for_reference(&model).unwrap();
+    assert!(unfused
+        .steps()
+        .iter()
+        .any(|s| matches!(s.kind, StepKind::BatchNorm { .. })));
+    assert!(
+        !fused
+            .steps()
+            .iter()
+            .any(|s| matches!(s.kind, StepKind::BatchNorm { .. })),
+        "conv-adjacent batch norm must fold away at Fusion::Full"
+    );
+    assert!(fused.steps().len() < unfused.steps().len());
+}
+
+#[test]
+fn f64_plan_matches_interpreter_bitwise_when_unfused_or_paired() {
+    for model in zoo_models() {
+        let x = rand_input(&model, 7);
+        let reference = model
+            .forward_interpreted::<f64>(&(), Tensor::new(model.input_shape.clone(), x.clone()))
+            .unwrap();
+        for fusion in [Fusion::None, Fusion::Pair] {
+            let plan = Plan::build(&model, fusion).unwrap();
+            let mut arena = Arena::new();
+            let got = plan.execute::<f64>(&(), &x, &mut arena).unwrap();
+            assert_eq!(
+                got,
+                reference.data(),
+                "{}: {fusion:?} must be arithmetically identical",
+                model.name
+            );
+        }
+    }
+}
+
+#[test]
+fn folded_f64_stays_within_ulp_scale() {
+    let model = zoo::tiny_cnn(23);
+    let x = rand_input(&model, 9);
+    let unfused = Plan::unfused(&model).unwrap();
+    let fused = Plan::for_reference(&model).unwrap();
+    let mut a1 = Arena::new();
+    let mut a2 = Arena::new();
+    let y1 = unfused.execute::<f64>(&(), &x, &mut a1).unwrap().to_vec();
+    let y2 = fused.execute::<f64>(&(), &x, &mut a2).unwrap();
+    for (u, f) in y1.iter().zip(y2) {
+        let scale = u.abs().max(1.0);
+        assert!(
+            (u - f).abs() <= 1e-10 * scale,
+            "fused {f:e} vs unfused {u:e}: folding must only re-associate f64 rounding"
+        );
+    }
+}
+
+#[test]
+fn caa_bounds_bit_identical_to_interpreter() {
+    // The soundness contract of Fusion::Pair: same ops in the same order,
+    // so every CAA entry is bit-identical to the per-layer interpreter.
+    for model in [zoo::tiny_mlp(42), zoo::tiny_cnn(5)] {
+        let ctx = Ctx::new();
+        let x = rand_input(&model, 3);
+        let mk_input = || {
+            Tensor::new(
+                model.input_shape.clone(),
+                x.iter().map(|&v| Caa::input(&ctx, Interval::point(v), v)).collect::<Vec<Caa>>(),
+            )
+        };
+        let reference = model.forward_interpreted::<Caa>(&ctx, mk_input()).unwrap();
+        let plan = Plan::for_analysis(&model).unwrap();
+        let mut arena = Arena::new();
+        let got = plan.execute::<Caa>(&ctx, mk_input().data(), &mut arena).unwrap();
+        assert_eq!(got.len(), reference.len());
+        for (g, r) in got.iter().zip(reference.data()) {
+            assert_eq!(g.fp().to_bits(), r.fp().to_bits(), "{}", model.name);
+            assert_eq!(g.abs_bound().to_bits(), r.abs_bound().to_bits(), "{}", model.name);
+            assert_eq!(g.rel_bound().to_bits(), r.rel_bound().to_bits(), "{}", model.name);
+            assert_eq!(g.ideal().lo().to_bits(), r.ideal().lo().to_bits());
+            assert_eq!(g.ideal().hi().to_bits(), r.ideal().hi().to_bits());
+            assert_eq!(g.rounded().lo().to_bits(), r.rounded().lo().to_bits());
+            assert_eq!(g.rounded().hi().to_bits(), r.rounded().hi().to_bits());
+        }
+    }
+}
+
+#[test]
+fn emulated_witness_matches_interpreter_bitwise() {
+    let model = zoo::tiny_cnn(8);
+    let x = rand_input(&model, 4);
+    for k in [8u32, 12, 20] {
+        let ec = EmuCtx { k };
+        let xe: Vec<EmulatedFp> = x.iter().map(|&v| EmulatedFp::new(v, k)).collect();
+        let reference = model
+            .forward_interpreted::<EmulatedFp>(
+                &ec,
+                Tensor::new(model.input_shape.clone(), xe.clone()),
+            )
+            .unwrap();
+        let plan = Plan::for_analysis(&model).unwrap();
+        let mut arena = Arena::new();
+        let got = plan.execute::<EmulatedFp>(&ec, &xe, &mut arena).unwrap();
+        for (g, r) in got.iter().zip(reference.data()) {
+            assert_eq!(g.v.to_bits(), r.v.to_bits(), "k={k}");
+        }
+    }
+}
+
+#[test]
+fn arena_steady_state_does_not_reallocate() {
+    let model = zoo::tiny_cnn(6);
+    let plan = Plan::for_analysis(&model).unwrap();
+    let x = rand_input(&model, 2);
+    let mut arena: Arena<f64> = Arena::new();
+    let first = plan.execute::<f64>(&(), &x, &mut arena).unwrap().to_vec();
+    let caps = (arena.cur.capacity(), arena.next.capacity(), arena.scratch.capacity());
+    for _ in 0..5 {
+        let again = plan.execute::<f64>(&(), &x, &mut arena).unwrap();
+        assert_eq!(again, first.as_slice());
+    }
+    assert_eq!(
+        (arena.cur.capacity(), arena.next.capacity(), arena.scratch.capacity()),
+        caps,
+        "repeat executions must reuse the warmed buffers"
+    );
+}
+
+#[test]
+fn execute_checks_input_length() {
+    let plan = Plan::for_analysis(&zoo::tiny_mlp(1)).unwrap();
+    let mut arena = Arena::new();
+    let err = plan.execute::<f64>(&(), &[0.0; 3], &mut arena).unwrap_err();
+    assert!(err.to_string().contains("expects input"), "{err}");
+}
+
+#[test]
+fn build_rejects_incompatible_stacks() {
+    let mut rng = Rng::new(1);
+    let model = Model {
+        name: "bad".into(),
+        input_shape: vec![8],
+        layers: vec![zoo::dense(&mut rng, 8, 6), zoo::dense(&mut rng, 7, 3)],
+    };
+    let err = Plan::unfused(&model).unwrap_err();
+    assert!(format!("{err:#}").contains("layer 1"), "{err:#}");
+}
+
+#[test]
+fn uncommon_step_kinds_match_interpreter() {
+    // Covers the kinds the zoo nets omit: AvgPool2D, LeakyRelu, Sigmoid,
+    // and an activation directly after Flatten (standalone in-place Act).
+    let mut rng = Rng::new(17);
+    let model = Model {
+        name: "exotic".into(),
+        input_shape: vec![4, 4, 2],
+        layers: vec![
+            zoo::conv2d(&mut rng, 3, 3, 2, 3, 1, crate::layers::Padding::Same),
+            Layer::LeakyRelu { alpha: 0.1 },
+            Layer::AvgPool2D { ph: 2, pw: 2 },
+            Layer::Sigmoid,
+            Layer::Flatten,
+            Layer::Tanh,
+            zoo::dense(&mut rng, 12, 4),
+            Layer::Softmax,
+        ],
+    };
+    let x = rand_input(&model, 21);
+    let reference = model
+        .forward_interpreted::<f64>(&(), Tensor::new(model.input_shape.clone(), x.clone()))
+        .unwrap();
+    for fusion in [Fusion::None, Fusion::Pair] {
+        let plan = Plan::build(&model, fusion).unwrap();
+        let mut arena = Arena::new();
+        let got = plan.execute::<f64>(&(), &x, &mut arena).unwrap();
+        assert_eq!(got, reference.data(), "{fusion:?}");
+    }
+    // CAA agrees bitwise as well (the exotic kinds keep the contract).
+    let ctx = Ctx::new();
+    let mk = |vals: &[f64]| {
+        Tensor::new(
+            model.input_shape.clone(),
+            vals.iter().map(|&v| Caa::input(&ctx, Interval::point(v), v)).collect::<Vec<Caa>>(),
+        )
+    };
+    let oracle = model.forward_interpreted::<Caa>(&ctx, mk(&x)).unwrap();
+    let plan = Plan::for_analysis(&model).unwrap();
+    let mut arena = Arena::new();
+    let got = plan.execute::<Caa>(&ctx, mk(&x).data(), &mut arena).unwrap();
+    for (g, r) in got.iter().zip(oracle.data()) {
+        assert_eq!(g.abs_bound().to_bits(), r.abs_bound().to_bits());
+        assert_eq!(g.rel_bound().to_bits(), r.rel_bound().to_bits());
+    }
+}
+
+#[test]
+fn model_forward_routes_through_plan() {
+    // Model::forward (the compat path) and the explicit plan executor
+    // agree bitwise.
+    let model = zoo::tiny_cnn(31);
+    let x = rand_input(&model, 5);
+    let via_model = model
+        .forward::<f64>(&(), Tensor::new(model.input_shape.clone(), x.clone()))
+        .unwrap();
+    let plan = model.compile(Fusion::None).unwrap();
+    let mut arena = Arena::new();
+    let via_plan = plan.execute::<f64>(&(), &x, &mut arena).unwrap();
+    assert_eq!(via_model.data(), via_plan);
+}

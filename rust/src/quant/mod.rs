@@ -119,6 +119,27 @@ impl EmulatedFp {
     }
 }
 
+/// Execute a compiled plan under emulated precision-k arithmetic — the
+/// witness run the soundness sweeps compare against CAA bounds. Uses this
+/// worker thread's arena, so sweeping many `k` values over the same plan
+/// is allocation-free at the tensor level. Pass an **unfused** plan when
+/// the run witnesses analysis bounds (batch-norm folding changes the
+/// rounding profile; see [`crate::plan::Fusion`]).
+pub fn emulated_forward(
+    plan: &crate::plan::Plan,
+    k: u32,
+    sample: &[f64],
+) -> anyhow::Result<Vec<f64>> {
+    let ec = crate::tensor::EmuCtx { k };
+    let input: Vec<EmulatedFp> = sample.iter().map(|&v| EmulatedFp::new(v, k)).collect();
+    crate::coordinator::with_worker_scratch(
+        |arena: &mut crate::plan::Arena<EmulatedFp>| {
+            let out = plan.execute::<EmulatedFp>(&ec, &input, arena)?;
+            Ok(out.iter().map(|e| e.v).collect())
+        },
+    )
+}
+
 /// Check a concrete emulated run against CAA output bounds: given the CAA
 /// result for a quantity, the plain-f64 reference value `ref_v` for the same
 /// concrete input, and the emulated precision-k value `emu_v`, verify

@@ -4,6 +4,14 @@
 //! only place the L2/L1 output is touched at runtime — Python itself is
 //! never on this path.
 //!
+//! This is the *external* compiled-execution path (XLA-compiled f32
+//! kernels for throughput measurements); its in-process sibling is
+//! [`crate::plan::Plan`], which compiles a model into shape-resolved
+//! steps that the analysis arithmetics (f64 / CAA / emulated-k) execute
+//! directly. Both follow the same compile-once-run-many design; the
+//! PJRT cache here is keyed by `(model, variant)` the way the session's
+//! model cache is keyed by path + content hash.
+//!
 //! Interchange is **HLO text**, not serialized protos: jax >= 0.5 emits
 //! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids (see /opt/xla-example/README.md).

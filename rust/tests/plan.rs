@@ -1,0 +1,214 @@
+//! Integration tests for the compiled execution plan (PR "compile models
+//! into a shape-resolved, fused, buffer-reusing execution Plan"):
+//!
+//! * every `model::zoo` network compiles, and the plan's step-by-step
+//!   inferred shapes match the legacy per-layer `output_shape` path;
+//! * fused (batch-norm-folded) f64 execution matches unfused within a
+//!   1-ulp-scale tolerance;
+//! * **soundness regression**: CAA error bounds from the plan executor are
+//!   bit-identical to the pre-refactor per-layer interpreter on the digits
+//!   workload — fusion must never silently tighten (or loosen) bounds;
+//! * the `Session` front door produces the same outcome as the interpreter
+//!   oracle, serial and pooled.
+
+#![allow(deprecated)] // Model::forward_interpreted is the equivalence oracle
+
+use rigor::analysis::{analyze_class, AnalysisConfig};
+use rigor::api::{AnalysisRequest, ExecMode, Session};
+use rigor::caa::{Caa, Ctx};
+use rigor::data::{synthetic, Dataset};
+use rigor::interval::Interval;
+use rigor::model::{zoo, Model};
+use rigor::plan::{Arena, Fusion, Plan};
+use rigor::tensor::Tensor;
+use rigor::util::Rng;
+
+fn zoo_models() -> Vec<Model> {
+    vec![
+        zoo::tiny_mlp(1),
+        zoo::tiny_cnn(2),
+        zoo::tiny_pendulum(3),
+        zoo::scaled_mlp(4, 32, 48, 10),
+    ]
+}
+
+fn digits_setup() -> (Model, Dataset) {
+    let mut rng = Rng::new(3);
+    let data = synthetic::digits(&mut rng, 8, 2, 0.05);
+    let model = zoo::scaled_mlp(1, 64, 32, 10);
+    (model, data)
+}
+
+#[test]
+fn every_zoo_network_compiles_with_legacy_shapes() {
+    for model in zoo_models() {
+        for fusion in [Fusion::None, Fusion::Pair, Fusion::Full] {
+            let plan = Plan::build(&model, fusion).unwrap();
+            // The plan's chained shapes must traverse exactly the legacy
+            // per-layer output_shape sequence (fusion may skip
+            // intermediates but never disagree with them).
+            let mut legacy = vec![model.input_shape.clone()];
+            let mut s = model.input_shape.clone();
+            for layer in &model.layers {
+                s = layer.output_shape(&s).unwrap();
+                legacy.push(s.clone());
+            }
+            for step in plan.steps() {
+                assert_eq!(
+                    step.in_shape, legacy[step.layer_range.0],
+                    "{}/{fusion:?}: step input shape",
+                    model.name
+                );
+                assert_eq!(
+                    step.out_shape, legacy[step.layer_range.1],
+                    "{}/{fusion:?}: step output shape",
+                    model.name
+                );
+            }
+            assert_eq!(plan.output_shape(), legacy.last().unwrap().as_slice());
+        }
+    }
+}
+
+#[test]
+fn fused_f64_matches_unfused_within_ulp_scale() {
+    for model in [zoo::tiny_cnn(7), zoo::tiny_cnn(19)] {
+        let n: usize = model.input_shape.iter().product();
+        let mut rng = Rng::new(41);
+        let unfused = Plan::unfused(&model).unwrap();
+        let fused = Plan::for_reference(&model).unwrap();
+        let mut a1: Arena<f64> = Arena::new();
+        let mut a2: Arena<f64> = Arena::new();
+        for _ in 0..4 {
+            let x: Vec<f64> = (0..n).map(|_| rng.range(0.0, 1.0)).collect();
+            let y1 = unfused.execute::<f64>(&(), &x, &mut a1).unwrap().to_vec();
+            let y2 = fused.execute::<f64>(&(), &x, &mut a2).unwrap();
+            for (u, f) in y1.iter().zip(y2) {
+                let scale = u.abs().max(1.0);
+                assert!(
+                    (u - f).abs() <= 1e-10 * scale,
+                    "{}: fused {f:e} deviates from unfused {u:e}",
+                    model.name
+                );
+            }
+        }
+    }
+}
+
+/// The pre-refactor interpreter's per-class analysis, reproduced verbatim
+/// as the regression oracle.
+fn analyze_class_interpreted(
+    model: &Model,
+    cfg: &AnalysisConfig,
+    sample: &[f64],
+) -> Vec<Caa> {
+    let data: Vec<Caa> = sample
+        .iter()
+        .map(|&v| {
+            let range = if cfg.input_radius > 0.0 {
+                Interval::new(v - cfg.input_radius, v + cfg.input_radius)
+            } else {
+                Interval::point(v)
+            };
+            if cfg.exact_inputs {
+                Caa::input_exact(range, v)
+            } else {
+                Caa::input(&cfg.ctx, range, v)
+            }
+        })
+        .collect();
+    let input = Tensor::new(model.input_shape.clone(), data);
+    model
+        .forward_interpreted::<Caa>(&cfg.ctx, input)
+        .unwrap()
+        .into_data()
+}
+
+#[test]
+fn caa_bounds_bit_identical_to_interpreter_on_digits() {
+    // Soundness regression for the tentpole: the plan executor (with the
+    // analysis fusion level) must reproduce the interpreter's CAA bounds
+    // *bit for bit* on the digits workload — for point inputs, boxed
+    // inputs, and exact-input mode.
+    let (model, data) = digits_setup();
+    let configs = [
+        AnalysisConfig::default(),
+        AnalysisConfig { exact_inputs: true, ..AnalysisConfig::default() },
+        AnalysisConfig { input_radius: 0.05, ..AnalysisConfig::default() },
+        AnalysisConfig { ctx: Ctx::with_u_max(2f64.powi(-15)), ..AnalysisConfig::default() },
+    ];
+    for cfg in &configs {
+        for (class, idx) in data.class_representatives() {
+            let sample = &data.inputs[idx];
+            let oracle = analyze_class_interpreted(&model, cfg, sample);
+            let got = analyze_class(&model, cfg, class, sample).unwrap();
+
+            let oracle_abs = oracle.iter().map(|o| o.abs_bound()).fold(0.0f64, f64::max);
+            let oracle_rel = oracle.iter().map(|o| o.rel_bound()).fold(0.0f64, f64::max);
+            assert_eq!(
+                got.max_abs_u.to_bits(),
+                oracle_abs.to_bits(),
+                "class {class}: abs bound drifted from the interpreter"
+            );
+            assert_eq!(
+                got.max_rel_u.to_bits(),
+                oracle_rel.to_bits(),
+                "class {class}: rel bound drifted from the interpreter"
+            );
+        }
+    }
+}
+
+#[test]
+fn session_outcome_identical_to_interpreter_oracle() {
+    let (model, data) = digits_setup();
+    let cfg = AnalysisConfig::default();
+
+    // Oracle: worst-case bounds over all representatives, via the
+    // deprecated interpreter walk.
+    let mut oracle_abs = 0.0f64;
+    let mut oracle_rel = 0.0f64;
+    for (_, idx) in data.class_representatives() {
+        let outs = analyze_class_interpreted(&model, &cfg, &data.inputs[idx]);
+        oracle_abs = outs.iter().map(|o| o.abs_bound()).fold(oracle_abs, f64::max);
+        oracle_rel = outs.iter().map(|o| o.rel_bound()).fold(oracle_rel, f64::max);
+    }
+
+    let session = Session::builder().workers(4).build();
+    for mode in [ExecMode::Serial, ExecMode::Pooled { workers: 0 }] {
+        let req = AnalysisRequest::builder()
+            .model(model.clone())
+            .data(data.clone())
+            .mode(mode)
+            .build()
+            .unwrap();
+        let out = session.run(&req).unwrap();
+        assert_eq!(out.analysis.max_abs_u.to_bits(), oracle_abs.to_bits(), "{mode:?}");
+        assert_eq!(out.analysis.max_rel_u.to_bits(), oracle_rel.to_bits(), "{mode:?}");
+    }
+}
+
+#[test]
+fn emulated_witness_plan_entry_point() {
+    // quant::emulated_forward (the plan-driven witness) matches the
+    // model-level emulated execution bitwise.
+    use rigor::quant::EmulatedFp;
+    use rigor::tensor::EmuCtx;
+    let model = zoo::tiny_cnn(9);
+    let n: usize = model.input_shape.iter().product();
+    let mut rng = Rng::new(11);
+    let x: Vec<f64> = (0..n).map(|_| rng.range(0.0, 1.0)).collect();
+    let plan = Plan::unfused(&model).unwrap();
+    for k in [8u32, 16] {
+        let got = rigor::quant::emulated_forward(&plan, k, &x).unwrap();
+        let ec = EmuCtx { k };
+        let xe = Tensor::new(
+            model.input_shape.clone(),
+            x.iter().map(|&v| EmulatedFp::new(v, k)).collect::<Vec<_>>(),
+        );
+        let reference = model.forward_interpreted::<EmulatedFp>(&ec, xe).unwrap();
+        for (g, r) in got.iter().zip(reference.data()) {
+            assert_eq!(g.to_bits(), r.v.to_bits(), "k={k}");
+        }
+    }
+}
