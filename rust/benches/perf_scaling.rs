@@ -187,6 +187,27 @@ fn main() {
         comparisons.push(row);
     }
 
+    // Graph topology (plan-only: the legacy interpreter cannot walk
+    // residual models — the buffer-pool plan is the only executor).
+    {
+        let res = zoo::residual_cnn(5);
+        let res_n: usize = res.input_shape.iter().product();
+        let res_x: Vec<f64> = (0..res_n).map(|i| (i % 5) as f64 / 5.0).collect();
+        let plan = Plan::for_analysis(&res).expect("compile");
+        let mut arena: Arena<f64> = Arena::new();
+        b.bench("f64/residual-cnn/plan", || {
+            plan.execute::<f64>(&(), &res_x, &mut arena).unwrap().len()
+        });
+        let mut caa_arena: Arena<Caa> = Arena::new();
+        let caa_input: Vec<Caa> = res_x
+            .iter()
+            .map(|&v| Caa::input(&ctx, Interval::point(v), v))
+            .collect();
+        b.bench("caa/residual-cnn/plan", || {
+            plan.execute::<Caa>(&ctx, &caa_input, &mut caa_arena).unwrap().len()
+        });
+    }
+
     println!("{:<20} {:>14} {:>14} {:>9}", "workload", "interpreter", "plan", "speedup");
     for (name, i_ns, p_ns) in &comparisons {
         println!(

@@ -112,6 +112,17 @@ fn main() {
     println!("\nper-op emulation vs CAA bound, tiny_mlp (well-conditioned):");
     sweep(&mut b, &session, "tiny", &small, &small_samples, &[8, 12, 16, 20, 24], false);
 
+    // Graph topology: the soundness contract holds across merge points
+    // (residual Add, branch Concat) exactly as on chains — every pass
+    // executes the same compiled buffer-pool plan.
+    let residual = Arc::new(zoo::residual_cnn(7));
+    let mut rng = rigor::util::Rng::new(13);
+    let res_samples: Vec<Vec<f64>> = (0..6)
+        .map(|_| (0..36).map(|_| rng.range(0.0, 1.0)).collect())
+        .collect();
+    println!("\nper-op emulation vs CAA bound, residual_cnn (graph topology):");
+    sweep(&mut b, &session, "residual", &residual, &res_samples, &[8, 12, 16, 20], false);
+
     // Storage emulation through the AOT artifacts (pjrt builds only).
     #[cfg(feature = "pjrt")]
     if rigor::runtime::artifacts_available() {

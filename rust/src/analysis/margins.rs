@@ -11,6 +11,7 @@
 /// Classification error margins derived from a top-1 confidence floor.
 #[derive(Clone, Copy, Debug)]
 pub struct Margins {
+    /// The top-1 confidence floor (`> 1/2`).
     pub p_star: f64,
 }
 

@@ -13,6 +13,20 @@
 //! certifies one concrete assignment. [`tune_mixed`] searches greedily for
 //! a cheap assignment: starting from a certified uniform k, it walks the
 //! layers and lowers each `k_ℓ` as far as the certification margin allows.
+//!
+//! Assignments are **per layer, in declaration order** (`ks[l]` is layer
+//! `l`'s format) on sequential and graph models alike; the drivers map
+//! each unfused step to its layer through the step's provenance
+//! (`layer_range`), so a graph model whose JSON listing order differs
+//! from the topological evaluation order still gets every layer at its
+//! own declared format. Format boundaries are charged per buffer read:
+//! when a step consumes a value produced in a different format, the
+//! carried bounds are rescaled in place in that value's buffer and the
+//! conversion rounding is charged. A skip value read by consumers in
+//! several formats is rescaled at each transition, charging the chain of
+//! conversions it would really undergo — an over-approximation across
+//! diverging branches (sound: bounds only grow; per-edge maps are a
+//! ROADMAP follow-on).
 
 use super::{caa_input_cfg, AnalysisConfig, Margins};
 use crate::caa::{badd, bmul, Caa, Ctx, RND_BASIC};
@@ -75,7 +89,9 @@ pub fn validate_assignment(model: &Model, ks: &[u32]) -> Result<()> {
     validate_ks_range(ks)
 }
 
-/// Validate an assignment against an **unfused** plan (1 step = 1 layer).
+/// Validate an assignment against an **unfused** plan (1 step = 1 layer;
+/// `ks[l]` is the format of *layer* `l` in declaration order — steps find
+/// their layer through provenance, see [`step_k`]).
 fn validate_assignment_plan(plan: &Plan, ks: &[u32]) -> Result<()> {
     if plan.fusion() != Fusion::None {
         bail!("mixed-precision analysis needs an unfused plan (Plan::unfused)");
@@ -88,6 +104,13 @@ fn validate_assignment_plan(plan: &Plan, ks: &[u32]) -> Result<()> {
         );
     }
     validate_ks_range(ks)
+}
+
+/// The format of step `i` of an unfused plan under a per-layer assignment:
+/// an unfused step covers exactly one layer, recorded in its provenance,
+/// so this holds for any topological ordering of a graph model.
+fn step_k(plan: &Plan, ks: &[u32], i: usize) -> u32 {
+    ks[plan.steps()[i].layer_range.0]
 }
 
 /// Analyze one sample under a per-layer precision assignment. Returns the
@@ -113,28 +136,37 @@ pub fn analyze_sample_mixed_plan(
     sample: &[f64],
 ) -> Result<Vec<Caa>> {
     validate_assignment_plan(plan, ks)?;
-    let mut u_prev = unit_roundoff(ks[0]);
-    let ctx0 = Ctx::with_u_max(u_prev);
+    // The input is embedded in the format of the first *executed* layer.
+    let u0 = unit_roundoff(step_k(plan, ks, 0));
+    let ctx0 = Ctx::with_u_max(u0);
     let input =
         caa_input_cfg(&ctx0, plan.input_shape(), sample, cfg.input_radius, cfg.exact_inputs);
     // Reuse this thread's arena: the tuning loop calls this O(layers ×
     // k-range × classes) times, and only the (small) output is copied out.
     crate::coordinator::with_worker_scratch(|arena: &mut Arena<Caa>| {
-        arena.reserve_for(plan);
-        arena.load(input.data());
-        for (i, &k) in ks.iter().enumerate() {
-            let u = unit_roundoff(k);
-            if u != u_prev {
-                // Format boundary: rescale bounds + charge the conversion.
-                for v in arena.current_mut() {
-                    *v = rescale(v, u_prev, u);
+        arena.load_input(plan, input.data());
+        // Format currently held by each pool buffer; the input starts in
+        // the first step's format (matching the embedding context above).
+        let mut buf_u = vec![u0; plan.buffer_count()];
+        for i in 0..plan.steps().len() {
+            let u = unit_roundoff(step_k(plan, ks, i));
+            let step = &plan.steps()[i];
+            for &b in &step.inputs {
+                if buf_u[b] != u {
+                    // Format boundary: rescale bounds + charge the
+                    // conversion, in place in the value's buffer.
+                    let from = buf_u[b];
+                    for v in arena.buffer_mut(b) {
+                        *v = rescale(v, from, u);
+                    }
+                    buf_u[b] = u;
                 }
-                u_prev = u;
             }
             let ctx = Ctx::with_u_max(u);
             plan.execute_step::<Caa>(i, &ctx, arena);
+            buf_u[step.out] = u;
         }
-        Ok(arena.current().to_vec())
+        Ok(arena.buffer(plan.output_buf()).to_vec())
     })
 }
 
@@ -160,13 +192,19 @@ pub fn analyze_mixed_plan(
     ks: &[u32],
 ) -> Result<MixedAnalysis> {
     validate_assignment_plan(plan, ks)?;
+    let n_steps = plan.steps().len();
+    if n_steps == 0 {
+        bail!("mixed-precision analysis needs at least one layer");
+    }
     let reps = if data.labels.is_empty() {
         vec![(0usize, 0usize)]
     } else {
         data.class_representatives()
     };
     let margins = Margins::new(cfg.p_star)?;
-    let u_out = unit_roundoff(*ks.last().expect("nonempty assignment"));
+    // The last step in topological order is the output layer (liveness
+    // validation makes every layer an ancestor of the sink).
+    let u_out = unit_roundoff(step_k(plan, ks, n_steps - 1));
     let mut max_abs = 0.0f64;
     let mut max_rel = 0.0f64;
     let mut certified = true;
@@ -225,28 +263,35 @@ pub fn tune_mixed(
 }
 
 /// Emulated mixed-precision *execution* (witness for the analysis): runs
-/// the model in f64 but rounds every layer output (and the lifted
-/// parameters) to the layer's format — storage emulation with per-layer
-/// formats. Driven step-by-step through an unfused plan.
+/// the model in f64 but rounds every step output (and the lifted
+/// parameters) to the step's format — storage emulation with per-layer
+/// formats. Driven step-by-step through an unfused plan, so it works on
+/// sequential and graph models alike (each step rounds exactly its own
+/// output buffer).
 pub fn forward_mixed_emulated(model: &Model, ks: &[u32], sample: &[f64]) -> Result<Vec<f64>> {
     if ks.len() != model.layers.len() {
         bail!("assignment length mismatch");
     }
     let plan = Plan::unfused(model)?;
-    let rounded_input: Vec<f64> = sample.iter().map(|&v| round_to_precision(v, ks[0])).collect();
+    if plan.steps().is_empty() {
+        bail!("mixed-precision emulation needs at least one layer");
+    }
+    // Round the input into the first *executed* layer's format.
+    let k_in = step_k(&plan, ks, 0);
+    let rounded_input: Vec<f64> = sample.iter().map(|&v| round_to_precision(v, k_in)).collect();
     if rounded_input.len() != plan.input_len() {
         bail!("sample has {} values for input {:?}", rounded_input.len(), plan.input_shape());
     }
     let mut arena = Arena::new();
-    arena.reserve_for(&plan);
-    arena.load(&rounded_input);
-    for (i, &k) in ks.iter().enumerate() {
+    arena.load_input(&plan, &rounded_input);
+    for i in 0..plan.steps().len() {
+        let k = step_k(&plan, ks, i);
         plan.execute_step::<f64>(i, &(), &mut arena);
-        for v in arena.current_mut() {
+        for v in arena.buffer_mut(plan.steps()[i].out) {
             *v = round_to_precision(*v, k);
         }
     }
-    Ok(arena.current().to_vec())
+    Ok(arena.buffer(plan.output_buf()).to_vec())
 }
 
 #[cfg(test)]
@@ -349,6 +394,67 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn assignment_is_per_layer_even_when_listing_is_not_topological() {
+        // Two structurally identical residual models sharing the same
+        // weights, one listed topologically and one listed in reverse.
+        // A per-layer assignment, permuted the same way, must produce
+        // bit-identical emulated runs and bounds — i.e. `ks[l]` follows
+        // the *layer*, not the topological step position.
+        use crate::layers::Layer;
+        use crate::model::{zoo, Graph, Model};
+        let mut rng = crate::util::Rng::new(31);
+        let d1 = zoo::dense(&mut rng, 4, 4);
+        let d2 = zoo::dense(&mut rng, 4, 4);
+        let d3 = zoo::dense(&mut rng, 4, 2);
+
+        let wires = |names: &[&str], inbound: &[&[&str]]| Graph {
+            names: names.iter().map(|s| s.to_string()).collect(),
+            inbound: inbound
+                .iter()
+                .map(|ins| ins.iter().map(|s| s.to_string()).collect())
+                .collect(),
+            output: Some("d3".to_string()),
+        };
+        let topo_listed = Model {
+            name: "topo".into(),
+            input_shape: vec![4],
+            layers: vec![d1.clone(), Layer::Relu, d2.clone(), Layer::Add, d3.clone()],
+            graph: Some(wires(
+                &["d1", "a1", "d2", "s", "d3"],
+                &[&["input"], &["d1"], &["a1"], &["d2", "a1"], &["s"]],
+            )),
+        };
+        let reverse_listed = Model {
+            name: "reverse".into(),
+            input_shape: vec![4],
+            layers: vec![d3, Layer::Add, d2, Layer::Relu, d1],
+            graph: Some(wires(
+                &["d3", "s", "d2", "a1", "d1"],
+                &[&["s"], &["d2", "a1"], &["a1"], &["d1"], &["input"]],
+            )),
+        };
+
+        let ks_topo = vec![12u32, 14, 16, 18, 20];
+        let ks_reverse: Vec<u32> = ks_topo.iter().rev().copied().collect();
+        let sample = vec![0.3, -0.1, 0.7, 0.5];
+
+        let ya = forward_mixed_emulated(&topo_listed, &ks_topo, &sample).unwrap();
+        let yb = forward_mixed_emulated(&reverse_listed, &ks_reverse, &sample).unwrap();
+        assert_eq!(ya.len(), yb.len());
+        for (a, b) in ya.iter().zip(&yb) {
+            assert_eq!(a.to_bits(), b.to_bits(), "emulated runs must agree bitwise");
+        }
+
+        let cfg = AnalysisConfig::default();
+        let ba = analyze_sample_mixed(&topo_listed, &cfg, &ks_topo, &sample).unwrap();
+        let bb = analyze_sample_mixed(&reverse_listed, &cfg, &ks_reverse, &sample).unwrap();
+        for (a, b) in ba.iter().zip(&bb) {
+            assert_eq!(a.abs_bound().to_bits(), b.abs_bound().to_bits());
+            assert_eq!(a.rel_bound().to_bits(), b.rel_bound().to_bits());
         }
     }
 

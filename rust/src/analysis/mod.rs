@@ -1,6 +1,24 @@
-//! The analysis engine: per-class CAA runs over a model, bound
-//! aggregation, precision tailoring, and the baselines/theory checkers the
-//! experiments compare against.
+//! The analysis engine — the paper's pipeline stages §IV–§VI over a
+//! compiled [`crate::plan::Plan`].
+//!
+//! One [`analyze_class`] call is one CAA inference run: the sample is
+//! embedded as CAA inputs ([`caa_input_cfg`]), executed through the
+//! shared analysis plan (sequential or graph topology alike), and the
+//! output bounds are aggregated per class and per model
+//! ([`ModelAnalysis`]). On top of the single parametric run sit:
+//!
+//! * [`margins`] (§IV): the `p*`-margin algebra turning output error
+//!   bounds into the minimum safe precision;
+//! * [`certify_min_precision`] (§V): the semi-automatic tailoring loop
+//!   re-running the analysis at candidate `u_max = 2^(1-k)`;
+//! * [`mixed`] (§VI): per-layer format assignments, boundary conversion
+//!   charges, and greedy tuning;
+//! * [`baseline`]: the IA-only and sampling baselines the experiments
+//!   bracket CAA between, and [`softmax_theory`]: the paper's closed-form
+//!   softmax bound checker.
+//!
+//! Callers go through [`crate::api::Session`]; the free functions here are
+//! the engine the service layer drives.
 
 pub mod baseline;
 pub mod margins;
@@ -52,6 +70,7 @@ impl Default for AnalysisConfig {
 /// Analysis result for one class representative (one CAA inference run).
 #[derive(Clone, Debug)]
 pub struct ClassAnalysis {
+    /// The class this representative belongs to.
     pub class: usize,
     /// Max absolute error bound over all output elements, units of u.
     pub max_abs_u: f64,
@@ -66,24 +85,33 @@ pub struct ClassAnalysis {
     /// Whether rounded ranges of distinct classes overlap (a
     /// misclassification cannot be excluded *within the analyzed u range*).
     pub ambiguous: bool,
+    /// Wall-clock seconds this class's CAA run took.
     pub secs: f64,
 }
 
 /// Aggregated analysis of a model over all class representatives.
 #[derive(Clone, Debug)]
 pub struct ModelAnalysis {
+    /// Name of the analyzed model.
     pub model_name: String,
+    /// One entry per analyzed class representative.
     pub per_class: Vec<ClassAnalysis>,
+    /// Worst absolute error bound over all classes, units of u.
     pub max_abs_u: f64,
+    /// Worst relative error bound over all classes, units of u.
     pub max_rel_u: f64,
+    /// Total wall-clock seconds of the analysis.
     pub total_secs: f64,
     /// Minimum precision that provably preserves the argmax at p*.
     pub required_k: Option<u32>,
+    /// The confidence floor the margins were derived from.
     pub p_star: f64,
+    /// The `u_max` the bounds are valid under.
     pub u_max: f64,
 }
 
 impl ModelAnalysis {
+    /// Average seconds per class run (Table I's time column).
     pub fn secs_per_class(&self) -> f64 {
         if self.per_class.is_empty() {
             0.0

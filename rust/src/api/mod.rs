@@ -88,6 +88,7 @@ impl SessionBuilder {
         self
     }
 
+    /// Finish the builder and start the session's worker pool.
     pub fn build(self) -> Session {
         let pool = match self.workers {
             Some(w) => Pool::new(w, w * 4),
@@ -113,6 +114,7 @@ impl Session {
         Session::builder().build()
     }
 
+    /// Start configuring a session (worker count, cache capacity).
     pub fn builder() -> SessionBuilder {
         SessionBuilder { workers: None, cache_capacity: 16 }
     }
@@ -217,7 +219,23 @@ impl Session {
     /// serial or fanned out per [`ExecMode`], streamed through the
     /// request's progress callback if one is set. Every run executes
     /// through the compiled analysis [`Plan`] (cached for path-based
-    /// models), never the per-layer interpreter.
+    /// models), never the per-layer interpreter — so sequential and graph
+    /// (residual/branchy) models take the identical path.
+    ///
+    /// ```
+    /// use rigor::api::{AnalysisRequest, Session};
+    /// use rigor::model::zoo;
+    ///
+    /// let session = Session::builder().workers(1).build();
+    /// // Analyze a residual (skip-connection) model over the input box.
+    /// let req = AnalysisRequest::builder()
+    ///     .model(zoo::residual_mlp(7))
+    ///     .input_box()
+    ///     .build()?;
+    /// let outcome = session.run(&req)?;
+    /// assert!(outcome.analysis.max_abs_u.is_finite());
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn run(&self, req: &AnalysisRequest) -> Result<AnalysisOutcome> {
         let (model, plan, data) = self.resolve(req)?;
         self.run_resolved(req, &model, &plan, &data)

@@ -68,18 +68,38 @@ pub struct AnalysisRequest {
 }
 
 impl AnalysisRequest {
+    /// Start building a request. Defaults mirror the paper's setup; only
+    /// a model and a data reference are mandatory.
+    ///
+    /// ```
+    /// use rigor::api::{AnalysisRequest, ExecMode};
+    /// use rigor::model::zoo;
+    ///
+    /// let req = AnalysisRequest::builder()
+    ///     .model(zoo::tiny_pendulum(7))
+    ///     .input_box()
+    ///     .input_radius(6.0)      // the paper's whole-box Pendulum query
+    ///     .exact_inputs(true)
+    ///     .build()?;
+    /// assert_eq!(req.p_star(), 0.60);
+    /// assert_eq!(req.mode(), ExecMode::Serial);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn builder() -> AnalysisRequestBuilder {
         AnalysisRequestBuilder::new()
     }
 
+    /// The top-1 confidence floor `p*` this request certifies against.
     pub fn p_star(&self) -> f64 {
         self.p_star
     }
 
+    /// The upper bound on `u = 2^(1-k)` the analysis covers.
     pub fn u_max(&self) -> f64 {
         self.u_max
     }
 
+    /// How per-class jobs execute (serial or pooled).
     pub fn mode(&self) -> ExecMode {
         self.mode
     }

@@ -20,15 +20,21 @@ use std::time::Duration;
 /// One benchmark's statistics.
 #[derive(Clone, Debug)]
 pub struct Stats {
+    /// Benchmark name.
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Mean iteration time.
     pub mean: Duration,
+    /// Median iteration time.
     pub p50: Duration,
+    /// 95th-percentile iteration time.
     pub p95: Duration,
 }
 
 /// Benchmark runner + result table.
 pub struct Bencher {
+    /// Group name printed over the result table.
     pub group: String,
     min_window: Duration,
     max_iters: usize,
@@ -36,6 +42,7 @@ pub struct Bencher {
 }
 
 impl Bencher {
+    /// A bencher with the default window (200 ms, up to 1000 iters).
     pub fn new(group: &str) -> Bencher {
         Bencher {
             group: group.to_string(),
@@ -133,6 +140,7 @@ impl Bencher {
         s
     }
 
+    /// All statistics measured so far.
     pub fn results(&self) -> &[Stats] {
         &self.results
     }

@@ -80,6 +80,8 @@ pub fn rel_chain3(a: f64, b: f64, c: f64, u_max: f64) -> f64 {
     rel_chain2(rel_chain2(a, b, u_max), c, u_max)
 }
 
+/// Chain an arbitrary sequence of relative bounds (in units of u):
+/// `(1+c·u)(1+e·u) - 1` folded left to right, rounded up.
 #[inline]
 pub fn rel_chain(bounds: &[f64], u_max: f64) -> f64 {
     debug_assert!(u_max > 0.0 && u_max <= 0.5);

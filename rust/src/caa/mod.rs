@@ -85,21 +85,25 @@ impl Ctx {
         self
     }
 
+    /// Ablation: propagate only absolute error bounds.
     pub fn abs_only(mut self) -> Ctx {
         self.track_rel = false;
         self
     }
 
+    /// Ablation: propagate only relative error bounds.
     pub fn rel_only(mut self) -> Ctx {
         self.track_abs = false;
         self
     }
 
+    /// Ablation (A-decorr): disable id-based decorrelation.
     pub fn no_decorrelation(mut self) -> Ctx {
         self.decorrelation = false;
         self
     }
 
+    /// Ablation: disable the bound-label control-flow insight.
     pub fn no_labels(mut self) -> Ctx {
         self.labels = false;
         self
@@ -323,10 +327,12 @@ impl Caa {
         self.rounded
     }
 
+    /// The quantity this one is labeled `<=` to, if any.
     pub fn upper_label(&self) -> Option<&Arc<Caa>> {
         self.upper.as_ref()
     }
 
+    /// The quantity this one is labeled `>=` to, if any.
     pub fn lower_label(&self) -> Option<&Arc<Caa>> {
         self.lower.as_ref()
     }

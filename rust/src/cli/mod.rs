@@ -8,7 +8,9 @@ use std::fmt::Write as _;
 /// Specification of one option.
 #[derive(Clone)]
 pub struct OptSpec {
+    /// Option name (without the `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
     /// None => boolean flag; Some(default) => value option.
     pub default: Option<String>,
@@ -17,25 +19,32 @@ pub struct OptSpec {
 /// Specification of a subcommand.
 #[derive(Clone)]
 pub struct CmdSpec {
+    /// Subcommand name.
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Options the subcommand accepts.
     pub opts: Vec<OptSpec>,
 }
 
 /// Parsed command line.
 #[derive(Debug)]
 pub struct Parsed {
+    /// The matched subcommand.
     pub command: String,
     values: BTreeMap<String, String>,
     flags: BTreeMap<String, bool>,
+    /// Arguments not belonging to any option.
     pub positionals: Vec<String>,
 }
 
 impl Parsed {
+    /// Value of option `--name`, if present (or defaulted).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// Value of option `--name` parsed as a float.
     pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
         let s = self
             .get(name)
@@ -44,6 +53,7 @@ impl Parsed {
             .map_err(|_| anyhow::anyhow!("option --{name}: '{s}' is not a number"))
     }
 
+    /// Value of option `--name` parsed as an unsigned integer.
     pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
         let s = self
             .get(name)
@@ -52,6 +62,7 @@ impl Parsed {
             .map_err(|_| anyhow::anyhow!("option --{name}: '{s}' is not an integer"))
     }
 
+    /// Whether boolean flag `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.get(name).copied().unwrap_or(false)
     }
@@ -59,8 +70,11 @@ impl Parsed {
 
 /// A CLI application definition.
 pub struct App {
+    /// Binary name (help header).
     pub name: &'static str,
+    /// One-line description.
     pub about: &'static str,
+    /// The subcommands.
     pub commands: Vec<CmdSpec>,
 }
 

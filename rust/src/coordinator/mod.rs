@@ -71,6 +71,7 @@ pub(crate) fn analyze_model_parallel_impl(
 /// Table-I bench used to submit).
 #[deprecated(since = "0.2.0", note = "use `api::Session::run_all` with `api::AnalysisRequest`s")]
 pub struct BatchRequest {
+    /// The `(model, data, config)` triples to analyze, in order.
     pub models: Vec<(Model, Dataset, AnalysisConfig)>,
 }
 

@@ -70,10 +70,15 @@ struct Metrics {
 /// Snapshot of pool metrics.
 #[derive(Clone, Copy, Debug)]
 pub struct PoolMetrics {
+    /// Jobs submitted since pool start.
     pub submitted: usize,
+    /// Jobs completed.
     pub completed: usize,
+    /// Jobs that panicked.
     pub panicked: usize,
+    /// Deepest the queue has been.
     pub queue_high_water: usize,
+    /// Worker thread count.
     pub workers: usize,
 }
 
@@ -121,6 +126,7 @@ impl Pool {
         Pool::with_default_workers()
     }
 
+    /// Number of worker threads.
     pub fn worker_count(&self) -> usize {
         self.workers.len()
     }
@@ -203,6 +209,7 @@ impl Pool {
             .collect()
     }
 
+    /// Snapshot the pool counters.
     pub fn metrics(&self) -> PoolMetrics {
         PoolMetrics {
             submitted: self.shared.metrics.submitted.load(Ordering::Relaxed),

@@ -15,16 +15,21 @@ use anyhow::{anyhow, bail, Context, Result};
 /// integer labels (empty for regression data).
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Shape of one sample (channels-last for images).
     pub input_shape: Vec<usize>,
+    /// One flat row-major vector per sample.
     pub inputs: Vec<Vec<f64>>,
+    /// Integer class labels (empty for regression/verification data).
     pub labels: Vec<usize>,
 }
 
 impl Dataset {
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.inputs.len()
     }
 
+    /// Whether the dataset holds no samples.
     pub fn is_empty(&self) -> bool {
         self.inputs.is_empty()
     }
@@ -76,6 +81,7 @@ impl Dataset {
         Ok(Dataset { input_shape, inputs, labels })
     }
 
+    /// Load a dataset JSON file (see [`Dataset::from_json`]).
     pub fn load(path: &std::path::Path) -> Result<Dataset> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading dataset {}", path.display()))?;

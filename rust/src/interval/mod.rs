@@ -55,10 +55,12 @@ impl Interval {
         Interval::new(-r, r)
     }
 
+    /// Lower endpoint.
     pub fn lo(&self) -> f64 {
         self.lo
     }
 
+    /// Upper endpoint.
     pub fn hi(&self) -> f64 {
         self.hi
     }
@@ -105,18 +107,22 @@ impl Interval {
         }
     }
 
+    /// Whether `x` lies in the interval.
     pub fn contains(&self, x: f64) -> bool {
         self.lo <= x && x <= self.hi
     }
 
+    /// Whether `other` lies entirely in the interval.
     pub fn contains_interval(&self, other: &Interval) -> bool {
         self.lo <= other.lo && other.hi <= self.hi
     }
 
+    /// Whether both endpoints are finite.
     pub fn is_finite(&self) -> bool {
         self.lo.is_finite() && self.hi.is_finite()
     }
 
+    /// Whether the interval is a single point.
     pub fn is_point(&self) -> bool {
         self.lo == self.hi
     }

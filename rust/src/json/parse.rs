@@ -7,7 +7,9 @@ use std::fmt;
 /// Parse error with byte offset for diagnostics.
 #[derive(Debug, Clone)]
 pub struct ParseError {
+    /// Byte offset the error was detected at.
     pub offset: usize,
+    /// Human-readable description.
     pub message: String,
 }
 

@@ -6,11 +6,17 @@ use std::collections::BTreeMap;
 /// deterministic (important for artifact-manifest diffing in tests).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (always held as f64).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Array(Vec<Value>),
+    /// JSON object (sorted keys for deterministic output).
     Object(BTreeMap<String, Value>),
 }
 
@@ -32,6 +38,7 @@ impl Value {
         Some(cur)
     }
 
+    /// As a number; `None` for other variants.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(x) => Some(*x),
@@ -49,6 +56,7 @@ impl Value {
         }
     }
 
+    /// As a string; `None` for other variants.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -56,6 +64,7 @@ impl Value {
         }
     }
 
+    /// As a boolean; `None` for other variants.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -63,6 +72,7 @@ impl Value {
         }
     }
 
+    /// As an array slice; `None` for other variants.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(v) => Some(v),
@@ -70,6 +80,7 @@ impl Value {
         }
     }
 
+    /// As an object map; `None` for other variants.
     pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Object(m) => Some(m),

@@ -1,0 +1,146 @@
+//! Merge ops for graph (non-sequential) models: elementwise [`Add`] and
+//! last-axis [`Concat`] — the two junction layers residual and
+//! multi-branch networks are built from.
+//!
+//! Like every other kernel in `layers/`, the merge kernels are written
+//! once, generic over [`Scalar`]: binding `f64` gives the reference trace,
+//! [`crate::quant::EmulatedFp`] the precision-k witness, and
+//! [`crate::caa::Caa`] the rigorous analysis. That genericity *is* the
+//! bound propagation for merges:
+//!
+//! * `Add` performs one `Scalar::add` per element per extra input, so CAA
+//!   charges exactly one rounding per accumulation — the merged value's
+//!   absolute bound is the (rounded-up) sum of the branch bounds plus the
+//!   addition roundings, and the interval enclosures combine by interval
+//!   addition. Summation is left-to-right over the declared inbound order,
+//!   which pins the rounding profile the witness runs must reproduce.
+//! * `Concat` moves data without arithmetic: bounds and enclosures pass
+//!   through each branch untouched (a pure gather — zero rounding charge).
+//!
+//! [`Add`]: crate::layers::Layer::Add
+//! [`Concat`]: crate::layers::Layer::Concat
+
+use crate::tensor::Scalar;
+use anyhow::{bail, Result};
+
+/// Output shape of an elementwise add: at least two inputs, all sharing
+/// one shape (which is also the output shape).
+pub(crate) fn add_output_shape(inputs: &[&[usize]]) -> Result<Vec<usize>> {
+    if inputs.len() < 2 {
+        bail!("add is a merge layer: it needs at least 2 inputs, got {}", inputs.len());
+    }
+    for s in &inputs[1..] {
+        if *s != inputs[0] {
+            bail!("add inputs must share a shape: {:?} vs {:?}", inputs[0], s);
+        }
+    }
+    Ok(inputs[0].to_vec())
+}
+
+/// Output shape of a last-axis concatenation: at least two inputs of equal
+/// rank, agreeing on every axis but the last; the last axes sum.
+pub(crate) fn concat_output_shape(inputs: &[&[usize]]) -> Result<Vec<usize>> {
+    if inputs.len() < 2 {
+        bail!("concat is a merge layer: it needs at least 2 inputs, got {}", inputs.len());
+    }
+    let first = inputs[0];
+    if first.is_empty() {
+        bail!("concat inputs must have rank >= 1");
+    }
+    let lead = &first[..first.len() - 1];
+    let mut last = 0usize;
+    for s in inputs {
+        if s.len() != first.len() || &s[..s.len() - 1] != lead {
+            bail!(
+                "concat inputs must agree on every axis but the last: {:?} vs {:?}",
+                first,
+                s
+            );
+        }
+        last += s[s.len() - 1];
+    }
+    let mut out = lead.to_vec();
+    out.push(last);
+    Ok(out)
+}
+
+/// `acc[i] = acc[i] + src[i]` in the target arithmetic — the slice-level
+/// kernel behind [`StepKind::Add`](crate::plan::StepKind::Add). The
+/// executor seeds `acc` with the first branch and folds every further
+/// branch in with this, so an n-way add costs `n - 1` rounded additions
+/// per element, accumulated left to right.
+pub(crate) fn add_assign_into<S: Scalar>(ctx: &S::Ctx, acc: &mut [S], src: &[S]) {
+    debug_assert_eq!(acc.len(), src.len(), "add branches must have equal length");
+    for (a, x) in acc.iter_mut().zip(src) {
+        *a = a.add(x, ctx);
+    }
+}
+
+/// Append row `r` of a row-major `[rows, width]` source to `out` — the
+/// gather kernel behind [`StepKind::Concat`](crate::plan::StepKind::Concat).
+/// Pure data movement: no `Scalar` operation is involved, so merges by
+/// concatenation propagate bounds without any rounding charge.
+pub(crate) fn concat_row_into<S: Clone>(r: usize, width: usize, src: &[S], out: &mut Vec<S>) {
+    out.extend_from_slice(&src[r * width..(r + 1) * width]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caa::{Caa, Ctx};
+    use crate::interval::Interval;
+
+    #[test]
+    fn add_shape_requires_agreement() {
+        assert_eq!(add_output_shape(&[&[4], &[4]]).unwrap(), vec![4]);
+        assert_eq!(add_output_shape(&[&[2, 3], &[2, 3], &[2, 3]]).unwrap(), vec![2, 3]);
+        assert!(add_output_shape(&[&[4]]).is_err(), "one input is not a merge");
+        assert!(add_output_shape(&[&[4], &[5]]).is_err());
+    }
+
+    #[test]
+    fn concat_shape_sums_last_axis() {
+        assert_eq!(concat_output_shape(&[&[3], &[5]]).unwrap(), vec![8]);
+        assert_eq!(
+            concat_output_shape(&[&[6, 6, 2], &[6, 6, 3]]).unwrap(),
+            vec![6, 6, 5]
+        );
+        assert!(concat_output_shape(&[&[3]]).is_err());
+        assert!(concat_output_shape(&[&[2, 2], &[3, 2]]).is_err(), "leading dims differ");
+        assert!(concat_output_shape(&[&[2, 2], &[2]]).is_err(), "ranks differ");
+    }
+
+    #[test]
+    fn add_assign_matches_plain_sum() {
+        let mut acc = vec![1.0f64, 2.0, 3.0];
+        add_assign_into(&(), &mut acc, &[0.5, -2.0, 10.0]);
+        assert_eq!(acc, vec![1.5, 0.0, 13.0]);
+    }
+
+    #[test]
+    fn concat_rows_interleave() {
+        // Two [2, 2] channel blocks concatenated along the last axis:
+        // rows interleave, not append.
+        let a = vec![1.0f64, 2.0, 3.0, 4.0];
+        let b = vec![10.0f64, 20.0, 30.0, 40.0];
+        let mut out = Vec::new();
+        for r in 0..2 {
+            concat_row_into(r, 2, &a, &mut out);
+            concat_row_into(r, 2, &b, &mut out);
+        }
+        assert_eq!(out, vec![1.0, 2.0, 10.0, 20.0, 3.0, 4.0, 30.0, 40.0]);
+    }
+
+    #[test]
+    fn caa_add_bounds_cover_branch_sum() {
+        // The merged bound encloses the concrete sum of perturbed branches.
+        let ctx = Ctx::new();
+        let mut acc =
+            vec![Caa::input(&ctx, Interval::point(0.25), 0.25)];
+        let src = vec![Caa::input(&ctx, Interval::point(0.5), 0.5)];
+        add_assign_into(&ctx, &mut acc, &src);
+        let y = &acc[0];
+        assert!(y.rounded().contains(0.75), "rounded range must cover the sum");
+        assert!(y.abs_bound().is_finite() && y.abs_bound() > 0.0);
+    }
+}

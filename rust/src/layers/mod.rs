@@ -5,7 +5,8 @@
 //! runs, and the CAA analysis, depending on the scalar type bound in.
 //! Computational layers: Dense, Conv2D, DepthwiseConv2D, Pooling,
 //! BatchNormalization. Activation layers: ReLU, LeakyReLU, Tanh, Sigmoid,
-//! Softmax.
+//! Softmax. Merge layers (graph models only, see [`crate::model::Graph`]):
+//! Add, Concat.
 
 // Kernel modules are crate-visible: the plan executor
 // (`crate::plan::exec`) drives the slice-level `*_into` kernels directly
@@ -13,6 +14,7 @@
 pub(crate) mod activation;
 pub(crate) mod conv;
 pub(crate) mod dense;
+pub(crate) mod merge;
 pub(crate) mod norm;
 pub(crate) mod pool;
 
@@ -31,6 +33,7 @@ pub enum Padding {
 }
 
 impl Padding {
+    /// Parse the JSON padding string (`"valid"` / `"same"`).
     pub fn parse(s: &str) -> Result<Padding> {
         match s {
             "valid" => Ok(Padding::Valid),
@@ -39,6 +42,7 @@ impl Padding {
         }
     }
 
+    /// The JSON padding string this mode serializes to.
     pub fn as_str(&self) -> &'static str {
         match self {
             Padding::Valid => "valid",
@@ -65,12 +69,27 @@ pub enum Layer {
     BatchNorm { gamma: Vec<f64>, beta: Vec<f64>, mean: Vec<f64>, variance: Vec<f64>, eps: f64 },
     /// Reshape to 1-D.
     Flatten,
+    /// Rectified linear unit, `max(x, 0)`, elementwise.
     Relu,
-    LeakyRelu { alpha: f64 },
+    /// Leaky ReLU, `max(x, alpha * x)`, elementwise.
+    LeakyRelu {
+        /// Negative-side slope.
+        alpha: f64,
+    },
+    /// Hyperbolic tangent, elementwise.
     Tanh,
+    /// Logistic sigmoid `1 / (1 + e^-x)`, elementwise.
     Sigmoid,
     /// Numerically-stable softmax over the last axis.
     Softmax,
+    /// Elementwise sum of two or more equal-shape inputs (the residual
+    /// skip connection). Merge layer: only valid in graph models
+    /// ([`crate::model::Graph`]) with at least two inbound nodes.
+    Add,
+    /// Concatenation of two or more inputs along the last (channel) axis.
+    /// Merge layer: only valid in graph models with at least two inbound
+    /// nodes.
+    Concat,
 }
 
 impl Layer {
@@ -89,6 +108,8 @@ impl Layer {
             Layer::Tanh => "tanh",
             Layer::Sigmoid => "sigmoid",
             Layer::Softmax => "softmax",
+            Layer::Add => "add",
+            Layer::Concat => "concat",
         }
     }
 
@@ -132,7 +153,29 @@ impl Layer {
                 Ok(input.to_vec())
             }
             Layer::Flatten => Ok(vec![input.iter().product()]),
+            Layer::Add | Layer::Concat => bail!(
+                "{} is a merge layer: it takes 2+ inputs and needs graph wiring \
+                 (`Model::graph` / per-layer `inbound` in the JSON format)",
+                self.type_name()
+            ),
             _ => Ok(input.to_vec()),
+        }
+    }
+
+    /// Output shape given **all** input shapes — the merge-aware version of
+    /// [`Layer::output_shape`] the graph compiler
+    /// ([`crate::plan::Plan::build`]) and [`crate::model::Model::output_shape`]
+    /// use. Non-merge layers require exactly one input.
+    pub fn output_shape_multi(&self, inputs: &[&[usize]]) -> Result<Vec<usize>> {
+        match self {
+            Layer::Add => merge::add_output_shape(inputs),
+            Layer::Concat => merge::concat_output_shape(inputs),
+            _ => {
+                if inputs.len() != 1 {
+                    bail!("{} takes exactly 1 input, got {}", self.type_name(), inputs.len());
+                }
+                self.output_shape(inputs[0])
+            }
         }
     }
 
@@ -159,6 +202,9 @@ impl Layer {
             Layer::Tanh => x.map(|v| v.tanh(ctx)),
             Layer::Sigmoid => x.map(|v| v.sigmoid(ctx)),
             Layer::Softmax => activation::softmax(ctx, x),
+            // Merge layers take multiple inputs; `output_shape` above
+            // already rejected them for the single-input interpreter path.
+            Layer::Add | Layer::Concat => unreachable!("merge layers rejected by output_shape"),
         };
         debug_assert_eq!(out.shape(), self.output_shape(x.shape())?.as_slice());
         Ok(out)

@@ -17,9 +17,12 @@
 //! and an LRU model cache, serves [`api::AnalysisRequest`]s serially or
 //! fanned out, and returns [`api::AnalysisOutcome`]s with a versioned JSON
 //! serialization. Internally every analysis executes through a compiled
-//! [`plan::Plan`] — shape-resolved, optionally fused, arena-backed — that
-//! is cached next to the model; the per-layer interpreter survives only as
-//! a deprecated equivalence oracle.
+//! [`plan::Plan`] — shape-resolved, optionally fused, arena-backed, and
+//! topology-general: sequential chains and graph models (residual skips,
+//! multi-branch merges, see [`model::Graph`]) lower to the same
+//! buffer-pool step IR — cached next to the model; the per-layer
+//! interpreter survives only as a deprecated equivalence oracle for
+//! sequential models.
 //!
 //! Layer map (three-layer rust+JAX+Pallas architecture):
 //! * L3 (this crate): [`api`] service layer over the CAA+IA analysis
@@ -32,6 +35,8 @@
 //!   round-to-precision emulation).
 //!
 //! See `DESIGN.md` for the complete system inventory and experiment index.
+
+#![warn(missing_docs)]
 
 pub mod analysis;
 pub mod api;

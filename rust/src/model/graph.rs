@@ -1,0 +1,215 @@
+//! Non-sequential model wiring: the [`Graph`] spec (frugally-deep-style
+//! `inbound_nodes` naming) and its validated topological order.
+//!
+//! A [`crate::model::Model`] with `graph: None` is the classic sequential
+//! chain — layer `i` feeds layer `i + 1`. Setting `graph: Some(..)` names
+//! every layer and lists, per layer, the *nodes* feeding it; the reserved
+//! node name `"input"` denotes the model input. This is the minimal
+//! structure needed for residual (skip-connection) and multi-branch
+//! networks, the topologies where low-precision behavior is most
+//! interesting.
+//!
+//! Everything downstream speaks **values**, not names: value `0` is the
+//! model input and value `l + 1` is the output of layer `l`. `Topo`
+//! (produced by `Model::toposort`, the one validation chokepoint) carries
+//! a topological evaluation order plus the resolved per-layer input value
+//! ids; the plan compiler, shape inference, and the JSON loader all
+//! consume it. Validation rejects: duplicate or reserved names, unknown
+//! inbound references (dangling edges), wrong merge arity, cycles,
+//! layers that do not contribute to the output, and a missing or
+//! ambiguous output node.
+
+use crate::layers::Layer;
+use crate::model::Model;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+/// Non-sequential wiring for a [`Model`]: per-layer node names and
+/// inbound connections. All three vectors in the owning model
+/// (`layers`, `names`, `inbound`) are index-aligned.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Graph {
+    /// One entry per layer: the layer's node name. `"input"` is reserved
+    /// for the model input.
+    pub names: Vec<String>,
+    /// One entry per layer: the names of the nodes feeding it, in
+    /// argument order (order matters for `Concat`, and pins the
+    /// accumulation order of `Add`).
+    pub inbound: Vec<Vec<String>>,
+    /// The node whose output is the model output. `None` means "the
+    /// unique sink" — the single layer no other layer consumes.
+    pub output: Option<String>,
+}
+
+/// A validated topological view of a model: evaluation order plus
+/// name-free value wiring. Value `0` is the model input; value `l + 1`
+/// is the output of layer `l`.
+#[derive(Clone, Debug)]
+pub(crate) struct Topo {
+    /// Layer indices in a valid evaluation order (for sequential models,
+    /// simply `0..n`).
+    pub order: Vec<usize>,
+    /// Per layer (indexed by *original* layer index): the value ids it
+    /// reads, in declared inbound order.
+    pub inputs: Vec<Vec<usize>>,
+    /// The value id holding the model output.
+    pub output_val: usize,
+}
+
+impl Model {
+    /// Validate this model's wiring and return its topological view.
+    /// Sequential models (`graph: None`) trivially succeed; graph models
+    /// get the full structural validation described in [`crate::model::graph`].
+    pub(crate) fn toposort(&self) -> Result<Topo> {
+        let n = self.layers.len();
+        let Some(g) = &self.graph else {
+            return Ok(Topo {
+                order: (0..n).collect(),
+                inputs: (0..n).map(|i| vec![i]).collect(),
+                output_val: n,
+            });
+        };
+        if g.names.len() != n || g.inbound.len() != n {
+            bail!(
+                "graph wiring must cover all {n} layers (got {} names, {} inbound lists)",
+                g.names.len(),
+                g.inbound.len()
+            );
+        }
+
+        // Resolve names to value ids.
+        let mut idx: HashMap<&str, usize> = HashMap::with_capacity(n + 1);
+        idx.insert("input", 0);
+        for (i, name) in g.names.iter().enumerate() {
+            if name == "input" {
+                bail!("layer name 'input' is reserved for the model input");
+            }
+            if idx.insert(name.as_str(), i + 1).is_some() {
+                bail!("duplicate layer name '{name}'");
+            }
+        }
+
+        // Per-layer input values + arity validation.
+        let mut inputs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, inb) in g.inbound.iter().enumerate() {
+            let merge = matches!(self.layers[i], Layer::Add | Layer::Concat);
+            if merge && inb.len() < 2 {
+                bail!(
+                    "merge layer '{}' ({}) needs at least 2 inbound nodes, got {}",
+                    g.names[i],
+                    self.layers[i].type_name(),
+                    inb.len()
+                );
+            }
+            if !merge && inb.len() != 1 {
+                bail!(
+                    "layer '{}' ({}) takes exactly 1 inbound node, got {}",
+                    g.names[i],
+                    self.layers[i].type_name(),
+                    inb.len()
+                );
+            }
+            for nm in inb {
+                let Some(&v) = idx.get(nm.as_str()) else {
+                    bail!(
+                        "layer '{}' references unknown inbound node '{}' (dangling edge)",
+                        g.names[i],
+                        nm
+                    );
+                };
+                inputs[i].push(v);
+            }
+        }
+
+        // Resolve the output value.
+        let output_val = match &g.output {
+            Some(nm) => {
+                let v = *idx
+                    .get(nm.as_str())
+                    .ok_or_else(|| anyhow!("output node '{nm}' does not exist"))?;
+                if v == 0 {
+                    bail!("the model output cannot be the input itself");
+                }
+                v
+            }
+            None => {
+                let mut consumed = vec![false; n + 1];
+                for ins in &inputs {
+                    for &v in ins {
+                        consumed[v] = true;
+                    }
+                }
+                let sinks: Vec<usize> = (1..=n).filter(|&v| !consumed[v]).collect();
+                match sinks.as_slice() {
+                    [one] => *one,
+                    [] => bail!(
+                        "every layer output is consumed (the graph has a cycle \
+                         or no sink); set 'output' explicitly"
+                    ),
+                    many => bail!(
+                        "graph has {} sinks ({}); set 'output' to pick one",
+                        many.len(),
+                        many.iter()
+                            .map(|&v| g.names[v - 1].as_str())
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    ),
+                }
+            }
+        };
+
+        // Kahn's algorithm over layer→layer edges ("input" has indegree 0
+        // contributions). FIFO over ascending seeds keeps the order stable
+        // and close to the declared layer order.
+        let mut indeg = vec![0usize; n];
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n + 1];
+        for (i, ins) in inputs.iter().enumerate() {
+            for &v in ins {
+                consumers[v].push(i);
+                if v > 0 {
+                    indeg[i] += 1;
+                }
+            }
+        }
+        let mut queue: VecDeque<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(i) = queue.pop_front() {
+            order.push(i);
+            for &c in &consumers[i + 1] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push_back(c);
+                }
+            }
+        }
+        if order.len() != n {
+            let stuck: Vec<&str> = (0..n)
+                .filter(|&i| indeg[i] > 0)
+                .map(|i| g.names[i].as_str())
+                .collect();
+            bail!("graph contains a cycle involving: {}", stuck.join(", "));
+        }
+
+        // Liveness: every layer must contribute to the output (dead
+        // branches would silently skew buffer liveness and provenance).
+        let mut live = vec![false; n + 1];
+        live[output_val] = true;
+        for &i in order.iter().rev() {
+            if live[i + 1] {
+                for &v in &inputs[i] {
+                    live[v] = true;
+                }
+            }
+        }
+        if let Some(i) = (0..n).find(|&i| !live[i + 1]) {
+            bail!(
+                "layer '{}' does not contribute to the output '{}'",
+                g.names[i],
+                g.names[output_val - 1]
+            );
+        }
+
+        Ok(Topo { order, inputs, output_val })
+    }
+}

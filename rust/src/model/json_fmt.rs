@@ -22,10 +22,39 @@
 //!
 //! Weight arrays are flat, row-major: dense `[units, in]`, conv
 //! `[kh, kw, cin, cout]` (Keras layout).
+//!
+//! ## Graph (non-sequential) models
+//!
+//! Residual/branchy topologies add frugally-deep-style `inbound_nodes`
+//! wiring: **every** layer carries a `"name"` and an `"inbound"` array of
+//! node names (the reserved name `"input"` is the model input), merge
+//! layers (`"add"`, `"concat"`) list two or more inbound nodes, and an
+//! optional top-level `"output"` picks the output node (defaulting to the
+//! unique sink):
+//!
+//! ```json
+//! {
+//!   "name": "res_block", "input_shape": [8], "output": "out",
+//!   "layers": [
+//!     {"type": "dense", "units": 8, "in": 8, "weights": [...], "bias": [...],
+//!      "name": "d1", "inbound": ["input"]},
+//!     {"type": "relu", "name": "a1", "inbound": ["d1"]},
+//!     {"type": "dense", "units": 8, "in": 8, "weights": [...], "bias": [...],
+//!      "name": "d2", "inbound": ["a1"]},
+//!     {"type": "add", "name": "s", "inbound": ["d2", "a1"]},
+//!     {"type": "softmax", "name": "out", "inbound": ["s"]}
+//!   ]
+//! }
+//! ```
+//!
+//! Wiring is all-or-nothing: a model either names every layer (graph
+//! mode) or none (sequential mode). Structural validation — cycles,
+//! dangling edges, merge arity, unreachable layers — happens on load via
+//! [`Model::output_shape`].
 
 use crate::json::Value;
 use crate::layers::{Layer, Padding};
-use crate::model::Model;
+use crate::model::{Graph, Model};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -135,12 +164,52 @@ fn layer_from_json(v: &Value) -> Result<Layer> {
         "tanh" => Layer::Tanh,
         "sigmoid" => Layer::Sigmoid,
         "softmax" => Layer::Softmax,
+        "add" => Layer::Add,
+        "concat" => Layer::Concat,
         _ => bail!("unknown layer type '{ty}'"),
     })
 }
 
-fn layer_to_json(l: &Layer) -> Value {
+/// Extract the optional graph-wiring fields (`name`, `inbound`) of one
+/// layer object.
+fn layer_wiring_from_json(v: &Value) -> Result<(Option<String>, Option<Vec<String>>)> {
+    let name = match v.get("name") {
+        None => None,
+        Some(x) => Some(
+            x.as_str()
+                .ok_or_else(|| anyhow!("layer 'name' must be a string"))?
+                .to_string(),
+        ),
+    };
+    let inbound = match v.get("inbound") {
+        None => None,
+        Some(x) => {
+            let arr = x
+                .as_array()
+                .ok_or_else(|| anyhow!("'inbound' must be an array of node names"))?;
+            let mut names = Vec::with_capacity(arr.len());
+            for e in arr {
+                names.push(
+                    e.as_str()
+                        .ok_or_else(|| anyhow!("'inbound' entries must be strings"))?
+                        .to_string(),
+                );
+            }
+            Some(names)
+        }
+    };
+    Ok((name, inbound))
+}
+
+fn layer_to_json(l: &Layer, wiring: Option<(&str, &[String])>) -> Value {
     let mut pairs: Vec<(&str, Value)> = vec![("type", Value::from(l.type_name()))];
+    if let Some((name, inbound)) = wiring {
+        pairs.push(("name", Value::from(name)));
+        pairs.push((
+            "inbound",
+            Value::Array(inbound.iter().map(|n| Value::from(n.as_str())).collect()),
+        ));
+    }
     match l {
         Layer::Dense { w, b } => {
             pairs.push(("units", Value::from(w.shape()[0])));
@@ -199,24 +268,79 @@ pub fn model_from_json(v: &Value) -> Result<Model> {
         .as_array()
         .ok_or_else(|| anyhow!("'layers' must be an array"))?;
     let mut layers = Vec::with_capacity(layers_v.len());
+    let mut names: Vec<Option<String>> = Vec::with_capacity(layers_v.len());
+    let mut inbound: Vec<Option<Vec<String>>> = Vec::with_capacity(layers_v.len());
     for (i, lv) in layers_v.iter().enumerate() {
         layers.push(layer_from_json(lv).with_context(|| format!("layer {i}"))?);
+        let (n, inb) = layer_wiring_from_json(lv).with_context(|| format!("layer {i}"))?;
+        names.push(n);
+        inbound.push(inb);
     }
-    let m = Model { name, input_shape, layers };
+    let output = match v.get("output") {
+        None => None,
+        Some(o) => Some(
+            o.as_str()
+                .ok_or_else(|| anyhow!("'output' must be a string (a layer name)"))?
+                .to_string(),
+        ),
+    };
+
+    // Graph mode is all-or-nothing: every layer wired, or none.
+    let wired = names.iter().filter(|n| n.is_some()).count()
+        + inbound.iter().filter(|n| n.is_some()).count();
+    let graph = if wired == 0 {
+        if output.is_some() {
+            bail!("'output' requires graph wiring (per-layer 'name' and 'inbound')");
+        }
+        None
+    } else {
+        let mut g_names = Vec::with_capacity(layers.len());
+        let mut g_inbound = Vec::with_capacity(layers.len());
+        for i in 0..layers.len() {
+            let Some(n) = names[i].take() else {
+                bail!("graph models need 'name' on every layer (layer {i} has none)");
+            };
+            let Some(inb) = inbound[i].take() else {
+                bail!("graph models need 'inbound' on every layer (layer '{n}' has none)");
+            };
+            g_names.push(n);
+            g_inbound.push(inb);
+        }
+        Some(Graph { names: g_names, inbound: g_inbound, output })
+    };
+
+    let m = Model { name, input_shape, layers, graph };
     m.output_shape().context("incompatible layer stack")?;
     Ok(m)
 }
 
-/// Serialize a model to a JSON value.
+/// Serialize a model to a JSON value (graph wiring included when present).
 pub fn model_to_json(m: &Model) -> Value {
-    Value::obj(vec![
+    let layers = Value::Array(
+        m.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let wiring = m
+                    .graph
+                    .as_ref()
+                    .map(|g| (g.names[i].as_str(), g.inbound[i].as_slice()));
+                layer_to_json(l, wiring)
+            })
+            .collect(),
+    );
+    let mut pairs = vec![
         ("name", Value::from(m.name.as_str())),
         (
             "input_shape",
             Value::Array(m.input_shape.iter().map(|&d| Value::from(d)).collect()),
         ),
-        ("layers", Value::Array(m.layers.iter().map(layer_to_json).collect())),
-    ])
+        ("layers", layers),
+    ];
+    if let Some(out) = m.graph.as_ref().and_then(|g| g.output.as_deref()) {
+        pairs.push(("output", Value::from(out)));
+    }
+    Value::obj(pairs)
 }
 
 #[cfg(test)]
@@ -277,6 +401,8 @@ mod tests {
             zoo::tiny_cnn(2),
             zoo::tiny_pendulum(3),
             zoo::scaled_mlp(4, 12, 8, 5),
+            zoo::residual_mlp(5),
+            zoo::residual_cnn(6),
         ] {
             let v = model_to_json(&m);
             let reparsed = model_from_json(&v).unwrap_or_else(|e| panic!("{}: {e}", m.name));
@@ -350,6 +476,108 @@ mod tests {
                 "error for {payload}\nmust mention '{fragment}', got: {chain}"
             );
         }
+    }
+
+    #[test]
+    fn graph_model_roundtrips_with_wiring() {
+        let text = r#"{
+            "name": "res", "input_shape": [2], "output": "out",
+            "layers": [
+                {"type": "dense", "units": 2, "in": 2,
+                 "weights": [1, 0, 0, 1], "bias": [0, 0],
+                 "name": "d1", "inbound": ["input"]},
+                {"type": "relu", "name": "a1", "inbound": ["d1"]},
+                {"type": "dense", "units": 2, "in": 2,
+                 "weights": [0.5, 0, 0, 0.5], "bias": [0, 0],
+                 "name": "d2", "inbound": ["a1"]},
+                {"type": "add", "name": "s", "inbound": ["d2", "a1"]},
+                {"type": "softmax", "name": "out", "inbound": ["s"]}
+            ]
+        }"#;
+        let m = model_from_json(&json::parse(text).unwrap()).unwrap();
+        let g = m.graph.as_ref().expect("graph wiring parsed");
+        assert_eq!(g.names, vec!["d1", "a1", "d2", "s", "out"]);
+        assert_eq!(g.inbound[3], vec!["d2", "a1"]);
+        assert_eq!(g.output.as_deref(), Some("out"));
+        assert_eq!(m.output_shape().unwrap(), vec![2]);
+        // Fixed point through serialize∘parse.
+        let v = model_to_json(&m);
+        let re = model_from_json(&json::parse(&json::to_string_pretty(&v)).unwrap()).unwrap();
+        assert_eq!(model_to_json(&re), v);
+    }
+
+    #[test]
+    fn rejects_malformed_graphs_with_context() {
+        // (payload, expected error fragment). Cycle and dangling-edge
+        // rejection are covered by the graph acceptance tests in
+        // `rust/tests/plan.rs`; these cases cover the rest of the
+        // validation surface.
+        let dense_id = r#"{"type": "dense", "units": 2, "in": 2,
+                           "weights": [1, 0, 0, 1], "bias": [0, 0]"#;
+        let cases = [
+            // merge arity: add with one input
+            (
+                format!(
+                    r#"{{"name": "m", "input_shape": [2],
+                        "layers": [
+                          {dense_id}, "name": "d1", "inbound": ["input"]}},
+                          {{"type": "add", "name": "s", "inbound": ["d1"]}}
+                        ]}}"#
+                ),
+                "at least 2",
+            ),
+            // partial wiring: second layer unnamed
+            (
+                format!(
+                    r#"{{"name": "m", "input_shape": [2],
+                        "layers": [
+                          {dense_id}, "name": "d1", "inbound": ["input"]}},
+                          {{"type": "softmax"}}
+                        ]}}"#
+                ),
+                "every layer",
+            ),
+            // unknown output node
+            (
+                format!(
+                    r#"{{"name": "m", "input_shape": [2], "output": "nope",
+                        "layers": [
+                          {dense_id}, "name": "d1", "inbound": ["input"]}}
+                        ]}}"#
+                ),
+                "output",
+            ),
+            // unreachable branch: d2 feeds nothing on the path to output
+            (
+                format!(
+                    r#"{{"name": "m", "input_shape": [2], "output": "d1",
+                        "layers": [
+                          {dense_id}, "name": "d1", "inbound": ["input"]}},
+                          {dense_id}, "name": "d2", "inbound": ["input"]}}
+                        ]}}"#
+                ),
+                "contribute",
+            ),
+        ];
+        for (payload, fragment) in &cases {
+            let err = model_from_json(&json::parse(payload).unwrap())
+                .expect_err(&format!("should reject: {payload}"));
+            let chain = format!("{err:#}");
+            assert!(
+                chain.contains(fragment),
+                "error for {payload}\nmust mention '{fragment}', got: {chain}"
+            );
+        }
+    }
+
+    #[test]
+    fn sequential_models_reject_stray_output_field() {
+        let text = r#"{
+            "name": "m", "input_shape": [2], "output": "x",
+            "layers": [{"type": "softmax"}]
+        }"#;
+        let err = model_from_json(&json::parse(text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("graph wiring"), "{err:#}");
     }
 
     #[test]

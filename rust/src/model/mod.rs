@@ -1,35 +1,68 @@
-//! Model = named layer stack + input shape. JSON (de)serialization of the
-//! exchange format `python/compile/aot.py` emits (replacing the
-//! frugally-deep Keras-to-JSON converter), plus a small builder zoo used by
-//! tests and ablation benches.
+//! Model = named layer stack + input shape + optional non-sequential
+//! wiring ([`Graph`]). JSON (de)serialization of the exchange format
+//! `python/compile/aot.py` emits (replacing the frugally-deep
+//! Keras-to-JSON converter), plus a small builder zoo used by tests and
+//! ablation benches. Graph validation and topological ordering live in
+//! [`graph`]; both sequential and graph models compile to the same
+//! buffer-pool [`crate::plan::Plan`].
 
-mod json_fmt;
+pub mod graph;
+pub mod json_fmt;
 pub mod zoo;
 
+pub use graph::Graph;
 pub use json_fmt::{model_from_json, model_to_json};
+
+pub(crate) use graph::Topo;
 
 use crate::layers::Layer;
 use crate::tensor::{Scalar, Tensor};
 use anyhow::{bail, Context, Result};
 
-/// A sequential DNN model.
+/// A DNN model: a layer stack plus, for residual/branchy networks, the
+/// [`Graph`] wiring that connects the layers. `graph: None` means the
+/// classic sequential chain (layer `i` feeds layer `i + 1`).
 #[derive(Clone, Debug)]
 pub struct Model {
+    /// Model name (diagnostics, reports, cache keys).
     pub name: String,
+    /// Shape of the model input (channels-last for images).
     pub input_shape: Vec<usize>,
+    /// The layers, in declaration order. For graph models this order is
+    /// only a listing order; evaluation order comes from the validated
+    /// topological sort.
     pub layers: Vec<Layer>,
+    /// Non-sequential wiring, or `None` for a sequential chain.
+    pub graph: Option<Graph>,
 }
 
 impl Model {
-    /// Validate layer compatibility and return the output shape.
+    /// Validate the layer stack/graph and return the output shape. This is
+    /// the model-level validation chokepoint: wiring errors (cycles,
+    /// dangling edges, merge arity) and shape incompatibilities both
+    /// surface here.
     pub fn output_shape(&self) -> Result<Vec<usize>> {
-        let mut shape = self.input_shape.clone();
-        for (i, layer) in self.layers.iter().enumerate() {
-            shape = layer
-                .output_shape(&shape)
-                .with_context(|| format!("layer {i} ({})", layer.type_name()))?;
+        let topo = self.toposort()?;
+        let shapes = self.value_shapes(&topo)?;
+        Ok(shapes[topo.output_val].clone())
+    }
+
+    /// Shape of every value in the model (value `0` = the input, value
+    /// `l + 1` = layer `l`'s output), inferred in topological order.
+    /// Shared by [`Model::output_shape`] and the plan compiler so merge
+    /// shape rules exist in exactly one place
+    /// ([`Layer::output_shape_multi`]).
+    pub(crate) fn value_shapes(&self, topo: &Topo) -> Result<Vec<Vec<usize>>> {
+        let mut val_shape: Vec<Vec<usize>> = vec![Vec::new(); self.layers.len() + 1];
+        val_shape[0] = self.input_shape.clone();
+        for &l in &topo.order {
+            let in_shapes: Vec<&[usize]> =
+                topo.inputs[l].iter().map(|&v| val_shape[v].as_slice()).collect();
+            val_shape[l + 1] = self.layers[l]
+                .output_shape_multi(&in_shapes)
+                .with_context(|| format!("layer {l} ({})", self.layers[l].type_name()))?;
         }
-        Ok(shape)
+        Ok(val_shape)
     }
 
     /// Total learned parameter count.
@@ -52,6 +85,19 @@ impl Model {
 
     /// Compile this model into an execution plan at the given fusion
     /// level (see [`crate::plan`] for the soundness contract per level).
+    /// Works for sequential and graph models alike.
+    ///
+    /// ```
+    /// use rigor::model::zoo;
+    /// use rigor::plan::Fusion;
+    ///
+    /// let plan = zoo::residual_mlp(7).compile(Fusion::Pair)?;
+    /// // The skip connection forces a third live buffer; sequential
+    /// // models compile to exactly two.
+    /// assert_eq!(plan.buffer_count(), 3);
+    /// assert_eq!(zoo::tiny_mlp(7).compile(Fusion::Pair)?.buffer_count(), 2);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn compile(&self, fusion: crate::plan::Fusion) -> Result<crate::plan::Plan> {
         crate::plan::Plan::build(self, fusion)
     }
@@ -69,6 +115,13 @@ impl Model {
         ctx: &S::Ctx,
         input: Tensor<S>,
     ) -> Result<Tensor<S>> {
+        if self.graph.is_some() {
+            bail!(
+                "model '{}': the legacy interpreter only walks sequential chains; \
+                 graph models execute through a compiled plan (Model::compile)",
+                self.name
+            );
+        }
         if input.shape() != self.input_shape {
             bail!(
                 "model '{}' expects input {:?}, got {:?}",

@@ -3,7 +3,7 @@
 //! (the *trained* models come from `python/compile/aot.py` via JSON).
 
 use crate::layers::{Layer, Padding};
-use crate::model::Model;
+use crate::model::{Graph, Model};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -76,6 +76,7 @@ pub fn tiny_mlp(seed: u64) -> Model {
             dense(&mut rng, 4, 3),
             Layer::Softmax,
         ],
+        graph: None,
     }
 }
 
@@ -97,6 +98,7 @@ pub fn tiny_cnn(seed: u64) -> Model {
             dense(&mut rng, 3 * 3 * 4, 5),
             Layer::Softmax,
         ],
+        graph: None,
     }
 }
 
@@ -113,6 +115,7 @@ pub fn tiny_pendulum(seed: u64) -> Model {
             dense(&mut rng, 8, 1),
             Layer::Tanh,
         ],
+        graph: None,
     }
 }
 
@@ -130,6 +133,104 @@ pub fn scaled_mlp(seed: u64, input: usize, hidden: usize, classes: usize) -> Mod
             dense(&mut rng, hidden, classes),
             Layer::Softmax,
         ],
+        graph: None,
+    }
+}
+
+/// Per-layer node names and inbound lists for graph builders.
+fn wires(names: &[&str], inbound: &[&[&str]], output: &str) -> Graph {
+    Graph {
+        names: names.iter().map(|s| s.to_string()).collect(),
+        inbound: inbound
+            .iter()
+            .map(|ins| ins.iter().map(|s| s.to_string()).collect())
+            .collect(),
+        output: Some(output.to_string()),
+    }
+}
+
+/// A residual (skip-connection) MLP — the smallest graph-topology model:
+/// `[8] -> Dense+ReLU -> Dense -> Add(·, skip) -> ReLU -> Dense[3] ->
+/// Softmax`, where the skip connection feeds the first block's activation
+/// straight into the merge.
+pub fn residual_mlp(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    Model {
+        name: "residual_mlp".into(),
+        input_shape: vec![8],
+        layers: vec![
+            dense(&mut rng, 8, 8),  // d1
+            Layer::Relu,            // a1 (skip source)
+            dense(&mut rng, 8, 8),  // d2
+            Layer::Add,             // add1 = d2 + a1
+            Layer::Relu,            // a2
+            dense(&mut rng, 8, 3),  // d3
+            Layer::Softmax,         // out
+        ],
+        graph: Some(wires(
+            &["d1", "a1", "d2", "add1", "a2", "d3", "out"],
+            &[
+                &["input"],
+                &["d1"],
+                &["a1"],
+                &["d2", "a1"],
+                &["add1"],
+                &["a2"],
+                &["d3"],
+            ],
+            "out",
+        )),
+    }
+}
+
+/// A mini residual convnet exercising both merge ops: a conv/batch-norm
+/// stem, one additive residual block, an inception-style two-branch
+/// (1x1 conv ++ 3x3 conv) `Concat`, then pool/flatten/dense/softmax
+/// (`[6,6,1]` input, 5 classes).
+pub fn residual_cnn(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    Model {
+        name: "residual_cnn".into(),
+        input_shape: vec![6, 6, 1],
+        layers: vec![
+            conv2d(&mut rng, 3, 3, 1, 4, 1, Padding::Same), // c1
+            batch_norm(&mut rng, 4),                        // b1
+            Layer::Relu,                                    // r1 (skip source)
+            conv2d(&mut rng, 3, 3, 4, 4, 1, Padding::Same), // c2
+            Layer::Add,                                     // add1 = c2 + r1
+            Layer::Relu,                                    // r2
+            conv2d(&mut rng, 1, 1, 4, 2, 1, Padding::Same), // c3 (1x1 branch)
+            conv2d(&mut rng, 3, 3, 4, 2, 1, Padding::Same), // c4 (3x3 branch)
+            Layer::Concat,                                  // cat1 = c3 ++ c4
+            Layer::Relu,                                    // r3
+            Layer::MaxPool2D { ph: 2, pw: 2 },              // p1
+            Layer::Flatten,                                 // f1
+            dense(&mut rng, 3 * 3 * 4, 5),                  // d1
+            Layer::Softmax,                                 // out
+        ],
+        graph: Some(wires(
+            &[
+                "c1", "b1", "r1", "c2", "add1", "r2", "c3", "c4", "cat1", "r3", "p1",
+                "f1", "d1", "out",
+            ],
+            &[
+                &["input"],
+                &["c1"],
+                &["b1"],
+                &["r1"],
+                &["c2", "r1"],
+                &["add1"],
+                &["r2"],
+                &["r2"],
+                &["c3", "c4"],
+                &["cat1"],
+                &["r3"],
+                &["p1"],
+                &["f1"],
+                &["d1"],
+            ],
+            "out",
+        )),
     }
 }
 
@@ -139,11 +240,28 @@ mod tests {
 
     #[test]
     fn zoo_models_are_consistent() {
-        for m in [tiny_mlp(1), tiny_cnn(2), tiny_pendulum(3), scaled_mlp(4, 16, 32, 5)] {
+        for m in [
+            tiny_mlp(1),
+            tiny_cnn(2),
+            tiny_pendulum(3),
+            scaled_mlp(4, 16, 32, 5),
+            residual_mlp(5),
+            residual_cnn(6),
+        ] {
             let out = m.output_shape().expect("valid stack");
             assert!(!out.is_empty());
             assert!(m.param_count() > 0);
         }
+    }
+
+    #[test]
+    fn residual_zoo_shapes() {
+        assert_eq!(residual_mlp(1).output_shape().unwrap(), vec![3]);
+        assert_eq!(residual_cnn(2).output_shape().unwrap(), vec![5]);
+        // The concat joins a 2-channel and a 2-channel branch into 4.
+        let m = residual_cnn(2);
+        let topo_out = m.output_shape().unwrap();
+        assert_eq!(topo_out, vec![5]);
     }
 
     #[test]

@@ -1,65 +1,80 @@
 //! The plan **executor**: runs a compiled [`Plan`] over any
-//! [`Scalar`] arithmetic with a caller-owned double-buffer [`Arena`].
+//! [`Scalar`] arithmetic with a caller-owned buffer-pool [`Arena`].
 //!
-//! The executor ping-pongs between `cur` and `next`: compute steps read
-//! `cur`, write `next`, then the buffers swap; shape-only steps
-//! (`Flatten`) and standalone activations operate in place on `cur`.
-//! All buffers keep their capacity between calls, so repeated execution of
-//! the same plan (the per-class analysis loop, witness sweeps, serving
-//! traffic) performs zero tensor allocations after the first run.
+//! Every step names its input buffer ids and its output buffer id
+//! ([`super::BufId`]), assigned at compile time by liveness — the executor
+//! just dispatches kernels over the pool, with no topology logic of its
+//! own. For sequential models the pool degenerates to the classic
+//! two-buffer ping-pong; residual/branchy models address however many
+//! buffers their widest live set needs. All buffers keep their capacity
+//! between calls, so repeated execution of the same plan (the per-class
+//! analysis loop, witness sweeps, serving traffic) performs zero tensor
+//! allocations after the first run.
+//!
+//! In-place-aliased steps (`out == inputs[0]`: standalone activations and
+//! `Flatten` whose input dies at the step) mutate or no-op their buffer
+//! directly; every other step temporarily takes its output `Vec` out of
+//! the pool (a pointer swap), writes it while reading the input buffers,
+//! and puts it back.
 
-use super::{Act, Plan, StepKind};
-use crate::layers::{activation, conv, dense, norm, pool};
+use super::{Act, BufId, Plan, StepKind};
+use crate::layers::{activation, conv, dense, merge, norm, pool};
 use crate::tensor::{Scalar, Tensor};
 use anyhow::{bail, Result};
 
-/// Reusable executor scratch: two ping-pong layer buffers plus a row
-/// scratch (softmax). One arena per worker thread — obtain a per-thread
-/// one with [`crate::coordinator::with_worker_scratch`].
+/// Reusable executor scratch: the plan's buffer pool plus a row scratch
+/// (softmax). One arena per worker thread — obtain a per-thread one with
+/// [`crate::coordinator::with_worker_scratch`]. An arena is plan-agnostic:
+/// it grows to the largest pool any executed plan needs and is reused
+/// across plans and requests.
 #[derive(Clone, Debug)]
 pub struct Arena<S> {
-    pub(crate) cur: Vec<S>,
-    pub(crate) next: Vec<S>,
+    pub(crate) bufs: Vec<Vec<S>>,
     pub(crate) scratch: Vec<S>,
 }
 
 impl<S> Arena<S> {
+    /// A fresh, empty arena (buffers materialize on first use).
     pub fn new() -> Arena<S> {
-        Arena { cur: Vec::new(), next: Vec::new(), scratch: Vec::new() }
+        Arena { bufs: Vec::new(), scratch: Vec::new() }
     }
 
-    /// Pre-size the buffers for `plan` so even the first execution does
-    /// not reallocate mid-run.
+    /// Pre-size the pool for `plan` so even the first execution does not
+    /// reallocate mid-run.
     pub fn reserve_for(&mut self, plan: &Plan) {
-        let n = plan.max_buffer_len();
-        if self.cur.capacity() < n {
-            self.cur.reserve(n - self.cur.len());
+        while self.bufs.len() < plan.buffer_count() {
+            self.bufs.push(Vec::new());
         }
-        if self.next.capacity() < n {
-            self.next.reserve(n - self.next.len());
+        for (buf, &n) in self.bufs.iter_mut().zip(plan.buffer_lens()) {
+            if buf.capacity() < n {
+                buf.reserve(n - buf.len());
+            }
         }
     }
 
-    /// The buffer currently holding the latest step output.
-    pub fn current(&self) -> &[S] {
-        &self.cur
+    /// Read a pool buffer (drivers that interleave per-step work — the
+    /// mixed-precision analysis — inspect step outputs through this).
+    pub fn buffer(&self, id: BufId) -> &[S] {
+        &self.bufs[id]
     }
 
-    /// Mutable view of the current buffer — for drivers that transform
-    /// values between steps (mixed-precision rescaling, per-layer storage
+    /// Mutable view of a pool buffer — for drivers that transform values
+    /// between steps (mixed-precision rescaling, per-layer storage
     /// rounding).
-    pub fn current_mut(&mut self) -> &mut [S] {
-        &mut self.cur
+    pub fn buffer_mut(&mut self, id: BufId) -> &mut [S] {
+        &mut self.bufs[id]
     }
 
-    /// Seed the arena with an input vector (used by callers that drive
-    /// steps one at a time, e.g. the mixed-precision analysis).
-    pub fn load(&mut self, input: &[S])
+    /// Seed the plan's input buffer with a sample (sizing the pool first).
+    /// Length is the caller's responsibility; [`Plan::execute`] checks it.
+    pub fn load_input(&mut self, plan: &Plan, input: &[S])
     where
         S: Clone,
     {
-        self.cur.clear();
-        self.cur.extend_from_slice(input);
+        self.reserve_for(plan);
+        let buf = &mut self.bufs[plan.input_buf()];
+        buf.clear();
+        buf.extend_from_slice(input);
     }
 }
 
@@ -70,10 +85,10 @@ impl<S> Default for Arena<S> {
 }
 
 impl Plan {
-    /// Execute the whole plan on `input`, returning a borrow of the arena
+    /// Execute the whole plan on `input`, returning a borrow of the pool
     /// buffer holding the output (length [`Plan::output_len`]). The only
-    /// runtime check is the input length — every shape was resolved at
-    /// build time.
+    /// runtime check is the input length — every shape and every buffer
+    /// assignment was resolved at build time.
     pub fn execute<'a, S: Scalar>(
         &self,
         ctx: &S::Ctx,
@@ -89,105 +104,133 @@ impl Plan {
                 input.len()
             );
         }
-        arena.reserve_for(self);
-        arena.load(input);
+        arena.load_input(self, input);
         for idx in 0..self.steps().len() {
             self.execute_step(idx, ctx, arena);
         }
-        Ok(&arena.cur)
+        Ok(&arena.bufs[self.output_buf()])
     }
 
-    /// Execute one step against the arena (input in `arena.current()`,
-    /// result left in `arena.current()`). Exposed for drivers that
-    /// interleave per-step work — the mixed-precision analysis rescales
-    /// bounds and switches contexts between steps.
+    /// Execute one step against the arena pool (inputs read from the
+    /// step's input buffers, result left in its output buffer). Exposed
+    /// for drivers that interleave per-step work — the mixed-precision
+    /// analysis rescales bounds and switches contexts between steps.
     pub fn execute_step<S: Scalar>(&self, idx: usize, ctx: &S::Ctx, arena: &mut Arena<S>) {
         let step = &self.steps()[idx];
-        debug_assert_eq!(arena.cur.len(), step.in_len(), "step {idx} input length");
+        debug_assert_eq!(arena.bufs[step.inputs[0]].len(), step.in_len(), "step {idx} input");
+
+        // In-place alias: the input buffer dies here and becomes the
+        // output. `Flatten` is then a pure no-op (row-major data is
+        // already the flattened vector); `Act` mutates elementwise.
+        if step.out == step.inputs[0] {
+            debug_assert!(step.fused_act.is_none(), "in-place steps never carry a fused act");
+            match &step.kind {
+                StepKind::Flatten => {}
+                StepKind::Act(a) => apply_act_inplace(ctx, a, &mut arena.bufs[step.out]),
+                other => unreachable!("{} steps are never in-place-aliased", other.name()),
+            }
+            return;
+        }
+
+        // Take the output vec out of the pool (pointer swap) so kernels
+        // can write it while reading other pool buffers. The allocator
+        // guarantees `step.out` differs from every live input buffer.
+        let mut out = std::mem::take(&mut arena.bufs[step.out]);
+        out.clear();
         match &step.kind {
-            StepKind::Flatten => {}
-            StepKind::Act(a) => apply_act_inplace(ctx, a, &mut arena.cur),
-            kind => {
-                arena.next.clear();
-                match kind {
-                    StepKind::Dense { w, b } => {
-                        dense::apply_into(ctx, w, b, &arena.cur, &mut arena.next)
-                    }
-                    StepKind::Conv2D { kernel, bias, stride, padding } => conv::conv2d_into(
-                        ctx,
-                        kernel,
-                        bias,
-                        *stride,
-                        *padding,
-                        &arena.cur,
-                        &step.in_shape,
-                        &step.out_shape,
-                        &mut arena.next,
-                    ),
-                    StepKind::DepthwiseConv2D { kernel, bias, stride, padding } => {
-                        conv::depthwise_into(
-                            ctx,
-                            kernel,
-                            bias,
-                            *stride,
-                            *padding,
-                            &arena.cur,
-                            &step.in_shape,
-                            &step.out_shape,
-                            &mut arena.next,
-                        )
-                    }
-                    StepKind::MaxPool2D { ph, pw } => pool::max_pool_into(
-                        ctx,
-                        *ph,
-                        *pw,
-                        &arena.cur,
-                        &step.in_shape,
-                        &step.out_shape,
-                        &mut arena.next,
-                    ),
-                    StepKind::AvgPool2D { ph, pw } => pool::avg_pool_into(
-                        ctx,
-                        *ph,
-                        *pw,
-                        &arena.cur,
-                        &step.in_shape,
-                        &step.out_shape,
-                        &mut arena.next,
-                    ),
-                    StepKind::BatchNorm { gamma, beta, mean, variance, eps } => {
-                        let c = *step.in_shape.last().expect("batch_norm rank >= 1");
-                        norm::batch_norm_into(
-                            ctx,
-                            gamma,
-                            beta,
-                            mean,
-                            variance,
-                            *eps,
-                            &arena.cur,
-                            c,
-                            &mut arena.next,
-                        )
-                    }
-                    StepKind::Softmax => {
-                        let n = *step.in_shape.last().expect("softmax rank >= 1");
-                        activation::softmax_into(
-                            ctx,
-                            n,
-                            &arena.cur,
-                            &mut arena.scratch,
-                            &mut arena.next,
-                        )
-                    }
-                    StepKind::Flatten | StepKind::Act(_) => unreachable!("handled above"),
+            StepKind::Dense { w, b } => {
+                dense::apply_into(ctx, w, b, &arena.bufs[step.inputs[0]], &mut out)
+            }
+            StepKind::Conv2D { kernel, bias, stride, padding } => conv::conv2d_into(
+                ctx,
+                kernel,
+                bias,
+                *stride,
+                *padding,
+                &arena.bufs[step.inputs[0]],
+                step.in_shape(),
+                &step.out_shape,
+                &mut out,
+            ),
+            StepKind::DepthwiseConv2D { kernel, bias, stride, padding } => conv::depthwise_into(
+                ctx,
+                kernel,
+                bias,
+                *stride,
+                *padding,
+                &arena.bufs[step.inputs[0]],
+                step.in_shape(),
+                &step.out_shape,
+                &mut out,
+            ),
+            StepKind::MaxPool2D { ph, pw } => pool::max_pool_into(
+                ctx,
+                *ph,
+                *pw,
+                &arena.bufs[step.inputs[0]],
+                step.in_shape(),
+                &step.out_shape,
+                &mut out,
+            ),
+            StepKind::AvgPool2D { ph, pw } => pool::avg_pool_into(
+                ctx,
+                *ph,
+                *pw,
+                &arena.bufs[step.inputs[0]],
+                step.in_shape(),
+                &step.out_shape,
+                &mut out,
+            ),
+            StepKind::BatchNorm { gamma, beta, mean, variance, eps } => {
+                let c = *step.in_shape().last().expect("batch_norm rank >= 1");
+                norm::batch_norm_into(
+                    ctx,
+                    gamma,
+                    beta,
+                    mean,
+                    variance,
+                    *eps,
+                    &arena.bufs[step.inputs[0]],
+                    c,
+                    &mut out,
+                )
+            }
+            StepKind::Softmax => {
+                let n = *step.in_shape().last().expect("softmax rank >= 1");
+                activation::softmax_into(
+                    ctx,
+                    n,
+                    &arena.bufs[step.inputs[0]],
+                    &mut arena.scratch,
+                    &mut out,
+                )
+            }
+            // Out-of-place shape/copy fallbacks for the rare case the
+            // aliasing precondition fails (the value has other readers).
+            StepKind::Flatten => out.extend_from_slice(&arena.bufs[step.inputs[0]]),
+            StepKind::Act(a) => {
+                out.extend_from_slice(&arena.bufs[step.inputs[0]]);
+                apply_act_inplace(ctx, a, &mut out);
+            }
+            StepKind::Add => {
+                out.extend_from_slice(&arena.bufs[step.inputs[0]]);
+                for &b in &step.inputs[1..] {
+                    merge::add_assign_into(ctx, &mut out, &arena.bufs[b]);
                 }
-                if let Some(a) = &step.fused_act {
-                    apply_act_inplace(ctx, a, &mut arena.next);
+            }
+            StepKind::Concat { rows, widths } => {
+                for r in 0..*rows {
+                    for (i, &w) in widths.iter().enumerate() {
+                        merge::concat_row_into(r, w, &arena.bufs[step.inputs[i]], &mut out);
+                    }
                 }
-                std::mem::swap(&mut arena.cur, &mut arena.next);
             }
         }
-        debug_assert_eq!(arena.cur.len(), step.out_len(), "step {idx} output length");
+        if let Some(a) = &step.fused_act {
+            apply_act_inplace(ctx, a, &mut out);
+        }
+        arena.bufs[step.out] = out;
+        debug_assert_eq!(arena.bufs[step.out].len(), step.out_len(), "step {idx} output");
     }
 
     /// Convenience tensor-in/tensor-out execution with a throwaway arena —
@@ -208,7 +251,7 @@ impl Plan {
     }
 }
 
-/// Apply an elementwise activation in place, mirroring the interpreter's
+/// Apply an elementwise activation in place, mirroring the unfused
 /// per-element operation order exactly (bit-identical CAA bounds).
 fn apply_act_inplace<S: Scalar>(ctx: &S::Ctx, act: &Act, buf: &mut [S]) {
     match act {

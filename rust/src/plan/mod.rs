@@ -1,46 +1,63 @@
 //! **The compiled execution plan** — a model lowered, once per
-//! `(model, input_shape)`, into a straight-line sequence of shape-resolved
-//! [`Step`]s that a generic executor runs with a preallocated double-buffer
-//! [`Arena`].
+//! `(model, input_shape)`, into a graph of shape-resolved [`Step`]s over a
+//! small, liveness-allocated **buffer pool** that a generic executor runs
+//! with a preallocated [`Arena`].
 //!
 //! This is the Rust analogue of the paper's compile-first design: the
 //! original tool turns a Keras model into straight-line C++ (via
 //! frugally-deep) precisely so the *same compiled evaluation* drives both
 //! the FP inference and the error analysis. Here, [`Plan::build`]:
 //!
-//! 1. **Resolves all shapes ahead of time** — every geometry check that the
-//!    per-layer interpreter re-ran inside the inner loop
-//!    ([`Layer::output_shape`]'s `Result`s) happens once at build; the
-//!    executor's steady state is check-free.
-//! 2. **Fuses statically** per the requested [`Fusion`] level:
-//!    * [`Fusion::Pair`] attaches elementwise activations to the preceding
-//!      compute step (applied in place on its output buffer — the same
-//!      operations in the same order, so CAA bounds are bit-identical to
-//!      the interpreter; this level is safe for analysis).
-//!    * [`Fusion::Full`] additionally folds `BatchNormalization` into the
-//!      preceding `Conv2D`/`Dense`/`DepthwiseConv2D` affine form. Folding
-//!      *changes the rounding profile* (the per-channel scale is absorbed
-//!      into the weights at build time in f64), so it is reserved for the
-//!      f64 reference trace and throughput-oriented witness runs — never
-//!      for CAA, whose rounding-error bookkeeping must match the analyzed
-//!      computation exactly (the "unfused-for-CAA" mode).
+//! 1. **Orders and validates the topology** — sequential chains and graph
+//!    models ([`crate::model::Graph`]: residual skips, multi-branch
+//!    merges) lower through one topological pass; cycles, dangling edges
+//!    and merge-arity errors are rejected before any step exists.
+//! 2. **Resolves all shapes ahead of time** — every geometry check the
+//!    per-layer interpreter re-ran inside the inner loop happens once at
+//!    build; the executor's steady state is check-free.
+//! 3. **Fuses statically** per the requested [`Fusion`] level:
+//!    * [`Fusion::Pair`] attaches an elementwise activation to its
+//!      producing compute step when that producer's output has no other
+//!      consumer (applied in place on the producer's output buffer — the
+//!      same operations in the same order, so CAA bounds are bit-identical
+//!      to the unfused walk; this level is safe for analysis). Across a
+//!      merge point the skip-connection value keeps a second consumer, so
+//!      pairing never destroys a value another branch still needs.
+//!    * [`Fusion::Full`] additionally folds `BatchNormalization` into a
+//!      sole-consumer preceding `Conv2D`/`Dense`/`DepthwiseConv2D` affine
+//!      form. Folding *changes the rounding profile* (the per-channel
+//!      scale is absorbed into the weights at build time in f64), so it is
+//!      reserved for the f64 reference trace and throughput-oriented
+//!      witness runs — never for CAA, whose rounding-error bookkeeping
+//!      must match the analyzed computation exactly (the "unfused-for-CAA"
+//!      contract).
 //!    * [`Fusion::None`] keeps a 1:1 step-per-layer mapping — the mode the
 //!      mixed-precision path uses so per-layer format boundaries stay
-//!      addressable.
-//! 3. **Preallocates**: the executor ping-pongs between two arena buffers
-//!    sized at first use; steady-state inference performs zero tensor
-//!    allocations (`O(channels)`/`O(classes)` scalar temporaries remain for
-//!    batch-norm parameter embedding and softmax rows).
+//!      addressable (steps in topological order).
+//! 4. **Assigns buffers register-style**: each step names explicit input
+//!    buffer ids and an output buffer id ([`BufId`]) from a pool sized by
+//!    liveness — a buffer is recycled the moment its last reader has run.
+//!    Sequential models therefore still compile to the classic
+//!    **two-buffer ping-pong** (never more; a degenerate chain of only
+//!    in-place steps needs just one); a residual block briefly holds a
+//!    third buffer for the live skip value. In-place-capable steps (standalone activations,
+//!    `Flatten`) alias their dying input buffer outright. Steady-state
+//!    execution performs zero tensor allocations (`O(channels)`/
+//!    `O(classes)` scalar temporaries remain for batch-norm parameter
+//!    embedding and softmax rows).
 //!
-//! The executor ([`Plan::execute`]) is generic over [`Scalar`], so the f64
-//! baseline, the interval/CAA analysis pass, and the emulated precision-k
-//! witness runs all execute the same compiled steps. [`crate::api::Session`]
-//! caches an `Arc<Plan>` next to each model in its content-hash LRU;
-//! [`crate::coordinator`] hands every worker thread its own arena.
+//! The executor ([`Plan::execute`]) is generic over
+//! [`Scalar`](crate::tensor::Scalar), so the f64 baseline, the
+//! interval/CAA analysis pass, and the emulated precision-k witness runs
+//! all execute the same compiled steps — merge ops included, which is how
+//! interval/CAA bound propagation reaches residual topologies without any
+//! per-arithmetic code. [`crate::api::Session`] caches an `Arc<Plan>` next
+//! to each model in its content-hash LRU; [`crate::coordinator`] hands
+//! every worker thread its own arena.
 //!
-//! The IR is deliberately sequential for now; the step list (rather than
-//! the `Vec<Layer>` it replaces) is where graph topologies and per-step
-//! precision assignments will hang (see ROADMAP.md "Open items").
+//! Per-step precision maps across merge points and a batch axis over the
+//! buffer pool are the next items to hang off this IR (see ROADMAP.md
+//! "Open items").
 
 mod exec;
 
@@ -51,16 +68,20 @@ use crate::model::Model;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 
+/// Index of a buffer in the plan's pool (and in the executing
+/// [`Arena`]'s buffer vector).
+pub type BufId = usize;
+
 /// Fusion level a plan is compiled at. See the module docs for the
 /// soundness contract of each level.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Fusion {
-    /// One step per layer, no pairing — exact legacy interpreter
-    /// semantics; required by the mixed-precision path (per-layer format
-    /// boundaries address steps 1:1).
+    /// One step per layer, no pairing — exact unfused semantics; required
+    /// by the mixed-precision path (per-layer format boundaries address
+    /// steps 1:1, in topological order).
     None,
-    /// Pair elementwise activations with the preceding compute step.
-    /// Arithmetic is unchanged (CAA-safe).
+    /// Pair elementwise activations with their sole-consumed producing
+    /// compute step. Arithmetic is unchanged (CAA-safe).
     Pair,
     /// [`Fusion::Pair`] plus batch-norm folding into the preceding affine
     /// step. f64/witness executions only — **not** CAA-sound.
@@ -71,9 +92,16 @@ pub enum Fusion {
 /// output buffer.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Act {
+    /// `max(x, 0)`.
     Relu,
-    LeakyRelu { alpha: f64 },
+    /// `max(x, alpha * x)`.
+    LeakyRelu {
+        /// Negative-side slope.
+        alpha: f64,
+    },
+    /// Hyperbolic tangent.
     Tanh,
+    /// Logistic sigmoid.
     Sigmoid,
 }
 
@@ -82,29 +110,87 @@ pub enum Act {
 #[derive(Clone, Debug)]
 pub enum StepKind {
     /// `y = W x + b`, `w: [units, in]`.
-    Dense { w: Tensor<f64>, b: Vec<f64> },
+    Dense {
+        /// Weight matrix `[units, in]`.
+        w: Tensor<f64>,
+        /// Bias vector `[units]`.
+        b: Vec<f64>,
+    },
     /// 2-D convolution, kernel `[kh, kw, cin, cout]`.
-    Conv2D { kernel: Tensor<f64>, bias: Vec<f64>, stride: usize, padding: Padding },
+    Conv2D {
+        /// Convolution kernel `[kh, kw, cin, cout]` (Keras layout).
+        kernel: Tensor<f64>,
+        /// Per-output-channel bias.
+        bias: Vec<f64>,
+        /// Spatial stride (same both axes).
+        stride: usize,
+        /// Padding mode.
+        padding: Padding,
+    },
     /// Depthwise 2-D convolution, kernel `[kh, kw, c]`.
-    DepthwiseConv2D { kernel: Tensor<f64>, bias: Vec<f64>, stride: usize, padding: Padding },
+    DepthwiseConv2D {
+        /// Depthwise kernel `[kh, kw, c]`.
+        kernel: Tensor<f64>,
+        /// Per-channel bias.
+        bias: Vec<f64>,
+        /// Spatial stride (same both axes).
+        stride: usize,
+        /// Padding mode.
+        padding: Padding,
+    },
     /// Max pooling over `[ph, pw]` windows.
-    MaxPool2D { ph: usize, pw: usize },
+    MaxPool2D {
+        /// Pool height.
+        ph: usize,
+        /// Pool width.
+        pw: usize,
+    },
     /// Average pooling over `[ph, pw]` windows.
-    AvgPool2D { ph: usize, pw: usize },
+    AvgPool2D {
+        /// Pool height.
+        ph: usize,
+        /// Pool width.
+        pw: usize,
+    },
     /// Inference-mode batch normalization (kept materialized at
     /// [`Fusion::None`]/[`Fusion::Pair`]; folded away at [`Fusion::Full`]).
-    BatchNorm { gamma: Vec<f64>, beta: Vec<f64>, mean: Vec<f64>, variance: Vec<f64>, eps: f64 },
-    /// Shape-only: the executor treats this as a no-op on the flat buffer.
+    BatchNorm {
+        /// Per-channel scale.
+        gamma: Vec<f64>,
+        /// Per-channel shift.
+        beta: Vec<f64>,
+        /// Per-channel running mean.
+        mean: Vec<f64>,
+        /// Per-channel running variance.
+        variance: Vec<f64>,
+        /// Variance stabilizer.
+        eps: f64,
+    },
+    /// Shape-only: aliased to its input buffer when that buffer dies here
+    /// (the common case — then a no-op); otherwise a plain copy.
     Flatten,
-    /// A standalone elementwise activation (not paired; applied in place).
+    /// A standalone elementwise activation (not paired; in place on its
+    /// input buffer when that buffer dies here).
     Act(Act),
     /// Numerically-stable softmax over the last axis.
     Softmax,
+    /// Elementwise sum of all input buffers (2+), accumulated left to
+    /// right in declared inbound order — the residual merge.
+    Add,
+    /// Concatenation of all input buffers (2+) along the last axis.
+    /// `rows` and per-input `widths` are resolved at build time so the
+    /// executor's gather is geometry-check-free and allocation-free.
+    Concat {
+        /// Product of the leading (non-concatenated) axes.
+        rows: usize,
+        /// Last-axis width of each input, in input order.
+        widths: Vec<usize>,
+    },
 }
 
 impl StepKind {
     /// Whether this step produces a fresh output buffer (as opposed to
-    /// operating in place / being shape-only).
+    /// being in-place-capable / shape-only).
     fn writes_output(&self) -> bool {
         !matches!(self, StepKind::Flatten | StepKind::Act(_))
     }
@@ -112,6 +198,12 @@ impl StepKind {
     /// Whether an activation may be paired onto this step's output.
     fn accepts_fused_act(&self) -> bool {
         self.writes_output() && !matches!(self, StepKind::Softmax)
+    }
+
+    /// Whether the buffer allocator may alias this step's output onto its
+    /// (dying) input buffer.
+    fn in_place_capable(&self) -> bool {
+        matches!(self, StepKind::Flatten | StepKind::Act(_))
     }
 
     /// Short tag for diagnostics and plan dumps.
@@ -129,38 +221,59 @@ impl StepKind {
             StepKind::Act(Act::Tanh) => "tanh",
             StepKind::Act(Act::Sigmoid) => "sigmoid",
             StepKind::Softmax => "softmax",
+            StepKind::Add => "add",
+            StepKind::Concat { .. } => "concat",
         }
     }
 }
 
-/// One compiled step: kind + statically resolved geometry + provenance.
+/// One compiled step: kind + statically resolved geometry + explicit
+/// buffer wiring + provenance.
 #[derive(Clone, Debug)]
 pub struct Step {
+    /// The operation.
     pub kind: StepKind,
-    /// Input shape, validated at build time.
-    pub in_shape: Vec<usize>,
+    /// Pool buffers this step reads, in input order (merge steps have 2+;
+    /// everything else exactly 1).
+    pub inputs: Vec<BufId>,
+    /// Pool buffer this step writes. Equal to `inputs[0]` only for
+    /// in-place-aliased `Act`/`Flatten` steps.
+    pub out: BufId,
+    /// Input shapes (index-aligned with [`Step::inputs`]), validated at
+    /// build time.
+    pub in_shapes: Vec<Vec<usize>>,
     /// Output shape (after the fused activation, which preserves shape).
     pub out_shape: Vec<usize>,
     /// Elementwise activation applied in place on this step's output
     /// buffer, if fusion paired one.
     pub fused_act: Option<Act>,
-    /// Model layer indices `[lo, hi)` this step covers (provenance for
-    /// diagnostics and per-layer precision maps).
+    /// Covered model-layer index range `[lo, hi)` — provenance for
+    /// diagnostics and per-layer precision maps. Exact and contiguous for
+    /// sequential models; for graph models an enclosing range (fusion can
+    /// join non-adjacent listing indices).
     pub layer_range: (usize, usize),
 }
 
 impl Step {
-    pub fn in_len(&self) -> usize {
-        self.in_shape.iter().product()
+    /// The primary (first) input shape — the only one for non-merge steps.
+    pub fn in_shape(&self) -> &[usize] {
+        &self.in_shapes[0]
     }
 
+    /// Element count of the primary input.
+    pub fn in_len(&self) -> usize {
+        self.in_shapes[0].iter().product()
+    }
+
+    /// Element count of the output.
     pub fn out_len(&self) -> usize {
         self.out_shape.iter().product()
     }
 }
 
 /// A compiled, shape-resolved, optionally fused execution plan for one
-/// model. Build once, execute many times (generic over [`crate::tensor::Scalar`]).
+/// model. Build once, execute many times (generic over
+/// [`crate::tensor::Scalar`]).
 #[derive(Clone, Debug)]
 pub struct Plan {
     model_name: String,
@@ -168,53 +281,152 @@ pub struct Plan {
     output_shape: Vec<usize>,
     steps: Vec<Step>,
     fusion: Fusion,
-    max_buf: usize,
+    /// Required element capacity of each pool buffer (the max any value
+    /// placed in that slot reaches).
+    buf_lens: Vec<usize>,
+    input_buf: BufId,
+    output_buf: BufId,
+}
+
+/// A step during compilation, wired by **value id** (0 = model input,
+/// `l + 1` = layer `l`'s output) rather than buffer id; buffer assignment
+/// happens after fusion.
+struct DraftStep {
+    kind: StepKind,
+    inputs: Vec<usize>,
+    out_val: usize,
+    in_shapes: Vec<Vec<usize>>,
+    out_shape: Vec<usize>,
+    fused_act: Option<Act>,
+    layer_lo: usize,
+    layer_hi: usize,
 }
 
 impl Plan {
-    /// Compile `model` at the given fusion level. All shape inference and
-    /// geometry validation happens here; a returned plan executes
-    /// check-free.
+    /// Compile `model` at the given fusion level. All topology validation
+    /// and shape inference happens here; a returned plan executes
+    /// check-free. Works for sequential chains and graph models alike.
+    ///
+    /// ```
+    /// use rigor::model::zoo;
+    /// use rigor::plan::{Fusion, Plan};
+    ///
+    /// // A sequential model ping-pongs exactly two pool buffers ...
+    /// let seq = Plan::build(&zoo::tiny_mlp(1), Fusion::Pair)?;
+    /// assert_eq!(seq.buffer_count(), 2);
+    /// // ... while a residual model holds a third for the live skip value.
+    /// let res = Plan::build(&zoo::residual_mlp(1), Fusion::Pair)?;
+    /// assert_eq!(res.buffer_count(), 3);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn build(model: &Model, fusion: Fusion) -> Result<Plan> {
-        let mut steps = Vec::with_capacity(model.layers.len());
-        let mut shape = model.input_shape.clone();
-        for (i, layer) in model.layers.iter().enumerate() {
-            let out_shape = layer
-                .output_shape(&shape)
-                .with_context(|| format!("plan: layer {i} ({})", layer.type_name()))?;
-            steps.push(Step {
-                kind: lower_layer(layer),
-                in_shape: shape,
-                out_shape: out_shape.clone(),
+        let topo = model.toposort().with_context(|| format!("plan: model '{}'", model.name))?;
+        let val_shape = model.value_shapes(&topo).context("plan")?;
+        let n_vals = model.layers.len() + 1;
+
+        // Lower layers into value-wired draft steps, in topological order.
+        let mut drafts: Vec<DraftStep> = Vec::with_capacity(model.layers.len());
+        for &l in &topo.order {
+            let in_vals = topo.inputs[l].clone();
+            let in_shapes: Vec<Vec<usize>> =
+                in_vals.iter().map(|&v| val_shape[v].clone()).collect();
+            let out_shape = val_shape[l + 1].clone();
+            drafts.push(DraftStep {
+                kind: lower_layer(&model.layers[l], &in_shapes, &out_shape),
+                inputs: in_vals,
+                out_val: l + 1,
+                in_shapes,
+                out_shape,
                 fused_act: None,
-                layer_range: (i, i + 1),
+                layer_lo: l,
+                layer_hi: l + 1,
             });
-            shape = out_shape;
         }
+
+        // Per-value read counts; the output value gets one phantom read so
+        // its buffer is never recycled and fusion never erases it.
+        let mut uses = vec![0usize; n_vals];
+        for d in &drafts {
+            for &v in &d.inputs {
+                uses[v] += 1;
+            }
+        }
+        uses[topo.output_val] += 1;
+
         if fusion == Fusion::Full {
-            fold_batch_norms(&mut steps);
+            fold_batch_norms(&mut drafts, &mut uses);
         }
         if fusion != Fusion::None {
-            pair_activations(&mut steps);
+            pair_activations(&mut drafts, &mut uses);
         }
-        let max_buf = steps
-            .iter()
-            .map(Step::out_len)
-            .chain(std::iter::once(model.input_shape.iter().product()))
-            .max()
-            .unwrap_or(0);
+
+        // Register-style buffer assignment over the liveness intervals.
+        let mut remaining = uses;
+        let mut buf_of_val: Vec<Option<BufId>> = vec![None; n_vals];
+        let mut buf_lens: Vec<usize> = Vec::new();
+        let mut free: Vec<BufId> = Vec::new();
+
+        let input_buf: BufId = 0;
+        buf_lens.push(model.input_shape.iter().product());
+        buf_of_val[0] = Some(input_buf);
+
+        let mut steps = Vec::with_capacity(drafts.len());
+        for d in drafts {
+            let in_bufs: Vec<BufId> = d
+                .inputs
+                .iter()
+                .map(|&v| buf_of_val[v].expect("topological order: producer already placed"))
+                .collect();
+            let out_len: usize = d.out_shape.iter().product();
+            // Alias in place when the sole input dies at this very step
+            // (then `Act` mutates, `Flatten` becomes a no-op).
+            let in_place =
+                d.kind.in_place_capable() && d.inputs.len() == 1 && remaining[d.inputs[0]] == 1;
+            let out_buf = if in_place {
+                in_bufs[0]
+            } else if let Some(b) = free.pop() {
+                b
+            } else {
+                buf_lens.push(0);
+                buf_lens.len() - 1
+            };
+            buf_lens[out_buf] = buf_lens[out_buf].max(out_len);
+            buf_of_val[d.out_val] = Some(out_buf);
+            // Release dead inputs only *after* the output got its buffer,
+            // so a compute step can never write the buffer it reads.
+            for (&v, &b) in d.inputs.iter().zip(&in_bufs) {
+                remaining[v] -= 1;
+                if remaining[v] == 0 && b != out_buf {
+                    free.push(b);
+                }
+            }
+            steps.push(Step {
+                kind: d.kind,
+                inputs: in_bufs,
+                out: out_buf,
+                in_shapes: d.in_shapes,
+                out_shape: d.out_shape,
+                fused_act: d.fused_act,
+                layer_range: (d.layer_lo, d.layer_hi),
+            });
+        }
+
+        let output_buf =
+            buf_of_val[topo.output_val].expect("output value placed (empty model: the input)");
         Ok(Plan {
             model_name: model.name.clone(),
             input_shape: model.input_shape.clone(),
-            output_shape: shape,
+            output_shape: val_shape[topo.output_val].clone(),
             steps,
             fusion,
-            max_buf,
+            buf_lens,
+            input_buf,
+            output_buf,
         })
     }
 
     /// The analysis plan: activation pairing only — arithmetic identical
-    /// to the interpreter, so CAA bounds are unchanged.
+    /// to the unfused walk, so CAA bounds are unchanged.
     pub fn for_analysis(model: &Model) -> Result<Plan> {
         Plan::build(model, Fusion::Pair)
     }
@@ -225,49 +437,79 @@ impl Plan {
         Plan::build(model, Fusion::Full)
     }
 
-    /// A 1:1 step-per-layer plan (legacy interpreter semantics; the
+    /// A 1:1 step-per-layer plan (exact unfused semantics; the
     /// mixed-precision path's addressing mode).
     pub fn unfused(model: &Model) -> Result<Plan> {
         Plan::build(model, Fusion::None)
     }
 
+    /// Name of the compiled model.
     pub fn model_name(&self) -> &str {
         &self.model_name
     }
 
+    /// The fusion level this plan was compiled at.
     pub fn fusion(&self) -> Fusion {
         self.fusion
     }
 
+    /// The compiled steps, in execution (topological) order.
     pub fn steps(&self) -> &[Step] {
         &self.steps
     }
 
+    /// The model input shape.
     pub fn input_shape(&self) -> &[usize] {
         &self.input_shape
     }
 
+    /// The model output shape.
     pub fn output_shape(&self) -> &[usize] {
         &self.output_shape
     }
 
+    /// Element count of the input.
     pub fn input_len(&self) -> usize {
         self.input_shape.iter().product()
     }
 
+    /// Element count of the output.
     pub fn output_len(&self) -> usize {
         self.output_shape.iter().product()
     }
 
-    /// Largest element count any step buffer reaches (arena sizing).
+    /// Number of pool buffers the plan executes over: at most 2 for any
+    /// sequential model (exactly 2 once the chain has a buffer-producing
+    /// step; a degenerate all-in-place chain of activations/`Flatten`
+    /// stays at 1), +1 per concurrently-live skip/branch value.
+    pub fn buffer_count(&self) -> usize {
+        self.buf_lens.len()
+    }
+
+    /// Required element capacity of each pool buffer (arena sizing).
+    pub fn buffer_lens(&self) -> &[usize] {
+        &self.buf_lens
+    }
+
+    /// Largest element count any pool buffer reaches.
     pub fn max_buffer_len(&self) -> usize {
-        self.max_buf
+        self.buf_lens.iter().copied().max().unwrap_or(0)
+    }
+
+    /// The pool buffer the executor seeds with the model input.
+    pub fn input_buf(&self) -> BufId {
+        self.input_buf
+    }
+
+    /// The pool buffer holding the model output after execution.
+    pub fn output_buf(&self) -> BufId {
+        self.output_buf
     }
 }
 
 /// Lower one layer into its (unfused) step kind, cloning the parameters so
-/// the plan owns them.
-fn lower_layer(layer: &Layer) -> StepKind {
+/// the plan owns them. Geometry needed by merge gathers is resolved here.
+fn lower_layer(layer: &Layer, in_shapes: &[Vec<usize>], out_shape: &[usize]) -> StepKind {
     match layer {
         Layer::Dense { w, b } => StepKind::Dense { w: w.clone(), b: b.clone() },
         Layer::Conv2D { kernel, bias, stride, padding } => StepKind::Conv2D {
@@ -297,37 +539,65 @@ fn lower_layer(layer: &Layer) -> StepKind {
         Layer::Tanh => StepKind::Act(Act::Tanh),
         Layer::Sigmoid => StepKind::Act(Act::Sigmoid),
         Layer::Softmax => StepKind::Softmax,
+        Layer::Add => StepKind::Add,
+        Layer::Concat => {
+            // Shapes were validated by `Layer::output_shape_multi`; resolve
+            // the row-major gather geometry once, at build time.
+            let rank = out_shape.len();
+            let rows: usize = out_shape[..rank - 1].iter().product();
+            let widths: Vec<usize> =
+                in_shapes.iter().map(|s| *s.last().expect("concat rank >= 1")).collect();
+            StepKind::Concat { rows, widths }
+        }
     }
 }
 
-/// Fold every `BatchNorm` that directly follows a `Dense`/`Conv2D`/
-/// `DepthwiseConv2D` into that step's weights and bias:
-/// `y = s (W x + b - mu) + beta` with `s = gamma / sqrt(var + eps)`
+/// Index of the draft producing value `v`, if any (the model input has no
+/// producer). Producers always precede consumers in the topologically
+/// ordered draft list.
+fn producer_of(drafts: &[DraftStep], v: usize) -> Option<usize> {
+    drafts.iter().position(|d| d.out_val == v)
+}
+
+/// Fold every `BatchNorm` whose sole-consumed input comes from a
+/// `Dense`/`Conv2D`/`DepthwiseConv2D` into that producer's weights and
+/// bias: `y = s (W x + b - mu) + beta` with `s = gamma / sqrt(var + eps)`
 /// becomes `W' = s W` (per output channel), `b' = s (b - mu) + beta`.
 /// The scale is computed in f64 at build time — this changes the rounding
 /// profile and is why [`Fusion::Full`] is not CAA-sound.
-fn fold_batch_norms(steps: &mut Vec<Step>) {
-    let mut i = 1;
-    while i < steps.len() {
-        let foldable = matches!(steps[i].kind, StepKind::BatchNorm { .. })
-            && matches!(
-                steps[i - 1].kind,
-                StepKind::Dense { .. } | StepKind::Conv2D { .. } | StepKind::DepthwiseConv2D { .. }
-            );
-        if !foldable {
+fn fold_batch_norms(drafts: &mut Vec<DraftStep>, uses: &mut [usize]) {
+    let mut i = 0;
+    while i < drafts.len() {
+        let fold_target = if matches!(drafts[i].kind, StepKind::BatchNorm { .. }) {
+            let v = drafts[i].inputs[0];
+            // `uses[v] == 1` also excludes the model output value (its
+            // phantom read keeps it at >= 2 when a BN reads it).
+            producer_of(drafts, v).filter(|&p| {
+                uses[v] == 1
+                    && drafts[p].fused_act.is_none()
+                    && matches!(
+                        drafts[p].kind,
+                        StepKind::Dense { .. }
+                            | StepKind::Conv2D { .. }
+                            | StepKind::DepthwiseConv2D { .. }
+                    )
+            })
+        } else {
+            None
+        };
+        let Some(p) = fold_target else {
             i += 1;
             continue;
-        }
-        let bn = steps.remove(i);
+        };
+        debug_assert!(p < i, "producer precedes consumer in topo order");
+        let bn = drafts.remove(i);
+        let folded_val = bn.inputs[0];
         let StepKind::BatchNorm { gamma, beta, mean, variance, eps } = bn.kind else {
             unreachable!("checked above");
         };
-        let scale: Vec<f64> = gamma
-            .iter()
-            .zip(&variance)
-            .map(|(&g, &v)| g / (v + eps).sqrt())
-            .collect();
-        let prev = &mut steps[i - 1];
+        let scale: Vec<f64> =
+            gamma.iter().zip(&variance).map(|(&g, &v)| g / (v + eps).sqrt()).collect();
+        let prev = &mut drafts[p];
         match &mut prev.kind {
             StepKind::Dense { w, b } => {
                 let (m, n) = (w.shape()[0], w.shape()[1]);
@@ -359,34 +629,52 @@ fn fold_batch_norms(steps: &mut Vec<Step>) {
             }
             _ => unreachable!("checked above"),
         }
+        // The producer now emits the BN's value; the intermediate value
+        // disappears.
+        prev.out_val = bn.out_val;
         prev.out_shape = bn.out_shape;
-        prev.layer_range.1 = bn.layer_range.1;
+        prev.layer_lo = prev.layer_lo.min(bn.layer_lo);
+        prev.layer_hi = prev.layer_hi.max(bn.layer_hi);
+        uses[folded_val] = 0;
     }
 }
 
-/// Pair each standalone elementwise activation with the compute step
-/// directly before it. The activation is applied in place on that step's
-/// finished output buffer — identical operations in identical order, just
-/// without the extra buffer pass, so this is sound at every fusion level
-/// that enables it.
-fn pair_activations(steps: &mut Vec<Step>) {
-    let mut i = 1;
-    while i < steps.len() {
-        let pairable = matches!(steps[i].kind, StepKind::Act(_))
-            && steps[i - 1].kind.accepts_fused_act()
-            && steps[i - 1].fused_act.is_none();
-        if !pairable {
+/// Pair each standalone elementwise activation with the compute step that
+/// produces its (sole-consumed) input. The activation is applied in place
+/// on that step's finished output buffer — identical operations in
+/// identical order, just without the extra buffer pass, so this is sound
+/// at every fusion level that enables it. Skip-connection values with a
+/// second consumer are never paired away.
+fn pair_activations(drafts: &mut Vec<DraftStep>, uses: &mut [usize]) {
+    let mut i = 0;
+    while i < drafts.len() {
+        let pair_target = if matches!(drafts[i].kind, StepKind::Act(_)) {
+            let v = drafts[i].inputs[0];
+            producer_of(drafts, v).filter(|&p| {
+                uses[v] == 1
+                    && drafts[p].fused_act.is_none()
+                    && drafts[p].kind.accepts_fused_act()
+            })
+        } else {
+            None
+        };
+        let Some(p) = pair_target else {
             i += 1;
             continue;
-        }
-        let act_step = steps.remove(i);
+        };
+        debug_assert!(p < i, "producer precedes consumer in topo order");
+        let act_step = drafts.remove(i);
+        let paired_val = act_step.inputs[0];
         let StepKind::Act(a) = act_step.kind else {
             unreachable!("checked above");
         };
-        let prev = &mut steps[i - 1];
+        let prev = &mut drafts[p];
         prev.fused_act = Some(a);
+        prev.out_val = act_step.out_val;
         prev.out_shape = act_step.out_shape;
-        prev.layer_range.1 = act_step.layer_range.1;
+        prev.layer_lo = prev.layer_lo.min(act_step.layer_lo);
+        prev.layer_hi = prev.layer_hi.max(act_step.layer_hi);
+        uses[paired_val] = 0;
     }
 }
 

@@ -35,7 +35,7 @@ fn unfused_steps_match_legacy_shape_path() {
         assert_eq!(plan.steps().len(), model.layers.len());
         let mut shape = model.input_shape.clone();
         for (step, layer) in plan.steps().iter().zip(&model.layers) {
-            assert_eq!(step.in_shape, shape);
+            assert_eq!(step.in_shape(), shape.as_slice());
             shape = layer.output_shape(&shape).unwrap();
             assert_eq!(step.out_shape, shape, "{}: {}", model.name, step.kind.name());
         }
@@ -51,7 +51,7 @@ fn step_shapes_chain_at_every_fusion_level() {
             let mut shape = model.input_shape.clone();
             let mut next_layer = 0;
             for step in plan.steps() {
-                assert_eq!(step.in_shape, shape, "{:?} {}", fusion, step.kind.name());
+                assert_eq!(step.in_shape(), shape.as_slice(), "{:?} {}", fusion, step.kind.name());
                 assert_eq!(step.layer_range.0, next_layer, "layer provenance is contiguous");
                 assert!(step.layer_range.1 > step.layer_range.0);
                 next_layer = step.layer_range.1;
@@ -188,21 +188,27 @@ fn emulated_witness_matches_interpreter_bitwise() {
 
 #[test]
 fn arena_steady_state_does_not_reallocate() {
-    let model = zoo::tiny_cnn(6);
-    let plan = Plan::for_analysis(&model).unwrap();
-    let x = rand_input(&model, 2);
-    let mut arena: Arena<f64> = Arena::new();
-    let first = plan.execute::<f64>(&(), &x, &mut arena).unwrap().to_vec();
-    let caps = (arena.cur.capacity(), arena.next.capacity(), arena.scratch.capacity());
-    for _ in 0..5 {
-        let again = plan.execute::<f64>(&(), &x, &mut arena).unwrap();
-        assert_eq!(again, first.as_slice());
+    // Sequential and residual models alike: after the first run, the
+    // warmed pool buffers are reused verbatim.
+    for model in [zoo::tiny_cnn(6), zoo::residual_cnn(6)] {
+        let plan = Plan::for_analysis(&model).unwrap();
+        let x = rand_input(&model, 2);
+        let mut arena: Arena<f64> = Arena::new();
+        let first = plan.execute::<f64>(&(), &x, &mut arena).unwrap().to_vec();
+        let caps: Vec<usize> = arena.bufs.iter().map(Vec::capacity).collect();
+        let scratch_cap = arena.scratch.capacity();
+        for _ in 0..5 {
+            let again = plan.execute::<f64>(&(), &x, &mut arena).unwrap();
+            assert_eq!(again, first.as_slice());
+        }
+        assert_eq!(
+            arena.bufs.iter().map(Vec::capacity).collect::<Vec<usize>>(),
+            caps,
+            "{}: repeat executions must reuse the warmed buffers",
+            model.name
+        );
+        assert_eq!(arena.scratch.capacity(), scratch_cap);
     }
-    assert_eq!(
-        (arena.cur.capacity(), arena.next.capacity(), arena.scratch.capacity()),
-        caps,
-        "repeat executions must reuse the warmed buffers"
-    );
 }
 
 #[test]
@@ -220,6 +226,7 @@ fn build_rejects_incompatible_stacks() {
         name: "bad".into(),
         input_shape: vec![8],
         layers: vec![zoo::dense(&mut rng, 8, 6), zoo::dense(&mut rng, 7, 3)],
+        graph: None,
     };
     let err = Plan::unfused(&model).unwrap_err();
     assert!(format!("{err:#}").contains("layer 1"), "{err:#}");
@@ -243,6 +250,7 @@ fn uncommon_step_kinds_match_interpreter() {
             zoo::dense(&mut rng, 12, 4),
             Layer::Softmax,
         ],
+        graph: None,
     };
     let x = rand_input(&model, 21);
     let reference = model
@@ -269,6 +277,129 @@ fn uncommon_step_kinds_match_interpreter() {
     for (g, r) in got.iter().zip(oracle.data()) {
         assert_eq!(g.abs_bound().to_bits(), r.abs_bound().to_bits());
         assert_eq!(g.rel_bound().to_bits(), r.rel_bound().to_bits());
+    }
+}
+
+// (The sequential-models-compile-to-exactly-two-buffers regression lives
+// in `rust/tests/plan.rs`, next to the other graph-IR acceptance tests.)
+
+#[test]
+fn residual_models_use_three_pool_buffers() {
+    // One extra buffer holds the live skip/branch value across the merge.
+    for model in [zoo::residual_mlp(3), zoo::residual_cnn(4)] {
+        for fusion in [Fusion::None, Fusion::Pair, Fusion::Full] {
+            let plan = Plan::build(&model, fusion).unwrap();
+            assert_eq!(plan.buffer_count(), 3, "{} at {fusion:?}", model.name);
+            assert!(plan.max_buffer_len() > 0);
+        }
+    }
+}
+
+#[test]
+fn graph_buffer_wiring_is_consistent() {
+    // Structural invariants of the register allocation, on every zoo
+    // model and fusion level: inputs are written before read, an output
+    // buffer never aliases a live input (except the sanctioned in-place
+    // Act/Flatten case), and the output buffer holds the final value.
+    let mut models = zoo_models();
+    models.push(zoo::residual_mlp(5));
+    models.push(zoo::residual_cnn(6));
+    for model in models {
+        for fusion in [Fusion::None, Fusion::Pair, Fusion::Full] {
+            let plan = Plan::build(&model, fusion).unwrap();
+            let nbufs = plan.buffer_count();
+            let mut written = vec![false; nbufs];
+            written[plan.input_buf()] = true;
+            for step in plan.steps() {
+                assert_eq!(step.inputs.len(), step.in_shapes.len());
+                for &b in &step.inputs {
+                    assert!(b < nbufs);
+                    assert!(written[b], "{}: read-before-write", model.name);
+                }
+                if step.out == step.inputs[0] {
+                    assert!(
+                        matches!(step.kind, StepKind::Act(_) | StepKind::Flatten),
+                        "{}: only Act/Flatten may alias in place",
+                        model.name
+                    );
+                } else {
+                    // Compute steps read while writing: no input aliasing.
+                    assert!(
+                        !step.inputs.contains(&step.out),
+                        "{}: output aliases a live input",
+                        model.name
+                    );
+                }
+                // Buffer capacities cover every placement.
+                assert!(plan.buffer_lens()[step.out] >= step.out_len());
+                written[step.out] = true;
+            }
+            assert!(written[plan.output_buf()]);
+        }
+    }
+}
+
+#[test]
+fn residual_fusion_respects_skip_liveness() {
+    // In residual_mlp the first ReLU's output feeds both the second dense
+    // and the merge: pairing must still fuse it (its *producer's* value
+    // has a single consumer), while the post-merge ReLU fuses onto Add.
+    let plan = Plan::for_analysis(&zoo::residual_mlp(7)).unwrap();
+    let kinds: Vec<&str> = plan.steps().iter().map(|s| s.kind.name()).collect();
+    assert_eq!(kinds, vec!["dense", "dense", "add", "dense", "softmax"]);
+    assert_eq!(plan.steps()[0].fused_act, Some(Act::Relu), "stem dense+relu");
+    assert_eq!(plan.steps()[2].fused_act, Some(Act::Relu), "add+relu");
+    let add = &plan.steps()[2];
+    assert_eq!(add.inputs.len(), 2);
+    assert_eq!(
+        add.inputs[1],
+        plan.steps()[0].out,
+        "the skip edge reads the stem's output buffer"
+    );
+}
+
+#[test]
+fn concat_step_geometry_resolved_at_build() {
+    let plan = Plan::for_analysis(&zoo::residual_cnn(8)).unwrap();
+    let concat = plan
+        .steps()
+        .iter()
+        .find(|s| matches!(s.kind, StepKind::Concat { .. }))
+        .expect("residual_cnn has a concat");
+    let StepKind::Concat { rows, widths } = &concat.kind else { unreachable!() };
+    assert_eq!(*rows, 36, "6x6 spatial positions");
+    assert_eq!(widths.as_slice(), &[2, 2], "two 2-channel branches");
+    assert_eq!(concat.out_shape, vec![6, 6, 4]);
+}
+
+#[test]
+fn residual_plans_execute_in_every_arithmetic() {
+    // End-to-end: f64, CAA and emulated runs over both residual models,
+    // with the CAA bound dominating the emulated deviation (the soundness
+    // sandwich, now across merge points).
+    for model in [zoo::residual_mlp(21), zoo::residual_cnn(22)] {
+        let x = rand_input(&model, 13);
+        let plan = Plan::for_analysis(&model).unwrap();
+        let mut arena = Arena::new();
+        let yr = plan.execute::<f64>(&(), &x, &mut arena).unwrap().to_vec();
+        assert_eq!(yr.len(), plan.output_len());
+        assert!(yr.iter().all(|v| v.is_finite()));
+
+        let ctx = Ctx::new();
+        let xc: Vec<Caa> =
+            x.iter().map(|&v| Caa::input(&ctx, Interval::point(v), v)).collect();
+        let mut caa_arena = Arena::new();
+        let yc = plan.execute::<Caa>(&ctx, &xc, &mut caa_arena).unwrap().to_vec();
+        for k in [10u32, 16] {
+            let ec = EmuCtx { k };
+            let xe: Vec<EmulatedFp> = x.iter().map(|&v| EmulatedFp::new(v, k)).collect();
+            let mut emu_arena = Arena::new();
+            let ye = plan.execute::<EmulatedFp>(&ec, &xe, &mut emu_arena).unwrap();
+            for i in 0..yr.len() {
+                crate::quant::check_against_bounds(&yc[i], yr[i], ye[i].v, k, 1e-12)
+                    .unwrap_or_else(|e| panic!("{} k={k} output {i}: {e}", model.name));
+            }
+        }
     }
 }
 

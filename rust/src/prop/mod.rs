@@ -13,7 +13,9 @@ use crate::util::Rng;
 /// Configuration for a property run.
 #[derive(Clone, Copy)]
 pub struct Config {
+    /// Number of random cases to run.
     pub cases: u32,
+    /// Seed of the first case (case i uses `base_seed + i`).
     pub base_seed: u64,
 }
 

@@ -53,11 +53,14 @@ pub fn round_to_precision(x: f64, k: u32) -> f64 {
 /// to *execute* the network the way a precision-k FPU would.
 #[derive(Clone, Copy, Debug)]
 pub struct EmulatedFp {
+    /// The current value (always exactly representable in k bits).
     pub v: f64,
+    /// Mantissa width this scalar rounds to.
     pub k: u32,
 }
 
 impl EmulatedFp {
+    /// Round `x` into the k-bit format.
     pub fn new(x: f64, k: u32) -> Self {
         EmulatedFp { v: round_to_precision(x, k), k }
     }
@@ -66,54 +69,67 @@ impl EmulatedFp {
         EmulatedFp { v: round_to_precision(x, self.k), k: self.k }
     }
 
+    /// Rounded addition.
     pub fn add(self, o: Self) -> Self {
         self.wrap(self.v + o.v)
     }
 
+    /// Rounded subtraction.
     pub fn sub(self, o: Self) -> Self {
         self.wrap(self.v - o.v)
     }
 
+    /// Rounded multiplication.
     pub fn mul(self, o: Self) -> Self {
         self.wrap(self.v * o.v)
     }
 
+    /// Rounded division.
     pub fn div(self, o: Self) -> Self {
         self.wrap(self.v / o.v)
     }
 
+    /// Rounded exponential.
     pub fn exp(self) -> Self {
         self.wrap(self.v.exp())
     }
 
+    /// Rounded natural logarithm.
     pub fn ln(self) -> Self {
         self.wrap(self.v.ln())
     }
 
+    /// Rounded square root.
     pub fn sqrt(self) -> Self {
         self.wrap(self.v.sqrt())
     }
 
+    /// Rounded hyperbolic tangent.
     pub fn tanh(self) -> Self {
         self.wrap(self.v.tanh())
     }
 
+    /// Rounded logistic sigmoid.
     pub fn sigmoid(self) -> Self {
         self.wrap(1.0 / (1.0 + (-self.v).exp()))
     }
 
+    /// Exact maximum (selection never rounds).
     pub fn max(self, o: Self) -> Self {
         EmulatedFp { v: self.v.max(o.v), k: self.k }
     }
 
+    /// Exact minimum (selection never rounds).
     pub fn min(self, o: Self) -> Self {
         EmulatedFp { v: self.v.min(o.v), k: self.k }
     }
 
+    /// Exact ReLU (max with the representable 0).
     pub fn relu(self) -> Self {
         EmulatedFp { v: self.v.max(0.0), k: self.k }
     }
 
+    /// Exact negation (sign flips never round).
     pub fn neg(self) -> Self {
         EmulatedFp { v: -self.v, k: self.k }
     }

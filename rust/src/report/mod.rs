@@ -22,14 +22,20 @@ pub fn fmt_bound_u(b: f64) -> String {
 /// One row of the Table-I reproduction.
 #[derive(Clone, Debug)]
 pub struct TableRow {
+    /// Model name.
     pub name: String,
+    /// Worst absolute bound, units of u.
     pub max_abs_u: f64,
+    /// Worst relative bound, units of u (+inf prints as `-`).
     pub max_rel_u: f64,
+    /// Average per-class analysis time.
     pub time_per_class: Duration,
+    /// Minimum certified precision, if any.
     pub required_k: Option<u32>,
 }
 
 impl TableRow {
+    /// Project a [`ModelAnalysis`] onto its Table-I row.
     pub fn from_analysis(a: &ModelAnalysis) -> TableRow {
         TableRow {
             name: a.model_name.clone(),

@@ -24,6 +24,7 @@ use std::path::{Path, PathBuf};
 /// A compiled artifact ready to execute.
 pub struct LoadedExec {
     exe: xla::PjRtLoadedExecutable,
+    /// The manifest entry this executable was compiled from.
     pub entry: ArtifactEntry,
 }
 
@@ -63,6 +64,7 @@ impl LoadedExec {
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// The artifact manifest the runtime serves.
     pub manifest: Manifest,
     cache: HashMap<(String, String), std::rc::Rc<LoadedExec>>,
 }
@@ -86,6 +88,7 @@ impl Runtime {
         super::artifacts_available()
     }
 
+    /// Name of the PJRT platform serving the runtime.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -19,23 +19,28 @@ use std::path::Path;
 /// One AOT-compiled computation.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactEntry {
+    /// Model name the artifact belongs to.
     pub name: String,
     /// `"f32"` for the reference inference, `"k<bits>"` for emulated
     /// precision-k variants (the Pallas roundk kernel baked into the HLO).
     pub variant: String,
     /// HLO text file, relative to the artifacts directory.
     pub path: String,
+    /// Shape of the computation's input.
     pub input_shape: Vec<usize>,
+    /// Shape of the computation's output.
     pub output_shape: Vec<usize>,
 }
 
 /// The parsed manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// All exported computations, in export order.
     pub artifacts: Vec<ArtifactEntry>,
 }
 
 impl Manifest {
+    /// Parse the manifest JSON the Python exporter writes.
     pub fn from_json(v: &Value) -> Result<Manifest> {
         let arr = v
             .get("artifacts")
@@ -65,12 +70,14 @@ impl Manifest {
         Ok(Manifest { artifacts })
     }
 
+    /// Load and parse a manifest file.
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading manifest {}", path.display()))?;
         Manifest::from_json(&crate::json::parse(&text)?)
     }
 
+    /// The entry for `(name, variant)`, if exported.
     pub fn find(&self, name: &str, variant: &str) -> Option<&ArtifactEntry> {
         self.artifacts
             .iter()

@@ -16,6 +16,7 @@ use crate::quant::EmulatedFp;
 /// per-analysis configuration (the CAA context; `()` for plain floats; the
 /// precision for emulated FP).
 pub trait Scalar: Clone {
+    /// Per-analysis configuration threaded through every operation.
     type Ctx: Sync;
 
     /// Embed a learned parameter (pays a representation rounding).
@@ -23,15 +24,25 @@ pub trait Scalar: Clone {
     /// Embed an exactly-representable constant (0, 1, small integers).
     fn exact(ctx: &Self::Ctx, x: f64) -> Self;
 
+    /// Addition in the target arithmetic.
     fn add(&self, o: &Self, ctx: &Self::Ctx) -> Self;
+    /// Subtraction in the target arithmetic.
     fn sub(&self, o: &Self, ctx: &Self::Ctx) -> Self;
+    /// Multiplication in the target arithmetic.
     fn mul(&self, o: &Self, ctx: &Self::Ctx) -> Self;
+    /// Division in the target arithmetic.
     fn div(&self, o: &Self, ctx: &Self::Ctx) -> Self;
+    /// Exponential in the target arithmetic.
     fn exp(&self, ctx: &Self::Ctx) -> Self;
+    /// Square root in the target arithmetic.
     fn sqrt(&self, ctx: &Self::Ctx) -> Self;
+    /// Hyperbolic tangent in the target arithmetic.
     fn tanh(&self, ctx: &Self::Ctx) -> Self;
+    /// Logistic sigmoid in the target arithmetic.
     fn sigmoid(&self, ctx: &Self::Ctx) -> Self;
+    /// ReLU in the target arithmetic.
     fn relu(&self, ctx: &Self::Ctx) -> Self;
+    /// Binary maximum in the target arithmetic.
     fn max(&self, o: &Self, ctx: &Self::Ctx) -> Self;
 
     /// Maximum over a slice. The CAA implementation additionally labels
@@ -115,6 +126,7 @@ impl Scalar for f64 {
 /// Context for emulated precision-k runs: the mantissa bit count.
 #[derive(Clone, Copy, Debug)]
 pub struct EmuCtx {
+    /// Mantissa width of the emulated format.
     pub k: u32,
 }
 
@@ -224,36 +236,44 @@ pub struct Tensor<S> {
 }
 
 impl<S: Clone> Tensor<S> {
+    /// A tensor from a shape and its row-major data (lengths must agree).
     pub fn new(shape: Vec<usize>, data: Vec<S>) -> Tensor<S> {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape, data }
     }
 
+    /// A tensor with every element set to `v`.
     pub fn filled(shape: Vec<usize>, v: S) -> Tensor<S> {
         let n = shape.iter().product();
         Tensor { shape, data: vec![v; n] }
     }
 
+    /// The tensor's shape.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// The flat row-major data.
     pub fn data(&self) -> &[S] {
         &self.data
     }
 
+    /// Mutable flat row-major data.
     pub fn data_mut(&mut self) -> &mut [S] {
         &mut self.data
     }
 
+    /// Consume the tensor, yielding its data vector.
     pub fn into_data(self) -> Vec<S> {
         self.data
     }
@@ -269,10 +289,12 @@ impl<S: Clone> Tensor<S> {
         off
     }
 
+    /// Element at a multi-index.
     pub fn at(&self, idx: &[usize]) -> &S {
         &self.data[self.offset(idx)]
     }
 
+    /// Mutable element at a multi-index.
     pub fn at_mut(&mut self, idx: &[usize]) -> &mut S {
         let off = self.offset(idx);
         &mut self.data[off]
@@ -289,6 +311,7 @@ impl<S: Clone> Tensor<S> {
         self
     }
 
+    /// Elementwise map into a new tensor of the same shape.
     pub fn map<T: Clone>(&self, f: impl Fn(&S) -> T) -> Tensor<T> {
         Tensor { shape: self.shape.clone(), data: self.data.iter().map(f).collect() }
     }

@@ -9,7 +9,12 @@
 //!   bit-identical to the pre-refactor per-layer interpreter on the digits
 //!   workload — fusion must never silently tighten (or loosen) bounds;
 //! * the `Session` front door produces the same outcome as the interpreter
-//!   oracle, serial and pooled.
+//!   oracle, serial and pooled;
+//! * **graph topologies** (PR "graph-topology Plan IR"): sequential models
+//!   still compile to exactly two pool buffers, residual plans match
+//!   hand-written walks bitwise, CAA bounds enclose sampled runs across
+//!   merge points, malformed graph JSON is rejected descriptively, and
+//!   both residual zoo models run/certify/tune through `Session`.
 
 #![allow(deprecated)] // Model::forward_interpreted is the equivalence oracle
 
@@ -55,7 +60,8 @@ fn every_zoo_network_compiles_with_legacy_shapes() {
             }
             for step in plan.steps() {
                 assert_eq!(
-                    step.in_shape, legacy[step.layer_range.0],
+                    step.in_shape(),
+                    legacy[step.layer_range.0].as_slice(),
                     "{}/{fusion:?}: step input shape",
                     model.name
                 );
@@ -185,6 +191,227 @@ fn session_outcome_identical_to_interpreter_oracle() {
         let out = session.run(&req).unwrap();
         assert_eq!(out.analysis.max_abs_u.to_bits(), oracle_abs.to_bits(), "{mode:?}");
         assert_eq!(out.analysis.max_rel_u.to_bits(), oracle_rel.to_bits(), "{mode:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Graph-topology plans (PR "graph-topology Plan IR"): buffer-pool
+// regression, hand-walked residual equivalence, merge-point soundness,
+// malformed-graph rejection, and the Session front door on branchy models.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sequential_models_still_compile_to_two_pool_buffers() {
+    // No-regression guarantee of the pool allocator: straight-line models
+    // keep the exact two-buffer ping-pong (and with it, the steady-state
+    // allocation profile) at every fusion level.
+    for model in zoo_models() {
+        for fusion in [Fusion::None, Fusion::Pair, Fusion::Full] {
+            let plan = Plan::build(&model, fusion).unwrap();
+            assert_eq!(plan.buffer_count(), 2, "{} at {fusion:?}", model.name);
+        }
+    }
+}
+
+#[test]
+fn residual_mlp_matches_hand_written_walk_bitwise() {
+    // Oracle for the graph executor: evaluate residual_mlp by hand with
+    // the per-layer interpreter pieces plus explicit merge arithmetic,
+    // and require bit-identical f64 outputs from the compiled plan (both
+    // unfused and paired — pairing must not change the arithmetic).
+    let m = zoo::residual_mlp(33);
+    let mut rng = Rng::new(4);
+    let x: Vec<f64> = (0..8).map(|_| rng.range(0.0, 1.0)).collect();
+
+    let t = |v: Vec<f64>| Tensor::new(vec![8], v);
+    let d1 = m.layers[0].apply(&(), &t(x.clone())).unwrap();
+    let a1 = m.layers[1].apply(&(), &d1).unwrap();
+    let d2 = m.layers[2].apply(&(), &a1).unwrap();
+    // add1 = d2 + a1 (left-to-right in declared inbound order), then ReLU.
+    let sum: Vec<f64> = d2.data().iter().zip(a1.data()).map(|(p, q)| p + q).collect();
+    let a2: Vec<f64> = sum.iter().map(|v| v.max(0.0)).collect();
+    let d3 = m.layers[5].apply(&(), &t(a2)).unwrap();
+    let oracle = m.layers[6].apply(&(), &d3).unwrap();
+
+    for fusion in [Fusion::None, Fusion::Pair] {
+        let plan = Plan::build(&m, fusion).unwrap();
+        let mut arena = Arena::new();
+        let got = plan.execute::<f64>(&(), &x, &mut arena).unwrap();
+        assert_eq!(got, oracle.data(), "{fusion:?} must match the hand walk bitwise");
+    }
+}
+
+#[test]
+fn residual_cnn_matches_hand_written_walk_bitwise() {
+    let m = zoo::residual_cnn(34);
+    let mut rng = Rng::new(5);
+    let x: Vec<f64> = (0..36).map(|_| rng.range(0.0, 1.0)).collect();
+
+    let c1 = m.layers[0].apply(&(), &Tensor::new(vec![6, 6, 1], x.clone())).unwrap();
+    let b1 = m.layers[1].apply(&(), &c1).unwrap();
+    let r1 = m.layers[2].apply(&(), &b1).unwrap();
+    let c2 = m.layers[3].apply(&(), &r1).unwrap();
+    let sum: Vec<f64> = c2.data().iter().zip(r1.data()).map(|(p, q)| p + q).collect();
+    let r2 = Tensor::new(vec![6, 6, 4], sum.iter().map(|v| v.max(0.0)).collect::<Vec<f64>>());
+    let c3 = m.layers[6].apply(&(), &r2).unwrap();
+    let c4 = m.layers[7].apply(&(), &r2).unwrap();
+    // concat along channels: per spatial position, c3's 2 channels then
+    // c4's 2 channels.
+    let mut cat = Vec::with_capacity(36 * 4);
+    for p in 0..36 {
+        cat.extend_from_slice(&c3.data()[p * 2..(p + 1) * 2]);
+        cat.extend_from_slice(&c4.data()[p * 2..(p + 1) * 2]);
+    }
+    let r3 = Tensor::new(vec![6, 6, 4], cat.iter().map(|v| v.max(0.0)).collect::<Vec<f64>>());
+    let p1 = m.layers[10].apply(&(), &r3).unwrap();
+    let f1 = m.layers[11].apply(&(), &p1).unwrap();
+    let d1 = m.layers[12].apply(&(), &f1).unwrap();
+    let oracle = m.layers[13].apply(&(), &d1).unwrap();
+
+    for fusion in [Fusion::None, Fusion::Pair] {
+        let plan = Plan::build(&m, fusion).unwrap();
+        let mut arena = Arena::new();
+        let got = plan.execute::<f64>(&(), &x, &mut arena).unwrap();
+        assert_eq!(got, oracle.data(), "{fusion:?} must match the hand walk bitwise");
+    }
+}
+
+#[test]
+fn merge_bounds_enclose_sampled_emulated_runs() {
+    // Soundness across merge points: the CAA interval enclosure contains
+    // every sampled precision-k execution, and the absolute/relative
+    // error bounds dominate the observed deviation from the f64 trace.
+    for model in [zoo::residual_mlp(51), zoo::residual_cnn(52)] {
+        let plan = Plan::for_analysis(&model).unwrap();
+        let n: usize = model.input_shape.iter().product();
+        let mut rng = Rng::new(77);
+        for sample in 0..3 {
+            let x: Vec<f64> = (0..n).map(|_| rng.range(0.0, 1.0)).collect();
+            let mut arena = Arena::new();
+            let yr = plan.execute::<f64>(&(), &x, &mut arena).unwrap().to_vec();
+
+            let ctx = Ctx::new();
+            let xc: Vec<Caa> =
+                x.iter().map(|&v| Caa::input(&ctx, Interval::point(v), v)).collect();
+            let mut caa_arena = Arena::new();
+            let yc = plan.execute::<Caa>(&ctx, &xc, &mut caa_arena).unwrap().to_vec();
+
+            for k in [8u32, 12, 16] {
+                let emu = rigor::quant::emulated_forward(&plan, k, &x).unwrap();
+                for i in 0..yr.len() {
+                    assert!(
+                        yc[i].rounded().inflate(1e-9).contains(emu[i]),
+                        "{} sample {sample} k={k} output {i}: emulated value \
+                         outside the rounded enclosure",
+                        model.name
+                    );
+                    rigor::quant::check_against_bounds(&yc[i], yr[i], emu[i], k, 1e-12)
+                        .unwrap_or_else(|e| {
+                            panic!("{} sample {sample} k={k} output {i}: {e}", model.name)
+                        });
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn malformed_graph_json_reports_descriptive_errors() {
+    use rigor::model::model_from_json;
+    // A cycle (d1 -> d2 -> d1) with an explicit output node.
+    let cycle = r#"{
+        "name": "m", "input_shape": [2], "output": "s",
+        "layers": [
+            {"type": "dense", "units": 2, "in": 2,
+             "weights": [1, 0, 0, 1], "bias": [0, 0],
+             "name": "d1", "inbound": ["d2"]},
+            {"type": "dense", "units": 2, "in": 2,
+             "weights": [1, 0, 0, 1], "bias": [0, 0],
+             "name": "d2", "inbound": ["d1"]},
+            {"type": "add", "name": "s", "inbound": ["d1", "d2"]}
+        ]
+    }"#;
+    let err = model_from_json(&rigor::json::parse(cycle).unwrap()).unwrap_err();
+    assert!(format!("{err:#}").contains("cycle"), "{err:#}");
+
+    // A dangling edge: inbound references a node that does not exist.
+    let dangling = r#"{
+        "name": "m", "input_shape": [2],
+        "layers": [
+            {"type": "dense", "units": 2, "in": 2,
+             "weights": [1, 0, 0, 1], "bias": [0, 0],
+             "name": "d1", "inbound": ["missing_node"]}
+        ]
+    }"#;
+    let err = model_from_json(&rigor::json::parse(dangling).unwrap()).unwrap_err();
+    let chain = format!("{err:#}");
+    assert!(
+        chain.contains("missing_node") && chain.contains("dangling"),
+        "{chain}"
+    );
+}
+
+#[test]
+fn residual_models_run_certify_and_tune_through_session() {
+    // The acceptance path: both residual zoo models flow through the
+    // Session front door end to end — run (serial + pooled), the §V
+    // certify loop, and §VI greedy mixed tuning — with finite bounds.
+    let session = Session::builder().workers(2).build();
+    for model in [zoo::residual_mlp(42), zoo::residual_cnn(43)] {
+        let n: usize = model.input_shape.iter().product();
+        let mut rng = Rng::new(9);
+        let inputs: Vec<Vec<f64>> =
+            (0..3).map(|_| (0..n).map(|_| rng.range(0.0, 1.0)).collect()).collect();
+        let data = Dataset {
+            input_shape: model.input_shape.clone(),
+            inputs,
+            labels: vec![0, 1, 2],
+        };
+
+        for mode in [ExecMode::Serial, ExecMode::Pooled { workers: 0 }] {
+            let req = AnalysisRequest::builder()
+                .model(model.clone())
+                .data(data.clone())
+                .mode(mode)
+                .build()
+                .unwrap();
+            let out = session.run(&req).unwrap();
+            assert_eq!(out.analysis.per_class.len(), 3, "{}", model.name);
+            assert!(
+                out.analysis.max_abs_u.is_finite() && out.analysis.max_abs_u > 0.0,
+                "{} ({mode:?}): finite positive CAA bound",
+                model.name
+            );
+        }
+
+        let req = AnalysisRequest::builder()
+            .model(model.clone())
+            .data(data.clone())
+            .p_star(0.60)
+            .build()
+            .unwrap();
+        let (k, outcome) = session
+            .certify_min_precision(&req, 4..=44)
+            .unwrap()
+            .unwrap_or_else(|| panic!("{} must certify in [4, 44]", model.name));
+        assert!(outcome.required_k().unwrap() <= k, "{}", model.name);
+        assert!(outcome.analysis.max_abs_u.is_finite());
+
+        let k_uniform = (k + 4).min(53);
+        let tuned = session.tune_mixed(&req, k_uniform, 4).unwrap();
+        assert!(tuned.certified, "{}: tuned assignment stays certified", model.name);
+        assert!(tuned.max_abs.is_finite());
+        assert_eq!(tuned.ks.len(), model.layers.len());
+        assert!(tuned.ks.iter().all(|&kk| kk <= k_uniform), "{}", model.name);
+
+        // Baselines run on graph models through the same compiled plan.
+        let cfg = req.analysis_config();
+        let ia = rigor::analysis::baseline::ia_only_class(&model, &cfg, 0, &data.inputs[0])
+            .unwrap();
+        assert!(ia.max_abs_u > 0.0, "{}: IA-only baseline", model.name);
+        let (obs_abs, _) =
+            rigor::analysis::baseline::sampling_estimate(&model, 12, &data.inputs).unwrap();
+        assert!(obs_abs.is_finite(), "{}: sampling baseline", model.name);
     }
 }
 
