@@ -1,85 +1,118 @@
-//! E-acc-vs-k: the motivating observation of the paper — top-1 agreement
-//! with the f32 reference stays high down to "ridiculously low" precision —
-//! measured over the AOT-compiled emulated-precision artifacts (Pallas
-//! roundk baked into the graph) for all three models, served through the
-//! PJRT runtime.
+//! E-acc-vs-k, engine edition: the motivating observation of the paper —
+//! top-1 agreement with the reference stays high down to "ridiculously
+//! low" precision — measured entirely through the **batched** execution
+//! subsystem:
 //!
-//! Needs the `pjrt` feature, which also requires adding the `xla`
-//! dependency by hand first (see the feature comment in rust/Cargo.toml —
-//! the offline registry snapshot does not carry it).
-//! Run: `make artifacts && cargo run --release --features pjrt --example precision_sweep`
+//! * bulk per-sample CAA outcomes via [`Session::run_batch`] (one
+//!   micro-batched service call instead of re-driving the plan per
+//!   sample),
+//! * the emulated-k witness sweep via [`Plan::execute_batch`] (one plan
+//!   drive per precision for the whole sample set, f64 reference
+//!   included).
+//!
+//! Runs offline on zoo models — no `pjrt` feature or AOT artifacts needed
+//! (the PJRT sweep over trained artifacts lives in `rigor sweep` /
+//! `benches/precision_sweep.rs`).
+//! Run: `cargo run --release --example precision_sweep`
 
+use rigor::api::{AnalysisRequest, ExecMode, Session};
 use rigor::data::Dataset;
-use rigor::quant::unit_roundoff;
-use rigor::runtime::Runtime;
+use rigor::model::zoo;
+use rigor::plan::{Arena, Plan};
+use rigor::quant::{unit_roundoff, EmulatedFp};
+use rigor::tensor::EmuCtx;
+use rigor::util::Rng;
 
 fn main() -> anyhow::Result<()> {
-    if !rigor::runtime::artifacts_available() {
-        anyhow::bail!("artifacts missing — run `make artifacts` first");
-    }
-    let dir = rigor::runtime::default_dir();
-    let mut rt = Runtime::open(&dir)?;
+    let session = Session::new();
+    for model in [zoo::scaled_mlp(7, 64, 48, 10), zoo::residual_mlp(9)] {
+        let n: usize = model.input_shape.iter().product();
+        let classes = *model.output_shape()?.last().unwrap();
+        let mut rng = Rng::new(17);
+        let samples: Vec<Vec<f64>> = (0..48)
+            .map(|_| (0..n).map(|_| rng.range(0.0, 1.0)).collect())
+            .collect();
+        let labels: Vec<usize> = (0..samples.len()).map(|i| i % classes).collect();
+        let data = Dataset {
+            input_shape: model.input_shape.clone(),
+            inputs: samples.clone(),
+            labels,
+        };
+        println!("\n== {} ({} samples) ==", model.name, samples.len());
 
-    for name in ["digits", "mobilenet_mini"] {
-        let data = Dataset::load(&dir.join("data").join(format!("{name}_eval.json")))?;
-        let ks = rt.precision_variants(name);
-        println!("\n== {name} ({} samples) ==", data.len());
+        // Bulk per-sample CAA analysis: one service call, chunked into
+        // micro-batches of 16 and fanned over the session pool.
+        let req = AnalysisRequest::builder()
+            .model(model.clone())
+            .data(data)
+            .max_batch(16)
+            .mode(ExecMode::Pooled { workers: 0 })
+            .build()?;
+        let outcomes = session.run_batch(&req)?;
+        let worst_abs = outcomes
+            .iter()
+            .map(|o| o.analysis.max_abs_u)
+            .fold(0.0f64, f64::max);
+        let certified = outcomes.iter().filter(|o| o.required_k().is_some()).count();
+        let worst_k = outcomes.iter().filter_map(|o| o.required_k()).max();
         println!(
-            "{:>4} {:>12} {:>16} {:>16} {:>12}",
-            "k", "u=2^(1-k)", "top-1 agreement", "max |prob dev|", "top-1 acc"
+            "per-sample CAA: worst abs bound {worst_abs:.3e} u; {certified}/{} samples \
+             certify a precision (worst required k = {worst_k:?})",
+            outcomes.len()
         );
-        for &k in &ks {
-            let mut agree = 0;
-            let mut correct = 0;
-            let mut max_dev = 0.0f32;
-            for (sample, label) in data.inputs.iter().zip(&data.labels) {
-                let s: Vec<f32> = sample.iter().map(|&v| v as f32).collect();
-                let r = rt.run(name, "f32", &s)?;
-                let e = rt.run(name, &format!("k{k}"), &s)?;
-                if argmax(&r) == argmax(&e) {
+
+        // Witness sweep: emulated precision-k vs the f64 reference, each
+        // pass one batched plan drive over all samples (unfused plan: the
+        // witness must match the analyzed computation).
+        let plan = Plan::unfused(&model)?;
+        let b = samples.len();
+        let m = plan.output_len();
+        let flat: Vec<f64> = samples.concat();
+        let mut ref_arena: Arena<f64> = Arena::new();
+        let yr = plan.execute_batch::<f64>(&(), &flat, b, &mut ref_arena)?.to_vec();
+        println!(
+            "{:>4} {:>12} {:>16} {:>16}",
+            "k", "u=2^(1-k)", "top-1 agreement", "max |dev|"
+        );
+        let mut emu_arena: Arena<EmulatedFp> = Arena::new();
+        for k in [4u32, 6, 8, 10, 12, 16, 20] {
+            let ec = EmuCtx { k };
+            let xe: Vec<EmulatedFp> = flat.iter().map(|&v| EmulatedFp::new(v, k)).collect();
+            let ye = plan.execute_batch::<EmulatedFp>(&ec, &xe, b, &mut emu_arena)?;
+            let mut agree = 0usize;
+            let mut max_dev = 0.0f64;
+            for s in 0..b {
+                let r = &yr[s * m..(s + 1) * m];
+                let e = &ye[s * m..(s + 1) * m];
+                if argmax(r) == argmax_emulated(e) {
                     agree += 1;
                 }
-                if argmax(&e) == *label {
-                    correct += 1;
-                }
-                for (a, b) in r.iter().zip(&e) {
-                    max_dev = max_dev.max((a - b).abs());
+                for (a, c) in r.iter().zip(e) {
+                    max_dev = max_dev.max((a - c.v).abs());
                 }
             }
             println!(
-                "{k:>4} {:>12.3e} {:>13}/{:<3} {max_dev:>16.3e} {:>9}/{:<3}",
-                unit_roundoff(k),
-                agree,
-                data.len(),
-                correct,
-                data.len()
+                "{k:>4} {:>12.3e} {agree:>13}/{b:<3} {max_dev:>16.3e}",
+                unit_roundoff(k)
             );
         }
-    }
-
-    // Pendulum: regression deviation instead of classification agreement.
-    let data = Dataset::load(&dir.join("data/pendulum_eval.json"))?;
-    let ks = rt.precision_variants("pendulum");
-    println!("\n== pendulum ({} grid points) ==", data.len());
-    println!("{:>4} {:>12} {:>16}", "k", "u=2^(1-k)", "max |V dev|");
-    for &k in &ks {
-        let mut max_dev = 0.0f32;
-        for sample in &data.inputs {
-            let s: Vec<f32> = sample.iter().map(|&v| v as f32).collect();
-            let r = rt.run("pendulum", "f32", &s)?;
-            let e = rt.run("pendulum", &format!("k{k}"), &s)?;
-            max_dev = max_dev.max((r[0] - e[0]).abs());
-        }
-        println!("{k:>4} {:>12.3e} {max_dev:>16.3e}", unit_roundoff(k));
     }
     println!("\nExpected shape: agreement ~100% down to k≈8, degrading only below (paper §I/§IV).");
     Ok(())
 }
 
-fn argmax(xs: &[f32]) -> usize {
+fn argmax(xs: &[f64]) -> usize {
     xs.iter()
         .enumerate()
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+fn argmax_emulated(xs: &[EmulatedFp]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.v.partial_cmp(&b.1.v).unwrap())
         .unwrap()
         .0
 }

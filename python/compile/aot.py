@@ -163,6 +163,63 @@ def export_pendulum(params):
     }
 
 
+# ---------------------------------------------------------------------------
+# graph (non-sequential) wiring — frugally-deep-style name/inbound edges,
+# matching rust/src/model/json_fmt.rs ("Graph (non-sequential) models")
+# ---------------------------------------------------------------------------
+
+def wired(layer, name, inbound):
+    """Attach graph wiring to a layer dict: a unique ``name`` and the
+    ``inbound`` list of producer names (the reserved name ``"input"`` is
+    the model input). Returns a new dict; wiring keys come first so the
+    exported JSON reads topology-first."""
+    out = {"name": name, "inbound": list(inbound)}
+    out.update(layer)
+    return out
+
+
+def export_graph_model(name, input_shape, layers, output):
+    """Assemble a graph-wired model JSON. The Rust loader's contract is
+    all-or-nothing wiring, so every layer must have passed through
+    :func:`wired`; ``output`` names the output node."""
+    for i, layer in enumerate(layers):
+        if "name" not in layer or "inbound" not in layer:
+            raise ValueError(
+                f"graph models need 'name'/'inbound' on every layer (layer {i} lacks them)"
+            )
+    names = [l["name"] for l in layers]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate layer names in graph export: {names}")
+    if output not in names:
+        raise ValueError(f"output node '{output}' is not a layer name")
+    return {
+        "name": name,
+        "input_shape": list(input_shape),
+        "output": output,
+        "layers": list(layers),
+    }
+
+
+def export_residual_mlp(params):
+    """The residual block (`model.residual_mlp_fwd`) through the same JSON
+    channel as the zoo builders: an `add` merge joins the block output with
+    its skip source, inbound order pinning the accumulation order."""
+    return export_graph_model(
+        "residual_mlp",
+        [8],
+        [
+            wired(_dense_layer(params["w1"], params["b1"]), "d1", ["input"]),
+            wired({"type": "relu"}, "a1", ["d1"]),
+            wired(_dense_layer(params["w2"], params["b2"]), "d2", ["a1"]),
+            wired({"type": "add"}, "add1", ["d2", "a1"]),
+            wired({"type": "relu"}, "a2", ["add1"]),
+            wired(_dense_layer(params["w3"], params["b3"]), "d3", ["a2"]),
+            wired({"type": "softmax"}, "out", ["d3"]),
+        ],
+        "out",
+    )
+
+
 def _dataset_json(input_shape, inputs, labels=None):
     d = {
         "input_shape": list(input_shape),
@@ -253,6 +310,23 @@ def build(out_dir: str, quick: bool = False, ks=None, verbose=True):
     with open(os.path.join(out_dir, "data", "pendulum_eval.json"), "w") as f:
         json.dump(_dataset_json([2], x_eval), f)
     emit("pendulum", model.pendulum_fwd, params, (2,), (1,))
+
+    # ---- residual_mlp (graph-wired JSON channel) --------------------------
+    # A Keras-functional-style residual block exported with name/inbound
+    # wiring — the same channel the Rust zoo's graph models use. Weights
+    # are Glorot-initialized (the workload here is the topology and the
+    # export path, not accuracy); the HLO variants exercise the identical
+    # skip-add computation under storage emulation.
+    log("[residual_mlp] exporting graph-wired block ...")
+    params = model.init_residual_mlp(rng)
+    with open(os.path.join(out_dir, "models", "residual_mlp.json"), "w") as f:
+        json.dump(export_residual_mlp(params), f)
+    eval_rng = np.random.RandomState(779)
+    x_eval = eval_rng.uniform(0.0, 1.0, size=(12, 8)).astype("float32")
+    y_eval = [i % 3 for i in range(12)]
+    with open(os.path.join(out_dir, "data", "residual_mlp_eval.json"), "w") as f:
+        json.dump(_dataset_json([8], x_eval, y_eval), f)
+    emit("residual_mlp", model.residual_mlp_fwd, params, (8,), (3,))
 
     # ---- standalone roundk kernel artifacts (Rust <-> Pallas cross-check)
     from .kernels import round_to_precision

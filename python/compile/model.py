@@ -168,6 +168,20 @@ def init_pendulum(rng):
     }
 
 
+def init_residual_mlp(rng):
+    # One additive skip block (Keras-functional style): the topology the
+    # Rust zoo's `residual_mlp` uses, exported through the graph-wired JSON
+    # channel (aot.export_residual_mlp).
+    return {
+        "w1": _glorot(rng, 8, 8, (8, 8)),
+        "b1": jnp.zeros(8, jnp.float32),
+        "w2": _glorot(rng, 8, 8, (8, 8)),
+        "b2": jnp.zeros(8, jnp.float32),
+        "w3": _glorot(rng, 8, 3, (8, 3)),
+        "b3": jnp.zeros(3, jnp.float32),
+    }
+
+
 # ---------------------------------------------------------------------------
 # forward passes (single-sample; batched training wrappers use vmap)
 # ---------------------------------------------------------------------------
@@ -219,6 +233,19 @@ def pendulum_fwd(params, x, k=None):
     return _maybe_round(jnp.tanh(dense_kernel(h, p["w2"], p["b2"])), k)
 
 
+def residual_mlp_fwd(params, x, k=None):
+    """``x: [8]`` -> 3-class softmax through one additive residual block:
+    ``a1 = relu(d1(x)); a2 = relu(d2(a1) + a1); softmax(d3(a2))``. The skip
+    add accumulates left to right in declared inbound order — the rounding
+    profile the Rust merge kernel (`layers::merge::add_assign_into`) pins."""
+    p = {n: _maybe_round(v, k) for n, v in params.items()}
+    a1 = _maybe_round(jnp.maximum(dense_kernel(x, p["w1"], p["b1"]), 0.0), k)
+    d2 = _maybe_round(dense_kernel(a1, p["w2"], p["b2"]), k)
+    a2 = _maybe_round(jnp.maximum(d2 + a1, 0.0), k)
+    logits = _maybe_round(dense_kernel(a2, p["w3"], p["b3"]), k)
+    return _maybe_round(softmax(logits), k)
+
+
 MODELS = {
     "digits": {"fwd": digits_fwd, "init": init_digits, "input_shape": (784,), "output_shape": (10,)},
     "mobilenet_mini": {
@@ -232,5 +259,11 @@ MODELS = {
         "init": init_pendulum,
         "input_shape": (2,),
         "output_shape": (1,),
+    },
+    "residual_mlp": {
+        "fwd": residual_mlp_fwd,
+        "init": init_residual_mlp,
+        "input_shape": (8,),
+        "output_shape": (3,),
     },
 }

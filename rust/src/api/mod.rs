@@ -7,7 +7,12 @@
 //! versioned JSON serialization. Each cached model carries its compiled
 //! [`crate::plan::Plan`]; every analysis the session serves executes
 //! through that plan's arena-backed executor (one arena per worker
-//! thread), not the legacy per-layer interpreter.
+//! thread), not the legacy per-layer interpreter. Bulk workloads have two
+//! dedicated doors: [`Session::run_batch`] returns a per-sample
+//! [`AnalysisOutcome`] for every dataset sample in micro-batched chunks,
+//! and [`Session::serve`] spawns a [`crate::serve::MicroBatcher`] that
+//! coalesces individual inference requests into single batched plan
+//! drives.
 //!
 //! ```no_run
 //! use rigor::api::{AnalysisRequest, ExecMode, Session};
@@ -49,6 +54,7 @@ use crate::coordinator::Pool;
 use crate::data::Dataset;
 use crate::model::Model;
 use crate::plan::Plan;
+use crate::serve::{BatchPolicy, MicroBatcher};
 use crate::util::Stopwatch;
 use anyhow::Result;
 use std::path::Path;
@@ -57,7 +63,9 @@ use std::sync::{Arc, Mutex};
 /// A long-lived analysis service: worker pool + model cache. Cheap to keep
 /// around, safe to share behind an `Arc` (all methods take `&self`).
 pub struct Session {
-    pool: Pool,
+    /// Shared with [`MicroBatcher`]s spawned by [`Session::serve`], whose
+    /// flusher threads submit batch jobs after `&self` borrows end.
+    pool: Arc<Pool>,
     cache: Mutex<cache::ModelCache>,
     /// Compiled analysis plans for inline (`ModelRef::Inline`) models,
     /// keyed by the model allocation itself (`Weak<Model>`): repeated
@@ -95,7 +103,7 @@ impl SessionBuilder {
             None => Pool::with_default_workers(),
         };
         Session {
-            pool,
+            pool: Arc::new(pool),
             cache: Mutex::new(cache::ModelCache::new(self.cache_capacity)),
             inline_plans: Mutex::new(Vec::new()),
         }
@@ -121,7 +129,7 @@ impl Session {
 
     /// The session's shared worker pool (metrics, direct job submission).
     pub fn pool(&self) -> &Pool {
-        &self.pool
+        self.pool.as_ref()
     }
 
     /// Model-cache effectiveness counters.
@@ -307,6 +315,112 @@ impl Session {
         reqs.iter().map(|r| self.run(r)).collect()
     }
 
+    /// Bulk per-sample analysis: one [`AnalysisOutcome`] for **every**
+    /// sample of the request's dataset (where [`Session::run`] analyzes
+    /// one representative per class), scheduled in micro-batches of
+    /// [`AnalysisRequest::max_batch`] samples. Each chunk is one job —
+    /// run inline for [`ExecMode::Serial`], fanned over the pool for
+    /// [`ExecMode::Pooled`] — inside which the CAA runs stay per-sample
+    /// (`B = 1`; see the [`crate::serve`] docs for why CAA does not batch
+    /// its *arithmetic*) while the chunking amortizes job dispatch and
+    /// keeps each worker's plan/arena hot across consecutive samples.
+    /// Outcomes return in dataset order; each outcome's single per-class
+    /// entry carries the sample's label as `class` (falling back to the
+    /// dataset index when the sample has no label). The request's
+    /// progress callback streams every completed sample.
+    ///
+    /// ```
+    /// use rigor::api::{AnalysisRequest, Session};
+    /// use rigor::data::Dataset;
+    /// use rigor::model::zoo;
+    ///
+    /// let session = Session::builder().workers(1).build();
+    /// let data = Dataset {
+    ///     input_shape: vec![8],
+    ///     inputs: (0..5).map(|i| vec![i as f64 / 5.0; 8]).collect(),
+    ///     labels: vec![0, 1, 2, 0, 1],
+    /// };
+    /// let req = AnalysisRequest::builder()
+    ///     .model(zoo::tiny_mlp(3))
+    ///     .data(data)
+    ///     .max_batch(2)
+    ///     .build()?;
+    /// let outcomes = session.run_batch(&req)?;
+    /// assert_eq!(outcomes.len(), 5); // one per sample, in dataset order
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn run_batch(&self, req: &AnalysisRequest) -> Result<Vec<AnalysisOutcome>> {
+        let (model, plan, data) = self.resolve(req)?;
+        let cfg = req.analysis_config();
+        // Chunks are built directly from the dataset (each sample cloned
+        // once, into its chunk); a missing label falls back to the sample
+        // index rather than indexing out of bounds on hand-built datasets.
+        let chunk_size = req.max_batch.max(1);
+        let jobs: Vec<Vec<(usize, Vec<f64>)>> = (0..data.inputs.len())
+            .step_by(chunk_size)
+            .map(|start| {
+                (start..(start + chunk_size).min(data.inputs.len()))
+                    .map(|i| (data.labels.get(i).copied().unwrap_or(i), data.inputs[i].clone()))
+                    .collect()
+            })
+            .collect();
+        let run_chunk = {
+            let plan = Arc::clone(&plan);
+            let cfg = cfg.clone();
+            let progress = req.progress.clone();
+            move |chunk: Vec<(usize, Vec<f64>)>| -> Vec<Result<analysis::ClassAnalysis>> {
+                chunk
+                    .into_iter()
+                    .map(|(class, sample)| {
+                        let r = analysis::analyze_class_with_plan(&plan, &cfg, class, &sample);
+                        if let (Ok(c), Some(cb)) = (&r, &progress) {
+                            (cb.as_ref())(c);
+                        }
+                        r
+                    })
+                    .collect()
+            }
+        };
+        let chunk_results: Vec<Vec<Result<analysis::ClassAnalysis>>> = match req.mode {
+            ExecMode::Serial => jobs.into_iter().map(&run_chunk).collect(),
+            ExecMode::Pooled { workers } => {
+                if workers == 0 {
+                    self.pool.run_batch(jobs, run_chunk)
+                } else {
+                    Pool::new(workers, workers * 4).run_batch(jobs, run_chunk)
+                }
+            }
+        };
+        let mut outcomes = Vec::with_capacity(data.inputs.len());
+        for r in chunk_results.into_iter().flatten() {
+            let c = r?;
+            let secs = c.secs;
+            outcomes.push(AnalysisOutcome::new(analysis::aggregate(&model, &cfg, vec![c], secs)));
+        }
+        Ok(outcomes)
+    }
+
+    /// A [`MicroBatcher`] serving the request's model on this session's
+    /// worker pool: f64 inference traffic accumulated per the request's
+    /// [`max_batch`](AnalysisRequest::max_batch) /
+    /// [`max_wait`](AnalysisRequest::max_wait) knobs and executed as
+    /// single batched plan drives. The served plan is the session's cached
+    /// *analysis* plan, so every served trace is exactly the computation
+    /// the CAA bounds cover. The request's data reference is ignored —
+    /// serving traffic arrives through
+    /// [`MicroBatcher::submit`](crate::serve::MicroBatcher::submit).
+    pub fn serve(&self, req: &AnalysisRequest) -> Result<MicroBatcher> {
+        let plan = match &req.model {
+            ModelRef::Path(p) => self.load_compiled(p)?.1,
+            ModelRef::Inline(m) => self.inline_plan(m)?,
+        };
+        Ok(MicroBatcher::new(
+            plan,
+            Arc::clone(&self.pool),
+            BatchPolicy { max_batch: req.max_batch, max_wait: req.max_wait },
+        ))
+    }
+
     /// The paper's §V semi-automatic precision-tailoring loop: re-run the
     /// analysis at `u_max = 2^(1-k)` for each candidate `k` and return the
     /// smallest `k` whose own bounds certify at the request's `p*`, with
@@ -392,6 +506,104 @@ mod tests {
             assert_eq!(x.predicted, y.predicted);
         }
         assert_eq!(a.required_k, b.required_k);
+    }
+
+    #[test]
+    fn run_batch_matches_per_sample_analysis_in_both_modes() {
+        let session = Session::builder().workers(2).build();
+        let data = digits_like();
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(42))
+            .data(digits_like())
+            .max_batch(2)
+            .build()
+            .unwrap();
+        let outcomes = session.run_batch(&req).unwrap();
+        assert_eq!(outcomes.len(), data.inputs.len(), "one outcome per sample");
+
+        // Reference: the same per-sample analysis through a hand-compiled
+        // analysis plan.
+        let plan = crate::plan::Plan::for_analysis(&zoo::tiny_mlp(42)).unwrap();
+        let cfg = req.analysis_config();
+        for (i, out) in outcomes.iter().enumerate() {
+            let c = crate::analysis::analyze_class_with_plan(
+                &plan,
+                &cfg,
+                data.labels[i],
+                &data.inputs[i],
+            )
+            .unwrap();
+            assert_eq!(out.analysis.per_class.len(), 1);
+            assert_eq!(out.analysis.per_class[0].class, data.labels[i], "sample {i}");
+            assert_eq!(
+                out.analysis.max_abs_u.to_bits(),
+                c.max_abs_u.to_bits(),
+                "sample {i}: abs bound"
+            );
+            assert_eq!(
+                out.analysis.max_rel_u.to_bits(),
+                c.max_rel_u.to_bits(),
+                "sample {i}: rel bound"
+            );
+        }
+
+        // Pooled chunks agree exactly and preserve dataset order.
+        let req_pooled = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(42))
+            .data(digits_like())
+            .max_batch(2)
+            .mode(ExecMode::Pooled { workers: 0 })
+            .build()
+            .unwrap();
+        let pooled = session.run_batch(&req_pooled).unwrap();
+        assert_eq!(pooled.len(), outcomes.len());
+        for (a, b) in outcomes.iter().zip(&pooled) {
+            assert_eq!(a.analysis.per_class[0].class, b.analysis.per_class[0].class);
+            assert_eq!(a.analysis.max_abs_u.to_bits(), b.analysis.max_abs_u.to_bits());
+        }
+    }
+
+    #[test]
+    fn run_batch_tolerates_partially_labeled_datasets() {
+        // Hand-built datasets can carry fewer labels than samples; the
+        // per-sample class falls back to the dataset index instead of
+        // panicking on an out-of-bounds label lookup.
+        let session = Session::builder().workers(1).build();
+        let data = Dataset {
+            input_shape: vec![8],
+            inputs: (0..3).map(|i| vec![i as f64 / 3.0; 8]).collect(),
+            labels: vec![7],
+        };
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(5))
+            .data(data)
+            .max_batch(2)
+            .build()
+            .unwrap();
+        let outcomes = session.run_batch(&req).unwrap();
+        assert_eq!(outcomes.len(), 3);
+        assert_eq!(outcomes[0].analysis.per_class[0].class, 7);
+        assert_eq!(outcomes[1].analysis.per_class[0].class, 1, "index fallback");
+        assert_eq!(outcomes[2].analysis.per_class[0].class, 2, "index fallback");
+    }
+
+    #[test]
+    fn serve_front_door_matches_plan_trace() {
+        let session = Session::builder().workers(2).build();
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(42))
+            .input_box()
+            .max_batch(4)
+            .max_wait_ms(1)
+            .build()
+            .unwrap();
+        let batcher = session.serve(&req).unwrap();
+        let sample: Vec<f64> = (0..8).map(|i| i as f64 / 8.0).collect();
+        let got = batcher.submit(sample.clone()).unwrap().wait().unwrap();
+        let plan = crate::plan::Plan::for_analysis(&zoo::tiny_mlp(42)).unwrap();
+        let mut arena = crate::plan::Arena::new();
+        let want = plan.execute::<f64>(&(), &sample, &mut arena).unwrap();
+        assert_eq!(got, want, "served trace must equal the analysis plan's f64 trace");
     }
 
     #[test]

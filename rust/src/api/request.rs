@@ -15,6 +15,7 @@ use crate::model::Model;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// How a request's per-class jobs are executed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,6 +66,8 @@ pub struct AnalysisRequest {
     pub(crate) mode: ExecMode,
     pub(crate) ctx_override: Option<Ctx>,
     pub(crate) progress: Option<Arc<ProgressFn>>,
+    pub(crate) max_batch: usize,
+    pub(crate) max_wait: Duration,
 }
 
 impl AnalysisRequest {
@@ -102,6 +105,21 @@ impl AnalysisRequest {
     /// How per-class jobs execute (serial or pooled).
     pub fn mode(&self) -> ExecMode {
         self.mode
+    }
+
+    /// Micro-batch size for bulk paths
+    /// ([`Session::run_batch`](super::Session::run_batch) chunking,
+    /// [`Session::serve`](super::Session::serve)'s
+    /// [`BatchPolicy::max_batch`](crate::serve::BatchPolicy)).
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Micro-batch latency bound for
+    /// [`Session::serve`](super::Session::serve)'s
+    /// [`BatchPolicy::max_wait`](crate::serve::BatchPolicy).
+    pub fn max_wait(&self) -> Duration {
+        self.max_wait
     }
 
     /// The engine-level configuration this request resolves to. Together
@@ -146,6 +164,8 @@ pub struct AnalysisRequestBuilder {
     mode: ExecMode,
     ctx_override: Option<Ctx>,
     progress: Option<Arc<ProgressFn>>,
+    max_batch: usize,
+    max_wait: Duration,
 }
 
 impl AnalysisRequestBuilder {
@@ -160,6 +180,8 @@ impl AnalysisRequestBuilder {
             mode: ExecMode::Serial,
             ctx_override: None,
             progress: None,
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
         }
     }
 
@@ -260,6 +282,22 @@ impl AnalysisRequestBuilder {
         self
     }
 
+    /// Micro-batch size (default 32): how many samples one
+    /// [`Session::run_batch`](super::Session::run_batch) chunk or one
+    /// [`Session::serve`](super::Session::serve) plan drive covers.
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Micro-batch latency bound in milliseconds (default 2): how long
+    /// [`Session::serve`](super::Session::serve)'s scheduler lets the
+    /// oldest pending sample wait for batch-mates.
+    pub fn max_wait_ms(mut self, ms: u64) -> Self {
+        self.max_wait = Duration::from_millis(ms);
+        self
+    }
+
     fn validate(&self) -> Result<()> {
         if !(self.p_star > 0.5 && self.p_star < 1.0) {
             bail!("p_star must be in (0.5, 1.0), got {}", self.p_star);
@@ -274,6 +312,9 @@ impl AnalysisRequestBuilder {
             if workers > 4096 {
                 bail!("unreasonable worker count {workers}");
             }
+        }
+        if self.max_batch == 0 || self.max_batch > 4096 {
+            bail!("max_batch must be in [1, 4096], got {}", self.max_batch);
         }
         Ok(())
     }
@@ -298,6 +339,8 @@ impl AnalysisRequestBuilder {
             mode: self.mode,
             ctx_override: self.ctx_override,
             progress: self.progress,
+            max_batch: self.max_batch,
+            max_wait: self.max_wait,
         })
     }
 
@@ -363,6 +406,33 @@ mod tests {
             .is_err());
         assert!(AnalysisRequest::builder().input_box().build().is_err(), "missing model");
         assert!(AnalysisRequest::builder().model(zoo::tiny_mlp(1)).build().is_err(), "missing data");
+    }
+
+    #[test]
+    fn batching_knobs_validate_and_flow_through() {
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .max_batch(8)
+            .max_wait_ms(5)
+            .build()
+            .unwrap();
+        assert_eq!(req.max_batch(), 8);
+        assert_eq!(req.max_wait(), Duration::from_millis(5));
+        // Defaults: 32-sample chunks, 2 ms latency bound.
+        let dflt = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .build()
+            .unwrap();
+        assert_eq!(dflt.max_batch(), 32);
+        assert_eq!(dflt.max_wait(), Duration::from_millis(2));
+        assert!(AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .max_batch(0)
+            .build()
+            .is_err());
     }
 
     #[test]

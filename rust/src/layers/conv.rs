@@ -149,6 +149,42 @@ pub fn conv2d_into<S: Scalar>(
     }
 }
 
+/// Batched [`conv2d_into`]: `xd` holds `batch` sample-major inputs
+/// (`batch * h * w * cin` values); appends sample-major outputs. The
+/// samples are convolved one after another inside the single step dispatch
+/// — the conv kernel tensor is small and stays cache-resident across
+/// samples, so no cross-sample interleave is needed; per-sample arithmetic
+/// is exactly [`conv2d_into`]'s.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_batch_into<S: Scalar>(
+    ctx: &S::Ctx,
+    kernel: &Tensor<f64>,
+    bias: &[f64],
+    stride: usize,
+    padding: Padding,
+    xd: &[S],
+    in_shape: &[usize],
+    out_shape: &[usize],
+    batch: usize,
+    out: &mut Vec<S>,
+) {
+    let in_len: usize = in_shape.iter().product();
+    debug_assert_eq!(xd.len(), batch * in_len, "batched conv input");
+    for s in 0..batch {
+        conv2d_into(
+            ctx,
+            kernel,
+            bias,
+            stride,
+            padding,
+            &xd[s * in_len..(s + 1) * in_len],
+            in_shape,
+            out_shape,
+            out,
+        );
+    }
+}
+
 /// Depthwise convolution. `kernel: [kh, kw, c]`, output `[oh, ow, c]`.
 pub fn depthwise<S: Scalar>(
     ctx: &S::Ctx,
@@ -208,6 +244,38 @@ pub fn depthwise_into<S: Scalar>(
                 out.push(acc);
             }
         }
+    }
+}
+
+/// Batched [`depthwise_into`] (see [`conv2d_batch_into`] for the layout
+/// and the per-sample-identity contract).
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_batch_into<S: Scalar>(
+    ctx: &S::Ctx,
+    kernel: &Tensor<f64>,
+    bias: &[f64],
+    stride: usize,
+    padding: Padding,
+    xd: &[S],
+    in_shape: &[usize],
+    out_shape: &[usize],
+    batch: usize,
+    out: &mut Vec<S>,
+) {
+    let in_len: usize = in_shape.iter().product();
+    debug_assert_eq!(xd.len(), batch * in_len, "batched depthwise input");
+    for s in 0..batch {
+        depthwise_into(
+            ctx,
+            kernel,
+            bias,
+            stride,
+            padding,
+            &xd[s * in_len..(s + 1) * in_len],
+            in_shape,
+            out_shape,
+            out,
+        );
     }
 }
 

@@ -26,6 +26,50 @@ pub fn apply_into<S: Scalar>(ctx: &S::Ctx, w: &Tensor<f64>, b: &[f64], x: &[S], 
     }
 }
 
+/// Batched [`apply_into`]: `x` holds `batch` samples sample-major
+/// (`batch * n` values); appends `batch * m` outputs, sample-major.
+///
+/// Per-sample arithmetic is identical to [`dot_bias`] — the same terms in
+/// the same left-to-right accumulation order, zero weights skipped the
+/// same way — but the *independent* accumulator chains of the samples
+/// advance in lockstep over each weight row. For cheap scalars (f64
+/// reference, emulated-k witness) that turns one latency-bound serial dot
+/// product into `batch` overlapping chains and reuses each weight row
+/// while it is cache-hot; for CAA the interleave is merely order-neutral.
+/// At `batch == 1` the loop degenerates to exactly [`apply_into`].
+pub fn apply_batch_into<S: Scalar>(
+    ctx: &S::Ctx,
+    w: &Tensor<f64>,
+    b: &[f64],
+    x: &[S],
+    batch: usize,
+    out: &mut Vec<S>,
+) {
+    let m = w.shape()[0];
+    let n = w.shape()[1];
+    debug_assert_eq!(x.len(), batch * n, "batched dense input");
+    let wd = w.data();
+    let base = out.len();
+    out.resize(base + batch * m, S::exact(ctx, 0.0));
+    let mut accs: Vec<S> = Vec::with_capacity(batch);
+    for j in 0..m {
+        let row = &wd[j * n..(j + 1) * n];
+        accs.extend(std::iter::repeat_with(|| S::param(ctx, b[j])).take(batch));
+        for (i, wi) in row.iter().enumerate() {
+            if *wi == 0.0 {
+                continue; // matches dot_bias: exact-zero terms contribute nothing
+            }
+            for (s, acc) in accs.iter_mut().enumerate() {
+                let term = x[s * n + i].mul_param(*wi, ctx);
+                *acc = acc.add(&term, ctx);
+            }
+        }
+        for (s, acc) in accs.drain(..).enumerate() {
+            out[base + s * m + j] = acc;
+        }
+    }
+}
+
 /// One dot product plus bias in the scalar arithmetic `S` (sequential
 /// accumulation). Exposed for the conv layer (a convolution is a strided
 /// dot product) and for microbenchmarks.
@@ -90,6 +134,54 @@ mod tests {
                     1e-12,
                 )
                 .unwrap_or_else(|e| panic!("k={k} j={j}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn batched_matches_per_sample_bitwise() {
+        // The lockstep accumulator interleave must not change any
+        // per-sample value — f64 bits and CAA bounds alike.
+        let ctx = Ctx::new();
+        let w = Tensor::new(
+            vec![3, 4],
+            vec![0.3, -0.7, 0.1, 0.9, 0.2, 0.4, -0.6, 0.05, 0.0, 1.1, -0.2, 0.7],
+        );
+        let b = vec![0.1, -0.2, 0.05];
+        let samples = [[0.5, 1.5, -0.25, 2.0], [1.0, -1.0, 0.125, 0.75]];
+        let flat: Vec<f64> = samples.concat();
+
+        let mut batched = Vec::new();
+        apply_batch_into::<f64>(&(), &w, &b, &flat, 2, &mut batched);
+        for (s, sample) in samples.iter().enumerate() {
+            let mut single = Vec::new();
+            apply_into::<f64>(&(), &w, &b, sample, &mut single);
+            for (j, v) in single.iter().enumerate() {
+                assert_eq!(v.to_bits(), batched[s * 3 + j].to_bits(), "sample {s} out {j}");
+            }
+        }
+
+        let mk = |v: f64| Caa::input(&ctx, Interval::point(v), v);
+        let flat_caa: Vec<Caa> = flat.iter().map(|&v| mk(v)).collect();
+        let mut batched_caa = Vec::new();
+        apply_batch_into::<Caa>(&ctx, &w, &b, &flat_caa, 2, &mut batched_caa);
+        for (s, sample) in samples.iter().enumerate() {
+            let xs: Vec<Caa> = sample.iter().map(|&v| mk(v)).collect();
+            let mut single = Vec::new();
+            apply_into::<Caa>(&ctx, &w, &b, &xs, &mut single);
+            for j in 0..3 {
+                let (a, c) = (&single[j], &batched_caa[s * 3 + j]);
+                assert_eq!(a.fp().to_bits(), c.fp().to_bits(), "sample {s} out {j}: trace");
+                assert_eq!(
+                    a.abs_bound().to_bits(),
+                    c.abs_bound().to_bits(),
+                    "sample {s} out {j}: abs bound"
+                );
+                assert_eq!(
+                    a.rel_bound().to_bits(),
+                    c.rel_bound().to_bits(),
+                    "sample {s} out {j}: rel bound"
+                );
             }
         }
     }

@@ -68,7 +68,10 @@ pub(crate) fn concat_output_shape(inputs: &[&[usize]]) -> Result<Vec<usize>> {
 /// kernel behind [`StepKind::Add`](crate::plan::StepKind::Add). The
 /// executor seeds `acc` with the first branch and folds every further
 /// branch in with this, so an n-way add costs `n - 1` rounded additions
-/// per element, accumulated left to right.
+/// per element, accumulated left to right. Batch-transparent: a
+/// sample-major batched buffer is just a longer slice of independent
+/// elements, so the batched executor calls this unchanged over all
+/// samples at once.
 pub(crate) fn add_assign_into<S: Scalar>(ctx: &S::Ctx, acc: &mut [S], src: &[S]) {
     debug_assert_eq!(acc.len(), src.len(), "add branches must have equal length");
     for (a, x) in acc.iter_mut().zip(src) {
@@ -82,6 +85,31 @@ pub(crate) fn add_assign_into<S: Scalar>(ctx: &S::Ctx, acc: &mut [S], src: &[S])
 /// concatenation propagate bounds without any rounding charge.
 pub(crate) fn concat_row_into<S: Clone>(r: usize, width: usize, src: &[S], out: &mut Vec<S>) {
     out.extend_from_slice(&src[r * width..(r + 1) * width]);
+}
+
+/// Batched concat gather behind
+/// [`StepKind::Concat`](crate::plan::StepKind::Concat): for each of the
+/// `batch` sample-major samples, interleave the rows of every input
+/// (input `i` contributing `widths[i]` values per row), appending
+/// sample-major output. Pure data movement like [`concat_row_into`] —
+/// zero rounding charge, and per-sample output identical to the
+/// single-sample gather.
+pub(crate) fn concat_batch_into<S: Clone>(
+    batch: usize,
+    rows: usize,
+    widths: &[usize],
+    srcs: &[&[S]],
+    out: &mut Vec<S>,
+) {
+    debug_assert_eq!(widths.len(), srcs.len(), "one width per concat input");
+    for s in 0..batch {
+        for r in 0..rows {
+            for (src, &w) in srcs.iter().zip(widths) {
+                let in_len = rows * w;
+                concat_row_into(r, w, &src[s * in_len..(s + 1) * in_len], out);
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -61,6 +61,28 @@ pub fn max_pool_into<S: Scalar>(
     }
 }
 
+/// Batched [`max_pool_into`]: `xd` holds `batch` sample-major inputs;
+/// appends sample-major outputs, pooling the samples one after another
+/// inside the single step dispatch (comparison-only, so the per-sample
+/// result is trivially identical to the single-sample kernel's).
+#[allow(clippy::too_many_arguments)]
+pub fn max_pool_batch_into<S: Scalar>(
+    ctx: &S::Ctx,
+    ph: usize,
+    pw: usize,
+    xd: &[S],
+    in_shape: &[usize],
+    out_shape: &[usize],
+    batch: usize,
+    out: &mut Vec<S>,
+) {
+    let in_len: usize = in_shape.iter().product();
+    debug_assert_eq!(xd.len(), batch * in_len, "batched max_pool input");
+    for s in 0..batch {
+        max_pool_into(ctx, ph, pw, &xd[s * in_len..(s + 1) * in_len], in_shape, out_shape, out);
+    }
+}
+
 pub fn avg_pool<S: Scalar>(
     ctx: &S::Ctx,
     ph: usize,
@@ -102,6 +124,27 @@ pub fn avg_pool_into<S: Scalar>(
                 out.push(acc.expect("nonempty window").div(&n, ctx));
             }
         }
+    }
+}
+
+/// Batched [`avg_pool_into`] (same layout and per-sample-identity
+/// contract as [`max_pool_batch_into`]; the window-size divisor is exact,
+/// so it is shared across samples with identical values).
+#[allow(clippy::too_many_arguments)]
+pub fn avg_pool_batch_into<S: Scalar>(
+    ctx: &S::Ctx,
+    ph: usize,
+    pw: usize,
+    xd: &[S],
+    in_shape: &[usize],
+    out_shape: &[usize],
+    batch: usize,
+    out: &mut Vec<S>,
+) {
+    let in_len: usize = in_shape.iter().product();
+    debug_assert_eq!(xd.len(), batch * in_len, "batched avg_pool input");
+    for s in 0..batch {
+        avg_pool_into(ctx, ph, pw, &xd[s * in_len..(s + 1) * in_len], in_shape, out_shape, out);
     }
 }
 

@@ -22,7 +22,10 @@
 //! multi-branch merges, see [`model::Graph`]) lower to the same
 //! buffer-pool step IR — cached next to the model; the per-layer
 //! interpreter survives only as a deprecated equivalence oracle for
-//! sequential models.
+//! sequential models. The plan carries a batch axis
+//! ([`plan::Plan::execute_batch`]): bulk traffic is served by the
+//! [`serve`] micro-batcher and bulk per-sample analysis by
+//! [`api::Session::run_batch`].
 //!
 //! Layer map (three-layer rust+JAX+Pallas architecture):
 //! * L3 (this crate): [`api`] service layer over the CAA+IA analysis
@@ -54,6 +57,7 @@ pub mod prop;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

@@ -13,7 +13,11 @@
 //! * `tune`    — mixed-precision tuning: per-layer minimal formats (§VI).
 //! * `sweep`   — accuracy-vs-precision sweep over the AOT k-variants
 //!   (needs the `pjrt` feature).
-//! * `run`     — execute one artifact on an input vector (needs `pjrt`).
+//! * `run`     — execute a model: the default `--variant engine` drives
+//!   the model JSON through the session's compiled plan and, with
+//!   `--batch N` and/or `--data`, through the `serve` micro-batcher
+//!   (batched plan drives on the worker pool); any other variant executes
+//!   the matching AOT artifact via PJRT (needs `pjrt`).
 
 use rigor::api::{AnalysisRequest, ExecMode, Session};
 use rigor::cli::{App, CmdSpec, OptSpec};
@@ -68,12 +72,14 @@ fn app() -> App {
             },
             CmdSpec {
                 name: "run",
-                help: "execute one artifact on a comma-separated input vector",
+                help: "execute a model on input vectors (engine plan or PJRT artifact)",
                 opts: vec![
                     OptSpec { name: "artifacts", help: "artifacts dir", default: Some("artifacts".into()) },
                     OptSpec { name: "model", help: "model name", default: Some("pendulum".into()) },
-                    OptSpec { name: "variant", help: "f32 or k<bits>", default: Some("f32".into()) },
+                    OptSpec { name: "variant", help: "engine (compiled plan), f32 or k<bits> (PJRT)", default: Some("engine".into()) },
                     OptSpec { name: "input", help: "comma-separated values", default: Some("1.0,-2.0".into()) },
+                    OptSpec { name: "batch", help: "micro-batch size for the engine path", default: Some("1".into()) },
+                    OptSpec { name: "data", help: "dataset JSON to serve in bulk (engine path)", default: Some(String::new()) },
                 ],
             },
         ],
@@ -240,8 +246,79 @@ fn cmd_sweep(_p: &rigor::cli::Parsed) -> anyhow::Result<()> {
     );
 }
 
-#[cfg(feature = "pjrt")]
 fn cmd_run(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    if p.get("variant") == Some("engine") {
+        cmd_run_engine(p)
+    } else {
+        cmd_run_artifact(p)
+    }
+}
+
+/// The engine run path: load the model JSON through the session cache and
+/// serve inputs through the micro-batcher — `--batch N` sizes the
+/// micro-batches (each one batched plan drive on the session pool),
+/// `--data` serves a whole dataset in bulk. Works without `pjrt`.
+fn cmd_run_engine(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    use rigor::data::Dataset;
+    let dir = Path::new(p.get("artifacts").unwrap());
+    let model_path = dir.join("models").join(format!("{}.json", p.get("model").unwrap()));
+    let batch = p.get_usize("batch")?.max(1);
+    let session = Session::new();
+    let req = AnalysisRequest::builder()
+        .model_path(&model_path)
+        .input_box() // serving traffic needs no dataset reference
+        .max_batch(batch)
+        .max_wait_ms(2)
+        .build()?;
+    let batcher = session.serve(&req)?;
+
+    let data_path = p.get("data").unwrap_or("");
+    if data_path.is_empty() {
+        let input: Vec<f64> = p
+            .get("input")
+            .unwrap()
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad --input: {e}"))?;
+        let out = batcher.submit(input)?.wait()?;
+        println!("{out:?}");
+        return Ok(());
+    }
+
+    let data = Dataset::load(Path::new(data_path))?;
+    let sw = rigor::util::Stopwatch::start();
+    let tickets: Vec<_> = data
+        .inputs
+        .iter()
+        .map(|s| batcher.submit(s.clone()))
+        .collect::<anyhow::Result<_>>()?;
+    let outputs: Vec<Vec<f64>> = tickets
+        .into_iter()
+        .map(|t| t.wait())
+        .collect::<anyhow::Result<_>>()?;
+    let secs = sw.secs();
+    println!(
+        "served {} samples in {secs:.3} s ({:.0} samples/s) in micro-batches of <= {batch}",
+        outputs.len(),
+        outputs.len() as f64 / secs.max(1e-9)
+    );
+    let m = batcher.metrics();
+    println!(
+        "micro-batches: {} ({} flushed full, {} by timer; largest {})",
+        m.batches, m.flushed_full, m.flushed_timer, m.max_batch_observed
+    );
+    for (i, out) in outputs.iter().take(3).enumerate() {
+        println!("  sample {i}: {out:?}");
+    }
+    if outputs.len() > 3 {
+        println!("  ... ({} more)", outputs.len() - 3);
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_run_artifact(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
     use rigor::runtime::Runtime;
     let dir = Path::new(p.get("artifacts").unwrap()).to_path_buf();
     let mut rt = Runtime::open(&dir)?;
@@ -258,10 +335,10 @@ fn cmd_run(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_run(_p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+fn cmd_run_artifact(_p: &rigor::cli::Parsed) -> anyhow::Result<()> {
     anyhow::bail!(
-        "the 'run' command executes AOT artifacts and needs the `pjrt` \
+        "non-engine 'run' variants execute AOT artifacts and need the `pjrt` \
          feature: rebuild with `cargo build --features pjrt` (requires the \
-         `xla` crate; see rust/Cargo.toml)"
+         `xla` crate; see rust/Cargo.toml), or use `--variant engine`"
     );
 }

@@ -16,6 +16,35 @@
 //! directly; every other step temporarily takes its output `Vec` out of
 //! the pool (a pointer swap), writes it while reading the input buffers,
 //! and puts it back.
+//!
+//! ## The batch axis
+//!
+//! [`Plan::execute_batch`] runs `B` samples through **one pass over the
+//! steps**: every pool buffer grows a leading batch dimension
+//! (`buffer_lens[i] * B` elements, sample-major — sample `s`'s value in
+//! buffer `i` occupies `[s * len, (s + 1) * len)`), and each step
+//! dispatches **once** for the whole batch. Elementwise and row-structured
+//! kernels (activations, batch norm, softmax, `Add`) are batch-transparent
+//! — the flat sample-major layout is just a longer slice of independent
+//! elements/rows; dense/conv/pool get explicit `*_batch_into` entry points
+//! that loop the samples inside the single dispatch. Buffer assignment,
+//! liveness and aliasing are untouched: the batch dimension scales every
+//! buffer uniformly, so the register-style allocation stays valid.
+//!
+//! Per-sample results are **bit-identical** to `B` independent
+//! [`Plan::execute`] calls (and `B = 1` *is* the single-sample kernel
+//! path): samples are mathematically independent, so batched kernels may
+//! interleave work across samples but never reorder the operations
+//! *within* one sample. The win is for the cheap scalars — f64 reference
+//! traces and emulated-k witness runs amortize step dispatch, buffer swaps
+//! and parameter embedding, and the batched dense kernel overlaps the
+//! samples' (independent) accumulation chains instead of serializing on
+//! one latency-bound dot product. CAA analysis stays at `B = 1` in the
+//! service paths: each CAA op costs orders of magnitude more than the
+//! dispatch being amortized, and a `B`-wide arena of [`crate::caa::Caa`]
+//! values multiplies peak memory for no measurable speedup (see
+//! `benches/perf_scaling.rs`), though the batched path is arithmetically
+//! valid — and tested — for every scalar.
 
 use super::{Act, BufId, Plan, StepKind};
 use crate::layers::{activation, conv, dense, merge, norm, pool};
@@ -72,6 +101,37 @@ impl<S> Arena<S> {
         S: Clone,
     {
         self.reserve_for(plan);
+        let buf = &mut self.bufs[plan.input_buf()];
+        buf.clear();
+        buf.extend_from_slice(input);
+    }
+
+    /// Pre-size the pool for `plan` executed with a leading batch
+    /// dimension: every buffer reserves `buffer_lens[i] * batch` elements
+    /// (the sample-major batched layout), so even the first batched
+    /// execution does not reallocate mid-run.
+    pub fn reserve_for_batch(&mut self, plan: &Plan, batch: usize) {
+        while self.bufs.len() < plan.buffer_count() {
+            self.bufs.push(Vec::new());
+        }
+        for (buf, &n) in self.bufs.iter_mut().zip(plan.buffer_lens()) {
+            let want = n * batch;
+            if buf.capacity() < want {
+                buf.reserve(want - buf.len());
+            }
+        }
+    }
+
+    /// Seed the plan's input buffer with `batch` samples laid out
+    /// sample-major (`input.len() == batch * plan.input_len()`; sample `s`
+    /// occupies `[s * input_len, (s + 1) * input_len)`), sizing the pool
+    /// for the batch first. Length is the caller's responsibility;
+    /// [`Plan::execute_batch`] checks it.
+    pub fn load_batch(&mut self, plan: &Plan, input: &[S], batch: usize)
+    where
+        S: Clone,
+    {
+        self.reserve_for_batch(plan, batch);
         let buf = &mut self.bufs[plan.input_buf()];
         buf.clear();
         buf.extend_from_slice(input);
@@ -231,6 +291,207 @@ impl Plan {
         }
         arena.bufs[step.out] = out;
         debug_assert_eq!(arena.bufs[step.out].len(), step.out_len(), "step {idx} output");
+    }
+
+    /// Execute the whole plan over a **batch** of samples in one pass.
+    /// `input` holds `batch` samples sample-major
+    /// (`input.len() == batch * input_len`); the returned borrow of the
+    /// output pool buffer holds `batch * output_len` values, sample `s`'s
+    /// output at `[s * output_len, (s + 1) * output_len)`.
+    ///
+    /// Per-sample results are **bit-identical** to `batch` independent
+    /// [`Plan::execute`] calls for every scalar arithmetic: the batched
+    /// kernels perform the same operations in the same per-sample order,
+    /// only interleaved across (independent) samples — and at
+    /// `batch == 1` they degenerate to exactly the single-sample kernels.
+    ///
+    /// ```
+    /// use rigor::model::zoo;
+    /// use rigor::plan::{Arena, Plan};
+    ///
+    /// let plan = Plan::for_reference(&zoo::tiny_mlp(3))?;
+    /// let a: Vec<f64> = (0..8).map(|i| i as f64 / 8.0).collect();
+    /// let b: Vec<f64> = (0..8).map(|i| (7 - i) as f64 / 8.0).collect();
+    ///
+    /// let mut arena = Arena::new();
+    /// let single = plan.execute::<f64>(&(), &a, &mut arena)?.to_vec();
+    ///
+    /// let flat: Vec<f64> = a.iter().chain(&b).copied().collect();
+    /// let mut batch_arena = Arena::new();
+    /// let both = plan.execute_batch::<f64>(&(), &flat, 2, &mut batch_arena)?;
+    /// assert_eq!(&both[..plan.output_len()], single.as_slice());
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn execute_batch<'a, S: Scalar>(
+        &self,
+        ctx: &S::Ctx,
+        input: &[S],
+        batch: usize,
+        arena: &'a mut Arena<S>,
+    ) -> Result<&'a [S]> {
+        if batch == 0 {
+            bail!("plan '{}': batch must be >= 1", self.model_name());
+        }
+        if input.len() != batch * self.input_len() {
+            bail!(
+                "plan '{}' expects {batch} x {:?} ({} values sample-major), got {}",
+                self.model_name(),
+                self.input_shape(),
+                batch * self.input_len(),
+                input.len()
+            );
+        }
+        arena.load_batch(self, input, batch);
+        for idx in 0..self.steps().len() {
+            self.execute_step_batch(idx, batch, ctx, arena);
+        }
+        Ok(&arena.bufs[self.output_buf()])
+    }
+
+    /// Execute one step for a `batch` of samples against the arena pool
+    /// (buffers hold `batch * len` values, sample-major). Elementwise and
+    /// row-structured kernels (activations, batch norm, softmax, `Add`)
+    /// are batch-transparent — one call covers every sample, which also
+    /// amortizes per-call parameter embedding (batch norm's per-channel
+    /// affine form is built once per batch instead of once per sample,
+    /// with identical values); dense/conv/pool dispatch once and loop the
+    /// samples inside the kernel. Per-sample operation order matches
+    /// [`Plan::execute_step`] exactly.
+    pub fn execute_step_batch<S: Scalar>(
+        &self,
+        idx: usize,
+        batch: usize,
+        ctx: &S::Ctx,
+        arena: &mut Arena<S>,
+    ) {
+        let step = &self.steps()[idx];
+        debug_assert_eq!(
+            arena.bufs[step.inputs[0]].len(),
+            batch * step.in_len(),
+            "step {idx} batched input"
+        );
+
+        // In-place alias (see `execute_step`): `Flatten` stays a no-op and
+        // `Act` mutates elementwise — both are batch-transparent.
+        if step.out == step.inputs[0] {
+            debug_assert!(step.fused_act.is_none(), "in-place steps never carry a fused act");
+            match &step.kind {
+                StepKind::Flatten => {}
+                StepKind::Act(a) => apply_act_inplace(ctx, a, &mut arena.bufs[step.out]),
+                other => unreachable!("{} steps are never in-place-aliased", other.name()),
+            }
+            return;
+        }
+
+        let mut out = std::mem::take(&mut arena.bufs[step.out]);
+        out.clear();
+        match &step.kind {
+            StepKind::Dense { w, b } => {
+                dense::apply_batch_into(ctx, w, b, &arena.bufs[step.inputs[0]], batch, &mut out)
+            }
+            StepKind::Conv2D { kernel, bias, stride, padding } => conv::conv2d_batch_into(
+                ctx,
+                kernel,
+                bias,
+                *stride,
+                *padding,
+                &arena.bufs[step.inputs[0]],
+                step.in_shape(),
+                &step.out_shape,
+                batch,
+                &mut out,
+            ),
+            StepKind::DepthwiseConv2D { kernel, bias, stride, padding } => {
+                conv::depthwise_batch_into(
+                    ctx,
+                    kernel,
+                    bias,
+                    *stride,
+                    *padding,
+                    &arena.bufs[step.inputs[0]],
+                    step.in_shape(),
+                    &step.out_shape,
+                    batch,
+                    &mut out,
+                )
+            }
+            StepKind::MaxPool2D { ph, pw } => pool::max_pool_batch_into(
+                ctx,
+                *ph,
+                *pw,
+                &arena.bufs[step.inputs[0]],
+                step.in_shape(),
+                &step.out_shape,
+                batch,
+                &mut out,
+            ),
+            StepKind::AvgPool2D { ph, pw } => pool::avg_pool_batch_into(
+                ctx,
+                *ph,
+                *pw,
+                &arena.bufs[step.inputs[0]],
+                step.in_shape(),
+                &step.out_shape,
+                batch,
+                &mut out,
+            ),
+            StepKind::BatchNorm { gamma, beta, mean, variance, eps } => {
+                // Batch-transparent: the flat layout is a longer
+                // channels-last slice, and `i % c` picks the same channel
+                // for every sample's element.
+                let c = *step.in_shape().last().expect("batch_norm rank >= 1");
+                norm::batch_norm_into(
+                    ctx,
+                    gamma,
+                    beta,
+                    mean,
+                    variance,
+                    *eps,
+                    &arena.bufs[step.inputs[0]],
+                    c,
+                    &mut out,
+                )
+            }
+            StepKind::Softmax => {
+                // Batch-transparent: softmax is row-structured and the
+                // batched buffer is just `batch x` as many rows.
+                let n = *step.in_shape().last().expect("softmax rank >= 1");
+                activation::softmax_into(
+                    ctx,
+                    n,
+                    &arena.bufs[step.inputs[0]],
+                    &mut arena.scratch,
+                    &mut out,
+                )
+            }
+            StepKind::Flatten => out.extend_from_slice(&arena.bufs[step.inputs[0]]),
+            StepKind::Act(a) => {
+                out.extend_from_slice(&arena.bufs[step.inputs[0]]);
+                apply_act_inplace(ctx, a, &mut out);
+            }
+            StepKind::Add => {
+                // Elementwise over the whole sample-major buffer: per
+                // sample this is exactly the single-sample accumulation.
+                out.extend_from_slice(&arena.bufs[step.inputs[0]]);
+                for &b in &step.inputs[1..] {
+                    merge::add_assign_into(ctx, &mut out, &arena.bufs[b]);
+                }
+            }
+            StepKind::Concat { rows, widths } => {
+                let srcs: Vec<&[S]> =
+                    step.inputs.iter().map(|&b| arena.bufs[b].as_slice()).collect();
+                merge::concat_batch_into(batch, *rows, widths, &srcs, &mut out);
+            }
+        }
+        if let Some(a) = &step.fused_act {
+            apply_act_inplace(ctx, a, &mut out);
+        }
+        arena.bufs[step.out] = out;
+        debug_assert_eq!(
+            arena.bufs[step.out].len(),
+            batch * step.out_len(),
+            "step {idx} batched output"
+        );
     }
 
     /// Convenience tensor-in/tensor-out execution with a throwaway arena —

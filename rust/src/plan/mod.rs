@@ -55,9 +55,13 @@
 //! to each model in its content-hash LRU; [`crate::coordinator`] hands
 //! every worker thread its own arena.
 //!
-//! Per-step precision maps across merge points and a batch axis over the
-//! buffer pool are the next items to hang off this IR (see ROADMAP.md
-//! "Open items").
+//! The pool also carries a **batch axis**: [`Plan::execute_batch`] runs
+//! `B` samples through one pass over the steps with every buffer scaled to
+//! `buffer_lens[i] * B` (sample-major layout), bit-identical per sample to
+//! `B` independent executions — the substrate for bulk serving
+//! ([`crate::serve`]) and the sampling baseline. Per-step precision maps
+//! across merge points are the next item to hang off this IR (see
+//! ROADMAP.md "Open items").
 
 mod exec;
 

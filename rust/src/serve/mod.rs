@@ -1,0 +1,452 @@
+//! **The serving front end** — a micro-batching scheduler over the
+//! batched plan executor.
+//!
+//! Bulk traffic (the ROADMAP's "serve heavy traffic" north star) arrives
+//! one sample at a time, but the executor is fastest when it drives many
+//! samples through one plan pass ([`crate::plan::Plan::execute_batch`]:
+//! one step dispatch, one parameter embedding, and overlapping
+//! accumulation chains for the whole batch). The [`MicroBatcher`] bridges
+//! the two: callers [`submit`](MicroBatcher::submit) individual samples
+//! and get a [`Ticket`] back immediately; a flusher thread accumulates
+//! pending samples until either [`BatchPolicy::max_batch`] are waiting or
+//! the oldest has waited [`BatchPolicy::max_wait`], then dispatches the
+//! whole batch as **one job** on the coordinator [`Pool`] — a single
+//! batched f64 plan drive against the worker's thread-local arena.
+//! Results are scattered back to the tickets, which callers block on (or
+//! poll) independently.
+//!
+//! The micro-batcher serves the **f64 reference trace** of the compiled
+//! model — the latency-sensitive inference workload where batching pays.
+//! CAA analysis traffic intentionally stays at `B = 1` per run (each CAA
+//! operation dwarfs the dispatch overhead batching amortizes, and a
+//! `B`-wide arena of CAA values multiplies peak memory); bulk *analysis*
+//! goes through [`crate::api::Session::run_batch`], which micro-batches
+//! the scheduling, not the CAA arithmetic. See DESIGN.md "The batch axis
+//! and the serve micro-batcher".
+//!
+//! ```
+//! use rigor::api::{AnalysisRequest, Session};
+//! use rigor::model::zoo;
+//!
+//! let session = Session::builder().workers(2).build();
+//! let req = AnalysisRequest::builder()
+//!     .model(zoo::tiny_mlp(7))
+//!     .input_box()          // serving needs no dataset
+//!     .max_batch(8)
+//!     .max_wait_ms(1)
+//!     .build()?;
+//! let batcher = session.serve(&req)?;
+//! let tickets: Vec<_> = (0..16)
+//!     .map(|i| batcher.submit(vec![i as f64 / 16.0; 8]).unwrap())
+//!     .collect();
+//! for t in tickets {
+//!     let probs = t.wait()?; // one softmax vector per request
+//!     assert_eq!(probs.len(), 3);
+//! }
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use crate::coordinator::{with_worker_scratch, Pool};
+use crate::plan::{Arena, Plan};
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// When the micro-batcher flushes a pending batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many samples are pending (also the largest
+    /// batch one plan drive executes).
+    pub max_batch: usize,
+    /// Flush when the **oldest** pending sample has waited this long —
+    /// the latency bound a trickle of traffic pays for batching.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    /// 32-sample batches, 2 ms latency bound.
+    fn default() -> BatchPolicy {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Counters describing what the batcher has done so far.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeMetrics {
+    /// Samples accepted by [`MicroBatcher::submit`].
+    pub submitted: usize,
+    /// Batches dispatched to the pool.
+    pub batches: usize,
+    /// Batches flushed because `max_batch` samples were pending.
+    pub flushed_full: usize,
+    /// Batches flushed because the oldest sample hit `max_wait`.
+    pub flushed_timer: usize,
+    /// Batches flushed by shutdown drain.
+    pub flushed_drain: usize,
+    /// Largest batch dispatched.
+    pub max_batch_observed: usize,
+}
+
+/// One request's result slot: filled exactly once by the batch job,
+/// waited on by the [`Ticket`].
+struct Slot {
+    state: Mutex<Option<Result<Vec<f64>, String>>>,
+    ready: Condvar,
+}
+
+/// Handle to one submitted sample's pending output.
+pub struct Ticket {
+    slot: Arc<Slot>,
+}
+
+impl Ticket {
+    /// Block until the sample's batch has executed and return the model
+    /// output (length = the plan's `output_len`).
+    pub fn wait(self) -> Result<Vec<f64>> {
+        let mut st = self.slot.state.lock().unwrap();
+        while st.is_none() {
+            st = self.slot.ready.wait(st).unwrap();
+        }
+        match st.take().expect("checked above") {
+            Ok(v) => Ok(v),
+            Err(e) => Err(anyhow!("batched execution failed: {e}")),
+        }
+    }
+
+    /// Non-blocking probe: the output if the batch has already executed.
+    pub fn try_take(&self) -> Option<Result<Vec<f64>>> {
+        let mut st = self.slot.state.lock().unwrap();
+        st.take().map(|r| r.map_err(|e| anyhow!("batched execution failed: {e}")))
+    }
+}
+
+struct PendingSample {
+    sample: Vec<f64>,
+    slot: Arc<Slot>,
+    enqueued: Instant,
+}
+
+struct QueueState {
+    pending: VecDeque<PendingSample>,
+    shutdown: bool,
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicUsize,
+    batches: AtomicUsize,
+    flushed_full: AtomicUsize,
+    flushed_timer: AtomicUsize,
+    flushed_drain: AtomicUsize,
+    max_batch_observed: AtomicUsize,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    wake: Condvar,
+    plan: Arc<Plan>,
+    pool: Arc<Pool>,
+    policy: BatchPolicy,
+    counters: Counters,
+}
+
+/// Why a batch left the queue (metrics bookkeeping).
+enum FlushCause {
+    Full,
+    Timer,
+    Drain,
+}
+
+/// The micro-batching scheduler. Create one per served model (via
+/// [`crate::api::Session::serve`] or [`MicroBatcher::new`]); it is `Sync`,
+/// so any number of request threads can [`submit`](MicroBatcher::submit)
+/// concurrently. Dropping the batcher drains every pending sample (their
+/// tickets still resolve) before the flusher thread exits.
+pub struct MicroBatcher {
+    shared: Arc<Shared>,
+    flusher: Option<JoinHandle<()>>,
+}
+
+impl MicroBatcher {
+    /// A batcher serving `plan` (f64 pass) on `pool` under `policy`.
+    pub fn new(plan: Arc<Plan>, pool: Arc<Pool>, policy: BatchPolicy) -> MicroBatcher {
+        assert!(policy.max_batch >= 1, "max_batch must be >= 1");
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { pending: VecDeque::new(), shutdown: false }),
+            wake: Condvar::new(),
+            plan,
+            pool,
+            policy,
+            counters: Counters::default(),
+        });
+        let flusher = {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("rigor-serve-flusher".into())
+                .spawn(move || flusher_loop(sh))
+                .expect("spawn serve flusher")
+        };
+        MicroBatcher { shared, flusher: Some(flusher) }
+    }
+
+    /// Enqueue one sample (length must match the served plan's input).
+    /// Returns immediately with a [`Ticket`] for the pending output.
+    pub fn submit(&self, sample: Vec<f64>) -> Result<Ticket> {
+        if sample.len() != self.shared.plan.input_len() {
+            bail!(
+                "serve '{}': expected {} input values, got {}",
+                self.shared.plan.model_name(),
+                self.shared.plan.input_len(),
+                sample.len()
+            );
+        }
+        let slot = Arc::new(Slot { state: Mutex::new(None), ready: Condvar::new() });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.shutdown {
+                bail!("serve '{}': batcher is shutting down", self.shared.plan.model_name());
+            }
+            q.pending.push_back(PendingSample {
+                sample,
+                slot: Arc::clone(&slot),
+                enqueued: Instant::now(),
+            });
+        }
+        self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.wake.notify_all();
+        Ok(Ticket { slot })
+    }
+
+    /// Snapshot the batcher's counters.
+    pub fn metrics(&self) -> ServeMetrics {
+        let c = &self.shared.counters;
+        ServeMetrics {
+            submitted: c.submitted.load(Ordering::Relaxed),
+            batches: c.batches.load(Ordering::Relaxed),
+            flushed_full: c.flushed_full.load(Ordering::Relaxed),
+            flushed_timer: c.flushed_timer.load(Ordering::Relaxed),
+            flushed_drain: c.flushed_drain.load(Ordering::Relaxed),
+            max_batch_observed: c.max_batch_observed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The served plan (input/output geometry for callers).
+    pub fn plan(&self) -> &Plan {
+        &self.shared.plan
+    }
+}
+
+impl Drop for MicroBatcher {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.wake.notify_all();
+        if let Some(h) = self.flusher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Take up to `max` pending samples off the queue front.
+fn drain_batch(q: &mut QueueState, max: usize) -> Vec<PendingSample> {
+    let n = q.pending.len().min(max);
+    q.pending.drain(..n).collect()
+}
+
+/// The flusher: waits for work, decides when a batch is ripe (full /
+/// timed out / shutdown drain), and hands each ripe batch to the pool as
+/// one job. Runs until shutdown *and* an empty queue, so pending tickets
+/// always resolve.
+fn flusher_loop(sh: Arc<Shared>) {
+    loop {
+        let (batch, cause) = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if q.pending.len() >= sh.policy.max_batch {
+                    break (drain_batch(&mut q, sh.policy.max_batch), FlushCause::Full);
+                }
+                if q.shutdown {
+                    if q.pending.is_empty() {
+                        return;
+                    }
+                    break (drain_batch(&mut q, sh.policy.max_batch), FlushCause::Drain);
+                }
+                match q.pending.front().map(|p| p.enqueued + sh.policy.max_wait) {
+                    Some(deadline) => {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break (drain_batch(&mut q, sh.policy.max_batch), FlushCause::Timer);
+                        }
+                        q = sh.wake.wait_timeout(q, deadline - now).unwrap().0;
+                    }
+                    None => q = sh.wake.wait(q).unwrap(),
+                }
+            }
+        };
+        let c = &sh.counters;
+        c.batches.fetch_add(1, Ordering::Relaxed);
+        c.max_batch_observed.fetch_max(batch.len(), Ordering::Relaxed);
+        match cause {
+            FlushCause::Full => c.flushed_full.fetch_add(1, Ordering::Relaxed),
+            FlushCause::Timer => c.flushed_timer.fetch_add(1, Ordering::Relaxed),
+            FlushCause::Drain => c.flushed_drain.fetch_add(1, Ordering::Relaxed),
+        };
+        let plan = Arc::clone(&sh.plan);
+        sh.pool.submit(move || run_batch_job(&plan, batch));
+    }
+}
+
+/// One pool job: drive the whole micro-batch through a single batched
+/// plan execution against this worker's thread-local arena, scattering
+/// each per-sample output to its ticket straight from the arena borrow
+/// (no intermediate full-batch copy). Every ticket is resolved exactly
+/// once on every path — including a panic inside the drive, which the
+/// pool worker would otherwise swallow, leaving waiters blocked forever.
+fn run_batch_job(plan: &Plan, batch: Vec<PendingSample>) {
+    let b = batch.len();
+    let mut flat: Vec<f64> = Vec::with_capacity(b * plan.input_len());
+    for p in &batch {
+        flat.extend_from_slice(&p.sample);
+    }
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        with_worker_scratch(|arena: &mut Arena<f64>| {
+            match plan.execute_batch::<f64>(&(), &flat, b, arena) {
+                Ok(out) => {
+                    let m = plan.output_len();
+                    for (s, p) in batch.iter().enumerate() {
+                        fill(&p.slot, Ok(out[s * m..(s + 1) * m].to_vec()));
+                    }
+                    Ok(())
+                }
+                Err(e) => Err(format!("{e:#}")),
+            }
+        })
+    }));
+    let msg = match result {
+        Ok(Ok(())) => return,
+        Ok(Err(msg)) => msg,
+        Err(p) => {
+            let cause = p
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            format!("batch job panicked: {cause}")
+        }
+    };
+    for p in &batch {
+        fill(&p.slot, Err(msg.clone()));
+    }
+}
+
+/// Resolve a ticket slot, first write wins: the error fallback after a
+/// mid-scatter panic must not clobber outputs already delivered.
+fn fill(slot: &Slot, result: Result<Vec<f64>, String>) {
+    let mut st = slot.state.lock().unwrap();
+    if st.is_none() {
+        *st = Some(result);
+        slot.ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn setup(policy: BatchPolicy) -> (Arc<Plan>, MicroBatcher) {
+        let model = zoo::tiny_mlp(11);
+        let plan = Arc::new(Plan::for_reference(&model).unwrap());
+        let pool = Arc::new(Pool::new(2, 8));
+        let batcher = MicroBatcher::new(Arc::clone(&plan), pool, policy);
+        (plan, batcher)
+    }
+
+    fn sample(i: usize) -> Vec<f64> {
+        (0..8).map(|j| ((i * 8 + j) % 13) as f64 / 13.0).collect()
+    }
+
+    #[test]
+    fn served_outputs_match_direct_execution_bitwise() {
+        let (plan, batcher) =
+            setup(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let tickets: Vec<Ticket> =
+            (0..10).map(|i| batcher.submit(sample(i)).unwrap()).collect();
+        let mut arena: Arena<f64> = Arena::new();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let got = t.wait().unwrap();
+            let want = plan.execute::<f64>(&(), &sample(i), &mut arena).unwrap();
+            assert_eq!(got.len(), plan.output_len());
+            for (g, w) in got.iter().zip(want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "request {i}");
+            }
+        }
+        let m = batcher.metrics();
+        assert_eq!(m.submitted, 10);
+        assert!(m.batches >= 3, "10 requests at max_batch 4 need >= 3 batches");
+        assert!(m.max_batch_observed <= 4);
+    }
+
+    #[test]
+    fn full_queue_flushes_without_waiting_for_the_timer() {
+        // A generous max_wait: the only way these resolve quickly is the
+        // max_batch trigger.
+        let (_, batcher) =
+            setup(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(30) });
+        let t1 = batcher.submit(sample(0)).unwrap();
+        let t2 = batcher.submit(sample(1)).unwrap();
+        assert_eq!(t1.wait().unwrap().len(), 3);
+        assert_eq!(t2.wait().unwrap().len(), 3);
+        let m = batcher.metrics();
+        assert_eq!(m.flushed_full, 1);
+        assert_eq!(m.max_batch_observed, 2);
+    }
+
+    #[test]
+    fn drop_drains_pending_tickets() {
+        let (_, batcher) =
+            setup(BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(30) });
+        let tickets: Vec<Ticket> =
+            (0..3).map(|i| batcher.submit(sample(i)).unwrap()).collect();
+        drop(batcher); // shutdown drain must still execute the pending 3
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().len(), 3);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_input_length() {
+        let (_, batcher) = setup(BatchPolicy::default());
+        assert!(batcher.submit(vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn concurrent_submitters_all_resolve() {
+        let (plan, batcher) =
+            setup(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) });
+        let batcher = Arc::new(batcher);
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let b = Arc::clone(&batcher);
+            let plan = Arc::clone(&plan);
+            handles.push(std::thread::spawn(move || {
+                let mut arena: Arena<f64> = Arena::new();
+                for i in 0..8 {
+                    let s = sample(t * 100 + i);
+                    let got = b.submit(s.clone()).unwrap().wait().unwrap();
+                    let want = plan.execute::<f64>(&(), &s, &mut arena).unwrap();
+                    assert_eq!(got, want);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(batcher.metrics().submitted, 32);
+    }
+}

@@ -1,0 +1,303 @@
+//! Integration tests for the **batch axis** (PR "batched execution
+//! subsystem"):
+//!
+//! * `B = 1` bit-identity: `Plan::execute_batch(.., 1, ..)` reproduces the
+//!   single-sample executor exactly, across the whole zoo, for the f64
+//!   trace and for CAA bounds;
+//! * `B > 1` per-sample equality: every sample of a batched drive is
+//!   bit-identical to its own independent single run — f64, emulated-k
+//!   witness, and CAA — including the residual (graph) models;
+//! * the bulk front doors: `Session::run_batch` per-sample outcomes equal
+//!   per-sample analyses, and the `serve::MicroBatcher` resolves bulk
+//!   traffic to exactly the plan's f64 traces under batching pressure.
+
+use rigor::api::{AnalysisRequest, ExecMode, Session};
+use rigor::caa::{Caa, Ctx};
+use rigor::data::Dataset;
+use rigor::interval::Interval;
+use rigor::model::{zoo, Model};
+use rigor::plan::{Arena, Plan};
+use rigor::quant::EmulatedFp;
+use rigor::tensor::EmuCtx;
+use rigor::util::Rng;
+use std::sync::Arc;
+
+/// Every zoo topology: sequential chains and both graph (residual/branchy)
+/// models.
+fn whole_zoo() -> Vec<Model> {
+    vec![
+        zoo::tiny_mlp(1),
+        zoo::tiny_cnn(2),
+        zoo::tiny_pendulum(3),
+        zoo::scaled_mlp(4, 32, 24, 10),
+        zoo::residual_mlp(5),
+        zoo::residual_cnn(6),
+    ]
+}
+
+fn samples_for(model: &Model, count: usize, seed: u64) -> Vec<Vec<f64>> {
+    let n: usize = model.input_shape.iter().product();
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| (0..n).map(|_| rng.range(0.0, 1.0)).collect())
+        .collect()
+}
+
+fn caa_point_input(ctx: &Ctx, sample: &[f64]) -> Vec<Caa> {
+    sample
+        .iter()
+        .map(|&v| Caa::input(ctx, Interval::point(v), v))
+        .collect()
+}
+
+#[test]
+fn b1_f64_bit_identical_to_single_sample_executor_across_zoo() {
+    for model in whole_zoo() {
+        for plan in [Plan::for_analysis(&model).unwrap(), Plan::unfused(&model).unwrap()] {
+            let x = samples_for(&model, 1, 7).remove(0);
+            let mut single_arena: Arena<f64> = Arena::new();
+            let single = plan.execute::<f64>(&(), &x, &mut single_arena).unwrap().to_vec();
+            let mut batch_arena: Arena<f64> = Arena::new();
+            let batched = plan.execute_batch::<f64>(&(), &x, 1, &mut batch_arena).unwrap();
+            assert_eq!(batched.len(), single.len(), "{}", model.name);
+            for (i, (b, s)) in batched.iter().zip(&single).enumerate() {
+                assert_eq!(b.to_bits(), s.to_bits(), "{} output {i}", model.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn b1_caa_bounds_bit_identical_across_zoo() {
+    let ctx = Ctx::new();
+    for model in whole_zoo() {
+        let plan = Plan::for_analysis(&model).unwrap();
+        let x = samples_for(&model, 1, 8).remove(0);
+        let input = caa_point_input(&ctx, &x);
+        let mut single_arena: Arena<Caa> = Arena::new();
+        let single = plan.execute::<Caa>(&ctx, &input, &mut single_arena).unwrap().to_vec();
+        let mut batch_arena: Arena<Caa> = Arena::new();
+        let batched = plan.execute_batch::<Caa>(&ctx, &input, 1, &mut batch_arena).unwrap();
+        assert_eq!(batched.len(), single.len(), "{}", model.name);
+        for (i, (b, s)) in batched.iter().zip(&single).enumerate() {
+            assert_eq!(b.fp().to_bits(), s.fp().to_bits(), "{} output {i}: trace", model.name);
+            assert_eq!(
+                b.abs_bound().to_bits(),
+                s.abs_bound().to_bits(),
+                "{} output {i}: abs bound",
+                model.name
+            );
+            assert_eq!(
+                b.rel_bound().to_bits(),
+                s.rel_bound().to_bits(),
+                "{} output {i}: rel bound",
+                model.name
+            );
+        }
+    }
+}
+
+#[test]
+fn b5_f64_per_sample_equality_with_independent_runs() {
+    const B: usize = 5;
+    for model in whole_zoo() {
+        let plan = Plan::for_analysis(&model).unwrap();
+        let samples = samples_for(&model, B, 9);
+        let flat: Vec<f64> = samples.concat();
+        let mut batch_arena: Arena<f64> = Arena::new();
+        let batched = plan.execute_batch::<f64>(&(), &flat, B, &mut batch_arena).unwrap();
+        let m = plan.output_len();
+        assert_eq!(batched.len(), B * m, "{}", model.name);
+        let batched = batched.to_vec();
+        let mut arena: Arena<f64> = Arena::new();
+        for (s, sample) in samples.iter().enumerate() {
+            let single = plan.execute::<f64>(&(), sample, &mut arena).unwrap();
+            for (i, (b, w)) in batched[s * m..(s + 1) * m].iter().zip(single).enumerate() {
+                assert_eq!(b.to_bits(), w.to_bits(), "{} sample {s} output {i}", model.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn b3_caa_per_sample_bounds_equal_independent_runs_including_residual() {
+    const B: usize = 3;
+    let ctx = Ctx::new();
+    // Explicitly include both graph models next to a sequential chain: the
+    // acceptance case for merge steps under the batch axis.
+    for model in [zoo::scaled_mlp(11, 16, 12, 4), zoo::residual_mlp(12), zoo::residual_cnn(13)] {
+        let plan = Plan::for_analysis(&model).unwrap();
+        let samples = samples_for(&model, B, 10);
+        let flat: Vec<Caa> = samples
+            .iter()
+            .flat_map(|s| caa_point_input(&ctx, s))
+            .collect();
+        let mut batch_arena: Arena<Caa> = Arena::new();
+        let batched =
+            plan.execute_batch::<Caa>(&ctx, &flat, B, &mut batch_arena).unwrap().to_vec();
+        let m = plan.output_len();
+        let mut arena: Arena<Caa> = Arena::new();
+        for (s, sample) in samples.iter().enumerate() {
+            let input = caa_point_input(&ctx, sample);
+            let single = plan.execute::<Caa>(&ctx, &input, &mut arena).unwrap();
+            for (i, (b, w)) in batched[s * m..(s + 1) * m].iter().zip(single).enumerate() {
+                assert_eq!(
+                    b.abs_bound().to_bits(),
+                    w.abs_bound().to_bits(),
+                    "{} sample {s} output {i}: abs bound",
+                    model.name
+                );
+                assert_eq!(
+                    b.rel_bound().to_bits(),
+                    w.rel_bound().to_bits(),
+                    "{} sample {s} output {i}: rel bound",
+                    model.name
+                );
+                assert_eq!(
+                    b.fp().to_bits(),
+                    w.fp().to_bits(),
+                    "{} sample {s} output {i}: trace",
+                    model.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn b4_emulated_witness_per_sample_equality() {
+    const B: usize = 4;
+    let k = 10u32;
+    let ec = EmuCtx { k };
+    for model in [zoo::tiny_cnn(21), zoo::residual_cnn(22)] {
+        // Unfused: the witness flavor sampling_estimate drives.
+        let plan = Plan::unfused(&model).unwrap();
+        let samples = samples_for(&model, B, 11);
+        let flat: Vec<EmulatedFp> = samples
+            .iter()
+            .flat_map(|s| s.iter().map(|&v| EmulatedFp::new(v, k)))
+            .collect();
+        let mut batch_arena: Arena<EmulatedFp> = Arena::new();
+        let batched =
+            plan.execute_batch::<EmulatedFp>(&ec, &flat, B, &mut batch_arena).unwrap().to_vec();
+        let m = plan.output_len();
+        let mut arena: Arena<EmulatedFp> = Arena::new();
+        for (s, sample) in samples.iter().enumerate() {
+            let xe: Vec<EmulatedFp> = sample.iter().map(|&v| EmulatedFp::new(v, k)).collect();
+            let single = plan.execute::<EmulatedFp>(&ec, &xe, &mut arena).unwrap();
+            for (i, (b, w)) in batched[s * m..(s + 1) * m].iter().zip(single).enumerate() {
+                assert_eq!(
+                    b.v.to_bits(),
+                    w.v.to_bits(),
+                    "{} sample {s} output {i}",
+                    model.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn execute_batch_validates_geometry() {
+    let plan = Plan::for_analysis(&zoo::tiny_mlp(2)).unwrap();
+    let mut arena: Arena<f64> = Arena::new();
+    assert!(plan.execute_batch::<f64>(&(), &[0.0; 16], 0, &mut arena).is_err(), "batch 0");
+    assert!(
+        plan.execute_batch::<f64>(&(), &[0.0; 15], 2, &mut arena).is_err(),
+        "length mismatch"
+    );
+}
+
+#[test]
+fn arena_alternates_between_batched_and_single_use() {
+    // One worker arena serves single runs and batched runs interleaved —
+    // the serving reality — without cross-talk.
+    let model = zoo::residual_mlp(31);
+    let plan = Plan::for_analysis(&model).unwrap();
+    let samples = samples_for(&model, 3, 12);
+    let mut arena: Arena<f64> = Arena::new();
+    let single_first = plan.execute::<f64>(&(), &samples[0], &mut arena).unwrap().to_vec();
+    let flat: Vec<f64> = samples.concat();
+    let batched = plan.execute_batch::<f64>(&(), &flat, 3, &mut arena).unwrap().to_vec();
+    let single_again = plan.execute::<f64>(&(), &samples[0], &mut arena).unwrap().to_vec();
+    assert_eq!(single_first, single_again);
+    let m = plan.output_len();
+    assert_eq!(&batched[..m], single_first.as_slice());
+}
+
+#[test]
+fn run_batch_bulk_outcomes_match_per_sample_analysis_on_residual_model() {
+    let model = zoo::residual_mlp(41);
+    let data = Dataset {
+        input_shape: model.input_shape.clone(),
+        inputs: samples_for(&model, 7, 13),
+        labels: vec![0, 1, 2, 0, 1, 2, 0],
+    };
+    let session = Session::builder().workers(2).build();
+    for mode in [ExecMode::Serial, ExecMode::Pooled { workers: 0 }] {
+        let req = AnalysisRequest::builder()
+            .model(model.clone())
+            .data(data.clone())
+            .max_batch(3) // 7 samples -> chunks of 3, 3, 1
+            .mode(mode)
+            .build()
+            .unwrap();
+        let outcomes = session.run_batch(&req).unwrap();
+        assert_eq!(outcomes.len(), 7, "{mode:?}");
+        let plan = Plan::for_analysis(&model).unwrap();
+        let cfg = req.analysis_config();
+        for (i, out) in outcomes.iter().enumerate() {
+            let want = rigor::analysis::analyze_class_with_plan(
+                &plan,
+                &cfg,
+                data.labels[i],
+                &data.inputs[i],
+            )
+            .unwrap();
+            assert_eq!(out.analysis.per_class.len(), 1, "{mode:?} sample {i}");
+            assert_eq!(out.analysis.per_class[0].class, data.labels[i]);
+            assert_eq!(
+                out.analysis.max_abs_u.to_bits(),
+                want.max_abs_u.to_bits(),
+                "{mode:?} sample {i}: abs bound"
+            );
+            assert_eq!(
+                out.analysis.max_rel_u.to_bits(),
+                want.max_rel_u.to_bits(),
+                "{mode:?} sample {i}: rel bound"
+            );
+        }
+    }
+}
+
+#[test]
+fn micro_batcher_bulk_traffic_resolves_to_plan_traces() {
+    let model = zoo::residual_mlp(51);
+    let plan = Arc::new(Plan::for_analysis(&model).unwrap());
+    let session = Session::builder().workers(2).build();
+    let req = AnalysisRequest::builder()
+        .model(model.clone())
+        .input_box()
+        .max_batch(4)
+        .max_wait_ms(1)
+        .build()
+        .unwrap();
+    let batcher = session.serve(&req).unwrap();
+    let samples = samples_for(&model, 11, 14);
+    let tickets: Vec<_> = samples
+        .iter()
+        .map(|s| batcher.submit(s.clone()).unwrap())
+        .collect();
+    let mut arena: Arena<f64> = Arena::new();
+    for (s, t) in samples.iter().zip(tickets) {
+        let got = t.wait().unwrap();
+        let want = plan.execute::<f64>(&(), s, &mut arena).unwrap();
+        assert_eq!(got, want, "served output must equal the direct plan trace");
+    }
+    let m = batcher.metrics();
+    assert_eq!(m.submitted, 11);
+    assert!(m.batches >= 3, "11 requests at max_batch 4 need >= 3 drives, saw {}", m.batches);
+    assert!(m.max_batch_observed <= 4);
+    // The session pool executed the batch jobs.
+    assert!(session.pool().metrics().submitted >= m.batches);
+}
