@@ -14,13 +14,22 @@
 //! 6. the per-sample execution loop vs the batched executor
 //!    (`Plan::execute_batch`) at B=32 for the f64 reference and the
 //!    sampling-baseline workload (plus an informational CAA row backing
-//!    the "CAA stays B=1" design note).
+//!    the "CAA stays B=1" design note). These rows are pinned to
+//!    `KernelPath::Scalar` so they keep measuring what their floors were
+//!    calibrated on — the batching win over the serial scalar loop —
+//!    independent of the blocked kernels,
+//! 7. the scalar vs the **blocked** kernel path (`layers/gemm.rs`:
+//!    register-tiled dense GEMM + im2col conv-as-GEMM) at B=32 — the
+//!    conv zoo models carry a 2x speedup floor; the emulated-k row is
+//!    informational (EmulatedFp pays per-op rounding, so blocking buys
+//!    cache/ILP effects only).
 //!
 //! The bench then **checks thresholds** — the plan must not run slower
-//! than the interpreter, and the f64/sampling batched paths must clear
-//! their speedup floors — printing any regression and recording it in
-//! `BENCH_plan.json`; set `RIGOR_BENCH_ENFORCE=1` to turn regressions
-//! into a nonzero exit (CI uploads the JSON per commit either way).
+//! than the interpreter, and the f64/sampling batched paths and the
+//! blocked conv kernels must clear their speedup floors — printing any
+//! regression and recording it in `BENCH_plan.json`; set
+//! `RIGOR_BENCH_ENFORCE=1` to turn regressions into a nonzero exit (CI
+//! uploads the JSON per commit either way).
 
 #![allow(deprecated)] // forward_interpreted is the baseline under test
 
@@ -31,7 +40,7 @@ use rigor::caa::{Caa, Ctx};
 use rigor::interval::Interval;
 use rigor::json::Value;
 use rigor::model::zoo;
-use rigor::plan::{Arena, Plan};
+use rigor::plan::{Arena, Fusion, KernelPath, Plan};
 use rigor::quant::EmulatedFp;
 use rigor::tensor::{EmuCtx, Tensor};
 use rigor::util::Rng;
@@ -234,8 +243,10 @@ fn main() {
     // (batching overlaps the latency-bound accumulation chains and
     // amortizes dispatch), none for the informational CAA row (per-op CAA
     // cost dwarfs what batching amortizes — the measured ~1x is exactly
-    // why the analysis paths keep CAA at B=1).
-    println!("\nper-sample loop vs batched executor (B = {BATCH}):");
+    // why the analysis paths keep CAA at B=1). Both sides are pinned to
+    // KernelPath::Scalar: these floors quantify the *batching* win over
+    // the serial scalar loop; the blocked-kernel win is section 7's.
+    println!("\nper-sample loop vs batched executor (B = {BATCH}, scalar kernels):");
     const BATCH: usize = 32;
     // (name, batch size, per-sample ns, batched ns, speedup floor)
     let mut batch_rows: Vec<(String, usize, f64, f64, f64)> = Vec::new();
@@ -250,7 +261,10 @@ fn main() {
             .bench(&format!("f64/mlp-256/per-sample-x{BATCH}"), || {
                 let mut acc = 0usize;
                 for s in &samples {
-                    acc += plan.execute::<f64>(&(), s, &mut arena).unwrap().len();
+                    acc += plan
+                        .execute_path::<f64>(&(), s, &mut arena, KernelPath::Scalar)
+                        .unwrap()
+                        .len();
                 }
                 acc
             })
@@ -259,7 +273,15 @@ fn main() {
         let mut batch_arena: Arena<f64> = Arena::new();
         let batched = b
             .bench(&format!("f64/mlp-256/batched-x{BATCH}"), || {
-                plan.execute_batch::<f64>(&(), &flat, BATCH, &mut batch_arena).unwrap().len()
+                plan.execute_batch_path::<f64>(
+                    &(),
+                    &flat,
+                    BATCH,
+                    &mut batch_arena,
+                    KernelPath::Scalar,
+                )
+                .unwrap()
+                .len()
             })
             .mean;
         batch_rows.push((
@@ -287,10 +309,16 @@ fn main() {
             .bench(&format!("sampling-k12/mlp-256/per-sample-x{BATCH}"), || {
                 let mut acc = 0usize;
                 for s in &samples {
-                    acc += plan.execute::<f64>(&(), s, &mut ra).unwrap().len();
+                    acc += plan
+                        .execute_path::<f64>(&(), s, &mut ra, KernelPath::Scalar)
+                        .unwrap()
+                        .len();
                     let xe: Vec<EmulatedFp> =
                         s.iter().map(|&v| EmulatedFp::new(v, k)).collect();
-                    acc += plan.execute::<EmulatedFp>(&ec, &xe, &mut ea).unwrap().len();
+                    acc += plan
+                        .execute_path::<EmulatedFp>(&ec, &xe, &mut ea, KernelPath::Scalar)
+                        .unwrap()
+                        .len();
                 }
                 acc
             })
@@ -303,11 +331,20 @@ fn main() {
             .bench(&format!("sampling-k12/mlp-256/batched-x{BATCH}"), || {
                 // Same work as sampling_estimate's chunk body: the input
                 // conversion is part of the timed workload on both sides.
-                let a = plan.execute_batch::<f64>(&(), &flat, BATCH, &mut rba).unwrap().len();
+                let a = plan
+                    .execute_batch_path::<f64>(&(), &flat, BATCH, &mut rba, KernelPath::Scalar)
+                    .unwrap()
+                    .len();
                 xe.clear();
                 xe.extend(flat.iter().map(|&v| EmulatedFp::new(v, k)));
                 let c = plan
-                    .execute_batch::<EmulatedFp>(&ec, &xe, BATCH, &mut eba)
+                    .execute_batch_path::<EmulatedFp>(
+                        &ec,
+                        &xe,
+                        BATCH,
+                        &mut eba,
+                        KernelPath::Scalar,
+                    )
                     .unwrap()
                     .len();
                 a + c
@@ -379,6 +416,102 @@ fn main() {
         );
     }
 
+    // ---- 7: scalar vs blocked kernel path -----------------------------------
+    // Same plan, same batched drive, only the kernel family differs: the
+    // textbook scalar loops vs layers/gemm.rs (register-tiled dense GEMM,
+    // im2col conv-as-GEMM) — bit-identical outputs, so this is pure
+    // throughput. The conv zoo models carry the enforced 2x floor from
+    // the kernel-dispatch work; the dense-only and emulated-k rows are
+    // informational (EmulatedFp's per-op rounding dominates, so blocking
+    // buys only cache/ILP effects there).
+    println!("\nscalar vs blocked kernels (B = {BATCH}):");
+    // (name, batch, scalar ns, blocked ns, speedup floor)
+    let mut kernel_rows: Vec<(String, usize, f64, f64, f64)> = Vec::new();
+    let res = zoo::residual_cnn(5);
+    {
+        let f64_workloads: [(&str, &rigor::model::Model, f64); 3] = [
+            ("kernels-f64/mlp-256", &mlp, 0.0),
+            ("kernels-f64/tiny-cnn", &cnn, 2.0),
+            ("kernels-f64/residual-cnn", &res, 2.0),
+        ];
+        for (name, model, floor) in f64_workloads {
+            let plan = Plan::build_with_kernels(model, Fusion::Full, KernelPath::Blocked)
+                .expect("compile");
+            let n: usize = model.input_shape.iter().product();
+            let flat: Vec<f64> = (0..BATCH * n).map(|i| (i % 17) as f64 / 17.0).collect();
+            let mut sa: Arena<f64> = Arena::new();
+            let scalar = b
+                .bench(&format!("{name}/scalar-x{BATCH}"), || {
+                    plan.execute_batch_path::<f64>(&(), &flat, BATCH, &mut sa, KernelPath::Scalar)
+                        .unwrap()
+                        .len()
+                })
+                .mean;
+            let mut ba: Arena<f64> = Arena::new();
+            let blocked = b
+                .bench(&format!("{name}/blocked-x{BATCH}"), || {
+                    plan.execute_batch_path::<f64>(&(), &flat, BATCH, &mut ba, KernelPath::Blocked)
+                        .unwrap()
+                        .len()
+                })
+                .mean;
+            kernel_rows.push((
+                name.to_string(),
+                BATCH,
+                scalar.as_nanos() as f64,
+                blocked.as_nanos() as f64,
+                floor,
+            ));
+        }
+    }
+    {
+        // Emulated-k witness on the conv model (unfused, like the real
+        // witness runs). Informational: no floor.
+        let k = 12u32;
+        let ec = EmuCtx { k };
+        let plan =
+            Plan::build_with_kernels(&cnn, Fusion::None, KernelPath::Blocked).expect("compile");
+        let xe: Vec<EmulatedFp> = (0..BATCH * cnn_n)
+            .map(|i| EmulatedFp::new((i % 17) as f64 / 17.0, k))
+            .collect();
+        let mut sa: Arena<EmulatedFp> = Arena::new();
+        let scalar = b
+            .bench(&format!("kernels-emu-k12/tiny-cnn/scalar-x{BATCH}"), || {
+                plan.execute_batch_path::<EmulatedFp>(&ec, &xe, BATCH, &mut sa, KernelPath::Scalar)
+                    .unwrap()
+                    .len()
+            })
+            .mean;
+        let mut ba: Arena<EmulatedFp> = Arena::new();
+        let blocked = b
+            .bench(&format!("kernels-emu-k12/tiny-cnn/blocked-x{BATCH}"), || {
+                plan.execute_batch_path::<EmulatedFp>(&ec, &xe, BATCH, &mut ba, KernelPath::Blocked)
+                    .unwrap()
+                    .len()
+            })
+            .mean;
+        kernel_rows.push((
+            "kernels-emu-k12/tiny-cnn".into(),
+            BATCH,
+            scalar.as_nanos() as f64,
+            blocked.as_nanos() as f64,
+            0.0,
+        ));
+    }
+
+    println!(
+        "{:<28} {:>3} {:>14} {:>14} {:>9} {:>7}",
+        "workload", "B", "scalar", "blocked", "speedup", "floor"
+    );
+    for (name, bsz, s_ns, k_ns, floor) in &kernel_rows {
+        println!(
+            "{name:<28} {bsz:>3} {:>12.1} us {:>12.1} us {:>8.2}x {floor:>6.1}x",
+            s_ns / 1e3,
+            k_ns / 1e3,
+            s_ns / k_ns
+        );
+    }
+
     // ---- threshold check ----------------------------------------------------
     let mut regressions: Vec<String> = Vec::new();
     for (name, i_ns, p_ns) in &comparisons {
@@ -393,6 +526,14 @@ fn main() {
         if *floor > 0.0 && speedup < *floor {
             regressions.push(format!(
                 "{name}: batched speedup {speedup:.2}x below the {floor:.1}x floor"
+            ));
+        }
+    }
+    for (name, _bsz, s_ns, k_ns, floor) in &kernel_rows {
+        let speedup = s_ns / k_ns;
+        if *floor > 0.0 && speedup < *floor {
+            regressions.push(format!(
+                "{name}: blocked-kernel speedup {speedup:.2}x below the {floor:.1}x floor"
             ));
         }
     }
@@ -432,6 +573,24 @@ fn main() {
                             ("per_sample_ns", Value::from(*per_ns)),
                             ("batched_ns", Value::from(*batch_ns)),
                             ("speedup", Value::from(per_ns / batch_ns)),
+                            ("floor", Value::from(*floor)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "kernels",
+            Value::arr(
+                kernel_rows
+                    .iter()
+                    .map(|(name, bsz, s_ns, k_ns, floor)| {
+                        Value::obj(vec![
+                            ("name", Value::from(name.clone())),
+                            ("batch", Value::from(*bsz)),
+                            ("scalar_ns", Value::from(*s_ns)),
+                            ("blocked_ns", Value::from(*k_ns)),
+                            ("speedup", Value::from(s_ns / k_ns)),
                             ("floor", Value::from(*floor)),
                         ])
                     })

@@ -403,21 +403,37 @@ impl Session {
     /// A [`MicroBatcher`] serving the request's model on this session's
     /// worker pool: f64 inference traffic accumulated per the request's
     /// [`max_batch`](AnalysisRequest::max_batch) /
-    /// [`max_wait`](AnalysisRequest::max_wait) knobs and executed as
-    /// single batched plan drives. The served plan is the session's cached
-    /// *analysis* plan, so every served trace is exactly the computation
-    /// the CAA bounds cover. The request's data reference is ignored —
-    /// serving traffic arrives through
+    /// [`max_wait`](AnalysisRequest::max_wait) knobs, bounded by
+    /// [`max_pending`](AnalysisRequest::max_pending) (submits block at
+    /// the bound — backpressure), and executed as single batched plan
+    /// drives — through the blocked kernels unless the request set
+    /// [`force_scalar_kernels`](AnalysisRequest::force_scalar_kernels)
+    /// (bit-identical either way). The served plan is the session's
+    /// cached *analysis* plan, so every served trace is exactly the
+    /// computation the CAA bounds cover. The request's data reference is
+    /// ignored — serving traffic arrives through
     /// [`MicroBatcher::submit`](crate::serve::MicroBatcher::submit).
     pub fn serve(&self, req: &AnalysisRequest) -> Result<MicroBatcher> {
         let plan = match &req.model {
             ModelRef::Path(p) => self.load_compiled(p)?.1,
             ModelRef::Inline(m) => self.inline_plan(m)?,
         };
-        Ok(MicroBatcher::new(
+        // The request's kernel escape hatch: serve the same (cached,
+        // shared) plan but pin its executions to the scalar kernels.
+        let kernels = if req.force_scalar_kernels {
+            crate::plan::KernelPath::Scalar
+        } else {
+            plan.kernel_path()
+        };
+        Ok(MicroBatcher::with_kernel_path(
             plan,
             Arc::clone(&self.pool),
-            BatchPolicy { max_batch: req.max_batch, max_wait: req.max_wait },
+            BatchPolicy {
+                max_batch: req.max_batch,
+                max_wait: req.max_wait,
+                max_pending: req.max_pending,
+            },
+            kernels,
         ))
     }
 

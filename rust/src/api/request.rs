@@ -68,6 +68,8 @@ pub struct AnalysisRequest {
     pub(crate) progress: Option<Arc<ProgressFn>>,
     pub(crate) max_batch: usize,
     pub(crate) max_wait: Duration,
+    pub(crate) max_pending: usize,
+    pub(crate) force_scalar_kernels: bool,
 }
 
 impl AnalysisRequest {
@@ -122,6 +124,27 @@ impl AnalysisRequest {
         self.max_wait
     }
 
+    /// Pending-queue bound for [`Session::serve`](super::Session::serve)'s
+    /// [`BatchPolicy::max_pending`](crate::serve::BatchPolicy): submits
+    /// block (backpressure) once this many samples are queued.
+    pub fn max_pending(&self) -> usize {
+        self.max_pending
+    }
+
+    /// Whether this request's **serving** executions
+    /// ([`Session::serve`](super::Session::serve)'s f64 plan drives) are
+    /// pinned to the scalar kernels
+    /// ([`KernelPath::Scalar`](crate::plan::KernelPath)) — the
+    /// per-request debugging escape hatch. Results are bit-identical
+    /// either way; only throughput differs. The analysis doors
+    /// (`run`/`run_batch`/`certify`/`tune`) execute CAA, which takes the
+    /// scalar kernels unconditionally; to force scalar kernels on *every*
+    /// f64/witness execution in the process, set `RIGOR_FORCE_SCALAR=1`
+    /// instead (read at plan compile time).
+    pub fn force_scalar_kernels(&self) -> bool {
+        self.force_scalar_kernels
+    }
+
     /// The engine-level configuration this request resolves to. Together
     /// with [`AnalysisRequestBuilder::build_config`] (which shares the same
     /// derivation) this is the single place an [`AnalysisConfig`] is
@@ -166,6 +189,8 @@ pub struct AnalysisRequestBuilder {
     progress: Option<Arc<ProgressFn>>,
     max_batch: usize,
     max_wait: Duration,
+    max_pending: Option<usize>,
+    force_scalar_kernels: bool,
 }
 
 impl AnalysisRequestBuilder {
@@ -182,6 +207,8 @@ impl AnalysisRequestBuilder {
             progress: None,
             max_batch: 32,
             max_wait: Duration::from_millis(2),
+            max_pending: None,
+            force_scalar_kernels: false,
         }
     }
 
@@ -298,6 +325,29 @@ impl AnalysisRequestBuilder {
         self
     }
 
+    /// Pending-queue bound for [`Session::serve`](super::Session::serve)
+    /// (default: `32 * max_batch`, at least 1024): once this many samples
+    /// are queued, further submits block until the flusher drains —
+    /// submit-side backpressure that keeps an overloaded batcher's
+    /// memory bounded. Must be `>= max_batch`.
+    pub fn max_pending(mut self, max_pending: usize) -> Self {
+        self.max_pending = Some(max_pending);
+        self
+    }
+
+    /// Pin this request's served f64 executions
+    /// ([`Session::serve`](super::Session::serve)) to the scalar kernels
+    /// instead of the blocked path
+    /// ([`KernelPath::Blocked`](crate::plan::KernelPath)) — the
+    /// per-request debugging escape hatch. Outputs are bit-identical on
+    /// both paths. The analysis doors run CAA (scalar kernels always);
+    /// for a process-wide scalar pin covering every f64/witness
+    /// execution, set the `RIGOR_FORCE_SCALAR` env var instead.
+    pub fn force_scalar_kernels(mut self, force: bool) -> Self {
+        self.force_scalar_kernels = force;
+        self
+    }
+
     fn validate(&self) -> Result<()> {
         if !(self.p_star > 0.5 && self.p_star < 1.0) {
             bail!("p_star must be in (0.5, 1.0), got {}", self.p_star);
@@ -315,6 +365,11 @@ impl AnalysisRequestBuilder {
         }
         if self.max_batch == 0 || self.max_batch > 4096 {
             bail!("max_batch must be in [1, 4096], got {}", self.max_batch);
+        }
+        if let Some(p) = self.max_pending {
+            if p < self.max_batch || p > 1 << 20 {
+                bail!("max_pending must be in [max_batch ({}), 2^20], got {p}", self.max_batch);
+            }
         }
         Ok(())
     }
@@ -341,6 +396,8 @@ impl AnalysisRequestBuilder {
             progress: self.progress,
             max_batch: self.max_batch,
             max_wait: self.max_wait,
+            max_pending: self.max_pending.unwrap_or_else(|| (32 * self.max_batch).max(1024)),
+            force_scalar_kernels: self.force_scalar_kernels,
         })
     }
 
@@ -431,6 +488,48 @@ mod tests {
             .model(zoo::tiny_mlp(1))
             .input_box()
             .max_batch(0)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn backpressure_and_kernel_knobs_validate_and_flow_through() {
+        // Defaults: derived pending bound, blocked kernels.
+        let dflt = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .build()
+            .unwrap();
+        assert_eq!(dflt.max_pending(), 1024);
+        assert!(!dflt.force_scalar_kernels());
+
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .max_batch(4)
+            .max_pending(16)
+            .force_scalar_kernels(true)
+            .build()
+            .unwrap();
+        assert_eq!(req.max_pending(), 16);
+        assert!(req.force_scalar_kernels());
+
+        // Large batches raise the derived default with them.
+        let big = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .max_batch(4096)
+            .build()
+            .unwrap();
+        assert_eq!(big.max_pending(), 32 * 4096);
+
+        // A pending bound below max_batch could never trip the size
+        // trigger — rejected.
+        assert!(AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .max_batch(8)
+            .max_pending(4)
             .build()
             .is_err());
     }

@@ -9,8 +9,10 @@ use super::Padding;
 use crate::tensor::{Scalar, Tensor};
 use anyhow::{bail, Result};
 
-/// Padding offsets (top, left) for the given geometry.
-fn pad_offsets(
+/// Padding offsets (top, left) for the given geometry. Crate-visible:
+/// the blocked im2col lowering ([`super::gemm::Im2col`]) resolves the
+/// same geometry into its patch-index table at plan compile time.
+pub(crate) fn pad_offsets(
     h: usize,
     w: usize,
     kh: usize,

@@ -1,0 +1,623 @@
+//! Blocked, SIMD-friendly compute kernels for the f64/EmulatedFp hot path:
+//! a register-tiled `MR x NR` micro-kernel over packed panels, used for
+//! dense steps (tiled GEMM) and standard convolutions (im2col-as-GEMM).
+//!
+//! ## The bit-identity contract
+//!
+//! These kernels are *reorderings*, never *rewrites*, of the scalar
+//! kernels in `super::dense` / `super::conv`. Every output element is
+//! one reduction chain — `acc = param(bias); acc = acc + x_i * w_i` over
+//! the taps in a fixed order, with exact-zero weights and padded taps
+//! skipped — and different output elements' chains are mathematically
+//! (and floating-point-wise) independent. Tiling therefore interleaves
+//! work **across** chains only: each chain still accumulates the same
+//! terms, in the same left-to-right order, through the same
+//! [`Scalar::mul_param`]/[`Scalar::add`] calls. The result is
+//! bit-identical to the scalar kernels for every deterministic scalar —
+//! the property `rust/tests/kernels.rs` pins across the model zoo for
+//! both `f64` and `EmulatedFp`.
+//!
+//! What the tiles buy: `MR * NR` accumulator chains advance in lockstep,
+//! so the inner loop is throughput-bound (independent FMAs the compiler
+//! can keep in registers and autovectorize over the `NR` lanes) instead
+//! of latency-bound on one serial add chain; packed panels make every
+//! inner-loop operand stream contiguous. The reduction *within* a chain
+//! is never split, so no extra rounding, no changed summation tree.
+//!
+//! Dispatch lives in the plan executor ([`crate::plan`]): the blocked
+//! path is compiled per step at `Plan::build` ([`DensePanel`] /
+//! [`Im2col`] / [`DwTable`]) and taken only for scalars with
+//! [`Scalar::BLOCKED_ELIGIBLE`] — CAA/interval analysis always runs the
+//! scalar kernels. Depthwise convolutions get a tap-table kernel rather
+//! than a GEMM lowering (their per-channel reduction is 9-ish taps —
+//! too short for panel packing to pay — but channels-last layout makes
+//! the channel axis a perfect contiguous SIMD lane set).
+
+use super::conv::pad_offsets;
+use super::Padding;
+use crate::tensor::{Scalar, Tensor};
+
+/// Register-tile rows: output units (dense) / output channels (conv) per
+/// micro-kernel invocation. With [`NR`] this sizes the accumulator block
+/// at `4 x 8 = 32` f64 values — 8 AVX2 vectors, comfortably inside a
+/// 16-register budget with room for the operand streams.
+pub const MR: usize = 4;
+
+/// Register-tile lanes: independent chains the inner loop advances per
+/// row — batch samples (dense) or output pixels (conv). The lane loop is
+/// the autovectorization target (8 f64 = two AVX2 / one AVX-512 vector).
+pub const NR: usize = 8;
+
+/// Sentinel in an [`Im2col`] patch table: this tap falls in the zero
+/// padding and is skipped, exactly like the scalar kernel's bounds
+/// `continue`.
+pub const PAD: usize = usize::MAX;
+
+/// A dense step's weights re-packed for the blocked kernel, built once at
+/// plan compile time.
+#[derive(Clone, Debug)]
+pub struct DensePanel {
+    m: usize,
+    n: usize,
+    /// Row-tile-major panels: tile `jt` occupies
+    /// `wp[jt*n*MR .. (jt+1)*n*MR]`, laid out `[i][r]` so the micro-kernel
+    /// reads `MR` row weights per reduction index `i` from one contiguous
+    /// quad. Rows past `m` in the last tile are zero-filled — the
+    /// exact-zero skip makes them contribute nothing.
+    wp: Vec<f64>,
+}
+
+impl DensePanel {
+    /// Pack `w: [m, n]` into row-tile panels.
+    pub fn pack(w: &Tensor<f64>) -> DensePanel {
+        let (m, n) = (w.shape()[0], w.shape()[1]);
+        let wd = w.data();
+        let tiles = m.div_ceil(MR).max(1);
+        let mut wp = vec![0.0; tiles * n * MR];
+        for j in 0..m {
+            let (jt, r) = (j / MR, j % MR);
+            let tile = &mut wp[jt * n * MR..(jt + 1) * n * MR];
+            for i in 0..n {
+                tile[i * MR + r] = wd[j * n + i];
+            }
+        }
+        DensePanel { m, n, wp }
+    }
+}
+
+/// A standard convolution lowered to GEMM geometry at plan compile time:
+/// the per-output-pixel patch-index table (the "im2col" gather, resolved
+/// once instead of re-deriving `iy`/`ix` per tap per execution) plus the
+/// reduction extents. The kernel tensor itself needs no repacking — the
+/// Keras `[kh, kw, cin, cout]` layout is already `[K][cout]` row-major
+/// over the patch index `p = (ky*kw + kx)*cin + ci`.
+#[derive(Clone, Debug)]
+pub struct Im2col {
+    /// Reduction length `kh * kw * cin`.
+    k: usize,
+    /// Output channels.
+    cout: usize,
+    /// Output pixels `oh * ow`.
+    op: usize,
+    /// Input elements per sample (`h * w * cin`).
+    in_len: usize,
+    /// `table[pix * k + p]` = flat input offset of tap `p` for output
+    /// pixel `pix`, or [`PAD`]. `O(op * k)` `usize`s per conv step,
+    /// owned by the plan (see DESIGN.md "Kernel dispatch" for the
+    /// memory math).
+    table: Vec<usize>,
+}
+
+impl Im2col {
+    /// Build the patch table for one `Conv2D` step. Geometry was already
+    /// validated by shape inference; tap order matches the scalar kernel
+    /// exactly (`ky`, then `kx`, then `ci`).
+    pub fn build(
+        kshape: &[usize],
+        stride: usize,
+        padding: Padding,
+        in_shape: &[usize],
+        out_shape: &[usize],
+    ) -> Im2col {
+        let (kh, kw, cin, cout) = (kshape[0], kshape[1], kshape[2], kshape[3]);
+        let (h, w) = (in_shape[0], in_shape[1]);
+        let (oh, ow) = (out_shape[0], out_shape[1]);
+        let (pad_top, pad_left, _, _) = pad_offsets(h, w, kh, kw, stride, padding);
+        let k = kh * kw * cin;
+        let op = oh * ow;
+        let mut table = vec![PAD; op * k];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = &mut table[(oy * ow + ox) * k..(oy * ow + ox + 1) * k];
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad_top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad_left as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let xoff = (iy as usize * w + ix as usize) * cin;
+                        let p = (ky * kw + kx) * cin;
+                        for ci in 0..cin {
+                            row[p + ci] = xoff + ci;
+                        }
+                    }
+                }
+            }
+        }
+        Im2col { k, cout, op, in_len: h * w * cin, table }
+    }
+}
+
+/// A depthwise convolution's spatial tap table, built once at plan
+/// compile time: `table[pix * taps + t]` = spatial base offset
+/// `iy * w + ix` (multiplied by the channel count at use) of tap
+/// `t = ky * kw + kx` for output pixel `pix`, or [`PAD`].
+#[derive(Clone, Debug)]
+pub struct DwTable {
+    /// Spatial taps `kh * kw`.
+    taps: usize,
+    /// Channels.
+    c: usize,
+    /// Output pixels `oh * ow`.
+    op: usize,
+    /// Input elements per sample (`h * w * c`).
+    in_len: usize,
+    table: Vec<usize>,
+}
+
+impl DwTable {
+    /// Build the tap table for one `DepthwiseConv2D` step (kernel
+    /// `[kh, kw, c]`; geometry already validated by shape inference).
+    pub fn build(
+        kshape: &[usize],
+        stride: usize,
+        padding: Padding,
+        in_shape: &[usize],
+        out_shape: &[usize],
+    ) -> DwTable {
+        let (kh, kw, c) = (kshape[0], kshape[1], kshape[2]);
+        let (h, w) = (in_shape[0], in_shape[1]);
+        let (oh, ow) = (out_shape[0], out_shape[1]);
+        let (pad_top, pad_left, _, _) = pad_offsets(h, w, kh, kw, stride, padding);
+        let taps = kh * kw;
+        let op = oh * ow;
+        let mut table = vec![PAD; op * taps];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = &mut table[(oy * ow + ox) * taps..(oy * ow + ox + 1) * taps];
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad_top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad_left as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        row[ky * kw + kx] = iy as usize * w + ix as usize;
+                    }
+                }
+            }
+        }
+        DwTable { taps, c, op, in_len: h * w * c, table }
+    }
+}
+
+/// Blocked depthwise convolution: [`MR`] output pixels advance in
+/// lockstep, with the (channels-last, contiguous) channel axis as the
+/// inner lane set — `MR * c` independent chains per tile, every operand
+/// stream contiguous. Pad taps are skipped per pixel via the precomputed
+/// [`DwTable`] (one scalar branch, hoisted out of the channel loop);
+/// exact-zero weights are skipped per channel like the scalar kernel.
+/// Appends `batch * op * c` sample-major outputs, bit-identical to
+/// `super::conv::depthwise_batch_into`. `acc` is the arena's panel
+/// scratch, reused as the tile accumulator.
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_blocked<S: Scalar>(
+    ctx: &S::Ctx,
+    dw: &DwTable,
+    kd: &[f64],
+    bias: &[f64],
+    x: &[S],
+    batch: usize,
+    acc: &mut Vec<S>,
+    out: &mut Vec<S>,
+) {
+    let (taps, c, op) = (dw.taps, dw.c, dw.op);
+    debug_assert_eq!(x.len(), batch * dw.in_len, "blocked depthwise input");
+    debug_assert_eq!(kd.len(), taps * c, "depthwise kernel layout");
+    for s in 0..batch {
+        let xs = &x[s * dw.in_len..(s + 1) * dw.in_len];
+        let mut p0 = 0;
+        while p0 < op {
+            let mp = MR.min(op - p0);
+            // Accumulator tile `[pixel][channel]`, seeded with the bias —
+            // the same per-chain start as the scalar kernel.
+            acc.clear();
+            acc.reserve(mp * c);
+            for _ in 0..mp {
+                acc.extend(bias.iter().map(|&bv| S::param(ctx, bv)));
+            }
+            for t in 0..taps {
+                let wrow = &kd[t * c..(t + 1) * c];
+                for r in 0..mp {
+                    let off = dw.table[(p0 + r) * taps + t];
+                    if off == PAD {
+                        continue; // zero-padded tap, skipped for every channel
+                    }
+                    let xrow = &xs[off * c..(off + 1) * c];
+                    let arow = &mut acc[r * c..(r + 1) * c];
+                    for ((a, xv), &wv) in arow.iter_mut().zip(xrow).zip(wrow) {
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        let term = xv.mul_param(wv, ctx);
+                        *a = a.add(&term, ctx);
+                    }
+                }
+            }
+            // Channels-last output is exactly the tile layout: append.
+            out.extend(acc.drain(..));
+            p0 += mp;
+        }
+    }
+}
+
+/// Blocked dense: `out[s*m + j] = b[j] + sum_i x[s*n + i] * w[j,i]` for
+/// `batch` sample-major samples, appended to `out` (mirrors
+/// `super::dense::apply_batch_into`, bit-identically). `pack` is the
+/// arena's panel scratch: per sample tile the inputs are gathered
+/// column-major once and reused across every row tile.
+pub fn dense_blocked<S: Scalar>(
+    ctx: &S::Ctx,
+    pd: &DensePanel,
+    b: &[f64],
+    x: &[S],
+    batch: usize,
+    pack: &mut Vec<S>,
+    out: &mut Vec<S>,
+) {
+    let (m, n) = (pd.m, pd.n);
+    debug_assert_eq!(x.len(), batch * n, "blocked dense input");
+    let base = out.len();
+    out.resize(base + batch * m, S::exact(ctx, 0.0));
+    let out = &mut out[base..];
+    let mut s0 = 0;
+    while s0 < batch {
+        let nrc = NR.min(batch - s0);
+        // Pack the sample panel `[i][c]`: contiguous lane reads in the
+        // micro-kernel, amortized over all m/MR row tiles.
+        pack.clear();
+        pack.reserve(n * nrc);
+        for i in 0..n {
+            for c in 0..nrc {
+                pack.push(x[(s0 + c) * n + i].clone());
+            }
+        }
+        for jt in 0..m.div_ceil(MR) {
+            let j0 = jt * MR;
+            let mrc = MR.min(m - j0);
+            let wp = &pd.wp[jt * n * MR..(jt + 1) * n * MR];
+            // MR x nrc accumulator chains in lockstep over i. Rows past
+            // `m` carry zero-filled weights, so every tap is skipped and
+            // their (unwritten) lanes stay at the dummy bias.
+            let mut acc: [S; MR * NR] = std::array::from_fn(|idx| {
+                let r = idx / NR;
+                S::param(ctx, if r < mrc { b[j0 + r] } else { 0.0 })
+            });
+            for i in 0..n {
+                let ws = &wp[i * MR..i * MR + MR];
+                let xs = &pack[i * nrc..i * nrc + nrc];
+                for (r, &wv) in ws.iter().enumerate() {
+                    if wv == 0.0 {
+                        continue; // same exact-zero skip as dot_bias
+                    }
+                    for (a, xv) in acc[r * NR..r * NR + nrc].iter_mut().zip(xs) {
+                        let term = xv.mul_param(wv, ctx);
+                        *a = a.add(&term, ctx);
+                    }
+                }
+            }
+            for r in 0..mrc {
+                for c in 0..nrc {
+                    out[(s0 + c) * m + j0 + r] = acc[r * NR + c].clone();
+                }
+            }
+        }
+        s0 += nrc;
+    }
+}
+
+/// Blocked standard convolution via im2col-as-GEMM: per pixel tile the
+/// patch values are gathered once through the precomputed index table
+/// into a `[p][lane]` panel (padded taps masked), then the micro-kernel
+/// runs `MR` output channels x `NR` pixels of independent chains over the
+/// patch. Appends `batch * op * cout` sample-major outputs, bit-identical
+/// to `super::conv::conv2d_batch_into`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_blocked<S: Scalar>(
+    ctx: &S::Ctx,
+    ic: &Im2col,
+    kd: &[f64],
+    bias: &[f64],
+    x: &[S],
+    batch: usize,
+    pack: &mut Vec<S>,
+    mask: &mut Vec<bool>,
+    out: &mut Vec<S>,
+) {
+    let (k, cout, op) = (ic.k, ic.cout, ic.op);
+    debug_assert_eq!(x.len(), batch * ic.in_len, "blocked conv input");
+    debug_assert_eq!(kd.len(), k * cout, "conv kernel layout");
+    let base = out.len();
+    out.resize(base + batch * op * cout, S::exact(ctx, 0.0));
+    for s in 0..batch {
+        let xs = &x[s * ic.in_len..(s + 1) * ic.in_len];
+        let out_s = &mut out[base + s * op * cout..base + (s + 1) * op * cout];
+        let mut p0 = 0;
+        while p0 < op {
+            let nrc = NR.min(op - p0);
+            // Gather the patch panel for these pixels (the "im2col"
+            // materialization — K*NR values in arena scratch, never a
+            // full patch matrix). Interior tiles see no padding and take
+            // the mask-free inner loop below.
+            pack.clear();
+            mask.clear();
+            pack.reserve(k * nrc);
+            mask.reserve(k * nrc);
+            let mut all_valid = true;
+            for p in 0..k {
+                for c in 0..nrc {
+                    let off = ic.table[(p0 + c) * k + p];
+                    if off == PAD {
+                        pack.push(S::exact(ctx, 0.0));
+                        mask.push(false);
+                        all_valid = false;
+                    } else {
+                        pack.push(xs[off].clone());
+                        mask.push(true);
+                    }
+                }
+            }
+            let mut c0 = 0;
+            while c0 < cout {
+                let mrc = MR.min(cout - c0);
+                let mut acc: [S; MR * NR] = std::array::from_fn(|idx| {
+                    let r = idx / NR;
+                    S::param(ctx, if r < mrc { bias[c0 + r] } else { 0.0 })
+                });
+                for p in 0..k {
+                    let ws = &kd[p * cout + c0..p * cout + c0 + mrc];
+                    let xrow = &pack[p * nrc..(p + 1) * nrc];
+                    if all_valid {
+                        for (r, &wv) in ws.iter().enumerate() {
+                            if wv == 0.0 {
+                                continue; // same exact-zero skip as the scalar kernel
+                            }
+                            for (a, xv) in acc[r * NR..r * NR + nrc].iter_mut().zip(xrow) {
+                                let term = xv.mul_param(wv, ctx);
+                                *a = a.add(&term, ctx);
+                            }
+                        }
+                    } else {
+                        let ms = &mask[p * nrc..(p + 1) * nrc];
+                        for (r, &wv) in ws.iter().enumerate() {
+                            if wv == 0.0 {
+                                continue;
+                            }
+                            let lanes = acc[r * NR..r * NR + nrc].iter_mut().zip(xrow).zip(ms);
+                            for ((a, xv), &ok) in lanes {
+                                if ok {
+                                    let term = xv.mul_param(wv, ctx);
+                                    *a = a.add(&term, ctx);
+                                }
+                            }
+                        }
+                    }
+                }
+                for r in 0..mrc {
+                    for c in 0..nrc {
+                        out_s[(p0 + c) * cout + c0 + r] = acc[r * NR + c].clone();
+                    }
+                }
+                c0 += mrc;
+            }
+            p0 += nrc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::{conv, dense};
+    use crate::quant::EmulatedFp;
+    use crate::tensor::EmuCtx;
+    use crate::util::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn dense_blocked_bitwise_matches_scalar_all_tail_shapes() {
+        let mut rng = Rng::new(3);
+        // m and batch chosen to hit full tiles, row tails and lane tails.
+        for (m, n) in [(1usize, 1usize), (3, 5), (4, 8), (13, 17), (32, 7)] {
+            let w = Tensor::new(vec![m, n], rand_vec(&mut rng, m * n));
+            let b = rand_vec(&mut rng, m);
+            let pd = DensePanel::pack(&w);
+            for batch in [1usize, 2, 7, 8, 9, 32] {
+                let x = rand_vec(&mut rng, batch * n);
+                let mut scalar = Vec::new();
+                dense::apply_batch_into::<f64>(&(), &w, &b, &x, batch, &mut scalar);
+                let mut blocked = Vec::new();
+                let mut pack = Vec::new();
+                dense_blocked::<f64>(&(), &pd, &b, &x, batch, &mut pack, &mut blocked);
+                assert_eq!(scalar.len(), blocked.len());
+                for (i, (a, c)) in scalar.iter().zip(&blocked).enumerate() {
+                    assert_eq!(a.to_bits(), c.to_bits(), "m={m} n={n} B={batch} out {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_blocked_skips_zero_weights_exactly() {
+        // A zero weight must contribute *nothing* — even against an
+        // infinite activation (the overflowed-witness scenario) or a
+        // negative-zero accumulator.
+        let w = Tensor::new(vec![2, 3], vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0]);
+        let b = vec![0.5, -0.0];
+        let x = vec![1.0, f64::INFINITY, 0.25];
+        let pd = DensePanel::pack(&w);
+        let mut scalar = Vec::new();
+        dense::apply_batch_into::<f64>(&(), &w, &b, &x, 1, &mut scalar);
+        let mut blocked = Vec::new();
+        let mut pack = Vec::new();
+        dense_blocked::<f64>(&(), &pd, &b, &x, 1, &mut pack, &mut blocked);
+        assert!(scalar.iter().all(|v| v.is_finite()), "zero rows skip the inf tap");
+        for (a, c) in scalar.iter().zip(&blocked) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+        // Row 1 is all zeros: the output is exactly the -0.0 bias.
+        assert_eq!(blocked[1].to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn conv_blocked_bitwise_matches_scalar_odd_geometry() {
+        let mut rng = Rng::new(11);
+        // Odd spatial sizes, prime cout, both paddings, stride 2.
+        for (h, w, kh, kw, cin, cout, stride, padding) in [
+            (5usize, 7usize, 3usize, 3usize, 3usize, 5usize, 1usize, Padding::Same),
+            (7, 5, 3, 2, 2, 3, 2, Padding::Valid),
+            (6, 6, 1, 1, 4, 1, 1, Padding::Same),
+            (4, 4, 3, 3, 1, 4, 2, Padding::Same),
+        ] {
+            let kernel =
+                Tensor::new(vec![kh, kw, cin, cout], rand_vec(&mut rng, kh * kw * cin * cout));
+            let bias = rand_vec(&mut rng, cout);
+            let in_shape = vec![h, w, cin];
+            let out_shape =
+                conv::conv2d_output_shape(kernel.shape(), stride, padding, &in_shape).unwrap();
+            let ic = Im2col::build(kernel.shape(), stride, padding, &in_shape, &out_shape);
+            for batch in [1usize, 3] {
+                let x = rand_vec(&mut rng, batch * h * w * cin);
+                let mut scalar = Vec::new();
+                conv::conv2d_batch_into::<f64>(
+                    &(),
+                    &kernel,
+                    &bias,
+                    stride,
+                    padding,
+                    &x,
+                    &in_shape,
+                    &out_shape,
+                    batch,
+                    &mut scalar,
+                );
+                let mut blocked = Vec::new();
+                let (mut pack, mut mask) = (Vec::new(), Vec::new());
+                conv_blocked::<f64>(
+                    &(),
+                    &ic,
+                    kernel.data(),
+                    &bias,
+                    &x,
+                    batch,
+                    &mut pack,
+                    &mut mask,
+                    &mut blocked,
+                );
+                assert_eq!(scalar.len(), blocked.len());
+                for (i, (a, c)) in scalar.iter().zip(&blocked).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        c.to_bits(),
+                        "{h}x{w} k{kh}x{kw} cin{cin} cout{cout} s{stride} B{batch} out {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_blocked_bitwise_matches_scalar() {
+        let mut rng = Rng::new(7);
+        for (h, w, kh, kw, c, stride, padding) in [
+            (5usize, 7usize, 3usize, 3usize, 3usize, 1usize, Padding::Same),
+            (6, 6, 3, 3, 4, 1, Padding::Same),
+            (7, 5, 2, 3, 2, 2, Padding::Valid),
+        ] {
+            let kernel = Tensor::new(vec![kh, kw, c], rand_vec(&mut rng, kh * kw * c));
+            let bias = rand_vec(&mut rng, c);
+            let in_shape = vec![h, w, c];
+            let out_shape =
+                conv::depthwise_output_shape(kernel.shape(), stride, padding, &in_shape).unwrap();
+            let dw = DwTable::build(kernel.shape(), stride, padding, &in_shape, &out_shape);
+            for batch in [1usize, 3] {
+                let x = rand_vec(&mut rng, batch * h * w * c);
+                let mut scalar = Vec::new();
+                conv::depthwise_batch_into::<f64>(
+                    &(),
+                    &kernel,
+                    &bias,
+                    stride,
+                    padding,
+                    &x,
+                    &in_shape,
+                    &out_shape,
+                    batch,
+                    &mut scalar,
+                );
+                let mut blocked = Vec::new();
+                let mut acc = Vec::new();
+                depthwise_blocked::<f64>(
+                    &(),
+                    &dw,
+                    kernel.data(),
+                    &bias,
+                    &x,
+                    batch,
+                    &mut acc,
+                    &mut blocked,
+                );
+                assert_eq!(scalar.len(), blocked.len());
+                for (i, (a, b)) in scalar.iter().zip(&blocked).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{h}x{w} k{kh}x{kw} c{c} s{stride} B{batch} out {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn emulated_fp_blocked_matches_scalar_bitwise() {
+        let mut rng = Rng::new(5);
+        let (m, n, batch) = (7usize, 13usize, 5usize);
+        let w = Tensor::new(vec![m, n], rand_vec(&mut rng, m * n));
+        let b = rand_vec(&mut rng, m);
+        let pd = DensePanel::pack(&w);
+        for k in [6u32, 10, 16] {
+            let ec = EmuCtx { k };
+            let x: Vec<EmulatedFp> =
+                (0..batch * n).map(|_| EmulatedFp::new(rng.range(-2.0, 2.0), k)).collect();
+            let mut scalar = Vec::new();
+            dense::apply_batch_into::<EmulatedFp>(&ec, &w, &b, &x, batch, &mut scalar);
+            let mut blocked = Vec::new();
+            let mut pack = Vec::new();
+            dense_blocked::<EmulatedFp>(&ec, &pd, &b, &x, batch, &mut pack, &mut blocked);
+            for (i, (a, c)) in scalar.iter().zip(&blocked).enumerate() {
+                assert_eq!(a.v.to_bits(), c.v.to_bits(), "k={k} out {i}");
+            }
+        }
+    }
+}

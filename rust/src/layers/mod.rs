@@ -8,12 +8,15 @@
 //! Softmax. Merge layers (graph models only, see [`crate::model::Graph`]):
 //! Add, Concat.
 
-// Kernel modules are crate-visible: the plan executor
+// Scalar kernel modules are crate-visible: the plan executor
 // (`crate::plan::exec`) drives the slice-level `*_into` kernels directly
-// against its arena buffers.
+// against its arena buffers. `gemm` (the blocked f64/EmulatedFp kernel
+// path) is public — its tile constants and bit-identity contract are
+// part of the documented performance surface.
 pub(crate) mod activation;
 pub(crate) mod conv;
 pub(crate) mod dense;
+pub mod gemm;
 pub(crate) mod merge;
 pub(crate) mod norm;
 pub(crate) mod pool;

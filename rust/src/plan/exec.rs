@@ -17,6 +17,20 @@
 //! the pool (a pointer swap), writes it while reading the input buffers,
 //! and puts it back.
 //!
+//! ## Kernel dispatch
+//!
+//! Dense, conv and depthwise steps dispatch through the plan's compiled
+//! [`KernelPath`]: for arithmetics with
+//! [`BLOCKED_ELIGIBLE`](crate::tensor::Scalar::BLOCKED_ELIGIBLE) (`f64`
+//! reference, `EmulatedFp` witness) the blocked kernels in
+//! [`crate::layers::gemm`] run — register-tiled over packed panels held
+//! in this arena, **bit-identical** to the scalar kernels (same terms,
+//! same per-chain order; see the gemm module docs for the contract) —
+//! while CAA/interval executions always take the scalar loops. The
+//! `*_path` method variants force a path per execution (the debugging
+//! escape hatch); pooling, normalization, activations and merges are
+//! scalar on every path (no reduction to tile).
+//!
 //! ## The batch axis
 //!
 //! [`Plan::execute_batch`] runs `B` samples through **one pass over the
@@ -46,39 +60,50 @@
 //! `benches/perf_scaling.rs`), though the batched path is arithmetically
 //! valid — and tested — for every scalar.
 
-use super::{Act, BufId, Plan, StepKind};
-use crate::layers::{activation, conv, dense, merge, norm, pool};
+use super::{Act, BlockedStep, BufId, KernelPath, Plan, StepKind};
+use crate::layers::{activation, conv, dense, gemm, merge, norm, pool};
 use crate::tensor::{Scalar, Tensor};
 use anyhow::{bail, Result};
 
 /// Reusable executor scratch: the plan's buffer pool plus a row scratch
-/// (softmax). One arena per worker thread — obtain a per-thread one with
-/// [`crate::coordinator::with_worker_scratch`]. An arena is plan-agnostic:
-/// it grows to the largest pool any executed plan needs and is reused
-/// across plans and requests.
+/// (softmax) and the blocked kernels' panel scratch (packed sample/patch
+/// panels and the conv pad mask). One arena per worker thread — obtain a
+/// per-thread one with [`crate::coordinator::with_worker_scratch`]. An
+/// arena is plan-agnostic: it grows to the largest pool any executed plan
+/// needs and is reused across plans and requests.
+///
+/// Reservation is **monotonic high-water**: once a pool buffer has been
+/// sized for a batch of `B`, later smaller batches never re-reserve (or
+/// shrink) it, so steady-state execution with fluctuating batch sizes
+/// performs zero arena allocations (asserted by an allocation-counter
+/// test in `rust/tests/kernels.rs`).
 #[derive(Clone, Debug)]
 pub struct Arena<S> {
     pub(crate) bufs: Vec<Vec<S>>,
     pub(crate) scratch: Vec<S>,
+    pub(crate) pack: Vec<S>,
+    pub(crate) pack_mask: Vec<bool>,
+    /// High-water element reservation per pool buffer (what
+    /// [`Arena::reserve_for_batch`] has ever been asked for).
+    reserved: Vec<usize>,
 }
 
 impl<S> Arena<S> {
     /// A fresh, empty arena (buffers materialize on first use).
     pub fn new() -> Arena<S> {
-        Arena { bufs: Vec::new(), scratch: Vec::new() }
+        Arena {
+            bufs: Vec::new(),
+            scratch: Vec::new(),
+            pack: Vec::new(),
+            pack_mask: Vec::new(),
+            reserved: Vec::new(),
+        }
     }
 
     /// Pre-size the pool for `plan` so even the first execution does not
     /// reallocate mid-run.
     pub fn reserve_for(&mut self, plan: &Plan) {
-        while self.bufs.len() < plan.buffer_count() {
-            self.bufs.push(Vec::new());
-        }
-        for (buf, &n) in self.bufs.iter_mut().zip(plan.buffer_lens()) {
-            if buf.capacity() < n {
-                buf.reserve(n - buf.len());
-            }
-        }
+        self.reserve_for_batch(plan, 1);
     }
 
     /// Read a pool buffer (drivers that interleave per-step work — the
@@ -109,17 +134,36 @@ impl<S> Arena<S> {
     /// Pre-size the pool for `plan` executed with a leading batch
     /// dimension: every buffer reserves `buffer_lens[i] * batch` elements
     /// (the sample-major batched layout), so even the first batched
-    /// execution does not reallocate mid-run.
+    /// execution does not reallocate mid-run. The reservation is a
+    /// monotonic high-water mark: a shrinking `batch` (micro-batch
+    /// flushes are rarely full) leaves earlier, larger reservations
+    /// untouched instead of re-deriving capacity per flush — steady-state
+    /// serving therefore never allocates, whatever the batch-size
+    /// sequence.
     pub fn reserve_for_batch(&mut self, plan: &Plan, batch: usize) {
         while self.bufs.len() < plan.buffer_count() {
             self.bufs.push(Vec::new());
         }
-        for (buf, &n) in self.bufs.iter_mut().zip(plan.buffer_lens()) {
+        if self.reserved.len() < self.bufs.len() {
+            self.reserved.resize(self.bufs.len(), 0);
+        }
+        for (i, &n) in plan.buffer_lens().iter().enumerate() {
             let want = n * batch;
-            if buf.capacity() < want {
-                buf.reserve(want - buf.len());
+            if want > self.reserved[i] {
+                self.reserved[i] = want;
+            }
+            let hw = self.reserved[i];
+            let buf = &mut self.bufs[i];
+            if buf.capacity() < hw {
+                buf.reserve(hw - buf.len());
             }
         }
+    }
+
+    /// The high-water element reservation of pool buffer `id` (test /
+    /// diagnostics hook for the monotonic-reservation contract).
+    pub fn reserved_len(&self, id: BufId) -> usize {
+        self.reserved.get(id).copied().unwrap_or(0)
     }
 
     /// Seed the plan's input buffer with `batch` samples laid out
@@ -148,12 +192,30 @@ impl Plan {
     /// Execute the whole plan on `input`, returning a borrow of the pool
     /// buffer holding the output (length [`Plan::output_len`]). The only
     /// runtime check is the input length — every shape and every buffer
-    /// assignment was resolved at build time.
+    /// assignment was resolved at build time. Dispatches kernels per the
+    /// plan's compiled [`KernelPath`]; use [`Plan::execute_path`] to
+    /// force a path per execution.
     pub fn execute<'a, S: Scalar>(
         &self,
         ctx: &S::Ctx,
         input: &[S],
         arena: &'a mut Arena<S>,
+    ) -> Result<&'a [S]> {
+        self.execute_path(ctx, input, arena, self.kernel_path())
+    }
+
+    /// [`Plan::execute`] with an explicit kernel path — the per-execution
+    /// escape hatch ([`KernelPath::Scalar`] forces the textbook loops for
+    /// debugging; results are bit-identical either way). A `Blocked`
+    /// request degrades to scalar when the plan carries no blocked data
+    /// or the arithmetic is not
+    /// [`BLOCKED_ELIGIBLE`](crate::tensor::Scalar::BLOCKED_ELIGIBLE).
+    pub fn execute_path<'a, S: Scalar>(
+        &self,
+        ctx: &S::Ctx,
+        input: &[S],
+        arena: &'a mut Arena<S>,
+        path: KernelPath,
     ) -> Result<&'a [S]> {
         if input.len() != self.input_len() {
             bail!(
@@ -166,7 +228,7 @@ impl Plan {
         }
         arena.load_input(self, input);
         for idx in 0..self.steps().len() {
-            self.execute_step(idx, ctx, arena);
+            self.execute_step_path(idx, ctx, arena, path);
         }
         Ok(&arena.bufs[self.output_buf()])
     }
@@ -175,7 +237,23 @@ impl Plan {
     /// step's input buffers, result left in its output buffer). Exposed
     /// for drivers that interleave per-step work — the mixed-precision
     /// analysis rescales bounds and switches contexts between steps.
+    /// Dispatches per the plan's compiled [`KernelPath`].
     pub fn execute_step<S: Scalar>(&self, idx: usize, ctx: &S::Ctx, arena: &mut Arena<S>) {
+        self.execute_step_path(idx, ctx, arena, self.kernel_path());
+    }
+
+    /// [`Plan::execute_step`] with an explicit kernel path (see
+    /// [`Plan::execute_path`] for the degradation rules).
+    pub fn execute_step_path<S: Scalar>(
+        &self,
+        idx: usize,
+        ctx: &S::Ctx,
+        arena: &mut Arena<S>,
+        path: KernelPath,
+    ) {
+        // Resolve the path for this arithmetic once: CAA/interval (and
+        // any scalar that did not opt in) always run the scalar kernels.
+        let path = if S::BLOCKED_ELIGIBLE { path } else { KernelPath::Scalar };
         let step = &self.steps()[idx];
         debug_assert_eq!(arena.bufs[step.inputs[0]].len(), step.in_len(), "step {idx} input");
 
@@ -198,31 +276,69 @@ impl Plan {
         let mut out = std::mem::take(&mut arena.bufs[step.out]);
         out.clear();
         match &step.kind {
-            StepKind::Dense { w, b } => {
-                dense::apply_into(ctx, w, b, &arena.bufs[step.inputs[0]], &mut out)
+            StepKind::Dense { w, b } => match self.blocked_step(idx, path) {
+                Some(BlockedStep::Dense(pd)) => gemm::dense_blocked(
+                    ctx,
+                    pd,
+                    b,
+                    &arena.bufs[step.inputs[0]],
+                    1,
+                    &mut arena.pack,
+                    &mut out,
+                ),
+                _ => dense::apply_into(ctx, w, b, &arena.bufs[step.inputs[0]], &mut out),
+            },
+            StepKind::Conv2D { kernel, bias, stride, padding } => {
+                match self.blocked_step(idx, path) {
+                    Some(BlockedStep::Conv(ic)) => gemm::conv_blocked(
+                        ctx,
+                        ic,
+                        kernel.data(),
+                        bias,
+                        &arena.bufs[step.inputs[0]],
+                        1,
+                        &mut arena.pack,
+                        &mut arena.pack_mask,
+                        &mut out,
+                    ),
+                    _ => conv::conv2d_into(
+                        ctx,
+                        kernel,
+                        bias,
+                        *stride,
+                        *padding,
+                        &arena.bufs[step.inputs[0]],
+                        step.in_shape(),
+                        &step.out_shape,
+                        &mut out,
+                    ),
+                }
             }
-            StepKind::Conv2D { kernel, bias, stride, padding } => conv::conv2d_into(
-                ctx,
-                kernel,
-                bias,
-                *stride,
-                *padding,
-                &arena.bufs[step.inputs[0]],
-                step.in_shape(),
-                &step.out_shape,
-                &mut out,
-            ),
-            StepKind::DepthwiseConv2D { kernel, bias, stride, padding } => conv::depthwise_into(
-                ctx,
-                kernel,
-                bias,
-                *stride,
-                *padding,
-                &arena.bufs[step.inputs[0]],
-                step.in_shape(),
-                &step.out_shape,
-                &mut out,
-            ),
+            StepKind::DepthwiseConv2D { kernel, bias, stride, padding } => {
+                match self.blocked_step(idx, path) {
+                    Some(BlockedStep::Depthwise(dw)) => gemm::depthwise_blocked(
+                        ctx,
+                        dw,
+                        kernel.data(),
+                        bias,
+                        &arena.bufs[step.inputs[0]],
+                        1,
+                        &mut arena.pack,
+                        &mut out,
+                    ),
+                    _ => conv::depthwise_into(
+                        ctx,
+                        kernel,
+                        bias,
+                        *stride,
+                        *padding,
+                        &arena.bufs[step.inputs[0]],
+                        step.in_shape(),
+                        &step.out_shape,
+                        &mut out,
+                    ),
+                }
+            }
             StepKind::MaxPool2D { ph, pw } => pool::max_pool_into(
                 ctx,
                 *ph,
@@ -329,6 +445,20 @@ impl Plan {
         batch: usize,
         arena: &'a mut Arena<S>,
     ) -> Result<&'a [S]> {
+        self.execute_batch_path(ctx, input, batch, arena, self.kernel_path())
+    }
+
+    /// [`Plan::execute_batch`] with an explicit kernel path (see
+    /// [`Plan::execute_path`] for the degradation rules; per-element
+    /// results are bit-identical across paths).
+    pub fn execute_batch_path<'a, S: Scalar>(
+        &self,
+        ctx: &S::Ctx,
+        input: &[S],
+        batch: usize,
+        arena: &'a mut Arena<S>,
+        path: KernelPath,
+    ) -> Result<&'a [S]> {
         if batch == 0 {
             bail!("plan '{}': batch must be >= 1", self.model_name());
         }
@@ -343,7 +473,7 @@ impl Plan {
         }
         arena.load_batch(self, input, batch);
         for idx in 0..self.steps().len() {
-            self.execute_step_batch(idx, batch, ctx, arena);
+            self.execute_step_batch_path(idx, batch, ctx, arena, path);
         }
         Ok(&arena.bufs[self.output_buf()])
     }
@@ -364,6 +494,20 @@ impl Plan {
         ctx: &S::Ctx,
         arena: &mut Arena<S>,
     ) {
+        self.execute_step_batch_path(idx, batch, ctx, arena, self.kernel_path());
+    }
+
+    /// [`Plan::execute_step_batch`] with an explicit kernel path (see
+    /// [`Plan::execute_path`] for the degradation rules).
+    pub fn execute_step_batch_path<S: Scalar>(
+        &self,
+        idx: usize,
+        batch: usize,
+        ctx: &S::Ctx,
+        arena: &mut Arena<S>,
+        path: KernelPath,
+    ) {
+        let path = if S::BLOCKED_ELIGIBLE { path } else { KernelPath::Scalar };
         let step = &self.steps()[idx];
         debug_assert_eq!(
             arena.bufs[step.inputs[0]].len(),
@@ -386,34 +530,72 @@ impl Plan {
         let mut out = std::mem::take(&mut arena.bufs[step.out]);
         out.clear();
         match &step.kind {
-            StepKind::Dense { w, b } => {
-                dense::apply_batch_into(ctx, w, b, &arena.bufs[step.inputs[0]], batch, &mut out)
-            }
-            StepKind::Conv2D { kernel, bias, stride, padding } => conv::conv2d_batch_into(
-                ctx,
-                kernel,
-                bias,
-                *stride,
-                *padding,
-                &arena.bufs[step.inputs[0]],
-                step.in_shape(),
-                &step.out_shape,
-                batch,
-                &mut out,
-            ),
-            StepKind::DepthwiseConv2D { kernel, bias, stride, padding } => {
-                conv::depthwise_batch_into(
+            StepKind::Dense { w, b } => match self.blocked_step(idx, path) {
+                Some(BlockedStep::Dense(pd)) => gemm::dense_blocked(
                     ctx,
-                    kernel,
-                    bias,
-                    *stride,
-                    *padding,
+                    pd,
+                    b,
                     &arena.bufs[step.inputs[0]],
-                    step.in_shape(),
-                    &step.out_shape,
                     batch,
+                    &mut arena.pack,
                     &mut out,
-                )
+                ),
+                _ => {
+                    dense::apply_batch_into(ctx, w, b, &arena.bufs[step.inputs[0]], batch, &mut out)
+                }
+            },
+            StepKind::Conv2D { kernel, bias, stride, padding } => {
+                match self.blocked_step(idx, path) {
+                    Some(BlockedStep::Conv(ic)) => gemm::conv_blocked(
+                        ctx,
+                        ic,
+                        kernel.data(),
+                        bias,
+                        &arena.bufs[step.inputs[0]],
+                        batch,
+                        &mut arena.pack,
+                        &mut arena.pack_mask,
+                        &mut out,
+                    ),
+                    _ => conv::conv2d_batch_into(
+                        ctx,
+                        kernel,
+                        bias,
+                        *stride,
+                        *padding,
+                        &arena.bufs[step.inputs[0]],
+                        step.in_shape(),
+                        &step.out_shape,
+                        batch,
+                        &mut out,
+                    ),
+                }
+            }
+            StepKind::DepthwiseConv2D { kernel, bias, stride, padding } => {
+                match self.blocked_step(idx, path) {
+                    Some(BlockedStep::Depthwise(dw)) => gemm::depthwise_blocked(
+                        ctx,
+                        dw,
+                        kernel.data(),
+                        bias,
+                        &arena.bufs[step.inputs[0]],
+                        batch,
+                        &mut arena.pack,
+                        &mut out,
+                    ),
+                    _ => conv::depthwise_batch_into(
+                        ctx,
+                        kernel,
+                        bias,
+                        *stride,
+                        *padding,
+                        &arena.bufs[step.inputs[0]],
+                        step.in_shape(),
+                        &step.out_shape,
+                        batch,
+                        &mut out,
+                    ),
+                }
             }
             StepKind::MaxPool2D { ph, pw } => pool::max_pool_batch_into(
                 ctx,

@@ -62,15 +62,84 @@
 //! ([`crate::serve`]) and the sampling baseline. Per-step precision maps
 //! across merge points are the next item to hang off this IR (see
 //! ROADMAP.md "Open items").
+//!
+//! Compute steps additionally carry a compile-time **kernel path**
+//! ([`KernelPath`]): at [`KernelPath::Blocked`] (the default), `Dense`
+//! steps get register-tile-packed weight panels, `Conv2D` steps get a
+//! precomputed im2col patch-index table, `DepthwiseConv2D` steps get a
+//! spatial tap table, and the executor drives them
+//! through the blocked kernels in [`crate::layers::gemm`] for `f64` and
+//! `EmulatedFp` executions — **bit-identical** to the scalar kernels
+//! (tiling crosses only independent reduction chains, never the inside
+//! of a dot product), so CAA/interval passes (which always run scalar)
+//! and blocked reference/witness passes describe the very same
+//! computation. See DESIGN.md "Kernel dispatch".
 
 mod exec;
 
 pub use exec::Arena;
 
-use crate::layers::{Layer, Padding};
+use crate::layers::{gemm, Layer, Padding};
 use crate::model::Model;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
+
+/// Which kernel family the executor drives a plan's compute steps with.
+///
+/// `Blocked` routes dense, conv and depthwise steps through the
+/// register-tiled kernels in [`crate::layers::gemm`] — *only* for
+/// arithmetics that opt in via
+/// [`Scalar::BLOCKED_ELIGIBLE`](crate::tensor::Scalar::BLOCKED_ELIGIBLE)
+/// (`f64`, `EmulatedFp`); CAA/interval executions always take the scalar
+/// kernels regardless of this setting. The blocked kernels are
+/// bit-identical to the scalar ones (tiling crosses only independent
+/// reduction chains), so the choice is pure throughput, never semantics.
+///
+/// Escape hatches for debugging: set the env var `RIGOR_FORCE_SCALAR=1`
+/// to compile every plan at `Scalar` (no blocked step data is built), or
+/// flip a single request with
+/// [`AnalysisRequestBuilder::force_scalar_kernels`](crate::api::AnalysisRequestBuilder::force_scalar_kernels).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// The textbook scalar loops in `layers/{dense,conv}.rs` — the path
+    /// every `S: Scalar` supports, and the only one CAA/interval run.
+    Scalar,
+    /// Cache-blocked, autovectorization-friendly kernels
+    /// (`layers/gemm.rs`) for eligible concrete scalars.
+    Blocked,
+}
+
+impl KernelPath {
+    /// The process-default path: [`KernelPath::Blocked`] unless the
+    /// `RIGOR_FORCE_SCALAR` env var is set (to anything but `0` or
+    /// empty) — the global kill switch for the blocked kernels.
+    pub fn from_env() -> KernelPath {
+        KernelPath::from_env_value(std::env::var_os("RIGOR_FORCE_SCALAR").as_deref())
+    }
+
+    /// Pure parser behind [`KernelPath::from_env`] (unit-testable without
+    /// mutating process state).
+    pub fn from_env_value(v: Option<&std::ffi::OsStr>) -> KernelPath {
+        match v {
+            Some(s) if !s.is_empty() && s != "0" => KernelPath::Scalar,
+            _ => KernelPath::Blocked,
+        }
+    }
+}
+
+/// Per-step data for the blocked kernel path, compiled by [`Plan::build`]
+/// alongside the step (present only on `Dense` / `Conv2D` /
+/// `DepthwiseConv2D` steps of plans compiled at
+/// [`KernelPath::Blocked`]).
+#[derive(Clone, Debug)]
+pub(crate) enum BlockedStep {
+    /// Row-tile-packed dense weights.
+    Dense(gemm::DensePanel),
+    /// Patch-index table lowering the conv to im2col-as-GEMM.
+    Conv(gemm::Im2col),
+    /// Spatial tap table for the channel-lane depthwise kernel.
+    Depthwise(gemm::DwTable),
+}
 
 /// Index of a buffer in the plan's pool (and in the executing
 /// [`Arena`]'s buffer vector).
@@ -290,6 +359,14 @@ pub struct Plan {
     buf_lens: Vec<usize>,
     input_buf: BufId,
     output_buf: BufId,
+    /// Kernel family this plan was compiled for (the default the
+    /// executor uses; callers can force [`KernelPath::Scalar`] per
+    /// execution).
+    kernel_path: KernelPath,
+    /// Index-aligned with `steps`: blocked-kernel data for the steps that
+    /// have a blocked lowering (`Dense`, `Conv2D`, `DepthwiseConv2D`),
+    /// when compiled at [`KernelPath::Blocked`].
+    blocked: Vec<Option<BlockedStep>>,
 }
 
 /// A step during compilation, wired by **value id** (0 = model input,
@@ -324,6 +401,16 @@ impl Plan {
     /// # Ok::<(), anyhow::Error>(())
     /// ```
     pub fn build(model: &Model, fusion: Fusion) -> Result<Plan> {
+        Plan::build_with_kernels(model, fusion, KernelPath::from_env())
+    }
+
+    /// [`Plan::build`] with an explicit kernel family, bypassing the
+    /// `RIGOR_FORCE_SCALAR` env check — the constructor tests, benches
+    /// and tools use to pin a path deterministically. A plan compiled at
+    /// [`KernelPath::Scalar`] carries no blocked step data at all, so a
+    /// blocked execution request on it silently (and soundly) runs
+    /// scalar.
+    pub fn build_with_kernels(model: &Model, fusion: Fusion, kernels: KernelPath) -> Result<Plan> {
         let topo = model.toposort().with_context(|| format!("plan: model '{}'", model.name))?;
         let val_shape = model.value_shapes(&topo).context("plan")?;
         let n_vals = model.layers.len() + 1;
@@ -417,6 +504,41 @@ impl Plan {
 
         let output_buf =
             buf_of_val[topo.output_val].expect("output value placed (empty model: the input)");
+
+        // Blocked-path lowering: pack dense panels and resolve conv
+        // patch-index tables once, at compile time. Shapes are already
+        // validated above, so the gather tables are geometry-check-free.
+        let blocked: Vec<Option<BlockedStep>> = match kernels {
+            KernelPath::Scalar => vec![None; steps.len()],
+            KernelPath::Blocked => steps
+                .iter()
+                .map(|s| match &s.kind {
+                    StepKind::Dense { w, .. } => {
+                        Some(BlockedStep::Dense(gemm::DensePanel::pack(w)))
+                    }
+                    StepKind::Conv2D { kernel, stride, padding, .. } => {
+                        Some(BlockedStep::Conv(gemm::Im2col::build(
+                            kernel.shape(),
+                            *stride,
+                            *padding,
+                            s.in_shape(),
+                            &s.out_shape,
+                        )))
+                    }
+                    StepKind::DepthwiseConv2D { kernel, stride, padding, .. } => {
+                        Some(BlockedStep::Depthwise(gemm::DwTable::build(
+                            kernel.shape(),
+                            *stride,
+                            *padding,
+                            s.in_shape(),
+                            &s.out_shape,
+                        )))
+                    }
+                    _ => None,
+                })
+                .collect(),
+        };
+
         Ok(Plan {
             model_name: model.name.clone(),
             input_shape: model.input_shape.clone(),
@@ -426,6 +548,8 @@ impl Plan {
             buf_lens,
             input_buf,
             output_buf,
+            kernel_path: kernels,
+            blocked,
         })
     }
 
@@ -455,6 +579,23 @@ impl Plan {
     /// The fusion level this plan was compiled at.
     pub fn fusion(&self) -> Fusion {
         self.fusion
+    }
+
+    /// The kernel family this plan was compiled for — the default its
+    /// executions dispatch with ([`KernelPath::Blocked`] unless
+    /// `RIGOR_FORCE_SCALAR` was set at build, or the plan was built via
+    /// [`Plan::build_with_kernels`] at `Scalar`).
+    pub fn kernel_path(&self) -> KernelPath {
+        self.kernel_path
+    }
+
+    /// Blocked-kernel data for step `idx` under the (already
+    /// arithmetic-resolved) `path`, if the step has a blocked lowering.
+    pub(crate) fn blocked_step(&self, idx: usize, path: KernelPath) -> Option<&BlockedStep> {
+        match path {
+            KernelPath::Blocked => self.blocked[idx].as_ref(),
+            KernelPath::Scalar => None,
+        }
     }
 
     /// The compiled steps, in execution (topological) order.

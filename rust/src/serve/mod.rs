@@ -47,7 +47,7 @@
 //! ```
 
 use crate::coordinator::{with_worker_scratch, Pool};
-use crate::plan::{Arena, Plan};
+use crate::plan::{Arena, KernelPath, Plan};
 use anyhow::{anyhow, bail, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -55,7 +55,8 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// When the micro-batcher flushes a pending batch.
+/// When the micro-batcher flushes a pending batch — and how deep the
+/// pending queue may grow before submitters block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BatchPolicy {
     /// Flush as soon as this many samples are pending (also the largest
@@ -64,12 +65,19 @@ pub struct BatchPolicy {
     /// Flush when the **oldest** pending sample has waited this long —
     /// the latency bound a trickle of traffic pays for batching.
     pub max_wait: Duration,
+    /// Upper bound on queued (not yet flushed) samples.
+    /// [`MicroBatcher::submit`] **blocks** while the queue is at this
+    /// bound — submit-side backpressure mirroring
+    /// [`crate::coordinator::Pool::submit`], so overload degrades into
+    /// caller latency instead of unbounded memory. Must be `>=
+    /// max_batch` (otherwise the size trigger could never fire).
+    pub max_pending: usize,
 }
 
 impl Default for BatchPolicy {
-    /// 32-sample batches, 2 ms latency bound.
+    /// 32-sample batches, 2 ms latency bound, 1024 pending samples.
     fn default() -> BatchPolicy {
-        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) }
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2), max_pending: 1024 }
     }
 }
 
@@ -88,6 +96,9 @@ pub struct ServeMetrics {
     pub flushed_drain: usize,
     /// Largest batch dispatched.
     pub max_batch_observed: usize,
+    /// Deepest the pending queue has been (bounded by
+    /// [`BatchPolicy::max_pending`]).
+    pub queue_high_water: usize,
 }
 
 /// One request's result slot: filled exactly once by the batch job,
@@ -142,14 +153,19 @@ struct Counters {
     flushed_timer: AtomicUsize,
     flushed_drain: AtomicUsize,
     max_batch_observed: AtomicUsize,
+    queue_high_water: AtomicUsize,
 }
 
 struct Shared {
     queue: Mutex<QueueState>,
     wake: Condvar,
+    /// Signalled when the flusher drains the queue below
+    /// `policy.max_pending` — what blocked submitters wait on.
+    room: Condvar,
     plan: Arc<Plan>,
     pool: Arc<Pool>,
     policy: BatchPolicy,
+    kernels: KernelPath,
     counters: Counters,
 }
 
@@ -171,15 +187,39 @@ pub struct MicroBatcher {
 }
 
 impl MicroBatcher {
-    /// A batcher serving `plan` (f64 pass) on `pool` under `policy`.
+    /// A batcher serving `plan` (f64 pass) on `pool` under `policy`,
+    /// dispatching kernels per the plan's compiled
+    /// [`KernelPath`](crate::plan::Plan::kernel_path).
     pub fn new(plan: Arc<Plan>, pool: Arc<Pool>, policy: BatchPolicy) -> MicroBatcher {
+        let kernels = plan.kernel_path();
+        MicroBatcher::with_kernel_path(plan, pool, policy, kernels)
+    }
+
+    /// [`MicroBatcher::new`] with an explicit kernel path — how
+    /// [`crate::api::Session::serve`] honors a request's
+    /// `force_scalar_kernels` escape hatch (served outputs are
+    /// bit-identical on either path).
+    pub fn with_kernel_path(
+        plan: Arc<Plan>,
+        pool: Arc<Pool>,
+        policy: BatchPolicy,
+        kernels: KernelPath,
+    ) -> MicroBatcher {
         assert!(policy.max_batch >= 1, "max_batch must be >= 1");
+        assert!(
+            policy.max_pending >= policy.max_batch,
+            "max_pending ({}) must be >= max_batch ({})",
+            policy.max_pending,
+            policy.max_batch
+        );
         let shared = Arc::new(Shared {
             queue: Mutex::new(QueueState { pending: VecDeque::new(), shutdown: false }),
             wake: Condvar::new(),
+            room: Condvar::new(),
             plan,
             pool,
             policy,
+            kernels,
             counters: Counters::default(),
         });
         let flusher = {
@@ -192,8 +232,12 @@ impl MicroBatcher {
         MicroBatcher { shared, flusher: Some(flusher) }
     }
 
-    /// Enqueue one sample (length must match the served plan's input).
-    /// Returns immediately with a [`Ticket`] for the pending output.
+    /// Enqueue one sample (length must match the served plan's input),
+    /// returning a [`Ticket`] for the pending output. **Blocks** while
+    /// [`BatchPolicy::max_pending`] samples are already queued — the
+    /// submit-side backpressure that keeps an overloaded batcher's memory
+    /// bounded (mirroring [`crate::coordinator::Pool::submit`]); errors
+    /// if the batcher shuts down first.
     pub fn submit(&self, sample: Vec<f64>) -> Result<Ticket> {
         if sample.len() != self.shared.plan.input_len() {
             bail!(
@@ -204,18 +248,26 @@ impl MicroBatcher {
             );
         }
         let slot = Arc::new(Slot { state: Mutex::new(None), ready: Condvar::new() });
-        {
+        let depth = {
             let mut q = self.shared.queue.lock().unwrap();
-            if q.shutdown {
-                bail!("serve '{}': batcher is shutting down", self.shared.plan.model_name());
+            loop {
+                if q.shutdown {
+                    bail!("serve '{}': batcher is shutting down", self.shared.plan.model_name());
+                }
+                if q.pending.len() < self.shared.policy.max_pending {
+                    break;
+                }
+                q = self.shared.room.wait(q).unwrap();
             }
             q.pending.push_back(PendingSample {
                 sample,
                 slot: Arc::clone(&slot),
                 enqueued: Instant::now(),
             });
-        }
+            q.pending.len()
+        };
         self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.counters.queue_high_water.fetch_max(depth, Ordering::Relaxed);
         self.shared.wake.notify_all();
         Ok(Ticket { slot })
     }
@@ -230,6 +282,7 @@ impl MicroBatcher {
             flushed_timer: c.flushed_timer.load(Ordering::Relaxed),
             flushed_drain: c.flushed_drain.load(Ordering::Relaxed),
             max_batch_observed: c.max_batch_observed.load(Ordering::Relaxed),
+            queue_high_water: c.queue_high_water.load(Ordering::Relaxed),
         }
     }
 
@@ -246,6 +299,7 @@ impl Drop for MicroBatcher {
             q.shutdown = true;
         }
         self.shared.wake.notify_all();
+        self.shared.room.notify_all(); // blocked submitters bail on shutdown
         if let Some(h) = self.flusher.take() {
             let _ = h.join();
         }
@@ -288,6 +342,12 @@ fn flusher_loop(sh: Arc<Shared>) {
                 }
             }
         };
+        // The drain made room below max_pending: release blocked
+        // submitters (backpressure hand-off). If the pool's own bounded
+        // queue is full, the `submit` below blocks this flusher, which
+        // keeps the pending queue at its bound and the backpressure
+        // chain intact end to end.
+        sh.room.notify_all();
         let c = &sh.counters;
         c.batches.fetch_add(1, Ordering::Relaxed);
         c.max_batch_observed.fetch_max(batch.len(), Ordering::Relaxed);
@@ -297,7 +357,8 @@ fn flusher_loop(sh: Arc<Shared>) {
             FlushCause::Drain => c.flushed_drain.fetch_add(1, Ordering::Relaxed),
         };
         let plan = Arc::clone(&sh.plan);
-        sh.pool.submit(move || run_batch_job(&plan, batch));
+        let kernels = sh.kernels;
+        sh.pool.submit(move || run_batch_job(&plan, kernels, batch));
     }
 }
 
@@ -307,7 +368,7 @@ fn flusher_loop(sh: Arc<Shared>) {
 /// (no intermediate full-batch copy). Every ticket is resolved exactly
 /// once on every path — including a panic inside the drive, which the
 /// pool worker would otherwise swallow, leaving waiters blocked forever.
-fn run_batch_job(plan: &Plan, batch: Vec<PendingSample>) {
+fn run_batch_job(plan: &Plan, kernels: KernelPath, batch: Vec<PendingSample>) {
     let b = batch.len();
     let mut flat: Vec<f64> = Vec::with_capacity(b * plan.input_len());
     for p in &batch {
@@ -315,7 +376,7 @@ fn run_batch_job(plan: &Plan, batch: Vec<PendingSample>) {
     }
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         with_worker_scratch(|arena: &mut Arena<f64>| {
-            match plan.execute_batch::<f64>(&(), &flat, b, arena) {
+            match plan.execute_batch_path::<f64>(&(), &flat, b, arena, kernels) {
                 Ok(out) => {
                     let m = plan.output_len();
                     for (s, p) in batch.iter().enumerate() {
@@ -373,8 +434,11 @@ mod tests {
 
     #[test]
     fn served_outputs_match_direct_execution_bitwise() {
-        let (plan, batcher) =
-            setup(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let (plan, batcher) = setup(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        });
         let tickets: Vec<Ticket> =
             (0..10).map(|i| batcher.submit(sample(i)).unwrap()).collect();
         let mut arena: Arena<f64> = Arena::new();
@@ -396,8 +460,11 @@ mod tests {
     fn full_queue_flushes_without_waiting_for_the_timer() {
         // A generous max_wait: the only way these resolve quickly is the
         // max_batch trigger.
-        let (_, batcher) =
-            setup(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(30) });
+        let (_, batcher) = setup(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_secs(30),
+            ..BatchPolicy::default()
+        });
         let t1 = batcher.submit(sample(0)).unwrap();
         let t2 = batcher.submit(sample(1)).unwrap();
         assert_eq!(t1.wait().unwrap().len(), 3);
@@ -409,8 +476,11 @@ mod tests {
 
     #[test]
     fn drop_drains_pending_tickets() {
-        let (_, batcher) =
-            setup(BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(30) });
+        let (_, batcher) = setup(BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_secs(30),
+            ..BatchPolicy::default()
+        });
         let tickets: Vec<Ticket> =
             (0..3).map(|i| batcher.submit(sample(i)).unwrap()).collect();
         drop(batcher); // shutdown drain must still execute the pending 3
@@ -426,9 +496,95 @@ mod tests {
     }
 
     #[test]
+    fn max_pending_bounds_the_queue_depth() {
+        // Stall the pool with a sleeper so flushed batches back up in the
+        // pool queue while we hammer submit from several threads: the
+        // pending queue's high-water mark must never exceed max_pending.
+        let model = zoo::tiny_mlp(11);
+        let plan = Arc::new(Plan::for_reference(&model).unwrap());
+        let pool = Arc::new(Pool::new(1, 1));
+        pool.submit(|| std::thread::sleep(Duration::from_millis(50)));
+        let batcher = Arc::new(MicroBatcher::with_kernel_path(
+            Arc::clone(&plan),
+            pool,
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), max_pending: 3 },
+            plan.kernel_path(),
+        ));
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let b = Arc::clone(&batcher);
+            handles.push(std::thread::spawn(move || {
+                (0..8)
+                    .map(|i| b.submit(sample(t * 50 + i)).unwrap())
+                    .collect::<Vec<Ticket>>()
+            }));
+        }
+        let mut tickets = Vec::new();
+        for h in handles {
+            tickets.extend(h.join().unwrap());
+        }
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().len(), 3);
+        }
+        let m = batcher.metrics();
+        assert_eq!(m.submitted, 32);
+        assert!(m.queue_high_water <= 3, "queue bound violated: {}", m.queue_high_water);
+        assert!(m.queue_high_water >= 1);
+    }
+
+    #[test]
+    fn shutdown_unblocks_a_backpressured_submitter() {
+        // Queue bound 2, generous timer, and a stalled pool: the third
+        // submit blocks on backpressure; dropping the batcher must wake
+        // it with an error instead of deadlocking.
+        let model = zoo::tiny_mlp(11);
+        let plan = Arc::new(Plan::for_reference(&model).unwrap());
+        let pool = Arc::new(Pool::new(1, 1));
+        pool.submit(|| std::thread::sleep(Duration::from_millis(100)));
+        let batcher = Arc::new(MicroBatcher::with_kernel_path(
+            Arc::clone(&plan),
+            pool,
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(30), max_pending: 2 },
+            plan.kernel_path(),
+        ));
+        let t1 = batcher.submit(sample(0)).unwrap();
+        let t2 = batcher.submit(sample(1)).unwrap();
+        let blocked = {
+            let b = Arc::clone(&batcher);
+            std::thread::spawn(move || b.submit(sample(2)))
+        };
+        std::thread::sleep(Duration::from_millis(20)); // let it block
+        drop(batcher);
+        let r = blocked.join().unwrap();
+        // Either the drain freed a slot before shutdown was observed (the
+        // ticket then resolves) or the submit errored out — never a hang.
+        if let Ok(t3) = r {
+            assert_eq!(t3.wait().unwrap().len(), 3);
+        }
+        assert_eq!(t1.wait().unwrap().len(), 3);
+        assert_eq!(t2.wait().unwrap().len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_pending")]
+    fn policy_rejects_pending_below_batch() {
+        let model = zoo::tiny_mlp(1);
+        let plan = Arc::new(Plan::for_reference(&model).unwrap());
+        let pool = Arc::new(Pool::new(1, 1));
+        let _ = MicroBatcher::new(
+            plan,
+            pool,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1), max_pending: 4 },
+        );
+    }
+
+    #[test]
     fn concurrent_submitters_all_resolve() {
-        let (plan, batcher) =
-            setup(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) });
+        let (plan, batcher) = setup(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        });
         let batcher = Arc::new(batcher);
         let mut handles = Vec::new();
         for t in 0..4usize {

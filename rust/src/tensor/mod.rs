@@ -19,6 +19,19 @@ pub trait Scalar: Clone {
     /// Per-analysis configuration threaded through every operation.
     type Ctx: Sync;
 
+    /// Whether the plan executor may route this arithmetic through the
+    /// blocked (register-tiled, autovectorization-friendly) kernels in
+    /// [`crate::layers::gemm`]. The blocked kernels perform exactly the
+    /// same operations as the scalar kernels, only reordered across
+    /// *independent* reduction chains, so any concrete arithmetic could
+    /// legally opt in — but only the cheap concrete scalars (`f64`
+    /// reference traces, [`crate::quant::EmulatedFp`] witness runs)
+    /// benefit. CAA stays `false` by design: each CAA operation dwarfs
+    /// the loop overhead blocking amortizes, and the analysis contract
+    /// is simplest when the analyzed pass is the textbook scalar loop
+    /// (see DESIGN.md "Kernel dispatch").
+    const BLOCKED_ELIGIBLE: bool = false;
+
     /// Embed a learned parameter (pays a representation rounding).
     fn param(ctx: &Self::Ctx, x: f64) -> Self;
     /// Embed an exactly-representable constant (0, 1, small integers).
@@ -82,6 +95,8 @@ pub trait Scalar: Clone {
 impl Scalar for f64 {
     type Ctx = ();
 
+    const BLOCKED_ELIGIBLE: bool = true;
+
     fn param(_: &(), x: f64) -> f64 {
         x
     }
@@ -132,6 +147,8 @@ pub struct EmuCtx {
 
 impl Scalar for EmulatedFp {
     type Ctx = EmuCtx;
+
+    const BLOCKED_ELIGIBLE: bool = true;
 
     fn param(c: &EmuCtx, x: f64) -> Self {
         EmulatedFp::new(x, c.k)

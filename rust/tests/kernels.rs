@@ -1,0 +1,328 @@
+//! Kernel-dispatch integration tests: the blocked (register-tiled,
+//! im2col) kernel path must be **bit-identical** to the scalar path for
+//! every model in the zoo, for `f64` and `EmulatedFp`, at every batch
+//! size — plus the forced-scalar escape hatches and the arena's
+//! monotonic-reservation (allocation-free steady state) contract.
+
+use rigor::api::{AnalysisRequest, Session};
+use rigor::model::{zoo, Model};
+use rigor::plan::{Arena, Fusion, KernelPath, Plan};
+use rigor::quant::EmulatedFp;
+use rigor::tensor::EmuCtx;
+use rigor::util::Rng;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+// ---- allocation counter ---------------------------------------------------
+// A counting wrapper around the system allocator, with a per-thread
+// counter so concurrently running tests don't pollute each other's
+// measurements. `try_with` keeps the hook safe during TLS teardown.
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; the counter hook has no
+// effect on allocation behavior.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+// ---- helpers --------------------------------------------------------------
+
+/// The whole zoo, residual models included. `scaled_mlp` gets prime-ish
+/// dims so dense tiles see row *and* lane tails.
+fn zoo_models() -> Vec<Model> {
+    vec![
+        zoo::tiny_mlp(1),
+        zoo::tiny_cnn(2),
+        zoo::tiny_pendulum(3),
+        zoo::scaled_mlp(4, 13, 17, 5),
+        zoo::residual_mlp(5),
+        zoo::residual_cnn(6),
+    ]
+}
+
+fn batch_input(model: &Model, batch: usize, seed: u64) -> Vec<f64> {
+    let n: usize = model.input_shape.iter().product();
+    let mut rng = Rng::new(seed);
+    (0..batch * n).map(|_| rng.range(-1.0, 1.0)).collect()
+}
+
+fn assert_bits_eq(scalar: &[f64], blocked: &[f64], what: &str) {
+    assert_eq!(scalar.len(), blocked.len(), "{what}: length");
+    for (i, (a, b)) in scalar.iter().zip(blocked).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: element {i} ({a} vs {b})");
+    }
+}
+
+// ---- bit-identity across the zoo ------------------------------------------
+
+#[test]
+fn blocked_path_bit_identical_across_zoo_f64() {
+    // Both fusion levels the f64 paths actually run: Full (reference
+    // trace) and Pair (the analysis plan's trace, served by the
+    // micro-batcher).
+    for model in zoo_models() {
+        for fusion in [Fusion::Full, Fusion::Pair] {
+            let plan = Plan::build_with_kernels(&model, fusion, KernelPath::Blocked).unwrap();
+            for batch in [1usize, 7, 32] {
+                let flat = batch_input(&model, batch, 0xF0 + batch as u64);
+                let mut sa: Arena<f64> = Arena::new();
+                let scalar = plan
+                    .execute_batch_path::<f64>(&(), &flat, batch, &mut sa, KernelPath::Scalar)
+                    .unwrap()
+                    .to_vec();
+                let mut ba: Arena<f64> = Arena::new();
+                let blocked = plan
+                    .execute_batch_path::<f64>(&(), &flat, batch, &mut ba, KernelPath::Blocked)
+                    .unwrap()
+                    .to_vec();
+                assert_bits_eq(&scalar, &blocked, &format!("{} B={batch}", model.name));
+            }
+            // The single-sample entry point dispatches separately.
+            let one = batch_input(&model, 1, 0x51);
+            let mut sa: Arena<f64> = Arena::new();
+            let scalar = plan
+                .execute_path::<f64>(&(), &one, &mut sa, KernelPath::Scalar)
+                .unwrap()
+                .to_vec();
+            let mut ba: Arena<f64> = Arena::new();
+            let blocked = plan
+                .execute_path::<f64>(&(), &one, &mut ba, KernelPath::Blocked)
+                .unwrap()
+                .to_vec();
+            assert_bits_eq(&scalar, &blocked, &format!("{} single", model.name));
+        }
+    }
+}
+
+#[test]
+fn blocked_path_bit_identical_across_zoo_emulated() {
+    // The witness configuration: unfused plans (the analyzed
+    // computation), emulated precision-k arithmetic.
+    for model in zoo_models() {
+        let plan = Plan::build_with_kernels(&model, Fusion::None, KernelPath::Blocked).unwrap();
+        for k in [8u32, 12] {
+            let ec = EmuCtx { k };
+            for batch in [1usize, 7, 32] {
+                let xe: Vec<EmulatedFp> = batch_input(&model, batch, 0xE0 + batch as u64)
+                    .iter()
+                    .map(|&v| EmulatedFp::new(v, k))
+                    .collect();
+                let mut sa: Arena<EmulatedFp> = Arena::new();
+                let scalar: Vec<f64> = plan
+                    .execute_batch_path::<EmulatedFp>(&ec, &xe, batch, &mut sa, KernelPath::Scalar)
+                    .unwrap()
+                    .iter()
+                    .map(|e| e.v)
+                    .collect();
+                let mut ba: Arena<EmulatedFp> = Arena::new();
+                let blocked: Vec<f64> = plan
+                    .execute_batch_path::<EmulatedFp>(&ec, &xe, batch, &mut ba, KernelPath::Blocked)
+                    .unwrap()
+                    .iter()
+                    .map(|e| e.v)
+                    .collect();
+                assert_bits_eq(&scalar, &blocked, &format!("{} k={k} B={batch}", model.name));
+            }
+        }
+    }
+}
+
+#[test]
+fn odd_and_prime_shapes_hit_every_tile_tail() {
+    // Ad-hoc models whose dims divide neither MR (4) nor NR (8): dense
+    // 13 -> 29 -> 3, and a conv stack with prime channel counts, odd
+    // spatial extent, stride 2 and both paddings.
+    use rigor::layers::{Layer, Padding};
+    let mut rng = Rng::new(42);
+    let dense_net = Model {
+        name: "prime_mlp".into(),
+        input_shape: vec![13],
+        layers: vec![
+            zoo::dense(&mut rng, 13, 29),
+            Layer::Relu,
+            zoo::dense(&mut rng, 29, 3),
+            Layer::Softmax,
+        ],
+        graph: None,
+    };
+    let conv_net = Model {
+        name: "prime_cnn".into(),
+        input_shape: vec![7, 5, 3],
+        layers: vec![
+            zoo::conv2d(&mut rng, 3, 3, 3, 5, 1, Padding::Same),
+            Layer::Relu,
+            zoo::conv2d(&mut rng, 3, 3, 5, 2, 2, Padding::Valid),
+            zoo::depthwise(&mut rng, 2, 2, 2, 1, Padding::Same),
+            Layer::Flatten,
+            zoo::dense(&mut rng, 3 * 2 * 2, 3),
+            Layer::Softmax,
+        ],
+        graph: None,
+    };
+    for model in [dense_net, conv_net] {
+        let plan = Plan::build_with_kernels(&model, Fusion::Pair, KernelPath::Blocked).unwrap();
+        for batch in [1usize, 5, 9] {
+            let flat = batch_input(&model, batch, 0xAB);
+            let mut sa: Arena<f64> = Arena::new();
+            let scalar = plan
+                .execute_batch_path::<f64>(&(), &flat, batch, &mut sa, KernelPath::Scalar)
+                .unwrap()
+                .to_vec();
+            let mut ba: Arena<f64> = Arena::new();
+            let blocked = plan
+                .execute_batch_path::<f64>(&(), &flat, batch, &mut ba, KernelPath::Blocked)
+                .unwrap()
+                .to_vec();
+            assert_bits_eq(&scalar, &blocked, &format!("{} B={batch}", model.name));
+        }
+    }
+}
+
+// ---- escape hatches -------------------------------------------------------
+
+#[test]
+fn env_value_parser_controls_the_default_path() {
+    // The pure parser behind RIGOR_FORCE_SCALAR (tested without mutating
+    // process-global env, which would race parallel tests).
+    use std::ffi::OsStr;
+    assert_eq!(KernelPath::from_env_value(None), KernelPath::Blocked);
+    assert_eq!(KernelPath::from_env_value(Some(OsStr::new(""))), KernelPath::Blocked);
+    assert_eq!(KernelPath::from_env_value(Some(OsStr::new("0"))), KernelPath::Blocked);
+    assert_eq!(KernelPath::from_env_value(Some(OsStr::new("1"))), KernelPath::Scalar);
+    assert_eq!(KernelPath::from_env_value(Some(OsStr::new("yes"))), KernelPath::Scalar);
+}
+
+#[test]
+fn scalar_compiled_plans_degrade_blocked_requests() {
+    // A plan compiled at Scalar carries no blocked data: requesting the
+    // blocked path must silently run scalar, not panic.
+    let model = zoo::tiny_cnn(3);
+    let plan = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Scalar).unwrap();
+    assert_eq!(plan.kernel_path(), KernelPath::Scalar);
+    let x = batch_input(&model, 4, 9);
+    let mut a: Arena<f64> = Arena::new();
+    let forced = plan
+        .execute_batch_path::<f64>(&(), &x, 4, &mut a, KernelPath::Blocked)
+        .unwrap()
+        .to_vec();
+    let mut b: Arena<f64> = Arena::new();
+    let scalar = plan
+        .execute_batch_path::<f64>(&(), &x, 4, &mut b, KernelPath::Scalar)
+        .unwrap()
+        .to_vec();
+    assert_bits_eq(&scalar, &forced, "scalar-compiled plan");
+}
+
+#[test]
+fn forced_scalar_request_round_trips_through_serve() {
+    // The AnalysisRequest escape hatch: a forced-scalar serve must
+    // deliver bit-identical outputs to the default (blocked) serve.
+    let session = Session::builder().workers(2).build();
+    let mk = |force: bool| {
+        AnalysisRequest::builder()
+            .model(zoo::tiny_cnn(7))
+            .input_box()
+            .max_batch(4)
+            .max_wait_ms(1)
+            .force_scalar_kernels(force)
+            .build()
+            .unwrap()
+    };
+    let forced_req = mk(true);
+    assert!(forced_req.force_scalar_kernels());
+    let n: usize = zoo::tiny_cnn(7).input_shape.iter().product();
+    let sample = |i: usize| -> Vec<f64> { (0..n).map(|j| ((i + j) % 13) as f64 / 13.0).collect() };
+
+    let blocked_out: Vec<Vec<f64>> = {
+        let batcher = session.serve(&mk(false)).unwrap();
+        let tickets: Vec<_> = (0..6).map(|i| batcher.submit(sample(i)).unwrap()).collect();
+        tickets.into_iter().map(|t| t.wait().unwrap()).collect()
+    };
+    let scalar_out: Vec<Vec<f64>> = {
+        let batcher = session.serve(&forced_req).unwrap();
+        let tickets: Vec<_> = (0..6).map(|i| batcher.submit(sample(i)).unwrap()).collect();
+        tickets.into_iter().map(|t| t.wait().unwrap()).collect()
+    };
+    for (i, (b, s)) in blocked_out.iter().zip(&scalar_out).enumerate() {
+        assert_bits_eq(s, b, &format!("served sample {i}"));
+    }
+}
+
+// ---- arena reservation ----------------------------------------------------
+
+#[test]
+fn arena_reservation_is_monotonic_high_water() {
+    let model = zoo::tiny_mlp(1);
+    let plan = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+    let mut arena: Arena<f64> = Arena::new();
+    arena.reserve_for_batch(&plan, 32);
+    let hw: Vec<usize> = (0..plan.buffer_count()).map(|i| arena.reserved_len(i)).collect();
+    assert_eq!(hw[0], plan.buffer_lens()[0] * 32);
+    // A smaller batch must not lower any reservation.
+    arena.reserve_for_batch(&plan, 3);
+    for (i, &h) in hw.iter().enumerate() {
+        assert_eq!(arena.reserved_len(i), h, "buffer {i} reservation shrank");
+    }
+    // A larger one raises it.
+    arena.reserve_for_batch(&plan, 64);
+    assert_eq!(arena.reserved_len(0), plan.buffer_lens()[0] * 64);
+}
+
+#[test]
+fn steady_state_batched_execution_is_allocation_free() {
+    // The serving steady state: one warmed arena, flushes of fluctuating
+    // batch size. After warmup at the high-water batch, *zero* heap
+    // allocations may happen on this thread across further drives —
+    // including shrink-then-regrow sequences (the monotonic-reservation
+    // bugfix) and the blocked kernels' panel scratch.
+    let model = zoo::tiny_cnn(9);
+    let plan = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+    let big = batch_input(&model, 32, 1);
+    let n: usize = model.input_shape.iter().product();
+    let small = &big[..7 * n];
+    let mut arena: Arena<f64> = Arena::new();
+    for _ in 0..2 {
+        plan.execute_batch::<f64>(&(), &big, 32, &mut arena).unwrap();
+    }
+    plan.execute_batch::<f64>(&(), small, 7, &mut arena).unwrap();
+
+    let before = thread_allocs();
+    for _ in 0..5 {
+        plan.execute_batch::<f64>(&(), small, 7, &mut arena).unwrap();
+        plan.execute_batch::<f64>(&(), &big, 32, &mut arena).unwrap();
+        plan.execute_batch::<f64>(&(), &big[..n], 1, &mut arena).unwrap();
+    }
+    let allocs = thread_allocs() - before;
+    assert_eq!(allocs, 0, "steady-state batched execution performed {allocs} allocations");
+}
