@@ -22,11 +22,19 @@
 //!    register-tiled dense GEMM + im2col conv-as-GEMM) at B=32 — the
 //!    conv zoo models carry a 2x speedup floor; the emulated-k row is
 //!    informational (EmulatedFp pays per-op rounding, so blocking buys
-//!    cache/ILP effects only).
+//!    cache/ILP effects only),
+//! 8. multi-model fleet serving: a 2-model mixed f64/emulated-k12 load
+//!    through one `fleet::Fleet` (four concurrent precision-tagged
+//!    queues on a shared pool) vs the serialized single-model baseline
+//!    (one `MicroBatcher` per lane, lanes run back to back). The fleet
+//!    row carries a 0.8x floor — multiplexing overhead must stay
+//!    bounded even where the box is too loaded for cross-model overlap
+//!    to pay.
 //!
 //! The bench then **checks thresholds** — the plan must not run slower
-//! than the interpreter, and the f64/sampling batched paths and the
-//! blocked conv kernels must clear their speedup floors — printing any
+//! than the interpreter, and the f64/sampling batched paths, the
+//! blocked conv kernels, and the fleet row must clear their speedup
+//! floors — printing any
 //! regression and recording it in `BENCH_plan.json`; set
 //! `RIGOR_BENCH_ENFORCE=1` to turn regressions into a nonzero exit (CI
 //! uploads the JSON per commit either way).
@@ -512,6 +520,120 @@ fn main() {
         );
     }
 
+    // ---- 8: multi-model fleet vs serialized single-model serving ------------
+    // The same 2-model mixed-precision load (tiny-cnn + residual-cnn, each
+    // serving f64 AND emulated-k12 traffic) pushed through ONE Fleet with
+    // four concurrent submitters, versus the serialized baseline: one
+    // single-model MicroBatcher per (model, format) lane, lanes run one
+    // after another. Results are bit-identical by construction (same plans,
+    // same batch job); this row measures what the fleet's fair multiplexing
+    // buys — cross-model overlap on the shared pool — net of its scheduler
+    // overhead. Floor 0.8x: the fleet must never cost more than 20% of the
+    // serialized throughput even on a loaded single-core CI box (it
+    // typically lands well above 1x by overlapping lanes).
+    // (name, total tickets, serialized ns, fleet ns, speedup floor)
+    let mut fleet_rows: Vec<(String, usize, f64, f64, f64)> = Vec::new();
+    {
+        use rigor::coordinator::Pool;
+        use rigor::fleet::{Fleet, FleetPolicy};
+        use rigor::plan::ServeFormat;
+        use rigor::serve::{BatchPolicy, MicroBatcher};
+        use std::sync::Arc;
+        use std::time::Duration;
+
+        const FLEET_REQS: usize = 24;
+        fn lane_sample(n: usize, i: usize) -> Vec<f64> {
+            (0..n).map(|j| ((i * n + j) % 17) as f64 / 17.0).collect()
+        }
+
+        println!("\nfleet scheduling (2 models x 2 formats, {FLEET_REQS} tickets/queue):");
+        let emu = ServeFormat::Emulated { k: 12 };
+        let res_n: usize = res.input_shape.iter().product();
+        let lanes: [(&'static str, ServeFormat, usize); 4] = [
+            ("tiny-cnn", ServeFormat::F64, cnn_n),
+            ("tiny-cnn", emu, cnn_n),
+            ("residual-cnn", ServeFormat::F64, res_n),
+            ("residual-cnn", emu, res_n),
+        ];
+        let model_for = |id: &str| if id == "tiny-cnn" { &cnn } else { &res };
+
+        let serialized = b
+            .bench("fleet/serialized-baseline", || {
+                let mut total = 0usize;
+                for &(id, fmt, n) in &lanes {
+                    let plan = Arc::new(Plan::for_format(model_for(id), fmt).unwrap());
+                    let kernels = plan.kernel_path();
+                    let batcher = MicroBatcher::with_format(
+                        plan,
+                        Arc::new(Pool::new(4, 32)),
+                        BatchPolicy {
+                            max_batch: 8,
+                            max_wait: Duration::from_micros(200),
+                            max_pending: 256,
+                        },
+                        kernels,
+                        fmt,
+                    );
+                    let tickets: Vec<_> = (0..FLEET_REQS)
+                        .map(|i| batcher.submit(lane_sample(n, i)).unwrap())
+                        .collect();
+                    total += tickets.into_iter().map(|t| t.wait().unwrap().len()).sum::<usize>();
+                }
+                total
+            })
+            .mean;
+
+        let fleet_mean = b
+            .bench("fleet/mixed-2model", || {
+                let fleet = Arc::new(Fleet::new(
+                    Arc::new(Pool::new(4, 32)),
+                    FleetPolicy {
+                        max_batch: 8,
+                        max_wait: Duration::from_micros(200),
+                        max_queue_pending: 256,
+                        max_fleet_pending: 1024,
+                    },
+                ));
+                fleet.deploy("tiny-cnn", &cnn).unwrap();
+                fleet.deploy("residual-cnn", &res).unwrap();
+                let handles: Vec<_> = lanes
+                    .iter()
+                    .map(|&(id, fmt, n)| {
+                        let f = Arc::clone(&fleet);
+                        std::thread::spawn(move || {
+                            let tickets: Vec<_> = (0..FLEET_REQS)
+                                .map(|i| f.submit_blocking(id, fmt, lane_sample(n, i)).unwrap())
+                                .collect();
+                            tickets.into_iter().map(|t| t.wait().unwrap().len()).sum::<usize>()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+            })
+            .mean;
+
+        fleet_rows.push((
+            "fleet/2-model-mixed-precision".into(),
+            4 * FLEET_REQS,
+            serialized.as_nanos() as f64,
+            fleet_mean.as_nanos() as f64,
+            0.8,
+        ));
+
+        println!(
+            "{:<28} {:>7} {:>14} {:>14} {:>9} {:>7}",
+            "workload", "tickets", "serialized", "fleet", "speedup", "floor"
+        );
+        for (name, tickets, base_ns, fleet_ns, floor) in &fleet_rows {
+            println!(
+                "{name:<28} {tickets:>7} {:>12.1} us {:>12.1} us {:>8.2}x {floor:>6.1}x",
+                base_ns / 1e3,
+                fleet_ns / 1e3,
+                base_ns / fleet_ns
+            );
+        }
+    }
+
     // ---- threshold check ----------------------------------------------------
     let mut regressions: Vec<String> = Vec::new();
     for (name, i_ns, p_ns) in &comparisons {
@@ -534,6 +656,14 @@ fn main() {
         if *floor > 0.0 && speedup < *floor {
             regressions.push(format!(
                 "{name}: blocked-kernel speedup {speedup:.2}x below the {floor:.1}x floor"
+            ));
+        }
+    }
+    for (name, _tickets, base_ns, fleet_ns, floor) in &fleet_rows {
+        let speedup = base_ns / fleet_ns;
+        if *floor > 0.0 && speedup < *floor {
+            regressions.push(format!(
+                "{name}: fleet speedup {speedup:.2}x vs serialized serving below the {floor:.1}x floor"
             ));
         }
     }
@@ -591,6 +721,24 @@ fn main() {
                             ("scalar_ns", Value::from(*s_ns)),
                             ("blocked_ns", Value::from(*k_ns)),
                             ("speedup", Value::from(s_ns / k_ns)),
+                            ("floor", Value::from(*floor)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "fleet",
+            Value::arr(
+                fleet_rows
+                    .iter()
+                    .map(|(name, tickets, base_ns, fleet_ns, floor)| {
+                        Value::obj(vec![
+                            ("name", Value::from(name.clone())),
+                            ("tickets", Value::from(*tickets)),
+                            ("serialized_ns", Value::from(*base_ns)),
+                            ("fleet_ns", Value::from(*fleet_ns)),
+                            ("speedup", Value::from(base_ns / fleet_ns)),
                             ("floor", Value::from(*floor)),
                         ])
                     })

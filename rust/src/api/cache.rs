@@ -44,6 +44,11 @@ struct CacheEntry {
     /// The compiled analysis plan ([`Plan::for_analysis`]) — cached next
     /// to the model so every `Session` request skips recompilation.
     plan: Arc<Plan>,
+    /// Content version of this path: 1 on first load, +1 every time the
+    /// file's content hash changes. Hot-swap consumers
+    /// ([`crate::api::FleetHandle::deploy_path`]) compare versions to
+    /// decide whether a redeploy is a real swap or a no-op.
+    version: u64,
     last_used: u64,
 }
 
@@ -55,6 +60,12 @@ pub(crate) struct ModelCache {
     hits: u64,
     misses: u64,
     entries: HashMap<PathBuf, CacheEntry>,
+    /// Content-version ledger `path -> (hash, version)`. Deliberately
+    /// *not* LRU-evicted (it holds no model or plan, just two words per
+    /// path ever seen), so a path reloaded after eviction resumes its
+    /// version sequence instead of restarting at 1 — an edit across an
+    /// eviction still reads as a version bump.
+    versions: HashMap<PathBuf, (u64, u64)>,
 }
 
 /// Read a model file and hash its content — the part of a cached load
@@ -91,6 +102,7 @@ impl ModelCache {
             hits: 0,
             misses: 0,
             entries: HashMap::new(),
+            versions: HashMap::new(),
         }
     }
 
@@ -101,13 +113,13 @@ impl ModelCache {
         &mut self,
         path: &Path,
         content_hash: u64,
-    ) -> Option<(Arc<Model>, Arc<Plan>)> {
+    ) -> Option<(Arc<Model>, Arc<Plan>, u64)> {
         self.tick += 1;
         if let Some(e) = self.entries.get_mut(path) {
             if e.content_hash == content_hash {
                 e.last_used = self.tick;
                 self.hits += 1;
-                return Some((Arc::clone(&e.model), Arc::clone(&e.plan)));
+                return Some((Arc::clone(&e.model), Arc::clone(&e.plan), e.version));
             }
         }
         self.misses += 1;
@@ -115,15 +127,23 @@ impl ModelCache {
     }
 
     /// Insert a freshly parsed + compiled model, evicting the
-    /// least-recently-used entry when at capacity.
+    /// least-recently-used entry when at capacity. Returns the entry's
+    /// content version (bumped when the path's content hash changed since
+    /// the previous insert, stable across same-content re-inserts).
     pub(crate) fn insert(
         &mut self,
         path: &Path,
         content_hash: u64,
         model: Arc<Model>,
         plan: Arc<Plan>,
-    ) {
+    ) -> u64 {
         self.tick += 1;
+        let version = match self.versions.get(path) {
+            Some((h, v)) if *h == content_hash => *v,
+            Some((_, v)) => v + 1,
+            None => 1,
+        };
+        self.versions.insert(path.to_path_buf(), (content_hash, version));
         if !self.entries.contains_key(path) && self.entries.len() >= self.capacity {
             if let Some(lru) = self
                 .entries
@@ -136,8 +156,9 @@ impl ModelCache {
         }
         self.entries.insert(
             path.to_path_buf(),
-            CacheEntry { content_hash, model, plan, last_used: self.tick },
+            CacheEntry { content_hash, model, plan, version, last_used: self.tick },
         );
+        version
     }
 
     /// Single-threaded convenience (unit tests): read + hash + probe +
@@ -147,7 +168,7 @@ impl ModelCache {
     #[cfg(test)]
     pub(crate) fn load(&mut self, path: &Path) -> Result<Arc<Model>> {
         let (text, hash) = read_and_hash(path)?;
-        if let Some((m, _)) = self.lookup(path, hash) {
+        if let Some((m, _, _)) = self.lookup(path, hash) {
             return Ok(m);
         }
         let model = parse_model(&text, path)?;
@@ -224,6 +245,35 @@ mod tests {
         assert_eq!(cache.stats().hits, 2, "path 0 must still be resident");
         cache.load(&paths[1]).unwrap();
         assert_eq!(cache.stats().misses, 4, "path 1 must have been evicted");
+    }
+
+    #[test]
+    fn content_versions_bump_on_edit_and_survive_eviction() {
+        let dir = tmpdir("versions");
+        let path = dir.join("m.json");
+        let other = dir.join("other.json");
+        zoo::tiny_mlp(1).save(&path).unwrap();
+        zoo::tiny_mlp(9).save(&other).unwrap();
+
+        let mut cache = ModelCache::new(1);
+        let (text, hash) = read_and_hash(&path).unwrap();
+        let model = parse_model(&text, &path).unwrap();
+        let plan = compile_analysis(&model, &path).unwrap();
+        let v1 = cache.insert(&path, hash, Arc::clone(&model), Arc::clone(&plan));
+        assert_eq!(v1, 1);
+        // Same content re-inserted (racing loaders): version is stable.
+        assert_eq!(cache.insert(&path, hash, Arc::clone(&model), Arc::clone(&plan)), 1);
+        assert_eq!(cache.lookup(&path, hash).unwrap().2, 1);
+
+        // Evict the entry (capacity 1), then reload an *edited* file: the
+        // ledger survives eviction, so the edit still reads as a bump.
+        cache.load(&other).unwrap();
+        zoo::tiny_mlp(2).save(&path).unwrap();
+        let (text2, hash2) = read_and_hash(&path).unwrap();
+        assert_ne!(hash, hash2, "different weights must hash differently");
+        let model2 = parse_model(&text2, &path).unwrap();
+        let plan2 = compile_analysis(&model2, &path).unwrap();
+        assert_eq!(cache.insert(&path, hash2, model2, plan2), 2);
     }
 
     #[test]

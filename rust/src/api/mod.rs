@@ -52,12 +52,14 @@ pub use crate::analysis::{ClassAnalysis, ModelAnalysis};
 use crate::analysis::{self, mixed};
 use crate::coordinator::Pool;
 use crate::data::Dataset;
+use crate::fleet::{AdmitError, Fleet, FleetPolicy, FleetSnapshot};
 use crate::model::Model;
-use crate::plan::Plan;
-use crate::serve::{BatchPolicy, MicroBatcher};
+use crate::plan::{Plan, ServeFormat};
+use crate::serve::{BatchPolicy, MicroBatcher, Ticket};
 use crate::util::Stopwatch;
 use anyhow::Result;
-use std::path::Path;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 /// A long-lived analysis service: worker pool + model cache. Cheap to keep
@@ -149,17 +151,28 @@ impl Session {
     /// cold model may both parse+compile it (last insert wins), which is
     /// benign.
     pub fn load_compiled(&self, path: &Path) -> Result<(Arc<Model>, Arc<Plan>)> {
+        let (model, plan, _) = self.load_compiled_versioned(path)?;
+        Ok((model, plan))
+    }
+
+    /// [`Self::load_compiled`] that also returns the cache entry's
+    /// **content version** — 1 on first load, bumped each time the file's
+    /// content hash changes (stable across eviction). Hot-swap consumers
+    /// ([`FleetHandle::deploy_path`]) compare versions to distinguish a
+    /// real redeploy from a no-op.
+    pub fn load_compiled_versioned(&self, path: &Path) -> Result<(Arc<Model>, Arc<Plan>, u64)> {
         let (text, hash) = cache::read_and_hash(path)?;
         if let Some(hit) = self.cache.lock().unwrap().lookup(path, hash) {
             return Ok(hit);
         }
         let model = cache::parse_model(&text, path)?;
         let plan = cache::compile_analysis(&model, path)?;
-        self.cache
+        let version = self
+            .cache
             .lock()
             .unwrap()
             .insert(path, hash, Arc::clone(&model), Arc::clone(&plan));
-        Ok((model, plan))
+        Ok((model, plan, version))
     }
 
     fn resolve(&self, req: &AnalysisRequest) -> Result<(Arc<Model>, Arc<Plan>, Arc<Dataset>)> {
@@ -408,15 +421,33 @@ impl Session {
     /// the bound — backpressure), and executed as single batched plan
     /// drives — through the blocked kernels unless the request set
     /// [`force_scalar_kernels`](AnalysisRequest::force_scalar_kernels)
-    /// (bit-identical either way). The served plan is the session's
-    /// cached *analysis* plan, so every served trace is exactly the
-    /// computation the CAA bounds cover. The request's data reference is
-    /// ignored — serving traffic arrives through
-    /// [`MicroBatcher::submit`](crate::serve::MicroBatcher::submit).
+    /// (bit-identical either way). For f64 traffic the served plan is the
+    /// session's cached *analysis* plan, so every served trace is exactly
+    /// the computation the CAA bounds cover; a request built with
+    /// [`emulated_k`](AnalysisRequestBuilder::emulated_k) serves
+    /// **emulated-`k` arithmetic** instead, through the unfused
+    /// witness-convention plan ([`Plan::for_format`]) so every served
+    /// result is bit-identical to the offline
+    /// [`emulated_forward`](crate::quant::emulated_forward) witness. The
+    /// request's data reference is ignored — serving traffic arrives
+    /// through [`MicroBatcher::submit`](crate::serve::MicroBatcher::submit).
     pub fn serve(&self, req: &AnalysisRequest) -> Result<MicroBatcher> {
-        let plan = match &req.model {
-            ModelRef::Path(p) => self.load_compiled(p)?.1,
-            ModelRef::Inline(m) => self.inline_plan(m)?,
+        let format = req.serve_format();
+        let plan = match format {
+            ServeFormat::F64 => match &req.model {
+                ModelRef::Path(p) => self.load_compiled(p)?.1,
+                ModelRef::Inline(m) => self.inline_plan(m)?,
+            },
+            ServeFormat::Emulated { .. } => {
+                // Emulated serving cannot reuse the cached analysis plan:
+                // the certified emulated trace follows the *unfused* step
+                // convention, so compile the format's own plan.
+                let model = match &req.model {
+                    ModelRef::Path(p) => self.load_compiled(p)?.0,
+                    ModelRef::Inline(m) => Arc::clone(m),
+                };
+                Arc::new(Plan::for_format(&model, format)?)
+            }
         };
         // The request's kernel escape hatch: serve the same (cached,
         // shared) plan but pin its executions to the scalar kernels.
@@ -425,7 +456,7 @@ impl Session {
         } else {
             plan.kernel_path()
         };
-        Ok(MicroBatcher::with_kernel_path(
+        Ok(MicroBatcher::with_format(
             plan,
             Arc::clone(&self.pool),
             BatchPolicy {
@@ -434,7 +465,25 @@ impl Session {
                 max_pending: req.max_pending,
             },
             kernels,
+            format,
         ))
+    }
+
+    /// A multi-model serving [`FleetHandle`] on this session's worker
+    /// pool with the default [`FleetPolicy`]: deploy models under string
+    /// ids, submit precision-tagged samples, hot-swap under traffic. See
+    /// [`crate::fleet`] for the scheduling semantics.
+    pub fn fleet(&self) -> FleetHandle<'_> {
+        self.fleet_with(FleetPolicy::default())
+    }
+
+    /// [`Session::fleet`] with explicit batching/admission knobs.
+    pub fn fleet_with(&self, policy: FleetPolicy) -> FleetHandle<'_> {
+        FleetHandle {
+            session: self,
+            fleet: Fleet::new(Arc::clone(&self.pool), policy),
+            deployed: Mutex::new(HashMap::new()),
+        }
     }
 
     /// The paper's §V semi-automatic precision-tailoring loop: re-run the
@@ -481,6 +530,91 @@ impl Session {
         let (model, data) = self.resolve_uncompiled(req)?;
         let cfg = req.analysis_config();
         mixed::tune_mixed(&model, &data, &cfg, k_uniform, k_floor)
+    }
+}
+
+/// The session's multi-model serving front end: a [`Fleet`] on the
+/// session's worker pool, plus cache-integrated deployment. Where the
+/// bare fleet deploys in-memory [`Model`]s, the handle also deploys from
+/// model *files* through the session's content-hash LRU
+/// ([`FleetHandle::deploy_path`]): the cache's content **versions** make
+/// redeploying an unchanged file a no-op and an edited file a real hot
+/// swap — in-flight tickets drain on the old plans either way.
+///
+/// Dropping the handle shuts the fleet down (drains every queue, resolves
+/// every admitted ticket).
+pub struct FleetHandle<'s> {
+    session: &'s Session,
+    fleet: Fleet,
+    /// `model_id -> (file, cache content version)` of the last path-based
+    /// deploy — the no-op-redeploy ledger.
+    deployed: Mutex<HashMap<String, (PathBuf, u64)>>,
+}
+
+impl FleetHandle<'_> {
+    /// Deploy (or hot-swap) an in-memory model under `model_id`. Returns
+    /// the fleet's deployment version. See [`Fleet::deploy`].
+    pub fn deploy(&self, model_id: &str, model: &Model) -> Result<u64> {
+        self.fleet.deploy(model_id, model)
+    }
+
+    /// Deploy (or hot-swap) the model stored at `path` under `model_id`,
+    /// loaded through the session's content-hash LRU cache. Redeploying
+    /// the same path with unchanged content is a **no-op** (no swap, no
+    /// recompile beyond the cache probe); an edited file bumps the cache's
+    /// content version and performs a real hot swap. Returns the fleet's
+    /// deployment version either way.
+    pub fn deploy_path(&self, model_id: &str, path: &Path) -> Result<u64> {
+        let (model, _plan, cache_version) = self.session.load_compiled_versioned(path)?;
+        let mut deployed = self.deployed.lock().unwrap();
+        if let Some((p, v)) = deployed.get(model_id) {
+            if p == path && *v == cache_version {
+                if let Some(fv) = self.fleet.version(model_id) {
+                    return Ok(fv);
+                }
+            }
+        }
+        let fv = self.fleet.deploy(model_id, &model)?;
+        deployed.insert(model_id.to_string(), (path.to_path_buf(), cache_version));
+        Ok(fv)
+    }
+
+    /// Submit one `format`-tagged sample for `model_id` (non-blocking
+    /// typed admission). See [`Fleet::submit`].
+    pub fn submit(
+        &self,
+        model_id: &str,
+        format: ServeFormat,
+        sample: Vec<f64>,
+    ) -> std::result::Result<Ticket, AdmitError> {
+        self.fleet.submit(model_id, format, sample)
+    }
+
+    /// Blocking submit (backpressure instead of typed rejection on the
+    /// queue caps). See [`Fleet::submit_blocking`].
+    pub fn submit_blocking(
+        &self,
+        model_id: &str,
+        format: ServeFormat,
+        sample: Vec<f64>,
+    ) -> std::result::Result<Ticket, AdmitError> {
+        self.fleet.submit_blocking(model_id, format, sample)
+    }
+
+    /// Per-queue and fleet-wide counters. See [`Fleet::snapshot`].
+    pub fn snapshot(&self) -> FleetSnapshot {
+        self.fleet.snapshot()
+    }
+
+    /// The underlying scheduler, for knobs the handle doesn't re-export.
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    /// Drain and stop the fleet (also run on drop). See
+    /// [`Fleet::shutdown`].
+    pub fn shutdown(&self) {
+        self.fleet.shutdown();
     }
 }
 
@@ -620,6 +754,59 @@ mod tests {
         let mut arena = crate::plan::Arena::new();
         let want = plan.execute::<f64>(&(), &sample, &mut arena).unwrap();
         assert_eq!(got, want, "served trace must equal the analysis plan's f64 trace");
+    }
+
+    #[test]
+    fn serve_emulated_k_matches_offline_witness_bitwise() {
+        let session = Session::builder().workers(2).build();
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(42))
+            .input_box()
+            .max_batch(4)
+            .max_wait_ms(1)
+            .emulated_k(10)
+            .build()
+            .unwrap();
+        let batcher = session.serve(&req).unwrap();
+        let sample: Vec<f64> = (0..8).map(|i| i as f64 / 8.0).collect();
+        let got = batcher.submit(sample.clone()).unwrap().wait().unwrap();
+        let plan = crate::plan::Plan::unfused(&zoo::tiny_mlp(42)).unwrap();
+        let want = crate::quant::emulated_forward(&plan, 10, &sample).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "served emulated trace must equal the witness");
+        }
+    }
+
+    #[test]
+    fn fleet_front_door_routes_and_hot_swaps_via_cache_versions() {
+        let dir = std::env::temp_dir().join("rigor_api_fleet");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.json");
+        zoo::tiny_mlp(61).save(&path).unwrap();
+
+        let session = Session::builder().workers(2).build();
+        let fleet = session.fleet();
+        assert_eq!(fleet.deploy_path("m", &path).unwrap(), 1);
+        // Unchanged file: redeploy is a no-op, not a swap.
+        assert_eq!(fleet.deploy_path("m", &path).unwrap(), 1);
+        assert_eq!(fleet.snapshot().swaps, 0);
+
+        let sample: Vec<f64> = (0..8).map(|i| i as f64 / 8.0).collect();
+        let got = fleet
+            .submit("m", ServeFormat::F64, sample.clone())
+            .unwrap()
+            .wait()
+            .unwrap();
+        let plan = crate::plan::Plan::for_reference(&zoo::tiny_mlp(61)).unwrap();
+        let mut arena = crate::plan::Arena::new();
+        let want = plan.execute::<f64>(&(), &sample, &mut arena).unwrap();
+        assert_eq!(got, want, "fleet-served f64 trace must equal the reference plan");
+
+        // Edited file: the content version bumps, so this is a real swap.
+        zoo::tiny_mlp(62).save(&path).unwrap();
+        assert_eq!(fleet.deploy_path("m", &path).unwrap(), 2);
+        assert_eq!(fleet.snapshot().swaps, 1);
     }
 
     #[test]

@@ -70,6 +70,7 @@ pub struct AnalysisRequest {
     pub(crate) max_wait: Duration,
     pub(crate) max_pending: usize,
     pub(crate) force_scalar_kernels: bool,
+    pub(crate) emulated_k: Option<u32>,
 }
 
 impl AnalysisRequest {
@@ -145,6 +146,19 @@ impl AnalysisRequest {
         self.force_scalar_kernels
     }
 
+    /// The serving arithmetic this request resolves to:
+    /// [`ServeFormat::Emulated`](crate::plan::ServeFormat) at the
+    /// requested `k` when [`emulated_k`](AnalysisRequestBuilder::emulated_k)
+    /// was set, the f64 reference otherwise. Read by
+    /// [`Session::serve`](super::Session::serve) to pick the served plan
+    /// and batch arithmetic.
+    pub fn serve_format(&self) -> crate::plan::ServeFormat {
+        match self.emulated_k {
+            Some(k) => crate::plan::ServeFormat::Emulated { k },
+            None => crate::plan::ServeFormat::F64,
+        }
+    }
+
     /// The engine-level configuration this request resolves to. Together
     /// with [`AnalysisRequestBuilder::build_config`] (which shares the same
     /// derivation) this is the single place an [`AnalysisConfig`] is
@@ -191,6 +205,7 @@ pub struct AnalysisRequestBuilder {
     max_wait: Duration,
     max_pending: Option<usize>,
     force_scalar_kernels: bool,
+    emulated_k: Option<u32>,
 }
 
 impl AnalysisRequestBuilder {
@@ -209,6 +224,7 @@ impl AnalysisRequestBuilder {
             max_wait: Duration::from_millis(2),
             max_pending: None,
             force_scalar_kernels: false,
+            emulated_k: None,
         }
     }
 
@@ -348,6 +364,19 @@ impl AnalysisRequestBuilder {
         self
     }
 
+    /// Serve this request's traffic in **emulated-`k` arithmetic** instead
+    /// of f64: [`Session::serve`](super::Session::serve) compiles the
+    /// unfused witness-convention plan
+    /// ([`Plan::for_format`](crate::plan::Plan::for_format)) and batches
+    /// execute as `EmulatedFp { k }`, so every served result is
+    /// bit-identical to the offline
+    /// [`emulated_forward`](crate::quant::emulated_forward) witness at the
+    /// same `k` — serve what you certified. `k` must be in `[2, 53]`.
+    pub fn emulated_k(mut self, k: u32) -> Self {
+        self.emulated_k = Some(k);
+        self
+    }
+
     fn validate(&self) -> Result<()> {
         if !(self.p_star > 0.5 && self.p_star < 1.0) {
             bail!("p_star must be in (0.5, 1.0), got {}", self.p_star);
@@ -370,6 +399,9 @@ impl AnalysisRequestBuilder {
             if p < self.max_batch || p > 1 << 20 {
                 bail!("max_pending must be in [max_batch ({}), 2^20], got {p}", self.max_batch);
             }
+        }
+        if let Some(k) = self.emulated_k {
+            crate::plan::ServeFormat::Emulated { k }.validate()?;
         }
         Ok(())
     }
@@ -398,6 +430,7 @@ impl AnalysisRequestBuilder {
             max_wait: self.max_wait,
             max_pending: self.max_pending.unwrap_or_else(|| (32 * self.max_batch).max(1024)),
             force_scalar_kernels: self.force_scalar_kernels,
+            emulated_k: self.emulated_k,
         })
     }
 
@@ -530,6 +563,39 @@ mod tests {
             .input_box()
             .max_batch(8)
             .max_pending(4)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn emulated_k_knob_validates_and_flows_through() {
+        use crate::plan::ServeFormat;
+        let dflt = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .build()
+            .unwrap();
+        assert_eq!(dflt.serve_format(), ServeFormat::F64);
+
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .emulated_k(12)
+            .build()
+            .unwrap();
+        assert_eq!(req.serve_format(), ServeFormat::Emulated { k: 12 });
+
+        // k outside the representable mantissa range is rejected at build.
+        assert!(AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .emulated_k(1)
+            .build()
+            .is_err());
+        assert!(AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .emulated_k(54)
             .build()
             .is_err());
     }

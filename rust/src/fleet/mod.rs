@@ -1,0 +1,920 @@
+//! **The multi-model serving fleet** — precision-tagged routing over many
+//! micro-batch queues, flushed fairly onto one coordinator [`Pool`].
+//!
+//! The single-plan [`crate::serve::MicroBatcher`] batches one model in one
+//! arithmetic. Production traffic (the ROADMAP's fleet direction) is many
+//! models and **mixed precision**: some callers want the f64 reference,
+//! others the emulated-k arithmetic their certified precision bound was
+//! computed for. The [`Fleet`] scheduler owns one pending queue per
+//! `(model, format)` pair — the [`ServeFormat`] tag on every submitted
+//! sample routes it into the right per-format sub-batch, so one model
+//! serves `f64` and `EmulatedFp{k}` traffic concurrently through its
+//! separately-compiled plans ([`Plan::for_format`]: fused reference for
+//! f64, unfused witness-convention for emulated — served emulated results
+//! are bit-identical to [`crate::quant::emulated_forward`]).
+//!
+//! **Fairness.** A single flusher thread walks the queues in rotation
+//! (round-robin over *ripe* queues — full, timer-expired, or shutdown
+//! drain), dispatching at most one batch per queue per pass, so a hot
+//! model can never starve a cold one: every ripe queue is visited within
+//! one rotation, and the latency bound [`FleetPolicy::max_wait`] ripens a
+//! trickle-traffic queue no matter how busy the rest of the fleet is.
+//!
+//! **Admission control.** Layered on the serve layer's blocking
+//! backpressure: [`Fleet::submit`] *rejects* with a typed [`AdmitError`]
+//! (per-queue cap, fleet-wide cap, unknown model, bad geometry) instead of
+//! blocking, so front ends can shed load; [`Fleet::submit_blocking`]
+//! keeps the classic block-until-room behavior for in-process callers.
+//!
+//! **Hot swap.** [`Fleet::deploy`] atomically replaces a model's compiled
+//! [`PlanSet`] under traffic. Every pending sample pins the `Arc` of the
+//! plan set it was admitted under, and a flush never crosses a version
+//! boundary (the batch drain stops at the first sample pinning a
+//! different set), so in-flight tickets drain on the **old** plan while
+//! new submits route to the new one — no dropped or misrouted ticket.
+//!
+//! **Shutdown ordering.** [`Fleet::shutdown`] wakes submitters blocked on
+//! backpressure across *all* queues, lets the flusher drain every queue,
+//! then waits for all in-flight pool flushes to finish — when it returns,
+//! every admitted ticket has been resolved.
+//!
+//! ```
+//! use rigor::coordinator::Pool;
+//! use rigor::fleet::{Fleet, FleetPolicy};
+//! use rigor::model::zoo;
+//! use rigor::plan::ServeFormat;
+//! use std::sync::Arc;
+//!
+//! let fleet = Fleet::new(Arc::new(Pool::new(2, 16)), FleetPolicy::default());
+//! fleet.deploy("mlp", &zoo::tiny_mlp(1))?;
+//! let f = fleet.submit("mlp", ServeFormat::F64, vec![0.1; 8])?;
+//! let e = fleet.submit("mlp", ServeFormat::Emulated { k: 12 }, vec![0.1; 8])?;
+//! assert_eq!(f.wait()?.len(), 3);
+//! assert_eq!(e.wait()?.len(), 3);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use crate::coordinator::Pool;
+use crate::model::Model;
+use crate::plan::{Fusion, KernelPath, Plan, ServeFormat};
+use crate::serve::{run_batch_job, PendingSample, ServeMetrics, Slot, Ticket};
+use anyhow::Result;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Batching and admission knobs for a [`Fleet`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FleetPolicy {
+    /// Largest batch one flush dispatches (per queue).
+    pub max_batch: usize,
+    /// Flush a queue when its **oldest** pending sample has waited this
+    /// long — the per-queue latency bound that also guarantees fairness
+    /// for trickle traffic.
+    pub max_wait: Duration,
+    /// Per-queue pending cap: [`Fleet::submit`] rejects with
+    /// [`AdmitError::QueueFull`] at this depth. Must be `>= max_batch`.
+    pub max_queue_pending: usize,
+    /// Fleet-wide pending cap across all queues:
+    /// [`AdmitError::FleetFull`] at this depth. Must be
+    /// `>= max_queue_pending`.
+    pub max_fleet_pending: usize,
+}
+
+impl Default for FleetPolicy {
+    /// 32-sample batches, 2 ms latency bound, 1024 pending per queue,
+    /// 4096 fleet-wide.
+    fn default() -> FleetPolicy {
+        FleetPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            max_queue_pending: 1024,
+            max_fleet_pending: 4096,
+        }
+    }
+}
+
+/// Why the fleet refused a sample — the typed rejection that replaces
+/// unbounded blocking at the admission boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// No model deployed under this id.
+    UnknownModel {
+        /// The id the caller asked for.
+        model: String,
+    },
+    /// The format tag failed validation (emulated `k` outside `2..=53`).
+    BadFormat {
+        /// The rejected format.
+        format: ServeFormat,
+    },
+    /// The sample length does not match the model's input geometry.
+    WrongLen {
+        /// Target model id.
+        model: String,
+        /// Expected input length.
+        expected: usize,
+        /// Submitted sample length.
+        got: usize,
+    },
+    /// The `(model, format)` queue is at
+    /// [`FleetPolicy::max_queue_pending`].
+    QueueFull {
+        /// Target model id.
+        model: String,
+        /// Target format.
+        format: ServeFormat,
+        /// The queue's depth at rejection time.
+        depth: usize,
+    },
+    /// The whole fleet is at [`FleetPolicy::max_fleet_pending`].
+    FleetFull {
+        /// Total pending samples at rejection time.
+        depth: usize,
+    },
+    /// [`Fleet::shutdown`] has begun; no new samples are admitted.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::UnknownModel { model } => write!(f, "no model deployed as '{model}'"),
+            AdmitError::BadFormat { format } => write!(f, "invalid serve format {format}"),
+            AdmitError::WrongLen { model, expected, got } => {
+                write!(f, "model '{model}' expects {expected} input values, got {got}")
+            }
+            AdmitError::QueueFull { model, format, depth } => {
+                write!(f, "queue ({model}, {format}) full at {depth} pending")
+            }
+            AdmitError::FleetFull { depth } => {
+                write!(f, "fleet full at {depth} pending samples")
+            }
+            AdmitError::ShuttingDown => write!(f, "fleet is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// Identifies one micro-batch queue: a deployed model times the
+/// arithmetic its tickets asked for.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct QueueKey {
+    /// Deployed model id.
+    pub model: String,
+    /// Precision tag the queue's tickets carry.
+    pub format: ServeFormat,
+}
+
+/// One deployed model's compiled serving plans — the unit [`Fleet::deploy`]
+/// swaps atomically. Emulated traffic at every `k` shares one unfused
+/// plan (the precision lives in the execution context, not the plan), so
+/// a set is exactly two compiled plans plus dispatch metadata.
+pub struct PlanSet {
+    /// Fused reference plan serving [`ServeFormat::F64`] tickets.
+    pub f64_plan: Arc<Plan>,
+    /// Unfused witness-convention plan serving every
+    /// [`ServeFormat::Emulated`] queue.
+    pub emu_plan: Arc<Plan>,
+    /// Kernel family both plans were compiled for.
+    pub kernels: KernelPath,
+    /// Deployment version: 1 on first deploy, +1 per hot swap.
+    pub version: u64,
+}
+
+impl PlanSet {
+    /// The plan serving `format` tickets.
+    pub fn plan_for(&self, format: ServeFormat) -> &Arc<Plan> {
+        match format {
+            ServeFormat::F64 => &self.f64_plan,
+            ServeFormat::Emulated { .. } => &self.emu_plan,
+        }
+    }
+}
+
+/// One pending sample plus the plan set it was admitted under (pinned so
+/// a hot swap drains it on the old plans).
+struct FleetPending {
+    req: PendingSample,
+    plans: Arc<PlanSet>,
+}
+
+#[derive(Default)]
+struct FleetQueue {
+    pending: VecDeque<FleetPending>,
+    metrics: ServeMetrics,
+}
+
+struct FleetState {
+    queues: BTreeMap<QueueKey, FleetQueue>,
+    models: HashMap<String, Arc<PlanSet>>,
+    total_pending: usize,
+    /// Round-robin position of the flusher's ripe-queue scan.
+    cursor: usize,
+    swaps: usize,
+    rejected: usize,
+    shutdown: bool,
+}
+
+struct FleetShared {
+    state: Mutex<FleetState>,
+    wake: Condvar,
+    /// Signalled whenever a flush makes room; what
+    /// [`Fleet::submit_blocking`] waits on (shutdown wakes all of them).
+    room: Condvar,
+    pool: Arc<Pool>,
+    policy: FleetPolicy,
+    /// Flushes handed to the pool but not yet finished (see
+    /// [`Fleet::shutdown`]).
+    inflight: Mutex<usize>,
+    idle: Condvar,
+}
+
+/// Why a batch left its queue.
+enum Cause {
+    Full,
+    Timer,
+    Drain,
+}
+
+/// Per-queue view in a [`FleetSnapshot`].
+#[derive(Clone, Debug)]
+pub struct QueueSnapshot {
+    /// The queue's key.
+    pub key: QueueKey,
+    /// Samples pending right now.
+    pub depth: usize,
+    /// The queue's cumulative counters.
+    pub metrics: ServeMetrics,
+}
+
+/// Per-model view in a [`FleetSnapshot`].
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    /// Deployed model id.
+    pub model: String,
+    /// Current deployment version.
+    pub version: u64,
+}
+
+/// Point-in-time aggregate of the whole fleet.
+#[derive(Clone, Debug)]
+pub struct FleetSnapshot {
+    /// Every queue the fleet has seen traffic for, in key order.
+    pub queues: Vec<QueueSnapshot>,
+    /// Every deployed model and its version.
+    pub models: Vec<ModelSnapshot>,
+    /// Samples pending across all queues right now.
+    pub total_pending: usize,
+    /// Hot swaps performed ([`Fleet::deploy`] over an existing id).
+    pub swaps: usize,
+    /// Samples refused by admission control.
+    pub rejected: usize,
+}
+
+impl FleetSnapshot {
+    /// Total samples admitted across all queues.
+    pub fn submitted(&self) -> usize {
+        self.queues.iter().map(|q| q.metrics.submitted).sum()
+    }
+
+    /// Total batches flushed across all queues.
+    pub fn batches(&self) -> usize {
+        self.queues.iter().map(|q| q.metrics.batches).sum()
+    }
+}
+
+/// The fleet scheduler. Deploy models, submit precision-tagged samples,
+/// and read the aggregate snapshot; one flusher thread multiplexes every
+/// queue onto the shared coordinator pool. See the module docs for the
+/// scheduling, admission and hot-swap semantics.
+pub struct Fleet {
+    shared: Arc<FleetShared>,
+    /// Taken (and joined) by the first [`Fleet::shutdown`] caller; the
+    /// mutex lets shutdown run through a shared `Arc<Fleet>`.
+    flusher: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Fleet {
+    /// An empty fleet flushing onto `pool` under `policy`.
+    pub fn new(pool: Arc<Pool>, policy: FleetPolicy) -> Fleet {
+        assert!(policy.max_batch >= 1, "max_batch must be >= 1");
+        assert!(
+            policy.max_queue_pending >= policy.max_batch,
+            "max_queue_pending ({}) must be >= max_batch ({})",
+            policy.max_queue_pending,
+            policy.max_batch
+        );
+        assert!(
+            policy.max_fleet_pending >= policy.max_queue_pending,
+            "max_fleet_pending ({}) must be >= max_queue_pending ({})",
+            policy.max_fleet_pending,
+            policy.max_queue_pending
+        );
+        let shared = Arc::new(FleetShared {
+            state: Mutex::new(FleetState {
+                queues: BTreeMap::new(),
+                models: HashMap::new(),
+                total_pending: 0,
+                cursor: 0,
+                swaps: 0,
+                rejected: 0,
+                shutdown: false,
+            }),
+            wake: Condvar::new(),
+            room: Condvar::new(),
+            pool,
+            policy,
+            inflight: Mutex::new(0),
+            idle: Condvar::new(),
+        });
+        let flusher = {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("rigor-fleet-flusher".into())
+                .spawn(move || flusher_loop(sh))
+                .expect("spawn fleet flusher")
+        };
+        Fleet { shared, flusher: Mutex::new(Some(flusher)) }
+    }
+
+    /// Deploy (or hot-swap) `model` under `model_id`: compile its serving
+    /// plans outside the fleet lock, then atomically publish them.
+    /// Returns the new deployment version (1 for a first deploy). Under a
+    /// swap, already-queued tickets drain on the old plans; subsequent
+    /// submits route to the new ones.
+    pub fn deploy(&self, model_id: &str, model: &Model) -> Result<u64> {
+        let kernels = KernelPath::from_env();
+        let f64_plan = Arc::new(Plan::build_with_kernels(model, Fusion::Full, kernels)?);
+        let emu_plan = Arc::new(Plan::build_with_kernels(model, Fusion::None, kernels)?);
+        Ok(self.deploy_plans(model_id, f64_plan, emu_plan, kernels))
+    }
+
+    /// [`Fleet::deploy`] with pre-compiled plans (the cache-integrated
+    /// path [`crate::api::FleetHandle`] uses). The two plans must share
+    /// input/output geometry — they are compilations of one model.
+    pub fn deploy_plans(
+        &self,
+        model_id: &str,
+        f64_plan: Arc<Plan>,
+        emu_plan: Arc<Plan>,
+        kernels: KernelPath,
+    ) -> u64 {
+        assert_eq!(
+            f64_plan.input_len(),
+            emu_plan.input_len(),
+            "plan set geometry mismatch for '{model_id}'"
+        );
+        let mut st = self.shared.state.lock().unwrap();
+        let version = st.models.get(model_id).map(|p| p.version + 1).unwrap_or(1);
+        if version > 1 {
+            st.swaps += 1;
+        }
+        st.models.insert(
+            model_id.to_string(),
+            Arc::new(PlanSet { f64_plan, emu_plan, kernels, version }),
+        );
+        version
+    }
+
+    /// Admit one `format`-tagged sample for `model_id`, returning a
+    /// [`Ticket`] for its pending output — or a typed [`AdmitError`]
+    /// **without blocking** when a cap is hit (load shedding: the caller
+    /// decides whether to retry, queue elsewhere, or fail fast).
+    pub fn submit(
+        &self,
+        model_id: &str,
+        format: ServeFormat,
+        sample: Vec<f64>,
+    ) -> std::result::Result<Ticket, AdmitError> {
+        self.admit(model_id, format, sample, false)
+    }
+
+    /// [`Fleet::submit`] that **blocks** on [`AdmitError::QueueFull`] /
+    /// [`AdmitError::FleetFull`] until a flush makes room (classic
+    /// backpressure for in-process callers); every other rejection is
+    /// still immediate. Errors with [`AdmitError::ShuttingDown`] if the
+    /// fleet shuts down while blocked — shutdown wakes these waiters
+    /// across all queues.
+    pub fn submit_blocking(
+        &self,
+        model_id: &str,
+        format: ServeFormat,
+        sample: Vec<f64>,
+    ) -> std::result::Result<Ticket, AdmitError> {
+        self.admit(model_id, format, sample, true)
+    }
+
+    fn admit(
+        &self,
+        model_id: &str,
+        format: ServeFormat,
+        sample: Vec<f64>,
+        block: bool,
+    ) -> std::result::Result<Ticket, AdmitError> {
+        if format.validate().is_err() {
+            return Err(AdmitError::BadFormat { format });
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        let slot = loop {
+            if st.shutdown {
+                st.rejected += 1;
+                return Err(AdmitError::ShuttingDown);
+            }
+            let Some(plans) = st.models.get(model_id) else {
+                st.rejected += 1;
+                return Err(AdmitError::UnknownModel { model: model_id.to_string() });
+            };
+            let expected = plans.plan_for(format).input_len();
+            if sample.len() != expected {
+                st.rejected += 1;
+                return Err(AdmitError::WrongLen {
+                    model: model_id.to_string(),
+                    expected,
+                    got: sample.len(),
+                });
+            }
+            let key = QueueKey { model: model_id.to_string(), format };
+            let depth = st.queues.get(&key).map_or(0, |q| q.pending.len());
+            if st.total_pending >= self.shared.policy.max_fleet_pending {
+                if block {
+                    st = self.shared.room.wait(st).unwrap();
+                    continue;
+                }
+                st.rejected += 1;
+                return Err(AdmitError::FleetFull { depth: st.total_pending });
+            }
+            if depth >= self.shared.policy.max_queue_pending {
+                if block {
+                    st = self.shared.room.wait(st).unwrap();
+                    continue;
+                }
+                st.rejected += 1;
+                return Err(AdmitError::QueueFull {
+                    model: model_id.to_string(),
+                    format,
+                    depth,
+                });
+            }
+            // Admitted: pin the current plan set and enqueue.
+            let plans = Arc::clone(plans);
+            let slot = Slot::new();
+            let q = st.queues.entry(key).or_default();
+            q.pending.push_back(FleetPending {
+                req: PendingSample {
+                    sample,
+                    slot: Arc::clone(&slot),
+                    enqueued: Instant::now(),
+                },
+                plans,
+            });
+            q.metrics.submitted += 1;
+            q.metrics.queue_high_water = q.metrics.queue_high_water.max(q.pending.len());
+            st.total_pending += 1;
+            break slot;
+        };
+        drop(st);
+        self.shared.wake.notify_all();
+        Ok(Ticket { slot })
+    }
+
+    /// Snapshot every queue's counters and every model's version.
+    pub fn snapshot(&self) -> FleetSnapshot {
+        let st = self.shared.state.lock().unwrap();
+        let mut queues: Vec<QueueSnapshot> = st
+            .queues
+            .iter()
+            .map(|(key, q)| QueueSnapshot {
+                key: key.clone(),
+                depth: q.pending.len(),
+                metrics: q.metrics,
+            })
+            .collect();
+        queues.sort_by(|a, b| a.key.cmp(&b.key));
+        let mut models: Vec<ModelSnapshot> = st
+            .models
+            .iter()
+            .map(|(m, p)| ModelSnapshot { model: m.clone(), version: p.version })
+            .collect();
+        models.sort_by(|a, b| a.model.cmp(&b.model));
+        FleetSnapshot {
+            queues,
+            models,
+            total_pending: st.total_pending,
+            swaps: st.swaps,
+            rejected: st.rejected,
+        }
+    }
+
+    /// The current deployment version of `model_id`, if deployed.
+    pub fn version(&self, model_id: &str) -> Option<u64> {
+        self.shared.state.lock().unwrap().models.get(model_id).map(|p| p.version)
+    }
+
+    /// Shut the fleet down in order: refuse new admissions, wake every
+    /// submitter blocked on backpressure across **all** queues (they
+    /// error with [`AdmitError::ShuttingDown`]), let the flusher drain
+    /// every queue, then wait for all in-flight pool flushes to finish —
+    /// when this returns, every admitted ticket has been resolved.
+    /// Takes `&self` so a shared fleet (`Arc<Fleet>`) can be shut down
+    /// while submitters still hold clones. Idempotent (concurrent callers
+    /// serialize on the flusher handle; late callers return once the
+    /// in-flight count reaches zero); also run by `Drop`.
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.wake.notify_all();
+        self.shared.room.notify_all();
+        // Holding the handle lock across the join serializes concurrent
+        // shutdowns: the second caller blocks here until the flusher has
+        // drained every queue, then finds the handle gone.
+        {
+            let mut handle = self.flusher.lock().unwrap();
+            if let Some(h) = handle.take() {
+                let _ = h.join();
+            }
+        }
+        let mut n = self.shared.inflight.lock().unwrap();
+        while *n > 0 {
+            n = self.shared.idle.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Scan the queues round-robin from the rotation cursor and pick the
+/// first ripe one (full / timer-expired / shutdown drain). Advancing the
+/// cursor past the pick is what makes the scan fair: a queue that just
+/// flushed goes to the back of the rotation, so every other ripe queue is
+/// served before it flushes again.
+fn pick_ripe(st: &mut FleetState, now: Instant, policy: &FleetPolicy) -> Option<(QueueKey, Cause)> {
+    let keys: Vec<QueueKey> = st.queues.keys().cloned().collect();
+    let n = keys.len();
+    for i in 0..n {
+        let idx = (st.cursor + i) % n;
+        let q = &st.queues[&keys[idx]];
+        let cause = if q.pending.len() >= policy.max_batch {
+            Some(Cause::Full)
+        } else if st.shutdown && !q.pending.is_empty() {
+            Some(Cause::Drain)
+        } else if q
+            .pending
+            .front()
+            .is_some_and(|p| p.req.enqueued + policy.max_wait <= now)
+        {
+            Some(Cause::Timer)
+        } else {
+            None
+        };
+        if let Some(c) = cause {
+            st.cursor = (idx + 1) % n;
+            return Some((keys[idx].clone(), c));
+        }
+    }
+    None
+}
+
+/// Drain one batch off a queue's front: up to `max_batch` samples, never
+/// crossing a plan-set (hot-swap) boundary. Returns the samples and the
+/// plan set they all pinned.
+fn drain_one_version(
+    q: &mut FleetQueue,
+    max_batch: usize,
+) -> (Vec<PendingSample>, Arc<PlanSet>) {
+    let plans = Arc::clone(&q.pending.front().expect("ripe queue is nonempty").plans);
+    let mut batch = Vec::new();
+    while batch.len() < max_batch {
+        match q.pending.front() {
+            Some(p) if Arc::ptr_eq(&p.plans, &plans) => {
+                batch.push(q.pending.pop_front().expect("front checked").req);
+            }
+            _ => break,
+        }
+    }
+    (batch, plans)
+}
+
+/// The fleet flusher: wait until some queue is ripe, pick one fairly,
+/// drain one batch, and hand it to the pool as a single job in the
+/// queue's format. Runs until shutdown *and* every queue is empty, so
+/// admitted tickets always resolve.
+fn flusher_loop(sh: Arc<FleetShared>) {
+    loop {
+        let picked = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                let now = Instant::now();
+                if let Some((key, cause)) = pick_ripe(&mut st, now, &sh.policy) {
+                    let q = st.queues.get_mut(&key).expect("picked key exists");
+                    let (batch, plans) = drain_one_version(q, sh.policy.max_batch);
+                    q.metrics.batches += 1;
+                    q.metrics.max_batch_observed = q.metrics.max_batch_observed.max(batch.len());
+                    match cause {
+                        Cause::Full => q.metrics.flushed_full += 1,
+                        Cause::Timer => q.metrics.flushed_timer += 1,
+                        Cause::Drain => q.metrics.flushed_drain += 1,
+                    }
+                    st.total_pending -= batch.len();
+                    break Some((key, batch, plans));
+                }
+                if st.shutdown && st.total_pending == 0 {
+                    break None;
+                }
+                // Nothing ripe: sleep until the earliest queue deadline
+                // (or until a submit wakes us).
+                let next = st
+                    .queues
+                    .values()
+                    .filter_map(|q| q.pending.front().map(|p| p.req.enqueued + sh.policy.max_wait))
+                    .min();
+                match next {
+                    Some(deadline) if deadline > now => {
+                        st = sh.wake.wait_timeout(st, deadline - now).unwrap().0;
+                    }
+                    Some(_) => {} // ripened while scanning; re-pick
+                    None => st = sh.wake.wait(st).unwrap(),
+                }
+            }
+        };
+        let Some((key, batch, plans)) = picked else {
+            return;
+        };
+        // Room below the caps: wake blocked submitters. Like the serve
+        // flusher, a full pool queue blocks *this* thread on submit,
+        // keeping the backpressure chain intact end to end.
+        sh.room.notify_all();
+        *sh.inflight.lock().unwrap() += 1;
+        let job_sh = Arc::clone(&sh);
+        sh.pool.submit(move || {
+            let plan = plans.plan_for(key.format);
+            run_batch_job(plan, plans.kernels, key.format, batch);
+            let mut n = job_sh.inflight.lock().unwrap();
+            *n -= 1;
+            if *n == 0 {
+                job_sh.idle.notify_all();
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::plan::Arena;
+
+    fn sample(n: usize, i: usize) -> Vec<f64> {
+        (0..n).map(|j| ((i * n + j) % 13) as f64 / 13.0).collect()
+    }
+
+    fn small_policy() -> FleetPolicy {
+        FleetPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            max_queue_pending: 64,
+            max_fleet_pending: 128,
+        }
+    }
+
+    #[test]
+    fn routes_two_models_two_formats_bitwise() {
+        let mlp = zoo::tiny_mlp(21);
+        let cnn = zoo::tiny_cnn(22);
+        let cnn_n: usize = cnn.input_shape.iter().product();
+        let fleet = Fleet::new(Arc::new(Pool::new(2, 16)), small_policy());
+        fleet.deploy("mlp", &mlp).unwrap();
+        fleet.deploy("cnn", &cnn).unwrap();
+        let k = 12u32;
+        let emu = ServeFormat::Emulated { k };
+
+        let mut tickets = Vec::new();
+        for i in 0..6 {
+            tickets.push(("mlp", ServeFormat::F64, 8, i, fleet.submit("mlp", ServeFormat::F64, sample(8, i)).unwrap()));
+            tickets.push(("mlp", emu, 8, i, fleet.submit("mlp", emu, sample(8, i)).unwrap()));
+            tickets.push(("cnn", ServeFormat::F64, cnn_n, i, fleet.submit("cnn", ServeFormat::F64, sample(cnn_n, i)).unwrap()));
+            tickets.push(("cnn", emu, cnn_n, i, fleet.submit("cnn", emu, sample(cnn_n, i)).unwrap()));
+        }
+        let ref_mlp = Plan::for_reference(&mlp).unwrap();
+        let ref_cnn = Plan::for_reference(&cnn).unwrap();
+        let emu_mlp = Plan::unfused(&mlp).unwrap();
+        let emu_cnn = Plan::unfused(&cnn).unwrap();
+        let mut arena: Arena<f64> = Arena::new();
+        for (model, format, n, i, t) in tickets {
+            let got = t.wait().unwrap();
+            let want: Vec<f64> = match (model, format) {
+                ("mlp", ServeFormat::F64) => {
+                    ref_mlp.execute::<f64>(&(), &sample(n, i), &mut arena).unwrap().to_vec()
+                }
+                ("cnn", ServeFormat::F64) => {
+                    ref_cnn.execute::<f64>(&(), &sample(n, i), &mut arena).unwrap().to_vec()
+                }
+                ("mlp", _) => crate::quant::emulated_forward(&emu_mlp, k, &sample(n, i)).unwrap(),
+                _ => crate::quant::emulated_forward(&emu_cnn, k, &sample(n, i)).unwrap(),
+            };
+            assert_eq!(got.len(), want.len(), "{model}/{format} request {i}");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{model}/{format} request {i}");
+            }
+        }
+        let snap = fleet.snapshot();
+        assert_eq!(snap.queues.len(), 4, "one queue per (model, format) pair");
+        assert_eq!(snap.submitted(), 24);
+        for q in &snap.queues {
+            assert_eq!(q.metrics.submitted, 6, "balanced routing: {:?}", q.key);
+        }
+    }
+
+    #[test]
+    fn admission_rejects_typed() {
+        let fleet = Fleet::new(
+            Arc::new(Pool::new(1, 4)),
+            FleetPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_secs(30),
+                max_queue_pending: 2,
+                max_fleet_pending: 3,
+            },
+        );
+        // Unknown model / bad format / wrong length are immediate.
+        assert!(matches!(
+            fleet.submit("nope", ServeFormat::F64, vec![0.0; 8]),
+            Err(AdmitError::UnknownModel { .. })
+        ));
+        fleet.deploy("mlp", &zoo::tiny_mlp(3)).unwrap();
+        assert!(matches!(
+            fleet.submit("mlp", ServeFormat::Emulated { k: 99 }, vec![0.0; 8]),
+            Err(AdmitError::BadFormat { .. })
+        ));
+        assert!(matches!(
+            fleet.submit("mlp", ServeFormat::F64, vec![0.0; 5]),
+            Err(AdmitError::WrongLen { expected: 8, got: 5, .. })
+        ));
+        // Stall the pool so flushes back up, then fill the caps. The
+        // flusher may drain the queue into the (stalled) pool job, so
+        // stuff the fleet faster than it can flush by using a queue cap
+        // below max_batch's reach: max_batch 2, queue cap 2, fleet cap 3.
+        fleet.shared.pool.submit(|| std::thread::sleep(Duration::from_millis(80)));
+        fleet.shared.pool.submit(|| std::thread::sleep(Duration::from_millis(80)));
+        // Hold the flusher's drain target busy: submit into two queues.
+        let emu = ServeFormat::Emulated { k: 8 };
+        let mut kept = Vec::new();
+        let mut saw_queue_full = false;
+        let mut saw_fleet_full = false;
+        for i in 0..64 {
+            match fleet.submit("mlp", ServeFormat::F64, sample(8, i)) {
+                Ok(t) => kept.push(t),
+                Err(AdmitError::QueueFull { .. }) => {
+                    saw_queue_full = true;
+                    break;
+                }
+                Err(AdmitError::FleetFull { .. }) => {
+                    saw_fleet_full = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected rejection: {e}"),
+            }
+        }
+        assert!(saw_queue_full || saw_fleet_full, "caps never engaged");
+        let _ = fleet.submit("mlp", emu, sample(8, 0));
+        for t in kept {
+            assert_eq!(t.wait().unwrap().len(), 3);
+        }
+        assert!(fleet.snapshot().rejected >= 3);
+    }
+
+    #[test]
+    fn fair_flushing_under_hot_and_cold_load() {
+        // A hot queue (many submitters) must not starve a cold one: the
+        // cold queue's tickets resolve via the timer path while the hot
+        // queue stays saturated.
+        let fleet = Arc::new(Fleet::new(
+            Arc::new(Pool::new(2, 8)),
+            FleetPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+                max_queue_pending: 32,
+                max_fleet_pending: 128,
+            },
+        ));
+        fleet.deploy("hot", &zoo::tiny_mlp(31)).unwrap();
+        fleet.deploy("cold", &zoo::tiny_mlp(32)).unwrap();
+        let hot = {
+            let f = Arc::clone(&fleet);
+            std::thread::spawn(move || {
+                let mut tickets = Vec::new();
+                for i in 0..200 {
+                    tickets.push(f.submit_blocking("hot", ServeFormat::F64, sample(8, i)).unwrap());
+                }
+                tickets
+            })
+        };
+        let mut cold_tickets = Vec::new();
+        for i in 0..10 {
+            cold_tickets.push(fleet.submit_blocking("cold", ServeFormat::F64, sample(8, i)).unwrap());
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        for t in cold_tickets {
+            assert_eq!(t.wait().unwrap().len(), 3, "cold queue starved");
+        }
+        for t in hot.join().unwrap() {
+            assert_eq!(t.wait().unwrap().len(), 3);
+        }
+        let snap = fleet.snapshot();
+        let cold_q = snap
+            .queues
+            .iter()
+            .find(|q| q.key.model == "cold")
+            .expect("cold queue exists");
+        assert!(cold_q.metrics.batches >= 1);
+        assert_eq!(snap.submitted(), 210);
+    }
+
+    #[test]
+    fn hot_swap_drains_inflight_on_old_plan() {
+        // Queue tickets against v1, swap to v2 (different weights), then
+        // queue more: the first batch must carry v1's bits, the second
+        // v2's — no ticket dropped, none misrouted across the swap.
+        let m1 = zoo::tiny_mlp(41);
+        let m2 = zoo::tiny_mlp(42);
+        let fleet = Fleet::new(
+            Arc::new(Pool::new(1, 4)),
+            FleetPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(20),
+                max_queue_pending: 64,
+                max_fleet_pending: 128,
+            },
+        );
+        assert_eq!(fleet.deploy("m", &m1).unwrap(), 1);
+        // Stall the pool so the pre-swap flush cannot race ahead.
+        fleet.shared.pool.submit(|| std::thread::sleep(Duration::from_millis(40)));
+        let old: Vec<_> =
+            (0..3).map(|i| fleet.submit("m", ServeFormat::F64, sample(8, i)).unwrap()).collect();
+        assert_eq!(fleet.deploy("m", &m2).unwrap(), 2);
+        assert_eq!(fleet.version("m"), Some(2));
+        let new: Vec<_> =
+            (0..3).map(|i| fleet.submit("m", ServeFormat::F64, sample(8, i)).unwrap()).collect();
+        let p1 = Plan::for_reference(&m1).unwrap();
+        let p2 = Plan::for_reference(&m2).unwrap();
+        let mut arena: Arena<f64> = Arena::new();
+        for (i, t) in old.into_iter().enumerate() {
+            let got = t.wait().unwrap();
+            let want = p1.execute::<f64>(&(), &sample(8, i), &mut arena).unwrap();
+            for (g, w) in got.iter().zip(want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "pre-swap ticket {i} must see v1");
+            }
+        }
+        for (i, t) in new.into_iter().enumerate() {
+            let got = t.wait().unwrap();
+            let want = p2.execute::<f64>(&(), &sample(8, i), &mut arena).unwrap();
+            for (g, w) in got.iter().zip(want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "post-swap ticket {i} must see v2");
+            }
+        }
+        assert_eq!(fleet.snapshot().swaps, 1);
+    }
+
+    #[test]
+    fn shutdown_wakes_blocked_submitters_and_resolves_tickets() {
+        let fleet = Arc::new(Fleet::new(
+            Arc::new(Pool::new(1, 2)),
+            FleetPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_secs(30),
+                max_queue_pending: 2,
+                max_fleet_pending: 2,
+            },
+        ));
+        fleet.deploy("m", &zoo::tiny_mlp(51)).unwrap();
+        // Stall the pool and fill the fleet cap; the next blocking submit
+        // parks on the room condvar.
+        fleet.shared.pool.submit(|| std::thread::sleep(Duration::from_millis(60)));
+        let t0 = fleet.submit_blocking("m", ServeFormat::F64, sample(8, 0)).unwrap();
+        let t1 = fleet.submit_blocking("m", ServeFormat::F64, sample(8, 1)).unwrap();
+        let blocked = {
+            let f = Arc::clone(&fleet);
+            std::thread::spawn(move || f.submit_blocking("m", ServeFormat::F64, sample(8, 2)))
+        };
+        std::thread::sleep(Duration::from_millis(15)); // let it park
+        fleet.shutdown();
+        let r = blocked.join().unwrap();
+        // Either the drain made room first (ticket resolves) or shutdown
+        // rejected it — never a hang.
+        if let Ok(t2) = r {
+            assert_eq!(t2.wait().unwrap().len(), 3);
+        }
+        // Shutdown returned only after the in-flight flushes finished:
+        // both accepted tickets are already resolved.
+        assert!(t0.try_take().is_some(), "t0 unresolved after shutdown");
+        assert!(t1.try_take().is_some(), "t1 unresolved after shutdown");
+    }
+}

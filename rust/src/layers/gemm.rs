@@ -208,6 +208,98 @@ impl DwTable {
     }
 }
 
+/// An average pool's spatial tap table, built once at plan compile time:
+/// `table[pix * taps + t]` = spatial base offset `iy * w + ix` (multiplied
+/// by the channel count at use) of tap `t = ky * pw + kx` for output pixel
+/// `pix`. Pool windows tile the input exactly (shape inference rejects
+/// anything else), so — unlike [`DwTable`] — no entry is ever [`PAD`].
+#[derive(Clone, Debug)]
+pub struct PoolTable {
+    /// Window taps `ph * pw`.
+    taps: usize,
+    /// Channels.
+    c: usize,
+    /// Output pixels `oh * ow`.
+    op: usize,
+    /// Input elements per sample (`h * w * c`).
+    in_len: usize,
+    table: Vec<usize>,
+}
+
+impl PoolTable {
+    /// Build the tap table for one `AvgPool2D` step (window `ph x pw`;
+    /// geometry already validated by shape inference).
+    pub fn build(ph: usize, pw: usize, in_shape: &[usize], out_shape: &[usize]) -> PoolTable {
+        let (_h, w, c) = (in_shape[0], in_shape[1], in_shape[2]);
+        let (oh, ow) = (out_shape[0], out_shape[1]);
+        let taps = ph * pw;
+        let op = oh * ow;
+        let mut table = Vec::with_capacity(op * taps);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..ph {
+                    for kx in 0..pw {
+                        table.push((oy * ph + ky) * w + (ox * pw + kx));
+                    }
+                }
+            }
+        }
+        PoolTable { taps, c, op, in_len: in_shape.iter().product(), table }
+    }
+}
+
+/// Blocked average pool: [`MR`] output pixels advance in lockstep with the
+/// (channels-last, contiguous) channel axis as the inner lane set — the
+/// same tile shape as [`depthwise_blocked`], minus weights and padding.
+/// Each chain is seeded by *cloning* its tap-0 input (exactly the scalar
+/// kernel's `None => v.clone()` start), accumulates taps `1..` in window
+/// order through the same [`Scalar::add`] calls, and ends with one
+/// [`Scalar::div`] by the shared exact window size. Appends
+/// `batch * op * c` sample-major outputs, bit-identical to
+/// `super::pool::avg_pool_batch_into`. `acc` is the arena's panel scratch,
+/// reused as the tile accumulator.
+pub fn avg_pool_blocked<S: Scalar>(
+    ctx: &S::Ctx,
+    pt: &PoolTable,
+    x: &[S],
+    batch: usize,
+    acc: &mut Vec<S>,
+    out: &mut Vec<S>,
+) {
+    let (taps, c, op) = (pt.taps, pt.c, pt.op);
+    debug_assert_eq!(x.len(), batch * pt.in_len, "blocked avg_pool input");
+    let n = S::exact(ctx, taps as f64); // small integer: exact
+    for s in 0..batch {
+        let xs = &x[s * pt.in_len..(s + 1) * pt.in_len];
+        let mut p0 = 0;
+        while p0 < op {
+            let mp = MR.min(op - p0);
+            // Accumulator tile `[pixel][channel]`, seeded from tap 0 —
+            // the window is never empty and never padded.
+            acc.clear();
+            acc.reserve(mp * c);
+            for r in 0..mp {
+                let off = pt.table[(p0 + r) * taps];
+                acc.extend_from_slice(&xs[off * c..(off + 1) * c]);
+            }
+            for t in 1..taps {
+                for r in 0..mp {
+                    let off = pt.table[(p0 + r) * taps + t];
+                    let xrow = &xs[off * c..(off + 1) * c];
+                    let arow = &mut acc[r * c..(r + 1) * c];
+                    for (a, xv) in arow.iter_mut().zip(xrow) {
+                        *a = a.add(xv, ctx);
+                    }
+                }
+            }
+            // Channels-last output is exactly the tile layout: divide by
+            // the window size and append.
+            out.extend(acc.drain(..).map(|a| a.div(&n, ctx)));
+            p0 += mp;
+        }
+    }
+}
+
 /// Blocked depthwise convolution: [`MR`] output pixels advance in
 /// lockstep, with the (channels-last, contiguous) channel axis as the
 /// inner lane set — `MR * c` independent chains per tile, every operand
@@ -435,7 +527,7 @@ pub fn conv_blocked<S: Scalar>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::layers::{conv, dense};
+    use crate::layers::{conv, dense, pool};
     use crate::quant::EmulatedFp;
     use crate::tensor::EmuCtx;
     use crate::util::Rng;
@@ -595,6 +687,80 @@ mod tests {
                         "{h}x{w} k{kh}x{kw} c{c} s{stride} B{batch} out {i}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn avg_pool_blocked_bitwise_matches_scalar() {
+        let mut rng = Rng::new(13);
+        // Window/input combos that hit full pixel tiles and MR tails, with
+        // prime-ish channel counts.
+        for (h, w, ph, pw, c) in [
+            (4usize, 4usize, 2usize, 2usize, 3usize),
+            (6, 6, 2, 3, 5),
+            (6, 4, 3, 2, 1),
+            (8, 8, 2, 2, 7),
+            (5, 5, 5, 5, 2),
+        ] {
+            let in_shape = vec![h, w, c];
+            let out_shape = pool::pool_output_shape(ph, pw, &in_shape).unwrap();
+            let pt = PoolTable::build(ph, pw, &in_shape, &out_shape);
+            for batch in [1usize, 3, 8] {
+                let x = rand_vec(&mut rng, batch * h * w * c);
+                let mut scalar = Vec::new();
+                pool::avg_pool_batch_into::<f64>(
+                    &(),
+                    ph,
+                    pw,
+                    &x,
+                    &in_shape,
+                    &out_shape,
+                    batch,
+                    &mut scalar,
+                );
+                let mut blocked = Vec::new();
+                let mut acc = Vec::new();
+                avg_pool_blocked::<f64>(&(), &pt, &x, batch, &mut acc, &mut blocked);
+                assert_eq!(scalar.len(), blocked.len());
+                for (i, (a, b)) in scalar.iter().zip(&blocked).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{h}x{w} pool {ph}x{pw} c{c} B{batch} out {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avg_pool_blocked_emulated_matches_scalar_bitwise() {
+        let mut rng = Rng::new(17);
+        let (h, w, ph, pw, c, batch) = (6usize, 6usize, 2usize, 2usize, 3usize, 4usize);
+        let in_shape = vec![h, w, c];
+        let out_shape = pool::pool_output_shape(ph, pw, &in_shape).unwrap();
+        let pt = PoolTable::build(ph, pw, &in_shape, &out_shape);
+        for k in [6u32, 10, 16] {
+            let ec = EmuCtx { k };
+            let x: Vec<EmulatedFp> =
+                (0..batch * h * w * c).map(|_| EmulatedFp::new(rng.range(-2.0, 2.0), k)).collect();
+            let mut scalar = Vec::new();
+            pool::avg_pool_batch_into::<EmulatedFp>(
+                &ec,
+                ph,
+                pw,
+                &x,
+                &in_shape,
+                &out_shape,
+                batch,
+                &mut scalar,
+            );
+            let mut blocked = Vec::new();
+            let mut acc = Vec::new();
+            avg_pool_blocked::<EmulatedFp>(&ec, &pt, &x, batch, &mut acc, &mut blocked);
+            for (i, (a, b)) in scalar.iter().zip(&blocked).enumerate() {
+                assert_eq!(a.v.to_bits(), b.v.to_bits(), "k={k} out {i}");
             }
         }
     }

@@ -24,8 +24,9 @@
 //! interpreter survives only as a deprecated equivalence oracle for
 //! sequential models. The plan carries a batch axis
 //! ([`plan::Plan::execute_batch`]): bulk traffic is served by the
-//! [`serve`] micro-batcher and bulk per-sample analysis by
-//! [`api::Session::run_batch`].
+//! [`serve`] micro-batcher — or, for many models and mixed-precision
+//! traffic, by the [`fleet`] scheduler's precision-tagged queues — and
+//! bulk per-sample analysis by [`api::Session::run_batch`].
 //!
 //! Layer map (three-layer rust+JAX+Pallas architecture):
 //! * L3 (this crate): [`api`] service layer over the CAA+IA analysis
@@ -48,6 +49,7 @@ pub mod caa;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod fleet;
 pub mod interval;
 pub mod json;
 pub mod layers;

@@ -18,6 +18,10 @@
 //!   `--batch N` and/or `--data`, through the `serve` micro-batcher
 //!   (batched plan drives on the worker pool); any other variant executes
 //!   the matching AOT artifact via PJRT (needs `pjrt`).
+//! * `fleet`   — multi-model serving demo: deploys several model JSONs
+//!   into one `fleet::Fleet`, pushes an interleaved f64 + emulated-k
+//!   load through the per-(model, format) queues, and prints the
+//!   per-queue metrics and the fleet snapshot.
 
 use rigor::api::{AnalysisRequest, ExecMode, Session};
 use rigor::cli::{App, CmdSpec, OptSpec};
@@ -71,6 +75,24 @@ fn app() -> App {
                 ],
             },
             CmdSpec {
+                name: "fleet",
+                help: "serve several models through one precision-tagged fleet",
+                opts: vec![
+                    OptSpec {
+                        name: "models",
+                        help: "comma-separated model JSON paths",
+                        default: Some(
+                            "artifacts/models/digits.json,artifacts/models/pendulum.json".into(),
+                        ),
+                    },
+                    OptSpec { name: "k", help: "emulated mantissa bits for the low-precision lane", default: Some("12".into()) },
+                    OptSpec { name: "requests", help: "tickets per (model, format) queue", default: Some("64".into()) },
+                    OptSpec { name: "batch", help: "micro-batch size", default: Some("8".into()) },
+                    OptSpec { name: "max-wait-ms", help: "flush timer for partial batches", default: Some("2".into()) },
+                    OptSpec { name: "workers", help: "pool workers (0 = host)", default: Some("0".into()) },
+                ],
+            },
+            CmdSpec {
                 name: "run",
                 help: "execute a model on input vectors (engine plan or PJRT artifact)",
                 opts: vec![
@@ -94,6 +116,7 @@ fn main() -> anyhow::Result<()> {
         "table1" => cmd_table1(&parsed),
         "sweep" => cmd_sweep(&parsed),
         "tune" => cmd_tune(&parsed),
+        "fleet" => cmd_fleet(&parsed),
         "run" => cmd_run(&parsed),
         _ => unreachable!(),
     }
@@ -244,6 +267,88 @@ fn cmd_sweep(_p: &rigor::cli::Parsed) -> anyhow::Result<()> {
          feature: rebuild with `cargo build --features pjrt` (requires the \
          `xla` crate; see rust/Cargo.toml)"
     );
+}
+
+/// The multi-model serving demo: every model JSON is deployed into one
+/// [`rigor::fleet::Fleet`] (content-hash versioned via the session cache),
+/// then an interleaved load — one f64 and one emulated-k lane per model —
+/// is pushed through the per-(model, format) queues and the per-queue
+/// metrics are printed. Submission round-robins across the lanes so the
+/// fair flusher has real multiplexing to do.
+fn cmd_fleet(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    use rigor::fleet::FleetPolicy;
+    use rigor::plan::ServeFormat;
+    use std::time::Duration;
+
+    let k = p.get_usize("k")? as u32;
+    let reqs = p.get_usize("requests")?.max(1);
+    let batch = p.get_usize("batch")?.max(1);
+    let wait_ms = p.get_usize("max-wait-ms")? as u64;
+    let session = session_from(p);
+    let fleet = session.fleet_with(FleetPolicy {
+        max_batch: batch,
+        max_wait: Duration::from_millis(wait_ms),
+        ..FleetPolicy::default()
+    });
+
+    // Deploy every model and build its two serving lanes.
+    let mut lanes: Vec<(String, ServeFormat, usize)> = Vec::new();
+    for path in p.get("models").unwrap().split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let path = Path::new(path);
+        let id = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| anyhow::anyhow!("bad model path {}", path.display()))?
+            .to_string();
+        let version = fleet.deploy_path(&id, path)?;
+        let n: usize = session.load_model(path)?.input_shape.iter().product();
+        println!("deployed {id} v{version} ({} inputs) from {}", n, path.display());
+        lanes.push((id.clone(), ServeFormat::F64, n));
+        lanes.push((id, ServeFormat::Emulated { k }, n));
+    }
+
+    let sw = rigor::util::Stopwatch::start();
+    let mut tickets: Vec<Vec<rigor::serve::Ticket>> = lanes.iter().map(|_| Vec::new()).collect();
+    for i in 0..reqs {
+        for (lane, (id, fmt, n)) in lanes.iter().enumerate() {
+            let sample: Vec<f64> = (0..*n).map(|j| ((i * n + j) % 17) as f64 / 17.0).collect();
+            let t = fleet
+                .submit_blocking(id, *fmt, sample)
+                .map_err(|e| anyhow::anyhow!("admission: {e}"))?;
+            tickets[lane].push(t);
+        }
+    }
+    let mut served = 0usize;
+    for lane in tickets {
+        for t in lane {
+            t.wait()?;
+            served += 1;
+        }
+    }
+    let secs = sw.secs();
+    println!(
+        "\nserved {served} tickets across {} queues in {secs:.3} s ({:.0} tickets/s)",
+        lanes.len(),
+        served as f64 / secs.max(1e-9)
+    );
+
+    let snap = fleet.snapshot();
+    println!("{:<28} {:>9} {:>8} {:>6} {:>6} {:>6} {:>8} {:>10}",
+        "queue", "submitted", "batches", "full", "timer", "drain", "largest", "high-water");
+    for q in &snap.queues {
+        let m = &q.metrics;
+        println!(
+            "{:<28} {:>9} {:>8} {:>6} {:>6} {:>6} {:>8} {:>10}",
+            format!("{}/{}", q.key.model, q.key.format),
+            m.submitted, m.batches, m.flushed_full, m.flushed_timer, m.flushed_drain,
+            m.max_batch_observed, m.queue_high_water
+        );
+    }
+    println!(
+        "fleet: {} submitted, {} batches, {} swaps, {} rejected, {} pending",
+        snap.submitted(), snap.batches(), snap.swaps, snap.rejected, snap.total_pending
+    );
+    Ok(())
 }
 
 fn cmd_run(p: &rigor::cli::Parsed) -> anyhow::Result<()> {

@@ -102,6 +102,29 @@ pub fn tiny_cnn(seed: u64) -> Model {
     }
 }
 
+/// A small CNN with an average-pooling head in place of [`tiny_cnn`]'s max
+/// pool — the summation pooling path (conv/batchnorm/relu, depthwise
+/// stage, `AvgPool2D`, dense, softmax; `[6,6,1]` input).
+pub fn avgpool_cnn(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    Model {
+        name: "avgpool_cnn".into(),
+        input_shape: vec![6, 6, 1],
+        layers: vec![
+            conv2d(&mut rng, 3, 3, 1, 4, 1, Padding::Same),
+            batch_norm(&mut rng, 4),
+            Layer::Relu,
+            depthwise(&mut rng, 3, 3, 4, 1, Padding::Same),
+            Layer::Relu,
+            Layer::AvgPool2D { ph: 2, pw: 2 },
+            Layer::Flatten,
+            dense(&mut rng, 3 * 3 * 4, 5),
+            Layer::Softmax,
+        ],
+        graph: None,
+    }
+}
+
 /// The Pendulum topology (paper: two Dense layers, two tanh activations):
 /// `[2] -> Dense -> tanh -> Dense[1] -> tanh`.
 pub fn tiny_pendulum(seed: u64) -> Model {
@@ -243,6 +266,7 @@ mod tests {
         for m in [
             tiny_mlp(1),
             tiny_cnn(2),
+            avgpool_cnn(7),
             tiny_pendulum(3),
             scaled_mlp(4, 16, 32, 5),
             residual_mlp(5),

@@ -348,15 +348,25 @@ impl Plan {
                 &step.out_shape,
                 &mut out,
             ),
-            StepKind::AvgPool2D { ph, pw } => pool::avg_pool_into(
-                ctx,
-                *ph,
-                *pw,
-                &arena.bufs[step.inputs[0]],
-                step.in_shape(),
-                &step.out_shape,
-                &mut out,
-            ),
+            StepKind::AvgPool2D { ph, pw } => match self.blocked_step(idx, path) {
+                Some(BlockedStep::AvgPool(pt)) => gemm::avg_pool_blocked(
+                    ctx,
+                    pt,
+                    &arena.bufs[step.inputs[0]],
+                    1,
+                    &mut arena.pack,
+                    &mut out,
+                ),
+                _ => pool::avg_pool_into(
+                    ctx,
+                    *ph,
+                    *pw,
+                    &arena.bufs[step.inputs[0]],
+                    step.in_shape(),
+                    &step.out_shape,
+                    &mut out,
+                ),
+            },
             StepKind::BatchNorm { gamma, beta, mean, variance, eps } => {
                 let c = *step.in_shape().last().expect("batch_norm rank >= 1");
                 norm::batch_norm_into(
@@ -607,16 +617,26 @@ impl Plan {
                 batch,
                 &mut out,
             ),
-            StepKind::AvgPool2D { ph, pw } => pool::avg_pool_batch_into(
-                ctx,
-                *ph,
-                *pw,
-                &arena.bufs[step.inputs[0]],
-                step.in_shape(),
-                &step.out_shape,
-                batch,
-                &mut out,
-            ),
+            StepKind::AvgPool2D { ph, pw } => match self.blocked_step(idx, path) {
+                Some(BlockedStep::AvgPool(pt)) => gemm::avg_pool_blocked(
+                    ctx,
+                    pt,
+                    &arena.bufs[step.inputs[0]],
+                    batch,
+                    &mut arena.pack,
+                    &mut out,
+                ),
+                _ => pool::avg_pool_batch_into(
+                    ctx,
+                    *ph,
+                    *pw,
+                    &arena.bufs[step.inputs[0]],
+                    step.in_shape(),
+                    &step.out_shape,
+                    batch,
+                    &mut out,
+                ),
+            },
             StepKind::BatchNorm { gamma, beta, mean, variance, eps } => {
                 // Batch-transparent: the flat layout is a longer
                 // channels-last slice, and `i % c` picks the same channel

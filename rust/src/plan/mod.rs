@@ -129,7 +129,7 @@ impl KernelPath {
 
 /// Per-step data for the blocked kernel path, compiled by [`Plan::build`]
 /// alongside the step (present only on `Dense` / `Conv2D` /
-/// `DepthwiseConv2D` steps of plans compiled at
+/// `DepthwiseConv2D` / `AvgPool2D` steps of plans compiled at
 /// [`KernelPath::Blocked`]).
 #[derive(Clone, Debug)]
 pub(crate) enum BlockedStep {
@@ -139,6 +139,45 @@ pub(crate) enum BlockedStep {
     Conv(gemm::Im2col),
     /// Spatial tap table for the channel-lane depthwise kernel.
     Depthwise(gemm::DwTable),
+    /// Spatial tap table for the channel-lane average-pool kernel.
+    AvgPool(gemm::PoolTable),
+}
+
+/// The arithmetic a serving queue executes its batches under — the
+/// precision tag a fleet ticket carries ([`crate::fleet`]). Each format
+/// maps to its own separately-compiled plan via [`Plan::for_format`]:
+/// `F64` takes the fully-fused reference plan (throughput), `Emulated`
+/// the unfused plan (the witness convention of
+/// [`crate::quant::emulated_forward`], so served results are
+/// bit-identical to the offline emulated runs they stand in for).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ServeFormat {
+    /// Plain binary64 — the reference arithmetic.
+    F64,
+    /// Emulated precision-k arithmetic (`k` mantissa bits, 2..=53).
+    Emulated {
+        /// Mantissa width every operation result is rounded to.
+        k: u32,
+    },
+}
+
+impl ServeFormat {
+    /// Validate the format (`Emulated` requires `k` in `2..=53`).
+    pub fn validate(&self) -> Result<()> {
+        if let ServeFormat::Emulated { k } = self {
+            anyhow::ensure!((2..=53).contains(k), "emulated precision k={k} outside 2..=53");
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for ServeFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeFormat::F64 => write!(f, "f64"),
+            ServeFormat::Emulated { k } => write!(f, "emu-k{k}"),
+        }
+    }
 }
 
 /// Index of a buffer in the plan's pool (and in the executing
@@ -534,6 +573,9 @@ impl Plan {
                             &s.out_shape,
                         )))
                     }
+                    StepKind::AvgPool2D { ph, pw } => Some(BlockedStep::AvgPool(
+                        gemm::PoolTable::build(*ph, *pw, s.in_shape(), &s.out_shape),
+                    )),
                     _ => None,
                 })
                 .collect(),
@@ -569,6 +611,18 @@ impl Plan {
     /// mixed-precision path's addressing mode).
     pub fn unfused(model: &Model) -> Result<Plan> {
         Plan::build(model, Fusion::None)
+    }
+
+    /// The serving plan for one [`ServeFormat`]: [`Plan::for_reference`]
+    /// for `F64` traffic, [`Plan::unfused`] for `Emulated` traffic (the
+    /// witness convention — served emulated results stay bit-identical to
+    /// [`crate::quant::emulated_forward`] on the same model).
+    pub fn for_format(model: &Model, format: ServeFormat) -> Result<Plan> {
+        format.validate()?;
+        match format {
+            ServeFormat::F64 => Plan::for_reference(model),
+            ServeFormat::Emulated { .. } => Plan::unfused(model),
+        }
     }
 
     /// Name of the compiled model.

@@ -47,7 +47,9 @@
 //! ```
 
 use crate::coordinator::{with_worker_scratch, Pool};
-use crate::plan::{Arena, KernelPath, Plan};
+use crate::plan::{Arena, KernelPath, Plan, ServeFormat};
+use crate::quant::EmulatedFp;
+use crate::tensor::EmuCtx;
 use anyhow::{anyhow, bail, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -102,15 +104,22 @@ pub struct ServeMetrics {
 }
 
 /// One request's result slot: filled exactly once by the batch job,
-/// waited on by the [`Ticket`].
-struct Slot {
+/// waited on by the [`Ticket`]. `pub(crate)` so the fleet scheduler
+/// ([`crate::fleet`]) shares the ticket machinery.
+pub(crate) struct Slot {
     state: Mutex<Option<Result<Vec<f64>, String>>>,
     ready: Condvar,
 }
 
+impl Slot {
+    pub(crate) fn new() -> Arc<Slot> {
+        Arc::new(Slot { state: Mutex::new(None), ready: Condvar::new() })
+    }
+}
+
 /// Handle to one submitted sample's pending output.
 pub struct Ticket {
-    slot: Arc<Slot>,
+    pub(crate) slot: Arc<Slot>,
 }
 
 impl Ticket {
@@ -134,10 +143,12 @@ impl Ticket {
     }
 }
 
-struct PendingSample {
-    sample: Vec<f64>,
-    slot: Arc<Slot>,
-    enqueued: Instant,
+/// A submitted sample waiting to be flushed (shared with
+/// [`crate::fleet`], whose queues hold the same pending shape).
+pub(crate) struct PendingSample {
+    pub(crate) sample: Vec<f64>,
+    pub(crate) slot: Arc<Slot>,
+    pub(crate) enqueued: Instant,
 }
 
 struct QueueState {
@@ -166,7 +177,14 @@ struct Shared {
     pool: Arc<Pool>,
     policy: BatchPolicy,
     kernels: KernelPath,
+    format: ServeFormat,
     counters: Counters,
+    /// Flushes handed to the pool but not yet finished — what
+    /// [`MicroBatcher::shutdown`] drains so every ticket is resolved
+    /// before it returns.
+    inflight: Mutex<usize>,
+    /// Signalled when `inflight` drops to zero.
+    idle: Condvar,
 }
 
 /// Why a batch left the queue (metrics bookkeeping).
@@ -205,6 +223,22 @@ impl MicroBatcher {
         policy: BatchPolicy,
         kernels: KernelPath,
     ) -> MicroBatcher {
+        MicroBatcher::with_format(plan, pool, policy, kernels, ServeFormat::F64)
+    }
+
+    /// [`MicroBatcher::with_kernel_path`] with an explicit serving
+    /// arithmetic: `ServeFormat::Emulated { k }` batches execute under
+    /// emulated precision-k (inputs rounded into the k-bit format, every
+    /// op re-rounded), bit-identical per sample to
+    /// [`crate::quant::emulated_forward`] on the same plan. Tickets still
+    /// carry `Vec<f64>` — the emulated values' exact f64 representations.
+    pub fn with_format(
+        plan: Arc<Plan>,
+        pool: Arc<Pool>,
+        policy: BatchPolicy,
+        kernels: KernelPath,
+        format: ServeFormat,
+    ) -> MicroBatcher {
         assert!(policy.max_batch >= 1, "max_batch must be >= 1");
         assert!(
             policy.max_pending >= policy.max_batch,
@@ -212,6 +246,7 @@ impl MicroBatcher {
             policy.max_pending,
             policy.max_batch
         );
+        format.validate().expect("valid serve format");
         let shared = Arc::new(Shared {
             queue: Mutex::new(QueueState { pending: VecDeque::new(), shutdown: false }),
             wake: Condvar::new(),
@@ -220,7 +255,10 @@ impl MicroBatcher {
             pool,
             policy,
             kernels,
+            format,
             counters: Counters::default(),
+            inflight: Mutex::new(0),
+            idle: Condvar::new(),
         });
         let flusher = {
             let sh = Arc::clone(&shared);
@@ -290,10 +328,20 @@ impl MicroBatcher {
     pub fn plan(&self) -> &Plan {
         &self.shared.plan
     }
-}
 
-impl Drop for MicroBatcher {
-    fn drop(&mut self) {
+    /// The arithmetic this batcher executes under.
+    pub fn format(&self) -> ServeFormat {
+        self.shared.format
+    }
+
+    /// Shut the batcher down in order: wake every submitter blocked on
+    /// [`BatchPolicy::max_pending`] (their `submit` errors out), let the
+    /// flusher drain every still-pending sample as `Drain` batches, then
+    /// **wait for all in-flight pool flushes to finish** — so when this
+    /// returns, every accepted ticket has been resolved (no ticket is
+    /// ever dropped unresolved by a shutdown racing its batch job).
+    /// Idempotent; also run by `Drop`.
+    pub fn shutdown(&mut self) {
         {
             let mut q = self.shared.queue.lock().unwrap();
             q.shutdown = true;
@@ -303,6 +351,18 @@ impl Drop for MicroBatcher {
         if let Some(h) = self.flusher.take() {
             let _ = h.join();
         }
+        // The flusher has exited, so `inflight` can only decrease now:
+        // wait for the last dispatched batch to scatter its results.
+        let mut n = self.shared.inflight.lock().unwrap();
+        while *n > 0 {
+            n = self.shared.idle.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for MicroBatcher {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -356,37 +416,72 @@ fn flusher_loop(sh: Arc<Shared>) {
             FlushCause::Timer => c.flushed_timer.fetch_add(1, Ordering::Relaxed),
             FlushCause::Drain => c.flushed_drain.fetch_add(1, Ordering::Relaxed),
         };
-        let plan = Arc::clone(&sh.plan);
-        let kernels = sh.kernels;
-        sh.pool.submit(move || run_batch_job(&plan, kernels, batch));
+        *sh.inflight.lock().unwrap() += 1;
+        let job_sh = Arc::clone(&sh);
+        sh.pool.submit(move || {
+            run_batch_job(&job_sh.plan, job_sh.kernels, job_sh.format, batch);
+            let mut n = job_sh.inflight.lock().unwrap();
+            *n -= 1;
+            if *n == 0 {
+                job_sh.idle.notify_all();
+            }
+        });
     }
 }
 
 /// One pool job: drive the whole micro-batch through a single batched
-/// plan execution against this worker's thread-local arena, scattering
-/// each per-sample output to its ticket straight from the arena borrow
-/// (no intermediate full-batch copy). Every ticket is resolved exactly
-/// once on every path — including a panic inside the drive, which the
-/// pool worker would otherwise swallow, leaving waiters blocked forever.
-fn run_batch_job(plan: &Plan, kernels: KernelPath, batch: Vec<PendingSample>) {
+/// plan execution against this worker's thread-local arena (in the
+/// format's arithmetic — f64 straight through, emulated-k via input
+/// rounding and per-op re-rounding), scattering each per-sample output to
+/// its ticket straight from the arena borrow (no intermediate full-batch
+/// copy). Every ticket is resolved exactly once on every path — including
+/// a panic inside the drive, which the pool worker would otherwise
+/// swallow, leaving waiters blocked forever. `pub(crate)`: the fleet
+/// scheduler dispatches its per-format sub-batches through this same job.
+pub(crate) fn run_batch_job(
+    plan: &Plan,
+    kernels: KernelPath,
+    format: ServeFormat,
+    batch: Vec<PendingSample>,
+) {
     let b = batch.len();
     let mut flat: Vec<f64> = Vec::with_capacity(b * plan.input_len());
     for p in &batch {
         flat.extend_from_slice(&p.sample);
     }
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        with_worker_scratch(|arena: &mut Arena<f64>| {
-            match plan.execute_batch_path::<f64>(&(), &flat, b, arena, kernels) {
-                Ok(out) => {
-                    let m = plan.output_len();
-                    for (s, p) in batch.iter().enumerate() {
-                        fill(&p.slot, Ok(out[s * m..(s + 1) * m].to_vec()));
+        let m = plan.output_len();
+        match format {
+            ServeFormat::F64 => with_worker_scratch(|arena: &mut Arena<f64>| {
+                match plan.execute_batch_path::<f64>(&(), &flat, b, arena, kernels) {
+                    Ok(out) => {
+                        for (s, p) in batch.iter().enumerate() {
+                            fill(&p.slot, Ok(out[s * m..(s + 1) * m].to_vec()));
+                        }
+                        Ok(())
                     }
-                    Ok(())
+                    Err(e) => Err(format!("{e:#}")),
                 }
-                Err(e) => Err(format!("{e:#}")),
+            }),
+            ServeFormat::Emulated { k } => {
+                // Same input mapping as `quant::emulated_forward`, batched.
+                let ec = EmuCtx { k };
+                let xe: Vec<EmulatedFp> =
+                    flat.iter().map(|&v| EmulatedFp::new(v, k)).collect();
+                with_worker_scratch(|arena: &mut Arena<EmulatedFp>| {
+                    match plan.execute_batch_path::<EmulatedFp>(&ec, &xe, b, arena, kernels) {
+                        Ok(out) => {
+                            for (s, p) in batch.iter().enumerate() {
+                                let row = &out[s * m..(s + 1) * m];
+                                fill(&p.slot, Ok(row.iter().map(|e| e.v).collect()));
+                            }
+                            Ok(())
+                        }
+                        Err(e) => Err(format!("{e:#}")),
+                    }
+                })
             }
-        })
+        }
     }));
     let msg = match result {
         Ok(Ok(())) => return,
@@ -407,7 +502,7 @@ fn run_batch_job(plan: &Plan, kernels: KernelPath, batch: Vec<PendingSample>) {
 
 /// Resolve a ticket slot, first write wins: the error fallback after a
 /// mid-scatter panic must not clobber outputs already delivered.
-fn fill(slot: &Slot, result: Result<Vec<f64>, String>) {
+pub(crate) fn fill(slot: &Slot, result: Result<Vec<f64>, String>) {
     let mut st = slot.state.lock().unwrap();
     if st.is_none() {
         *st = Some(result);
@@ -563,6 +658,63 @@ mod tests {
         }
         assert_eq!(t1.wait().unwrap().len(), 3);
         assert_eq!(t2.wait().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn shutdown_waits_for_inflight_flushes() {
+        // Regression: shutdown used to join the flusher and return while
+        // dispatched batch jobs still sat in the pool queue, so a caller
+        // could observe "shut down" with tickets unresolved. Stall the
+        // pool behind a sleeper, shut down, and require every ticket to
+        // be resolved the moment shutdown returns.
+        let model = zoo::tiny_mlp(11);
+        let plan = Arc::new(Plan::for_reference(&model).unwrap());
+        let pool = Arc::new(Pool::new(1, 2));
+        pool.submit(|| std::thread::sleep(Duration::from_millis(60)));
+        let mut batcher = MicroBatcher::new(
+            Arc::clone(&plan),
+            pool,
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), max_pending: 8 },
+        );
+        let tickets: Vec<Ticket> =
+            (0..4).map(|i| batcher.submit(sample(i)).unwrap()).collect();
+        batcher.shutdown();
+        for (i, t) in tickets.iter().enumerate() {
+            let r = t.try_take().unwrap_or_else(|| panic!("ticket {i} unresolved after shutdown"));
+            assert_eq!(r.unwrap().len(), 3);
+        }
+    }
+
+    #[test]
+    fn emulated_format_matches_offline_witness_bitwise() {
+        // A batcher serving EmulatedFp{k} traffic must produce, per
+        // ticket, exactly the offline witness run's bits.
+        let model = zoo::tiny_mlp(11);
+        let k = 12u32;
+        let format = ServeFormat::Emulated { k };
+        let plan = Arc::new(Plan::for_format(&model, format).unwrap());
+        let pool = Arc::new(Pool::new(2, 8));
+        let batcher = MicroBatcher::with_format(
+            Arc::clone(&plan),
+            pool,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                ..BatchPolicy::default()
+            },
+            plan.kernel_path(),
+            format,
+        );
+        let tickets: Vec<Ticket> =
+            (0..10).map(|i| batcher.submit(sample(i)).unwrap()).collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let got = t.wait().unwrap();
+            let want = crate::quant::emulated_forward(&plan, k, &sample(i)).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "request {i}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,262 @@
+//! Fleet integration tests — the acceptance criteria of the multi-model
+//! serving scheduler: a 2-model x 2-format concurrent load through one
+//! `Fleet` must produce per-ticket results bit-identical to independent
+//! single-model `MicroBatcher` runs, no queue may starve (flush share
+//! within 2x of fair), a hot swap under concurrent submitters must drop
+//! or misroute nothing, and admission control must reject typed.
+
+use rigor::coordinator::Pool;
+use rigor::fleet::{AdmitError, Fleet, FleetPolicy};
+use rigor::model::zoo;
+use rigor::plan::{Arena, Plan, ServeFormat};
+use rigor::serve::{BatchPolicy, MicroBatcher};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sample(n: usize, i: usize) -> Vec<f64> {
+    (0..n).map(|j| ((i * n + j) % 13) as f64 / 13.0).collect()
+}
+
+#[test]
+fn mixed_fleet_matches_independent_microbatchers_bitwise() {
+    // Two models, two formats, four concurrent submitter threads — one
+    // per (model, format) queue — through ONE fleet. Every ticket must be
+    // bit-identical to the same sample served by an independent
+    // single-model MicroBatcher in the same format.
+    let mlp = zoo::tiny_mlp(101);
+    let cnn = zoo::tiny_cnn(102);
+    let emu = ServeFormat::Emulated { k: 12 };
+    let n_mlp: usize = mlp.input_shape.iter().product();
+    let n_cnn: usize = cnn.input_shape.iter().product();
+    const REQS: usize = 24;
+
+    let fleet = Arc::new(Fleet::new(
+        Arc::new(Pool::new(4, 32)),
+        FleetPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            max_queue_pending: 64,
+            max_fleet_pending: 256,
+        },
+    ));
+    fleet.deploy("mlp", &mlp).unwrap();
+    fleet.deploy("cnn", &cnn).unwrap();
+
+    let lanes: [(&'static str, ServeFormat, usize); 4] = [
+        ("mlp", ServeFormat::F64, n_mlp),
+        ("mlp", emu, n_mlp),
+        ("cnn", ServeFormat::F64, n_cnn),
+        ("cnn", emu, n_cnn),
+    ];
+    let handles: Vec<_> = lanes
+        .iter()
+        .map(|&(id, fmt, n)| {
+            let f = Arc::clone(&fleet);
+            std::thread::spawn(move || {
+                let tickets: Vec<_> = (0..REQS)
+                    .map(|i| f.submit_blocking(id, fmt, sample(n, i)).unwrap())
+                    .collect();
+                tickets.into_iter().map(|t| t.wait().unwrap()).collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    let fleet_results: Vec<Vec<Vec<f64>>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for (lane, &(id, fmt, n)) in lanes.iter().enumerate() {
+        let model = if id == "mlp" { &mlp } else { &cnn };
+        let plan = Arc::new(Plan::for_format(model, fmt).unwrap());
+        let kernels = plan.kernel_path();
+        let batcher = MicroBatcher::with_format(
+            plan,
+            Arc::new(Pool::new(2, 16)),
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1), max_pending: 64 },
+            kernels,
+            fmt,
+        );
+        let tickets: Vec<_> = (0..REQS).map(|i| batcher.submit(sample(n, i)).unwrap()).collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let want = t.wait().unwrap();
+            let got = &fleet_results[lane][i];
+            assert_eq!(got.len(), want.len(), "{id}/{fmt} ticket {i}: length");
+            for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "{id}/{fmt} ticket {i} element {j}: fleet vs independent batcher"
+                );
+            }
+        }
+    }
+
+    let snap = fleet.snapshot();
+    assert_eq!(snap.queues.len(), 4, "one queue per (model, format) pair");
+    assert_eq!(snap.submitted(), 4 * REQS);
+    assert_eq!(snap.total_pending, 0);
+}
+
+#[test]
+fn flush_shares_stay_within_2x_of_fair() {
+    // Four equally-loaded queues: round-robin flushing must keep every
+    // queue's flush share within 2x of the fair share. A long max_wait
+    // keeps the flushes Full-triggered (48 = 6 full batches per queue),
+    // so a starved scheduler would show up as a lopsided batch count.
+    let mlp_a = zoo::tiny_mlp(121);
+    let mlp_b = zoo::tiny_mlp(122);
+    let emu = ServeFormat::Emulated { k: 10 };
+    const REQS: usize = 48;
+
+    let fleet = Arc::new(Fleet::new(
+        Arc::new(Pool::new(2, 16)),
+        FleetPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(200),
+            max_queue_pending: 16,
+            max_fleet_pending: 64,
+        },
+    ));
+    fleet.deploy("a", &mlp_a).unwrap();
+    fleet.deploy("b", &mlp_b).unwrap();
+
+    let lanes: [(&'static str, ServeFormat); 4] =
+        [("a", ServeFormat::F64), ("a", emu), ("b", ServeFormat::F64), ("b", emu)];
+    let handles: Vec<_> = lanes
+        .iter()
+        .map(|&(id, fmt)| {
+            let f = Arc::clone(&fleet);
+            std::thread::spawn(move || {
+                let tickets: Vec<_> = (0..REQS)
+                    .map(|i| f.submit_blocking(id, fmt, sample(8, i)).unwrap())
+                    .collect();
+                for t in tickets {
+                    assert_eq!(t.wait().unwrap().len(), 3);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let snap = fleet.snapshot();
+    assert_eq!(snap.submitted(), 4 * REQS);
+    let fair = snap.batches() as f64 / snap.queues.len() as f64;
+    for q in &snap.queues {
+        let share = q.metrics.batches as f64;
+        assert!(
+            share * 2.0 >= fair && share <= fair * 2.0,
+            "queue {:?} flushed {share} batches, fair share is {fair:.1}",
+            q.key
+        );
+        assert!(q.metrics.max_batch_observed <= 8);
+    }
+}
+
+#[test]
+fn hot_swap_under_concurrent_load_drops_and_misroutes_nothing() {
+    let v1 = zoo::tiny_mlp(111);
+    let v2 = zoo::tiny_mlp(112);
+    let fleet = Arc::new(Fleet::new(
+        Arc::new(Pool::new(2, 16)),
+        FleetPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            max_queue_pending: 64,
+            max_fleet_pending: 256,
+        },
+    ));
+    fleet.deploy("m", &v1).unwrap();
+
+    // Background submitters race the swap: each of their tickets must
+    // resolve (no drops) to exactly one version's reference trace (no
+    // misroutes — a batch never mixes plans).
+    let racing: Vec<_> = (0..2)
+        .map(|t: usize| {
+            let f = Arc::clone(&fleet);
+            std::thread::spawn(move || {
+                (0..60)
+                    .map(|i| {
+                        let s = sample(8, t * 60 + i);
+                        let out = f
+                            .submit_blocking("m", ServeFormat::F64, s.clone())
+                            .unwrap()
+                            .wait()
+                            .unwrap();
+                        (s, out)
+                    })
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+
+    // Main thread: a pre-swap batch (pins v1), the swap, a post-swap
+    // batch (must route to v2).
+    let pre: Vec<_> = (0..20)
+        .map(|i| {
+            let s = sample(8, 1000 + i);
+            (s.clone(), fleet.submit_blocking("m", ServeFormat::F64, s).unwrap())
+        })
+        .collect();
+    assert_eq!(fleet.deploy("m", &v2).unwrap(), 2);
+    let post: Vec<_> = (0..20)
+        .map(|i| {
+            let s = sample(8, 2000 + i);
+            (s.clone(), fleet.submit_blocking("m", ServeFormat::F64, s).unwrap())
+        })
+        .collect();
+
+    let p1 = Plan::for_reference(&v1).unwrap();
+    let p2 = Plan::for_reference(&v2).unwrap();
+    let mut arena: Arena<f64> = Arena::new();
+    let bits = |plan: &Plan, s: &[f64], arena: &mut Arena<f64>| -> Vec<u64> {
+        plan.execute::<f64>(&(), s, arena).unwrap().iter().map(|v| v.to_bits()).collect()
+    };
+    for (i, (s, t)) in pre.into_iter().enumerate() {
+        let got: Vec<u64> = t.wait().unwrap().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, bits(&p1, &s, &mut arena), "pre-swap ticket {i} must drain on v1");
+    }
+    for (i, (s, t)) in post.into_iter().enumerate() {
+        let got: Vec<u64> = t.wait().unwrap().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, bits(&p2, &s, &mut arena), "post-swap ticket {i} must route to v2");
+    }
+    for h in racing {
+        for (s, out) in h.join().unwrap() {
+            let got: Vec<u64> = out.iter().map(|v| v.to_bits()).collect();
+            let w1 = bits(&p1, &s, &mut arena);
+            let w2 = bits(&p2, &s, &mut arena);
+            assert!(
+                got == w1 || got == w2,
+                "racing ticket matches neither version's reference trace"
+            );
+        }
+    }
+    assert_eq!(fleet.snapshot().swaps, 1);
+}
+
+#[test]
+fn admission_and_shutdown_reject_typed() {
+    let fleet = Fleet::new(Arc::new(Pool::new(1, 4)), FleetPolicy::default());
+    assert!(matches!(
+        fleet.submit("ghost", ServeFormat::F64, vec![0.0; 8]),
+        Err(AdmitError::UnknownModel { .. })
+    ));
+    fleet.deploy("m", &zoo::tiny_mlp(5)).unwrap();
+    assert!(matches!(
+        fleet.submit("m", ServeFormat::Emulated { k: 1 }, vec![0.0; 8]),
+        Err(AdmitError::BadFormat { .. })
+    ));
+    assert!(matches!(
+        fleet.submit("m", ServeFormat::F64, vec![0.0; 3]),
+        Err(AdmitError::WrongLen { expected: 8, got: 3, .. })
+    ));
+    let t = fleet.submit("m", ServeFormat::F64, vec![0.1; 8]).unwrap();
+    assert_eq!(t.wait().unwrap().len(), 3);
+    // Shutdown refuses new admissions with its own typed error — and the
+    // errors are surfaced in the snapshot's rejection counter.
+    fleet.shutdown();
+    assert!(matches!(
+        fleet.submit("m", ServeFormat::F64, vec![0.1; 8]),
+        Err(AdmitError::ShuttingDown)
+    ));
+    assert!(fleet.snapshot().rejected >= 3);
+}

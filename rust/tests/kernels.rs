@@ -59,11 +59,13 @@ static ALLOC: CountingAlloc = CountingAlloc;
 // ---- helpers --------------------------------------------------------------
 
 /// The whole zoo, residual models included. `scaled_mlp` gets prime-ish
-/// dims so dense tiles see row *and* lane tails.
+/// dims so dense tiles see row *and* lane tails; `avgpool_cnn` pins the
+/// blocked average-pool summation kernel.
 fn zoo_models() -> Vec<Model> {
     vec![
         zoo::tiny_mlp(1),
         zoo::tiny_cnn(2),
+        zoo::avgpool_cnn(7),
         zoo::tiny_pendulum(3),
         zoo::scaled_mlp(4, 13, 17, 5),
         zoo::residual_mlp(5),
