@@ -30,6 +30,11 @@
 //!    row carries a 0.8x floor — multiplexing overhead must stay
 //!    bounded even where the box is too loaded for cross-model overlap
 //!    to pay.
+//! 9. serial vs **parallel** pooled plan drives
+//!    (`Plan::execute_batch_pooled`: intra-op tile sharding plus
+//!    inter-op branch overlap, bit-identical to the serial drive) on the
+//!    residual CNN at B=32, W in {1, 2, 4}. The W=4 row carries a 2.5x
+//!    floor, enforced only on hosts with >= 4 hardware threads.
 //!
 //! The bench then **checks thresholds** — the plan must not run slower
 //! than the interpreter, and the f64/sampling batched paths, the
@@ -634,6 +639,78 @@ fn main() {
         }
     }
 
+    // ---- 9: serial vs parallel pooled plan drives ---------------------------
+    // One plan drive using the whole machine: `execute_batch_pooled`
+    // shards each step's independent tile ranges across the coordinator
+    // pool and overlaps independent residual branches, bit-identical to
+    // the serial drive. The W=4 row carries a 2.5x floor — enforced only
+    // when the host actually has >= 4 cores (the floor is meaningless on
+    // a 1-core CI box, where the rows stay informational).
+    // (name, workers, serial ns, parallel ns, speedup floor)
+    let mut parallel_rows: Vec<(String, usize, f64, f64, f64)> = Vec::new();
+    {
+        use rigor::coordinator::Pool;
+        use rigor::plan::Parallelism;
+
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        println!("\nserial vs parallel pooled drives (B = {BATCH}, {hw} hardware threads):");
+        let plan =
+            Plan::build_with_kernels(&res, Fusion::Full, KernelPath::Blocked).expect("compile");
+        let res_n: usize = res.input_shape.iter().product();
+        let flat: Vec<f64> = (0..BATCH * res_n).map(|i| (i % 17) as f64 / 17.0).collect();
+        let mut sa: Arena<f64> = Arena::new();
+        let serial = b
+            .bench(&format!("parallel-f64/residual-cnn/serial-x{BATCH}"), || {
+                plan.execute_batch_path::<f64>(&(), &flat, BATCH, &mut sa, KernelPath::Blocked)
+                    .unwrap()
+                    .len()
+            })
+            .mean;
+        let pool = Pool::new(4, 32);
+        for workers in [1usize, 2, 4] {
+            let par = Parallelism::with_workers(workers);
+            let mut pa: Arena<f64> = Arena::new();
+            let pooled = b
+                .bench(&format!("parallel-f64/residual-cnn/pooled-w{workers}-x{BATCH}"), || {
+                    plan.execute_batch_pooled::<f64>(
+                        &(),
+                        &flat,
+                        BATCH,
+                        &mut pa,
+                        KernelPath::Blocked,
+                        &pool,
+                        par,
+                    )
+                    .unwrap()
+                    .len()
+                })
+                .mean;
+            let floor = if workers == 4 && hw >= 4 { 2.5 } else { 0.0 };
+            parallel_rows.push((
+                format!("parallel-f64/residual-cnn/w{workers}"),
+                workers,
+                serial.as_nanos() as f64,
+                pooled.as_nanos() as f64,
+                floor,
+            ));
+        }
+        println!(
+            "{:<32} {:>3} {:>14} {:>14} {:>9} {:>7}",
+            "workload", "W", "serial", "parallel", "speedup", "floor"
+        );
+        for (name, workers, s_ns, p_ns, floor) in &parallel_rows {
+            println!(
+                "{name:<32} {workers:>3} {:>12.1} us {:>12.1} us {:>8.2}x {floor:>6.1}x",
+                s_ns / 1e3,
+                p_ns / 1e3,
+                s_ns / p_ns
+            );
+        }
+        if hw < 4 {
+            println!("(host has {hw} hardware threads — parallel floors not enforced)");
+        }
+    }
+
     // ---- threshold check ----------------------------------------------------
     let mut regressions: Vec<String> = Vec::new();
     for (name, i_ns, p_ns) in &comparisons {
@@ -664,6 +741,14 @@ fn main() {
         if *floor > 0.0 && speedup < *floor {
             regressions.push(format!(
                 "{name}: fleet speedup {speedup:.2}x vs serialized serving below the {floor:.1}x floor"
+            ));
+        }
+    }
+    for (name, _workers, s_ns, p_ns, floor) in &parallel_rows {
+        let speedup = s_ns / p_ns;
+        if *floor > 0.0 && speedup < *floor {
+            regressions.push(format!(
+                "{name}: parallel speedup {speedup:.2}x vs the serial drive below the {floor:.1}x floor"
             ));
         }
     }
@@ -739,6 +824,24 @@ fn main() {
                             ("serialized_ns", Value::from(*base_ns)),
                             ("fleet_ns", Value::from(*fleet_ns)),
                             ("speedup", Value::from(base_ns / fleet_ns)),
+                            ("floor", Value::from(*floor)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "parallel",
+            Value::arr(
+                parallel_rows
+                    .iter()
+                    .map(|(name, workers, s_ns, p_ns, floor)| {
+                        Value::obj(vec![
+                            ("name", Value::from(name.clone())),
+                            ("workers", Value::from(*workers)),
+                            ("serial_ns", Value::from(*s_ns)),
+                            ("parallel_ns", Value::from(*p_ns)),
+                            ("speedup", Value::from(s_ns / p_ns)),
                             ("floor", Value::from(*floor)),
                         ])
                     })

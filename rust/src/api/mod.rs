@@ -54,7 +54,7 @@ use crate::coordinator::Pool;
 use crate::data::Dataset;
 use crate::fleet::{AdmitError, Fleet, FleetPolicy, FleetSnapshot};
 use crate::model::Model;
-use crate::plan::{Plan, ServeFormat};
+use crate::plan::{Parallelism, Plan, ServeFormat};
 use crate::serve::{BatchPolicy, MicroBatcher, Ticket};
 use crate::util::Stopwatch;
 use anyhow::Result;
@@ -456,7 +456,13 @@ impl Session {
         } else {
             plan.kernel_path()
         };
-        Ok(MicroBatcher::with_format(
+        // Per-drive parallelism: the request knob wins, otherwise the
+        // `RIGOR_WORKERS` environment default (pool-sized fallback).
+        let par = match req.parallel_workers {
+            Some(w) => Parallelism::with_workers(w),
+            None => Parallelism::from_env(self.pool.worker_count()),
+        };
+        Ok(MicroBatcher::with_parallelism(
             plan,
             Arc::clone(&self.pool),
             BatchPolicy {
@@ -466,6 +472,7 @@ impl Session {
             },
             kernels,
             format,
+            par,
         ))
     }
 

@@ -71,6 +71,7 @@ pub struct AnalysisRequest {
     pub(crate) max_pending: usize,
     pub(crate) force_scalar_kernels: bool,
     pub(crate) emulated_k: Option<u32>,
+    pub(crate) parallel_workers: Option<usize>,
 }
 
 impl AnalysisRequest {
@@ -146,6 +147,17 @@ impl AnalysisRequest {
         self.force_scalar_kernels
     }
 
+    /// Explicit per-drive worker count for this request's served batches
+    /// ([`Session::serve`](super::Session::serve)): `Some(1)` pins every
+    /// flush to the serial drive, `Some(n)` shards each drive across `n`
+    /// scoped jobs. `None` (the default) defers to the `RIGOR_WORKERS`
+    /// environment variable, falling back to the session pool's worker
+    /// count. Parallel drives are bit-identical to serial ones — the knob
+    /// only changes throughput.
+    pub fn parallel_workers(&self) -> Option<usize> {
+        self.parallel_workers
+    }
+
     /// The serving arithmetic this request resolves to:
     /// [`ServeFormat::Emulated`](crate::plan::ServeFormat) at the
     /// requested `k` when [`emulated_k`](AnalysisRequestBuilder::emulated_k)
@@ -206,6 +218,7 @@ pub struct AnalysisRequestBuilder {
     max_pending: Option<usize>,
     force_scalar_kernels: bool,
     emulated_k: Option<u32>,
+    parallel_workers: Option<usize>,
 }
 
 impl AnalysisRequestBuilder {
@@ -225,6 +238,7 @@ impl AnalysisRequestBuilder {
             max_pending: None,
             force_scalar_kernels: false,
             emulated_k: None,
+            parallel_workers: None,
         }
     }
 
@@ -377,6 +391,17 @@ impl AnalysisRequestBuilder {
         self
     }
 
+    /// Shard each served plan drive
+    /// ([`Session::serve`](super::Session::serve)) across `workers`
+    /// coordinator jobs (`1` = serial drives, the pre-parallel behavior).
+    /// Overrides the `RIGOR_WORKERS` environment default for this request
+    /// only; results stay bit-identical to the serial path. Must be in
+    /// `[1, 4096]`.
+    pub fn parallel_workers(mut self, workers: usize) -> Self {
+        self.parallel_workers = Some(workers);
+        self
+    }
+
     fn validate(&self) -> Result<()> {
         if !(self.p_star > 0.5 && self.p_star < 1.0) {
             bail!("p_star must be in (0.5, 1.0), got {}", self.p_star);
@@ -402,6 +427,11 @@ impl AnalysisRequestBuilder {
         }
         if let Some(k) = self.emulated_k {
             crate::plan::ServeFormat::Emulated { k }.validate()?;
+        }
+        if let Some(w) = self.parallel_workers {
+            if w == 0 || w > 4096 {
+                bail!("parallel_workers must be in [1, 4096], got {w}");
+            }
         }
         Ok(())
     }
@@ -431,6 +461,7 @@ impl AnalysisRequestBuilder {
             max_pending: self.max_pending.unwrap_or_else(|| (32 * self.max_batch).max(1024)),
             force_scalar_kernels: self.force_scalar_kernels,
             emulated_k: self.emulated_k,
+            parallel_workers: self.parallel_workers,
         })
     }
 
@@ -596,6 +627,37 @@ mod tests {
             .model(zoo::tiny_mlp(1))
             .input_box()
             .emulated_k(54)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn parallel_workers_knob_validates_and_flows_through() {
+        let dflt = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .build()
+            .unwrap();
+        assert_eq!(dflt.parallel_workers(), None, "default defers to RIGOR_WORKERS");
+
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .parallel_workers(4)
+            .build()
+            .unwrap();
+        assert_eq!(req.parallel_workers(), Some(4));
+
+        assert!(AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .parallel_workers(0)
+            .build()
+            .is_err());
+        assert!(AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .parallel_workers(5000)
             .build()
             .is_err());
     }

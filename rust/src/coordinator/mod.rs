@@ -10,7 +10,7 @@
 
 mod pool;
 
-pub use pool::{with_worker_scratch, Pool, PoolMetrics};
+pub use pool::{with_worker_scratch, Pool, PoolMetrics, Scope, SubmitError};
 
 use crate::analysis::{
     aggregate, analyze_class_with_plan, representatives, AnalysisConfig, ClassAnalysis,

@@ -1,16 +1,24 @@
-//! Worker pool with a bounded, backpressured job queue.
+//! Worker pool with a bounded, backpressured job queue and a scoped
+//! borrowed-job API.
 //!
 //! Invariants (property-tested below):
 //! * every submitted job runs **exactly once**,
 //! * `run_batch` returns results in submission order,
 //! * the queue never holds more than its bound (submitters block),
-//! * shutdown drains the queue before joining workers,
+//! * shutdown drains the queue before joining workers; submits racing a
+//!   shutdown get a typed [`SubmitError`] instead of aborting the process,
 //! * a panicking job does not take the pool down (it is reported to the
-//!   submitter).
+//!   submitter),
+//! * [`Pool::scope`] never returns (even by unwind) before every spawned
+//!   job has run to completion, and makes progress on any pool — including
+//!   when called *from* a pool worker or on a 1-worker pool — because the
+//!   scoping thread drains scope jobs itself while it waits (helpers
+//!   recruited from the pool only add parallelism, never correctness).
 
 use std::any::{Any, TypeId};
 use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
+use std::marker::PhantomData;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -45,6 +53,25 @@ where
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Why a [`Pool::submit`] was rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The pool is shutting down (or already shut down); the job was
+    /// dropped without running. Teardown paths treat this as "run the work
+    /// inline or skip it" — it must never abort the process.
+    ShutDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::ShutDown => write!(f, "pool is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 struct Shared {
     queue: Mutex<QueueState>,
@@ -120,25 +147,25 @@ impl Pool {
         Pool::new(n, n * 4)
     }
 
-    /// A pool sized to the machine (for CLI use).
-    #[deprecated(since = "0.2.0", note = "use `Pool::with_default_workers`")]
-    pub fn default_for_host() -> Pool {
-        Pool::with_default_workers()
-    }
-
     /// Number of worker threads.
     pub fn worker_count(&self) -> usize {
         self.workers.len()
     }
 
-    /// Submit a job; blocks while the queue is at its bound (backpressure).
-    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+    /// Enqueue an already-boxed job; on a shut-down pool the job is handed
+    /// back so the caller can run it inline instead of losing it.
+    fn enqueue(&self, job: Job) -> Result<(), (SubmitError, Job)> {
         let mut q = self.shared.queue.lock().unwrap();
         while q.jobs.len() >= self.shared.bound {
+            if q.shutdown {
+                return Err((SubmitError::ShutDown, job));
+            }
             q = self.shared.not_full.wait(q).unwrap();
         }
-        assert!(!q.shutdown, "submit after shutdown");
-        q.jobs.push_back(Box::new(job));
+        if q.shutdown {
+            return Err((SubmitError::ShutDown, job));
+        }
+        q.jobs.push_back(job);
         let depth = q.jobs.len();
         self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.shared
@@ -147,11 +174,129 @@ impl Pool {
             .fetch_max(depth, Ordering::Relaxed);
         drop(q);
         self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Like [`enqueue`](Self::enqueue) but never blocks: a full (or shut
+    /// down) queue is a `false`, not a wait. Used to recruit scope helpers
+    /// — if the pool has no room the recruiting thread simply keeps the
+    /// work for itself.
+    fn try_enqueue(&self, job: Job) -> bool {
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.shutdown || q.jobs.len() >= self.shared.bound {
+            return false;
+        }
+        q.jobs.push_back(job);
+        let depth = q.jobs.len();
+        self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared
+            .metrics
+            .queue_high_water
+            .fetch_max(depth, Ordering::Relaxed);
+        drop(q);
+        self.shared.not_empty.notify_one();
+        true
+    }
+
+    /// Submit a job; blocks while the queue is at its bound (backpressure).
+    ///
+    /// Returns [`SubmitError::ShutDown`] — dropping the job — if the pool
+    /// is shutting down, including when the shutdown lands while this call
+    /// is blocked on backpressure. Callers that must not lose the work
+    /// (serve/fleet flushers resolving tickets) run it inline on `Err`.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> Result<(), SubmitError> {
+        self.enqueue(Box::new(job)).map_err(|(e, _job)| e)
+    }
+
+    /// Submit a job that must run **exactly once, no matter what**: on a
+    /// live pool it is queued like [`Pool::submit`]; if the pool is
+    /// shutting down (or shuts down while this call is blocked on
+    /// backpressure) the job runs inline on the calling thread instead of
+    /// being dropped. The serve/fleet flushers use this so every admitted
+    /// ticket resolves even when a flush races pool teardown.
+    pub fn submit_or_run(&self, job: impl FnOnce() + Send + 'static) {
+        if let Err((_, job)) = self.enqueue(Box::new(job)) {
+            job();
+        }
+    }
+
+    /// Stop accepting jobs and wake every blocked submitter and idle
+    /// worker. Queued jobs still drain; worker threads exit once the queue
+    /// is empty and are joined by `Drop`. Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+
+    /// Run a set of **borrowed** jobs to completion on the pool: the
+    /// closure gets a [`Scope`] whose `spawn` accepts non-`'static` jobs
+    /// (they may borrow anything that outlives the `scope` call), and
+    /// `scope` does not return until every spawned job has finished — a
+    /// per-call barrier.
+    ///
+    /// Execution is cooperative: each spawn tries to recruit one idle pool
+    /// worker as a helper (never blocking on a full queue), and the calling
+    /// thread drains scope jobs itself while it waits at the barrier. That
+    /// makes `scope` deadlock-free from any context — from a pool worker
+    /// (the batched-execution jobs fan out from inside the pool), on a
+    /// 1-worker pool, under a racing shutdown, or nested inside another
+    /// scope — the caller alone is always enough to finish the work.
+    ///
+    /// Panics in spawned jobs are captured; the first one is re-raised on
+    /// the calling thread after the barrier (so borrowed data is never
+    /// freed while a job still runs, even on unwind).
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'env>) -> R,
+    {
+        let state = Arc::new(ScopeState {
+            jobs: Mutex::new(VecDeque::new()),
+            completed: Mutex::new(0),
+            all_done: Condvar::new(),
+            panic: Mutex::new(None),
+            spawned: AtomicUsize::new(0),
+            helpers: AtomicUsize::new(0),
+        });
+        let scope = Scope { state: Arc::clone(&state), pool: self, _env: PhantomData };
+        // If the body itself panics we must still reach the barrier below
+        // before unwinding: spawned jobs may hold borrows into the caller's
+        // frame.
+        let body = std::panic::catch_unwind(AssertUnwindSafe(|| f(&scope)));
+
+        // Barrier: help run scope jobs until all of them have completed.
+        let spawned = state.spawned.load(Ordering::Acquire);
+        loop {
+            if scope_run_one(&state) {
+                continue;
+            }
+            // Queue empty — either done, or helpers still hold in-flight
+            // jobs; `completed` is bumped under this lock, so no wakeup is
+            // lost between the check and the wait.
+            let done = state.completed.lock().unwrap();
+            if *done >= spawned {
+                break;
+            }
+            drop(state.all_done.wait(done).unwrap());
+        }
+
+        if let Some(p) = state.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(p);
+        }
+        match body {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        }
     }
 
     /// Run a function over every item, in parallel, returning results in
     /// submission order. Panics inside `f` are captured and re-raised here
-    /// (with the item index), not on the worker.
+    /// (with the item index), not on the worker. If the pool is shutting
+    /// down, remaining items run inline on the calling thread — the batch
+    /// always completes.
     pub fn run_batch<I, T, F>(&self, items: Vec<I>, f: F) -> Vec<T>
     where
         I: Send + 'static,
@@ -168,13 +313,16 @@ impl Pool {
             let results = Arc::clone(&results);
             let done = Arc::clone(&done);
             let f = Arc::clone(&f);
-            self.submit(move || {
+            let job: Job = Box::new(move || {
                 let r = std::panic::catch_unwind(AssertUnwindSafe(|| f(item)));
                 results.lock().unwrap()[i] = Some(r);
                 let (lock, cv) = &*done;
                 *lock.lock().unwrap() += 1;
                 cv.notify_all();
             });
+            if let Err((_, job)) = self.enqueue(job) {
+                job(); // pool raced shutdown: resolve the slot inline
+            }
         }
 
         let (lock, cv) = &*done;
@@ -223,15 +371,89 @@ impl Pool {
 
 impl Drop for Pool {
     fn drop(&mut self) {
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.shutdown = true;
-        }
-        self.shared.not_empty.notify_all();
+        self.shutdown();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
+}
+
+/// Handle for spawning borrowed jobs inside a [`Pool::scope`] call.
+///
+/// `'env` is the lifetime of the environment the jobs may borrow: anything
+/// that strictly outlives the `scope` call. The lifetime is invariant (via
+/// the marker) so it cannot be shortened to smuggle in shorter-lived
+/// borrows.
+pub struct Scope<'env> {
+    state: Arc<ScopeState>,
+    pool: *const Pool,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+struct ScopeState {
+    /// Lifetime-erased jobs; sound because `Pool::scope` barriers before
+    /// returning (see `spawn`).
+    jobs: Mutex<VecDeque<Job>>,
+    completed: Mutex<usize>,
+    all_done: Condvar,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    spawned: AtomicUsize,
+    helpers: AtomicUsize,
+}
+
+impl<'env> Scope<'env> {
+    /// Queue a borrowed job on the scope. It runs on a recruited pool
+    /// worker or on the scoping thread itself, exactly once, before
+    /// [`Pool::scope`] returns.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'env) {
+        let boxed: Box<dyn FnOnce() + Send + 'env> = Box::new(job);
+        // SAFETY: the erased borrow never outlives its referents —
+        // `Pool::scope` does not return (even when unwinding) until every
+        // spawned job has run to completion, and `'env` outlives the scope
+        // call. Helper closures that survive the scope capture only the
+        // (then empty) `Arc<ScopeState>` queue, never a job.
+        let erased: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Box<dyn FnOnce() + Send>>(boxed)
+        };
+        self.state.spawned.fetch_add(1, Ordering::AcqRel);
+        self.state.jobs.lock().unwrap().push_back(erased);
+
+        // Recruit at most one helper per spawn, capped at the pool's worker
+        // count, never blocking on a full queue: helpers only add
+        // parallelism, the scoping thread guarantees completion.
+        let pool = unsafe { &*self.pool };
+        if self.state.helpers.load(Ordering::Relaxed) < pool.worker_count() {
+            let st = Arc::clone(&self.state);
+            if pool.try_enqueue(Box::new(move || while scope_run_one(&st) {})) {
+                self.state.helpers.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+// SAFETY: a Scope is shared with spawned jobs only by reference and all
+// its state is behind sync primitives; the raw pool pointer is valid for
+// the whole scope (the pool is borrowed by `Pool::scope`).
+unsafe impl Sync for Scope<'_> {}
+unsafe impl Send for Scope<'_> {}
+
+/// Pop and run one scope job; `false` when the scope queue is empty. The
+/// first panic is parked in the scope's panic slot for the barrier to
+/// re-raise.
+fn scope_run_one(st: &ScopeState) -> bool {
+    let job = st.jobs.lock().unwrap().pop_front();
+    let Some(job) = job else { return false };
+    if let Err(p) = std::panic::catch_unwind(AssertUnwindSafe(job)) {
+        let mut slot = st.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(p);
+        }
+    }
+    let mut done = st.completed.lock().unwrap();
+    *done += 1;
+    drop(done);
+    st.all_done.notify_all();
+    true
 }
 
 fn worker_loop(sh: Arc<Shared>) {
@@ -282,7 +504,8 @@ mod tests {
                     pool.submit(move || {
                         h.fetch_add(1, Ordering::SeqCst);
                         c.fetch_add(1, Ordering::SeqCst);
-                    });
+                    })
+                    .expect("pool is live");
                 }
                 drop(pool); // graceful shutdown drains the queue
                 assert_eq!(counter.load(Ordering::SeqCst), n as u64);
@@ -374,8 +597,8 @@ mod tests {
     #[test]
     fn raw_submit_panic_counted_in_metrics() {
         let pool = Pool::new(1, 4);
-        pool.submit(|| panic!("raw boom"));
-        pool.submit(|| {}); // ensure the panicking job has been consumed
+        pool.submit(|| panic!("raw boom")).unwrap();
+        pool.submit(|| {}).unwrap(); // ensure the panicking job has been consumed
         // Drain by shutdown.
         let shared_metrics = {
             let m;
@@ -391,6 +614,207 @@ mod tests {
         };
         assert_eq!(shared_metrics.panicked, 1);
         assert_eq!(shared_metrics.completed, 2);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_a_typed_error_not_a_panic() {
+        // Regression: this used to be `assert!(!q.shutdown)` — a submit
+        // racing teardown aborted the process.
+        let pool = Pool::new(1, 2);
+        pool.shutdown();
+        let hit = Arc::new(AtomicU64::new(0));
+        let h = Arc::clone(&hit);
+        let r = pool.submit(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(r, Err(SubmitError::ShutDown));
+        assert_eq!(hit.load(Ordering::SeqCst), 0, "rejected job must not run");
+        // Shutdown is idempotent and the pool still drops cleanly.
+        pool.shutdown();
+    }
+
+    #[test]
+    fn submit_or_run_runs_inline_after_shutdown() {
+        let pool = Pool::new(1, 2);
+        pool.shutdown();
+        let hit = Arc::new(AtomicU64::new(0));
+        let h = Arc::clone(&hit);
+        pool.submit_or_run(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1, "job must run inline, not drop");
+    }
+
+    #[test]
+    fn shutdown_wakes_blocked_submitters_with_an_error() {
+        // Fill the queue behind a slow job so a submitter blocks on
+        // backpressure, then shut down: the submitter must return
+        // Err(ShutDown), not hang or panic.
+        let pool = Arc::new(Pool::new(1, 1));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = Arc::clone(&gate);
+        pool.submit(move || {
+            let (lock, cv) = &*g;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        })
+        .unwrap();
+        // Occupy the single queue slot. A live submit may legitimately race
+        // the worker popping it, so retry until the queue is genuinely full.
+        while !pool.try_enqueue(Box::new(|| {})) {
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+        let p = Arc::clone(&pool);
+        let blocked = std::thread::spawn(move || p.submit(|| {}));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        pool.shutdown();
+        assert_eq!(blocked.join().unwrap(), Err(SubmitError::ShutDown));
+        // Unblock the gated job so Drop can join the worker.
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    #[test]
+    fn scope_runs_borrowed_jobs_to_completion() {
+        let pool = Pool::new(4, 8);
+        let data: Vec<u64> = (0..64).collect(); // not 'static
+        let total = AtomicU64::new(0);
+        pool.scope(|s| {
+            for chunk in data.chunks(8) {
+                let total = &total;
+                s.spawn(move || {
+                    total.fetch_add(chunk.iter().sum::<u64>(), Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn scope_jobs_write_disjoint_output_chunks() {
+        // The executor's sharding pattern: split one output buffer into
+        // disjoint &mut chunks, one per job.
+        let pool = Pool::new(3, 8);
+        let mut out = vec![0u64; 30];
+        pool.scope(|s| {
+            for (c, chunk) in out.chunks_mut(7).enumerate() {
+                s.spawn(move || {
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v = (c * 100 + i) as u64;
+                    }
+                });
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, ((i / 7) * 100 + i % 7) as u64);
+        }
+    }
+
+    #[test]
+    fn scope_makes_progress_on_a_one_worker_pool() {
+        // The single worker may be busy or may itself be the scoping
+        // thread; the caller-helps rule means the scope always finishes.
+        let pool = Pool::new(1, 1);
+        let n = AtomicU64::new(0);
+        pool.scope(|s| {
+            for _ in 0..32 {
+                let n = &n;
+                s.spawn(move || {
+                    n.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn scope_from_inside_a_pool_job() {
+        // The serve path runs batch jobs *on* a worker and fans out from
+        // there — a scope opened on a worker must not deadlock.
+        let pool = Arc::new(Pool::new(2, 4));
+        let p = Arc::clone(&pool);
+        let (tx, rx) = std::sync::mpsc::channel::<u64>();
+        pool.submit(move || {
+            let local: Vec<u64> = (0..16).collect();
+            let sum = AtomicU64::new(0);
+            p.scope(|s| {
+                for chunk in local.chunks(4) {
+                    let sum = &sum;
+                    s.spawn(move || {
+                        sum.fetch_add(chunk.iter().sum::<u64>(), Ordering::SeqCst);
+                    });
+                }
+            });
+            tx.send(sum.load(Ordering::SeqCst)).unwrap();
+        })
+        .unwrap();
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(), 120);
+    }
+
+    #[test]
+    fn scopes_nest() {
+        let pool = Pool::new(2, 4);
+        let n = AtomicU64::new(0);
+        pool.scope(|outer| {
+            for _ in 0..4 {
+                let n = &n;
+                let pool = &pool;
+                outer.spawn(move || {
+                    pool.scope(|inner| {
+                        for _ in 0..4 {
+                            inner.spawn(move || {
+                                n.fetch_add(1, Ordering::SeqCst);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn scope_reraises_job_panics_after_the_barrier() {
+        let pool = Pool::new(2, 4);
+        let ran = Arc::new(AtomicU64::new(0));
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                for i in 0..8 {
+                    let ran = Arc::clone(&ran);
+                    s.spawn(move || {
+                        if i == 3 {
+                            panic!("scope boom");
+                        }
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the scoping thread");
+        // Barrier-before-unwind: every non-panicking job still ran.
+        assert_eq!(ran.load(Ordering::SeqCst), 7);
+        // The pool survives.
+        assert_eq!(pool.run_batch(vec![1, 2], |i| i), vec![1, 2]);
+    }
+
+    #[test]
+    fn scope_under_shutdown_still_completes_on_the_caller() {
+        let pool = Pool::new(2, 4);
+        pool.shutdown();
+        // No helpers can be recruited; the scoping thread runs everything.
+        let n = AtomicU64::new(0);
+        pool.scope(|s| {
+            for _ in 0..8 {
+                let n = &n;
+                s.spawn(move || {
+                    n.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 8);
     }
 
     #[test]

@@ -56,7 +56,7 @@
 
 use crate::coordinator::Pool;
 use crate::model::Model;
-use crate::plan::{Fusion, KernelPath, Plan, ServeFormat};
+use crate::plan::{Fusion, KernelPath, Parallelism, Plan, ServeFormat};
 use crate::serve::{run_batch_job, PendingSample, ServeMetrics, Slot, Ticket};
 use anyhow::Result;
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -226,6 +226,9 @@ struct FleetShared {
     room: Condvar,
     pool: Arc<Pool>,
     policy: FleetPolicy,
+    /// Intra-drive parallelism for each flushed batch; `workers <= 1`
+    /// keeps the original behavior of one serial drive per flush.
+    par: Parallelism,
     /// Flushes handed to the pool but not yet finished (see
     /// [`Fleet::shutdown`]).
     inflight: Mutex<usize>,
@@ -298,8 +301,17 @@ pub struct Fleet {
 }
 
 impl Fleet {
-    /// An empty fleet flushing onto `pool` under `policy`.
+    /// An empty fleet flushing onto `pool` under `policy`, with each
+    /// flushed batch driven at the `RIGOR_WORKERS` parallelism (default:
+    /// the pool's worker count).
     pub fn new(pool: Arc<Pool>, policy: FleetPolicy) -> Fleet {
+        let par = Parallelism::from_env(pool.worker_count());
+        Fleet::with_parallelism(pool, policy, par)
+    }
+
+    /// [`Fleet::new`] with an explicit intra-drive [`Parallelism`]
+    /// instead of the `RIGOR_WORKERS` environment default.
+    pub fn with_parallelism(pool: Arc<Pool>, policy: FleetPolicy, par: Parallelism) -> Fleet {
         assert!(policy.max_batch >= 1, "max_batch must be >= 1");
         assert!(
             policy.max_queue_pending >= policy.max_batch,
@@ -327,6 +339,7 @@ impl Fleet {
             room: Condvar::new(),
             pool,
             policy,
+            par,
             inflight: Mutex::new(0),
             idle: Condvar::new(),
         });
@@ -654,9 +667,12 @@ fn flusher_loop(sh: Arc<FleetShared>) {
         sh.room.notify_all();
         *sh.inflight.lock().unwrap() += 1;
         let job_sh = Arc::clone(&sh);
-        sh.pool.submit(move || {
+        // `submit_or_run` keeps the ticket-resolution guarantee even if
+        // the pool was shut down externally: the flush runs inline on
+        // this thread instead of being dropped.
+        sh.pool.submit_or_run(move || {
             let plan = plans.plan_for(key.format);
-            run_batch_job(plan, plans.kernels, key.format, batch);
+            run_batch_job(plan, plans.kernels, key.format, batch, &job_sh.pool, job_sh.par);
             let mut n = job_sh.inflight.lock().unwrap();
             *n -= 1;
             if *n == 0 {
@@ -762,8 +778,8 @@ mod tests {
         // flusher may drain the queue into the (stalled) pool job, so
         // stuff the fleet faster than it can flush by using a queue cap
         // below max_batch's reach: max_batch 2, queue cap 2, fleet cap 3.
-        fleet.shared.pool.submit(|| std::thread::sleep(Duration::from_millis(80)));
-        fleet.shared.pool.submit(|| std::thread::sleep(Duration::from_millis(80)));
+        fleet.shared.pool.submit(|| std::thread::sleep(Duration::from_millis(80))).unwrap();
+        fleet.shared.pool.submit(|| std::thread::sleep(Duration::from_millis(80))).unwrap();
         // Hold the flusher's drain target busy: submit into two queues.
         let emu = ServeFormat::Emulated { k: 8 };
         let mut kept = Vec::new();
@@ -856,7 +872,7 @@ mod tests {
         );
         assert_eq!(fleet.deploy("m", &m1).unwrap(), 1);
         // Stall the pool so the pre-swap flush cannot race ahead.
-        fleet.shared.pool.submit(|| std::thread::sleep(Duration::from_millis(40)));
+        fleet.shared.pool.submit(|| std::thread::sleep(Duration::from_millis(40))).unwrap();
         let old: Vec<_> =
             (0..3).map(|i| fleet.submit("m", ServeFormat::F64, sample(8, i)).unwrap()).collect();
         assert_eq!(fleet.deploy("m", &m2).unwrap(), 2);
@@ -897,7 +913,7 @@ mod tests {
         fleet.deploy("m", &zoo::tiny_mlp(51)).unwrap();
         // Stall the pool and fill the fleet cap; the next blocking submit
         // parks on the room condvar.
-        fleet.shared.pool.submit(|| std::thread::sleep(Duration::from_millis(60)));
+        fleet.shared.pool.submit(|| std::thread::sleep(Duration::from_millis(60))).unwrap();
         let t0 = fleet.submit_blocking("m", ServeFormat::F64, sample(8, 0)).unwrap();
         let t1 = fleet.submit_blocking("m", ServeFormat::F64, sample(8, 1)).unwrap();
         let blocked = {

@@ -83,6 +83,22 @@ impl DensePanel {
         }
         DensePanel { m, n, wp }
     }
+
+    /// Independent sample tiles at batch `batch` — the intra-op work units
+    /// the parallel executor shards across workers. Tile `t` covers
+    /// samples `t*NR .. min((t+1)*NR, batch)`.
+    pub fn tiles(&self, batch: usize) -> usize {
+        batch.div_ceil(NR)
+    }
+
+    /// Flat output element (sample-major, `m` per sample) where tile `t`'s
+    /// contiguous output range starts; `t == tiles(batch)` gives the total
+    /// output length. Consecutive tiles cover adjacent ranges, so any
+    /// tile-range split partitions the output into disjoint contiguous
+    /// chunks.
+    pub fn tile_out_start(&self, batch: usize, t: usize) -> usize {
+        (t * NR).min(batch) * self.m
+    }
 }
 
 /// A standard convolution lowered to GEMM geometry at plan compile time:
@@ -150,6 +166,22 @@ impl Im2col {
         }
         Im2col { k, cout, op, in_len: h * w * cin, table }
     }
+
+    /// Independent `(sample, pixel-tile)` work units at batch `batch`.
+    /// Unit `u` covers sample `u / op.div_ceil(NR)`, pixels
+    /// `(u % per) * NR ..` (`NR`-capped).
+    pub fn tiles(&self, batch: usize) -> usize {
+        batch * self.op.div_ceil(NR)
+    }
+
+    /// Flat output element (sample-major, `op * cout` per sample) where
+    /// unit `u`'s contiguous output range starts; `u == tiles(batch)`
+    /// gives the total output length.
+    pub fn tile_out_start(&self, batch: usize, u: usize) -> usize {
+        let per = self.op.div_ceil(NR);
+        let (s, t) = (u / per, u % per);
+        (s * self.op + (t * NR).min(self.op)) * self.cout
+    }
 }
 
 /// A depthwise convolution's spatial tap table, built once at plan
@@ -206,6 +238,21 @@ impl DwTable {
         }
         DwTable { taps, c, op, in_len: h * w * c, table }
     }
+
+    /// Independent `(sample, pixel-tile)` work units at batch `batch`
+    /// (`MR`-pixel tiles — the kernel's channel-lane tile shape).
+    pub fn tiles(&self, batch: usize) -> usize {
+        batch * self.op.div_ceil(MR)
+    }
+
+    /// Flat output element (sample-major, `op * c` per sample) where unit
+    /// `u`'s contiguous output range starts; `u == tiles(batch)` gives the
+    /// total output length.
+    pub fn tile_out_start(&self, batch: usize, u: usize) -> usize {
+        let per = self.op.div_ceil(MR);
+        let (s, t) = (u / per, u % per);
+        (s * self.op + (t * MR).min(self.op)) * self.c
+    }
 }
 
 /// An average pool's spatial tap table, built once at plan compile time:
@@ -246,6 +293,21 @@ impl PoolTable {
         }
         PoolTable { taps, c, op, in_len: in_shape.iter().product(), table }
     }
+
+    /// Independent `(sample, pixel-tile)` work units at batch `batch`
+    /// (`MR`-pixel tiles, like [`DwTable::tiles`]).
+    pub fn tiles(&self, batch: usize) -> usize {
+        batch * self.op.div_ceil(MR)
+    }
+
+    /// Flat output element (sample-major, `op * c` per sample) where unit
+    /// `u`'s contiguous output range starts; `u == tiles(batch)` gives the
+    /// total output length.
+    pub fn tile_out_start(&self, batch: usize, u: usize) -> usize {
+        let per = self.op.div_ceil(MR);
+        let (s, t) = (u / per, u % per);
+        (s * self.op + (t * MR).min(self.op)) * self.c
+    }
 }
 
 /// Blocked average pool: [`MR`] output pixels advance in lockstep with the
@@ -266,36 +328,66 @@ pub fn avg_pool_blocked<S: Scalar>(
     acc: &mut Vec<S>,
     out: &mut Vec<S>,
 ) {
+    let base = out.len();
+    out.resize(base + batch * pt.op * pt.c, S::exact(ctx, 0.0));
+    avg_pool_blocked_tiles(ctx, pt, x, batch, 0, pt.tiles(batch), acc, &mut out[base..]);
+}
+
+/// The tile-range core of [`avg_pool_blocked`]: run work units `u0..u1`,
+/// writing into `out`, which must be exactly the contiguous output slice
+/// those units cover (`tile_out_start(batch, u0)..tile_out_start(batch,
+/// u1)`). Units cross only independent reduction chains, so any partition
+/// of the unit range over any set of callers reproduces the full-range
+/// result bitwise — the parallel executor's contract.
+#[allow(clippy::too_many_arguments)]
+pub fn avg_pool_blocked_tiles<S: Scalar>(
+    ctx: &S::Ctx,
+    pt: &PoolTable,
+    x: &[S],
+    batch: usize,
+    u0: usize,
+    u1: usize,
+    acc: &mut Vec<S>,
+    out: &mut [S],
+) {
     let (taps, c, op) = (pt.taps, pt.c, pt.op);
     debug_assert_eq!(x.len(), batch * pt.in_len, "blocked avg_pool input");
+    debug_assert_eq!(
+        out.len(),
+        pt.tile_out_start(batch, u1) - pt.tile_out_start(batch, u0),
+        "avg_pool tile-range output slice"
+    );
     let n = S::exact(ctx, taps as f64); // small integer: exact
-    for s in 0..batch {
+    let per = op.div_ceil(MR);
+    let base0 = pt.tile_out_start(batch, u0);
+    for u in u0..u1 {
+        let (s, t) = (u / per, u % per);
+        let p0 = t * MR;
+        let mp = MR.min(op - p0);
         let xs = &x[s * pt.in_len..(s + 1) * pt.in_len];
-        let mut p0 = 0;
-        while p0 < op {
-            let mp = MR.min(op - p0);
-            // Accumulator tile `[pixel][channel]`, seeded from tap 0 —
-            // the window is never empty and never padded.
-            acc.clear();
-            acc.reserve(mp * c);
+        let rel = pt.tile_out_start(batch, u) - base0;
+        // Accumulator tile `[pixel][channel]`, seeded from tap 0 —
+        // the window is never empty and never padded.
+        acc.clear();
+        acc.reserve(mp * c);
+        for r in 0..mp {
+            let off = pt.table[(p0 + r) * taps];
+            acc.extend_from_slice(&xs[off * c..(off + 1) * c]);
+        }
+        for t in 1..taps {
             for r in 0..mp {
-                let off = pt.table[(p0 + r) * taps];
-                acc.extend_from_slice(&xs[off * c..(off + 1) * c]);
-            }
-            for t in 1..taps {
-                for r in 0..mp {
-                    let off = pt.table[(p0 + r) * taps + t];
-                    let xrow = &xs[off * c..(off + 1) * c];
-                    let arow = &mut acc[r * c..(r + 1) * c];
-                    for (a, xv) in arow.iter_mut().zip(xrow) {
-                        *a = a.add(xv, ctx);
-                    }
+                let off = pt.table[(p0 + r) * taps + t];
+                let xrow = &xs[off * c..(off + 1) * c];
+                let arow = &mut acc[r * c..(r + 1) * c];
+                for (a, xv) in arow.iter_mut().zip(xrow) {
+                    *a = a.add(xv, ctx);
                 }
             }
-            // Channels-last output is exactly the tile layout: divide by
-            // the window size and append.
-            out.extend(acc.drain(..).map(|a| a.div(&n, ctx)));
-            p0 += mp;
+        }
+        // Channels-last output is exactly the tile layout: divide by
+        // the window size and store.
+        for (o, a) in out[rel..rel + mp * c].iter_mut().zip(acc.drain(..)) {
+            *o = a.div(&n, ctx);
         }
     }
 }
@@ -320,42 +412,74 @@ pub fn depthwise_blocked<S: Scalar>(
     acc: &mut Vec<S>,
     out: &mut Vec<S>,
 ) {
+    let base = out.len();
+    out.resize(base + batch * dw.op * dw.c, S::exact(ctx, 0.0));
+    depthwise_blocked_tiles(ctx, dw, kd, bias, x, batch, 0, dw.tiles(batch), acc, &mut out[base..]);
+}
+
+/// The tile-range core of [`depthwise_blocked`]: run work units `u0..u1`,
+/// writing into `out`, which must be exactly the contiguous output slice
+/// those units cover (`tile_out_start(batch, u0)..tile_out_start(batch,
+/// u1)`). Units cross only independent reduction chains, so any partition
+/// of the unit range over any set of callers reproduces the full-range
+/// result bitwise — the parallel executor's contract.
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_blocked_tiles<S: Scalar>(
+    ctx: &S::Ctx,
+    dw: &DwTable,
+    kd: &[f64],
+    bias: &[f64],
+    x: &[S],
+    batch: usize,
+    u0: usize,
+    u1: usize,
+    acc: &mut Vec<S>,
+    out: &mut [S],
+) {
     let (taps, c, op) = (dw.taps, dw.c, dw.op);
     debug_assert_eq!(x.len(), batch * dw.in_len, "blocked depthwise input");
     debug_assert_eq!(kd.len(), taps * c, "depthwise kernel layout");
-    for s in 0..batch {
+    debug_assert_eq!(
+        out.len(),
+        dw.tile_out_start(batch, u1) - dw.tile_out_start(batch, u0),
+        "depthwise tile-range output slice"
+    );
+    let per = op.div_ceil(MR);
+    let base0 = dw.tile_out_start(batch, u0);
+    for u in u0..u1 {
+        let (s, t0) = (u / per, u % per);
+        let p0 = t0 * MR;
+        let mp = MR.min(op - p0);
         let xs = &x[s * dw.in_len..(s + 1) * dw.in_len];
-        let mut p0 = 0;
-        while p0 < op {
-            let mp = MR.min(op - p0);
-            // Accumulator tile `[pixel][channel]`, seeded with the bias —
-            // the same per-chain start as the scalar kernel.
-            acc.clear();
-            acc.reserve(mp * c);
-            for _ in 0..mp {
-                acc.extend(bias.iter().map(|&bv| S::param(ctx, bv)));
-            }
-            for t in 0..taps {
-                let wrow = &kd[t * c..(t + 1) * c];
-                for r in 0..mp {
-                    let off = dw.table[(p0 + r) * taps + t];
-                    if off == PAD {
-                        continue; // zero-padded tap, skipped for every channel
+        let rel = dw.tile_out_start(batch, u) - base0;
+        // Accumulator tile `[pixel][channel]`, seeded with the bias —
+        // the same per-chain start as the scalar kernel.
+        acc.clear();
+        acc.reserve(mp * c);
+        for _ in 0..mp {
+            acc.extend(bias.iter().map(|&bv| S::param(ctx, bv)));
+        }
+        for t in 0..taps {
+            let wrow = &kd[t * c..(t + 1) * c];
+            for r in 0..mp {
+                let off = dw.table[(p0 + r) * taps + t];
+                if off == PAD {
+                    continue; // zero-padded tap, skipped for every channel
+                }
+                let xrow = &xs[off * c..(off + 1) * c];
+                let arow = &mut acc[r * c..(r + 1) * c];
+                for ((a, xv), &wv) in arow.iter_mut().zip(xrow).zip(wrow) {
+                    if wv == 0.0 {
+                        continue;
                     }
-                    let xrow = &xs[off * c..(off + 1) * c];
-                    let arow = &mut acc[r * c..(r + 1) * c];
-                    for ((a, xv), &wv) in arow.iter_mut().zip(xrow).zip(wrow) {
-                        if wv == 0.0 {
-                            continue;
-                        }
-                        let term = xv.mul_param(wv, ctx);
-                        *a = a.add(&term, ctx);
-                    }
+                    let term = xv.mul_param(wv, ctx);
+                    *a = a.add(&term, ctx);
                 }
             }
-            // Channels-last output is exactly the tile layout: append.
-            out.extend(acc.drain(..));
-            p0 += mp;
+        }
+        // Channels-last output is exactly the tile layout: store.
+        for (o, a) in out[rel..rel + mp * c].iter_mut().zip(acc.drain(..)) {
+            *o = a;
         }
     }
 }
@@ -374,13 +498,39 @@ pub fn dense_blocked<S: Scalar>(
     pack: &mut Vec<S>,
     out: &mut Vec<S>,
 ) {
+    let base = out.len();
+    out.resize(base + batch * pd.m, S::exact(ctx, 0.0));
+    dense_blocked_tiles(ctx, pd, b, x, batch, 0, pd.tiles(batch), pack, &mut out[base..]);
+}
+
+/// The tile-range core of [`dense_blocked`]: run sample tiles `t0..t1`,
+/// writing into `out`, which must be exactly the contiguous output slice
+/// those tiles cover (`tile_out_start(batch, t0)..tile_out_start(batch,
+/// t1)`). Tiles cross only independent reduction chains, so any partition
+/// of the tile range over any set of callers reproduces the full-range
+/// result bitwise — the parallel executor's contract.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_blocked_tiles<S: Scalar>(
+    ctx: &S::Ctx,
+    pd: &DensePanel,
+    b: &[f64],
+    x: &[S],
+    batch: usize,
+    t0: usize,
+    t1: usize,
+    pack: &mut Vec<S>,
+    out: &mut [S],
+) {
     let (m, n) = (pd.m, pd.n);
     debug_assert_eq!(x.len(), batch * n, "blocked dense input");
-    let base = out.len();
-    out.resize(base + batch * m, S::exact(ctx, 0.0));
-    let out = &mut out[base..];
-    let mut s0 = 0;
-    while s0 < batch {
+    debug_assert_eq!(
+        out.len(),
+        pd.tile_out_start(batch, t1) - pd.tile_out_start(batch, t0),
+        "dense tile-range output slice"
+    );
+    let s_base = t0 * NR;
+    for t in t0..t1 {
+        let s0 = t * NR;
         let nrc = NR.min(batch - s0);
         // Pack the sample panel `[i][c]`: contiguous lane reads in the
         // micro-kernel, amortized over all m/MR row tiles.
@@ -417,11 +567,10 @@ pub fn dense_blocked<S: Scalar>(
             }
             for r in 0..mrc {
                 for c in 0..nrc {
-                    out[(s0 + c) * m + j0 + r] = acc[r * NR + c].clone();
+                    out[(s0 - s_base + c) * m + j0 + r] = acc[r * NR + c].clone();
                 }
             }
         }
-        s0 += nrc;
     }
 }
 
@@ -443,83 +592,112 @@ pub fn conv_blocked<S: Scalar>(
     mask: &mut Vec<bool>,
     out: &mut Vec<S>,
 ) {
+    let base = out.len();
+    out.resize(base + batch * ic.op * ic.cout, S::exact(ctx, 0.0));
+    conv_blocked_tiles(ctx, ic, kd, bias, x, batch, 0, ic.tiles(batch), pack, mask, &mut out[base..]);
+}
+
+/// The tile-range core of [`conv_blocked`]: run `(sample, pixel-tile)`
+/// work units `u0..u1`, writing into `out`, which must be exactly the
+/// contiguous output slice those units cover (`tile_out_start(batch,
+/// u0)..tile_out_start(batch, u1)`). Units cross only independent
+/// reduction chains, so any partition of the unit range over any set of
+/// callers reproduces the full-range result bitwise — the parallel
+/// executor's contract.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_blocked_tiles<S: Scalar>(
+    ctx: &S::Ctx,
+    ic: &Im2col,
+    kd: &[f64],
+    bias: &[f64],
+    x: &[S],
+    batch: usize,
+    u0: usize,
+    u1: usize,
+    pack: &mut Vec<S>,
+    mask: &mut Vec<bool>,
+    out: &mut [S],
+) {
     let (k, cout, op) = (ic.k, ic.cout, ic.op);
     debug_assert_eq!(x.len(), batch * ic.in_len, "blocked conv input");
     debug_assert_eq!(kd.len(), k * cout, "conv kernel layout");
-    let base = out.len();
-    out.resize(base + batch * op * cout, S::exact(ctx, 0.0));
-    for s in 0..batch {
+    debug_assert_eq!(
+        out.len(),
+        ic.tile_out_start(batch, u1) - ic.tile_out_start(batch, u0),
+        "conv tile-range output slice"
+    );
+    let per = op.div_ceil(NR);
+    let base0 = ic.tile_out_start(batch, u0);
+    for u in u0..u1 {
+        let (s, t) = (u / per, u % per);
+        let p0 = t * NR;
+        let nrc = NR.min(op - p0);
         let xs = &x[s * ic.in_len..(s + 1) * ic.in_len];
-        let out_s = &mut out[base + s * op * cout..base + (s + 1) * op * cout];
-        let mut p0 = 0;
-        while p0 < op {
-            let nrc = NR.min(op - p0);
-            // Gather the patch panel for these pixels (the "im2col"
-            // materialization — K*NR values in arena scratch, never a
-            // full patch matrix). Interior tiles see no padding and take
-            // the mask-free inner loop below.
-            pack.clear();
-            mask.clear();
-            pack.reserve(k * nrc);
-            mask.reserve(k * nrc);
-            let mut all_valid = true;
-            for p in 0..k {
-                for c in 0..nrc {
-                    let off = ic.table[(p0 + c) * k + p];
-                    if off == PAD {
-                        pack.push(S::exact(ctx, 0.0));
-                        mask.push(false);
-                        all_valid = false;
-                    } else {
-                        pack.push(xs[off].clone());
-                        mask.push(true);
-                    }
+        let rel = ic.tile_out_start(batch, u) - base0;
+        // Gather the patch panel for these pixels (the "im2col"
+        // materialization — K*NR values in arena scratch, never a
+        // full patch matrix). Interior tiles see no padding and take
+        // the mask-free inner loop below.
+        pack.clear();
+        mask.clear();
+        pack.reserve(k * nrc);
+        mask.reserve(k * nrc);
+        let mut all_valid = true;
+        for p in 0..k {
+            for c in 0..nrc {
+                let off = ic.table[(p0 + c) * k + p];
+                if off == PAD {
+                    pack.push(S::exact(ctx, 0.0));
+                    mask.push(false);
+                    all_valid = false;
+                } else {
+                    pack.push(xs[off].clone());
+                    mask.push(true);
                 }
             }
-            let mut c0 = 0;
-            while c0 < cout {
-                let mrc = MR.min(cout - c0);
-                let mut acc: [S; MR * NR] = std::array::from_fn(|idx| {
-                    let r = idx / NR;
-                    S::param(ctx, if r < mrc { bias[c0 + r] } else { 0.0 })
-                });
-                for p in 0..k {
-                    let ws = &kd[p * cout + c0..p * cout + c0 + mrc];
-                    let xrow = &pack[p * nrc..(p + 1) * nrc];
-                    if all_valid {
-                        for (r, &wv) in ws.iter().enumerate() {
-                            if wv == 0.0 {
-                                continue; // same exact-zero skip as the scalar kernel
-                            }
-                            for (a, xv) in acc[r * NR..r * NR + nrc].iter_mut().zip(xrow) {
+        }
+        let mut c0 = 0;
+        while c0 < cout {
+            let mrc = MR.min(cout - c0);
+            let mut acc: [S; MR * NR] = std::array::from_fn(|idx| {
+                let r = idx / NR;
+                S::param(ctx, if r < mrc { bias[c0 + r] } else { 0.0 })
+            });
+            for p in 0..k {
+                let ws = &kd[p * cout + c0..p * cout + c0 + mrc];
+                let xrow = &pack[p * nrc..(p + 1) * nrc];
+                if all_valid {
+                    for (r, &wv) in ws.iter().enumerate() {
+                        if wv == 0.0 {
+                            continue; // same exact-zero skip as the scalar kernel
+                        }
+                        for (a, xv) in acc[r * NR..r * NR + nrc].iter_mut().zip(xrow) {
+                            let term = xv.mul_param(wv, ctx);
+                            *a = a.add(&term, ctx);
+                        }
+                    }
+                } else {
+                    let ms = &mask[p * nrc..(p + 1) * nrc];
+                    for (r, &wv) in ws.iter().enumerate() {
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        let lanes = acc[r * NR..r * NR + nrc].iter_mut().zip(xrow).zip(ms);
+                        for ((a, xv), &ok) in lanes {
+                            if ok {
                                 let term = xv.mul_param(wv, ctx);
                                 *a = a.add(&term, ctx);
                             }
                         }
-                    } else {
-                        let ms = &mask[p * nrc..(p + 1) * nrc];
-                        for (r, &wv) in ws.iter().enumerate() {
-                            if wv == 0.0 {
-                                continue;
-                            }
-                            let lanes = acc[r * NR..r * NR + nrc].iter_mut().zip(xrow).zip(ms);
-                            for ((a, xv), &ok) in lanes {
-                                if ok {
-                                    let term = xv.mul_param(wv, ctx);
-                                    *a = a.add(&term, ctx);
-                                }
-                            }
-                        }
                     }
                 }
-                for r in 0..mrc {
-                    for c in 0..nrc {
-                        out_s[(p0 + c) * cout + c0 + r] = acc[r * NR + c].clone();
-                    }
-                }
-                c0 += mrc;
             }
-            p0 += nrc;
+            for r in 0..mrc {
+                for c in 0..nrc {
+                    out[rel + c * cout + c0 + r] = acc[r * NR + c].clone();
+                }
+            }
+            c0 += mrc;
         }
     }
 }
@@ -761,6 +939,91 @@ mod tests {
             avg_pool_blocked::<EmulatedFp>(&ec, &pt, &x, batch, &mut acc, &mut blocked);
             for (i, (a, b)) in scalar.iter().zip(&blocked).enumerate() {
                 assert_eq!(a.v.to_bits(), b.v.to_bits(), "k={k} out {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_range_partitions_reproduce_full_range_bitwise() {
+        // The parallel executor's contract in one place: splitting the
+        // work-unit range at arbitrary boundaries and running the pieces
+        // independently (each with its own scratch, as different workers
+        // would) must assemble bitwise the full-range output.
+        let mut rng = Rng::new(23);
+        let (m, n, batch) = (13usize, 17usize, 19usize);
+        let w = Tensor::new(vec![m, n], rand_vec(&mut rng, m * n));
+        let b = rand_vec(&mut rng, m);
+        let pd = DensePanel::pack(&w);
+        let x = rand_vec(&mut rng, batch * n);
+        let mut full = Vec::new();
+        let mut pack = Vec::new();
+        dense_blocked::<f64>(&(), &pd, &b, &x, batch, &mut pack, &mut full);
+        let tiles = pd.tiles(batch);
+        for split in 1..tiles {
+            let mut parts = vec![0.0f64; full.len()];
+            let cut = pd.tile_out_start(batch, split);
+            let (lo, hi) = parts.split_at_mut(cut);
+            let mut pack_a = Vec::new();
+            dense_blocked_tiles::<f64>(&(), &pd, &b, &x, batch, 0, split, &mut pack_a, lo);
+            let mut pack_b = Vec::new();
+            dense_blocked_tiles::<f64>(&(), &pd, &b, &x, batch, split, tiles, &mut pack_b, hi);
+            for (i, (a, c)) in full.iter().zip(&parts).enumerate() {
+                assert_eq!(a.to_bits(), c.to_bits(), "dense split {split} out {i}");
+            }
+        }
+
+        // Conv: (sample, pixel-tile) units, including splits mid-sample.
+        let (h, wd, kh, kw, cin, cout, stride, padding) =
+            (5usize, 7usize, 3usize, 3usize, 3usize, 5usize, 1usize, Padding::Same);
+        let kernel = Tensor::new(vec![kh, kw, cin, cout], rand_vec(&mut rng, kh * kw * cin * cout));
+        let bias = rand_vec(&mut rng, cout);
+        let in_shape = vec![h, wd, cin];
+        let out_shape =
+            conv::conv2d_output_shape(kernel.shape(), stride, padding, &in_shape).unwrap();
+        let ic = Im2col::build(kernel.shape(), stride, padding, &in_shape, &out_shape);
+        let cb = 3usize;
+        let cx = rand_vec(&mut rng, cb * h * wd * cin);
+        let mut cfull = Vec::new();
+        let (mut cp, mut cm) = (Vec::new(), Vec::new());
+        conv_blocked::<f64>(&(), &ic, kernel.data(), &bias, &cx, cb, &mut cp, &mut cm, &mut cfull);
+        let units = ic.tiles(cb);
+        for split in [1, units / 3, units / 2, units - 1] {
+            if split == 0 || split >= units {
+                continue;
+            }
+            let mut parts = vec![0.0f64; cfull.len()];
+            let cut = ic.tile_out_start(cb, split);
+            let (lo, hi) = parts.split_at_mut(cut);
+            let (mut pa, mut ma) = (Vec::new(), Vec::new());
+            conv_blocked_tiles::<f64>(
+                &(),
+                &ic,
+                kernel.data(),
+                &bias,
+                &cx,
+                cb,
+                0,
+                split,
+                &mut pa,
+                &mut ma,
+                lo,
+            );
+            let (mut pb, mut mb) = (Vec::new(), Vec::new());
+            conv_blocked_tiles::<f64>(
+                &(),
+                &ic,
+                kernel.data(),
+                &bias,
+                &cx,
+                cb,
+                split,
+                units,
+                &mut pb,
+                &mut mb,
+                hi,
+            );
+            for (i, (a, c)) in cfull.iter().zip(&parts).enumerate() {
+                assert_eq!(a.to_bits(), c.to_bits(), "conv split {split} out {i}");
             }
         }
     }

@@ -60,10 +60,35 @@
 //! `benches/perf_scaling.rs`), though the batched path is arithmetically
 //! valid — and tested — for every scalar.
 
-use super::{Act, BlockedStep, BufId, KernelPath, Plan, StepKind};
+use super::{Act, BlockedStep, BufId, KernelPath, Parallelism, Plan, StepKind};
+use crate::coordinator::{with_worker_scratch, Pool};
 use crate::layers::{activation, conv, dense, gemm, merge, norm, pool};
 use crate::tensor::{Scalar, Tensor};
 use anyhow::{bail, Result};
+
+/// Per-worker scratch for the **pooled** execution paths
+/// ([`Plan::execute_batch_pooled`]): the blocked kernels' panel/accumulator
+/// scratch plus the softmax row scratch, owned per thread via
+/// [`crate::coordinator::with_worker_scratch`]. Deliberately a distinct
+/// type from [`Arena`] so a sharded job running *on the thread that holds
+/// the arena checked out* (the caller-helps scope rule) gets its own
+/// scratch instead of colliding with the arena checkout.
+#[derive(Clone, Debug)]
+pub struct TileScratch<S> {
+    /// Packed sample/patch panels (doubles as the depthwise/pool
+    /// accumulator strip, mirroring `Arena::pack`).
+    pub pack: Vec<S>,
+    /// Conv pad mask (mirrors `Arena::pack_mask`).
+    pub mask: Vec<bool>,
+    /// Softmax row scratch (mirrors `Arena::scratch`).
+    pub scratch: Vec<S>,
+}
+
+impl<S> Default for TileScratch<S> {
+    fn default() -> TileScratch<S> {
+        TileScratch { pack: Vec::new(), mask: Vec::new(), scratch: Vec::new() }
+    }
+}
 
 /// Reusable executor scratch: the plan's buffer pool plus a row scratch
 /// (softmax) and the blocked kernels' panel scratch (packed sample/patch
@@ -539,20 +564,45 @@ impl Plan {
 
         let mut out = std::mem::take(&mut arena.bufs[step.out]);
         out.clear();
+        let Arena { bufs, scratch, pack, pack_mask, .. } = arena;
+        self.run_step_kernel(idx, batch, ctx, bufs, pack, pack_mask, scratch, &mut out, path);
+        arena.bufs[step.out] = out;
+        debug_assert_eq!(
+            arena.bufs[step.out].len(),
+            batch * step.out_len(),
+            "step {idx} batched output"
+        );
+    }
+
+    /// The batched kernel dispatch for one (non-in-place) step, decoupled
+    /// from the [`Arena`]: inputs are read from the shared pool slice
+    /// `bufs` (the step's output `Vec` has already been taken out, so its
+    /// pool slot is empty and never read), the result lands in `out`, and
+    /// the panel/mask/row scratch comes from the caller — `Arena` fields
+    /// on the serial path, a per-worker [`TileScratch`] on the pooled
+    /// one. The fused activation is applied here too. `path` must already
+    /// be resolved for the arithmetic's eligibility.
+    #[allow(clippy::too_many_arguments)]
+    fn run_step_kernel<S: Scalar>(
+        &self,
+        idx: usize,
+        batch: usize,
+        ctx: &S::Ctx,
+        bufs: &[Vec<S>],
+        pack: &mut Vec<S>,
+        pack_mask: &mut Vec<bool>,
+        scratch: &mut Vec<S>,
+        out: &mut Vec<S>,
+        path: KernelPath,
+    ) {
+        let step = &self.steps()[idx];
+        debug_assert_ne!(step.out, step.inputs[0], "in-place steps bypass the kernel dispatch");
         match &step.kind {
             StepKind::Dense { w, b } => match self.blocked_step(idx, path) {
-                Some(BlockedStep::Dense(pd)) => gemm::dense_blocked(
-                    ctx,
-                    pd,
-                    b,
-                    &arena.bufs[step.inputs[0]],
-                    batch,
-                    &mut arena.pack,
-                    &mut out,
-                ),
-                _ => {
-                    dense::apply_batch_into(ctx, w, b, &arena.bufs[step.inputs[0]], batch, &mut out)
+                Some(BlockedStep::Dense(pd)) => {
+                    gemm::dense_blocked(ctx, pd, b, &bufs[step.inputs[0]], batch, pack, out)
                 }
+                _ => dense::apply_batch_into(ctx, w, b, &bufs[step.inputs[0]], batch, out),
             },
             StepKind::Conv2D { kernel, bias, stride, padding } => {
                 match self.blocked_step(idx, path) {
@@ -561,11 +611,11 @@ impl Plan {
                         ic,
                         kernel.data(),
                         bias,
-                        &arena.bufs[step.inputs[0]],
+                        &bufs[step.inputs[0]],
                         batch,
-                        &mut arena.pack,
-                        &mut arena.pack_mask,
-                        &mut out,
+                        pack,
+                        pack_mask,
+                        out,
                     ),
                     _ => conv::conv2d_batch_into(
                         ctx,
@@ -573,11 +623,11 @@ impl Plan {
                         bias,
                         *stride,
                         *padding,
-                        &arena.bufs[step.inputs[0]],
+                        &bufs[step.inputs[0]],
                         step.in_shape(),
                         &step.out_shape,
                         batch,
-                        &mut out,
+                        out,
                     ),
                 }
             }
@@ -588,10 +638,10 @@ impl Plan {
                         dw,
                         kernel.data(),
                         bias,
-                        &arena.bufs[step.inputs[0]],
+                        &bufs[step.inputs[0]],
                         batch,
-                        &mut arena.pack,
-                        &mut out,
+                        pack,
+                        out,
                     ),
                     _ => conv::depthwise_batch_into(
                         ctx,
@@ -599,11 +649,11 @@ impl Plan {
                         bias,
                         *stride,
                         *padding,
-                        &arena.bufs[step.inputs[0]],
+                        &bufs[step.inputs[0]],
                         step.in_shape(),
                         &step.out_shape,
                         batch,
-                        &mut out,
+                        out,
                     ),
                 }
             }
@@ -611,30 +661,25 @@ impl Plan {
                 ctx,
                 *ph,
                 *pw,
-                &arena.bufs[step.inputs[0]],
+                &bufs[step.inputs[0]],
                 step.in_shape(),
                 &step.out_shape,
                 batch,
-                &mut out,
+                out,
             ),
             StepKind::AvgPool2D { ph, pw } => match self.blocked_step(idx, path) {
-                Some(BlockedStep::AvgPool(pt)) => gemm::avg_pool_blocked(
-                    ctx,
-                    pt,
-                    &arena.bufs[step.inputs[0]],
-                    batch,
-                    &mut arena.pack,
-                    &mut out,
-                ),
+                Some(BlockedStep::AvgPool(pt)) => {
+                    gemm::avg_pool_blocked(ctx, pt, &bufs[step.inputs[0]], batch, pack, out)
+                }
                 _ => pool::avg_pool_batch_into(
                     ctx,
                     *ph,
                     *pw,
-                    &arena.bufs[step.inputs[0]],
+                    &bufs[step.inputs[0]],
                     step.in_shape(),
                     &step.out_shape,
                     batch,
-                    &mut out,
+                    out,
                 ),
             },
             StepKind::BatchNorm { gamma, beta, mean, variance, eps } => {
@@ -649,51 +694,342 @@ impl Plan {
                     mean,
                     variance,
                     *eps,
-                    &arena.bufs[step.inputs[0]],
+                    &bufs[step.inputs[0]],
                     c,
-                    &mut out,
+                    out,
                 )
             }
             StepKind::Softmax => {
                 // Batch-transparent: softmax is row-structured and the
                 // batched buffer is just `batch x` as many rows.
                 let n = *step.in_shape().last().expect("softmax rank >= 1");
-                activation::softmax_into(
-                    ctx,
-                    n,
-                    &arena.bufs[step.inputs[0]],
-                    &mut arena.scratch,
-                    &mut out,
-                )
+                activation::softmax_into(ctx, n, &bufs[step.inputs[0]], scratch, out)
             }
-            StepKind::Flatten => out.extend_from_slice(&arena.bufs[step.inputs[0]]),
+            StepKind::Flatten => out.extend_from_slice(&bufs[step.inputs[0]]),
             StepKind::Act(a) => {
-                out.extend_from_slice(&arena.bufs[step.inputs[0]]);
-                apply_act_inplace(ctx, a, &mut out);
+                out.extend_from_slice(&bufs[step.inputs[0]]);
+                apply_act_inplace(ctx, a, out);
             }
             StepKind::Add => {
                 // Elementwise over the whole sample-major buffer: per
                 // sample this is exactly the single-sample accumulation.
-                out.extend_from_slice(&arena.bufs[step.inputs[0]]);
+                out.extend_from_slice(&bufs[step.inputs[0]]);
                 for &b in &step.inputs[1..] {
-                    merge::add_assign_into(ctx, &mut out, &arena.bufs[b]);
+                    merge::add_assign_into(ctx, out, &bufs[b]);
                 }
             }
             StepKind::Concat { rows, widths } => {
-                let srcs: Vec<&[S]> =
-                    step.inputs.iter().map(|&b| arena.bufs[b].as_slice()).collect();
-                merge::concat_batch_into(batch, *rows, widths, &srcs, &mut out);
+                let srcs: Vec<&[S]> = step.inputs.iter().map(|&b| bufs[b].as_slice()).collect();
+                merge::concat_batch_into(batch, *rows, widths, &srcs, out);
             }
         }
         if let Some(a) = &step.fused_act {
-            apply_act_inplace(ctx, a, &mut out);
+            apply_act_inplace(ctx, a, out);
         }
+    }
+
+    /// [`Plan::execute_batch_path`] fanned out over a worker [`Pool`] —
+    /// one plan drive uses the whole machine, **bit-identical** to the
+    /// serial path.
+    ///
+    /// Two layers of parallelism, both pure reorderings of *independent*
+    /// work (never the inside of a reduction chain, so every output
+    /// element sees the same operations in the same order as the serial
+    /// blocked path, and hence as scalar):
+    ///
+    /// * **Intra-op**: a blocked compute step's output is partitioned at
+    ///   tile boundaries ([`gemm::DensePanel::tile_out_start`] and
+    ///   friends) into up to [`Parallelism::workers`] contiguous chunks,
+    ///   each computed by a `*_blocked_tiles` range kernel as a scoped
+    ///   job with per-worker [`TileScratch`]. Steps with
+    ///   `out_len * batch < min_work` (or no blocked lowering, or a
+    ///   single tile) run serially — sharding tiny steps costs more than
+    ///   it saves.
+    /// * **Inter-op**: steps with no RAW/WAW/WAR hazard between them
+    ///   ([`Plan::step_deps`]) — independent residual/branchy graph
+    ///   branches — run as concurrent scoped jobs, each writing its own
+    ///   (taken-out) pool buffer.
+    ///
+    /// Execution uses the caller-helps [`Pool::scope`] primitive, so it
+    /// is deadlock-free from any context (including from inside a pool
+    /// job — the serve flush path) and under a racing pool shutdown.
+    /// `par.workers <= 1` runs exactly the serial
+    /// [`Plan::execute_batch_path`].
+    pub fn execute_batch_pooled<'a, S>(
+        &self,
+        ctx: &S::Ctx,
+        input: &[S],
+        batch: usize,
+        arena: &'a mut Arena<S>,
+        path: KernelPath,
+        pool: &Pool,
+        par: Parallelism,
+    ) -> Result<&'a [S]>
+    where
+        S: Scalar + Send + Sync + 'static,
+    {
+        if par.workers <= 1 {
+            return self.execute_batch_path(ctx, input, batch, arena, path);
+        }
+        if batch == 0 {
+            bail!("plan '{}': batch must be >= 1", self.model_name());
+        }
+        if input.len() != batch * self.input_len() {
+            bail!(
+                "plan '{}' expects {batch} x {:?} ({} values sample-major), got {}",
+                self.model_name(),
+                self.input_shape(),
+                batch * self.input_len(),
+                input.len()
+            );
+        }
+        let path = if S::BLOCKED_ELIGIBLE { path } else { KernelPath::Scalar };
+        arena.load_batch(self, input, batch);
+
+        // Wave scheduler: repeatedly run the set of steps whose
+        // predecessors have all completed. Serial execution is the
+        // degenerate all-waves-of-one schedule, so any wave order is
+        // hazard-free by construction of `step_deps`.
+        let n = self.steps().len();
+        let deps = self.step_deps();
+        let mut done = vec![false; n];
+        let mut wave: Vec<usize> = Vec::new();
+        let mut n_done = 0;
+        while n_done < n {
+            wave.clear();
+            for (i, d) in deps.iter().enumerate() {
+                if !done[i] && d.iter().all(|&p| done[p]) {
+                    wave.push(i);
+                }
+            }
+            debug_assert!(!wave.is_empty(), "step dependency cycle");
+            if wave.len() == 1 {
+                self.execute_step_wide(wave[0], batch, ctx, arena, path, pool, par);
+            } else {
+                self.execute_wave_concurrent(&wave, batch, ctx, arena, path, pool, par);
+            }
+            n_done += wave.len();
+            for &i in &wave {
+                done[i] = true;
+            }
+        }
+        Ok(&arena.bufs[self.output_buf()])
+    }
+
+    /// One step of a pooled drive, intra-op sharded across the pool when
+    /// it is a blocked step with enough work (see
+    /// [`Plan::execute_batch_pooled`]); everything else falls through to
+    /// the serial step executor.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_step_wide<S>(
+        &self,
+        idx: usize,
+        batch: usize,
+        ctx: &S::Ctx,
+        arena: &mut Arena<S>,
+        path: KernelPath,
+        pool: &Pool,
+        par: Parallelism,
+    ) where
+        S: Scalar + Send + Sync + 'static,
+    {
+        let step = &self.steps()[idx];
+        let bs = self.blocked_step(idx, path);
+        let units = match bs {
+            Some(BlockedStep::Dense(pd)) => pd.tiles(batch),
+            Some(BlockedStep::Conv(ic)) => ic.tiles(batch),
+            Some(BlockedStep::Depthwise(dw)) => dw.tiles(batch),
+            Some(BlockedStep::AvgPool(pt)) => pt.tiles(batch),
+            None => 0,
+        };
+        if units < 2 || step.out == step.inputs[0] || step.out_len() * batch < par.min_work {
+            return self.execute_step_batch_path(idx, batch, ctx, arena, path);
+        }
+        let bs = bs.expect("units > 0 implies blocked data");
+        let groups = par.workers.min(units);
+        let fused = step.fused_act;
+
+        let mut out = std::mem::take(&mut arena.bufs[step.out]);
+        out.clear();
+        out.resize(batch * step.out_len(), S::exact(ctx, 0.0));
+        let x = arena.bufs[step.inputs[0]].as_slice();
+
+        pool.scope(|s| {
+            // Hand each group its contiguous output chunk: tile ranges
+            // partition the output (`tile_out_start` is the boundary map),
+            // so `split_at_mut` carves disjoint `&mut` chunks — no
+            // aliasing, no unsafe.
+            let mut rest: &mut [S] = &mut out;
+            let mut covered = 0usize;
+            for g in 0..groups {
+                let (u0, u1) = (g * units / groups, (g + 1) * units / groups);
+                if u0 == u1 {
+                    continue;
+                }
+                let end = match bs {
+                    BlockedStep::Dense(pd) => pd.tile_out_start(batch, u1),
+                    BlockedStep::Conv(ic) => ic.tile_out_start(batch, u1),
+                    BlockedStep::Depthwise(dw) => dw.tile_out_start(batch, u1),
+                    BlockedStep::AvgPool(pt) => pt.tile_out_start(batch, u1),
+                };
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - covered);
+                rest = tail;
+                covered = end;
+                s.spawn(move || {
+                    with_worker_scratch(|ts: &mut TileScratch<S>| match (&step.kind, bs) {
+                        (StepKind::Dense { b, .. }, BlockedStep::Dense(pd)) => {
+                            gemm::dense_blocked_tiles(
+                                ctx,
+                                pd,
+                                b,
+                                x,
+                                batch,
+                                u0,
+                                u1,
+                                &mut ts.pack,
+                                chunk,
+                            );
+                        }
+                        (StepKind::Conv2D { kernel, bias, .. }, BlockedStep::Conv(ic)) => {
+                            gemm::conv_blocked_tiles(
+                                ctx,
+                                ic,
+                                kernel.data(),
+                                bias,
+                                x,
+                                batch,
+                                u0,
+                                u1,
+                                &mut ts.pack,
+                                &mut ts.mask,
+                                chunk,
+                            );
+                        }
+                        (
+                            StepKind::DepthwiseConv2D { kernel, bias, .. },
+                            BlockedStep::Depthwise(dw),
+                        ) => {
+                            gemm::depthwise_blocked_tiles(
+                                ctx,
+                                dw,
+                                kernel.data(),
+                                bias,
+                                x,
+                                batch,
+                                u0,
+                                u1,
+                                &mut ts.pack,
+                                chunk,
+                            );
+                        }
+                        (StepKind::AvgPool2D { .. }, BlockedStep::AvgPool(pt)) => {
+                            gemm::avg_pool_blocked_tiles(
+                                ctx,
+                                pt,
+                                x,
+                                batch,
+                                u0,
+                                u1,
+                                &mut ts.pack,
+                                chunk,
+                            );
+                        }
+                        _ => unreachable!("blocked data always matches its step kind"),
+                    });
+                    // The fused activation is elementwise — applying it
+                    // per chunk is the same per-element operation order.
+                    if let Some(a) = &fused {
+                        apply_act_inplace(ctx, a, chunk);
+                    }
+                });
+            }
+            debug_assert!(rest.is_empty(), "tile groups must cover the whole output");
+        });
+
         arena.bufs[step.out] = out;
         debug_assert_eq!(
             arena.bufs[step.out].len(),
             batch * step.out_len(),
-            "step {idx} batched output"
+            "step {idx} sharded output"
         );
+    }
+
+    /// Run an independent wave of 2+ steps as concurrent scoped jobs —
+    /// the inter-op layer. Every wave step's output buffer is taken out
+    /// of the pool first (hazard-free by `step_deps`: no wave member
+    /// reads or writes another member's output buffer), each job runs
+    /// the full serial step kernel with per-worker scratch, and the
+    /// buffers go back after the scope barrier. Waves whose total work
+    /// is below `min_work` run serially in step order instead.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_wave_concurrent<S>(
+        &self,
+        wave: &[usize],
+        batch: usize,
+        ctx: &S::Ctx,
+        arena: &mut Arena<S>,
+        path: KernelPath,
+        pool: &Pool,
+        par: Parallelism,
+    ) where
+        S: Scalar + Send + Sync + 'static,
+    {
+        let work: usize = wave.iter().map(|&i| self.steps()[i].out_len() * batch).sum();
+        if work < par.min_work {
+            for &i in wave {
+                self.execute_step_batch_path(i, batch, ctx, arena, path);
+            }
+            return;
+        }
+        let mut outs: Vec<(usize, Vec<S>)> = wave
+            .iter()
+            .map(|&i| {
+                let step = &self.steps()[i];
+                let mut v = std::mem::take(&mut arena.bufs[step.out]);
+                if step.out != step.inputs[0] {
+                    v.clear();
+                }
+                (i, v)
+            })
+            .collect();
+        let bufs: &[Vec<S>] = &arena.bufs;
+        pool.scope(|s| {
+            for (i, out) in outs.iter_mut() {
+                let i = *i;
+                let step = &self.steps()[i];
+                s.spawn(move || {
+                    if step.out == step.inputs[0] {
+                        // In-place alias: the job owns the taken buffer.
+                        debug_assert!(step.fused_act.is_none());
+                        match &step.kind {
+                            StepKind::Flatten => {}
+                            StepKind::Act(a) => apply_act_inplace(ctx, a, out),
+                            other => {
+                                unreachable!("{} steps are never in-place-aliased", other.name())
+                            }
+                        }
+                    } else {
+                        with_worker_scratch(|ts: &mut TileScratch<S>| {
+                            self.run_step_kernel(
+                                i,
+                                batch,
+                                ctx,
+                                bufs,
+                                &mut ts.pack,
+                                &mut ts.mask,
+                                &mut ts.scratch,
+                                out,
+                                path,
+                            );
+                        });
+                    }
+                });
+            }
+        });
+        for (i, v) in outs {
+            debug_assert_eq!(v.len(), batch * self.steps()[i].out_len(), "wave step {i} output");
+            arena.bufs[self.steps()[i].out] = v;
+        }
     }
 
     /// Convenience tensor-in/tensor-out execution with a throwaway arena —

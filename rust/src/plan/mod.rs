@@ -77,7 +77,7 @@
 
 mod exec;
 
-pub use exec::Arena;
+pub use exec::{Arena, TileScratch};
 
 use crate::layers::{gemm, Layer, Padding};
 use crate::model::Model;
@@ -124,6 +124,69 @@ impl KernelPath {
             Some(s) if !s.is_empty() && s != "0" => KernelPath::Scalar,
             _ => KernelPath::Blocked,
         }
+    }
+}
+
+/// Element-count threshold below which a step stays serial under a
+/// pooled execution: sharding a tiny step costs more in scheduling than
+/// the arithmetic saves. `work = out_len * batch` is compared against
+/// this.
+pub const DEFAULT_MIN_WORK: usize = 2048;
+
+/// How much of the machine a pooled plan drive may use — the policy
+/// [`Plan::execute_batch_pooled`](crate::plan::Plan) takes and the
+/// serve/fleet flushers thread through every flush.
+///
+/// `workers <= 1` means *serial*: the drive runs exactly the
+/// single-threaded path (no scope, no scheduler), which is also the
+/// escape hatch (`RIGOR_WORKERS=1`, or
+/// [`Parallelism::serial`]). Parallel drives are **bit-identical** to
+/// serial ones by construction — sharding crosses only independent
+/// reduction chains — so this knob is pure throughput, never semantics
+/// (the parallel analogue of [`KernelPath`]'s contract).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Maximum concurrent jobs one plan drive fans out (intra-op shards
+    /// or inter-op branch steps). `<= 1` disables fan-out entirely.
+    pub workers: usize,
+    /// Steps with `out_len * batch` below this stay serial even when
+    /// `workers > 1` (see [`DEFAULT_MIN_WORK`]).
+    pub min_work: usize,
+}
+
+impl Parallelism {
+    /// Fan out over up to `workers` concurrent jobs, with the default
+    /// min-work threshold.
+    pub fn with_workers(workers: usize) -> Parallelism {
+        Parallelism { workers: workers.max(1), min_work: DEFAULT_MIN_WORK }
+    }
+
+    /// Strictly serial execution (the single-threaded path, no scheduler).
+    pub fn serial() -> Parallelism {
+        Parallelism { workers: 1, min_work: DEFAULT_MIN_WORK }
+    }
+
+    /// The process-default policy for a pool of `default_workers`
+    /// threads: `RIGOR_WORKERS` (if set to a positive integer) overrides
+    /// the worker count; `RIGOR_WORKERS=1` forces serial; unset/empty/`0`
+    /// means "use `default_workers`".
+    pub fn from_env(default_workers: usize) -> Parallelism {
+        Parallelism::from_env_value(std::env::var_os("RIGOR_WORKERS").as_deref(), default_workers)
+    }
+
+    /// Pure parser behind [`Parallelism::from_env`] (unit-testable
+    /// without mutating process state). Unparseable values fall back to
+    /// `default_workers`.
+    pub fn from_env_value(v: Option<&std::ffi::OsStr>, default_workers: usize) -> Parallelism {
+        let workers = match v {
+            Some(s) if !s.is_empty() && s != "0" => s
+                .to_str()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or(default_workers),
+            _ => default_workers,
+        };
+        Parallelism::with_workers(workers)
     }
 }
 
@@ -406,6 +469,12 @@ pub struct Plan {
     /// have a blocked lowering (`Dense`, `Conv2D`, `DepthwiseConv2D`),
     /// when compiled at [`KernelPath::Blocked`].
     blocked: Vec<Option<BlockedStep>>,
+    /// Index-aligned with `steps`: predecessor step indices (deduped) this
+    /// step must wait for under concurrent execution — RAW, WAW and WAR
+    /// hazards over the *recycled* pool buffers, computed once at build.
+    /// Steps whose lists are disjoint prefixes of the ready set can run
+    /// concurrently (independent residual branches).
+    deps: Vec<Vec<usize>>,
 }
 
 /// A step during compilation, wired by **value id** (0 = model input,
@@ -581,6 +650,8 @@ impl Plan {
                 .collect(),
         };
 
+        let deps = compute_deps(&steps, buf_lens.len(), input_buf);
+
         Ok(Plan {
             model_name: model.name.clone(),
             input_shape: model.input_shape.clone(),
@@ -592,6 +663,7 @@ impl Plan {
             output_buf,
             kernel_path: kernels,
             blocked,
+            deps,
         })
     }
 
@@ -657,6 +729,17 @@ impl Plan {
         &self.steps
     }
 
+    /// Predecessor step indices (deduped, ascending) each step must wait
+    /// for before it may run concurrently with others: every read-after-
+    /// write, write-after-write and write-after-read hazard over the
+    /// recycled pool buffers. Steps with no path between them here are
+    /// independent — the inter-op scheduler runs them as concurrent jobs.
+    /// Serial execution (steps in index order) trivially satisfies every
+    /// edge, which is why the serial path never consults this.
+    pub fn step_deps(&self) -> &[Vec<usize>] {
+        &self.deps
+    }
+
     /// The model input shape.
     pub fn input_shape(&self) -> &[usize] {
         &self.input_shape
@@ -704,6 +787,46 @@ impl Plan {
     pub fn output_buf(&self) -> BufId {
         self.output_buf
     }
+}
+
+/// Compute per-step predecessor lists over the recycled buffer pool: step
+/// `i` depends on step `j < i` iff `i` reads a buffer `j` last wrote
+/// (RAW), overwrites a buffer `j` wrote (WAW — buffer recycling aliases
+/// unrelated values onto one buffer), or overwrites a buffer `j` still
+/// reads (WAR). The executor's input load acts as the write of
+/// `input_buf`, so a step that recycles the input buffer correctly waits
+/// for every reader of the model input.
+fn compute_deps(steps: &[Step], n_bufs: usize, _input_buf: BufId) -> Vec<Vec<usize>> {
+    // Per buffer: the last step that wrote it (None = executor input
+    // load / never written) and the steps that read it since that write.
+    let mut last_writer: Vec<Option<usize>> = vec![None; n_bufs];
+    let mut readers: Vec<Vec<usize>> = vec![Vec::new(); n_bufs];
+    let mut deps: Vec<Vec<usize>> = Vec::with_capacity(steps.len());
+    for (i, s) in steps.iter().enumerate() {
+        let mut pred: Vec<usize> = Vec::new();
+        for &b in &s.inputs {
+            if let Some(w) = last_writer[b] {
+                pred.push(w); // RAW
+            }
+        }
+        if let Some(w) = last_writer[s.out] {
+            pred.push(w); // WAW
+        }
+        pred.extend(readers[s.out].iter().copied()); // WAR
+        pred.sort_unstable();
+        pred.dedup();
+        pred.retain(|&p| p != i);
+        // Update bookkeeping: reads first, then the write.
+        for &b in &s.inputs {
+            if b != s.out {
+                readers[b].push(i);
+            }
+        }
+        last_writer[s.out] = Some(i);
+        readers[s.out].clear();
+        deps.push(pred);
+    }
+    deps
 }
 
 /// Lower one layer into its (unfused) step kind, cloning the parameters so

@@ -47,7 +47,7 @@
 //! ```
 
 use crate::coordinator::{with_worker_scratch, Pool};
-use crate::plan::{Arena, KernelPath, Plan, ServeFormat};
+use crate::plan::{Arena, KernelPath, Parallelism, Plan, ServeFormat};
 use crate::quant::EmulatedFp;
 use crate::tensor::EmuCtx;
 use anyhow::{anyhow, bail, Result};
@@ -178,6 +178,10 @@ struct Shared {
     policy: BatchPolicy,
     kernels: KernelPath,
     format: ServeFormat,
+    /// How wide one flush's plan drive fans out over the pool
+    /// ([`Plan::execute_batch_pooled`]); `workers <= 1` keeps the PR-4
+    /// behavior of one serial drive per flush.
+    par: Parallelism,
     counters: Counters,
     /// Flushes handed to the pool but not yet finished — what
     /// [`MicroBatcher::shutdown`] drains so every ticket is resolved
@@ -239,6 +243,23 @@ impl MicroBatcher {
         kernels: KernelPath,
         format: ServeFormat,
     ) -> MicroBatcher {
+        let par = Parallelism::from_env(pool.worker_count());
+        MicroBatcher::with_parallelism(plan, pool, policy, kernels, format, par)
+    }
+
+    /// [`MicroBatcher::with_format`] with an explicit [`Parallelism`]
+    /// policy instead of the `RIGOR_WORKERS`/pool-width default: each
+    /// flush's plan drive fans out over up to `par.workers` pool workers
+    /// ([`Plan::execute_batch_pooled`] — bit-identical to the serial
+    /// drive), or stays a single serial job at `par.workers <= 1`.
+    pub fn with_parallelism(
+        plan: Arc<Plan>,
+        pool: Arc<Pool>,
+        policy: BatchPolicy,
+        kernels: KernelPath,
+        format: ServeFormat,
+        par: Parallelism,
+    ) -> MicroBatcher {
         assert!(policy.max_batch >= 1, "max_batch must be >= 1");
         assert!(
             policy.max_pending >= policy.max_batch,
@@ -256,6 +277,7 @@ impl MicroBatcher {
             policy,
             kernels,
             format,
+            par,
             counters: Counters::default(),
             inflight: Mutex::new(0),
             idle: Condvar::new(),
@@ -418,8 +440,19 @@ fn flusher_loop(sh: Arc<Shared>) {
         };
         *sh.inflight.lock().unwrap() += 1;
         let job_sh = Arc::clone(&sh);
-        sh.pool.submit(move || {
-            run_batch_job(&job_sh.plan, job_sh.kernels, job_sh.format, batch);
+        // `submit_or_run`: if the pool is shutting down the job runs
+        // inline on this flusher thread instead of being dropped —
+        // every accepted ticket resolves even when serve teardown races
+        // pool teardown.
+        sh.pool.submit_or_run(move || {
+            run_batch_job(
+                &job_sh.plan,
+                job_sh.kernels,
+                job_sh.format,
+                batch,
+                &job_sh.pool,
+                job_sh.par,
+            );
             let mut n = job_sh.inflight.lock().unwrap();
             *n -= 1;
             if *n == 0 {
@@ -443,6 +476,8 @@ pub(crate) fn run_batch_job(
     kernels: KernelPath,
     format: ServeFormat,
     batch: Vec<PendingSample>,
+    pool: &Pool,
+    par: Parallelism,
 ) {
     let b = batch.len();
     let mut flat: Vec<f64> = Vec::with_capacity(b * plan.input_len());
@@ -453,7 +488,7 @@ pub(crate) fn run_batch_job(
         let m = plan.output_len();
         match format {
             ServeFormat::F64 => with_worker_scratch(|arena: &mut Arena<f64>| {
-                match plan.execute_batch_path::<f64>(&(), &flat, b, arena, kernels) {
+                match plan.execute_batch_pooled::<f64>(&(), &flat, b, arena, kernels, pool, par) {
                     Ok(out) => {
                         for (s, p) in batch.iter().enumerate() {
                             fill(&p.slot, Ok(out[s * m..(s + 1) * m].to_vec()));
@@ -469,7 +504,9 @@ pub(crate) fn run_batch_job(
                 let xe: Vec<EmulatedFp> =
                     flat.iter().map(|&v| EmulatedFp::new(v, k)).collect();
                 with_worker_scratch(|arena: &mut Arena<EmulatedFp>| {
-                    match plan.execute_batch_path::<EmulatedFp>(&ec, &xe, b, arena, kernels) {
+                    match plan.execute_batch_pooled::<EmulatedFp>(
+                        &ec, &xe, b, arena, kernels, pool, par,
+                    ) {
                         Ok(out) => {
                             for (s, p) in batch.iter().enumerate() {
                                 let row = &out[s * m..(s + 1) * m];
@@ -598,7 +635,7 @@ mod tests {
         let model = zoo::tiny_mlp(11);
         let plan = Arc::new(Plan::for_reference(&model).unwrap());
         let pool = Arc::new(Pool::new(1, 1));
-        pool.submit(|| std::thread::sleep(Duration::from_millis(50)));
+        pool.submit(|| std::thread::sleep(Duration::from_millis(50))).unwrap();
         let batcher = Arc::new(MicroBatcher::with_kernel_path(
             Arc::clone(&plan),
             pool,
@@ -635,7 +672,7 @@ mod tests {
         let model = zoo::tiny_mlp(11);
         let plan = Arc::new(Plan::for_reference(&model).unwrap());
         let pool = Arc::new(Pool::new(1, 1));
-        pool.submit(|| std::thread::sleep(Duration::from_millis(100)));
+        pool.submit(|| std::thread::sleep(Duration::from_millis(100))).unwrap();
         let batcher = Arc::new(MicroBatcher::with_kernel_path(
             Arc::clone(&plan),
             pool,
@@ -670,7 +707,7 @@ mod tests {
         let model = zoo::tiny_mlp(11);
         let plan = Arc::new(Plan::for_reference(&model).unwrap());
         let pool = Arc::new(Pool::new(1, 2));
-        pool.submit(|| std::thread::sleep(Duration::from_millis(60)));
+        pool.submit(|| std::thread::sleep(Duration::from_millis(60))).unwrap();
         let mut batcher = MicroBatcher::new(
             Arc::clone(&plan),
             pool,

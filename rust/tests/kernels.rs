@@ -226,6 +226,24 @@ fn env_value_parser_controls_the_default_path() {
 }
 
 #[test]
+fn parallelism_env_value_parser_controls_the_worker_count() {
+    // The pure parser behind RIGOR_WORKERS, mirroring the kernel-path
+    // parser above: unset / empty / "0" defer to the caller's default,
+    // "1" pins serial drives, garbage falls back to the default.
+    use rigor::plan::Parallelism;
+    use std::ffi::OsStr;
+    assert_eq!(Parallelism::from_env_value(None, 6).workers, 6);
+    assert_eq!(Parallelism::from_env_value(Some(OsStr::new("")), 6).workers, 6);
+    assert_eq!(Parallelism::from_env_value(Some(OsStr::new("0")), 6).workers, 6);
+    assert_eq!(Parallelism::from_env_value(Some(OsStr::new("1")), 6).workers, 1);
+    assert_eq!(Parallelism::from_env_value(Some(OsStr::new("4")), 6).workers, 4);
+    assert_eq!(Parallelism::from_env_value(Some(OsStr::new(" 2 ")), 6).workers, 2);
+    assert_eq!(Parallelism::from_env_value(Some(OsStr::new("lots")), 6).workers, 6);
+    // A degenerate default is still clamped to a usable worker count.
+    assert_eq!(Parallelism::from_env_value(None, 0).workers, 1);
+}
+
+#[test]
 fn scalar_compiled_plans_degrade_blocked_requests() {
     // A plan compiled at Scalar carries no blocked data: requesting the
     // blocked path must silently run scalar, not panic.
@@ -327,4 +345,48 @@ fn steady_state_batched_execution_is_allocation_free() {
     }
     let allocs = thread_allocs() - before;
     assert_eq!(allocs, 0, "steady-state batched execution performed {allocs} allocations");
+}
+
+#[test]
+fn sharded_tile_ranges_are_allocation_free_and_bit_identical_when_warm() {
+    // The parallel executor's per-worker contract, measured at the kernel
+    // level on this thread: once the panel scratch is warmed, driving a
+    // dense step tile-range-by-tile-range performs zero heap allocations
+    // and reproduces the full-range drive bit for bit, for every
+    // partition point.
+    use rigor::layers::gemm::{dense_blocked_tiles, DensePanel};
+    use rigor::tensor::Tensor;
+    let (m, n, batch) = (29usize, 13usize, 21usize); // prime-ish: row and lane tails
+    let mut rng = Rng::new(0x5AD);
+    let w = Tensor::new(vec![m, n], (0..m * n).map(|_| rng.range(-1.0, 1.0)).collect());
+    let bias: Vec<f64> = (0..m).map(|_| rng.range(-1.0, 1.0)).collect();
+    let x: Vec<f64> = (0..batch * n).map(|_| rng.range(-1.0, 1.0)).collect();
+    let pd = DensePanel::pack(&w);
+    let units = pd.tiles(batch);
+    assert!(units >= 3, "need several tiles to partition");
+
+    let mut pack: Vec<f64> = Vec::new();
+    let mut full = vec![0.0f64; batch * m];
+    dense_blocked_tiles(&(), &pd, &bias, &x, batch, 0, units, &mut pack, &mut full);
+
+    // Bit-identity at every partition point.
+    let mut sharded = vec![0.0f64; batch * m];
+    for split in 1..units {
+        sharded.iter_mut().for_each(|v| *v = 0.0);
+        let (lo, hi) = sharded.split_at_mut(pd.tile_out_start(batch, split));
+        dense_blocked_tiles(&(), &pd, &bias, &x, batch, 0, split, &mut pack, lo);
+        dense_blocked_tiles(&(), &pd, &bias, &x, batch, split, units, &mut pack, hi);
+        assert_bits_eq(&full, &sharded, &format!("dense split at tile {split}"));
+    }
+
+    // Zero allocations once warm (asserts above allocate their messages,
+    // so the counted pass runs the bare kernel calls only).
+    let before = thread_allocs();
+    for split in 1..units {
+        let (lo, hi) = sharded.split_at_mut(pd.tile_out_start(batch, split));
+        dense_blocked_tiles(&(), &pd, &bias, &x, batch, 0, split, &mut pack, lo);
+        dense_blocked_tiles(&(), &pd, &bias, &x, batch, split, units, &mut pack, hi);
+    }
+    let allocs = thread_allocs() - before;
+    assert_eq!(allocs, 0, "warm tile-range drives performed {allocs} allocations");
 }

@@ -1,0 +1,393 @@
+//! Parallel-execution integration tests: a pooled plan drive
+//! ([`Plan::execute_batch_pooled`]) must be **bit-identical** to the
+//! serial batched drive for every model in the zoo, for `f64` and
+//! `EmulatedFp`, at every batch size and worker count — including under
+//! a racing fleet saturating the same coordinator pool, and with the
+//! hazard graph (`Plan::step_deps`) that licenses inter-op overlap.
+
+use rigor::coordinator::Pool;
+use rigor::fleet::{Fleet, FleetPolicy};
+use rigor::model::{zoo, Model};
+use rigor::plan::{Arena, Fusion, KernelPath, Parallelism, Plan, ServeFormat};
+use rigor::quant::EmulatedFp;
+use rigor::tensor::EmuCtx;
+use rigor::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn zoo_models() -> Vec<Model> {
+    vec![
+        zoo::tiny_mlp(1),
+        zoo::tiny_cnn(2),
+        zoo::avgpool_cnn(7),
+        zoo::tiny_pendulum(3),
+        zoo::scaled_mlp(4, 13, 17, 5),
+        zoo::residual_mlp(5),
+        zoo::residual_cnn(6),
+    ]
+}
+
+fn batch_input(model: &Model, batch: usize, seed: u64) -> Vec<f64> {
+    let n: usize = model.input_shape.iter().product();
+    let mut rng = Rng::new(seed);
+    (0..batch * n).map(|_| rng.range(-1.0, 1.0)).collect()
+}
+
+fn assert_bits_eq(serial: &[f64], pooled: &[f64], what: &str) {
+    assert_eq!(serial.len(), pooled.len(), "{what}: length");
+    for (i, (a, b)) in serial.iter().zip(pooled).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: element {i} ({a} vs {b})");
+    }
+}
+
+/// `min_work: 0` forces sharding even on the zoo's small steps — the
+/// bit-identity contract must hold wherever the threshold lands.
+fn eager(workers: usize) -> Parallelism {
+    Parallelism { workers, min_work: 0 }
+}
+
+#[test]
+fn pooled_drives_bit_identical_across_zoo_f64() {
+    let pool = Pool::new(4, 16);
+    for model in zoo_models() {
+        for fusion in [Fusion::Full, Fusion::Pair] {
+            let plan = Plan::build_with_kernels(&model, fusion, KernelPath::Blocked).unwrap();
+            for batch in [1usize, 7, 32] {
+                let flat = batch_input(&model, batch, 0x70 + batch as u64);
+                let mut sa: Arena<f64> = Arena::new();
+                let serial = plan
+                    .execute_batch_path::<f64>(&(), &flat, batch, &mut sa, KernelPath::Blocked)
+                    .unwrap()
+                    .to_vec();
+                for workers in [1usize, 2, 4] {
+                    let mut pa: Arena<f64> = Arena::new();
+                    let pooled = plan
+                        .execute_batch_pooled::<f64>(
+                            &(),
+                            &flat,
+                            batch,
+                            &mut pa,
+                            KernelPath::Blocked,
+                            &pool,
+                            eager(workers),
+                        )
+                        .unwrap()
+                        .to_vec();
+                    assert_bits_eq(
+                        &serial,
+                        &pooled,
+                        &format!("{} {fusion:?} B={batch} W={workers}", model.name),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_drives_bit_identical_across_zoo_emulated() {
+    let pool = Pool::new(4, 16);
+    for model in zoo_models() {
+        let plan = Plan::build_with_kernels(&model, Fusion::None, KernelPath::Blocked).unwrap();
+        let ec = EmuCtx { k: 12 };
+        for batch in [1usize, 7, 32] {
+            let xe: Vec<EmulatedFp> = batch_input(&model, batch, 0xE7 + batch as u64)
+                .iter()
+                .map(|&v| EmulatedFp::new(v, 12))
+                .collect();
+            let mut sa: Arena<EmulatedFp> = Arena::new();
+            let serial: Vec<f64> = plan
+                .execute_batch_path::<EmulatedFp>(&ec, &xe, batch, &mut sa, KernelPath::Blocked)
+                .unwrap()
+                .iter()
+                .map(|e| e.v)
+                .collect();
+            for workers in [1usize, 2, 4] {
+                let mut pa: Arena<EmulatedFp> = Arena::new();
+                let pooled: Vec<f64> = plan
+                    .execute_batch_pooled::<EmulatedFp>(
+                        &ec,
+                        &xe,
+                        batch,
+                        &mut pa,
+                        KernelPath::Blocked,
+                        &pool,
+                        eager(workers),
+                    )
+                    .unwrap()
+                    .iter()
+                    .map(|e| e.v)
+                    .collect();
+                assert_bits_eq(
+                    &serial,
+                    &pooled,
+                    &format!("{} k=12 B={batch} W={workers}", model.name),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_drives_bit_identical_on_the_scalar_kernels() {
+    // Sharding rides the blocked tables; a scalar-path pooled drive must
+    // degrade to the serial scalar drive (still pooled for inter-op
+    // waves), bit-identical.
+    let pool = Pool::new(2, 8);
+    for model in [zoo::residual_cnn(6), zoo::scaled_mlp(4, 13, 17, 5)] {
+        let plan = Plan::build_with_kernels(&model, Fusion::Pair, KernelPath::Blocked).unwrap();
+        let flat = batch_input(&model, 7, 0x5C);
+        let mut sa: Arena<f64> = Arena::new();
+        let serial = plan
+            .execute_batch_path::<f64>(&(), &flat, 7, &mut sa, KernelPath::Scalar)
+            .unwrap()
+            .to_vec();
+        let mut pa: Arena<f64> = Arena::new();
+        let pooled = plan
+            .execute_batch_pooled::<f64>(&(), &flat, 7, &mut pa, KernelPath::Scalar, &pool, eager(4))
+            .unwrap()
+            .to_vec();
+        assert_bits_eq(&serial, &pooled, &format!("{} scalar pooled", model.name));
+    }
+}
+
+#[test]
+fn hazard_graph_orders_residual_branches() {
+    // The dependency metadata that licenses inter-op overlap: every
+    // step's predecessors must cover its read/write hazards. Spot-check
+    // the residual models — a branchy graph has at least one step pair
+    // with no path between them (the concurrent wave), while a pure
+    // chain is totally ordered.
+    for model in [zoo::residual_mlp(5), zoo::residual_cnn(6)] {
+        let plan = Plan::build_with_kernels(&model, Fusion::Pair, KernelPath::Blocked).unwrap();
+        let deps = plan.step_deps();
+        let steps = plan.steps();
+        assert_eq!(deps.len(), steps.len());
+        // Transitive closure of "p precedes i".
+        let n = deps.len();
+        let mut reach = vec![vec![false; n]; n];
+        for i in 0..n {
+            for &p in &deps[i] {
+                assert!(p < i, "{}: dep edges must point backwards", model.name);
+                reach[i][p] = true;
+                for j in 0..n {
+                    if reach[p][j] {
+                        reach[i][j] = true;
+                    }
+                }
+            }
+        }
+        // Soundness: adjacent writers of the same buffer are ordered.
+        for i in 0..n {
+            for j in 0..i {
+                let rw_hazard = steps[i].inputs.contains(&steps[j].out)
+                    || steps[j].inputs.contains(&steps[i].out)
+                    || steps[i].out == steps[j].out;
+                if rw_hazard {
+                    assert!(
+                        reach[i][j],
+                        "{}: steps {j} -> {i} share a buffer but are unordered",
+                        model.name
+                    );
+                }
+            }
+        }
+        // Branchiness: some pair is unordered in both directions.
+        let mut concurrent = false;
+        for i in 0..n {
+            for j in 0..i {
+                if !reach[i][j] && !reach[j][i] {
+                    concurrent = true;
+                }
+            }
+        }
+        assert!(concurrent, "{}: residual graph has no concurrent steps", model.name);
+    }
+    // A pure chain is totally ordered: no concurrent pair.
+    let plan =
+        Plan::build_with_kernels(&zoo::tiny_mlp(1), Fusion::Pair, KernelPath::Blocked).unwrap();
+    let deps = plan.step_deps();
+    for (i, d) in deps.iter().enumerate().skip(1) {
+        assert!(d.contains(&(i - 1)), "chain step {i} must depend on its predecessor");
+    }
+}
+
+#[test]
+fn pooled_drives_stay_deterministic_under_a_racing_fleet() {
+    // The production configuration: the same coordinator pool serves
+    // fleet traffic while an analysis-side pooled drive shards onto it.
+    // Every drive must reproduce the serial bits no matter how the
+    // scheduler interleaves jobs.
+    let pool = Arc::new(Pool::new(4, 32));
+    let model = zoo::residual_cnn(6);
+    let plan = Plan::build_with_kernels(&model, Fusion::Pair, KernelPath::Blocked).unwrap();
+    let batch = 13usize;
+    let flat = batch_input(&model, batch, 0xFEE7);
+    let mut sa: Arena<f64> = Arena::new();
+    let serial = plan
+        .execute_batch_path::<f64>(&(), &flat, batch, &mut sa, KernelPath::Blocked)
+        .unwrap()
+        .to_vec();
+
+    let fleet = Arc::new(Fleet::new(
+        Arc::clone(&pool),
+        FleetPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            max_queue_pending: 256,
+            max_fleet_pending: 1024,
+        },
+    ));
+    fleet.deploy("noise", &zoo::tiny_cnn(2)).unwrap();
+    let cnn_n: usize = zoo::tiny_cnn(2).input_shape.iter().product();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let traffic = {
+        let stop = Arc::clone(&stop);
+        let f = Arc::clone(&fleet);
+        std::thread::spawn(move || {
+            let mut i = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let s: Vec<f64> =
+                    (0..cnn_n).map(|j| ((i + j) % 17) as f64 / 17.0).collect();
+                if let Ok(t) = f.submit_blocking("noise", ServeFormat::F64, s) {
+                    let _ = t.wait();
+                }
+                i += 1;
+            }
+        })
+    };
+
+    let mut pa: Arena<f64> = Arena::new();
+    for round in 0..24 {
+        let workers = 1 + round % 4;
+        let pooled = plan
+            .execute_batch_pooled::<f64>(
+                &(),
+                &flat,
+                batch,
+                &mut pa,
+                KernelPath::Blocked,
+                &pool,
+                eager(workers),
+            )
+            .unwrap()
+            .to_vec();
+        assert_bits_eq(&serial, &pooled, &format!("round {round} W={workers}"));
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    traffic.join().unwrap();
+    fleet.shutdown(); // drain every admitted ticket before the pool drops
+}
+
+#[test]
+fn pooled_executor_allocations_stay_bounded_per_drive() {
+    // The pooled executor may allocate small constant scheduler state
+    // (wave lists, scope nodes, job boxes) but must not scale with drive
+    // count — the arena and per-worker scratch absorb the data-plane
+    // buffers after warmup.
+    let pool = Pool::new(2, 8);
+    let model = zoo::residual_cnn(6);
+    let plan = Plan::build_with_kernels(&model, Fusion::Pair, KernelPath::Blocked).unwrap();
+    let batch = 8usize;
+    let flat = batch_input(&model, batch, 0xA110C);
+    let mut arena: Arena<f64> = Arena::new();
+    for _ in 0..3 {
+        plan.execute_batch_pooled::<f64>(
+            &(),
+            &flat,
+            batch,
+            &mut arena,
+            KernelPath::Blocked,
+            &pool,
+            eager(2),
+        )
+        .unwrap();
+    }
+    // Warm: measure 8 more drives. The budget is generous (scheduler
+    // state per step per drive) but catches per-element regressions,
+    // which would show up as thousands of allocations.
+    let drives = 8u64;
+    let before = thread_allocs();
+    for _ in 0..drives {
+        plan.execute_batch_pooled::<f64>(
+            &(),
+            &flat,
+            batch,
+            &mut arena,
+            KernelPath::Blocked,
+            &pool,
+            eager(2),
+        )
+        .unwrap();
+    }
+    let allocs = thread_allocs() - before;
+    let budget = drives * 64 * plan.steps().len() as u64;
+    assert!(allocs <= budget, "pooled drives allocated {allocs} (> {budget})");
+
+    // And the serial fallback through the same entry point stays
+    // strictly allocation-free once warm.
+    plan.execute_batch_pooled::<f64>(
+        &(),
+        &flat,
+        batch,
+        &mut arena,
+        KernelPath::Blocked,
+        &pool,
+        Parallelism::serial(),
+    )
+    .unwrap();
+    let before = thread_allocs();
+    plan.execute_batch_pooled::<f64>(
+        &(),
+        &flat,
+        batch,
+        &mut arena,
+        KernelPath::Blocked,
+        &pool,
+        Parallelism::serial(),
+    )
+    .unwrap();
+    assert_eq!(thread_allocs() - before, 0, "serial fallback must stay allocation-free");
+}
+
+// ---- allocation counter (same per-thread hook as tests/kernels.rs) --------
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; the counter hook has no
+// effect on allocation behavior.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
