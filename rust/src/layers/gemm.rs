@@ -99,6 +99,30 @@ impl DensePanel {
     pub fn tile_out_start(&self, batch: usize, t: usize) -> usize {
         (t * NR).min(batch) * self.m
     }
+
+    /// Reconstruct the row-major `[m, n]` weight tensor from the panels.
+    /// Packing only permutes the `f64` values, so this is exact: the
+    /// scalar-path escape hatch derives its weights through here instead
+    /// of a plan keeping a third dense copy alongside the panel.
+    pub fn unpack(&self) -> Tensor<f64> {
+        let (m, n) = (self.m, self.n);
+        let mut wd = vec![0.0; m * n];
+        for j in 0..m {
+            let (jt, r) = (j / MR, j % MR);
+            let tile = &self.wp[jt * n * MR..(jt + 1) * n * MR];
+            for i in 0..n {
+                wd[j * n + i] = tile[i * MR + r];
+            }
+        }
+        Tensor::new(vec![m, n], wd)
+    }
+
+    /// Resident bytes of the packed panels (zero-filled tail rows
+    /// included) — what [`crate::plan::Plan::memory_report`] charges a
+    /// blocked dense step for.
+    pub fn panel_bytes(&self) -> usize {
+        self.wp.len() * std::mem::size_of::<f64>()
+    }
 }
 
 /// A standard convolution lowered to GEMM geometry at plan compile time:
@@ -107,6 +131,16 @@ impl DensePanel {
 /// reduction extents. The kernel tensor itself needs no repacking — the
 /// Keras `[kh, kw, cin, cout]` layout is already `[K][cout]` row-major
 /// over the patch index `p = (ky*kw + kx)*cin + ci`.
+///
+/// The table is stored per output *row class*, not per output pixel
+/// (`O(ow * k)` per class rather than `O(oh * ow * k)` total): the
+/// horizontal padding pattern depends only on `ox`, and for every
+/// vertically-unclipped ("interior") row the tap offsets are a pure
+/// vertical translation of the first interior row's — offset plus
+/// `(oy - oy_ref) * stride * w * cin`. So interior rows share one class
+/// table reused down the image with a per-row delta, and only the few
+/// edge rows that lose taps to vertical padding get class tables of
+/// their own. See DESIGN.md "Textual Plan IR" for the memory math.
 #[derive(Clone, Debug)]
 pub struct Im2col {
     /// Reduction length `kh * kw * cin`.
@@ -115,13 +149,18 @@ pub struct Im2col {
     cout: usize,
     /// Output pixels `oh * ow`.
     op: usize,
+    /// Output row width (pixels per output row).
+    ow: usize,
     /// Input elements per sample (`h * w * cin`).
     in_len: usize,
-    /// `table[pix * k + p]` = flat input offset of tap `p` for output
-    /// pixel `pix`, or [`PAD`]. `O(op * k)` `usize`s per conv step,
-    /// owned by the plan (see DESIGN.md "Kernel dispatch" for the
-    /// memory math).
-    table: Vec<usize>,
+    /// Concatenated row-class tables: class `cl` occupies
+    /// `rows[cl*ow*k .. (cl+1)*ow*k]`, and `rows[(cl*ow + ox)*k + p]` =
+    /// flat input offset of tap `p` at column `ox` (before the per-row
+    /// delta), or [`PAD`].
+    rows: Vec<usize>,
+    /// `row_map[oy]` = `(class, delta)`: the class table for output row
+    /// `oy` and the offset added to every non-[`PAD`] entry.
+    row_map: Vec<(usize, usize)>,
 }
 
 impl Im2col {
@@ -141,10 +180,24 @@ impl Im2col {
         let (pad_top, pad_left, _, _) = pad_offsets(h, w, kh, kw, stride, padding);
         let k = kh * kw * cin;
         let op = oh * ow;
-        let mut table = vec![PAD; op * k];
+        // A row is "interior" when no tap is vertically clipped; all
+        // interior rows share the first one's class table via a delta.
+        let interior =
+            |oy: usize| oy * stride >= pad_top && oy * stride + kh <= h + pad_top;
+        let mut rows: Vec<usize> = Vec::new();
+        let mut row_map: Vec<(usize, usize)> = Vec::with_capacity(oh);
+        let mut interior_ref: Option<(usize, usize)> = None; // (class, oy_ref)
         for oy in 0..oh {
+            if interior(oy) {
+                if let Some((class, oy_ref)) = interior_ref {
+                    row_map.push((class, (oy - oy_ref) * stride * w * cin));
+                    continue;
+                }
+            }
+            let class = rows.len() / (ow * k);
+            rows.resize(rows.len() + ow * k, PAD);
             for ox in 0..ow {
-                let row = &mut table[(oy * ow + ox) * k..(oy * ow + ox + 1) * k];
+                let row = &mut rows[(class * ow + ox) * k..(class * ow + ox + 1) * k];
                 for ky in 0..kh {
                     let iy = (oy * stride + ky) as isize - pad_top as isize;
                     if iy < 0 || iy >= h as isize {
@@ -163,8 +216,30 @@ impl Im2col {
                     }
                 }
             }
+            row_map.push((class, 0));
+            if interior(oy) {
+                interior_ref = Some((class, oy));
+            }
         }
-        Im2col { k, cout, op, in_len: h * w * cin, table }
+        // Exact capacity: the table is plan-resident for the plan's
+        // lifetime, so growth slack would be a permanent overcharge.
+        rows.shrink_to_fit();
+        Im2col { k, cout, op, ow, in_len: h * w * cin, rows, row_map }
+    }
+
+    /// Resident bytes of the patch table (row-class tables plus the
+    /// per-row map) — the post-diet footprint [`crate::plan::Plan::memory_report`]
+    /// accounts for.
+    pub fn table_bytes(&self) -> usize {
+        self.rows.len() * std::mem::size_of::<usize>()
+            + self.row_map.len() * std::mem::size_of::<(usize, usize)>()
+    }
+
+    /// Bytes a full per-pixel `O(op * k)` patch table (the pre-diet
+    /// layout) would occupy — the baseline [`crate::plan::Plan::memory_report`]
+    /// compares against.
+    pub fn full_table_bytes(&self) -> usize {
+        self.op * self.k * std::mem::size_of::<usize>()
     }
 
     /// Independent `(sample, pixel-tile)` work units at batch `batch`.
@@ -253,6 +328,12 @@ impl DwTable {
         let (s, t) = (u / per, u % per);
         (s * self.op + (t * MR).min(self.op)) * self.c
     }
+
+    /// Resident bytes of the tap table (still the full per-pixel layout;
+    /// the per-row-class shrink [`Im2col`] got is a recorded follow-up).
+    pub fn table_bytes(&self) -> usize {
+        self.table.len() * std::mem::size_of::<usize>()
+    }
 }
 
 /// An average pool's spatial tap table, built once at plan compile time:
@@ -307,6 +388,12 @@ impl PoolTable {
         let per = self.op.div_ceil(MR);
         let (s, t) = (u / per, u % per);
         (s * self.op + (t * MR).min(self.op)) * self.c
+    }
+
+    /// Resident bytes of the tap table (full per-pixel layout, like
+    /// [`DwTable::table_bytes`]).
+    pub fn table_bytes(&self) -> usize {
+        self.table.len() * std::mem::size_of::<usize>()
     }
 }
 
@@ -636,8 +723,17 @@ pub fn conv_blocked_tiles<S: Scalar>(
         let rel = ic.tile_out_start(batch, u) - base0;
         // Gather the patch panel for these pixels (the "im2col"
         // materialization — K*NR values in arena scratch, never a
-        // full patch matrix). Interior tiles see no padding and take
-        // the mask-free inner loop below.
+        // full patch matrix). Each lane resolves its pixel's row class
+        // and vertical delta once; interior tiles see no padding and
+        // take the mask-free inner loop below.
+        let mut lane_tab: [&[usize]; NR] = [Default::default(); NR];
+        let mut lane_delta = [0usize; NR];
+        for c in 0..nrc {
+            let (oy, ox) = ((p0 + c) / ic.ow, (p0 + c) % ic.ow);
+            let (class, delta) = ic.row_map[oy];
+            lane_tab[c] = &ic.rows[(class * ic.ow + ox) * k..(class * ic.ow + ox + 1) * k];
+            lane_delta[c] = delta;
+        }
         pack.clear();
         mask.clear();
         pack.reserve(k * nrc);
@@ -645,13 +741,13 @@ pub fn conv_blocked_tiles<S: Scalar>(
         let mut all_valid = true;
         for p in 0..k {
             for c in 0..nrc {
-                let off = ic.table[(p0 + c) * k + p];
+                let off = lane_tab[c][p];
                 if off == PAD {
                     pack.push(S::exact(ctx, 0.0));
                     mask.push(false);
                     all_valid = false;
                 } else {
-                    pack.push(xs[off].clone());
+                    pack.push(xs[off + lane_delta[c]].clone());
                     mask.push(true);
                 }
             }

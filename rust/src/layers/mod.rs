@@ -25,6 +25,7 @@ pub use activation::softmax_vec;
 
 use crate::tensor::{Scalar, Tensor};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Padding mode for convolution (Keras semantics).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -56,14 +57,21 @@ impl Padding {
 
 /// A network layer with its learned parameters (held as f64; every `apply`
 /// embeds them into the target arithmetic as rounded parameters).
+///
+/// Weight tensors sit behind `Arc` so a compiled [`crate::plan::Plan`] can
+/// share them instead of cloning (the plan memory diet): cloning a `Layer`
+/// or lowering it into a plan step bumps a refcount, it does not copy the
+/// parameters. Fusion passes that rewrite weights (batch-norm folding) take
+/// a private copy-on-write copy via `Arc::make_mut`, so the model's own
+/// parameters are never mutated behind its back.
 #[derive(Clone, Debug)]
 pub enum Layer {
     /// Fully connected: `y = W x + b`, `W: [units, in]`.
-    Dense { w: Tensor<f64>, b: Vec<f64> },
+    Dense { w: Arc<Tensor<f64>>, b: Vec<f64> },
     /// 2-D convolution, kernel `[kh, kw, cin, cout]`, input `[h, w, cin]`.
-    Conv2D { kernel: Tensor<f64>, bias: Vec<f64>, stride: usize, padding: Padding },
+    Conv2D { kernel: Arc<Tensor<f64>>, bias: Vec<f64>, stride: usize, padding: Padding },
     /// Depthwise 2-D convolution, kernel `[kh, kw, c]`.
-    DepthwiseConv2D { kernel: Tensor<f64>, bias: Vec<f64>, stride: usize, padding: Padding },
+    DepthwiseConv2D { kernel: Arc<Tensor<f64>>, bias: Vec<f64>, stride: usize, padding: Padding },
     /// Max pooling over `[ph, pw]` windows with stride = pool size.
     MaxPool2D { ph: usize, pw: usize },
     /// Average pooling over `[ph, pw]` windows with stride = pool size.
@@ -220,7 +228,8 @@ mod tests {
 
     #[test]
     fn type_names_and_param_counts() {
-        let d = Layer::Dense { w: Tensor::new(vec![2, 3], vec![0.0; 6]), b: vec![0.0; 2] };
+        let d =
+            Layer::Dense { w: Arc::new(Tensor::new(vec![2, 3], vec![0.0; 6])), b: vec![0.0; 2] };
         assert_eq!(d.type_name(), "dense");
         assert_eq!(d.param_count(), 8);
         assert_eq!(Layer::Softmax.param_count(), 0);
@@ -228,7 +237,8 @@ mod tests {
 
     #[test]
     fn output_shapes() {
-        let d = Layer::Dense { w: Tensor::new(vec![4, 3], vec![0.0; 12]), b: vec![0.0; 4] };
+        let d =
+            Layer::Dense { w: Arc::new(Tensor::new(vec![4, 3], vec![0.0; 12])), b: vec![0.0; 4] };
         assert_eq!(d.output_shape(&[3]).unwrap(), vec![4]);
         assert!(d.output_shape(&[5]).is_err());
         assert_eq!(Layer::Flatten.output_shape(&[2, 3, 4]).unwrap(), vec![24]);

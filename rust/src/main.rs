@@ -22,6 +22,10 @@
 //!   into one `fleet::Fleet`, pushes an interleaved f64 + emulated-k
 //!   load through the per-(model, format) queues, and prints the
 //!   per-queue metrics and the fleet snapshot.
+//! * `plan`    — print the canonical textual IR of the compiled plan for
+//!   a model JSON (steps, buffer liveness, hazard edges, memory report):
+//!   `rigor plan model.json [--format f64|emu-k<k>] [--kernels
+//!   blocked|scalar]`. The same text the golden snapshot suite pins.
 
 use rigor::api::{AnalysisRequest, ExecMode, Session};
 use rigor::cli::{App, CmdSpec, OptSpec};
@@ -93,6 +97,14 @@ fn app() -> App {
                 ],
             },
             CmdSpec {
+                name: "plan",
+                help: "print the compiled plan IR + memory report for a model JSON",
+                opts: vec![
+                    OptSpec { name: "format", help: "serve format: f64 | emu-k<k>", default: Some("f64".into()) },
+                    OptSpec { name: "kernels", help: "kernel family: blocked | scalar", default: Some("blocked".into()) },
+                ],
+            },
+            CmdSpec {
                 name: "run",
                 help: "execute a model on input vectors (engine plan or PJRT artifact)",
                 opts: vec![
@@ -117,6 +129,7 @@ fn main() -> anyhow::Result<()> {
         "sweep" => cmd_sweep(&parsed),
         "tune" => cmd_tune(&parsed),
         "fleet" => cmd_fleet(&parsed),
+        "plan" => cmd_plan(&parsed),
         "run" => cmd_run(&parsed),
         _ => unreachable!(),
     }
@@ -348,6 +361,30 @@ fn cmd_fleet(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
         "fleet: {} submitted, {} batches, {} swaps, {} rejected, {} pending",
         snap.submitted(), snap.batches(), snap.swaps, snap.rejected, snap.total_pending
     );
+    Ok(())
+}
+
+/// Print the canonical textual IR of the plan the engine would serve
+/// for a model JSON: buffer liveness, steps with hazard edges and
+/// lowering choices, and the memory report — the exact text the golden
+/// snapshot suite (`rust/tests/golden/`) pins.
+fn cmd_plan(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    use rigor::plan::{KernelPath, Plan, ServeFormat};
+    let path = p.positionals.first().ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: rigor plan <model.json> [--format f64|emu-k<k>] [--kernels blocked|scalar]"
+        )
+    })?;
+    let format: ServeFormat = p.get("format").unwrap().parse()?;
+    let kernels = match p.get("kernels").unwrap() {
+        "blocked" => KernelPath::Blocked,
+        "scalar" => KernelPath::Scalar,
+        other => anyhow::bail!("unknown --kernels '{other}' (blocked | scalar)"),
+    };
+    let session = Session::new();
+    let model = session.load_model(Path::new(path))?;
+    let plan = Plan::for_format_with_kernels(&model, format, kernels)?;
+    print!("{}", plan.to_text());
     Ok(())
 }
 

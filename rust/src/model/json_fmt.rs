@@ -57,6 +57,7 @@ use crate::layers::{Layer, Padding};
 use crate::model::{Graph, Model};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
+use std::sync::Arc;
 
 fn req<'a>(v: &'a Value, key: &str) -> Result<&'a Value> {
     v.get(key).ok_or_else(|| anyhow!("missing field '{key}'"))
@@ -96,7 +97,7 @@ fn layer_from_json(v: &Value) -> Result<Layer> {
             if b.len() != units {
                 bail!("dense bias: expected {units} values, got {}", b.len());
             }
-            Layer::Dense { w: Tensor::new(vec![units, input], w), b }
+            Layer::Dense { w: Arc::new(Tensor::new(vec![units, input], w)), b }
         }
         "conv2d" => {
             let (kh, kw) = (req_usize(v, "kh")?, req_usize(v, "kw")?);
@@ -118,7 +119,12 @@ fn layer_from_json(v: &Value) -> Result<Layer> {
             if stride == 0 {
                 bail!("conv2d stride must be >= 1");
             }
-            Layer::Conv2D { kernel: Tensor::new(vec![kh, kw, cin, cout], w), bias: b, stride, padding }
+            Layer::Conv2D {
+                kernel: Arc::new(Tensor::new(vec![kh, kw, cin, cout], w)),
+                bias: b,
+                stride,
+                padding,
+            }
         }
         "depthwise_conv2d" => {
             let (kh, kw, c) = (req_usize(v, "kh")?, req_usize(v, "kw")?, req_usize(v, "c")?);
@@ -136,7 +142,12 @@ fn layer_from_json(v: &Value) -> Result<Layer> {
             if b.len() != c {
                 bail!("depthwise bias: expected {c} values, got {}", b.len());
             }
-            Layer::DepthwiseConv2D { kernel: Tensor::new(vec![kh, kw, c], w), bias: b, stride, padding }
+            Layer::DepthwiseConv2D {
+                kernel: Arc::new(Tensor::new(vec![kh, kw, c], w)),
+                bias: b,
+                stride,
+                padding,
+            }
         }
         "max_pool2d" => Layer::MaxPool2D { ph: req_usize(v, "ph")?, pw: req_usize(v, "pw")? },
         "avg_pool2d" => Layer::AvgPool2D { ph: req_usize(v, "ph")?, pw: req_usize(v, "pw")? },

@@ -6,6 +6,7 @@ use crate::layers::{Layer, Padding};
 use crate::model::{Graph, Model};
 use crate::tensor::Tensor;
 use crate::util::Rng;
+use std::sync::Arc;
 
 fn glorot(rng: &mut Rng, fan_in: usize, fan_out: usize, n: usize) -> Vec<f64> {
     let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
@@ -15,7 +16,7 @@ fn glorot(rng: &mut Rng, fan_in: usize, fan_out: usize, n: usize) -> Vec<f64> {
 /// Dense layer with Glorot-uniform weights.
 pub fn dense(rng: &mut Rng, input: usize, units: usize) -> Layer {
     Layer::Dense {
-        w: Tensor::new(vec![units, input], glorot(rng, input, units, units * input)),
+        w: Arc::new(Tensor::new(vec![units, input], glorot(rng, input, units, units * input))),
         b: (0..units).map(|_| rng.range(-0.05, 0.05)).collect(),
     }
 }
@@ -32,7 +33,7 @@ pub fn conv2d(
 ) -> Layer {
     let n = kh * kw * cin * cout;
     Layer::Conv2D {
-        kernel: Tensor::new(vec![kh, kw, cin, cout], glorot(rng, kh * kw * cin, cout, n)),
+        kernel: Arc::new(Tensor::new(vec![kh, kw, cin, cout], glorot(rng, kh * kw * cin, cout, n))),
         bias: (0..cout).map(|_| rng.range(-0.05, 0.05)).collect(),
         stride,
         padding,
@@ -43,7 +44,7 @@ pub fn conv2d(
 pub fn depthwise(rng: &mut Rng, kh: usize, kw: usize, c: usize, stride: usize, padding: Padding) -> Layer {
     let n = kh * kw * c;
     Layer::DepthwiseConv2D {
-        kernel: Tensor::new(vec![kh, kw, c], glorot(rng, kh * kw, 1, n)),
+        kernel: Arc::new(Tensor::new(vec![kh, kw, c], glorot(rng, kh * kw, 1, n))),
         bias: (0..c).map(|_| rng.range(-0.05, 0.05)).collect(),
         stride,
         padding,

@@ -311,7 +311,10 @@ impl Plan {
                     &mut arena.pack,
                     &mut out,
                 ),
-                _ => dense::apply_into(ctx, w, b, &arena.bufs[step.inputs[0]], &mut out),
+                _ => {
+                    let wt = self.scalar_dense_w(idx, w);
+                    dense::apply_into(ctx, &wt, b, &arena.bufs[step.inputs[0]], &mut out)
+                }
             },
             StepKind::Conv2D { kernel, bias, stride, padding } => {
                 match self.blocked_step(idx, path) {
@@ -602,7 +605,10 @@ impl Plan {
                 Some(BlockedStep::Dense(pd)) => {
                     gemm::dense_blocked(ctx, pd, b, &bufs[step.inputs[0]], batch, pack, out)
                 }
-                _ => dense::apply_batch_into(ctx, w, b, &bufs[step.inputs[0]], batch, out),
+                _ => {
+                    let wt = self.scalar_dense_w(idx, w);
+                    dense::apply_batch_into(ctx, &wt, b, &bufs[step.inputs[0]], batch, out)
+                }
             },
             StepKind::Conv2D { kernel, bias, stride, padding } => {
                 match self.blocked_step(idx, path) {

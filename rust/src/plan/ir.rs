@@ -1,0 +1,895 @@
+//! Canonical textual IR for compiled plans, with a structural
+//! parser/differ and the plan memory report.
+//!
+//! [`Plan::to_text`] renders everything a plan commits to at compile
+//! time — fusion level, kernel path, buffer pool with liveness, every
+//! step with its geometry/wiring/hazard edges, and the per-step memory
+//! footprint — as one deterministic text document. Determinism rules:
+//!
+//! - Rendering is a pure function of the compiled plan. Two compiles of
+//!   the same model at the same `(Fusion, KernelPath)` produce
+//!   byte-identical text (compilation itself is deterministic: ordered
+//!   toposort, ordered buffer free-list, no hashing anywhere).
+//! - Line endings are `\n`; exactly one trailing newline; sections are
+//!   separated by single blank lines; every list is rendered in a
+//!   deterministic order (step index, buffer index, declared input
+//!   order) with `-` for "empty".
+//! - No weight *values* appear — only element counts (`params=`) and
+//!   provenance (`wsrc=shared|folded|panel`). The only floats printed
+//!   are semantic attributes (`eps=`, `alpha=`), via Rust's shortest
+//!   round-trip `{}` formatting.
+//!
+//! The golden snapshot suite (`rust/tests/golden.rs`) pins these
+//! renderings for the model zoo and reports drift through
+//! [`diff`] as per-step/per-buffer edits rather than a text dump; the
+//! same differ powers any structural plan comparison. [`PlanText`]
+//! stores parsed lines as ordered key/value tokens verbatim, so
+//! `parse` -> `render` is byte-identity *by construction* — the
+//! round-trip property `rust/tests/ir_props.rs` pins.
+//!
+//! Grammar (one line per item; tokens are space-separated, values never
+//! contain spaces):
+//!
+//! ```text
+//! plan <name>
+//! fusion none|pair|full
+//! kernels scalar|blocked
+//! input b<i> <shape>            ; shape = 'x'-joined dims, e.g. 6x6x1
+//! output b<i> <shape>
+//!
+//! buffers <n>
+//! b<i> len=<elems> writers=<steps|-> readers=<steps|->
+//!
+//! steps <n>
+//! s<i> <kind> in=<bufs> out=b<i> in_shapes=<shapes> out_shape=<shape>
+//!      act=<act|-> layers=<lo>..<hi> deps=<steps|-> lower=<kernel|->
+//!      [kind-specific: w=/k=/stride=/pad=/wsrc=/params=/window=/c=/eps=
+//!       /alpha=/rows=/widths=]
+//!
+//! memory
+//! s<i> <kind> weights=<B> shared=<B> panel=<B> table=<B>
+//!      resident=<B> baseline=<B>
+//! total weights=<B> shared=<B> panel=<B> table=<B> resident=<B>
+//!       baseline=<B>
+//! ```
+//!
+//! Memory-report fields (all bytes): `weights` = parameters the plan
+//! *owns* (folded weight copies, biases, batch-norm vectors); `shared` =
+//! weight tensors `Arc`-shared with the model's layers (not charged to
+//! the plan); `panel` = packed dense panels; `table` = im2col/tap
+//! tables (per-row-class form for convs); `resident` = `weights + panel
+//! + table` (what a cached plan actually keeps alive beyond the model);
+//! `baseline` = the pre-diet layout (every parameter cloned, full
+//! per-pixel `O(oh*ow*K)` conv tables) the diet is measured against.
+
+use super::{Act, BlockedStep, DenseWeights, Fusion, KernelPath, Plan, StepKind};
+use anyhow::{bail, Context, Result};
+
+/// Byte size of one stored parameter.
+const F64B: usize = std::mem::size_of::<f64>();
+
+/// Render an activation token (`-` when absent).
+fn act_token(act: Option<Act>) -> String {
+    match act {
+        None => "-".into(),
+        Some(Act::Relu) => "relu".into(),
+        Some(Act::LeakyRelu { alpha }) => format!("leaky_relu:{alpha}"),
+        Some(Act::Tanh) => "tanh".into(),
+        Some(Act::Sigmoid) => "sigmoid".into(),
+    }
+}
+
+/// `x`-joined shape token (`6x6x1`; rank-1 is just the length).
+fn shape_token(shape: &[usize]) -> String {
+    let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+    dims.join("x")
+}
+
+/// Comma-joined list token with `-` for empty.
+fn list_token<I: IntoIterator<Item = String>>(items: I) -> String {
+    let items: Vec<String> = items.into_iter().collect();
+    if items.is_empty() {
+        "-".into()
+    } else {
+        items.join(",")
+    }
+}
+
+/// One parsed/rendered body line: an id (`b3`, `s0`, `total`), an
+/// optional bare tag (the step kind), and ordered `key=value` fields,
+/// all kept verbatim so re-rendering reproduces the source bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Line {
+    /// Line id (`b<i>` / `s<i>` / `total`).
+    pub id: String,
+    /// Bare tag after the id (step kind; empty when absent).
+    pub tag: String,
+    /// Ordered `key=value` fields.
+    pub fields: Vec<(String, String)>,
+}
+
+impl Line {
+    fn new(id: String, tag: &str) -> Line {
+        Line { id, tag: tag.into(), fields: Vec::new() }
+    }
+
+    fn push(&mut self, key: &str, value: String) {
+        self.fields.push((key.into(), value));
+    }
+
+    /// The value of field `key`, if present.
+    pub fn field(&self, key: &str) -> Option<&str> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn render(&self) -> String {
+        let mut s = self.id.clone();
+        if !self.tag.is_empty() {
+            s.push(' ');
+            s.push_str(&self.tag);
+        }
+        for (k, v) in &self.fields {
+            s.push(' ');
+            s.push_str(k);
+            s.push('=');
+            s.push_str(v);
+        }
+        s
+    }
+
+    fn parse(text: &str, want_tag: bool) -> Result<Line> {
+        let mut toks = text.split_whitespace();
+        let id = toks.next().context("empty line where an entry was expected")?.to_string();
+        let mut line = Line::new(id, "");
+        for (i, tok) in toks.enumerate() {
+            match tok.split_once('=') {
+                Some((k, v)) => line.push(k, v.into()),
+                None if i == 0 && want_tag && line.id != "total" => line.tag = tok.into(),
+                None => bail!("stray token '{tok}' in line '{text}'"),
+            }
+        }
+        Ok(line)
+    }
+}
+
+/// A parsed textual plan: the header fields plus the three body
+/// sections, with every line's tokens preserved verbatim (so
+/// [`PlanText::render`] of a [`PlanText::parse`] result is
+/// byte-identical to the source).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanText {
+    /// Model name (`plan` header line).
+    pub name: String,
+    /// Fusion token (`none` / `pair` / `full`).
+    pub fusion: String,
+    /// Kernel-path token (`scalar` / `blocked`).
+    pub kernels: String,
+    /// Input wiring: `b<i> <shape>`.
+    pub input: String,
+    /// Output wiring: `b<i> <shape>`.
+    pub output: String,
+    /// Buffer lines (`b<i> len=... writers=... readers=...`).
+    pub buffers: Vec<Line>,
+    /// Step lines (`s<i> <kind> ...`).
+    pub steps: Vec<Line>,
+    /// Memory lines (`s<i> <kind> ...` plus the trailing `total`).
+    pub memory: Vec<Line>,
+}
+
+impl PlanText {
+    /// Build the structured text of a compiled plan (the typed form
+    /// behind [`Plan::to_text`]).
+    pub fn of(plan: &Plan) -> PlanText {
+        let fusion = match plan.fusion {
+            Fusion::None => "none",
+            Fusion::Pair => "pair",
+            Fusion::Full => "full",
+        };
+        let kernels = match plan.kernel_path {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Blocked => "blocked",
+        };
+
+        // Buffer liveness: which steps write/read each pool buffer.
+        let nbufs = plan.buf_lens.len();
+        let mut writers: Vec<Vec<usize>> = vec![Vec::new(); nbufs];
+        let mut readers: Vec<Vec<usize>> = vec![Vec::new(); nbufs];
+        for (i, s) in plan.steps.iter().enumerate() {
+            for &b in &s.inputs {
+                if readers[b].last() != Some(&i) {
+                    readers[b].push(i);
+                }
+            }
+            writers[s.out].push(i);
+        }
+        let buffers = (0..nbufs)
+            .map(|b| {
+                let mut line = Line::new(format!("b{b}"), "");
+                line.push("len", plan.buf_lens[b].to_string());
+                line.push("writers", list_token(writers[b].iter().map(|s| format!("s{s}"))));
+                line.push("readers", list_token(readers[b].iter().map(|s| format!("s{s}"))));
+                line
+            })
+            .collect();
+
+        let steps = plan.steps.iter().enumerate().map(|(i, s)| step_line(plan, i, s)).collect();
+
+        let report = plan.memory_report();
+        let mut memory: Vec<Line> = report
+            .steps
+            .iter()
+            .map(|m| {
+                let mut line = Line::new(format!("s{}", m.index), m.kind);
+                push_mem_fields(
+                    &mut line,
+                    m.weight_bytes,
+                    m.shared_bytes,
+                    m.panel_bytes,
+                    m.table_bytes,
+                    m.baseline_bytes,
+                );
+                line
+            })
+            .collect();
+        let mut total = Line::new("total".into(), "");
+        push_mem_fields(
+            &mut total,
+            report.weight_bytes(),
+            report.shared_bytes(),
+            report.panel_bytes(),
+            report.table_bytes(),
+            report.baseline_bytes(),
+        );
+        memory.push(total);
+
+        PlanText {
+            name: plan.model_name.clone(),
+            fusion: fusion.into(),
+            kernels: kernels.into(),
+            input: format!("b{} {}", plan.input_buf, shape_token(&plan.input_shape)),
+            output: format!("b{} {}", plan.output_buf, shape_token(&plan.output_shape)),
+            buffers,
+            steps,
+            memory,
+        }
+    }
+
+    /// Render the canonical text (see the module docs for the grammar
+    /// and determinism rules).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("plan {}\n", self.name));
+        out.push_str(&format!("fusion {}\n", self.fusion));
+        out.push_str(&format!("kernels {}\n", self.kernels));
+        out.push_str(&format!("input {}\n", self.input));
+        out.push_str(&format!("output {}\n", self.output));
+        out.push_str(&format!("\nbuffers {}\n", self.buffers.len()));
+        for b in &self.buffers {
+            out.push_str(&b.render());
+            out.push('\n');
+        }
+        out.push_str(&format!("\nsteps {}\n", self.steps.len()));
+        for s in &self.steps {
+            out.push_str(&s.render());
+            out.push('\n');
+        }
+        out.push_str("\nmemory\n");
+        for m in &self.memory {
+            out.push_str(&m.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a rendered plan back into its structured form. Tokens are
+    /// preserved verbatim, so `parse(text).render() == text` for any
+    /// text this module rendered.
+    pub fn parse(text: &str) -> Result<PlanText> {
+        fn header(lines: &mut std::str::Lines<'_>, key: &str) -> Result<String> {
+            let line = lines.next().with_context(|| format!("missing '{key}' header"))?;
+            line.strip_prefix(key)
+                .and_then(|rest| rest.strip_prefix(' '))
+                .map(str::to_string)
+                .with_context(|| format!("expected '{key} ...', got '{line}'"))
+        }
+        /// Consume the blank separator plus the `<keyword> <n>` (or bare
+        /// `<keyword>`) section line, returning the count if present.
+        fn section(lines: &mut std::str::Lines<'_>, keyword: &str) -> Result<Option<usize>> {
+            match lines.next() {
+                Some("") => {}
+                other => bail!("expected blank line before '{keyword}', got {other:?}"),
+            }
+            let line = lines.next().with_context(|| format!("missing '{keyword}' section"))?;
+            if line == keyword {
+                return Ok(None); // uncounted section
+            }
+            let n = line
+                .strip_prefix(keyword)
+                .and_then(|rest| rest.strip_prefix(' '))
+                .and_then(|n| n.parse::<usize>().ok())
+                .with_context(|| format!("expected '{keyword} <n>', got '{line}'"))?;
+            Ok(Some(n))
+        }
+
+        let mut lines = text.lines();
+        let name = header(&mut lines, "plan")?;
+        let fusion = header(&mut lines, "fusion")?;
+        let kernels = header(&mut lines, "kernels")?;
+        let input = header(&mut lines, "input")?;
+        let output = header(&mut lines, "output")?;
+
+        let nbufs = section(&mut lines, "buffers")?.context("'buffers' needs a count")?;
+        let mut buffers = Vec::with_capacity(nbufs);
+        for _ in 0..nbufs {
+            buffers.push(Line::parse(lines.next().context("truncated buffers section")?, false)?);
+        }
+        let nsteps = section(&mut lines, "steps")?.context("'steps' needs a count")?;
+        let mut steps = Vec::with_capacity(nsteps);
+        for _ in 0..nsteps {
+            steps.push(Line::parse(lines.next().context("truncated steps section")?, true)?);
+        }
+        if section(&mut lines, "memory")?.is_some() {
+            bail!("'memory' section carries no count");
+        }
+        let mut memory = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                bail!("unexpected blank line inside the memory section");
+            }
+            memory.push(Line::parse(line, true)?);
+        }
+        match memory.last() {
+            Some(total) if total.id == "total" => {}
+            _ => bail!("memory section must end with a 'total' line"),
+        }
+        Ok(PlanText { name, fusion, kernels, input, output, buffers, steps, memory })
+    }
+}
+
+/// Append the memory-report fields shared by per-step and total lines.
+fn push_mem_fields(
+    line: &mut Line,
+    weights: usize,
+    shared: usize,
+    panel: usize,
+    table: usize,
+    baseline: usize,
+) {
+    line.push("weights", weights.to_string());
+    line.push("shared", shared.to_string());
+    line.push("panel", panel.to_string());
+    line.push("table", table.to_string());
+    line.push("resident", (weights + panel + table).to_string());
+    line.push("baseline", baseline.to_string());
+}
+
+/// Render one step line (wiring + geometry + kind-specific attributes).
+fn step_line(plan: &Plan, i: usize, s: &super::Step) -> Line {
+    let mut line = Line::new(format!("s{i}"), s.kind.name());
+    line.push("in", list_token(s.inputs.iter().map(|b| format!("b{b}"))));
+    line.push("out", format!("b{}", s.out));
+    line.push("in_shapes", list_token(s.in_shapes.iter().map(|sh| shape_token(sh))));
+    line.push("out_shape", shape_token(&s.out_shape));
+    line.push("act", act_token(s.fused_act));
+    line.push("layers", format!("{}..{}", s.layer_range.0, s.layer_range.1));
+    line.push("deps", list_token(plan.deps[i].iter().map(|d| format!("s{d}"))));
+    let lower = match &plan.blocked[i] {
+        None => "-",
+        Some(BlockedStep::Dense(_)) => "panel",
+        Some(BlockedStep::Conv(_)) => "im2col",
+        Some(BlockedStep::Depthwise(_)) => "taps",
+        Some(BlockedStep::AvgPool(_)) => "pool",
+    };
+    line.push("lower", lower.into());
+    match &s.kind {
+        StepKind::Dense { w, b } => {
+            let (m, n) = w.dims();
+            line.push("w", format!("{m}x{n}"));
+            let wsrc = match w {
+                DenseWeights::Tensor(sw) if sw.folded() => "folded",
+                DenseWeights::Tensor(_) => "shared",
+                DenseWeights::PanelOnly { .. } => "panel",
+            };
+            line.push("wsrc", wsrc.into());
+            line.push("params", (m * n + b.len()).to_string());
+        }
+        StepKind::Conv2D { kernel, bias, stride, padding } => {
+            line.push("k", shape_token(kernel.shape()));
+            line.push("stride", stride.to_string());
+            line.push("pad", padding.as_str().into());
+            line.push("wsrc", if kernel.folded() { "folded" } else { "shared" }.into());
+            line.push("params", (kernel.len() + bias.len()).to_string());
+        }
+        StepKind::DepthwiseConv2D { kernel, bias, stride, padding } => {
+            line.push("k", shape_token(kernel.shape()));
+            line.push("stride", stride.to_string());
+            line.push("pad", padding.as_str().into());
+            line.push("wsrc", if kernel.folded() { "folded" } else { "shared" }.into());
+            line.push("params", (kernel.len() + bias.len()).to_string());
+        }
+        StepKind::MaxPool2D { ph, pw } | StepKind::AvgPool2D { ph, pw } => {
+            line.push("window", format!("{ph}x{pw}"));
+        }
+        StepKind::BatchNorm { gamma, beta, mean, variance, eps } => {
+            line.push("c", gamma.len().to_string());
+            line.push("eps", eps.to_string());
+            line.push(
+                "params",
+                (gamma.len() + beta.len() + mean.len() + variance.len()).to_string(),
+            );
+        }
+        StepKind::Act(Act::LeakyRelu { alpha }) => line.push("alpha", alpha.to_string()),
+        StepKind::Concat { rows, widths } => {
+            line.push("rows", rows.to_string());
+            line.push("widths", list_token(widths.iter().map(|w| w.to_string())));
+        }
+        StepKind::Flatten
+        | StepKind::Act(_)
+        | StepKind::Softmax
+        | StepKind::Add => {}
+    }
+    line
+}
+
+/// Per-step resident-bytes breakdown (all in bytes; see the module docs
+/// for the field semantics).
+#[derive(Clone, Copy, Debug)]
+pub struct StepMemory {
+    /// Step index.
+    pub index: usize,
+    /// Step kind tag.
+    pub kind: &'static str,
+    /// Parameter bytes the plan owns (folded weight copies, biases,
+    /// batch-norm vectors).
+    pub weight_bytes: usize,
+    /// Weight-tensor bytes `Arc`-shared with the model's layers — kept
+    /// alive by the model anyway, so not charged to `resident`.
+    pub shared_bytes: usize,
+    /// Packed dense-panel bytes ([`super::gemm::DensePanel`]).
+    pub panel_bytes: usize,
+    /// im2col / tap-table bytes.
+    pub table_bytes: usize,
+    /// What the pre-diet layout would hold resident for this step:
+    /// every parameter cloned plus full per-pixel conv tables.
+    pub baseline_bytes: usize,
+}
+
+impl StepMemory {
+    /// Plan-owned resident bytes: `weights + panel + table`.
+    pub fn resident_bytes(&self) -> usize {
+        self.weight_bytes + self.panel_bytes + self.table_bytes
+    }
+}
+
+/// The per-step memory accounting of one compiled plan
+/// ([`Plan::memory_report`]); printed as the `memory` section of the
+/// textual IR.
+#[derive(Clone, Debug)]
+pub struct MemoryReport {
+    /// Per-step breakdown, index-aligned with the plan's step list.
+    pub steps: Vec<StepMemory>,
+}
+
+impl MemoryReport {
+    /// Total plan-owned parameter bytes.
+    pub fn weight_bytes(&self) -> usize {
+        self.steps.iter().map(|s| s.weight_bytes).sum()
+    }
+
+    /// Total `Arc`-shared (layer-owned) weight bytes.
+    pub fn shared_bytes(&self) -> usize {
+        self.steps.iter().map(|s| s.shared_bytes).sum()
+    }
+
+    /// Total packed dense-panel bytes.
+    pub fn panel_bytes(&self) -> usize {
+        self.steps.iter().map(|s| s.panel_bytes).sum()
+    }
+
+    /// Total im2col/tap-table bytes.
+    pub fn table_bytes(&self) -> usize {
+        self.steps.iter().map(|s| s.table_bytes).sum()
+    }
+
+    /// Total plan-owned resident bytes.
+    pub fn resident_bytes(&self) -> usize {
+        self.steps.iter().map(|s| s.resident_bytes()).sum()
+    }
+
+    /// Total pre-diet baseline bytes.
+    pub fn baseline_bytes(&self) -> usize {
+        self.steps.iter().map(|s| s.baseline_bytes).sum()
+    }
+}
+
+impl Plan {
+    /// Render the canonical textual IR (see the [module docs](self) for
+    /// the grammar): header, buffer pool with liveness, steps with
+    /// wiring/geometry/hazard edges, and the memory report. Two
+    /// compiles of the same model at the same configuration render
+    /// byte-identically.
+    ///
+    /// ```
+    /// use rigor::model::zoo;
+    /// use rigor::plan::{Fusion, Plan, PlanText};
+    ///
+    /// let plan = Plan::build(&zoo::tiny_mlp(1), Fusion::Pair)?;
+    /// let text = plan.to_text();
+    /// assert!(text.starts_with("plan tiny_mlp\nfusion pair\n"));
+    /// // The parser round-trips the rendering byte-identically.
+    /// assert_eq!(PlanText::parse(&text)?.render(), text);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn to_text(&self) -> String {
+        PlanText::of(self).render()
+    }
+
+    /// Per-step memory accounting: what this plan keeps resident
+    /// (owned parameters, packed panels, gather tables), what it shares
+    /// with the model's layers, and what the pre-diet layout would have
+    /// held. See the [module docs](self) for field semantics.
+    pub fn memory_report(&self) -> MemoryReport {
+        let steps = self
+            .steps
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let (mut weight, mut shared) = (0usize, 0usize);
+                match &s.kind {
+                    StepKind::Dense { w, b } => {
+                        match w {
+                            DenseWeights::Tensor(sw) if sw.folded() => weight += sw.param_bytes(),
+                            DenseWeights::Tensor(sw) => shared += sw.param_bytes(),
+                            DenseWeights::PanelOnly { .. } => {}
+                        }
+                        weight += b.len() * F64B;
+                    }
+                    StepKind::Conv2D { kernel, bias, .. }
+                    | StepKind::DepthwiseConv2D { kernel, bias, .. } => {
+                        if kernel.folded() {
+                            weight += kernel.param_bytes();
+                        } else {
+                            shared += kernel.param_bytes();
+                        }
+                        weight += bias.len() * F64B;
+                    }
+                    StepKind::BatchNorm { gamma, beta, mean, variance, .. } => {
+                        weight +=
+                            (gamma.len() + beta.len() + mean.len() + variance.len()) * F64B;
+                    }
+                    _ => {}
+                }
+                let (panel, table, full_table) = match &self.blocked[i] {
+                    Some(BlockedStep::Dense(pd)) => (pd.panel_bytes(), 0, 0),
+                    Some(BlockedStep::Conv(ic)) => (0, ic.table_bytes(), ic.full_table_bytes()),
+                    Some(BlockedStep::Depthwise(dw)) => (0, dw.table_bytes(), dw.table_bytes()),
+                    Some(BlockedStep::AvgPool(pt)) => (0, pt.table_bytes(), pt.table_bytes()),
+                    None => (0, 0, 0),
+                };
+                // Pre-diet: every parameter cloned into the step, full
+                // per-pixel conv tables, same panels.
+                let baseline = match &s.kind {
+                    StepKind::Dense { w, b } => {
+                        let (m, n) = w.dims();
+                        (m * n + b.len()) * F64B + panel
+                    }
+                    StepKind::Conv2D { kernel, bias, .. }
+                    | StepKind::DepthwiseConv2D { kernel, bias, .. } => {
+                        (kernel.len() + bias.len()) * F64B + full_table
+                    }
+                    _ => weight + table,
+                };
+                StepMemory {
+                    index: i,
+                    kind: s.kind.name(),
+                    weight_bytes: weight,
+                    shared_bytes: shared,
+                    panel_bytes: panel,
+                    table_bytes: table,
+                    baseline_bytes: baseline,
+                }
+            })
+            .collect();
+        MemoryReport { steps }
+    }
+}
+
+/// Which body section of the textual IR an [`Edit`] refers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Section {
+    /// The buffer-pool section.
+    Buffers,
+    /// The step list.
+    Steps,
+    /// The memory report.
+    Memory,
+}
+
+impl std::fmt::Display for Section {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Section::Buffers => "buffer",
+            Section::Steps => "step",
+            Section::Memory => "memory",
+        })
+    }
+}
+
+/// One structural mismatch between two textual plans — the unit the
+/// golden suite reports instead of a raw text diff.
+#[derive(Clone, Debug)]
+pub enum Edit {
+    /// A header field (`plan`/`fusion`/`kernels`/`input`/`output`)
+    /// differs.
+    Header {
+        /// Header keyword.
+        field: String,
+        /// Old value.
+        old: String,
+        /// New value.
+        new: String,
+    },
+    /// A line exists only in the old plan.
+    Removed {
+        /// Section the line belonged to.
+        section: Section,
+        /// The removed line, rendered.
+        line: String,
+    },
+    /// A line exists only in the new plan.
+    Added {
+        /// Section the line belongs to.
+        section: Section,
+        /// The added line, rendered.
+        line: String,
+    },
+    /// Two corresponding lines differ in specific fields.
+    Changed {
+        /// Section the lines belong to.
+        section: Section,
+        /// Id of the old line (ids can shift when steps are
+        /// inserted/removed; pairing is structural, not positional).
+        id: String,
+        /// `(field, old, new)` per differing field (`-` = absent).
+        fields: Vec<(String, String, String)>,
+    },
+}
+
+impl std::fmt::Display for Edit {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Edit::Header { field, old, new } => {
+                write!(f, "header {field}: '{old}' -> '{new}'")
+            }
+            Edit::Removed { section, line } => write!(f, "{section} removed: {line}"),
+            Edit::Added { section, line } => write!(f, "{section} added: {line}"),
+            Edit::Changed { section, id, fields } => {
+                write!(f, "{section} {id} changed:")?;
+                for (field, old, new) in fields {
+                    write!(f, " {field} {old} -> {new};")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Field-level differences between two matched lines (tag included as
+/// the pseudo-field `kind`).
+fn field_changes(old: &Line, new: &Line) -> Vec<(String, String, String)> {
+    let mut out = Vec::new();
+    if old.tag != new.tag {
+        out.push(("kind".into(), old.tag.clone(), new.tag.clone()));
+    }
+    for (k, ov) in &old.fields {
+        match new.field(k) {
+            Some(nv) if nv == ov => {}
+            Some(nv) => out.push((k.clone(), ov.clone(), nv.into())),
+            None => out.push((k.clone(), ov.clone(), "-".into())),
+        }
+    }
+    for (k, nv) in &new.fields {
+        if old.field(k).is_none() {
+            out.push((k.clone(), "-".into(), nv.clone()));
+        }
+    }
+    out
+}
+
+/// Diff two sections whose line ids are stable (buffers, memory): match
+/// by id, compare fields.
+fn diff_by_id(section: Section, old: &[Line], new: &[Line], edits: &mut Vec<Edit>) {
+    for o in old {
+        match new.iter().find(|n| n.id == o.id) {
+            None => edits.push(Edit::Removed { section, line: o.render() }),
+            Some(n) => {
+                let fields = field_changes(o, n);
+                if !fields.is_empty() {
+                    edits.push(Edit::Changed { section, id: o.id.clone(), fields });
+                }
+            }
+        }
+    }
+    for n in new {
+        if !old.iter().any(|o| o.id == n.id) {
+            edits.push(Edit::Added { section, line: n.render() });
+        }
+    }
+}
+
+/// Diff the step lists structurally: longest-common-subsequence over
+/// identical lines anchors the unchanged steps, then each unmatched run
+/// pairs old/new steps of the same kind in order (reported as
+/// field-level [`Edit::Changed`]) and the leftovers become
+/// [`Edit::Added`]/[`Edit::Removed`]. Step ids shifting under an
+/// insertion therefore do not cascade into noise: a de-fused step shows
+/// up as one changed step plus one added step.
+fn diff_steps(old: &[Line], new: &[Line], edits: &mut Vec<Edit>) {
+    // LCS table over full line equality.
+    let (n, m) = (old.len(), new.len());
+    let mut lcs = vec![vec![0usize; m + 1]; n + 1];
+    for i in (0..n).rev() {
+        for j in (0..m).rev() {
+            lcs[i][j] = if line_matches(&old[i], &new[j]) {
+                lcs[i + 1][j + 1] + 1
+            } else {
+                lcs[i + 1][j].max(lcs[i][j + 1])
+            };
+        }
+    }
+    // Walk the table, collecting unmatched runs.
+    let (mut i, mut j) = (0, 0);
+    let mut pending_old: Vec<&Line> = Vec::new();
+    let mut pending_new: Vec<&Line> = Vec::new();
+    let flush =
+        |pending_old: &mut Vec<&Line>, pending_new: &mut Vec<&Line>, edits: &mut Vec<Edit>| {
+            // Pair same-kind steps in order; leftovers are adds/removes.
+            let mut unused_new: Vec<Option<&Line>> =
+                pending_new.drain(..).map(Some).collect();
+            for o in pending_old.drain(..) {
+                let slot = unused_new
+                    .iter_mut()
+                    .find(|slot| slot.is_some_and(|l| l.tag == o.tag));
+                match slot {
+                    Some(slot) => {
+                        let l = slot.take().expect("checked is_some above");
+                        let fields = field_changes(o, l);
+                        if !fields.is_empty() {
+                            edits.push(Edit::Changed {
+                                section: Section::Steps,
+                                id: o.id.clone(),
+                                fields,
+                            });
+                        }
+                    }
+                    None => {
+                        edits.push(Edit::Removed { section: Section::Steps, line: o.render() })
+                    }
+                }
+            }
+            for l in unused_new.into_iter().flatten() {
+                edits.push(Edit::Added { section: Section::Steps, line: l.render() });
+            }
+        };
+    while i < n && j < m {
+        if line_matches(&old[i], &new[j]) {
+            flush(&mut pending_old, &mut pending_new, edits);
+            i += 1;
+            j += 1;
+        } else if lcs[i + 1][j] >= lcs[i][j + 1] {
+            pending_old.push(&old[i]);
+            i += 1;
+        } else {
+            pending_new.push(&new[j]);
+            j += 1;
+        }
+    }
+    pending_old.extend(old[i..].iter());
+    pending_new.extend(new[j..].iter());
+    flush(&mut pending_old, &mut pending_new, edits);
+}
+
+/// Anchor equality for the step LCS: identical tag and fields. The id
+/// is deliberately ignored so a pure renumbering (steps shifted by an
+/// insertion above them) still anchors.
+fn line_matches(a: &Line, b: &Line) -> bool {
+    a.tag == b.tag && a.fields == b.fields
+}
+
+/// Structurally compare two textual plans, reporting per-header,
+/// per-buffer, per-step and per-memory-line edits (empty = identical up
+/// to step renumbering). The golden suite prints these instead of a
+/// text dump.
+pub fn diff(old: &PlanText, new: &PlanText) -> Vec<Edit> {
+    let mut edits = Vec::new();
+    let headers = [
+        ("plan", &old.name, &new.name),
+        ("fusion", &old.fusion, &new.fusion),
+        ("kernels", &old.kernels, &new.kernels),
+        ("input", &old.input, &new.input),
+        ("output", &old.output, &new.output),
+    ];
+    for (field, o, n) in headers {
+        if o != n {
+            edits.push(Edit::Header { field: field.into(), old: o.clone(), new: n.clone() });
+        }
+    }
+    diff_by_id(Section::Buffers, &old.buffers, &new.buffers, &mut edits);
+    diff_steps(&old.steps, &new.steps, &mut edits);
+    diff_by_id(Section::Memory, &old.memory, &new.memory, &mut edits);
+    edits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn render_parse_round_trips_across_zoo_and_configs() {
+        for model in [
+            zoo::tiny_mlp(1),
+            zoo::tiny_cnn(2),
+            zoo::avgpool_cnn(3),
+            zoo::residual_mlp(4),
+            zoo::residual_cnn(5),
+        ] {
+            for fusion in [Fusion::None, Fusion::Pair, Fusion::Full] {
+                for kernels in [KernelPath::Scalar, KernelPath::Blocked] {
+                    let plan = Plan::build_with_kernels(&model, fusion, kernels).unwrap();
+                    let text = plan.to_text();
+                    let parsed = PlanText::parse(&text).unwrap();
+                    assert_eq!(parsed.render(), text, "{} {fusion:?} {kernels:?}", model.name);
+                    assert!(diff(&parsed, &PlanText::of(&plan)).is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn consecutive_compiles_render_byte_identically() {
+        for seed in [7, 8] {
+            let model = zoo::residual_cnn(seed);
+            let a = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+            let b = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+            assert_eq!(a.to_text(), b.to_text());
+        }
+    }
+
+    #[test]
+    fn differ_reports_defusion_as_step_level_edits() {
+        // Hand-introduced de-fusion: the paired plan fuses activations
+        // the unfused plan keeps as standalone steps. The differ must
+        // report changed/added steps, not a wall of renumbering noise.
+        let model = zoo::tiny_mlp(3);
+        let fused = PlanText::of(&Plan::build(&model, Fusion::Pair).unwrap());
+        let unfused = PlanText::of(&Plan::build(&model, Fusion::None).unwrap());
+        let edits = diff(&fused, &unfused);
+        assert!(!edits.is_empty());
+        let changed_act = edits.iter().any(|e| match e {
+            Edit::Changed { section: Section::Steps, fields, .. } => {
+                fields.iter().any(|(f, o, _)| f == "act" && o == "relu")
+            }
+            _ => false,
+        });
+        let added_relu = edits.iter().any(
+            |e| matches!(e, Edit::Added { section: Section::Steps, line } if line.contains("relu")),
+        );
+        assert!(changed_act, "de-fused step must surface as an act change: {edits:?}");
+        assert!(added_relu, "standalone activation must surface as an added step: {edits:?}");
+        // And identical plans diff clean.
+        assert!(diff(&fused, &fused).is_empty());
+    }
+
+    #[test]
+    fn memory_report_totals_match_text_total_line() {
+        let model = zoo::residual_cnn(9);
+        let plan = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+        let report = plan.memory_report();
+        let text = PlanText::of(&plan);
+        let total = text.memory.last().unwrap();
+        assert_eq!(total.field("resident").unwrap(), report.resident_bytes().to_string());
+        assert_eq!(total.field("baseline").unwrap(), report.baseline_bytes().to_string());
+        assert!(report.baseline_bytes() >= 2 * report.resident_bytes());
+    }
+}

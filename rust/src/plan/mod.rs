@@ -76,13 +76,17 @@
 //! computation. See DESIGN.md "Kernel dispatch".
 
 mod exec;
+pub mod ir;
 
 pub use exec::{Arena, TileScratch};
+pub use ir::{diff, Edit, MemoryReport, PlanText, StepMemory};
 
 use crate::layers::{gemm, Layer, Padding};
 use crate::model::Model;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
+use std::borrow::Cow;
+use std::sync::Arc;
 
 /// Which kernel family the executor drives a plan's compute steps with.
 ///
@@ -243,6 +247,28 @@ impl std::fmt::Display for ServeFormat {
     }
 }
 
+impl std::str::FromStr for ServeFormat {
+    type Err = anyhow::Error;
+
+    /// Parse the [`Display`](std::fmt::Display) form back: `f64` or
+    /// `emu-k<k>` (e.g. `emu-k12`) — the tags golden snapshot names and
+    /// the CLI `plan --format` flag use.
+    fn from_str(s: &str) -> Result<ServeFormat> {
+        let fmt = match s {
+            "f64" => ServeFormat::F64,
+            _ => {
+                let k = s
+                    .strip_prefix("emu-k")
+                    .and_then(|k| k.parse::<u32>().ok())
+                    .ok_or_else(|| anyhow::anyhow!("unknown serve format '{s}' (f64 | emu-k<k>)"))?;
+                ServeFormat::Emulated { k }
+            }
+        };
+        fmt.validate()?;
+        Ok(fmt)
+    }
+}
+
 /// Index of a buffer in the plan's pool (and in the executing
 /// [`Arena`]'s buffer vector).
 pub type BufId = usize;
@@ -280,21 +306,123 @@ pub enum Act {
     Sigmoid,
 }
 
-/// What a step computes. Parameters are owned (folded copies where fusion
-/// rewrote them), so a plan is self-contained and shareable via `Arc`.
+/// A weight tensor carried by a compiled step — the plan memory diet's
+/// unit of accounting. Freshly lowered steps *share* the model layer's
+/// tensor (an `Arc` refcount bump, no copy); a fusion pass that must
+/// rewrite the weights (batch-norm folding) first detaches a private
+/// copy via `make_mut` (copy-on-write) and marks the
+/// weights `folded`, so provenance stays explicit and the model's own
+/// parameters are never mutated.
+#[derive(Clone, Debug)]
+pub struct StepWeights {
+    tensor: Arc<Tensor<f64>>,
+    folded: bool,
+}
+
+impl StepWeights {
+    /// Wrap a layer's weight tensor, sharing storage with it.
+    pub fn shared(tensor: Arc<Tensor<f64>>) -> StepWeights {
+        StepWeights { tensor, folded: false }
+    }
+
+    /// Whether fusion rewrote these weights (they are a plan-private
+    /// copy, no longer the layer's storage).
+    pub fn folded(&self) -> bool {
+        self.folded
+    }
+
+    /// The weight tensor.
+    pub fn tensor(&self) -> &Tensor<f64> {
+        &self.tensor
+    }
+
+    /// Whether these weights still share storage with `layer_tensor`.
+    pub fn shares(&self, layer_tensor: &Arc<Tensor<f64>>) -> bool {
+        Arc::ptr_eq(&self.tensor, layer_tensor)
+    }
+
+    /// Mutable access for a fusion rewrite: detaches a private copy if
+    /// the storage is shared (copy-on-write) and marks the weights
+    /// folded.
+    fn make_mut(&mut self) -> &mut Tensor<f64> {
+        self.folded = true;
+        Arc::make_mut(&mut self.tensor)
+    }
+
+    /// Resident parameter bytes ([`Plan::memory_report`] accounting);
+    /// charged to the plan only when [`StepWeights::folded`].
+    pub fn param_bytes(&self) -> usize {
+        self.tensor.len() * std::mem::size_of::<f64>()
+    }
+}
+
+impl std::ops::Deref for StepWeights {
+    type Target = Tensor<f64>;
+
+    fn deref(&self) -> &Tensor<f64> {
+        &self.tensor
+    }
+}
+
+/// A dense step's weight storage. Blocked plans drop the row-major
+/// tensor entirely when folding already forced a private copy — the
+/// packed [`gemm::DensePanel`] holds the exact same `f64` values (packing
+/// only permutes them), and the scalar-path escape hatch derives its
+/// view on demand via [`gemm::DensePanel::unpack`]. Shared (unfolded)
+/// weights keep the tensor: it costs nothing (the layer owns it anyway).
+#[derive(Clone, Debug)]
+pub enum DenseWeights {
+    /// Row-major `[m, n]` weights, shared with the layer or a folded
+    /// private copy (see [`StepWeights`]).
+    Tensor(StepWeights),
+    /// The weights live only in this step's packed panel (the blocked
+    /// step data at the same index). Only folded weights of blocked
+    /// plans take this form.
+    PanelOnly {
+        /// Output units (weight rows).
+        m: usize,
+        /// Input features (weight columns).
+        n: usize,
+    },
+}
+
+impl DenseWeights {
+    /// The tensor-backed weights, unless the diet dropped them to
+    /// panel-only form.
+    pub fn as_tensor(&self) -> Option<&StepWeights> {
+        match self {
+            DenseWeights::Tensor(sw) => Some(sw),
+            DenseWeights::PanelOnly { .. } => None,
+        }
+    }
+
+    /// Weight matrix dimensions `(m, n)` (`[units, in]`).
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            DenseWeights::Tensor(sw) => (sw.shape()[0], sw.shape()[1]),
+            DenseWeights::PanelOnly { m, n } => (*m, *n),
+        }
+    }
+}
+
+/// What a step computes. Parameters are owned or `Arc`-shared with the
+/// model's layers (folded private copies only where fusion rewrote them
+/// — see [`StepWeights`]), so a plan is self-contained and shareable via
+/// `Arc`.
 #[derive(Clone, Debug)]
 pub enum StepKind {
     /// `y = W x + b`, `w: [units, in]`.
     Dense {
-        /// Weight matrix `[units, in]`.
-        w: Tensor<f64>,
+        /// Weight matrix `[units, in]` (possibly panel-only, see
+        /// [`DenseWeights`]).
+        w: DenseWeights,
         /// Bias vector `[units]`.
         b: Vec<f64>,
     },
     /// 2-D convolution, kernel `[kh, kw, cin, cout]`.
     Conv2D {
         /// Convolution kernel `[kh, kw, cin, cout]` (Keras layout).
-        kernel: Tensor<f64>,
+        kernel: StepWeights,
         /// Per-output-channel bias.
         bias: Vec<f64>,
         /// Spatial stride (same both axes).
@@ -305,7 +433,7 @@ pub enum StepKind {
     /// Depthwise 2-D convolution, kernel `[kh, kw, c]`.
     DepthwiseConv2D {
         /// Depthwise kernel `[kh, kw, c]`.
-        kernel: Tensor<f64>,
+        kernel: StepWeights,
         /// Per-channel bias.
         bias: Vec<f64>,
         /// Spatial stride (same both axes).
@@ -621,9 +749,9 @@ impl Plan {
             KernelPath::Blocked => steps
                 .iter()
                 .map(|s| match &s.kind {
-                    StepKind::Dense { w, .. } => {
-                        Some(BlockedStep::Dense(gemm::DensePanel::pack(w)))
-                    }
+                    StepKind::Dense { w, .. } => Some(BlockedStep::Dense(gemm::DensePanel::pack(
+                        w.as_tensor().expect("dense weights tensor-backed before lowering"),
+                    ))),
                     StepKind::Conv2D { kernel, stride, padding, .. } => {
                         Some(BlockedStep::Conv(gemm::Im2col::build(
                             kernel.shape(),
@@ -649,6 +777,22 @@ impl Plan {
                 })
                 .collect(),
         };
+
+        // Memory diet, dense steps: a fold-rewritten weight tensor lives
+        // nowhere else (the layer kept its original parameters), and the
+        // panel just built holds the exact same `f64` values — drop the
+        // redundant row-major copy and let the scalar-path escape hatch
+        // derive its view on demand ([`Plan::scalar_dense_w`]).
+        if kernels == KernelPath::Blocked {
+            for s in &mut steps {
+                if let StepKind::Dense { w, .. } = &mut s.kind {
+                    if w.as_tensor().is_some_and(StepWeights::folded) {
+                        let (m, n) = w.dims();
+                        *w = DenseWeights::PanelOnly { m, n };
+                    }
+                }
+            }
+        }
 
         let deps = compute_deps(&steps, buf_lens.len(), input_buf);
 
@@ -695,6 +839,22 @@ impl Plan {
             ServeFormat::F64 => Plan::for_reference(model),
             ServeFormat::Emulated { .. } => Plan::unfused(model),
         }
+    }
+
+    /// [`Plan::for_format`] with an explicit kernel family (bypassing the
+    /// `RIGOR_FORCE_SCALAR` env check) — what the golden snapshot suite
+    /// and the CLI `plan` command use to pin both axes deterministically.
+    pub fn for_format_with_kernels(
+        model: &Model,
+        format: ServeFormat,
+        kernels: KernelPath,
+    ) -> Result<Plan> {
+        format.validate()?;
+        let fusion = match format {
+            ServeFormat::F64 => Fusion::Full,
+            ServeFormat::Emulated { .. } => Fusion::None,
+        };
+        Plan::build_with_kernels(model, fusion, kernels)
     }
 
     /// Name of the compiled model.
@@ -787,6 +947,29 @@ impl Plan {
     pub fn output_buf(&self) -> BufId {
         self.output_buf
     }
+
+    /// The row-major weight view for a scalar-path dense execution of
+    /// step `idx`: borrowed straight from the step when tensor-backed,
+    /// reconstructed exactly from the packed panel
+    /// ([`gemm::DensePanel::unpack`]) when the diet dropped the tensor.
+    /// The unpack allocates — acceptable for what is a debugging escape
+    /// hatch on blocked plans (CAA/interval analysis plans are built at
+    /// fusion levels that never produce panel-only weights).
+    pub(crate) fn scalar_dense_w<'a>(
+        &'a self,
+        idx: usize,
+        w: &'a DenseWeights,
+    ) -> Cow<'a, Tensor<f64>> {
+        match w {
+            DenseWeights::Tensor(sw) => Cow::Borrowed(sw.tensor()),
+            DenseWeights::PanelOnly { .. } => {
+                let Some(BlockedStep::Dense(pd)) = self.blocked[idx].as_ref() else {
+                    unreachable!("panel-only dense weights imply a packed panel at the same index")
+                };
+                Cow::Owned(pd.unpack())
+            }
+        }
+    }
 }
 
 /// Compute per-step predecessor lists over the recycled buffer pool: step
@@ -829,19 +1012,25 @@ fn compute_deps(steps: &[Step], n_bufs: usize, _input_buf: BufId) -> Vec<Vec<usi
     deps
 }
 
-/// Lower one layer into its (unfused) step kind, cloning the parameters so
-/// the plan owns them. Geometry needed by merge gathers is resolved here.
+/// Lower one layer into its (unfused) step kind. Weight tensors are
+/// `Arc`-shared with the layer (refcount bump, no copy — the memory
+/// diet); small parameter vectors (biases, batch-norm statistics) are
+/// cloned so the step stays self-describing. Geometry needed by merge
+/// gathers is resolved here.
 fn lower_layer(layer: &Layer, in_shapes: &[Vec<usize>], out_shape: &[usize]) -> StepKind {
     match layer {
-        Layer::Dense { w, b } => StepKind::Dense { w: w.clone(), b: b.clone() },
+        Layer::Dense { w, b } => StepKind::Dense {
+            w: DenseWeights::Tensor(StepWeights::shared(w.clone())),
+            b: b.clone(),
+        },
         Layer::Conv2D { kernel, bias, stride, padding } => StepKind::Conv2D {
-            kernel: kernel.clone(),
+            kernel: StepWeights::shared(kernel.clone()),
             bias: bias.clone(),
             stride: *stride,
             padding: *padding,
         },
         Layer::DepthwiseConv2D { kernel, bias, stride, padding } => StepKind::DepthwiseConv2D {
-            kernel: kernel.clone(),
+            kernel: StepWeights::shared(kernel.clone()),
             bias: bias.clone(),
             stride: *stride,
             padding: *padding,
@@ -920,10 +1109,17 @@ fn fold_batch_norms(drafts: &mut Vec<DraftStep>, uses: &mut [usize]) {
         let scale: Vec<f64> =
             gamma.iter().zip(&variance).map(|(&g, &v)| g / (v + eps).sqrt()).collect();
         let prev = &mut drafts[p];
+        // `make_mut` detaches the step's weights from the layer's shared
+        // storage (copy-on-write) before the rewrite — fold-on-write is
+        // the only place a plan ever copies a weight tensor.
         match &mut prev.kind {
             StepKind::Dense { w, b } => {
-                let (m, n) = (w.shape()[0], w.shape()[1]);
-                let wd = w.data_mut();
+                let DenseWeights::Tensor(sw) = w else {
+                    unreachable!("panel-only form appears after fusion, at blocked lowering")
+                };
+                let wt = sw.make_mut();
+                let (m, n) = (wt.shape()[0], wt.shape()[1]);
+                let wd = wt.data_mut();
                 for j in 0..m {
                     for col in 0..n {
                         wd[j * n + col] *= scale[j];
@@ -932,8 +1128,9 @@ fn fold_batch_norms(drafts: &mut Vec<DraftStep>, uses: &mut [usize]) {
                 }
             }
             StepKind::Conv2D { kernel, bias, .. } => {
-                let cout = *kernel.shape().last().expect("conv kernel rank 4");
-                for (idx, v) in kernel.data_mut().iter_mut().enumerate() {
+                let kt = kernel.make_mut();
+                let cout = *kt.shape().last().expect("conv kernel rank 4");
+                for (idx, v) in kt.data_mut().iter_mut().enumerate() {
                     *v *= scale[idx % cout];
                 }
                 for co in 0..cout {
@@ -941,8 +1138,9 @@ fn fold_batch_norms(drafts: &mut Vec<DraftStep>, uses: &mut [usize]) {
                 }
             }
             StepKind::DepthwiseConv2D { kernel, bias, .. } => {
-                let c = *kernel.shape().last().expect("depthwise kernel rank 3");
-                for (idx, v) in kernel.data_mut().iter_mut().enumerate() {
+                let kt = kernel.make_mut();
+                let c = *kt.shape().last().expect("depthwise kernel rank 3");
+                for (idx, v) in kt.data_mut().iter_mut().enumerate() {
                     *v *= scale[idx % c];
                 }
                 for ch in 0..c {

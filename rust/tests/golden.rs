@@ -1,0 +1,157 @@
+//! Golden snapshot suite for the textual Plan IR.
+//!
+//! Every zoo model is compiled for every serve format the repo
+//! exercises (native `f64` and one emulated precision) and for both
+//! kernel families, then rendered with [`Plan::to_text`] and compared
+//! byte-for-byte against the checked-in snapshot in
+//! `rust/tests/golden/<model>__<format>__<kernels>.plan`.
+//!
+//! On a mismatch the failure message leads with the *structural* edit
+//! list from [`rigor::plan::diff`] — "step s3 changed: act relu -> -" —
+//! so compiler drift reads as a reviewable plan change, not a wall of
+//! text. The full actual rendering follows for context.
+//!
+//! To bless intentional changes, regenerate the snapshots in place:
+//!
+//! ```text
+//! RIGOR_BLESS=1 cargo test --test golden
+//! ```
+
+use rigor::model::{zoo, Model};
+use rigor::plan::{diff, KernelPath, Plan, PlanText, ServeFormat};
+
+use std::path::PathBuf;
+
+/// The whole zoo. Seeds only affect weight values, which the IR never
+/// prints — structure is a function of (architecture, format, kernels).
+fn zoo_models() -> Vec<Model> {
+    vec![
+        zoo::tiny_mlp(1),
+        zoo::tiny_cnn(2),
+        zoo::avgpool_cnn(3),
+        zoo::tiny_pendulum(4),
+        zoo::scaled_mlp(5, 16, 24, 5),
+        zoo::residual_mlp(6),
+        zoo::residual_cnn(7),
+    ]
+}
+
+/// Format tags double as file-name components and [`ServeFormat`]
+/// spellings: native f64 compiles at `Fusion::Full`, the emulated
+/// format at `Fusion::None` (the analysis-faithful trace).
+const FORMATS: [&str; 2] = ["f64", "emu-k12"];
+
+const KERNELS: [(KernelPath, &str); 2] =
+    [(KernelPath::Blocked, "blocked"), (KernelPath::Scalar, "scalar")];
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn bless() -> bool {
+    std::env::var("RIGOR_BLESS").as_deref() == Ok("1")
+}
+
+/// Render the plan for one (model, format, kernels) cell.
+fn render(model: &Model, format: &str, path: KernelPath) -> String {
+    let fmt: ServeFormat = format.parse().expect("format tag parses");
+    Plan::for_format_with_kernels(model, fmt, path)
+        .unwrap_or_else(|e| panic!("compile {} {format}: {e}", model.name))
+        .to_text()
+}
+
+#[test]
+fn golden_plan_ir_snapshots() {
+    let dir = golden_dir();
+    let mut failures = Vec::new();
+    for model in zoo_models() {
+        for format in FORMATS {
+            for (path, tag) in KERNELS {
+                let actual = render(&model, format, path);
+                let file = dir.join(format!("{}__{format}__{tag}.plan", model.name));
+                if bless() {
+                    std::fs::write(&file, &actual)
+                        .unwrap_or_else(|e| panic!("bless {}: {e}", file.display()));
+                    continue;
+                }
+                let expected = match std::fs::read_to_string(&file) {
+                    Ok(text) => text,
+                    Err(e) => {
+                        failures.push(format!(
+                            "missing golden {}: {e} (regenerate with RIGOR_BLESS=1)",
+                            file.display()
+                        ));
+                        continue;
+                    }
+                };
+                if expected == actual {
+                    continue;
+                }
+                let old = PlanText::parse(&expected)
+                    .unwrap_or_else(|e| panic!("golden {} unparseable: {e}", file.display()));
+                let new = PlanText::parse(&actual).expect("rendered IR parses");
+                let edits = diff(&old, &new);
+                let mut msg = format!("golden drift in {}:\n", file.display());
+                if edits.is_empty() {
+                    msg.push_str("  (no structural edits — byte-level drift only)\n");
+                } else {
+                    for edit in &edits {
+                        msg.push_str(&format!("  {edit}\n"));
+                    }
+                }
+                msg.push_str("actual plan IR:\n");
+                msg.push_str(&actual);
+                msg.push_str("(bless intentional changes with RIGOR_BLESS=1)");
+                failures.push(msg);
+            }
+        }
+    }
+    assert!(failures.is_empty(), "{}", failures.join("\n\n"));
+}
+
+/// Two consecutive compiles of the same model must render
+/// byte-identically — the determinism contract the snapshots (and the
+/// plan cache keys) rest on.
+#[test]
+fn consecutive_compiles_are_byte_identical() {
+    for model in zoo_models() {
+        for format in FORMATS {
+            for (path, tag) in KERNELS {
+                let a = render(&model, format, path);
+                let b = render(&model, format, path);
+                assert_eq!(a, b, "{} {format} {tag}: non-deterministic compile", model.name);
+            }
+        }
+    }
+}
+
+/// Every checked-in snapshot corresponds to a live (model, format,
+/// kernels) cell and parses under the current grammar — catches stale
+/// files left behind by a rename as well as hand-edited corruption.
+#[test]
+fn golden_directory_is_exactly_the_matrix() {
+    if bless() {
+        return; // the bless run may be mid-rewrite
+    }
+    let mut expected: Vec<String> = Vec::new();
+    for model in zoo_models() {
+        for format in FORMATS {
+            for (_, tag) in KERNELS {
+                expected.push(format!("{}__{format}__{tag}.plan", model.name));
+            }
+        }
+    }
+    expected.sort();
+    let mut found: Vec<String> = std::fs::read_dir(golden_dir())
+        .expect("golden dir exists")
+        .map(|e| e.expect("dir entry").file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".plan"))
+        .collect();
+    found.sort();
+    assert_eq!(found, expected, "golden dir out of sync with the zoo matrix");
+    for name in &found {
+        let text = std::fs::read_to_string(golden_dir().join(name)).unwrap();
+        PlanText::parse(&text)
+            .unwrap_or_else(|e| panic!("golden {name} does not parse: {e}"));
+    }
+}

@@ -1,0 +1,580 @@
+#!/usr/bin/env python3
+"""Bootstrap generator + independent oracle for the textual-Plan-IR goldens.
+
+The *authoritative* way to (re)generate the `.plan` snapshots in this
+directory is the Rust test suite itself:
+
+    RIGOR_BLESS=1 cargo test --test golden
+
+This script is a from-scratch mirror of the plan compiler's structural
+pipeline (toposort -> fold/pair fusion -> buffer assignment -> blocked
+lowering -> hazard edges -> memory accounting) and of the `plan::ir`
+renderer, kept as an independent cross-check: it must produce the exact
+bytes `Plan::to_text()` renders, or one of the two implementations has a
+structural bug. It also re-derives the per-row-class im2col tables
+against the full per-pixel layout and asserts the memory-diet floor
+(baseline >= 2x resident for the cached blocked residual_cnn) that
+`rust/tests/memdiet.rs` pins.
+
+Weights never appear in the IR (structure + parameter counts only), so
+no RNG mirroring is needed.
+"""
+
+import math
+import os
+
+MR, NR = 4, 8
+F64B = 8
+USIZE = 8
+PAD = object()  # sentinel; never rendered
+
+# --------------------------------------------------------------------------
+# Model zoo (structure only - dims, wiring; weights are irrelevant here)
+# --------------------------------------------------------------------------
+
+
+def dense(inp, units):
+    return {"kind": "dense", "m": units, "n": inp}
+
+
+def conv(kh, kw, cin, cout, stride, pad):
+    return {"kind": "conv2d", "k": [kh, kw, cin, cout], "stride": stride, "pad": pad}
+
+
+def dw(kh, kw, c, stride, pad):
+    return {"kind": "depthwise_conv2d", "k": [kh, kw, c], "stride": stride, "pad": pad}
+
+
+def bn(c):
+    return {"kind": "batch_norm", "c": c, "eps": "0.001"}
+
+
+def act(name):
+    return {"kind": name}
+
+
+def pool(kind, ph, pw):
+    return {"kind": kind, "ph": ph, "pw": pw}
+
+
+def seq(name, input_shape, layers):
+    return {"name": name, "input_shape": input_shape, "layers": layers, "graph": None}
+
+
+def tiny_mlp():
+    return seq("tiny_mlp", [8], [dense(8, 6), act("relu"), dense(6, 4), act("relu"),
+                                 dense(4, 3), act("softmax")])
+
+
+def tiny_cnn():
+    return seq("tiny_cnn", [6, 6, 1], [conv(3, 3, 1, 4, 1, "same"), bn(4), act("relu"),
+                                       dw(3, 3, 4, 1, "same"), act("relu"),
+                                       pool("max_pool2d", 2, 2), act("flatten"),
+                                       dense(36, 5), act("softmax")])
+
+
+def avgpool_cnn():
+    m = tiny_cnn()
+    m["name"] = "avgpool_cnn"
+    m["layers"][5] = pool("avg_pool2d", 2, 2)
+    return m
+
+
+def tiny_pendulum():
+    return seq("tiny_pendulum", [2], [dense(2, 8), act("tanh"), dense(8, 1), act("tanh")])
+
+
+def scaled_mlp(inp, hidden, classes):
+    return seq(f"mlp_{inp}_{hidden}_{classes}",
+               [inp], [dense(inp, hidden), act("relu"), dense(hidden, hidden), act("relu"),
+                       dense(hidden, classes), act("softmax")])
+
+
+def residual_mlp():
+    m = seq("residual_mlp", [8], [dense(8, 8), act("relu"), dense(8, 8), act("add"),
+                                  act("relu"), dense(8, 3), act("softmax")])
+    # inbound value ids (0 = model input, l+1 = output of layer l)
+    m["graph"] = {"inputs": [[0], [1], [2], [3, 2], [4], [5], [6]], "output_val": 7}
+    return m
+
+
+def residual_cnn():
+    m = seq("residual_cnn", [6, 6, 1],
+            [conv(3, 3, 1, 4, 1, "same"), bn(4), act("relu"), conv(3, 3, 4, 4, 1, "same"),
+             act("add"), act("relu"), conv(1, 1, 4, 2, 1, "same"), conv(3, 3, 4, 2, 1, "same"),
+             act("concat"), act("relu"), pool("max_pool2d", 2, 2), act("flatten"),
+             dense(36, 5), act("softmax")])
+    m["graph"] = {"inputs": [[0], [1], [2], [3], [4, 3], [5], [6], [6], [7, 8], [9], [10],
+                             [11], [12], [13]], "output_val": 14}
+    return m
+
+
+ZOO = [tiny_mlp, tiny_cnn, avgpool_cnn, tiny_pendulum,
+       lambda: scaled_mlp(16, 24, 5), residual_mlp, residual_cnn]
+
+MERGES = ("add", "concat")
+ACTS = ("relu", "leaky_relu", "tanh", "sigmoid")
+
+# --------------------------------------------------------------------------
+# Geometry (mirrors layers::conv::pad_offsets / output shapes)
+# --------------------------------------------------------------------------
+
+
+def pad_offsets(h, w, kh, kw, stride, pad):
+    if pad == "valid":
+        return 0, 0, (h - kh) // stride + 1, (w - kw) // stride + 1
+    oh, ow = -(-h // stride), -(-w // stride)
+    pad_h = max((oh - 1) * stride + kh - h, 0)
+    pad_w = max((ow - 1) * stride + kw - w, 0)
+    return pad_h // 2, pad_w // 2, oh, ow
+
+
+def out_shape_of(layer, in_shapes):
+    k = layer["kind"]
+    if k == "dense":
+        return [layer["m"]]
+    if k in ("conv2d", "depthwise_conv2d"):
+        h, w = in_shapes[0][0], in_shapes[0][1]
+        ks = layer["k"]
+        _, _, oh, ow = pad_offsets(h, w, ks[0], ks[1], layer["stride"], layer["pad"])
+        cout = ks[3] if k == "conv2d" else ks[2]
+        return [oh, ow, cout]
+    if k in ("max_pool2d", "avg_pool2d"):
+        h, w, c = in_shapes[0]
+        return [h // layer["ph"], w // layer["pw"], c]
+    if k == "flatten":
+        return [math.prod(in_shapes[0])]
+    if k == "concat":
+        return in_shapes[0][:-1] + [sum(s[-1] for s in in_shapes)]
+    return list(in_shapes[0])  # bn, activations, softmax, add
+
+
+# --------------------------------------------------------------------------
+# Compile pipeline mirror (plan::build_with_kernels)
+# --------------------------------------------------------------------------
+
+
+def toposort(model):
+    n = len(model["layers"])
+    if model["graph"] is None:
+        return list(range(n)), [[i] for i in range(n)], n
+    inputs = model["graph"]["inputs"]
+    indeg = [sum(1 for v in ins if v > 0) for ins in inputs]
+    consumers = [[] for _ in range(n + 1)]
+    for i, ins in enumerate(inputs):
+        for v in ins:
+            consumers[v].append(i)
+    queue = [i for i in range(n) if indeg[i] == 0]
+    order = []
+    while queue:
+        i = queue.pop(0)
+        order.append(i)
+        for c in consumers[i + 1]:
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                queue.append(c)
+    assert len(order) == n, "cycle"
+    return order, inputs, model["graph"]["output_val"]
+
+
+def compile_plan(model, fusion, kernels):
+    order, inputs, output_val = toposort(model)
+    n = len(model["layers"])
+    val_shape = [None] * (n + 1)
+    val_shape[0] = list(model["input_shape"])
+    for l in order:
+        val_shape[l + 1] = out_shape_of(model["layers"][l],
+                                        [val_shape[v] for v in inputs[l]])
+
+    drafts = []
+    for l in order:
+        in_vals = list(inputs[l])
+        layer = dict(model["layers"][l])
+        layer["folded"] = False
+        drafts.append({"layer": layer, "inputs": in_vals, "out_val": l + 1,
+                       "in_shapes": [list(val_shape[v]) for v in in_vals],
+                       "out_shape": list(val_shape[l + 1]), "act": None,
+                       "lo": l, "hi": l + 1})
+
+    uses = [0] * (n + 1)
+    for d in drafts:
+        for v in d["inputs"]:
+            uses[v] += 1
+    uses[output_val] += 1
+
+    def producer_of(v):
+        for p, d in enumerate(drafts):
+            if d["out_val"] == v:
+                return p
+        return None
+
+    if fusion == "full":
+        i = 0
+        while i < len(drafts):
+            d = drafts[i]
+            p = None
+            if d["layer"]["kind"] == "batch_norm":
+                v = d["inputs"][0]
+                cand = producer_of(v)
+                if (cand is not None and uses[v] == 1 and drafts[cand]["act"] is None
+                        and drafts[cand]["layer"]["kind"] in ("dense", "conv2d",
+                                                              "depthwise_conv2d")):
+                    p = cand
+            if p is None:
+                i += 1
+                continue
+            bn_d = drafts.pop(i)
+            prev = drafts[p]
+            prev["layer"]["folded"] = True
+            prev["out_val"] = bn_d["out_val"]
+            prev["out_shape"] = bn_d["out_shape"]
+            prev["lo"] = min(prev["lo"], bn_d["lo"])
+            prev["hi"] = max(prev["hi"], bn_d["hi"])
+            uses[bn_d["inputs"][0]] = 0
+    if fusion != "none":
+        i = 0
+        while i < len(drafts):
+            d = drafts[i]
+            p = None
+            if d["layer"]["kind"] in ACTS:
+                v = d["inputs"][0]
+                cand = producer_of(v)
+                kind = drafts[cand]["layer"]["kind"] if cand is not None else None
+                accepts = kind is not None and kind not in ("flatten", "softmax") + ACTS
+                if (cand is not None and uses[v] == 1 and drafts[cand]["act"] is None
+                        and accepts):
+                    p = cand
+            if p is None:
+                i += 1
+                continue
+            act_d = drafts.pop(i)
+            prev = drafts[p]
+            prev["act"] = act_d["layer"]["kind"]
+            prev["out_val"] = act_d["out_val"]
+            prev["out_shape"] = act_d["out_shape"]
+            prev["lo"] = min(prev["lo"], act_d["lo"])
+            prev["hi"] = max(prev["hi"], act_d["hi"])
+            uses[act_d["inputs"][0]] = 0
+
+    # Buffer assignment (LIFO free list; in-place aliasing for act/flatten).
+    remaining = list(uses)
+    buf_of_val = [None] * (n + 1)
+    buf_lens = [math.prod(model["input_shape"])]
+    free = []
+    buf_of_val[0] = 0
+    steps = []
+    for d in drafts:
+        in_bufs = [buf_of_val[v] for v in d["inputs"]]
+        out_len = math.prod(d["out_shape"])
+        in_place_capable = d["layer"]["kind"] in ("flatten",) + ACTS
+        in_place = (in_place_capable and len(d["inputs"]) == 1
+                    and remaining[d["inputs"][0]] == 1)
+        if in_place:
+            out_buf = in_bufs[0]
+        elif free:
+            out_buf = free.pop()
+        else:
+            buf_lens.append(0)
+            out_buf = len(buf_lens) - 1
+        buf_lens[out_buf] = max(buf_lens[out_buf], out_len)
+        buf_of_val[d["out_val"]] = out_buf
+        for v, b in zip(d["inputs"], in_bufs):
+            remaining[v] -= 1
+            if remaining[v] == 0 and b != out_buf:
+                free.append(b)
+        steps.append({"layer": d["layer"], "inputs": in_bufs, "out": out_buf,
+                      "in_shapes": d["in_shapes"], "out_shape": d["out_shape"],
+                      "act": d["act"], "lo": d["lo"], "hi": d["hi"]})
+
+    output_buf = buf_of_val[output_val]
+
+    # Blocked lowering metadata + panel-only diet swap.
+    for s in steps:
+        layer, kind = s["layer"], s["layer"]["kind"]
+        s["lower"] = "-"
+        s["panel"] = s["table"] = s["full_table"] = 0
+        if kernels != "blocked":
+            continue
+        if kind == "dense":
+            s["lower"] = "panel"
+            tiles = max(-(-layer["m"] // MR), 1)
+            s["panel"] = tiles * layer["n"] * MR * F64B
+            if layer["folded"]:
+                layer["panel_only"] = True
+        elif kind == "conv2d":
+            s["lower"] = "im2col"
+            s["table"], s["full_table"] = im2col_bytes(layer, s["in_shapes"][0],
+                                                       s["out_shape"])
+        elif kind == "depthwise_conv2d":
+            s["lower"] = "taps"
+            op = s["out_shape"][0] * s["out_shape"][1]
+            s["table"] = s["full_table"] = op * layer["k"][0] * layer["k"][1] * USIZE
+        elif kind == "avg_pool2d":
+            s["lower"] = "pool"
+            op = s["out_shape"][0] * s["out_shape"][1]
+            s["table"] = s["full_table"] = op * layer["ph"] * layer["pw"] * USIZE
+
+    deps = compute_deps(steps, len(buf_lens))
+    return {"name": model["name"], "fusion": fusion, "kernels": kernels,
+            "input_shape": model["input_shape"], "output_shape": val_shape[output_val],
+            "input_buf": 0, "output_buf": output_buf, "buf_lens": buf_lens,
+            "steps": steps, "deps": deps}
+
+
+def im2col_row_classes(kh, stride, pad_top, h, oh):
+    """Yield (class, delta, oy, materialize) mirroring gemm::Im2col::build."""
+    classes = 0
+    interior_ref = None
+    out = []
+    for oy in range(oh):
+        interior = oy * stride >= pad_top and oy * stride + kh <= h + pad_top
+        if interior and interior_ref is not None:
+            cl, oy_ref = interior_ref
+            out.append((cl, oy - oy_ref, oy, False))
+            continue
+        cl = classes
+        classes += 1
+        out.append((cl, 0, oy, True))
+        if interior:
+            interior_ref = (cl, oy)
+    return out, classes
+
+
+def im2col_bytes(layer, in_shape, out_shape):
+    kh, kw, cin, _ = layer["k"]
+    h, w = in_shape[0], in_shape[1]
+    oh, ow = out_shape[0], out_shape[1]
+    pad_top, _, _, _ = pad_offsets(h, w, kh, kw, layer["stride"], layer["pad"])
+    k = kh * kw * cin
+    _, classes = im2col_row_classes(kh, layer["stride"], pad_top, h, oh)
+    table = classes * ow * k * USIZE + oh * 2 * USIZE  # rows + row_map
+    return table, oh * ow * k * USIZE
+
+
+def compute_deps(steps, n_bufs):
+    last_writer = [None] * n_bufs
+    readers = [[] for _ in range(n_bufs)]
+    deps = []
+    for i, s in enumerate(steps):
+        pred = []
+        for b in s["inputs"]:
+            if last_writer[b] is not None:
+                pred.append(last_writer[b])
+        if last_writer[s["out"]] is not None:
+            pred.append(last_writer[s["out"]])
+        pred.extend(readers[s["out"]])
+        pred = sorted(set(p for p in pred if p != i))
+        for b in s["inputs"]:
+            if b != s["out"]:
+                readers[b].append(i)
+        last_writer[s["out"]] = i
+        readers[s["out"]] = []
+        deps.append(pred)
+    return deps
+
+
+# --------------------------------------------------------------------------
+# Memory accounting + renderer (mirrors plan::ir)
+# --------------------------------------------------------------------------
+
+
+def step_memory(s):
+    layer, kind = s["layer"], s["layer"]["kind"]
+    weight = shared = 0
+    if kind == "dense":
+        wb = layer["m"] * layer["n"] * F64B
+        if layer.get("panel_only"):
+            pass
+        elif layer["folded"]:
+            weight += wb
+        else:
+            shared += wb
+        weight += layer["m"] * F64B  # bias
+    elif kind in ("conv2d", "depthwise_conv2d"):
+        kb = math.prod(layer["k"]) * F64B
+        if layer["folded"]:
+            weight += kb
+        else:
+            shared += kb
+        weight += layer["k"][3 if kind == "conv2d" else 2] * F64B  # bias
+    elif kind == "batch_norm":
+        weight += 4 * layer["c"] * F64B
+    if kind == "dense":
+        baseline = (layer["m"] * layer["n"] + layer["m"]) * F64B + s["panel"]
+    elif kind in ("conv2d", "depthwise_conv2d"):
+        cc = layer["k"][3 if kind == "conv2d" else 2]
+        baseline = (math.prod(layer["k"]) + cc) * F64B + s["full_table"]
+    else:
+        baseline = weight + s["table"]
+    return weight, shared, s["panel"], s["table"], baseline
+
+
+def shape_tok(shape):
+    return "x".join(str(d) for d in shape)
+
+
+def list_tok(items):
+    items = list(items)
+    return ",".join(items) if items else "-"
+
+
+def step_tokens(s):
+    layer, kind = s["layer"], s["layer"]["kind"]
+    toks = []
+    if kind == "dense":
+        toks.append(f"w={layer['m']}x{layer['n']}")
+        wsrc = ("panel" if layer.get("panel_only")
+                else "folded" if layer["folded"] else "shared")
+        toks.append(f"wsrc={wsrc}")
+        toks.append(f"params={layer['m'] * layer['n'] + layer['m']}")
+    elif kind in ("conv2d", "depthwise_conv2d"):
+        toks.append(f"k={shape_tok(layer['k'])}")
+        toks.append(f"stride={layer['stride']}")
+        toks.append(f"pad={layer['pad']}")
+        toks.append(f"wsrc={'folded' if layer['folded'] else 'shared'}")
+        cc = layer["k"][3 if kind == "conv2d" else 2]
+        toks.append(f"params={math.prod(layer['k']) + cc}")
+    elif kind in ("max_pool2d", "avg_pool2d"):
+        toks.append(f"window={layer['ph']}x{layer['pw']}")
+    elif kind == "batch_norm":
+        toks.append(f"c={layer['c']}")
+        toks.append(f"eps={layer['eps']}")
+        toks.append(f"params={4 * layer['c']}")
+    elif kind == "concat":
+        rows = math.prod(s["out_shape"][:-1])
+        widths = ",".join(str(sh[-1]) for sh in s["in_shapes"])
+        toks.append(f"rows={rows}")
+        toks.append(f"widths={widths}")
+    return toks
+
+
+def render(plan):
+    lines = [f"plan {plan['name']}", f"fusion {plan['fusion']}",
+             f"kernels {plan['kernels']}",
+             f"input b{plan['input_buf']} {shape_tok(plan['input_shape'])}",
+             f"output b{plan['output_buf']} {shape_tok(plan['output_shape'])}", ""]
+    nbufs = len(plan["buf_lens"])
+    writers = [[] for _ in range(nbufs)]
+    readers = [[] for _ in range(nbufs)]
+    for i, s in enumerate(plan["steps"]):
+        for b in s["inputs"]:
+            if not readers[b] or readers[b][-1] != i:
+                readers[b].append(i)
+        writers[s["out"]].append(i)
+    lines.append(f"buffers {nbufs}")
+    for b in range(nbufs):
+        lines.append(f"b{b} len={plan['buf_lens'][b]}"
+                     f" writers={list_tok(f's{i}' for i in writers[b])}"
+                     f" readers={list_tok(f's{i}' for i in readers[b])}")
+    lines.append("")
+    lines.append(f"steps {len(plan['steps'])}")
+    for i, s in enumerate(plan["steps"]):
+        act = s["act"] if s["act"] else "-"
+        toks = [f"s{i}", s["layer"]["kind"],
+                f"in={list_tok(f'b{b}' for b in s['inputs'])}", f"out=b{s['out']}",
+                f"in_shapes={list_tok(shape_tok(sh) for sh in s['in_shapes'])}",
+                f"out_shape={shape_tok(s['out_shape'])}", f"act={act}",
+                f"layers={s['lo']}..{s['hi']}",
+                f"deps={list_tok(f's{d}' for d in plan['deps'][i])}",
+                f"lower={s['lower']}"] + step_tokens(s)
+        lines.append(" ".join(toks))
+    lines.append("")
+    lines.append("memory")
+    tot = [0] * 5
+    for i, s in enumerate(plan["steps"]):
+        w, sh, p, t, base = step_memory(s)
+        for j, v in enumerate((w, sh, p, t, base)):
+            tot[j] += v
+        lines.append(f"s{i} {s['layer']['kind']} weights={w} shared={sh} panel={p}"
+                     f" table={t} resident={w + p + t} baseline={base}")
+    lines.append(f"total weights={tot[0]} shared={tot[1]} panel={tot[2]} table={tot[3]}"
+                 f" resident={tot[0] + tot[2] + tot[3]} baseline={tot[4]}")
+    return "\n".join(lines) + "\n"
+
+
+# --------------------------------------------------------------------------
+# Oracle checks
+# --------------------------------------------------------------------------
+
+
+def full_im2col_row(oy, ox, kh, kw, cin, stride, pad_top, pad_left, h, w):
+    """One output pixel's tap offsets in the old full-table layout."""
+    row = [PAD] * (kh * kw * cin)
+    for ky in range(kh):
+        iy = oy * stride + ky - pad_top
+        if iy < 0 or iy >= h:
+            continue
+        for kx in range(kw):
+            ix = ox * stride + kx - pad_left
+            if ix < 0 or ix >= w:
+                continue
+            for ci in range(cin):
+                row[(ky * kw + kx) * cin + ci] = (iy * w + ix) * cin + ci
+    return row
+
+
+def check_im2col_equivalence(kh, kw, cin, cout, h, w, stride, pad):
+    """Per-row-class table + delta must reproduce the full table exactly."""
+    pad_top, pad_left, oh, ow = pad_offsets(h, w, kh, kw, stride, pad)
+    rows, _ = im2col_row_classes(kh, stride, pad_top, h, oh)
+    # Materialized class tables (class -> per-ox rows), built like Rust.
+    class_rows = {}
+    for cl, _, oy, materialize in rows:
+        if materialize:
+            class_rows[cl] = [full_im2col_row(oy, ox, kh, kw, cin, stride,
+                                              pad_top, pad_left, h, w)
+                              for ox in range(ow)]
+    for cl, doy, oy, _ in rows:
+        delta = doy * stride * w * cin
+        for ox in range(ow):
+            want = full_im2col_row(oy, ox, kh, kw, cin, stride, pad_top, pad_left, h, w)
+            got = [PAD if e is PAD else e + delta for e in class_rows[cl][ox]]
+            assert got == want, (kh, kw, cin, h, w, stride, pad, oy, ox)
+
+
+def self_check():
+    # Per-row im2col equivalence: gemm test geometries + zoo convs.
+    geoms = [(3, 3, 3, 5, 5, 7, 1, "same"), (2, 2, 3, 4, 7, 5, 2, "valid"),
+             (1, 1, 4, 1, 6, 6, 1, "same"), (3, 3, 1, 4, 4, 4, 2, "same"),
+             (3, 3, 1, 4, 6, 6, 1, "same"), (3, 3, 4, 4, 6, 6, 1, "same"),
+             (1, 1, 4, 2, 6, 6, 1, "same"), (3, 3, 4, 2, 6, 6, 1, "same"),
+             (3, 3, 2, 3, 9, 9, 3, "same"), (5, 3, 2, 2, 11, 8, 2, "valid")]
+    for kh, kw, cin, cout, h, w, stride, pad in geoms:
+        check_im2col_equivalence(kh, kw, cin, cout, h, w, stride, pad)
+
+    # Memory-diet floor on the cached blocked residual_cnn reference plan.
+    plan = compile_plan(residual_cnn(), "full", "blocked")
+    tot = [0] * 5
+    for s in plan["steps"]:
+        for j, v in enumerate(step_memory(s)):
+            tot[j] += v
+    weights, shared, panel, table, baseline = tot
+    resident = weights + panel + table
+    assert (weights, shared, panel, table) == (424, 3232, 2304, 12240), tot
+    assert resident == 14968 and baseline == 30440, (resident, baseline)
+    assert baseline >= 2 * resident
+
+    # Determinism: two compiles render byte-identically.
+    a = render(compile_plan(residual_cnn(), "full", "blocked"))
+    b = render(compile_plan(residual_cnn(), "full", "blocked"))
+    assert a == b
+
+
+def main():
+    self_check()
+    out_dir = os.path.dirname(os.path.abspath(__file__))
+    count = 0
+    for build in ZOO:
+        for fmt, fusion in [("f64", "full"), ("emu-k12", "none")]:
+            for kernels in ["blocked", "scalar"]:
+                model = build()
+                text = render(compile_plan(model, fusion, kernels))
+                name = f"{model['name']}__{fmt}__{kernels}.plan"
+                with open(os.path.join(out_dir, name), "w") as f:
+                    f.write(text)
+                count += 1
+    print(f"self-check OK; wrote {count} goldens to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

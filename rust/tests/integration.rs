@@ -424,7 +424,7 @@ fn layer_error_paths_report_context() {
     assert!(err.contains("expects input"), "{err}");
 
     let d = Layer::Dense {
-        w: rigor::tensor::Tensor::new(vec![2, 3], vec![0.0; 6]),
+        w: Arc::new(rigor::tensor::Tensor::new(vec![2, 3], vec![0.0; 6])),
         b: vec![0.0; 2],
     };
     assert!(d.output_shape(&[4]).is_err());

@@ -1,0 +1,237 @@
+//! Property tests for the plan compiler and its textual IR, over
+//! seeded random branchy graphs.
+//!
+//! The generator grows a DAG of dense / activation / `Add` / `Concat`
+//! layers over 1-D values, keeping a *frontier* of live values: an op
+//! either replaces its operand (a chain) or leaves it live (a branch,
+//! which some later op re-reads — a skip edge). A final merge chain
+//! drains the frontier so every layer contributes to the output. No
+//! batch norm is generated, so every fusion level computes the exact
+//! same arithmetic and all fusion x kernel combinations must agree
+//! bit-for-bit — any buffer-recycling bug (read-after-free, clobbered
+//! merge operand) shows up as a bit difference.
+//!
+//! Structural invariants are checked on both the compiled plan and its
+//! parsed IR; every failure message leads with the generator seed.
+
+use rigor::layers::Layer;
+use rigor::model::{zoo, Graph, Model};
+use rigor::plan::{diff, Arena, Fusion, KernelPath, Plan, PlanText};
+use rigor::util::Rng;
+
+/// Grow a random branchy model. Structure and weights are a pure
+/// function of `seed`.
+fn random_model(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    let input_width = rng.int_range(2, 8) as usize;
+    let mut layers: Vec<Layer> = Vec::new();
+    let mut names: Vec<String> = Vec::new();
+    let mut inbound: Vec<Vec<String>> = Vec::new();
+    // Live values: (node name, vector width).
+    let mut frontier: Vec<(String, usize)> = vec![("input".to_string(), input_width)];
+
+    let push = |layers: &mut Vec<Layer>,
+                    names: &mut Vec<String>,
+                    inbound: &mut Vec<Vec<String>>,
+                    layer: Layer,
+                    feeds: Vec<String>|
+     -> String {
+        let name = format!("n{}", layers.len());
+        layers.push(layer);
+        names.push(name.clone());
+        inbound.push(feeds);
+        name
+    };
+
+    let ops = rng.int_range(4, 12);
+    for _ in 0..ops {
+        match rng.below(5) {
+            // Dense from a random live value; half the time the result
+            // replaces its operand (chain), otherwise both stay live
+            // (branch: the operand gains a second consumer later).
+            0 | 1 => {
+                let i = rng.below(frontier.len());
+                let (src, width) = frontier[i].clone();
+                let units = rng.int_range(2, 8) as usize;
+                let name = push(
+                    &mut layers,
+                    &mut names,
+                    &mut inbound,
+                    zoo::dense(&mut rng, width, units),
+                    vec![src],
+                );
+                if rng.bool(0.5) {
+                    frontier[i] = (name, units);
+                } else {
+                    frontier.push((name, units));
+                }
+            }
+            // Elementwise activation (in-place-aliasable step).
+            2 => {
+                let i = rng.below(frontier.len());
+                let (src, width) = frontier[i].clone();
+                let act = if rng.bool(0.5) { Layer::Relu } else { Layer::Tanh };
+                let name = push(&mut layers, &mut names, &mut inbound, act, vec![src]);
+                if rng.bool(0.7) {
+                    frontier[i] = (name, width);
+                } else {
+                    frontier.push((name, width));
+                }
+            }
+            // Add two equal-width live values (both consumed).
+            3 => {
+                let pair = (0..frontier.len())
+                    .flat_map(|a| ((a + 1)..frontier.len()).map(move |b| (a, b)))
+                    .find(|&(a, b)| frontier[a].1 == frontier[b].1);
+                if let Some((a, b)) = pair {
+                    let (na, width) = frontier[a].clone();
+                    let (nb, _) = frontier[b].clone();
+                    frontier.remove(b); // b > a: remove the later index first
+                    frontier.remove(a);
+                    let name =
+                        push(&mut layers, &mut names, &mut inbound, Layer::Add, vec![na, nb]);
+                    frontier.push((name, width));
+                }
+            }
+            // Concat two distinct live values (both consumed).
+            _ => {
+                if frontier.len() >= 2 {
+                    let a = rng.below(frontier.len() - 1);
+                    let b = a + 1 + rng.below(frontier.len() - a - 1);
+                    let (na, wa) = frontier[a].clone();
+                    let (nb, wb) = frontier[b].clone();
+                    frontier.remove(b);
+                    frontier.remove(a);
+                    let name =
+                        push(&mut layers, &mut names, &mut inbound, Layer::Concat, vec![na, nb]);
+                    frontier.push((name, wa + wb));
+                }
+            }
+        }
+    }
+
+    // Drain the frontier so every branch reaches the output.
+    while frontier.len() > 1 {
+        let (na, wa) = frontier.remove(0);
+        let (nb, wb) = frontier.remove(0);
+        let name = push(&mut layers, &mut names, &mut inbound, Layer::Concat, vec![na, nb]);
+        frontier.push((name, wa + wb));
+    }
+    let (head, width) = frontier.pop().unwrap();
+    let dense = zoo::dense(&mut rng, width, 3);
+    let out = push(&mut layers, &mut names, &mut inbound, dense, vec![head]);
+    let out = push(&mut layers, &mut names, &mut inbound, Layer::Softmax, vec![out]);
+
+    Model {
+        name: format!("prop_{seed}"),
+        input_shape: vec![input_width],
+        layers,
+        graph: Some(Graph { names, inbound, output: Some(out) }),
+    }
+}
+
+/// Structural invariants on a compiled plan and its rendered IR.
+fn check_structure(plan: &Plan, what: &str) {
+    // step_deps: strictly backward edges, deduped, ascending — acyclic
+    // by construction, and stable for the differ.
+    for (i, deps) in plan.step_deps().iter().enumerate() {
+        for (k, &d) in deps.iter().enumerate() {
+            assert!(d < i, "{what}: s{i} dep s{d} not a predecessor");
+            if k > 0 {
+                assert!(deps[k - 1] < d, "{what}: s{i} deps not ascending/deduped");
+            }
+        }
+    }
+    // Merge steps never alias an operand in place: a clobbered operand
+    // would corrupt the other input mid-sum.
+    for (i, step) in plan.steps().iter().enumerate() {
+        if step.inputs.len() >= 2 {
+            assert!(
+                !step.inputs.contains(&step.out),
+                "{what}: merge step s{i} writes one of its own inputs"
+            );
+        }
+    }
+    // No read-after-free: every buffer a step reads is either the plan
+    // input buffer or was written by an earlier step.
+    let text = PlanText::of(plan);
+    let input_buf: usize = text.input.split_whitespace().next().unwrap()[1..]
+        .parse()
+        .expect("input header starts with b<i>");
+    let mut written = vec![false; plan.buffer_count()];
+    written[input_buf] = true;
+    for (i, step) in plan.steps().iter().enumerate() {
+        for &b in &step.inputs {
+            assert!(written[b], "{what}: s{i} reads b{b} before any write");
+        }
+        written[step.out] = true;
+    }
+}
+
+/// Round-trip and determinism invariants on the textual form.
+fn check_text(plan: &Plan, what: &str) {
+    let text = plan.to_text();
+    let parsed = PlanText::parse(&text).unwrap_or_else(|e| panic!("{what}: parse: {e}"));
+    assert_eq!(parsed.render(), text, "{what}: to_text -> parse -> render not byte-identical");
+    let again = PlanText::parse(&plan.to_text()).unwrap();
+    assert!(diff(&parsed, &again).is_empty(), "{what}: self-diff not empty");
+}
+
+const SEEDS: std::ops::Range<u64> = 0..40;
+
+#[test]
+fn random_graphs_compile_with_sound_structure() {
+    for seed in SEEDS {
+        let model = random_model(seed);
+        for fusion in [Fusion::None, Fusion::Pair, Fusion::Full] {
+            for path in [KernelPath::Scalar, KernelPath::Blocked] {
+                let what = format!("seed {seed} {fusion:?} {path:?}");
+                let plan = Plan::build_with_kernels(&model, fusion, path)
+                    .unwrap_or_else(|e| panic!("{what}: build: {e}"));
+                check_structure(&plan, &what);
+                check_text(&plan, &what);
+            }
+        }
+    }
+}
+
+#[test]
+fn random_graphs_agree_bitwise_across_fusion_and_kernels() {
+    for seed in SEEDS {
+        let model = random_model(seed);
+        let n: usize = model.input_shape.iter().product();
+        let mut rng = Rng::new(seed ^ 0xDEAD);
+        let input: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let mut reference: Option<Vec<f64>> = None;
+        for fusion in [Fusion::None, Fusion::Pair, Fusion::Full] {
+            for path in [KernelPath::Scalar, KernelPath::Blocked] {
+                let plan = Plan::build_with_kernels(&model, fusion, path).unwrap();
+                let mut arena: Arena<f64> = Arena::new();
+                let out = plan.execute::<f64>(&(), &input, &mut arena).unwrap().to_vec();
+                match &reference {
+                    None => reference = Some(out),
+                    Some(want) => {
+                        assert_eq!(want.len(), out.len(), "seed {seed}: output length");
+                        for (i, (a, b)) in want.iter().zip(&out).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "seed {seed} {fusion:?} {path:?}: element {i} ({a} vs {b})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn random_graphs_compile_deterministically() {
+    for seed in SEEDS.step_by(4) {
+        let model = random_model(seed);
+        let a = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+        let b = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+        assert_eq!(a.to_text(), b.to_text(), "seed {seed}: non-deterministic compile");
+    }
+}

@@ -1,0 +1,310 @@
+//! Plan memory-diet regression tests.
+//!
+//! The diet has three legs, each pinned here:
+//!
+//! 1. **Arc-shared weights** — a compiled step shares the model layer's
+//!    weight tensor unless fusion had to rewrite it (batch-norm
+//!    folding), in which case the plan owns a private copy and the
+//!    layer's parameters stay untouched.
+//! 2. **No third dense copy** — a blocked plan whose dense weights were
+//!    folded keeps only the packed panel ([`DenseWeights::PanelOnly`]);
+//!    the scalar escape hatch reconstructs the row-major view via
+//!    `DensePanel::unpack`, bit-exactly.
+//! 3. **Per-row-class im2col** — conv patch tables are `O(ow * k)` per
+//!    row class instead of `O(oh * ow * k)`, with interior rows sharing
+//!    one class through a vertical delta; results stay bit-identical.
+//!
+//! A byte-counting allocator verifies the diet at the system boundary:
+//! compiling the cached blocked `residual_cnn` plan must allocate well
+//! under the pre-diet footprint that [`Plan::memory_report`] reports as
+//! `baseline`.
+
+use rigor::layers::gemm::DensePanel;
+use rigor::layers::Layer;
+use rigor::model::{zoo, Model};
+use rigor::plan::{Arena, DenseWeights, Fusion, KernelPath, Plan, StepKind};
+use rigor::tensor::Tensor;
+use rigor::util::Rng;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+// ---- byte-counting allocator ----------------------------------------------
+// Net live bytes per thread (tests run on distinct threads, and plan
+// compilation is single-threaded, so a thread-local balance is exact).
+
+thread_local! {
+    static LIVE_BYTES: Cell<i64> = const { Cell::new(0) };
+}
+
+fn credit(delta: i64) {
+    let _ = LIVE_BYTES.try_with(|c| c.set(c.get() + delta));
+}
+
+fn live_bytes() -> i64 {
+    LIVE_BYTES.try_with(|c| c.get()).unwrap_or(0)
+}
+
+struct ByteCountingAlloc;
+
+// SAFETY: delegates every operation to `System`; the balance hook has no
+// effect on allocation behavior.
+unsafe impl GlobalAlloc for ByteCountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        credit(layout.size() as i64);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        credit(layout.size() as i64);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        credit(new_size as i64 - layout.size() as i64);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        credit(-(layout.size() as i64));
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: ByteCountingAlloc = ByteCountingAlloc;
+
+// ---- helpers --------------------------------------------------------------
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} ({x} vs {y})");
+    }
+}
+
+fn batch_input(model: &Model, batch: usize, seed: u64) -> Vec<f64> {
+    let n: usize = model.input_shape.iter().product();
+    let mut rng = Rng::new(seed);
+    (0..batch * n).map(|_| rng.range(-1.0, 1.0)).collect()
+}
+
+/// A dense layer followed by batch norm: folding rewrites the dense
+/// weights, so the blocked plan's only copy is the packed panel.
+fn panel_only_model(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    Model {
+        name: "panel_only".into(),
+        input_shape: vec![6],
+        layers: vec![
+            zoo::dense(&mut rng, 6, 5),
+            zoo::batch_norm(&mut rng, 5),
+            Layer::Relu,
+            zoo::dense(&mut rng, 5, 3),
+            Layer::Softmax,
+        ],
+        graph: None,
+    }
+}
+
+// ---- the headline acceptance number ---------------------------------------
+
+/// The cached blocked `residual_cnn` plan (Full fusion — the serving
+/// configuration) must resident-cost less than half its pre-diet
+/// baseline, with every field of the report pinned exactly so any
+/// accounting drift is loud.
+#[test]
+fn residual_cnn_resident_bytes_halved() {
+    let plan =
+        Plan::build_with_kernels(&zoo::residual_cnn(7), Fusion::Full, KernelPath::Blocked).unwrap();
+    let report = plan.memory_report();
+    assert_eq!(report.weight_bytes(), 424, "plan-owned parameter bytes");
+    assert_eq!(report.shared_bytes(), 3232, "layer-shared parameter bytes");
+    assert_eq!(report.panel_bytes(), 2304, "packed dense panels");
+    assert_eq!(report.table_bytes(), 12240, "conv/pool gather tables");
+    assert_eq!(report.resident_bytes(), 14968, "total resident");
+    assert_eq!(report.baseline_bytes(), 30440, "pre-diet baseline");
+    assert!(
+        report.baseline_bytes() >= 2 * report.resident_bytes(),
+        "diet must at least halve residency: baseline {} vs resident {}",
+        report.baseline_bytes(),
+        report.resident_bytes()
+    );
+}
+
+// ---- leg 1: every weight stored once --------------------------------------
+
+#[test]
+fn weights_shared_with_layers_unless_folded() {
+    let model = zoo::residual_cnn(7);
+    let pristine = zoo::residual_cnn(7); // same seed: bitwise-equal params
+    let plan = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+    let mut folded = 0;
+    for (i, step) in plan.steps().iter().enumerate() {
+        let layer = &model.layers[step.layer_range.0];
+        match (&step.kind, layer) {
+            (StepKind::Conv2D { kernel, .. }, Layer::Conv2D { kernel: lk, .. }) => {
+                if kernel.folded() {
+                    folded += 1;
+                    assert!(!kernel.shares(lk), "s{i}: folded kernel must be a private copy");
+                    // Folding never mutates the model's own parameters.
+                    let fresh = match &pristine.layers[step.layer_range.0] {
+                        Layer::Conv2D { kernel, .. } => kernel,
+                        _ => unreachable!(),
+                    };
+                    assert_eq!(lk.data(), fresh.data(), "s{i}: layer params mutated by fold");
+                } else {
+                    assert!(kernel.shares(lk), "s{i}: unfolded conv kernel must share storage");
+                }
+            }
+            (
+                StepKind::DepthwiseConv2D { kernel, .. },
+                Layer::DepthwiseConv2D { kernel: lk, .. },
+            ) => {
+                assert!(kernel.shares(lk), "s{i}: depthwise kernel must share storage");
+            }
+            (StepKind::Dense { w, .. }, Layer::Dense { w: lw, .. }) => match w {
+                DenseWeights::Tensor(sw) => {
+                    assert!(sw.shares(lw), "s{i}: unfolded dense weights must share storage")
+                }
+                DenseWeights::PanelOnly { .. } => {
+                    panic!("s{i}: residual_cnn has no folded dense step")
+                }
+            },
+            _ => {}
+        }
+    }
+    // Exactly one fold site: the batch norm behind the stem conv.
+    assert_eq!(folded, 1, "residual_cnn folds exactly one conv");
+}
+
+// ---- leg 2: panel-only dense weights --------------------------------------
+
+#[test]
+fn folded_blocked_dense_keeps_only_the_panel() {
+    let model = panel_only_model(11);
+    let plan = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+    let step = &plan.steps()[0];
+    let w = match &step.kind {
+        StepKind::Dense { w, .. } => w,
+        k => panic!("expected a dense stem, got {k:?}"),
+    };
+    assert!(
+        matches!(w, DenseWeights::PanelOnly { .. }),
+        "folded dense weights of a blocked plan must drop the row-major tensor"
+    );
+    assert_eq!(w.dims(), (5, 6), "panel-only form keeps the dims");
+    assert!(plan.to_text().contains("wsrc=panel"), "IR must report the panel-only source");
+    // The scalar escape hatch unpacks the panel on demand: both paths of
+    // the same (blocked) plan must agree bit-for-bit.
+    for batch in [1usize, 7, 32] {
+        let input = batch_input(&model, batch, 0xD1E7 + batch as u64);
+        let mut sa: Arena<f64> = Arena::new();
+        let scalar = plan
+            .execute_batch_path::<f64>(&(), &input, batch, &mut sa, KernelPath::Scalar)
+            .unwrap()
+            .to_vec();
+        let mut ba: Arena<f64> = Arena::new();
+        let blocked = plan
+            .execute_batch_path::<f64>(&(), &input, batch, &mut ba, KernelPath::Blocked)
+            .unwrap()
+            .to_vec();
+        assert_bits_eq(&scalar, &blocked, &format!("panel_only B={batch}"));
+    }
+}
+
+#[test]
+fn panel_pack_unpack_is_exact_for_ragged_shapes() {
+    // Odd row counts exercise the zero-filled tail rows of the last tile.
+    let mut rng = Rng::new(3);
+    for (m, n) in [(1, 1), (1, 7), (3, 4), (4, 4), (5, 6), (8, 3), (13, 17)] {
+        let w = Tensor::new(vec![m, n], (0..m * n).map(|_| rng.normal()).collect());
+        let back = DensePanel::pack(&w).unpack();
+        assert_eq!(back.shape(), w.shape(), "{m}x{n}: shape");
+        assert_bits_eq(back.data(), w.data(), &format!("{m}x{n}: unpack"));
+    }
+}
+
+// ---- leg 3: per-row-class im2col ------------------------------------------
+
+/// Conv geometries that stress the row-class machinery: same-padding
+/// (edge classes above and below), valid padding (every row interior),
+/// and strides that desynchronize rows from the padding pattern. The
+/// scalar kernel never consults the table, so bit-identity across paths
+/// proves the class tables resolve every tap the full table would.
+#[test]
+fn per_row_im2col_matches_scalar_kernels_bitwise() {
+    use rigor::layers::Padding;
+    let mut cases: Vec<Model> = vec![zoo::tiny_cnn(5), zoo::avgpool_cnn(6), zoo::residual_cnn(8)];
+    let mut rng = Rng::new(21);
+    for (h, w, kh, kw, stride, padding) in [
+        (7, 5, 3, 3, 2, Padding::Same),
+        (8, 8, 3, 3, 1, Padding::Valid),
+        (9, 6, 5, 3, 2, Padding::Valid),
+        (6, 6, 1, 1, 1, Padding::Same),
+    ] {
+        // Output extent per axis, mirroring the layer shape rules.
+        let out = |n: usize, k: usize| match padding {
+            Padding::Same => n.div_ceil(stride),
+            Padding::Valid => (n - k) / stride + 1,
+        };
+        let flat = out(h, kh) * out(w, kw) * 3;
+        cases.push(Model {
+            name: format!("conv_{h}x{w}_k{kh}x{kw}_s{stride}"),
+            input_shape: vec![h, w, 2],
+            layers: vec![
+                zoo::conv2d(&mut rng, kh, kw, 2, 3, stride, padding),
+                Layer::Relu,
+                Layer::Flatten,
+                zoo::dense(&mut rng, flat, 4),
+                Layer::Softmax,
+            ],
+            graph: None,
+        });
+    }
+    for model in &cases {
+        let plan = Plan::build_with_kernels(model, Fusion::Full, KernelPath::Blocked).unwrap();
+        for batch in [1usize, 7, 32] {
+            let input = batch_input(model, batch, 0xC0 + batch as u64);
+            let mut sa: Arena<f64> = Arena::new();
+            let scalar = plan
+                .execute_batch_path::<f64>(&(), &input, batch, &mut sa, KernelPath::Scalar)
+                .unwrap()
+                .to_vec();
+            let mut ba: Arena<f64> = Arena::new();
+            let blocked = plan
+                .execute_batch_path::<f64>(&(), &input, batch, &mut ba, KernelPath::Blocked)
+                .unwrap()
+                .to_vec();
+            assert_bits_eq(&scalar, &blocked, &format!("{} B={batch}", model.name));
+        }
+    }
+}
+
+// ---- the system boundary: real allocations --------------------------------
+
+/// Compiling the cached blocked `residual_cnn` plan allocates its
+/// resident payload (~15 KB) plus small bookkeeping — and stays far
+/// under the 30,440-byte pre-diet payload floor. A regression that
+/// re-materializes per-weight copies, a third dense tensor, or full
+/// per-pixel patch tables lands above the bound.
+#[test]
+fn plan_compilation_allocates_under_the_pre_diet_floor() {
+    let model = zoo::residual_cnn(7);
+    // Warm up once: lazy runtime/TLS allocations settle before measuring.
+    let warm = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+    let resident = warm.memory_report().resident_bytes() as i64;
+    let baseline = warm.memory_report().baseline_bytes() as i64;
+    drop(warm);
+
+    let before = live_bytes();
+    let plan = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+    let delta = live_bytes() - before;
+    assert!(
+        delta >= resident,
+        "compile allocated {delta} B, less than the reported resident {resident} B?"
+    );
+    assert!(
+        delta < baseline - 4096,
+        "compile allocated {delta} B — within 4 KB of the pre-diet payload ({baseline} B); \
+         did a weight copy or full patch table come back?"
+    );
+    drop(plan);
+}

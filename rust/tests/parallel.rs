@@ -144,7 +144,15 @@ fn pooled_drives_bit_identical_on_the_scalar_kernels() {
             .to_vec();
         let mut pa: Arena<f64> = Arena::new();
         let pooled = plan
-            .execute_batch_pooled::<f64>(&(), &flat, 7, &mut pa, KernelPath::Scalar, &pool, eager(4))
+            .execute_batch_pooled::<f64>(
+                &(),
+                &flat,
+                7,
+                &mut pa,
+                KernelPath::Scalar,
+                &pool,
+                eager(4),
+            )
             .unwrap()
             .to_vec();
         assert_bits_eq(&serial, &pooled, &format!("{} scalar pooled", model.name));
