@@ -35,6 +35,13 @@
 //!    inter-op branch overlap, bit-identical to the serial drive) on the
 //!    residual CNN at B=32, W in {1, 2, 4}. The W=4 row carries a 2.5x
 //!    floor, enforced only on hosts with >= 4 hardware threads.
+//! 10. the observability tax: the instrumented `execute_batch` drive
+//!    loop under `ObsPolicy::Disabled` vs the same work driven through
+//!    the uninstrumented per-step entry point
+//!    (`load_batch` + `execute_step_batch_path`). The disabled row
+//!    carries a 0.98x floor — the mark/record sites must cost <= 2% —
+//!    while the Counters and Full rows report what each level actually
+//!    costs (informational, no floor).
 //!
 //! The bench then **checks thresholds** — the plan must not run slower
 //! than the interpreter, and the f64/sampling batched paths, the
@@ -711,6 +718,73 @@ fn main() {
         }
     }
 
+    // ---- 10: observability overhead -----------------------------------------
+    // The per-step span/histogram sites live in the `execute_batch` drive
+    // loop; `load_batch` + `execute_step_batch_path` is the same work with
+    // no instrumentation at all, so the pair isolates exactly what the
+    // obs layer costs. Disabled must be free (each site is one relaxed
+    // load + branch): that row carries a 0.98x floor. Counters and Full
+    // price the real recording (two clock reads + atomics per step) —
+    // informational, no floor.
+    // (name, uninstrumented ns, instrumented ns, ratio floor)
+    let mut obs_rows: Vec<(String, f64, f64, f64)> = Vec::new();
+    {
+        use rigor::obs::{self, ObsPolicy};
+
+        println!("\nobservability overhead (B = {BATCH}, residual-cnn blocked drive):");
+        let plan =
+            Plan::build_with_kernels(&res, Fusion::Full, KernelPath::Blocked).expect("compile");
+        let res_n: usize = res.input_shape.iter().product();
+        let flat: Vec<f64> = (0..BATCH * res_n).map(|i| (i % 17) as f64 / 17.0).collect();
+
+        obs::set_policy(ObsPolicy::Disabled);
+        let mut ua: Arena<f64> = Arena::new();
+        let steps = plan.steps().len();
+        let bare = b
+            .bench(&format!("obs-f64/residual-cnn/uninstrumented-x{BATCH}"), || {
+                ua.load_batch(&plan, &flat, BATCH);
+                for idx in 0..steps {
+                    plan.execute_step_batch_path::<f64>(idx, BATCH, &(), &mut ua, KernelPath::Blocked);
+                }
+                steps
+            })
+            .mean;
+
+        for (policy, floor) in
+            [(ObsPolicy::Disabled, 0.98), (ObsPolicy::Counters, 0.0), (ObsPolicy::Full, 0.0)]
+        {
+            obs::set_policy(policy);
+            let mut ia: Arena<f64> = Arena::new();
+            let inst = b
+                .bench(&format!("obs-f64/residual-cnn/{}-x{BATCH}", policy.name()), || {
+                    plan.execute_batch_path::<f64>(&(), &flat, BATCH, &mut ia, KernelPath::Blocked)
+                        .unwrap()
+                        .len()
+                })
+                .mean;
+            obs_rows.push((
+                format!("obs-f64/residual-cnn/{}", policy.name()),
+                bare.as_nanos() as f64,
+                inst.as_nanos() as f64,
+                floor,
+            ));
+        }
+        obs::set_policy(ObsPolicy::Disabled);
+
+        println!(
+            "{:<32} {:>14} {:>14} {:>9} {:>7}",
+            "policy", "uninstrumented", "instrumented", "ratio", "floor"
+        );
+        for (name, bare_ns, inst_ns, floor) in &obs_rows {
+            println!(
+                "{name:<32} {:>12.1} us {:>12.1} us {:>8.2}x {floor:>6.2}x",
+                bare_ns / 1e3,
+                inst_ns / 1e3,
+                bare_ns / inst_ns
+            );
+        }
+    }
+
     // ---- threshold check ----------------------------------------------------
     let mut regressions: Vec<String> = Vec::new();
     for (name, i_ns, p_ns) in &comparisons {
@@ -749,6 +823,15 @@ fn main() {
         if *floor > 0.0 && speedup < *floor {
             regressions.push(format!(
                 "{name}: parallel speedup {speedup:.2}x vs the serial drive below the {floor:.1}x floor"
+            ));
+        }
+    }
+    for (name, bare_ns, inst_ns, floor) in &obs_rows {
+        let ratio = bare_ns / inst_ns;
+        if *floor > 0.0 && ratio < *floor {
+            regressions.push(format!(
+                "{name}: instrumented drive at {ratio:.3}x of the uninstrumented loop, \
+                 below the {floor:.2}x floor (disabled obs must cost <= 2%)"
             ));
         }
     }
@@ -842,6 +925,23 @@ fn main() {
                             ("serial_ns", Value::from(*s_ns)),
                             ("parallel_ns", Value::from(*p_ns)),
                             ("speedup", Value::from(s_ns / p_ns)),
+                            ("floor", Value::from(*floor)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "observability",
+            Value::arr(
+                obs_rows
+                    .iter()
+                    .map(|(name, bare_ns, inst_ns, floor)| {
+                        Value::obj(vec![
+                            ("name", Value::from(name.clone())),
+                            ("uninstrumented_ns", Value::from(*bare_ns)),
+                            ("instrumented_ns", Value::from(*inst_ns)),
+                            ("ratio", Value::from(bare_ns / inst_ns)),
                             ("floor", Value::from(*floor)),
                         ])
                     })

@@ -32,6 +32,7 @@ use crate::coordinator::with_worker_scratch;
 use crate::data::Dataset;
 use crate::interval::Interval;
 use crate::model::Model;
+use crate::obs::{self, BoundProfile, BoundStep};
 use crate::plan::{Arena, Plan};
 use crate::tensor::Tensor;
 use crate::util::Stopwatch;
@@ -187,7 +188,17 @@ pub fn analyze_class_with_plan(
         cfg.exact_inputs,
     );
     with_worker_scratch(|arena: &mut Arena<Caa>| {
-        let outs = plan.execute::<Caa>(&cfg.ctx, input.data(), arena)?;
+        let outs = if obs::tracing() {
+            // Bound probe: the same step loop `execute` runs, with the
+            // per-step bound widths recorded along the way — the final
+            // output buffer (and thus this class's result) is bitwise
+            // identical to the untraced run.
+            let profile = probe_walk(plan, &cfg.ctx, input.data(), arena)?;
+            obs::registry().record_bounds(profile);
+            arena.bufs[plan.output_buf()].as_slice()
+        } else {
+            plan.execute::<Caa>(&cfg.ctx, input.data(), arena)?
+        };
         let max_abs_u = outs.iter().map(|o| o.abs_bound()).fold(0.0f64, f64::max);
         let max_rel_u = outs.iter().map(|o| o.rel_bound()).fold(0.0f64, f64::max);
         let predicted = argmax_fp(outs);
@@ -202,6 +213,70 @@ pub fn analyze_class_with_plan(
             ambiguous,
             secs: sw.secs(),
         })
+    })
+}
+
+/// Step through the plan under CAA recording the widest
+/// absolute/relative bound in each step's output buffer. This *is* the
+/// `Plan::execute` step loop (`load_input` + `execute_step` in order),
+/// so the arena's final output buffer is bitwise identical to an
+/// untraced execution — the probe only reads bounds between steps.
+fn probe_walk(
+    plan: &Plan,
+    ctx: &Ctx,
+    input: &[Caa],
+    arena: &mut Arena<Caa>,
+) -> Result<BoundProfile> {
+    anyhow::ensure!(
+        input.len() == plan.input_len(),
+        "plan '{}' expects {} input values, got {}",
+        plan.model_name(),
+        plan.input_len(),
+        input.len()
+    );
+    arena.load_input(plan, input);
+    let mut steps = Vec::with_capacity(plan.steps().len());
+    for idx in 0..plan.steps().len() {
+        let sw = Stopwatch::start();
+        plan.execute_step::<Caa>(idx, ctx, arena);
+        let secs = sw.secs();
+        let step = &plan.steps()[idx];
+        let buf = &arena.bufs[step.out];
+        steps.push(BoundStep {
+            index: idx,
+            kind: step.kind.name(),
+            out_len: buf.len(),
+            abs_u: buf.iter().map(|o| o.abs_bound()).fold(0.0f64, f64::max),
+            rel_u: buf.iter().map(|o| o.rel_bound()).fold(0.0f64, f64::max),
+            secs,
+        });
+    }
+    Ok(BoundProfile { model: plan.model_name().to_string(), steps })
+}
+
+/// The per-layer error-bound profile of one CAA run — the paper's
+/// signature per-step shape (convolutions widen the relative bound,
+/// well-conditioned activations like ReLU/softmax re-contract it),
+/// printed by `rigor profile` next to wall-clock cost. Prefer an
+/// **unfused** plan ([`Plan::unfused`]) so activation steps appear as
+/// their own rows instead of disappearing into fused conv/dense steps.
+/// The profile is also recorded into the [`crate::obs`] registry.
+pub fn bound_profile_with_plan(
+    plan: &Plan,
+    cfg: &AnalysisConfig,
+    sample: &[f64],
+) -> Result<BoundProfile> {
+    let input = caa_input_cfg(
+        &cfg.ctx,
+        plan.input_shape(),
+        sample,
+        cfg.input_radius,
+        cfg.exact_inputs,
+    );
+    with_worker_scratch(|arena: &mut Arena<Caa>| {
+        let profile = probe_walk(plan, &cfg.ctx, input.data(), arena)?;
+        obs::registry().record_bounds(profile.clone());
+        Ok(profile)
     })
 }
 

@@ -139,6 +139,15 @@ impl Session {
         self.cache.lock().unwrap().stats()
     }
 
+    /// The unified observability snapshot with this session's pool
+    /// counters attached — latency percentiles, executor gauges, trace
+    /// state and the last bound profile (see [`crate::obs`]). Serve/fleet
+    /// queue sections are attached by their owners (e.g.
+    /// [`FleetHandle::snapshot`] for fleet queues).
+    pub fn obs_snapshot(&self) -> crate::obs::Snapshot {
+        crate::obs::Snapshot::capture().with_pool(self.pool.metrics())
+    }
+
     /// Load a model through the session cache (content-hash validated).
     pub fn load_model(&self, path: &Path) -> Result<Arc<Model>> {
         Ok(self.load_compiled(path)?.0)

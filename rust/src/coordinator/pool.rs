@@ -426,6 +426,7 @@ impl<'env> Scope<'env> {
             let st = Arc::clone(&self.state);
             if pool.try_enqueue(Box::new(move || while scope_run_one(&st) {})) {
                 self.state.helpers.fetch_add(1, Ordering::Relaxed);
+                crate::obs::helper_recruited();
             }
         }
     }

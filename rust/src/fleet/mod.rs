@@ -54,7 +54,7 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
-use crate::coordinator::Pool;
+use crate::coordinator::{Pool, PoolMetrics};
 use crate::model::Model;
 use crate::plan::{Fusion, KernelPath, Parallelism, Plan, ServeFormat};
 use crate::serve::{run_batch_job, PendingSample, ServeMetrics, Slot, Ticket};
@@ -275,6 +275,11 @@ pub struct FleetSnapshot {
     pub swaps: usize,
     /// Samples refused by admission control.
     pub rejected: usize,
+    /// Coordinator-pool counters at snapshot time (job queue depth
+    /// high-water, submitted/completed) — without this, serve-side
+    /// backpressure building up in the shared pool was invisible from
+    /// the fleet view.
+    pub pool: PoolMetrics,
 }
 
 impl FleetSnapshot {
@@ -431,7 +436,7 @@ impl Fleet {
             return Err(AdmitError::BadFormat { format });
         }
         let mut st = self.shared.state.lock().unwrap();
-        let slot = loop {
+        let (slot, trace) = loop {
             if st.shutdown {
                 st.rejected += 1;
                 return Err(AdmitError::ShuttingDown);
@@ -474,23 +479,25 @@ impl Fleet {
             // Admitted: pin the current plan set and enqueue.
             let plans = Arc::clone(plans);
             let slot = Slot::new();
+            let trace = crate::obs::next_trace_id();
             let q = st.queues.entry(key).or_default();
             q.pending.push_back(FleetPending {
                 req: PendingSample {
                     sample,
                     slot: Arc::clone(&slot),
                     enqueued: Instant::now(),
+                    trace,
                 },
                 plans,
             });
             q.metrics.submitted += 1;
             q.metrics.queue_high_water = q.metrics.queue_high_water.max(q.pending.len());
             st.total_pending += 1;
-            break slot;
+            break (slot, trace);
         };
         drop(st);
         self.shared.wake.notify_all();
-        Ok(Ticket { slot })
+        Ok(Ticket { slot, trace })
     }
 
     /// Snapshot every queue's counters and every model's version.
@@ -518,6 +525,7 @@ impl Fleet {
             total_pending: st.total_pending,
             swaps: st.swaps,
             rejected: st.rejected,
+            pool: self.shared.pool.metrics(),
         }
     }
 

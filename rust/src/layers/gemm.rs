@@ -260,9 +260,15 @@ impl Im2col {
 }
 
 /// A depthwise convolution's spatial tap table, built once at plan
-/// compile time: `table[pix * taps + t]` = spatial base offset
-/// `iy * w + ix` (multiplied by the channel count at use) of tap
-/// `t = ky * kw + kx` for output pixel `pix`, or [`PAD`].
+/// compile time: the per-output-pixel offsets `iy * w + ix` (multiplied
+/// by the channel count at use) of tap `t = ky * kw + kx`, or [`PAD`].
+///
+/// Stored per output *row class* like [`Im2col`]: horizontal padding
+/// depends only on `ox`, and every vertically-unclipped ("interior")
+/// row's taps are the first interior row's plus a pure vertical delta
+/// `(oy - oy_ref) * stride * w` — so interior rows share one class table
+/// and only vertically-clipped edge rows get classes of their own
+/// (`O(classes * ow * taps)` resident instead of `O(oh * ow * taps)`).
 #[derive(Clone, Debug)]
 pub struct DwTable {
     /// Spatial taps `kh * kw`.
@@ -271,9 +277,18 @@ pub struct DwTable {
     c: usize,
     /// Output pixels `oh * ow`.
     op: usize,
+    /// Output row width (pixels per output row).
+    ow: usize,
     /// Input elements per sample (`h * w * c`).
     in_len: usize,
-    table: Vec<usize>,
+    /// Concatenated row-class tables: class `cl` occupies
+    /// `rows[cl*ow*taps .. (cl+1)*ow*taps]`, and `rows[(cl*ow + ox)*taps
+    /// + t]` = spatial offset of tap `t` at column `ox` (before the
+    /// per-row delta), or [`PAD`].
+    rows: Vec<usize>,
+    /// `row_map[oy]` = `(class, delta)`: the class table for output row
+    /// `oy` and the spatial offset added to every non-[`PAD`] entry.
+    row_map: Vec<(usize, usize)>,
 }
 
 impl DwTable {
@@ -292,10 +307,23 @@ impl DwTable {
         let (pad_top, pad_left, _, _) = pad_offsets(h, w, kh, kw, stride, padding);
         let taps = kh * kw;
         let op = oh * ow;
-        let mut table = vec![PAD; op * taps];
+        // Same interior predicate as `Im2col::build`: no tap vertically
+        // clipped, so the row is a pure translation of the reference.
+        let interior = |oy: usize| oy * stride >= pad_top && oy * stride + kh <= h + pad_top;
+        let mut rows: Vec<usize> = Vec::new();
+        let mut row_map: Vec<(usize, usize)> = Vec::with_capacity(oh);
+        let mut interior_ref: Option<(usize, usize)> = None; // (class, oy_ref)
         for oy in 0..oh {
+            if interior(oy) {
+                if let Some((class, oy_ref)) = interior_ref {
+                    row_map.push((class, (oy - oy_ref) * stride * w));
+                    continue;
+                }
+            }
+            let class = rows.len() / (ow * taps);
+            rows.resize(rows.len() + ow * taps, PAD);
             for ox in 0..ow {
-                let row = &mut table[(oy * ow + ox) * taps..(oy * ow + ox + 1) * taps];
+                let row = &mut rows[(class * ow + ox) * taps..(class * ow + ox + 1) * taps];
                 for ky in 0..kh {
                     let iy = (oy * stride + ky) as isize - pad_top as isize;
                     if iy < 0 || iy >= h as isize {
@@ -310,8 +338,13 @@ impl DwTable {
                     }
                 }
             }
+            row_map.push((class, 0));
+            if interior(oy) {
+                interior_ref = Some((class, oy));
+            }
         }
-        DwTable { taps, c, op, in_len: h * w * c, table }
+        rows.shrink_to_fit();
+        DwTable { taps, c, op, ow, in_len: h * w * c, rows, row_map }
     }
 
     /// Independent `(sample, pixel-tile)` work units at batch `batch`
@@ -329,18 +362,28 @@ impl DwTable {
         (s * self.op + (t * MR).min(self.op)) * self.c
     }
 
-    /// Resident bytes of the tap table (still the full per-pixel layout;
-    /// the per-row-class shrink [`Im2col`] got is a recorded follow-up).
+    /// Resident bytes of the tap table (row-class tables plus the
+    /// per-row map) — what [`crate::plan::Plan::memory_report`] charges.
     pub fn table_bytes(&self) -> usize {
-        self.table.len() * std::mem::size_of::<usize>()
+        self.rows.len() * std::mem::size_of::<usize>()
+            + self.row_map.len() * std::mem::size_of::<(usize, usize)>()
+    }
+
+    /// Bytes the full per-pixel `O(op * taps)` layout would occupy — the
+    /// baseline [`crate::plan::Plan::memory_report`] compares against.
+    pub fn full_table_bytes(&self) -> usize {
+        self.op * self.taps * std::mem::size_of::<usize>()
     }
 }
 
 /// An average pool's spatial tap table, built once at plan compile time:
-/// `table[pix * taps + t]` = spatial base offset `iy * w + ix` (multiplied
-/// by the channel count at use) of tap `t = ky * pw + kx` for output pixel
-/// `pix`. Pool windows tile the input exactly (shape inference rejects
-/// anything else), so — unlike [`DwTable`] — no entry is ever [`PAD`].
+/// the per-output-pixel offsets `iy * w + ix` (multiplied by the channel
+/// count at use) of tap `t = ky * pw + kx`. Pool windows tile the input
+/// exactly (shape inference rejects anything else), so — unlike
+/// [`DwTable`] — no entry is ever [`PAD`], and *every* output row is a
+/// pure vertical translation of row 0: the row-class factoring
+/// degenerates to a single class table of `ow * taps` entries plus a
+/// per-row delta `oy * ph * w`.
 #[derive(Clone, Debug)]
 pub struct PoolTable {
     /// Window taps `ph * pw`.
@@ -349,9 +392,16 @@ pub struct PoolTable {
     c: usize,
     /// Output pixels `oh * ow`.
     op: usize,
+    /// Output row width (pixels per output row).
+    ow: usize,
     /// Input elements per sample (`h * w * c`).
     in_len: usize,
-    table: Vec<usize>,
+    /// The single class table: `rows[ox * taps + t]` = spatial offset of
+    /// tap `t` at column `ox` of output row 0.
+    rows: Vec<usize>,
+    /// `row_map[oy]` = `(0, oy * ph * w)` — kept in the same shape as
+    /// [`DwTable::row_map`] so kernels resolve rows identically.
+    row_map: Vec<(usize, usize)>,
 }
 
 impl PoolTable {
@@ -362,17 +412,16 @@ impl PoolTable {
         let (oh, ow) = (out_shape[0], out_shape[1]);
         let taps = ph * pw;
         let op = oh * ow;
-        let mut table = Vec::with_capacity(op * taps);
-        for oy in 0..oh {
-            for ox in 0..ow {
-                for ky in 0..ph {
-                    for kx in 0..pw {
-                        table.push((oy * ph + ky) * w + (ox * pw + kx));
-                    }
+        let mut rows = Vec::with_capacity(ow * taps);
+        for ox in 0..ow {
+            for ky in 0..ph {
+                for kx in 0..pw {
+                    rows.push(ky * w + (ox * pw + kx));
                 }
             }
         }
-        PoolTable { taps, c, op, in_len: in_shape.iter().product(), table }
+        let row_map = (0..oh).map(|oy| (0, oy * ph * w)).collect();
+        PoolTable { taps, c, op, ow, in_len: in_shape.iter().product(), rows, row_map }
     }
 
     /// Independent `(sample, pixel-tile)` work units at batch `batch`
@@ -390,10 +439,17 @@ impl PoolTable {
         (s * self.op + (t * MR).min(self.op)) * self.c
     }
 
-    /// Resident bytes of the tap table (full per-pixel layout, like
-    /// [`DwTable::table_bytes`]).
+    /// Resident bytes of the tap table (the single class table plus the
+    /// per-row map), like [`DwTable::table_bytes`].
     pub fn table_bytes(&self) -> usize {
-        self.table.len() * std::mem::size_of::<usize>()
+        self.rows.len() * std::mem::size_of::<usize>()
+            + self.row_map.len() * std::mem::size_of::<(usize, usize)>()
+    }
+
+    /// Bytes the full per-pixel `O(op * taps)` layout would occupy — the
+    /// baseline [`crate::plan::Plan::memory_report`] compares against.
+    pub fn full_table_bytes(&self) -> usize {
+        self.op * self.taps * std::mem::size_of::<usize>()
     }
 }
 
@@ -453,17 +509,27 @@ pub fn avg_pool_blocked_tiles<S: Scalar>(
         let mp = MR.min(op - p0);
         let xs = &x[s * pt.in_len..(s + 1) * pt.in_len];
         let rel = pt.tile_out_start(batch, u) - base0;
+        // Resolve each lane's row-class table and vertical delta once
+        // per tile (same scheme as `conv_blocked_tiles`).
+        let mut lane_tab: [&[usize]; MR] = [Default::default(); MR];
+        let mut lane_delta = [0usize; MR];
+        for r in 0..mp {
+            let (oy, ox) = ((p0 + r) / pt.ow, (p0 + r) % pt.ow);
+            let (class, delta) = pt.row_map[oy];
+            lane_tab[r] = &pt.rows[(class * pt.ow + ox) * taps..(class * pt.ow + ox + 1) * taps];
+            lane_delta[r] = delta;
+        }
         // Accumulator tile `[pixel][channel]`, seeded from tap 0 —
         // the window is never empty and never padded.
         acc.clear();
         acc.reserve(mp * c);
         for r in 0..mp {
-            let off = pt.table[(p0 + r) * taps];
+            let off = lane_tab[r][0] + lane_delta[r];
             acc.extend_from_slice(&xs[off * c..(off + 1) * c]);
         }
         for t in 1..taps {
             for r in 0..mp {
-                let off = pt.table[(p0 + r) * taps + t];
+                let off = lane_tab[r][t] + lane_delta[r];
                 let xrow = &xs[off * c..(off + 1) * c];
                 let arow = &mut acc[r * c..(r + 1) * c];
                 for (a, xv) in arow.iter_mut().zip(xrow) {
@@ -539,6 +605,17 @@ pub fn depthwise_blocked_tiles<S: Scalar>(
         let mp = MR.min(op - p0);
         let xs = &x[s * dw.in_len..(s + 1) * dw.in_len];
         let rel = dw.tile_out_start(batch, u) - base0;
+        // Resolve each lane's row-class table and vertical delta once
+        // per tile (same scheme as `conv_blocked_tiles`). [`PAD`] taps
+        // are class-table entries, so the check precedes the delta.
+        let mut lane_tab: [&[usize]; MR] = [Default::default(); MR];
+        let mut lane_delta = [0usize; MR];
+        for r in 0..mp {
+            let (oy, ox) = ((p0 + r) / dw.ow, (p0 + r) % dw.ow);
+            let (class, delta) = dw.row_map[oy];
+            lane_tab[r] = &dw.rows[(class * dw.ow + ox) * taps..(class * dw.ow + ox + 1) * taps];
+            lane_delta[r] = delta;
+        }
         // Accumulator tile `[pixel][channel]`, seeded with the bias —
         // the same per-chain start as the scalar kernel.
         acc.clear();
@@ -549,10 +626,11 @@ pub fn depthwise_blocked_tiles<S: Scalar>(
         for t in 0..taps {
             let wrow = &kd[t * c..(t + 1) * c];
             for r in 0..mp {
-                let off = dw.table[(p0 + r) * taps + t];
+                let off = lane_tab[r][t];
                 if off == PAD {
                     continue; // zero-padded tap, skipped for every channel
                 }
+                let off = off + lane_delta[r];
                 let xrow = &xs[off * c..(off + 1) * c];
                 let arow = &mut acc[r * c..(r + 1) * c];
                 for ((a, xv), &wv) in arow.iter_mut().zip(xrow).zip(wrow) {

@@ -54,6 +54,7 @@ pub mod interval;
 pub mod json;
 pub mod layers;
 pub mod model;
+pub mod obs;
 pub mod plan;
 pub mod prop;
 pub mod quant;

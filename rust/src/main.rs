@@ -26,6 +26,13 @@
 //!   a model JSON (steps, buffer liveness, hazard edges, memory report):
 //!   `rigor plan model.json [--format f64|emu-k<k>] [--kernels
 //!   blocked|scalar]`. The same text the golden snapshot suite pins.
+//! * `stats`   — serve a synthetic load under an `obs::ObsPolicy` and
+//!   print the unified observability snapshot (pool/queue counters,
+//!   latency percentiles, executor gauges); `--trace full --trace-out
+//!   t.json` exports the run's Chrome-trace JSON.
+//! * `profile` — one CAA pass with the per-step bound probe: each
+//!   step's absolute/relative bound width next to its wall-clock cost
+//!   (the paper's conv-widens / activation-recontracts profile).
 
 use rigor::api::{AnalysisRequest, ExecMode, Session};
 use rigor::cli::{App, CmdSpec, OptSpec};
@@ -105,6 +112,31 @@ fn app() -> App {
                 ],
             },
             CmdSpec {
+                name: "stats",
+                help: "serve a load and print the unified observability snapshot",
+                opts: vec![
+                    OptSpec { name: "model", help: "model JSON path (overrides --zoo)", default: Some(String::new()) },
+                    OptSpec { name: "zoo", help: "built-in zoo model name", default: Some("residual_cnn".into()) },
+                    OptSpec { name: "requests", help: "samples to serve", default: Some("64".into()) },
+                    OptSpec { name: "batch", help: "micro-batch size", default: Some("8".into()) },
+                    OptSpec { name: "workers", help: "pool workers (0 = host)", default: Some("0".into()) },
+                    OptSpec { name: "trace", help: "observability policy: disabled | counters | full", default: Some("counters".into()) },
+                    OptSpec { name: "trace-out", help: "write the Chrome-trace JSON here (needs --trace full)", default: Some(String::new()) },
+                    OptSpec { name: "json", help: "emit the snapshot as JSON", default: None },
+                ],
+            },
+            CmdSpec {
+                name: "profile",
+                help: "per-step CAA error-bound profile (bound widths next to wall-clock)",
+                opts: vec![
+                    OptSpec { name: "model", help: "model JSON path (overrides --zoo)", default: Some(String::new()) },
+                    OptSpec { name: "zoo", help: "built-in zoo model name", default: Some("tiny_cnn".into()) },
+                    OptSpec { name: "u-max-log2", help: "-log2 of u_max (paper: 7)", default: Some("7".into()) },
+                    OptSpec { name: "radius", help: "input box radius", default: Some("0".into()) },
+                    OptSpec { name: "json", help: "emit the profile as JSON", default: None },
+                ],
+            },
+            CmdSpec {
                 name: "run",
                 help: "execute a model on input vectors (engine plan or PJRT artifact)",
                 opts: vec![
@@ -130,6 +162,8 @@ fn main() -> anyhow::Result<()> {
         "tune" => cmd_tune(&parsed),
         "fleet" => cmd_fleet(&parsed),
         "plan" => cmd_plan(&parsed),
+        "stats" => cmd_stats(&parsed),
+        "profile" => cmd_profile(&parsed),
         "run" => cmd_run(&parsed),
         _ => unreachable!(),
     }
@@ -345,22 +379,26 @@ fn cmd_fleet(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
         served as f64 / secs.max(1e-9)
     );
 
+    // The unified observability snapshot replaces the old ad-hoc
+    // per-queue printout: same counters, plus the coordinator pool and
+    // the registry's latency histograms / executor gauges.
     let snap = fleet.snapshot();
-    println!("{:<28} {:>9} {:>8} {:>6} {:>6} {:>6} {:>8} {:>10}",
-        "queue", "submitted", "batches", "full", "timer", "drain", "largest", "high-water");
+    let mut obs_snap = rigor::obs::Snapshot::capture().with_pool(snap.pool).with_fleet(
+        rigor::obs::FleetStat {
+            models: snap.models.len(),
+            total_pending: snap.total_pending,
+            swaps: snap.swaps,
+            rejected: snap.rejected,
+        },
+    );
     for q in &snap.queues {
-        let m = &q.metrics;
-        println!(
-            "{:<28} {:>9} {:>8} {:>6} {:>6} {:>6} {:>8} {:>10}",
+        obs_snap = obs_snap.with_queue(
             format!("{}/{}", q.key.model, q.key.format),
-            m.submitted, m.batches, m.flushed_full, m.flushed_timer, m.flushed_drain,
-            m.max_batch_observed, m.queue_high_water
+            q.depth,
+            q.metrics,
         );
     }
-    println!(
-        "fleet: {} submitted, {} batches, {} swaps, {} rejected, {} pending",
-        snap.submitted(), snap.batches(), snap.swaps, snap.rejected, snap.total_pending
-    );
+    print!("{}", obs_snap.to_text());
     Ok(())
 }
 
@@ -385,6 +423,146 @@ fn cmd_plan(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
     let model = session.load_model(Path::new(path))?;
     let plan = Plan::for_format_with_kernels(&model, format, kernels)?;
     print!("{}", plan.to_text());
+    Ok(())
+}
+
+/// Resolve `--model <path>` (through the session cache) or `--zoo <name>`
+/// (built-in generator) into a model, path winning when both are set.
+fn model_arg(p: &rigor::cli::Parsed) -> anyhow::Result<std::sync::Arc<rigor::model::Model>> {
+    use rigor::model::zoo;
+    let path = p.get("model").unwrap_or("");
+    if !path.is_empty() {
+        return Session::new().load_model(Path::new(path));
+    }
+    let name = p.get("zoo").unwrap_or("");
+    Ok(std::sync::Arc::new(match name {
+        "tiny_mlp" => zoo::tiny_mlp(7),
+        "tiny_cnn" => zoo::tiny_cnn(5),
+        "avgpool_cnn" => zoo::avgpool_cnn(5),
+        "tiny_pendulum" => zoo::tiny_pendulum(3),
+        "residual_mlp" => zoo::residual_mlp(9),
+        "residual_cnn" => zoo::residual_cnn(5),
+        other => anyhow::bail!(
+            "unknown zoo model '{other}' (tiny_mlp | tiny_cnn | avgpool_cnn | \
+             tiny_pendulum | residual_mlp | residual_cnn)"
+        ),
+    }))
+}
+
+/// Serve a synthetic load through a micro-batcher under the requested
+/// [`rigor::obs::ObsPolicy`] and print the unified snapshot — the
+/// runtime window into the registry `rigor fleet` also reports through.
+/// `--trace full --trace-out <path>` additionally writes the run's
+/// Chrome-trace JSON (request/flush/drive/wave/step spans).
+fn cmd_stats(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    use rigor::coordinator::Pool;
+    use rigor::obs::{self, ObsPolicy, Snapshot, TraceSink};
+    use rigor::plan::Plan;
+    use rigor::serve::{BatchPolicy, MicroBatcher};
+    use std::sync::Arc;
+
+    let policy: ObsPolicy = p.get("trace").unwrap().parse()?;
+    obs::set_policy(policy);
+    let trace_out = p.get("trace-out").unwrap_or("").to_string();
+    if !trace_out.is_empty() && policy != ObsPolicy::Full {
+        anyhow::bail!("--trace-out needs --trace full (no spans are recorded otherwise)");
+    }
+
+    let model = model_arg(p)?;
+    let plan = Arc::new(Plan::for_reference(&model)?);
+    let workers = match p.get_usize("workers")? {
+        0 => std::thread::available_parallelism().map_or(2, |n| n.get()),
+        w => w,
+    };
+    let pool = Arc::new(Pool::new(workers, 64));
+    let reqs = p.get_usize("requests")?.max(1);
+    let batch = p.get_usize("batch")?.max(1);
+    let n = plan.input_len();
+    let batcher = MicroBatcher::new(
+        Arc::clone(&plan),
+        Arc::clone(&pool),
+        BatchPolicy { max_batch: batch, ..BatchPolicy::default() },
+    );
+    let tickets: Vec<rigor::serve::Ticket> = (0..reqs)
+        .map(|i| {
+            let sample: Vec<f64> = (0..n).map(|j| ((i * n + j) % 17) as f64 / 17.0).collect();
+            batcher.submit(sample)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    for t in tickets {
+        t.wait()?;
+    }
+
+    let snap = Snapshot::capture()
+        .with_pool(pool.metrics())
+        .with_queue(plan.model_name(), batcher.pending(), batcher.metrics());
+    if p.flag("json") {
+        println!("{}", rigor::json::to_string_pretty(&snap.to_json()));
+    } else {
+        print!("{}", snap.to_text());
+    }
+    if !trace_out.is_empty() {
+        std::fs::write(&trace_out, TraceSink::export())?;
+        println!("wrote Chrome trace to {trace_out}");
+    }
+    Ok(())
+}
+
+/// One CAA pass with the per-step bound probe: prints each step's max
+/// absolute/relative bound width (units of u) next to its wall-clock
+/// cost — the paper's per-layer profile, where conv steps widen the
+/// relative bound and well-conditioned activations re-contract it. Uses
+/// the **unfused** plan so activation steps get their own rows.
+fn cmd_profile(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
+    use rigor::analysis::{bound_profile_with_plan, AnalysisConfig};
+    use rigor::caa::Ctx;
+    use rigor::plan::Plan;
+
+    let model = model_arg(p)?;
+    let plan = Plan::unfused(&model)?;
+    let u_log2 = p.get_usize("u-max-log2")? as i32;
+    let cfg = AnalysisConfig {
+        ctx: Ctx::with_u_max(2f64.powi(-u_log2)),
+        input_radius: p.get_f64("radius")?,
+        ..AnalysisConfig::default()
+    };
+    let n = plan.input_len();
+    let sample: Vec<f64> = (0..n).map(|j| (j % 17) as f64 / 17.0).collect();
+    let profile = bound_profile_with_plan(&plan, &cfg, &sample)?;
+    if p.flag("json") {
+        let snap = rigor::obs::Snapshot::capture();
+        println!("{}", rigor::json::to_string_pretty(&snap.to_json()));
+        return Ok(());
+    }
+    println!(
+        "bound profile: {} (u_max = 2^-{u_log2}, {} steps)",
+        profile.model,
+        profile.steps.len()
+    );
+    println!("{:>4} {:<18} {:>9} {:>12} {:>12} {:>6} {:>10}", "step", "kind", "out", "abs_u", "rel_u", "Δrel", "time");
+    let mut prev_rel = f64::NAN;
+    for s in &profile.steps {
+        let trend = if !prev_rel.is_finite() || !s.rel_u.is_finite() {
+            "  —"
+        } else if s.rel_u > prev_rel {
+            "  ↑" // widening (conv/dense accumulation)
+        } else if s.rel_u < prev_rel {
+            "  ↓" // re-contracting (well-conditioned activation)
+        } else {
+            "  ="
+        };
+        println!(
+            "{:>4} {:<18} {:>9} {:>12.3e} {:>12.3e} {:>6} {:>8.1}µs",
+            s.index,
+            s.kind,
+            s.out_len,
+            s.abs_u,
+            s.rel_u,
+            trend,
+            s.secs * 1e6
+        );
+        prev_rel = s.rel_u;
+    }
     Ok(())
 }
 

@@ -1,0 +1,1293 @@
+//! Unified observability: span tracing, latency histograms, and
+//! error-bound telemetry, threaded through every execution layer.
+//!
+//! The engine's instruments used to be three disconnected counter
+//! structs ([`PoolMetrics`], [`crate::serve::ServeMetrics`],
+//! [`crate::fleet::FleetSnapshot`]). This module adds the missing
+//! layers and unifies the reporting surface:
+//!
+//! * **Span tracing** — a lock-free, preallocated ring of spans
+//!   ([`TraceSink`]) recorded at request, flush, plan-drive, wave, and
+//!   step granularity. Per-request trace ids are minted at
+//!   [`crate::serve::MicroBatcher::submit`] / [`crate::fleet::Fleet`]
+//!   admission and carried on [`crate::serve::Ticket`]; step spans are
+//!   tagged with the [`crate::plan::StepKind`] token, the
+//!   [`crate::plan::KernelPath`], the batch size, and the tile/worker
+//!   counts of the sharded executor. [`TraceSink::export`] renders
+//!   Chrome-trace-compatible JSON (load it at `chrome://tracing` or
+//!   [ui.perfetto.dev](https://ui.perfetto.dev)).
+//! * **Metrics registry** — [`Registry`] holds fixed log-bucket atomic
+//!   [`Histogram`]s (p50/p95/p99 for submit→resolve, queue wait, and
+//!   per-step execute) plus pool-utilization gauges (drives, waves,
+//!   busy workers per wave, helpers recruited by
+//!   [`crate::coordinator::Pool::scope`]). [`Snapshot`] folds the
+//!   registry and the three legacy counter structs into one text/JSON
+//!   report (the legacy structs remain as compatibility shims).
+//! * **Error-bound telemetry** — CAA passes can record a per-step
+//!   [`BoundProfile`] (max absolute/relative bound width after each
+//!   step) into the registry; `rigor profile` prints it next to
+//!   wall-clock cost, making the paper's signature per-layer shape
+//!   (convolutions widen relative error, well-conditioned activations
+//!   re-contract it) directly observable.
+//!
+//! # Overhead contract
+//!
+//! Everything is gated by [`ObsPolicy`], default [`ObsPolicy::Disabled`]
+//! (env `RIGOR_TRACE`, parsed by [`ObsPolicy::from_env_value`]). The
+//! disabled path is **one relaxed atomic load and a branch** per
+//! instrumentation site: no clock reads, no allocation, no stores. The
+//! counting-allocator test in `tests/obs.rs` pins zero steady-state
+//! allocations on the serve hot path, and `benches/perf_scaling`
+//! section 10 enforces a ≤2% wall-clock ceiling for the instrumented
+//! (disabled) drive against an uninstrumented step loop. At
+//! [`ObsPolicy::Counters`] each site adds a monotonic clock read and a
+//! handful of relaxed atomic increments; [`ObsPolicy::Full`]
+//! additionally writes one span record into the preallocated ring —
+//! still allocation-free after the first recorded span.
+
+use crate::coordinator::PoolMetrics;
+use crate::json::Value;
+use crate::serve::ServeMetrics;
+use std::ffi::OsStr;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Policy
+// ---------------------------------------------------------------------------
+
+/// How much the observability layer records — the tri-state sampling
+/// gate every instrumentation site consults first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObsPolicy {
+    /// Record nothing. The contract: one relaxed atomic load + branch
+    /// per site, zero allocations, zero clock reads.
+    Disabled,
+    /// Latency histograms and utilization gauges, no spans.
+    Counters,
+    /// Counters plus span records in the [`TraceSink`] ring.
+    Full,
+}
+
+impl ObsPolicy {
+    /// Resolve the process-default policy from the `RIGOR_TRACE`
+    /// environment variable (read once, then cached — see
+    /// [`set_policy`] for the runtime override).
+    pub fn from_env() -> ObsPolicy {
+        ObsPolicy::from_env_value(std::env::var_os("RIGOR_TRACE").as_deref())
+    }
+
+    /// The testable core of [`ObsPolicy::from_env`] (same shape as
+    /// `KernelPath::from_env_value` / `Parallelism::from_env_value`):
+    /// `full`/`trace`/`2` → [`ObsPolicy::Full`], `counters`/`1` →
+    /// [`ObsPolicy::Counters`], anything else — unset, empty, `0`,
+    /// `off`, garbage — stays [`ObsPolicy::Disabled`].
+    pub fn from_env_value(v: Option<&OsStr>) -> ObsPolicy {
+        match v.and_then(OsStr::to_str).map(str::trim) {
+            Some("full") | Some("trace") | Some("2") => ObsPolicy::Full,
+            Some("counters") | Some("1") => ObsPolicy::Counters,
+            _ => ObsPolicy::Disabled,
+        }
+    }
+
+    /// Canonical token (`disabled` / `counters` / `full`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ObsPolicy::Disabled => "disabled",
+            ObsPolicy::Counters => "counters",
+            ObsPolicy::Full => "full",
+        }
+    }
+}
+
+impl std::str::FromStr for ObsPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<ObsPolicy, Self::Err> {
+        match s.trim() {
+            "disabled" | "off" | "0" | "" => Ok(ObsPolicy::Disabled),
+            "counters" | "1" => Ok(ObsPolicy::Counters),
+            "full" | "trace" | "2" => Ok(ObsPolicy::Full),
+            other => anyhow::bail!("unknown trace policy '{other}' (disabled|counters|full)"),
+        }
+    }
+}
+
+/// Sentinel: policy not yet resolved from the environment.
+const POLICY_UNSET: u8 = u8::MAX;
+static POLICY: AtomicU8 = AtomicU8::new(POLICY_UNSET);
+
+/// The process-wide [`ObsPolicy`]. First call resolves `RIGOR_TRACE`;
+/// after that it is exactly one relaxed atomic load.
+#[inline]
+pub fn policy() -> ObsPolicy {
+    match POLICY.load(Ordering::Relaxed) {
+        0 => ObsPolicy::Disabled,
+        1 => ObsPolicy::Counters,
+        2 => ObsPolicy::Full,
+        _ => {
+            let p = ObsPolicy::from_env();
+            set_policy(p);
+            p
+        }
+    }
+}
+
+/// Override the process-wide policy at runtime (tests, the `rigor
+/// stats` command). Takes effect at the next instrumentation site.
+pub fn set_policy(p: ObsPolicy) {
+    POLICY.store(p as u8, Ordering::Relaxed);
+}
+
+/// `true` when counters (and possibly spans) are being recorded —
+/// gates every clock read on the instrumented paths.
+#[inline]
+pub fn measuring() -> bool {
+    policy() != ObsPolicy::Disabled
+}
+
+/// `true` when span records are being written to the ring.
+#[inline]
+pub fn tracing() -> bool {
+    policy() == ObsPolicy::Full
+}
+
+/// Capture a timestamp for a site that will call one of the `*_done`
+/// helpers — `None` (and no clock read) when observability is off.
+#[inline]
+pub fn mark() -> Option<Instant> {
+    if measuring() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace ids, tags, clock
+// ---------------------------------------------------------------------------
+
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+/// Mint a per-request trace id (nonzero, process-unique) when tracing
+/// is on; `0` — the "untraced" id — otherwise. Called at
+/// `MicroBatcher::submit` / fleet admission; the id rides on
+/// [`crate::serve::Ticket`] and tags the request span.
+#[inline]
+pub fn next_trace_id() -> u64 {
+    if tracing() {
+        NEXT_TRACE.fetch_add(1, Ordering::Relaxed)
+    } else {
+        0
+    }
+}
+
+/// Interned span tags: spans store a `u16` index, export resolves it
+/// back. Tags are `&'static str` (step-kind tokens, fixed site names),
+/// so the table is tiny and append-only; interning happens only while
+/// tracing is on, never on the disabled path.
+static TAGS: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+
+fn intern(tag: &'static str) -> u16 {
+    let mut tags = TAGS.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(i) = tags.iter().position(|t| *t == tag) {
+        return i as u16;
+    }
+    if tags.len() >= u16::MAX as usize {
+        return 0;
+    }
+    tags.push(tag);
+    (tags.len() - 1) as u16
+}
+
+fn tag_name(i: u16) -> &'static str {
+    let tags = TAGS.lock().unwrap_or_else(|e| e.into_inner());
+    tags.get(i as usize).copied().unwrap_or("?")
+}
+
+/// All span timestamps are microseconds since this process-wide epoch
+/// (first observed instant), keeping them small and export-friendly.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn us_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+/// Small dense thread ids for the Chrome-trace `tid` field (std's
+/// `ThreadId` has no stable integer form).
+fn obs_tid() -> u32 {
+    static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t) as u32
+}
+
+// ---------------------------------------------------------------------------
+// Span ring
+// ---------------------------------------------------------------------------
+
+/// Spans the ring holds before wrapping (latest-wins).
+pub const TRACE_CAPACITY: usize = 16 * 1024;
+
+/// Granularity of a recorded span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One request, submit → resolve (tagged with its trace id).
+    Request,
+    /// One micro-batch flush job (gather + drive + scatter).
+    Flush,
+    /// One plan drive (`execute_batch` / pooled wave schedule).
+    Drive,
+    /// One wave of the pooled scheduler.
+    Wave,
+    /// One plan step (serial, sharded-wide, or in-wave).
+    Step,
+}
+
+impl SpanKind {
+    fn code(self) -> u8 {
+        match self {
+            SpanKind::Request => 0,
+            SpanKind::Flush => 1,
+            SpanKind::Drive => 2,
+            SpanKind::Wave => 3,
+            SpanKind::Step => 4,
+        }
+    }
+
+    fn from_code(c: u8) -> SpanKind {
+        match c {
+            0 => SpanKind::Request,
+            1 => SpanKind::Flush,
+            2 => SpanKind::Drive,
+            3 => SpanKind::Wave,
+            _ => SpanKind::Step,
+        }
+    }
+
+    /// Chrome-trace category token.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Flush => "flush",
+            SpanKind::Drive => "drive",
+            SpanKind::Wave => "wave",
+            SpanKind::Step => "step",
+        }
+    }
+}
+
+/// Kernel-path token carried on step spans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PathTag {
+    None,
+    Scalar,
+    Blocked,
+}
+
+impl PathTag {
+    fn name(self) -> &'static str {
+        match self {
+            PathTag::None => "-",
+            PathTag::Scalar => "scalar",
+            PathTag::Blocked => "blocked",
+        }
+    }
+}
+
+/// One exported span (a decoded ring record).
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Granularity.
+    pub kind: SpanKind,
+    /// Site tag: step-kind token for steps, flush cause, etc.
+    pub tag: &'static str,
+    /// Kernel-path token for step spans (`-` elsewhere).
+    pub path: &'static str,
+    /// Trace id (`0` = not tied to one request).
+    pub trace: u64,
+    /// Microseconds since the process trace epoch.
+    pub start_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// Batch size in flight (0 when not applicable).
+    pub batch: u32,
+    /// Kind-specific: tile count (step), wave width (wave), sample
+    /// count (flush), step count (drive).
+    pub a: u32,
+    /// Kind-specific: busy workers (step/wave), wave index.
+    pub b: u32,
+    /// Recording thread (dense per-process id).
+    pub tid: u32,
+}
+
+/// One ring slot. All fields are individual atomics so recording stays
+/// safe code: the writer publishes with a release store of `seq` after
+/// the payload stores. Two writers can only collide on a slot when one
+/// laps the other by the full ring capacity mid-record; the collision
+/// garbles one diagnostic span, never memory.
+struct Slot {
+    /// `1 + global index` of the occupying span; `0` = empty.
+    seq: AtomicU64,
+    trace: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+    /// `kind | path << 8 | tag << 16 | tid << 32`.
+    meta: AtomicU64,
+    /// `batch | a << 32`.
+    dims: AtomicU64,
+    extra: AtomicU64,
+}
+
+struct Ring {
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+}
+
+fn ring() -> &'static Ring {
+    static RING: OnceLock<Ring> = OnceLock::new();
+    RING.get_or_init(|| Ring {
+        slots: (0..TRACE_CAPACITY)
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                trace: AtomicU64::new(0),
+                start_us: AtomicU64::new(0),
+                dur_us: AtomicU64::new(0),
+                meta: AtomicU64::new(0),
+                dims: AtomicU64::new(0),
+                extra: AtomicU64::new(0),
+            })
+            .collect(),
+        head: AtomicU64::new(0),
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn record_span(
+    kind: SpanKind,
+    tag: &'static str,
+    path: PathTag,
+    trace: u64,
+    start_us: u64,
+    dur_us: u64,
+    batch: u32,
+    a: u32,
+    b: u32,
+) {
+    let r = ring();
+    let t = r.head.fetch_add(1, Ordering::Relaxed);
+    let slot = &r.slots[(t % TRACE_CAPACITY as u64) as usize];
+    let meta = kind.code() as u64
+        | (path as u64) << 8
+        | (intern(tag) as u64) << 16
+        | (obs_tid() as u64) << 32;
+    slot.seq.store(0, Ordering::Release); // in-flight: readers skip
+    slot.trace.store(trace, Ordering::Relaxed);
+    slot.start_us.store(start_us, Ordering::Relaxed);
+    slot.dur_us.store(dur_us, Ordering::Relaxed);
+    slot.meta.store(meta, Ordering::Relaxed);
+    slot.dims.store(batch as u64 | (a as u64) << 32, Ordering::Relaxed);
+    slot.extra.store(b, Ordering::Relaxed);
+    slot.seq.store(t + 1, Ordering::Release);
+}
+
+/// The global span ring: a facade over the process-wide preallocated
+/// buffer every instrumented site records into when the policy is
+/// [`ObsPolicy::Full`].
+pub struct TraceSink;
+
+impl TraceSink {
+    /// Spans currently in the ring, oldest first (the ring keeps the
+    /// latest [`TRACE_CAPACITY`] records; earlier ones were
+    /// overwritten). Slots mid-record are skipped.
+    pub fn spans() -> Vec<Span> {
+        let r = ring();
+        let head = r.head.load(Ordering::Acquire);
+        let mut out = Vec::new();
+        for slot in r.slots.iter() {
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == 0 || seq > head {
+                continue;
+            }
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let dims = slot.dims.load(Ordering::Relaxed);
+            let span = Span {
+                kind: SpanKind::from_code((meta & 0xff) as u8),
+                tag: tag_name(((meta >> 16) & 0xffff) as u16),
+                path: match (meta >> 8) & 0xff {
+                    1 => PathTag::Scalar.name(),
+                    2 => PathTag::Blocked.name(),
+                    _ => PathTag::None.name(),
+                },
+                trace: slot.trace.load(Ordering::Relaxed),
+                start_us: slot.start_us.load(Ordering::Relaxed),
+                dur_us: slot.dur_us.load(Ordering::Relaxed),
+                batch: (dims & 0xffff_ffff) as u32,
+                a: (dims >> 32) as u32,
+                b: slot.extra.load(Ordering::Relaxed) as u32,
+                tid: (meta >> 32) as u32,
+            };
+            if slot.seq.load(Ordering::Acquire) == seq {
+                out.push(span);
+            }
+        }
+        out.sort_by_key(|s| (s.start_us, std::cmp::Reverse(s.dur_us)));
+        out
+    }
+
+    /// Total spans ever recorded (including ones the ring has since
+    /// overwritten).
+    pub fn recorded() -> u64 {
+        ring().head.load(Ordering::Relaxed)
+    }
+
+    /// Render the ring as Chrome-trace JSON (`traceEvents` with
+    /// complete `"ph": "X"` events). Nesting is by time containment per
+    /// `tid`, so request → flush → drive → wave → step fall out of the
+    /// recorded timestamps.
+    pub fn export() -> String {
+        let events = TraceSink::spans()
+            .into_iter()
+            .map(|s| {
+                let mut args = vec![("trace", Value::from(s.trace as usize))];
+                if s.batch > 0 {
+                    args.push(("batch", Value::from(s.batch as usize)));
+                }
+                if s.a > 0 {
+                    args.push(("a", Value::from(s.a as usize)));
+                }
+                if s.b > 0 {
+                    args.push(("b", Value::from(s.b as usize)));
+                }
+                if s.path != "-" {
+                    args.push(("path", Value::from(s.path)));
+                }
+                Value::obj(vec![
+                    ("name", Value::from(s.tag)),
+                    ("cat", Value::from(s.kind.name())),
+                    ("ph", Value::from("X")),
+                    ("ts", Value::from(s.start_us as usize)),
+                    ("dur", Value::from(s.dur_us.max(1) as usize)),
+                    ("pid", Value::from(1usize)),
+                    ("tid", Value::from(s.tid as usize)),
+                    ("args", Value::obj(args)),
+                ])
+            })
+            .collect();
+        crate::json::to_string_pretty(&Value::obj(vec![("traceEvents", Value::arr(events))]))
+    }
+
+    /// Drop every recorded span (start a fresh trace window).
+    pub fn clear() {
+        let r = ring();
+        for slot in r.slots.iter() {
+            slot.seq.store(0, Ordering::Release);
+        }
+        r.head.store(0, Ordering::Release);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histograms
+// ---------------------------------------------------------------------------
+
+/// Log-bucket count: bucket `i` covers `[2^i, 2^(i+1))` nanoseconds,
+/// so 48 buckets span 1 ns to ~78 hours.
+pub const HISTO_BUCKETS: usize = 48;
+
+/// A fixed log-bucket atomic latency histogram (nanoseconds). Recording
+/// is two relaxed `fetch_add`s plus one bucket increment — lock-free
+/// and allocation-free.
+pub struct Histogram {
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    buckets: [AtomicU64; HISTO_BUCKETS],
+}
+
+/// Decoded percentiles of one [`Histogram`]. Quantiles are bucket
+/// upper edges (a ≤2x overestimate by construction — stable and cheap,
+/// which is what a serving dashboard wants).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistogramStats {
+    /// Samples recorded.
+    pub count: u64,
+    /// Mean in nanoseconds.
+    pub mean_ns: f64,
+    /// 50th percentile (bucket upper edge), nanoseconds.
+    pub p50_ns: u64,
+    /// 95th percentile (bucket upper edge), nanoseconds.
+    pub p95_ns: u64,
+    /// 99th percentile (bucket upper edge), nanoseconds.
+    pub p99_ns: u64,
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Record one latency observation.
+    pub fn record(&self, ns: u64) {
+        let bucket = (63 - (ns | 1).leading_zeros() as usize).min(HISTO_BUCKETS - 1);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Decode counts into mean and percentile estimates.
+    pub fn stats(&self) -> HistogramStats {
+        let count = self.count.load(Ordering::Relaxed);
+        if count == 0 {
+            return HistogramStats::default();
+        }
+        let sum = self.sum_ns.load(Ordering::Relaxed);
+        let edge = |q: f64| -> u64 {
+            let target = (q * count as f64).ceil() as u64;
+            let mut seen = 0u64;
+            for (i, b) in self.buckets.iter().enumerate() {
+                seen += b.load(Ordering::Relaxed);
+                if seen >= target {
+                    return 1u64 << (i + 1);
+                }
+            }
+            1u64 << HISTO_BUCKETS
+        };
+        HistogramStats {
+            count,
+            mean_ns: sum as f64 / count as f64,
+            p50_ns: edge(0.50),
+            p95_ns: edge(0.95),
+            p99_ns: edge(0.99),
+        }
+    }
+
+    fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// One step of a CAA [`BoundProfile`]: the widest bound in the step's
+/// output buffer, the per-layer quantity the paper plots.
+#[derive(Clone, Debug)]
+pub struct BoundStep {
+    /// Step index in the plan.
+    pub index: usize,
+    /// Step-kind token (`conv2d`, `relu`, …).
+    pub kind: &'static str,
+    /// Output elements inspected.
+    pub out_len: usize,
+    /// Max absolute bound width after this step.
+    pub abs_u: f64,
+    /// Max relative bound width after this step.
+    pub rel_u: f64,
+    /// Wall-clock seconds of this step's CAA execution.
+    pub secs: f64,
+}
+
+/// A per-step error-bound profile recorded during a CAA pass.
+#[derive(Clone, Debug, Default)]
+pub struct BoundProfile {
+    /// Model the profiled plan was compiled from.
+    pub model: String,
+    /// One entry per plan step, in execution order.
+    pub steps: Vec<BoundStep>,
+}
+
+/// The process-wide metrics registry: latency histograms plus
+/// pool-utilization gauges, all atomics (recording never locks), plus
+/// the last recorded [`BoundProfile`].
+pub struct Registry {
+    /// Submit → resolve latency of served requests.
+    pub submit_to_resolve: Histogram,
+    /// Time a sample waited in a micro-batch queue before its flush.
+    pub queue_wait: Histogram,
+    /// Wall-clock of individual plan-step executions.
+    pub step_exec: Histogram,
+    drives: AtomicU64,
+    waves: AtomicU64,
+    wave_busy: AtomicU64,
+    helpers: AtomicU64,
+    bounds: Mutex<Option<BoundProfile>>,
+}
+
+/// Utilization gauges decoded from the [`Registry`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    /// Plan drives observed.
+    pub drives: u64,
+    /// Scheduler waves executed (pooled drives only).
+    pub waves: u64,
+    /// Busy workers summed over waves (`/ waves` = mean utilization).
+    pub wave_busy: u64,
+    /// Helper jobs recruited by `Pool::scope` barriers.
+    pub helpers: u64,
+}
+
+/// The process-wide [`Registry`].
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry {
+        submit_to_resolve: Histogram::new(),
+        queue_wait: Histogram::new(),
+        step_exec: Histogram::new(),
+        drives: AtomicU64::new(0),
+        waves: AtomicU64::new(0),
+        wave_busy: AtomicU64::new(0),
+        helpers: AtomicU64::new(0),
+        bounds: Mutex::new(None),
+    })
+}
+
+impl Registry {
+    /// Decode the utilization gauges.
+    pub fn exec_stats(&self) -> ExecStats {
+        ExecStats {
+            drives: self.drives.load(Ordering::Relaxed),
+            waves: self.waves.load(Ordering::Relaxed),
+            wave_busy: self.wave_busy.load(Ordering::Relaxed),
+            helpers: self.helpers.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Store a CAA bound profile (kept until the next one; shown by
+    /// [`Snapshot`] and `rigor profile`).
+    pub fn record_bounds(&self, profile: BoundProfile) {
+        *self.bounds.lock().unwrap_or_else(|e| e.into_inner()) = Some(profile);
+    }
+
+    /// The last recorded bound profile, if any.
+    pub fn bounds(&self) -> Option<BoundProfile> {
+        self.bounds.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Zero every histogram and gauge and drop the bound profile
+    /// (tests and fresh measurement windows).
+    pub fn reset(&self) {
+        self.submit_to_resolve.reset();
+        self.queue_wait.reset();
+        self.step_exec.reset();
+        self.drives.store(0, Ordering::Relaxed);
+        self.waves.store(0, Ordering::Relaxed);
+        self.wave_busy.store(0, Ordering::Relaxed);
+        self.helpers.store(0, Ordering::Relaxed);
+        *self.bounds.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instrumentation sites
+// ---------------------------------------------------------------------------
+
+/// Convert a [`crate::plan::KernelPath`] to the span token.
+fn path_tag(path: crate::plan::KernelPath) -> PathTag {
+    match path {
+        crate::plan::KernelPath::Scalar => PathTag::Scalar,
+        crate::plan::KernelPath::Blocked => PathTag::Blocked,
+    }
+}
+
+/// Close a step site opened with [`mark`]: step-execute histogram at
+/// [`ObsPolicy::Counters`]+, a step span (kind token, kernel path,
+/// batch, tiles, busy workers) at [`ObsPolicy::Full`].
+#[inline]
+pub fn step_done(
+    t0: Option<Instant>,
+    tag: &'static str,
+    path: crate::plan::KernelPath,
+    batch: usize,
+    tiles: usize,
+    busy: usize,
+) {
+    let Some(t0) = t0 else { return };
+    let ns = t0.elapsed().as_nanos() as u64;
+    registry().step_exec.record(ns);
+    if tracing() {
+        record_span(
+            SpanKind::Step,
+            tag,
+            path_tag(path),
+            0,
+            us_since_epoch(t0),
+            ns / 1_000,
+            batch as u32,
+            tiles as u32,
+            busy as u32,
+        );
+    }
+}
+
+/// Close a plan-drive site (`tag` is `serial` or `pooled`; `steps` the
+/// step count).
+#[inline]
+pub fn drive_done(t0: Option<Instant>, tag: &'static str, batch: usize, steps: usize) {
+    let Some(t0) = t0 else { return };
+    let reg = registry();
+    reg.drives.fetch_add(1, Ordering::Relaxed);
+    if tracing() {
+        record_span(
+            SpanKind::Drive,
+            tag,
+            PathTag::None,
+            0,
+            us_since_epoch(t0),
+            t0.elapsed().as_micros() as u64,
+            batch as u32,
+            steps as u32,
+            0,
+        );
+    }
+}
+
+/// Close a scheduler-wave site: wave/utilization gauges, plus a wave
+/// span (`width` steps, `busy` workers, wave `index`) when tracing.
+#[inline]
+pub fn wave_done(t0: Option<Instant>, batch: usize, width: usize, busy: usize, index: usize) {
+    let Some(t0) = t0 else { return };
+    let reg = registry();
+    reg.waves.fetch_add(1, Ordering::Relaxed);
+    reg.wave_busy.fetch_add(busy as u64, Ordering::Relaxed);
+    if tracing() {
+        record_span(
+            SpanKind::Wave,
+            "wave",
+            PathTag::None,
+            0,
+            us_since_epoch(t0),
+            t0.elapsed().as_micros() as u64,
+            batch as u32,
+            width as u32,
+            index as u32,
+        );
+    }
+}
+
+/// Close a micro-batch flush site (`trace` = first sample's id, so the
+/// flush is findable from any of its requests).
+#[inline]
+pub fn flush_done(t0: Option<Instant>, tag: &'static str, trace: u64, samples: usize) {
+    let Some(t0) = t0 else { return };
+    if tracing() {
+        record_span(
+            SpanKind::Flush,
+            tag,
+            PathTag::None,
+            trace,
+            us_since_epoch(t0),
+            t0.elapsed().as_micros() as u64,
+            samples as u32,
+            samples as u32,
+            0,
+        );
+    }
+}
+
+/// A sample's flush began: record its queue wait (enqueue → flush).
+#[inline]
+pub fn queue_wait_done(enqueued: Instant) {
+    if measuring() {
+        registry().queue_wait.record(enqueued.elapsed().as_nanos() as u64);
+    }
+}
+
+/// A request resolved: submit→resolve histogram plus (when tracing) the
+/// request span covering enqueue → resolution, tagged with its trace id.
+#[inline]
+pub fn request_done(trace: u64, enqueued: Instant) {
+    if !measuring() {
+        return;
+    }
+    let ns = enqueued.elapsed().as_nanos() as u64;
+    registry().submit_to_resolve.record(ns);
+    if tracing() {
+        record_span(
+            SpanKind::Request,
+            "request",
+            PathTag::None,
+            trace,
+            us_since_epoch(enqueued),
+            ns / 1_000,
+            1,
+            0,
+            0,
+        );
+    }
+}
+
+/// `Pool::scope` recruited the calling thread as a helper worker.
+#[inline]
+pub fn helper_recruited() {
+    if measuring() {
+        registry().helpers.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unified snapshot
+// ---------------------------------------------------------------------------
+
+/// One micro-batch queue in a [`Snapshot`] — the legacy
+/// [`ServeMetrics`] counters plus identity and live depth.
+#[derive(Clone, Debug)]
+pub struct QueueStat {
+    /// Queue name (`model/format` for fleet queues, the model name for
+    /// a standalone [`crate::serve::MicroBatcher`]).
+    pub name: String,
+    /// Samples currently pending.
+    pub pending: usize,
+    /// Lifetime counters.
+    pub metrics: ServeMetrics,
+}
+
+/// Fleet-level counters in a [`Snapshot`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetStat {
+    /// Deployed models.
+    pub models: usize,
+    /// Pending samples across all queues.
+    pub total_pending: usize,
+    /// Hot swaps performed.
+    pub swaps: usize,
+    /// Admissions rejected.
+    pub rejected: usize,
+}
+
+/// The unified observability snapshot: one structure (one text form,
+/// one JSON form) that folds the coordinator pool, serve/fleet queues,
+/// the registry's histograms and gauges, the trace ring state, and the
+/// last bound profile. [`PoolMetrics`], [`ServeMetrics`], and
+/// [`crate::fleet::FleetSnapshot`] remain available as shims; this is
+/// the reporting surface.
+#[derive(Debug, Default)]
+pub struct Snapshot {
+    /// Policy at capture time.
+    pub policy_name: &'static str,
+    /// Coordinator pool counters, when a pool is in scope.
+    pub pool: Option<PoolMetrics>,
+    /// Per-queue serve counters.
+    pub queues: Vec<QueueStat>,
+    /// Fleet-level counters, when captured from a fleet.
+    pub fleet: Option<FleetStat>,
+    /// Latency histograms, `(name, stats)`.
+    pub latency: Vec<(&'static str, HistogramStats)>,
+    /// Executor utilization gauges.
+    pub exec: ExecStats,
+    /// Spans recorded so far (ring keeps the last [`TRACE_CAPACITY`]).
+    pub spans_recorded: u64,
+    /// Last CAA bound profile, if one was recorded.
+    pub bounds: Option<BoundProfile>,
+}
+
+impl Snapshot {
+    /// Capture the registry-global parts (histograms, gauges, trace
+    /// state, bound profile). Pool/queue/fleet sections are attached by
+    /// the owning layer via the `with_*` builders.
+    pub fn capture() -> Snapshot {
+        let reg = registry();
+        Snapshot {
+            policy_name: policy().name(),
+            pool: None,
+            queues: Vec::new(),
+            fleet: None,
+            latency: vec![
+                ("submit_to_resolve", reg.submit_to_resolve.stats()),
+                ("queue_wait", reg.queue_wait.stats()),
+                ("step_execute", reg.step_exec.stats()),
+            ],
+            exec: reg.exec_stats(),
+            spans_recorded: TraceSink::recorded(),
+            bounds: reg.bounds(),
+        }
+    }
+
+    /// Attach coordinator-pool counters.
+    pub fn with_pool(mut self, m: PoolMetrics) -> Snapshot {
+        self.pool = Some(m);
+        self
+    }
+
+    /// Attach one micro-batch queue.
+    pub fn with_queue(mut self, name: impl Into<String>, pending: usize, m: ServeMetrics) -> Snapshot {
+        self.queues.push(QueueStat { name: name.into(), pending, metrics: m });
+        self
+    }
+
+    /// Attach fleet-level counters.
+    pub fn with_fleet(mut self, f: FleetStat) -> Snapshot {
+        self.fleet = Some(f);
+        self
+    }
+
+    /// Render the human-readable form (the `rigor stats` / `rigor
+    /// fleet` output).
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        let push = |s: &mut String, line: String| {
+            s.push_str(&line);
+            s.push('\n');
+        };
+        push(&mut s, format!("observability snapshot (policy: {})", self.policy_name));
+        if let Some(p) = &self.pool {
+            push(
+                &mut s,
+                format!(
+                    "pool      workers={} submitted={} completed={} panicked={} high_water={}",
+                    p.workers, p.submitted, p.completed, p.panicked, p.queue_high_water
+                ),
+            );
+        }
+        for q in &self.queues {
+            let m = &q.metrics;
+            push(
+                &mut s,
+                format!(
+                    "queue {:<24} pending={} submitted={} batches={} full={} timer={} drain={} \
+                     largest={} high_water={}",
+                    q.name,
+                    q.pending,
+                    m.submitted,
+                    m.batches,
+                    m.flushed_full,
+                    m.flushed_timer,
+                    m.flushed_drain,
+                    m.max_batch_observed,
+                    m.queue_high_water
+                ),
+            );
+        }
+        if let Some(f) = &self.fleet {
+            push(
+                &mut s,
+                format!(
+                    "fleet     models={} pending={} swaps={} rejected={}",
+                    f.models, f.total_pending, f.swaps, f.rejected
+                ),
+            );
+        }
+        push(
+            &mut s,
+            format!("{:<26} {:>8} {:>12} {:>10} {:>10} {:>10}", "latency", "count", "mean", "p50", "p95", "p99"),
+        );
+        for (name, h) in &self.latency {
+            push(
+                &mut s,
+                format!(
+                    "{:<26} {:>8} {:>12} {:>10} {:>10} {:>10}",
+                    name,
+                    h.count,
+                    fmt_ns(h.mean_ns),
+                    fmt_ns(h.p50_ns as f64),
+                    fmt_ns(h.p95_ns as f64),
+                    fmt_ns(h.p99_ns as f64)
+                ),
+            );
+        }
+        let e = &self.exec;
+        let mean_busy =
+            if e.waves > 0 { e.wave_busy as f64 / e.waves as f64 } else { 0.0 };
+        push(
+            &mut s,
+            format!(
+                "executor  drives={} waves={} mean_busy_workers={:.2} helpers_recruited={}",
+                e.drives, e.waves, mean_busy, e.helpers
+            ),
+        );
+        push(
+            &mut s,
+            format!("trace     spans={} (ring capacity {})", self.spans_recorded, TRACE_CAPACITY),
+        );
+        if let Some(b) = &self.bounds {
+            push(&mut s, format!("bounds    model={} ({} steps)", b.model, b.steps.len()));
+            for st in &b.steps {
+                push(
+                    &mut s,
+                    format!(
+                        "  s{:<3} {:<18} abs_u={:<12.3e} rel_u={:<12.3e} {:>9.1}µs",
+                        st.index,
+                        st.kind,
+                        st.abs_u,
+                        st.rel_u,
+                        st.secs * 1e6
+                    ),
+                );
+            }
+        }
+        s
+    }
+
+    /// Render the machine-readable form.
+    pub fn to_json(&self) -> Value {
+        let histo = |h: &HistogramStats| {
+            Value::obj(vec![
+                ("count", Value::from(h.count as usize)),
+                ("mean_ns", Value::from(h.mean_ns)),
+                ("p50_ns", Value::from(h.p50_ns as usize)),
+                ("p95_ns", Value::from(h.p95_ns as usize)),
+                ("p99_ns", Value::from(h.p99_ns as usize)),
+            ])
+        };
+        let mut fields = vec![("policy", Value::from(self.policy_name))];
+        if let Some(p) = &self.pool {
+            fields.push((
+                "pool",
+                Value::obj(vec![
+                    ("workers", Value::from(p.workers)),
+                    ("submitted", Value::from(p.submitted)),
+                    ("completed", Value::from(p.completed)),
+                    ("panicked", Value::from(p.panicked)),
+                    ("queue_high_water", Value::from(p.queue_high_water)),
+                ]),
+            ));
+        }
+        fields.push((
+            "queues",
+            Value::arr(
+                self.queues
+                    .iter()
+                    .map(|q| {
+                        let m = &q.metrics;
+                        Value::obj(vec![
+                            ("name", Value::from(q.name.as_str())),
+                            ("pending", Value::from(q.pending)),
+                            ("submitted", Value::from(m.submitted)),
+                            ("batches", Value::from(m.batches)),
+                            ("flushed_full", Value::from(m.flushed_full)),
+                            ("flushed_timer", Value::from(m.flushed_timer)),
+                            ("flushed_drain", Value::from(m.flushed_drain)),
+                            ("max_batch_observed", Value::from(m.max_batch_observed)),
+                            ("queue_high_water", Value::from(m.queue_high_water)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+        if let Some(f) = &self.fleet {
+            fields.push((
+                "fleet",
+                Value::obj(vec![
+                    ("models", Value::from(f.models)),
+                    ("total_pending", Value::from(f.total_pending)),
+                    ("swaps", Value::from(f.swaps)),
+                    ("rejected", Value::from(f.rejected)),
+                ]),
+            ));
+        }
+        fields.push((
+            "latency",
+            Value::obj(self.latency.iter().map(|(n, h)| (*n, histo(h))).collect()),
+        ));
+        fields.push((
+            "executor",
+            Value::obj(vec![
+                ("drives", Value::from(self.exec.drives as usize)),
+                ("waves", Value::from(self.exec.waves as usize)),
+                ("wave_busy", Value::from(self.exec.wave_busy as usize)),
+                ("helpers_recruited", Value::from(self.exec.helpers as usize)),
+            ]),
+        ));
+        fields.push(("spans_recorded", Value::from(self.spans_recorded as usize)));
+        if let Some(b) = &self.bounds {
+            fields.push((
+                "bounds",
+                Value::obj(vec![
+                    ("model", Value::from(b.model.as_str())),
+                    (
+                        "steps",
+                        Value::arr(
+                            b.steps
+                                .iter()
+                                .map(|st| {
+                                    Value::obj(vec![
+                                        ("index", Value::from(st.index)),
+                                        ("kind", Value::from(st.kind)),
+                                        ("out_len", Value::from(st.out_len)),
+                                        ("abs_u", Value::from(st.abs_u)),
+                                        ("rel_u", Value::from(st.rel_u)),
+                                        ("secs", Value::from(st.secs)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ));
+        }
+        Value::obj(fields)
+    }
+}
+
+/// Render nanoseconds with an adaptive unit (`ns`/`µs`/`ms`/`s`).
+fn fmt_ns(ns: f64) -> String {
+    if ns <= 0.0 {
+        "0".to_string()
+    } else if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.1}µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.2}s", ns / 1_000_000_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::ffi::OsString;
+
+    /// Policy-mutating tests share this lock (the policy is process
+    /// state; the suite runs tests concurrently).
+    pub(crate) fn policy_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn env_value_parser_matches_the_documented_grammar() {
+        let p = |s: Option<&str>| ObsPolicy::from_env_value(s.map(OsStr::new).as_deref());
+        assert_eq!(p(None), ObsPolicy::Disabled);
+        assert_eq!(p(Some("")), ObsPolicy::Disabled);
+        assert_eq!(p(Some("0")), ObsPolicy::Disabled);
+        assert_eq!(p(Some("off")), ObsPolicy::Disabled);
+        assert_eq!(p(Some("garbage")), ObsPolicy::Disabled);
+        assert_eq!(p(Some("counters")), ObsPolicy::Counters);
+        assert_eq!(p(Some("1")), ObsPolicy::Counters);
+        assert_eq!(p(Some("full")), ObsPolicy::Full);
+        assert_eq!(p(Some("trace")), ObsPolicy::Full);
+        assert_eq!(p(Some("2")), ObsPolicy::Full);
+        assert_eq!(p(Some(" full ")), ObsPolicy::Full);
+        // Non-UTF-8 degrades to Disabled, like the other env parsers.
+        #[cfg(unix)]
+        {
+            use std::os::unix::ffi::OsStringExt;
+            let bad = OsString::from_vec(vec![0xff, 0xfe]);
+            assert_eq!(ObsPolicy::from_env_value(Some(&bad)), ObsPolicy::Disabled);
+        }
+    }
+
+    #[test]
+    fn policy_round_trips_through_fromstr_and_name() {
+        for p in [ObsPolicy::Disabled, ObsPolicy::Counters, ObsPolicy::Full] {
+            assert_eq!(p.name().parse::<ObsPolicy>().unwrap(), p);
+        }
+        assert!("bogus".parse::<ObsPolicy>().is_err());
+    }
+
+    #[test]
+    fn disabled_mints_zero_trace_ids_and_skips_marks() {
+        let _g = policy_lock();
+        let prev = policy();
+        set_policy(ObsPolicy::Disabled);
+        assert_eq!(next_trace_id(), 0);
+        assert!(mark().is_none());
+        set_policy(ObsPolicy::Full);
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert!(a > 0 && b > a);
+        assert!(mark().is_some());
+        set_policy(prev);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_log_bucket_upper_edges() {
+        let h = Histogram::new();
+        for _ in 0..99 {
+            h.record(100); // bucket 6 ([64, 128)), edge 128
+        }
+        h.record(1_000_000); // bucket 19, edge 2^20
+        let s = h.stats();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50_ns, 128);
+        assert_eq!(s.p95_ns, 128);
+        assert_eq!(s.p99_ns, 128);
+        assert!((s.mean_ns - (99.0 * 100.0 + 1e6) / 100.0).abs() < 1e-9);
+        let full = Histogram::new();
+        full.record(1_000_000);
+        assert_eq!(full.stats().p50_ns, 1 << 20);
+        full.reset();
+        assert_eq!(full.stats().count, 0);
+    }
+
+    #[test]
+    fn spans_record_and_export_as_chrome_trace() {
+        let _g = policy_lock();
+        let prev = policy();
+        set_policy(ObsPolicy::Full);
+        TraceSink::clear();
+        let t0 = mark();
+        std::thread::sleep(std::time::Duration::from_micros(50));
+        step_done(t0, "conv2d", crate::plan::KernelPath::Blocked, 8, 12, 4);
+        flush_done(mark(), "flush", 7, 8);
+        let spans = TraceSink::spans();
+        assert!(spans.iter().any(|s| s.kind == SpanKind::Step
+            && s.tag == "conv2d"
+            && s.path == "blocked"
+            && s.batch == 8
+            && s.a == 12
+            && s.b == 4));
+        assert!(spans.iter().any(|s| s.kind == SpanKind::Flush && s.trace == 7));
+        let json = TraceSink::export();
+        let v = crate::json::parse(&json).expect("export parses");
+        let events = v.get("traceEvents").unwrap().as_array().unwrap();
+        assert!(!events.is_empty());
+        assert!(events.iter().all(|e| e.get("ph").unwrap().as_str() == Some("X")));
+        TraceSink::clear();
+        assert_eq!(TraceSink::spans().len(), 0);
+        set_policy(prev);
+    }
+
+    #[test]
+    fn ring_wraps_without_growing() {
+        let _g = policy_lock();
+        let prev = policy();
+        set_policy(ObsPolicy::Full);
+        TraceSink::clear();
+        for _ in 0..(TRACE_CAPACITY + 100) {
+            flush_done(mark(), "wrap", 0, 1);
+        }
+        assert!(TraceSink::recorded() >= (TRACE_CAPACITY + 100) as u64);
+        assert!(TraceSink::spans().len() <= TRACE_CAPACITY);
+        TraceSink::clear();
+        set_policy(prev);
+    }
+
+    #[test]
+    fn snapshot_renders_text_and_json() {
+        let _g = policy_lock();
+        let snap = Snapshot::capture()
+            .with_pool(PoolMetrics {
+                submitted: 10,
+                completed: 10,
+                panicked: 0,
+                queue_high_water: 3,
+                workers: 4,
+            })
+            .with_queue("digits/f64", 0, ServeMetrics::default())
+            .with_fleet(FleetStat { models: 1, total_pending: 0, swaps: 0, rejected: 2 });
+        let text = snap.to_text();
+        assert!(text.contains("pool      workers=4"));
+        assert!(text.contains("queue digits/f64"));
+        assert!(text.contains("rejected=2"));
+        assert!(text.contains("latency"));
+        let v = snap.to_json();
+        assert_eq!(v.path(&["pool", "workers"]).unwrap().as_usize(), Some(4));
+        assert_eq!(v.path(&["fleet", "rejected"]).unwrap().as_usize(), Some(2));
+        assert!(v.get("latency").is_some());
+    }
+}

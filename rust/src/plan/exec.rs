@@ -63,6 +63,7 @@
 use super::{Act, BlockedStep, BufId, KernelPath, Parallelism, Plan, StepKind};
 use crate::coordinator::{with_worker_scratch, Pool};
 use crate::layers::{activation, conv, dense, gemm, merge, norm, pool};
+use crate::obs;
 use crate::tensor::{Scalar, Tensor};
 use anyhow::{bail, Result};
 
@@ -252,8 +253,15 @@ impl Plan {
             );
         }
         arena.load_input(self, input);
+        // Instrumentation lives in this drive loop (not inside
+        // `execute_step_path`) so an uninstrumented baseline remains
+        // reachable through the public step API — that is what the
+        // `perf_scaling` disabled-overhead floor compares against.
+        let span_path = if S::BLOCKED_ELIGIBLE { path } else { KernelPath::Scalar };
         for idx in 0..self.steps().len() {
+            let t0 = obs::mark();
             self.execute_step_path(idx, ctx, arena, path);
+            obs::step_done(t0, self.steps()[idx].kind.name(), span_path, 1, 0, 1);
         }
         Ok(&arena.bufs[self.output_buf()])
     }
@@ -509,10 +517,17 @@ impl Plan {
                 input.len()
             );
         }
+        let t_drive = obs::mark();
         arena.load_batch(self, input, batch);
+        // Per-step instrumentation lives in this drive loop, not inside
+        // `execute_step_batch_path` (see `execute_path`).
+        let span_path = if S::BLOCKED_ELIGIBLE { path } else { KernelPath::Scalar };
         for idx in 0..self.steps().len() {
+            let t0 = obs::mark();
             self.execute_step_batch_path(idx, batch, ctx, arena, path);
+            obs::step_done(t0, self.steps()[idx].kind.name(), span_path, batch, 0, 1);
         }
+        obs::drive_done(t_drive, "serial", batch, self.steps().len());
         Ok(&arena.bufs[self.output_buf()])
     }
 
@@ -790,6 +805,7 @@ impl Plan {
             );
         }
         let path = if S::BLOCKED_ELIGIBLE { path } else { KernelPath::Scalar };
+        let t_drive = obs::mark();
         arena.load_batch(self, input, batch);
 
         // Wave scheduler: repeatedly run the set of steps whose
@@ -801,6 +817,7 @@ impl Plan {
         let mut done = vec![false; n];
         let mut wave: Vec<usize> = Vec::new();
         let mut n_done = 0;
+        let mut wave_idx = 0usize;
         while n_done < n {
             wave.clear();
             for (i, d) in deps.iter().enumerate() {
@@ -809,23 +826,29 @@ impl Plan {
                 }
             }
             debug_assert!(!wave.is_empty(), "step dependency cycle");
-            if wave.len() == 1 {
-                self.execute_step_wide(wave[0], batch, ctx, arena, path, pool, par);
+            let t_wave = obs::mark();
+            let busy = if wave.len() == 1 {
+                self.execute_step_wide(wave[0], batch, ctx, arena, path, pool, par)
             } else {
-                self.execute_wave_concurrent(&wave, batch, ctx, arena, path, pool, par);
-            }
+                self.execute_wave_concurrent(&wave, batch, ctx, arena, path, pool, par)
+            };
+            obs::wave_done(t_wave, batch, wave.len(), busy, wave_idx);
+            wave_idx += 1;
             n_done += wave.len();
             for &i in &wave {
                 done[i] = true;
             }
         }
+        obs::drive_done(t_drive, "pooled", batch, n);
         Ok(&arena.bufs[self.output_buf()])
     }
 
     /// One step of a pooled drive, intra-op sharded across the pool when
     /// it is a blocked step with enough work (see
     /// [`Plan::execute_batch_pooled`]); everything else falls through to
-    /// the serial step executor.
+    /// the serial step executor. Returns the busy-worker count (tile
+    /// groups actually sharded; `1` for the serial fallback) for the
+    /// caller's wave gauge.
     #[allow(clippy::too_many_arguments)]
     fn execute_step_wide<S>(
         &self,
@@ -836,7 +859,8 @@ impl Plan {
         path: KernelPath,
         pool: &Pool,
         par: Parallelism,
-    ) where
+    ) -> usize
+    where
         S: Scalar + Send + Sync + 'static,
     {
         let step = &self.steps()[idx];
@@ -849,11 +873,15 @@ impl Plan {
             None => 0,
         };
         if units < 2 || step.out == step.inputs[0] || step.out_len() * batch < par.min_work {
-            return self.execute_step_batch_path(idx, batch, ctx, arena, path);
+            let t0 = obs::mark();
+            self.execute_step_batch_path(idx, batch, ctx, arena, path);
+            obs::step_done(t0, step.kind.name(), path, batch, units, 1);
+            return 1;
         }
         let bs = bs.expect("units > 0 implies blocked data");
         let groups = par.workers.min(units);
         let fused = step.fused_act;
+        let t0 = obs::mark();
 
         let mut out = std::mem::take(&mut arena.bufs[step.out]);
         out.clear();
@@ -951,6 +979,7 @@ impl Plan {
             }
             debug_assert!(rest.is_empty(), "tile groups must cover the whole output");
         });
+        obs::step_done(t0, step.kind.name(), path, batch, units, groups);
 
         arena.bufs[step.out] = out;
         debug_assert_eq!(
@@ -958,6 +987,7 @@ impl Plan {
             batch * step.out_len(),
             "step {idx} sharded output"
         );
+        groups
     }
 
     /// Run an independent wave of 2+ steps as concurrent scoped jobs —
@@ -966,7 +996,9 @@ impl Plan {
     /// reads or writes another member's output buffer), each job runs
     /// the full serial step kernel with per-worker scratch, and the
     /// buffers go back after the scope barrier. Waves whose total work
-    /// is below `min_work` run serially in step order instead.
+    /// is below `min_work` run serially in step order instead. Returns
+    /// the busy-worker count (concurrent jobs capped by the pool width;
+    /// `1` for the serial fallback) for the caller's wave gauge.
     #[allow(clippy::too_many_arguments)]
     fn execute_wave_concurrent<S>(
         &self,
@@ -977,15 +1009,18 @@ impl Plan {
         path: KernelPath,
         pool: &Pool,
         par: Parallelism,
-    ) where
+    ) -> usize
+    where
         S: Scalar + Send + Sync + 'static,
     {
         let work: usize = wave.iter().map(|&i| self.steps()[i].out_len() * batch).sum();
         if work < par.min_work {
             for &i in wave {
+                let t0 = obs::mark();
                 self.execute_step_batch_path(i, batch, ctx, arena, path);
+                obs::step_done(t0, self.steps()[i].kind.name(), path, batch, 0, 1);
             }
-            return;
+            return 1;
         }
         let mut outs: Vec<(usize, Vec<S>)> = wave
             .iter()
@@ -1004,6 +1039,7 @@ impl Plan {
                 let i = *i;
                 let step = &self.steps()[i];
                 s.spawn(move || {
+                    let t0 = obs::mark();
                     if step.out == step.inputs[0] {
                         // In-place alias: the job owns the taken buffer.
                         debug_assert!(step.fused_act.is_none());
@@ -1029,6 +1065,7 @@ impl Plan {
                             );
                         });
                     }
+                    obs::step_done(t0, step.kind.name(), path, batch, 0, 1);
                 });
             }
         });
@@ -1036,6 +1073,7 @@ impl Plan {
             debug_assert_eq!(v.len(), batch * self.steps()[i].out_len(), "wave step {i} output");
             arena.bufs[self.steps()[i].out] = v;
         }
+        par.workers.min(wave.len())
     }
 
     /// Convenience tensor-in/tensor-out execution with a throwaway arena —

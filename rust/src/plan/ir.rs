@@ -562,12 +562,14 @@ impl Plan {
                 let (panel, table, full_table) = match &self.blocked[i] {
                     Some(BlockedStep::Dense(pd)) => (pd.panel_bytes(), 0, 0),
                     Some(BlockedStep::Conv(ic)) => (0, ic.table_bytes(), ic.full_table_bytes()),
-                    Some(BlockedStep::Depthwise(dw)) => (0, dw.table_bytes(), dw.table_bytes()),
-                    Some(BlockedStep::AvgPool(pt)) => (0, pt.table_bytes(), pt.table_bytes()),
+                    Some(BlockedStep::Depthwise(dw)) => {
+                        (0, dw.table_bytes(), dw.full_table_bytes())
+                    }
+                    Some(BlockedStep::AvgPool(pt)) => (0, pt.table_bytes(), pt.full_table_bytes()),
                     None => (0, 0, 0),
                 };
                 // Pre-diet: every parameter cloned into the step, full
-                // per-pixel conv tables, same panels.
+                // per-pixel conv/pool tables, same panels.
                 let baseline = match &s.kind {
                     StepKind::Dense { w, b } => {
                         let (m, n) = w.dims();
@@ -577,6 +579,7 @@ impl Plan {
                     | StepKind::DepthwiseConv2D { kernel, bias, .. } => {
                         (kernel.len() + bias.len()) * F64B + full_table
                     }
+                    StepKind::AvgPool2D { .. } => full_table,
                     _ => weight + table,
                 };
                 StepMemory {

@@ -47,6 +47,7 @@
 //! ```
 
 use crate::coordinator::{with_worker_scratch, Pool};
+use crate::obs;
 use crate::plan::{Arena, KernelPath, Parallelism, Plan, ServeFormat};
 use crate::quant::EmulatedFp;
 use crate::tensor::EmuCtx;
@@ -120,9 +121,17 @@ impl Slot {
 /// Handle to one submitted sample's pending output.
 pub struct Ticket {
     pub(crate) slot: Arc<Slot>,
+    pub(crate) trace: u64,
 }
 
 impl Ticket {
+    /// The request's observability trace id: nonzero iff span tracing
+    /// ([`crate::obs::ObsPolicy::Full`]) was active at submit time, in
+    /// which case the exported trace's request/flush spans carry it.
+    pub fn trace_id(&self) -> u64 {
+        self.trace
+    }
+
     /// Block until the sample's batch has executed and return the model
     /// output (length = the plan's `output_len`).
     pub fn wait(self) -> Result<Vec<f64>> {
@@ -149,6 +158,8 @@ pub(crate) struct PendingSample {
     pub(crate) sample: Vec<f64>,
     pub(crate) slot: Arc<Slot>,
     pub(crate) enqueued: Instant,
+    /// Observability trace id minted at submit (`0` = untraced).
+    pub(crate) trace: u64,
 }
 
 struct QueueState {
@@ -308,6 +319,7 @@ impl MicroBatcher {
             );
         }
         let slot = Arc::new(Slot { state: Mutex::new(None), ready: Condvar::new() });
+        let trace = obs::next_trace_id();
         let depth = {
             let mut q = self.shared.queue.lock().unwrap();
             loop {
@@ -323,13 +335,14 @@ impl MicroBatcher {
                 sample,
                 slot: Arc::clone(&slot),
                 enqueued: Instant::now(),
+                trace,
             });
             q.pending.len()
         };
         self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
         self.shared.counters.queue_high_water.fetch_max(depth, Ordering::Relaxed);
         self.shared.wake.notify_all();
-        Ok(Ticket { slot })
+        Ok(Ticket { slot, trace })
     }
 
     /// Snapshot the batcher's counters.
@@ -344,6 +357,13 @@ impl MicroBatcher {
             max_batch_observed: c.max_batch_observed.load(Ordering::Relaxed),
             queue_high_water: c.queue_high_water.load(Ordering::Relaxed),
         }
+    }
+
+    /// Samples currently queued (not yet flushed) — the live companion
+    /// to [`MicroBatcher::metrics`] for the unified
+    /// [`crate::obs::Snapshot`].
+    pub fn pending(&self) -> usize {
+        self.shared.queue.lock().unwrap().pending.len()
     }
 
     /// The served plan (input/output geometry for callers).
@@ -480,6 +500,26 @@ pub(crate) fn run_batch_job(
     par: Parallelism,
 ) {
     let b = batch.len();
+    // Flush span + per-sample latency: `enqueued` is already captured
+    // unconditionally at submit, so measuring costs nothing extra on the
+    // submit side. The flush inherits the first traced sample's id so the
+    // whole batch is findable from any of its requests.
+    let t_flush = obs::mark();
+    if t_flush.is_some() {
+        for p in &batch {
+            obs::queue_wait_done(p.enqueued);
+        }
+    }
+    let finish = |batch: &[PendingSample]| {
+        if t_flush.is_none() {
+            return;
+        }
+        for p in batch {
+            obs::request_done(p.trace, p.enqueued);
+        }
+        let trace = batch.iter().map(|p| p.trace).find(|&t| t != 0).unwrap_or(0);
+        obs::flush_done(t_flush, "flush", trace, batch.len());
+    };
     let mut flat: Vec<f64> = Vec::with_capacity(b * plan.input_len());
     for p in &batch {
         flat.extend_from_slice(&p.sample);
@@ -521,7 +561,10 @@ pub(crate) fn run_batch_job(
         }
     }));
     let msg = match result {
-        Ok(Ok(())) => return,
+        Ok(Ok(())) => {
+            finish(&batch);
+            return;
+        }
         Ok(Err(msg)) => msg,
         Err(p) => {
             let cause = p
@@ -535,6 +578,7 @@ pub(crate) fn run_batch_job(
     for p in &batch {
         fill(&p.slot, Err(msg.clone()));
     }
+    finish(&batch);
 }
 
 /// Resolve a ticket slot, first write wins: the error fallback after a

@@ -307,12 +307,15 @@ def compile_plan(model, fusion, kernels):
                                                        s["out_shape"])
         elif kind == "depthwise_conv2d":
             s["lower"] = "taps"
-            op = s["out_shape"][0] * s["out_shape"][1]
-            s["table"] = s["full_table"] = op * layer["k"][0] * layer["k"][1] * USIZE
+            s["table"], s["full_table"] = dw_bytes(layer, s["in_shapes"][0],
+                                                   s["out_shape"])
         elif kind == "avg_pool2d":
             s["lower"] = "pool"
-            op = s["out_shape"][0] * s["out_shape"][1]
-            s["table"] = s["full_table"] = op * layer["ph"] * layer["pw"] * USIZE
+            oh, ow = s["out_shape"][0], s["out_shape"][1]
+            taps = layer["ph"] * layer["pw"]
+            # Single row class (windows tile exactly, never padded) + map.
+            s["table"] = ow * taps * USIZE + oh * 2 * USIZE
+            s["full_table"] = oh * ow * taps * USIZE
 
     deps = compute_deps(steps, len(buf_lens))
     return {"name": model["name"], "fusion": fusion, "kernels": kernels,
@@ -349,6 +352,18 @@ def im2col_bytes(layer, in_shape, out_shape):
     _, classes = im2col_row_classes(kh, layer["stride"], pad_top, h, oh)
     table = classes * ow * k * USIZE + oh * 2 * USIZE  # rows + row_map
     return table, oh * ow * k * USIZE
+
+
+def dw_bytes(layer, in_shape, out_shape):
+    """gemm::DwTable row-class bytes (spatial taps; same classes as im2col)."""
+    kh, kw, _ = layer["k"]
+    h, w = in_shape[0], in_shape[1]
+    oh, ow = out_shape[0], out_shape[1]
+    pad_top, _, _, _ = pad_offsets(h, w, kh, kw, layer["stride"], layer["pad"])
+    taps = kh * kw
+    _, classes = im2col_row_classes(kh, layer["stride"], pad_top, h, oh)
+    table = classes * ow * taps * USIZE + oh * 2 * USIZE  # rows + row_map
+    return table, oh * ow * taps * USIZE
 
 
 def compute_deps(steps, n_bufs):
@@ -404,6 +419,8 @@ def step_memory(s):
     elif kind in ("conv2d", "depthwise_conv2d"):
         cc = layer["k"][3 if kind == "conv2d" else 2]
         baseline = (math.prod(layer["k"]) + cc) * F64B + s["full_table"]
+    elif kind == "avg_pool2d":
+        baseline = s["full_table"]
     else:
         baseline = weight + s["table"]
     return weight, shared, s["panel"], s["table"], baseline
@@ -532,6 +549,53 @@ def check_im2col_equivalence(kh, kw, cin, cout, h, w, stride, pad):
             assert got == want, (kh, kw, cin, h, w, stride, pad, oy, ox)
 
 
+def full_dw_row(oy, ox, kh, kw, stride, pad_top, pad_left, h, w):
+    """One output pixel's spatial tap offsets in the old full-table layout."""
+    row = [PAD] * (kh * kw)
+    for ky in range(kh):
+        iy = oy * stride + ky - pad_top
+        if iy < 0 or iy >= h:
+            continue
+        for kx in range(kw):
+            ix = ox * stride + kx - pad_left
+            if ix < 0 or ix >= w:
+                continue
+            row[ky * kw + kx] = iy * w + ix
+    return row
+
+
+def check_dw_equivalence(kh, kw, h, w, stride, pad):
+    """gemm::DwTable row classes + delta must reproduce the full table."""
+    pad_top, pad_left, oh, ow = pad_offsets(h, w, kh, kw, stride, pad)
+    rows, _ = im2col_row_classes(kh, stride, pad_top, h, oh)
+    class_rows = {}
+    for cl, _, oy, materialize in rows:
+        if materialize:
+            class_rows[cl] = [full_dw_row(oy, ox, kh, kw, stride, pad_top,
+                                          pad_left, h, w) for ox in range(ow)]
+    for cl, doy, oy, _ in rows:
+        delta = doy * stride * w
+        for ox in range(ow):
+            want = full_dw_row(oy, ox, kh, kw, stride, pad_top, pad_left, h, w)
+            got = [PAD if e is PAD else e + delta for e in class_rows[cl][ox]]
+            assert got == want, (kh, kw, h, w, stride, pad, oy, ox)
+
+
+def check_pool_equivalence(ph, pw, h, w):
+    """gemm::PoolTable's single row-0 class + delta must cover every row."""
+    oh, ow = h // ph, w // pw
+    taps = ph * pw
+    rows = [ky * w + ox * pw + kx for ox in range(ow)
+            for ky in range(ph) for kx in range(pw)]
+    for oy in range(oh):
+        delta = oy * ph * w
+        for ox in range(ow):
+            want = [(oy * ph + ky) * w + (ox * pw + kx)
+                    for ky in range(ph) for kx in range(pw)]
+            got = [rows[ox * taps + t] + delta for t in range(taps)]
+            assert got == want, (ph, pw, h, w, oy, ox)
+
+
 def self_check():
     # Per-row im2col equivalence: gemm test geometries + zoo convs.
     geoms = [(3, 3, 3, 5, 5, 7, 1, "same"), (2, 2, 3, 4, 7, 5, 2, "valid"),
@@ -541,6 +605,15 @@ def self_check():
              (3, 3, 2, 3, 9, 9, 3, "same"), (5, 3, 2, 2, 11, 8, 2, "valid")]
     for kh, kw, cin, cout, h, w, stride, pad in geoms:
         check_im2col_equivalence(kh, kw, cin, cout, h, w, stride, pad)
+
+    # Same factoring for depthwise tap tables and pool window tables.
+    dw_geoms = [(3, 3, 6, 6, 1, "same"), (3, 3, 5, 5, 1, "same"),
+                (2, 2, 6, 4, 2, "valid"), (3, 2, 7, 5, 2, "same"),
+                (5, 3, 11, 8, 2, "valid"), (1, 1, 6, 6, 1, "same")]
+    for kh, kw, h, w, stride, pad in dw_geoms:
+        check_dw_equivalence(kh, kw, h, w, stride, pad)
+    for ph, pw, h, w in [(2, 2, 6, 6), (3, 3, 9, 9), (2, 3, 4, 6), (1, 1, 5, 5)]:
+        check_pool_equivalence(ph, pw, h, w)
 
     # Memory-diet floor on the cached blocked residual_cnn reference plan.
     plan = compile_plan(residual_cnn(), "full", "blocked")
@@ -553,6 +626,18 @@ def self_check():
     assert (weights, shared, panel, table) == (424, 3232, 2304, 12240), tot
     assert resident == 14968 and baseline == 30440, (resident, baseline)
     assert baseline >= 2 * resident
+
+    # Row-class shrink pins for depthwise/pool tables (avgpool_cnn carries
+    # the only zoo avg_pool2d; its dw step shares the conv's row classes).
+    plan = compile_plan(avgpool_cnn(), "full", "blocked")
+    tot = [0] * 5
+    for s in plan["steps"]:
+        for j, v in enumerate(step_memory(s)):
+            tot[j] += v
+    weights, shared, panel, table, baseline = tot
+    resident = weights + panel + table
+    assert table == 2928 and resident == 5624, tot
+    assert baseline == 9896, baseline
 
     # Determinism: two compiles render byte-identically.
     a = render(compile_plan(residual_cnn(), "full", "blocked"))

@@ -129,6 +129,31 @@ fn residual_cnn_resident_bytes_halved() {
     );
 }
 
+/// Same exact pinning for `avgpool_cnn` — the model that exercises all
+/// three row-class table kinds at once (standard conv im2col, depthwise
+/// tap table, and the single-class average-pool table). The 6x6 same-pad
+/// 3x3 geometries factor into 3 row classes (top edge, shared interior,
+/// bottom edge) of `ow * k` entries each, and the pool degenerates to one
+/// class; the per-step table bytes pin that factoring.
+#[test]
+fn avgpool_cnn_memory_report_pinned() {
+    let plan =
+        Plan::build_with_kernels(&zoo::avgpool_cnn(7), Fusion::Full, KernelPath::Blocked).unwrap();
+    let report = plan.memory_report();
+    // 3 classes x (6*9 entries x 8 B) + 6-row map x 16 B for both the
+    // conv and the depthwise table; 1 class x (3*4 x 8 B) + 3 x 16 B for
+    // the pool.
+    let conv = report.steps.iter().find(|s| s.kind == "conv2d").expect("conv step");
+    assert_eq!(conv.table_bytes, 1392, "conv im2col row-class table");
+    let dw = report.steps.iter().find(|s| s.kind == "depthwise_conv2d").expect("depthwise step");
+    assert_eq!(dw.table_bytes, 1392, "depthwise row-class tap table");
+    let pool = report.steps.iter().find(|s| s.kind == "avg_pool2d").expect("pool step");
+    assert_eq!(pool.table_bytes, 144, "single-class pool table");
+    assert_eq!(report.table_bytes(), 2928, "total gather tables");
+    assert_eq!(report.resident_bytes(), 5624, "total resident");
+    assert_eq!(report.baseline_bytes(), 9896, "pre-diet baseline");
+}
+
 // ---- leg 1: every weight stored once --------------------------------------
 
 #[test]

@@ -1,0 +1,397 @@
+//! Observability-layer integration tests: the `ObsPolicy::Disabled`
+//! hot path must add **zero** steady-state allocations, `Full` tracing
+//! must be allocation-free after warmup (ring, tag table, epoch and
+//! thread ids are populated once), and turning tracing on or off must
+//! never change a single output bit — for plain `f64` serving and for
+//! CAA analysis (where tracing swaps in the bound-probe step walk) —
+//! across the whole model zoo. Plus the span-nesting contract on a
+//! served round trip: request ⊇ flush ⊇ drive ⊇ wave ⊇ step.
+
+use rigor::analysis::{analyze_class, bound_profile_with_plan, AnalysisConfig};
+use rigor::caa::Ctx;
+use rigor::coordinator::Pool;
+use rigor::model::{zoo, Model};
+use rigor::obs::{self, ObsPolicy, SpanKind, TraceSink};
+use rigor::plan::{Arena, Fusion, KernelPath, Parallelism, Plan, ServeFormat};
+use rigor::serve::{BatchPolicy, MicroBatcher};
+use rigor::util::Rng;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+// ---- allocation counter ---------------------------------------------------
+// Same counting wrapper as tests/kernels.rs: per-thread counter so
+// concurrently running tests don't pollute each other's measurements.
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; the counter hook has no
+// effect on allocation behavior.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+// ---- policy lock ----------------------------------------------------------
+// The obs policy is process-global, so every test that flips it holds
+// this lock for its whole body. `set_policy` (not the RIGOR_TRACE env)
+// decides the level, so these tests behave the same under the CI run
+// that exports RIGOR_TRACE=full.
+
+fn policy_guard() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+// ---- helpers --------------------------------------------------------------
+
+fn zoo_models() -> Vec<Model> {
+    vec![
+        zoo::tiny_mlp(1),
+        zoo::tiny_cnn(2),
+        zoo::avgpool_cnn(7),
+        zoo::tiny_pendulum(3),
+        zoo::scaled_mlp(4, 13, 17, 5),
+        zoo::residual_mlp(5),
+        zoo::residual_cnn(6),
+    ]
+}
+
+fn batch_input(model: &Model, batch: usize, seed: u64) -> Vec<f64> {
+    let n: usize = model.input_shape.iter().product();
+    let mut rng = Rng::new(seed);
+    (0..batch * n).map(|_| rng.range(-1.0, 1.0)).collect()
+}
+
+fn assert_bits_eq(off: &[f64], on: &[f64], what: &str) {
+    assert_eq!(off.len(), on.len(), "{what}: length");
+    for (i, (a, b)) in off.iter().zip(on).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: element {i} ({a} vs {b})");
+    }
+}
+
+fn caa_cfg() -> AnalysisConfig {
+    AnalysisConfig {
+        ctx: Ctx::with_u_max(2f64.powi(-21)),
+        p_star: 0.6,
+        input_radius: 0.0,
+        exact_inputs: false,
+    }
+}
+
+// ---- zero-overhead contract -----------------------------------------------
+
+/// `ObsPolicy::Disabled` on the serve hot path (the instrumented
+/// `execute_batch_path` drive loop): after the arena warms up, repeated
+/// drives must allocate **nothing** — the mark/record sites compile down
+/// to one relaxed load and a branch.
+#[test]
+fn disabled_drive_hot_path_is_allocation_free() {
+    let _g = policy_guard();
+    obs::set_policy(ObsPolicy::Disabled);
+
+    let model = zoo::tiny_cnn(2);
+    let plan = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+    let big = batch_input(&model, 32, 0x0B5);
+    let small = batch_input(&model, 7, 0x0B6);
+    let mut arena: Arena<f64> = Arena::new();
+
+    // Warm: monotonic arena reservations for both batch shapes.
+    plan.execute_batch_path::<f64>(&(), &big, 32, &mut arena, KernelPath::Blocked).unwrap();
+    plan.execute_batch_path::<f64>(&(), &small, 7, &mut arena, KernelPath::Blocked).unwrap();
+
+    let before = thread_allocs();
+    for _ in 0..5 {
+        plan.execute_batch_path::<f64>(&(), &big, 32, &mut arena, KernelPath::Blocked).unwrap();
+        plan.execute_batch_path::<f64>(&(), &small, 7, &mut arena, KernelPath::Blocked).unwrap();
+    }
+    let extra = thread_allocs() - before;
+    assert_eq!(extra, 0, "disabled obs policy must not allocate on the drive hot path");
+}
+
+/// Even `Full` tracing is allocation-free at steady state: the span ring
+/// is fixed-capacity atomics, histograms are fixed atomic buckets, and
+/// the tag intern table stops growing once every site tag has been seen.
+/// Only the first traced drive (ring + epoch + tag + thread-id setup)
+/// may allocate.
+#[test]
+fn full_tracing_steady_state_is_allocation_free_after_warmup() {
+    let _g = policy_guard();
+    obs::set_policy(ObsPolicy::Full);
+
+    let model = zoo::tiny_cnn(3);
+    let plan = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+    let big = batch_input(&model, 32, 0x0F5);
+    let small = batch_input(&model, 7, 0x0F6);
+    let mut arena: Arena<f64> = Arena::new();
+
+    // Warm: arena reservations + obs one-time state (ring allocation,
+    // trace epoch, this thread's dense id, every step tag interned).
+    for _ in 0..2 {
+        plan.execute_batch_path::<f64>(&(), &big, 32, &mut arena, KernelPath::Blocked).unwrap();
+        plan.execute_batch_path::<f64>(&(), &small, 7, &mut arena, KernelPath::Blocked).unwrap();
+    }
+
+    let before = thread_allocs();
+    for _ in 0..5 {
+        plan.execute_batch_path::<f64>(&(), &big, 32, &mut arena, KernelPath::Blocked).unwrap();
+        plan.execute_batch_path::<f64>(&(), &small, 7, &mut arena, KernelPath::Blocked).unwrap();
+    }
+    let extra = thread_allocs() - before;
+    obs::set_policy(ObsPolicy::Disabled);
+    assert_eq!(extra, 0, "full tracing must not allocate once warm (ring/tags/epoch exist)");
+}
+
+// ---- bitwise identity -----------------------------------------------------
+
+/// Tracing on vs off never changes an `f64` output bit, zoo-wide, at
+/// single-sample and batched entry points.
+#[test]
+fn tracing_never_changes_f64_outputs_zoo_wide() {
+    let _g = policy_guard();
+    for model in zoo_models() {
+        let plan = Plan::build_with_kernels(&model, Fusion::Full, KernelPath::Blocked).unwrap();
+        for batch in [1usize, 5] {
+            let flat = batch_input(&model, batch, 0xB17 + batch as u64);
+
+            obs::set_policy(ObsPolicy::Disabled);
+            let mut a0: Arena<f64> = Arena::new();
+            let off = plan
+                .execute_batch_path::<f64>(&(), &flat, batch, &mut a0, KernelPath::Blocked)
+                .unwrap()
+                .to_vec();
+
+            obs::set_policy(ObsPolicy::Full);
+            let mut a1: Arena<f64> = Arena::new();
+            let on = plan
+                .execute_batch_path::<f64>(&(), &flat, batch, &mut a1, KernelPath::Blocked)
+                .unwrap()
+                .to_vec();
+
+            assert_bits_eq(&off, &on, &format!("{} B={batch}", model.name));
+        }
+    }
+    obs::set_policy(ObsPolicy::Disabled);
+}
+
+/// Tracing on vs off never changes a CAA analysis result, zoo-wide.
+/// Under `Full` the analysis runs the bound-probe walk (`load_input` +
+/// per-step `execute_step`) instead of `Plan::execute`; both must land
+/// on bitwise-identical output bounds, and the probe must leave a
+/// per-step profile in the registry.
+#[test]
+fn tracing_never_changes_caa_analysis_zoo_wide() {
+    let _g = policy_guard();
+    let cfg = caa_cfg();
+    for model in zoo_models() {
+        let sample = batch_input(&model, 1, 0xCAA);
+
+        obs::set_policy(ObsPolicy::Disabled);
+        let off = analyze_class(&model, &cfg, 0, &sample).unwrap();
+
+        obs::set_policy(ObsPolicy::Full);
+        obs::registry().reset();
+        let on = analyze_class(&model, &cfg, 0, &sample).unwrap();
+
+        assert_eq!(
+            off.max_abs_u.to_bits(),
+            on.max_abs_u.to_bits(),
+            "{}: max_abs_u ({} vs {})",
+            model.name,
+            off.max_abs_u,
+            on.max_abs_u
+        );
+        assert_eq!(
+            off.max_rel_u.to_bits(),
+            on.max_rel_u.to_bits(),
+            "{}: max_rel_u ({} vs {})",
+            model.name,
+            off.max_rel_u,
+            on.max_rel_u
+        );
+        assert_eq!(off.predicted, on.predicted, "{}: predicted class", model.name);
+        assert_eq!(off.ambiguous, on.ambiguous, "{}: ambiguity flag", model.name);
+
+        let profile = obs::registry().bounds().expect("traced analysis records a bound profile");
+        assert_eq!(profile.model, model.name, "profile tagged with the analyzed model");
+        assert!(!profile.steps.is_empty(), "{}: probe recorded steps", model.name);
+        for st in &profile.steps {
+            assert!(st.out_len > 0, "{} step {}: empty output", model.name, st.index);
+            assert!(st.abs_u >= 0.0, "{} step {}: abs width", model.name, st.index);
+        }
+    }
+    obs::set_policy(ObsPolicy::Disabled);
+}
+
+// ---- bound profile --------------------------------------------------------
+
+/// `bound_profile_with_plan` over an unfused plan yields one row per
+/// plan step, in order, with the conv step visibly widening the
+/// relative bound from the (near-exact) inputs.
+#[test]
+fn bound_profile_tracks_every_unfused_step() {
+    let _g = policy_guard();
+    obs::set_policy(ObsPolicy::Disabled); // the probe API is policy-independent
+    let model = zoo::tiny_cnn(4);
+    let plan = Plan::unfused(&model).unwrap();
+    let sample = batch_input(&model, 1, 0x9F);
+    let profile = bound_profile_with_plan(&plan, &caa_cfg(), &sample).unwrap();
+
+    assert_eq!(profile.model, model.name);
+    assert_eq!(profile.steps.len(), plan.steps().len(), "one profile row per plan step");
+    for (i, (st, step)) in profile.steps.iter().zip(plan.steps()).enumerate() {
+        assert_eq!(st.index, i, "rows in step order");
+        assert_eq!(st.kind, step.kind.name(), "row {i} tagged with its step kind");
+        assert!(st.out_len > 0, "row {i}: output length");
+        assert!(st.abs_u >= 0.0 && !st.abs_u.is_nan(), "row {i}: abs width");
+        assert!(st.secs >= 0.0, "row {i}: wall clock");
+    }
+    let conv = profile
+        .steps
+        .iter()
+        .find(|s| s.kind == "conv2d")
+        .expect("tiny_cnn profile has a conv2d row");
+    assert!(
+        conv.rel_u > 0.0,
+        "conv widens the relative bound away from the exact inputs (got {})",
+        conv.rel_u
+    );
+}
+
+// ---- span nesting on a served round trip ----------------------------------
+
+/// A pooled serve round trip under `Full` tracing records the whole
+/// span hierarchy — request, flush, drive, wave, step — with every
+/// ticket's trace id minted non-zero and child spans contained in a
+/// parent window (to microsecond truncation).
+#[test]
+fn serve_round_trip_records_nested_spans() {
+    let _g = policy_guard();
+    obs::set_policy(ObsPolicy::Full);
+    TraceSink::clear();
+    obs::registry().reset();
+
+    let model = zoo::residual_cnn(6);
+    let n: usize = model.input_shape.iter().product();
+    let plan = Arc::new(Plan::for_format(&model, ServeFormat::F64).unwrap());
+    let kernels = plan.kernel_path();
+    let steps = plan.steps().len();
+    let mut batcher = MicroBatcher::with_parallelism(
+        plan,
+        Arc::new(Pool::new(4, 32)),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1), max_pending: 64 },
+        kernels,
+        ServeFormat::F64,
+        Parallelism::with_workers(4),
+    );
+
+    const REQS: usize = 16;
+    let tickets: Vec<_> =
+        (0..REQS).map(|i| batcher.submit(batch_input(&model, 1, 0x600 + i as u64)).unwrap()).collect();
+    let mut traces = Vec::new();
+    for t in tickets {
+        assert_ne!(t.trace_id(), 0, "full tracing mints a non-zero trace id per ticket");
+        traces.push(t.trace_id());
+        t.wait().unwrap();
+    }
+    batcher.shutdown();
+
+    let spans = TraceSink::spans();
+    let of = |k: SpanKind| spans.iter().filter(|s| s.kind == k).collect::<Vec<_>>();
+    let (requests, flushes, drives, waves, step_spans) = (
+        of(SpanKind::Request),
+        of(SpanKind::Flush),
+        of(SpanKind::Drive),
+        of(SpanKind::Wave),
+        of(SpanKind::Step),
+    );
+
+    assert!(requests.len() >= REQS, "one request span per resolved ticket ({})", requests.len());
+    assert!(!flushes.is_empty(), "at least one flush span");
+    assert!(!drives.is_empty(), "at least one drive span");
+    assert!(!waves.is_empty(), "pooled drives record wave spans");
+    assert!(step_spans.len() >= steps, "at least one span per plan step ({})", step_spans.len());
+
+    let request_traces: Vec<u64> = requests.iter().map(|s| s.trace).collect();
+    for t in &traces {
+        assert!(request_traces.contains(t), "ticket trace {t} has a request span");
+    }
+    for f in &flushes {
+        assert_ne!(f.trace, 0, "flush spans carry a representative trace id");
+        assert!(traces.contains(&f.trace), "flush trace {} belongs to a ticket", f.trace);
+    }
+
+    // Containment to microsecond-truncation slack: child start never
+    // precedes the parent's (both truncate down from a later clock
+    // read), child end may overrun by the two truncations.
+    let within = |c: &rigor::obs::Span, p: &rigor::obs::Span, slack: u64| {
+        p.start_us <= c.start_us && c.start_us + c.dur_us <= p.start_us + p.dur_us + slack
+    };
+    for d in &drives {
+        assert!(
+            flushes.iter().any(|f| within(d, f, 2)),
+            "drive span at {}+{} inside a flush",
+            d.start_us,
+            d.dur_us
+        );
+    }
+    for w in &waves {
+        assert!(
+            drives.iter().any(|d| within(w, d, 2)),
+            "wave span at {}+{} inside a drive",
+            w.start_us,
+            w.dur_us
+        );
+    }
+    for s in &step_spans {
+        assert!(
+            drives.iter().any(|d| within(s, d, 3)),
+            "step span '{}' at {}+{} inside a drive",
+            s.tag,
+            s.start_us,
+            s.dur_us
+        );
+    }
+
+    // The latency histograms saw every request.
+    let lat = obs::registry().submit_to_resolve.stats();
+    assert!(lat.count >= REQS as u64, "submit→resolve histogram recorded {} samples", lat.count);
+    assert!(obs::registry().queue_wait.stats().count >= REQS as u64, "queue-wait per sample");
+    assert!(obs::registry().step_exec.stats().count > 0, "step-execute histogram populated");
+
+    let snap = obs::Snapshot::capture();
+    assert!(snap.spans_recorded > 0, "snapshot sees the recorded spans");
+    obs::set_policy(ObsPolicy::Disabled);
+}
