@@ -582,6 +582,7 @@ fn main() {
                             max_batch: 8,
                             max_wait: Duration::from_micros(200),
                             max_pending: 256,
+                            ..BatchPolicy::default()
                         },
                         kernels,
                         fmt,
@@ -604,6 +605,7 @@ fn main() {
                         max_wait: Duration::from_micros(200),
                         max_queue_pending: 256,
                         max_fleet_pending: 1024,
+                        ..FleetPolicy::default()
                     },
                 ));
                 fleet.deploy("tiny-cnn", &cnn).unwrap();

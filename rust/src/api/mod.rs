@@ -61,6 +61,7 @@ use anyhow::Result;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// A long-lived analysis service: worker pool + model cache. Cheap to keep
 /// around, safe to share behind an `Arc` (all methods take `&self`).
@@ -478,6 +479,7 @@ impl Session {
                 max_batch: req.max_batch,
                 max_wait: req.max_wait,
                 max_pending: req.max_pending,
+                default_deadline: req.deadline_ms.map(Duration::from_millis),
             },
             kernels,
             format,
@@ -620,6 +622,15 @@ impl FleetHandle<'_> {
     /// Per-queue and fleet-wide counters. See [`Fleet::snapshot`].
     pub fn snapshot(&self) -> FleetSnapshot {
         self.fleet.snapshot()
+    }
+
+    /// Lift the quarantine on the `(model_id, format)` queue — the manual
+    /// operator escape hatch after a fault-budget trip. Returns `false` if
+    /// the queue does not exist or is not quarantined. Hot-swapping the
+    /// model ([`FleetHandle::deploy`]) clears quarantines too. See
+    /// [`Fleet::reinstate`].
+    pub fn reinstate(&self, model_id: &str, format: ServeFormat) -> bool {
+        self.fleet.reinstate(model_id, format)
     }
 
     /// The underlying scheduler, for knobs the handle doesn't re-export.

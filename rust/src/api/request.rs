@@ -72,6 +72,7 @@ pub struct AnalysisRequest {
     pub(crate) force_scalar_kernels: bool,
     pub(crate) emulated_k: Option<u32>,
     pub(crate) parallel_workers: Option<usize>,
+    pub(crate) deadline_ms: Option<u64>,
 }
 
 impl AnalysisRequest {
@@ -158,6 +159,16 @@ impl AnalysisRequest {
         self.parallel_workers
     }
 
+    /// Per-ticket deadline for this request's served traffic
+    /// ([`Session::serve`](super::Session::serve)'s
+    /// [`BatchPolicy::default_deadline`](crate::serve::BatchPolicy)):
+    /// samples still queued when the deadline expires resolve as
+    /// [`ServeError::DeadlineExceeded`](crate::serve::ServeError) instead
+    /// of occupying a batch slot. `None` (the default) disables deadlines.
+    pub fn deadline_ms(&self) -> Option<u64> {
+        self.deadline_ms
+    }
+
     /// The serving arithmetic this request resolves to:
     /// [`ServeFormat::Emulated`](crate::plan::ServeFormat) at the
     /// requested `k` when [`emulated_k`](AnalysisRequestBuilder::emulated_k)
@@ -219,6 +230,7 @@ pub struct AnalysisRequestBuilder {
     force_scalar_kernels: bool,
     emulated_k: Option<u32>,
     parallel_workers: Option<usize>,
+    deadline_ms: Option<u64>,
 }
 
 impl AnalysisRequestBuilder {
@@ -239,6 +251,7 @@ impl AnalysisRequestBuilder {
             force_scalar_kernels: false,
             emulated_k: None,
             parallel_workers: None,
+            deadline_ms: None,
         }
     }
 
@@ -402,6 +415,17 @@ impl AnalysisRequestBuilder {
         self
     }
 
+    /// Per-ticket deadline in milliseconds for served traffic
+    /// ([`Session::serve`](super::Session::serve)): a sample still queued
+    /// `ms` after submission resolves as
+    /// [`ServeError::DeadlineExceeded`](crate::serve::ServeError) instead
+    /// of occupying a batch slot. Must be `>= 1`; the default (no
+    /// deadline) lets tickets wait indefinitely.
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
     fn validate(&self) -> Result<()> {
         if !(self.p_star > 0.5 && self.p_star < 1.0) {
             bail!("p_star must be in (0.5, 1.0), got {}", self.p_star);
@@ -433,6 +457,9 @@ impl AnalysisRequestBuilder {
                 bail!("parallel_workers must be in [1, 4096], got {w}");
             }
         }
+        if self.deadline_ms == Some(0) {
+            bail!("deadline_ms must be >= 1 (omit it to disable deadlines)");
+        }
         Ok(())
     }
 
@@ -462,6 +489,7 @@ impl AnalysisRequestBuilder {
             force_scalar_kernels: self.force_scalar_kernels,
             emulated_k: self.emulated_k,
             parallel_workers: self.parallel_workers,
+            deadline_ms: self.deadline_ms,
         })
     }
 
@@ -658,6 +686,31 @@ mod tests {
             .model(zoo::tiny_mlp(1))
             .input_box()
             .parallel_workers(5000)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn deadline_knob_validates_and_flows_through() {
+        let dflt = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .build()
+            .unwrap();
+        assert_eq!(dflt.deadline_ms(), None, "default: no deadline");
+
+        let req = AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .deadline_ms(250)
+            .build()
+            .unwrap();
+        assert_eq!(req.deadline_ms(), Some(250));
+
+        assert!(AnalysisRequest::builder()
+            .model(zoo::tiny_mlp(1))
+            .input_box()
+            .deadline_ms(0)
             .build()
             .is_err());
     }

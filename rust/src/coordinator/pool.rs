@@ -802,6 +802,66 @@ mod tests {
     }
 
     #[test]
+    fn scope_panic_on_a_one_worker_pool_reraises_without_deadlock() {
+        // Regression pin: on a 1-worker pool the scoping thread may be the
+        // only thread draining scope jobs. A panicking job must still hit
+        // the barrier (every sibling runs) and re-raise on the caller — not
+        // deadlock, not kill the worker.
+        let pool = Pool::new(1, 1);
+        let ran = Arc::new(AtomicU64::new(0));
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                for i in 0..16 {
+                    let ran = Arc::clone(&ran);
+                    s.spawn(move || {
+                        if i == 5 {
+                            panic!("one-worker scope boom");
+                        }
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must re-raise on the scoping thread");
+        assert_eq!(ran.load(Ordering::SeqCst), 15, "siblings run before the unwind");
+        // The pool (and its single worker) still serve work afterwards.
+        assert_eq!(pool.run_batch(vec![1, 2, 3], |i| i * 2), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn scope_panic_from_inside_a_pool_job_is_contained() {
+        // The serve flusher's shape: a scope opened *on* a pool worker
+        // whose spawns panic. The panic must surface to the in-job
+        // `catch_unwind` (after the barrier) and leave the pool usable.
+        let pool = Arc::new(Pool::new(2, 4));
+        let p = Arc::clone(&pool);
+        let (tx, rx) = std::sync::mpsc::channel::<(bool, u64)>();
+        pool.submit(move || {
+            let ran = AtomicU64::new(0);
+            let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                p.scope(|s| {
+                    for i in 0..8 {
+                        let ran = &ran;
+                        s.spawn(move || {
+                            if i == 2 {
+                                panic!("worker scope boom");
+                            }
+                            ran.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }));
+            tx.send((r.is_err(), ran.load(Ordering::SeqCst))).unwrap();
+        })
+        .unwrap();
+        let (panicked, ran) = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        assert!(panicked, "the in-job catch_unwind sees the scope panic");
+        assert_eq!(ran, 7, "barrier-before-unwind holds on a worker too");
+        // The pool survives the contained panic.
+        assert_eq!(pool.run_batch(vec![4, 5], |i| i + 1), vec![5, 6]);
+    }
+
+    #[test]
     fn scope_under_shutdown_still_completes_on_the_caller() {
         let pool = Pool::new(2, 4);
         pool.shutdown();

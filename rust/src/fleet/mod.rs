@@ -57,7 +57,7 @@
 use crate::coordinator::{Pool, PoolMetrics};
 use crate::model::Model;
 use crate::plan::{Fusion, KernelPath, Parallelism, Plan, ServeFormat};
-use crate::serve::{run_batch_job, PendingSample, ServeMetrics, Slot, Ticket};
+use crate::serve::{run_batch_job, DriveOutcome, PendingSample, ServeMetrics, Slot, Ticket};
 use anyhow::Result;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -80,17 +80,34 @@ pub struct FleetPolicy {
     /// [`AdmitError::FleetFull`] at this depth. Must be
     /// `>= max_queue_pending`.
     pub max_fleet_pending: usize,
+    /// Deadline stamped on every admitted sample: tickets still queued
+    /// past it when their batch reaches the flush boundary resolve as
+    /// [`crate::serve::ServeError::DeadlineExceeded`] instead of
+    /// occupying a batch slot. `None` (the default) disables deadlines.
+    pub default_deadline: Option<Duration>,
+    /// Consecutive faulted drives before a queue enters degraded mode
+    /// (scalar kernels, serial drives) — the per-queue fallback to the
+    /// known-good escape-hatch path.
+    pub degrade_after: usize,
+    /// Total faulted drives a queue may accumulate before it is
+    /// quarantined ([`AdmitError::Quarantined`] on admission). A hot swap
+    /// ([`Fleet::deploy`]) or a manual [`Fleet::reinstate`] clears it.
+    pub fault_budget: usize,
 }
 
 impl Default for FleetPolicy {
     /// 32-sample batches, 2 ms latency bound, 1024 pending per queue,
-    /// 4096 fleet-wide.
+    /// 4096 fleet-wide, no deadline; degrade after 3 consecutive faults,
+    /// quarantine after 8 total.
     fn default() -> FleetPolicy {
         FleetPolicy {
             max_batch: 32,
             max_wait: Duration::from_millis(2),
             max_queue_pending: 1024,
             max_fleet_pending: 4096,
+            default_deadline: None,
+            degrade_after: 3,
+            fault_budget: 8,
         }
     }
 }
@@ -133,6 +150,24 @@ pub enum AdmitError {
         /// Total pending samples at rejection time.
         depth: usize,
     },
+    /// The sample contains a NaN/Inf value — rejected at admission so a
+    /// poisoned input can never reach a drive (or a certified bound).
+    NonFinite {
+        /// Target model id.
+        model: String,
+        /// Index of the first non-finite input value.
+        index: usize,
+    },
+    /// The `(model, format)` queue exhausted its
+    /// [`FleetPolicy::fault_budget`] and is quarantined: no new samples
+    /// until a hot swap ([`Fleet::deploy`]) or a manual
+    /// [`Fleet::reinstate`].
+    Quarantined {
+        /// Target model id.
+        model: String,
+        /// Target format.
+        format: ServeFormat,
+    },
     /// [`Fleet::shutdown`] has begun; no new samples are admitted.
     ShuttingDown,
 }
@@ -150,6 +185,12 @@ impl std::fmt::Display for AdmitError {
             }
             AdmitError::FleetFull { depth } => {
                 write!(f, "fleet full at {depth} pending samples")
+            }
+            AdmitError::NonFinite { model, index } => {
+                write!(f, "model '{model}': input value at index {index} is not finite")
+            }
+            AdmitError::Quarantined { model, format } => {
+                write!(f, "queue ({model}, {format}) is quarantined (fault budget exceeded)")
             }
             AdmitError::ShuttingDown => write!(f, "fleet is shutting down"),
         }
@@ -205,6 +246,16 @@ struct FleetPending {
 struct FleetQueue {
     pending: VecDeque<FleetPending>,
     metrics: ServeMetrics,
+    /// Total faulted drives charged against
+    /// [`FleetPolicy::fault_budget`]; cleared by hot swap / reinstate.
+    faults: usize,
+    /// Faulted drives since the last clean one — trips degraded mode at
+    /// [`FleetPolicy::degrade_after`].
+    consecutive_faults: usize,
+    /// Degraded: this queue's flushes run scalar/serial.
+    degraded: bool,
+    /// Quarantined: admission rejects with [`AdmitError::Quarantined`].
+    quarantined: bool,
 }
 
 struct FleetState {
@@ -251,6 +302,13 @@ pub struct QueueSnapshot {
     pub depth: usize,
     /// The queue's cumulative counters.
     pub metrics: ServeMetrics,
+    /// Faulted drives charged against the fault budget.
+    pub faults: usize,
+    /// Whether the queue runs its flushes on the degraded
+    /// (scalar/serial) path.
+    pub degraded: bool,
+    /// Whether admission is rejecting with [`AdmitError::Quarantined`].
+    pub quarantined: bool,
 }
 
 /// Per-model view in a [`FleetSnapshot`].
@@ -275,6 +333,9 @@ pub struct FleetSnapshot {
     pub swaps: usize,
     /// Samples refused by admission control.
     pub rejected: usize,
+    /// Queues currently quarantined (fault budget exceeded, awaiting a
+    /// hot swap or [`Fleet::reinstate`]).
+    pub quarantined: usize,
     /// Coordinator-pool counters at snapshot time (job queue depth
     /// high-water, submitted/completed) — without this, serve-side
     /// backpressure building up in the shared pool was invisible from
@@ -394,7 +455,38 @@ impl Fleet {
             model_id.to_string(),
             Arc::new(PlanSet { f64_plan, emu_plan, kernels, version }),
         );
+        // A deploy is the operator saying "this model is good now": clear
+        // quarantine, degraded mode, and the fault ledger on every queue
+        // of the swapped model.
+        for (key, q) in st.queues.iter_mut() {
+            if key.model == model_id {
+                q.quarantined = false;
+                q.degraded = false;
+                q.faults = 0;
+                q.consecutive_faults = 0;
+            }
+        }
         version
+    }
+
+    /// Manually lift a quarantine on the `(model_id, format)` queue,
+    /// clearing its fault ledger and degraded mode. Returns `true` if the
+    /// queue was quarantined (`false`: unknown queue or not quarantined —
+    /// nothing to lift). The other recovery path is a hot swap
+    /// ([`Fleet::deploy`]), which clears every queue of the model.
+    pub fn reinstate(&self, model_id: &str, format: ServeFormat) -> bool {
+        let mut st = self.shared.state.lock().unwrap();
+        let key = QueueKey { model: model_id.to_string(), format };
+        match st.queues.get_mut(&key) {
+            Some(q) if q.quarantined => {
+                q.quarantined = false;
+                q.degraded = false;
+                q.faults = 0;
+                q.consecutive_faults = 0;
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Admit one `format`-tagged sample for `model_id`, returning a
@@ -435,6 +527,12 @@ impl Fleet {
         if format.validate().is_err() {
             return Err(AdmitError::BadFormat { format });
         }
+        if let Some(index) = sample.iter().position(|v| !v.is_finite()) {
+            crate::obs::nonfinite_input();
+            let mut st = self.shared.state.lock().unwrap();
+            st.rejected += 1;
+            return Err(AdmitError::NonFinite { model: model_id.to_string(), index });
+        }
         let mut st = self.shared.state.lock().unwrap();
         let (slot, trace) = loop {
             if st.shutdown {
@@ -455,6 +553,10 @@ impl Fleet {
                 });
             }
             let key = QueueKey { model: model_id.to_string(), format };
+            if st.queues.get(&key).is_some_and(|q| q.quarantined) {
+                st.rejected += 1;
+                return Err(AdmitError::Quarantined { model: model_id.to_string(), format });
+            }
             let depth = st.queues.get(&key).map_or(0, |q| q.pending.len());
             if st.total_pending >= self.shared.policy.max_fleet_pending {
                 if block {
@@ -480,14 +582,11 @@ impl Fleet {
             let plans = Arc::clone(plans);
             let slot = Slot::new();
             let trace = crate::obs::next_trace_id();
+            let enqueued = Instant::now();
+            let deadline = self.shared.policy.default_deadline.map(|d| enqueued + d);
             let q = st.queues.entry(key).or_default();
             q.pending.push_back(FleetPending {
-                req: PendingSample {
-                    sample,
-                    slot: Arc::clone(&slot),
-                    enqueued: Instant::now(),
-                    trace,
-                },
+                req: PendingSample { sample, slot: Arc::clone(&slot), enqueued, deadline, trace },
                 plans,
             });
             q.metrics.submitted += 1;
@@ -510,6 +609,9 @@ impl Fleet {
                 key: key.clone(),
                 depth: q.pending.len(),
                 metrics: q.metrics,
+                faults: q.faults,
+                degraded: q.degraded,
+                quarantined: q.quarantined,
             })
             .collect();
         queues.sort_by(|a, b| a.key.cmp(&b.key));
@@ -519,12 +621,14 @@ impl Fleet {
             .map(|(m, p)| ModelSnapshot { model: m.clone(), version: p.version })
             .collect();
         models.sort_by(|a, b| a.model.cmp(&b.model));
+        let quarantined = queues.iter().filter(|q| q.quarantined).count();
         FleetSnapshot {
             queues,
             models,
             total_pending: st.total_pending,
             swaps: st.swaps,
             rejected: st.rejected,
+            quarantined,
             pool: self.shared.pool.metrics(),
         }
     }
@@ -637,6 +741,10 @@ fn flusher_loop(sh: Arc<FleetShared>) {
                 if let Some((key, cause)) = pick_ripe(&mut st, now, &sh.policy) {
                     let q = st.queues.get_mut(&key).expect("picked key exists");
                     let (batch, plans) = drain_one_version(q, sh.policy.max_batch);
+                    // The degraded decision is captured under the state
+                    // lock at drain time, so a concurrent reinstate or
+                    // swap never half-applies to a dispatched batch.
+                    let degraded = q.degraded;
                     q.metrics.batches += 1;
                     q.metrics.max_batch_observed = q.metrics.max_batch_observed.max(batch.len());
                     match cause {
@@ -645,7 +753,7 @@ fn flusher_loop(sh: Arc<FleetShared>) {
                         Cause::Drain => q.metrics.flushed_drain += 1,
                     }
                     st.total_pending -= batch.len();
-                    break Some((key, batch, plans));
+                    break Some((key, batch, plans, degraded));
                 }
                 if st.shutdown && st.total_pending == 0 {
                     break None;
@@ -666,7 +774,7 @@ fn flusher_loop(sh: Arc<FleetShared>) {
                 }
             }
         };
-        let Some((key, batch, plans)) = picked else {
+        let Some((key, batch, plans, degraded)) = picked else {
             return;
         };
         // Room below the caps: wake blocked submitters. Like the serve
@@ -680,13 +788,51 @@ fn flusher_loop(sh: Arc<FleetShared>) {
         // this thread instead of being dropped.
         sh.pool.submit_or_run(move || {
             let plan = plans.plan_for(key.format);
-            run_batch_job(plan, plans.kernels, key.format, batch, &job_sh.pool, job_sh.par);
+            // Degraded queues fall back to the scalar/serial escape
+            // hatch — bit-identical outputs, none of the blocked/parallel
+            // machinery that kept faulting.
+            let (kernels, par) = if degraded {
+                (KernelPath::Scalar, Parallelism::serial())
+            } else {
+                (plans.kernels, job_sh.par)
+            };
+            let outcome = run_batch_job(plan, kernels, key.format, batch, &job_sh.pool, par);
+            account_outcome(&job_sh, &key, &outcome);
             let mut n = job_sh.inflight.lock().unwrap();
             *n -= 1;
             if *n == 0 {
                 job_sh.idle.notify_all();
             }
         });
+    }
+}
+
+/// Charge a finished drive's outcome to its queue's fault ledger: a
+/// faulted drive extends the consecutive streak (degraded mode at
+/// [`FleetPolicy::degrade_after`]) and the total ledger (quarantine at
+/// [`FleetPolicy::fault_budget`]); a clean drive resets the streak. Runs
+/// after the drive, off the flusher thread, so accounting never blocks
+/// other queues from flushing.
+fn account_outcome(sh: &FleetShared, key: &QueueKey, outcome: &DriveOutcome) {
+    let mut st = sh.state.lock().unwrap();
+    let Some(q) = st.queues.get_mut(key) else {
+        return;
+    };
+    q.metrics.deadline_missed += outcome.expired;
+    if outcome.fault.is_some() {
+        q.metrics.drive_faults += 1;
+        q.faults += 1;
+        q.consecutive_faults += 1;
+        if !q.degraded && q.consecutive_faults >= sh.policy.degrade_after {
+            q.degraded = true;
+            crate::obs::degraded_entered();
+        }
+        if !q.quarantined && q.faults >= sh.policy.fault_budget {
+            q.quarantined = true;
+            crate::obs::quarantine_tripped();
+        }
+    } else if outcome.drove {
+        q.consecutive_faults = 0;
     }
 }
 
@@ -706,6 +852,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
             max_queue_pending: 64,
             max_fleet_pending: 128,
+            ..FleetPolicy::default()
         }
     }
 
@@ -766,6 +913,7 @@ mod tests {
                 max_wait: Duration::from_secs(30),
                 max_queue_pending: 2,
                 max_fleet_pending: 3,
+                ..FleetPolicy::default()
             },
         );
         // Unknown model / bad format / wrong length are immediate.
@@ -827,6 +975,7 @@ mod tests {
                 max_wait: Duration::from_millis(2),
                 max_queue_pending: 32,
                 max_fleet_pending: 128,
+                ..FleetPolicy::default()
             },
         ));
         fleet.deploy("hot", &zoo::tiny_mlp(31)).unwrap();
@@ -876,6 +1025,7 @@ mod tests {
                 max_wait: Duration::from_millis(20),
                 max_queue_pending: 64,
                 max_fleet_pending: 128,
+                ..FleetPolicy::default()
             },
         );
         assert_eq!(fleet.deploy("m", &m1).unwrap(), 1);
@@ -916,6 +1066,7 @@ mod tests {
                 max_wait: Duration::from_secs(30),
                 max_queue_pending: 2,
                 max_fleet_pending: 2,
+                ..FleetPolicy::default()
             },
         ));
         fleet.deploy("m", &zoo::tiny_mlp(51)).unwrap();
@@ -940,5 +1091,37 @@ mod tests {
         // both accepted tickets are already resolved.
         assert!(t0.try_take().is_some(), "t0 unresolved after shutdown");
         assert!(t1.try_take().is_some(), "t1 unresolved after shutdown");
+    }
+
+    #[test]
+    fn non_finite_inputs_rejected_on_both_admission_paths() {
+        let fleet = Fleet::new(Arc::new(Pool::new(1, 4)), small_policy());
+        fleet.deploy("m", &zoo::tiny_mlp(61)).unwrap();
+        let mut bad = sample(8, 0);
+        bad[2] = f64::NAN;
+        assert!(matches!(
+            fleet.submit("m", ServeFormat::F64, bad.clone()),
+            Err(AdmitError::NonFinite { index: 2, .. })
+        ));
+        bad[2] = f64::NEG_INFINITY;
+        assert!(matches!(
+            fleet.submit_blocking("m", ServeFormat::F64, bad),
+            Err(AdmitError::NonFinite { index: 2, .. })
+        ));
+        assert_eq!(fleet.snapshot().rejected, 2);
+        // A clean sample still serves.
+        let t = fleet.submit("m", ServeFormat::F64, sample(8, 0)).unwrap();
+        assert_eq!(t.wait().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn reinstate_is_a_no_op_without_a_quarantine() {
+        let fleet = Fleet::new(Arc::new(Pool::new(1, 4)), small_policy());
+        fleet.deploy("m", &zoo::tiny_mlp(62)).unwrap();
+        assert!(!fleet.reinstate("m", ServeFormat::F64), "nothing to lift");
+        assert!(!fleet.reinstate("ghost", ServeFormat::F64));
+        let snap = fleet.snapshot();
+        assert_eq!(snap.quarantined, 0);
+        assert!(snap.queues.iter().all(|q| !q.quarantined && !q.degraded));
     }
 }

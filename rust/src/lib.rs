@@ -49,6 +49,7 @@ pub mod caa;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod faultinject;
 pub mod fleet;
 pub mod interval;
 pub mod json;

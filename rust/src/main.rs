@@ -389,6 +389,7 @@ fn cmd_fleet(p: &rigor::cli::Parsed) -> anyhow::Result<()> {
             total_pending: snap.total_pending,
             swaps: snap.swaps,
             rejected: snap.rejected,
+            quarantined: snap.quarantined,
         },
     );
     for q in &snap.queues {

@@ -623,6 +623,13 @@ pub struct Registry {
     waves: AtomicU64,
     wave_busy: AtomicU64,
     helpers: AtomicU64,
+    panics_caught: AtomicU64,
+    deadline_missed: AtomicU64,
+    nonfinite_inputs: AtomicU64,
+    nonfinite_outputs: AtomicU64,
+    degraded_entered: AtomicU64,
+    quarantines: AtomicU64,
+    tickets_dropped: AtomicU64,
     bounds: Mutex<Option<BoundProfile>>,
 }
 
@@ -639,6 +646,28 @@ pub struct ExecStats {
     pub helpers: u64,
 }
 
+/// Fault-containment counters decoded from the [`Registry`].
+///
+/// These count *contained* faults: every increment corresponds to a failure
+/// that was absorbed at a containment boundary instead of propagating.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultStats {
+    /// Drive panics caught at the `catch_unwind` boundary.
+    pub panics_caught: u64,
+    /// Tickets resolved as `DeadlineExceeded` instead of occupying a batch slot.
+    pub deadline_missed: u64,
+    /// Samples rejected at admission because an input value was non-finite.
+    pub nonfinite_inputs: u64,
+    /// Drives whose output tripped the batch-level finiteness check.
+    pub nonfinite_outputs: u64,
+    /// Queues that entered degraded (scalar/serial) mode.
+    pub degraded_entered: u64,
+    /// Queues quarantined after exceeding their fault budget.
+    pub quarantines: u64,
+    /// Scatters into a dropped [`crate::serve::Ticket`] (counted no-ops).
+    pub tickets_dropped: u64,
+}
+
 /// The process-wide [`Registry`].
 pub fn registry() -> &'static Registry {
     static REGISTRY: OnceLock<Registry> = OnceLock::new();
@@ -650,6 +679,13 @@ pub fn registry() -> &'static Registry {
         waves: AtomicU64::new(0),
         wave_busy: AtomicU64::new(0),
         helpers: AtomicU64::new(0),
+        panics_caught: AtomicU64::new(0),
+        deadline_missed: AtomicU64::new(0),
+        nonfinite_inputs: AtomicU64::new(0),
+        nonfinite_outputs: AtomicU64::new(0),
+        degraded_entered: AtomicU64::new(0),
+        quarantines: AtomicU64::new(0),
+        tickets_dropped: AtomicU64::new(0),
         bounds: Mutex::new(None),
     })
 }
@@ -662,6 +698,19 @@ impl Registry {
             waves: self.waves.load(Ordering::Relaxed),
             wave_busy: self.wave_busy.load(Ordering::Relaxed),
             helpers: self.helpers.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Decode the fault-containment counters.
+    pub fn fault_stats(&self) -> FaultStats {
+        FaultStats {
+            panics_caught: self.panics_caught.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
+            nonfinite_inputs: self.nonfinite_inputs.load(Ordering::Relaxed),
+            nonfinite_outputs: self.nonfinite_outputs.load(Ordering::Relaxed),
+            degraded_entered: self.degraded_entered.load(Ordering::Relaxed),
+            quarantines: self.quarantines.load(Ordering::Relaxed),
+            tickets_dropped: self.tickets_dropped.load(Ordering::Relaxed),
         }
     }
 
@@ -686,6 +735,13 @@ impl Registry {
         self.waves.store(0, Ordering::Relaxed);
         self.wave_busy.store(0, Ordering::Relaxed);
         self.helpers.store(0, Ordering::Relaxed);
+        self.panics_caught.store(0, Ordering::Relaxed);
+        self.deadline_missed.store(0, Ordering::Relaxed);
+        self.nonfinite_inputs.store(0, Ordering::Relaxed);
+        self.nonfinite_outputs.store(0, Ordering::Relaxed);
+        self.degraded_entered.store(0, Ordering::Relaxed);
+        self.quarantines.store(0, Ordering::Relaxed);
+        self.tickets_dropped.store(0, Ordering::Relaxed);
         *self.bounds.lock().unwrap_or_else(|e| e.into_inner()) = None;
     }
 }
@@ -837,6 +893,55 @@ pub fn helper_recruited() {
     }
 }
 
+// Fault counters are recorded unconditionally (no `measuring()` gate): they
+// feed the containment report, every one of them sits on a cold failure path,
+// and losing a fault because observability happened to be off would defeat
+// the point. This is a deliberate exception to the zero-overhead contract.
+
+/// A drive panic was caught at the `catch_unwind` boundary.
+#[inline]
+pub fn panic_caught() {
+    registry().panics_caught.fetch_add(1, Ordering::Relaxed);
+}
+
+/// `n` tickets expired in the queue and resolved as `DeadlineExceeded`.
+#[inline]
+pub fn deadlines_missed(n: usize) {
+    if n > 0 {
+        registry().deadline_missed.fetch_add(n as u64, Ordering::Relaxed);
+    }
+}
+
+/// A sample was rejected at admission for a non-finite input value.
+#[inline]
+pub fn nonfinite_input() {
+    registry().nonfinite_inputs.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A drive's output tripped the batch-level finiteness check.
+#[inline]
+pub fn nonfinite_output() {
+    registry().nonfinite_outputs.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A queue entered degraded (scalar/serial) mode after repeated faults.
+#[inline]
+pub fn degraded_entered() {
+    registry().degraded_entered.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A queue was quarantined after exceeding its fault budget.
+#[inline]
+pub fn quarantine_tripped() {
+    registry().quarantines.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A batch result was scattered into a dropped ticket (counted no-op).
+#[inline]
+pub fn ticket_dropped() {
+    registry().tickets_dropped.fetch_add(1, Ordering::Relaxed);
+}
+
 // ---------------------------------------------------------------------------
 // Unified snapshot
 // ---------------------------------------------------------------------------
@@ -865,6 +970,8 @@ pub struct FleetStat {
     pub swaps: usize,
     /// Admissions rejected.
     pub rejected: usize,
+    /// Queues currently quarantined.
+    pub quarantined: usize,
 }
 
 /// The unified observability snapshot: one structure (one text form,
@@ -887,6 +994,8 @@ pub struct Snapshot {
     pub latency: Vec<(&'static str, HistogramStats)>,
     /// Executor utilization gauges.
     pub exec: ExecStats,
+    /// Fault-containment counters.
+    pub faults: FaultStats,
     /// Spans recorded so far (ring keeps the last [`TRACE_CAPACITY`]).
     pub spans_recorded: u64,
     /// Last CAA bound profile, if one was recorded.
@@ -910,6 +1019,7 @@ impl Snapshot {
                 ("step_execute", reg.step_exec.stats()),
             ],
             exec: reg.exec_stats(),
+            faults: reg.fault_stats(),
             spans_recorded: TraceSink::recorded(),
             bounds: reg.bounds(),
         }
@@ -957,7 +1067,7 @@ impl Snapshot {
                 &mut s,
                 format!(
                     "queue {:<24} pending={} submitted={} batches={} full={} timer={} drain={} \
-                     largest={} high_water={}",
+                     largest={} high_water={} deadlines={} faults={}",
                     q.name,
                     q.pending,
                     m.submitted,
@@ -966,7 +1076,9 @@ impl Snapshot {
                     m.flushed_timer,
                     m.flushed_drain,
                     m.max_batch_observed,
-                    m.queue_high_water
+                    m.queue_high_water,
+                    m.deadline_missed,
+                    m.drive_faults
                 ),
             );
         }
@@ -974,8 +1086,8 @@ impl Snapshot {
             push(
                 &mut s,
                 format!(
-                    "fleet     models={} pending={} swaps={} rejected={}",
-                    f.models, f.total_pending, f.swaps, f.rejected
+                    "fleet     models={} pending={} swaps={} rejected={} quarantined={}",
+                    f.models, f.total_pending, f.swaps, f.rejected, f.quarantined
                 ),
             );
         }
@@ -1005,6 +1117,21 @@ impl Snapshot {
             format!(
                 "executor  drives={} waves={} mean_busy_workers={:.2} helpers_recruited={}",
                 e.drives, e.waves, mean_busy, e.helpers
+            ),
+        );
+        let f = &self.faults;
+        push(
+            &mut s,
+            format!(
+                "faults    panics={} deadlines={} nonfinite_in={} nonfinite_out={} degraded={} \
+                 quarantined={} dropped_tickets={}",
+                f.panics_caught,
+                f.deadline_missed,
+                f.nonfinite_inputs,
+                f.nonfinite_outputs,
+                f.degraded_entered,
+                f.quarantines,
+                f.tickets_dropped
             ),
         );
         push(
@@ -1071,6 +1198,8 @@ impl Snapshot {
                             ("flushed_drain", Value::from(m.flushed_drain)),
                             ("max_batch_observed", Value::from(m.max_batch_observed)),
                             ("queue_high_water", Value::from(m.queue_high_water)),
+                            ("deadline_missed", Value::from(m.deadline_missed)),
+                            ("drive_faults", Value::from(m.drive_faults)),
                         ])
                     })
                     .collect(),
@@ -1084,6 +1213,7 @@ impl Snapshot {
                     ("total_pending", Value::from(f.total_pending)),
                     ("swaps", Value::from(f.swaps)),
                     ("rejected", Value::from(f.rejected)),
+                    ("quarantined", Value::from(f.quarantined)),
                 ]),
             ));
         }
@@ -1098,6 +1228,19 @@ impl Snapshot {
                 ("waves", Value::from(self.exec.waves as usize)),
                 ("wave_busy", Value::from(self.exec.wave_busy as usize)),
                 ("helpers_recruited", Value::from(self.exec.helpers as usize)),
+            ]),
+        ));
+        let fa = &self.faults;
+        fields.push((
+            "faults",
+            Value::obj(vec![
+                ("panics_caught", Value::from(fa.panics_caught as usize)),
+                ("deadline_missed", Value::from(fa.deadline_missed as usize)),
+                ("nonfinite_inputs", Value::from(fa.nonfinite_inputs as usize)),
+                ("nonfinite_outputs", Value::from(fa.nonfinite_outputs as usize)),
+                ("degraded_entered", Value::from(fa.degraded_entered as usize)),
+                ("quarantines", Value::from(fa.quarantines as usize)),
+                ("tickets_dropped", Value::from(fa.tickets_dropped as usize)),
             ]),
         ));
         fields.push(("spans_recorded", Value::from(self.spans_recorded as usize)));
@@ -1279,15 +1422,25 @@ mod tests {
                 workers: 4,
             })
             .with_queue("digits/f64", 0, ServeMetrics::default())
-            .with_fleet(FleetStat { models: 1, total_pending: 0, swaps: 0, rejected: 2 });
+            .with_fleet(FleetStat {
+                models: 1,
+                total_pending: 0,
+                swaps: 0,
+                rejected: 2,
+                quarantined: 1,
+            });
         let text = snap.to_text();
         assert!(text.contains("pool      workers=4"));
         assert!(text.contains("queue digits/f64"));
         assert!(text.contains("rejected=2"));
+        assert!(text.contains("quarantined=1"));
+        assert!(text.contains("faults    panics="));
         assert!(text.contains("latency"));
         let v = snap.to_json();
         assert_eq!(v.path(&["pool", "workers"]).unwrap().as_usize(), Some(4));
         assert_eq!(v.path(&["fleet", "rejected"]).unwrap().as_usize(), Some(2));
+        assert_eq!(v.path(&["fleet", "quarantined"]).unwrap().as_usize(), Some(1));
+        assert!(v.path(&["faults", "panics_caught"]).is_some());
         assert!(v.get("latency").is_some());
     }
 }

@@ -47,16 +47,21 @@
 //! ```
 
 use crate::coordinator::{with_worker_scratch, Pool};
+use crate::faultinject;
 use crate::obs;
 use crate::plan::{Arena, KernelPath, Parallelism, Plan, ServeFormat};
 use crate::quant::EmulatedFp;
 use crate::tensor::EmuCtx;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Consecutive faulted drives before a batcher enters degraded mode
+/// (scalar kernels, serial drives). See DESIGN.md "Fault containment".
+const DEGRADE_AFTER: usize = 3;
 
 /// When the micro-batcher flushes a pending batch — and how deep the
 /// pending queue may grow before submitters block.
@@ -75,12 +80,23 @@ pub struct BatchPolicy {
     /// caller latency instead of unbounded memory. Must be `>=
     /// max_batch` (otherwise the size trigger could never fire).
     pub max_pending: usize,
+    /// Deadline stamped on every submitted sample: if a ticket has been
+    /// queued longer than this when its batch reaches the flush boundary,
+    /// it resolves as [`ServeError::DeadlineExceeded`] instead of
+    /// occupying a batch slot. `None` (the default) disables deadlines.
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for BatchPolicy {
-    /// 32-sample batches, 2 ms latency bound, 1024 pending samples.
+    /// 32-sample batches, 2 ms latency bound, 1024 pending samples, no
+    /// deadline.
     fn default() -> BatchPolicy {
-        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2), max_pending: 1024 }
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            max_pending: 1024,
+            default_deadline: None,
+        }
     }
 }
 
@@ -102,19 +118,94 @@ pub struct ServeMetrics {
     /// Deepest the pending queue has been (bounded by
     /// [`BatchPolicy::max_pending`]).
     pub queue_high_water: usize,
+    /// Tickets resolved as [`ServeError::DeadlineExceeded`] at a flush
+    /// boundary instead of executing.
+    pub deadline_missed: usize,
+    /// Drives that ended in a fault (panic, execution error, or a
+    /// non-finite output tripwire) — the signal degraded mode watches.
+    pub drive_faults: usize,
+}
+
+/// Why a ticket resolved without a model output. Every admitted ticket
+/// resolves exactly once, either `Ok(outputs)` or one of these — a panic
+/// or poisoned drive never leaves a waiter blocked or silently wrong.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The batch drive panicked; the panic was caught at the drive's
+    /// containment boundary, only this batch's tickets were affected, and
+    /// the worker's scratch arena was discarded (not reused poisoned).
+    DrivePanicked {
+        /// The panic payload, when it was a string.
+        detail: String,
+    },
+    /// The ticket waited past its deadline
+    /// ([`BatchPolicy::default_deadline`]) before its batch reached the
+    /// flush boundary; it was resolved instead of occupying a batch slot.
+    DeadlineExceeded {
+        /// How long the sample sat in the queue, in milliseconds.
+        waited_ms: u64,
+    },
+    /// The drive completed but this sample's output row contained a
+    /// NaN/Inf — the tripwire that feeds quarantine accounting, so a
+    /// poisoned model cannot silently propagate non-finite values.
+    NonFiniteOutput {
+        /// Index of the first non-finite value in the output row.
+        index: usize,
+    },
+    /// The plan executor returned an error (not a panic).
+    ExecFailed {
+        /// The executor's rendered error chain.
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::DrivePanicked { detail } => {
+                write!(f, "batch drive panicked: {detail}")
+            }
+            ServeError::DeadlineExceeded { waited_ms } => {
+                write!(f, "deadline exceeded after {waited_ms} ms in queue")
+            }
+            ServeError::NonFiniteOutput { index } => {
+                write!(f, "model output is non-finite at index {index}")
+            }
+            ServeError::ExecFailed { detail } => write!(f, "batch execution failed: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A slot's interior: the pending value plus a sticky resolved bit, so
+/// "first write wins" survives the value being taken by the waiter (a
+/// late error fallback must not re-resolve a slot whose output was
+/// already delivered and consumed).
+struct SlotState {
+    value: Option<Result<Vec<f64>, ServeError>>,
+    resolved: bool,
 }
 
 /// One request's result slot: filled exactly once by the batch job,
 /// waited on by the [`Ticket`]. `pub(crate)` so the fleet scheduler
 /// ([`crate::fleet`]) shares the ticket machinery.
 pub(crate) struct Slot {
-    state: Mutex<Option<Result<Vec<f64>, String>>>,
+    state: Mutex<SlotState>,
     ready: Condvar,
+    /// Set by [`Ticket`]'s `Drop`: the receiver is gone, so a scatter
+    /// into this slot is a counted no-op instead of a stored value nobody
+    /// will take (and never a hang or panic).
+    abandoned: AtomicBool,
 }
 
 impl Slot {
     pub(crate) fn new() -> Arc<Slot> {
-        Arc::new(Slot { state: Mutex::new(None), ready: Condvar::new() })
+        Arc::new(Slot {
+            state: Mutex::new(SlotState { value: None, resolved: false }),
+            ready: Condvar::new(),
+            abandoned: AtomicBool::new(false),
+        })
     }
 }
 
@@ -135,20 +226,43 @@ impl Ticket {
     /// Block until the sample's batch has executed and return the model
     /// output (length = the plan's `output_len`).
     pub fn wait(self) -> Result<Vec<f64>> {
+        self.wait_typed()
+            .map_err(|e| anyhow::Error::new(e).context("batched execution failed"))
+    }
+
+    /// [`Ticket::wait`] with the typed failure instead of an
+    /// `anyhow::Error` wrapper: exactly which containment boundary
+    /// resolved the ticket ([`ServeError::DrivePanicked`],
+    /// [`ServeError::DeadlineExceeded`], …).
+    pub fn wait_typed(self) -> Result<Vec<f64>, ServeError> {
         let mut st = self.slot.state.lock().unwrap();
-        while st.is_none() {
+        while st.value.is_none() {
             st = self.slot.ready.wait(st).unwrap();
         }
-        match st.take().expect("checked above") {
-            Ok(v) => Ok(v),
-            Err(e) => Err(anyhow!("batched execution failed: {e}")),
-        }
+        st.value.take().expect("checked above")
     }
 
     /// Non-blocking probe: the output if the batch has already executed.
     pub fn try_take(&self) -> Option<Result<Vec<f64>>> {
-        let mut st = self.slot.state.lock().unwrap();
-        st.take().map(|r| r.map_err(|e| anyhow!("batched execution failed: {e}")))
+        self.try_take_typed()
+            .map(|r| r.map_err(|e| anyhow::Error::new(e).context("batched execution failed")))
+    }
+
+    /// [`Ticket::try_take`] with the typed failure. Takes the value: a
+    /// second call returns `None`, which is how the chaos suite asserts
+    /// "resolved exactly once".
+    pub fn try_take_typed(&self) -> Option<Result<Vec<f64>, ServeError>> {
+        self.slot.state.lock().unwrap().value.take()
+    }
+}
+
+impl Drop for Ticket {
+    /// Mark the slot's receiver gone. A later scatter into it becomes a
+    /// counted no-op ([`crate::obs::FaultStats::tickets_dropped`]) — a
+    /// dropped unresolved ticket must never wedge a batcher or fleet
+    /// shutdown drain.
+    fn drop(&mut self) {
+        self.slot.abandoned.store(true, Ordering::Relaxed);
     }
 }
 
@@ -158,6 +272,9 @@ pub(crate) struct PendingSample {
     pub(crate) sample: Vec<f64>,
     pub(crate) slot: Arc<Slot>,
     pub(crate) enqueued: Instant,
+    /// Resolve as [`ServeError::DeadlineExceeded`] if still queued past
+    /// this instant when the batch reaches the flush boundary.
+    pub(crate) deadline: Option<Instant>,
     /// Observability trace id minted at submit (`0` = untraced).
     pub(crate) trace: u64,
 }
@@ -176,6 +293,11 @@ struct Counters {
     flushed_drain: AtomicUsize,
     max_batch_observed: AtomicUsize,
     queue_high_water: AtomicUsize,
+    deadline_missed: AtomicUsize,
+    drive_faults: AtomicUsize,
+    /// Faulted drives since the last clean one — trips degraded mode at
+    /// [`DEGRADE_AFTER`].
+    consecutive_faults: AtomicUsize,
 }
 
 struct Shared {
@@ -194,6 +316,11 @@ struct Shared {
     /// behavior of one serial drive per flush.
     par: Parallelism,
     counters: Counters,
+    /// Sticky degraded flag: after [`DEGRADE_AFTER`] consecutive faulted
+    /// drives, every later flush runs on [`KernelPath::Scalar`] /
+    /// [`Parallelism::serial`] — the known-good escape-hatch path — so a
+    /// fault localized to the blocked/parallel machinery stops recurring.
+    degraded: AtomicBool,
     /// Flushes handed to the pool but not yet finished — what
     /// [`MicroBatcher::shutdown`] drains so every ticket is resolved
     /// before it returns.
@@ -290,6 +417,7 @@ impl MicroBatcher {
             format,
             par,
             counters: Counters::default(),
+            degraded: AtomicBool::new(false),
             inflight: Mutex::new(0),
             idle: Condvar::new(),
         });
@@ -318,7 +446,14 @@ impl MicroBatcher {
                 sample.len()
             );
         }
-        let slot = Arc::new(Slot { state: Mutex::new(None), ready: Condvar::new() });
+        if let Some(i) = sample.iter().position(|v| !v.is_finite()) {
+            obs::nonfinite_input();
+            bail!(
+                "serve '{}': input value at index {i} is not finite",
+                self.shared.plan.model_name()
+            );
+        }
+        let slot = Slot::new();
         let trace = obs::next_trace_id();
         let depth = {
             let mut q = self.shared.queue.lock().unwrap();
@@ -331,10 +466,12 @@ impl MicroBatcher {
                 }
                 q = self.shared.room.wait(q).unwrap();
             }
+            let enqueued = Instant::now();
             q.pending.push_back(PendingSample {
                 sample,
                 slot: Arc::clone(&slot),
-                enqueued: Instant::now(),
+                enqueued,
+                deadline: self.shared.policy.default_deadline.map(|d| enqueued + d),
                 trace,
             });
             q.pending.len()
@@ -356,7 +493,17 @@ impl MicroBatcher {
             flushed_drain: c.flushed_drain.load(Ordering::Relaxed),
             max_batch_observed: c.max_batch_observed.load(Ordering::Relaxed),
             queue_high_water: c.queue_high_water.load(Ordering::Relaxed),
+            deadline_missed: c.deadline_missed.load(Ordering::Relaxed),
+            drive_faults: c.drive_faults.load(Ordering::Relaxed),
         }
+    }
+
+    /// Whether the batcher has entered degraded mode (scalar kernels,
+    /// serial drives) after repeated faulted drives. Sticky for the
+    /// batcher's lifetime — served bits are identical on every kernel
+    /// path, so degrading trades only throughput for fault avoidance.
+    pub fn degraded(&self) -> bool {
+        self.shared.degraded.load(Ordering::Relaxed)
     }
 
     /// Samples currently queued (not yet flushed) — the live companion
@@ -465,14 +612,27 @@ fn flusher_loop(sh: Arc<Shared>) {
         // every accepted ticket resolves even when serve teardown races
         // pool teardown.
         sh.pool.submit_or_run(move || {
-            run_batch_job(
-                &job_sh.plan,
-                job_sh.kernels,
-                job_sh.format,
-                batch,
-                &job_sh.pool,
-                job_sh.par,
-            );
+            // Degraded mode: after repeated faults the drive falls back
+            // to the scalar/serial escape-hatch path (bit-identical
+            // outputs, none of the blocked/parallel machinery).
+            let (kernels, par) = if job_sh.degraded.load(Ordering::Relaxed) {
+                (KernelPath::Scalar, Parallelism::serial())
+            } else {
+                (job_sh.kernels, job_sh.par)
+            };
+            let outcome =
+                run_batch_job(&job_sh.plan, kernels, job_sh.format, batch, &job_sh.pool, par);
+            let c = &job_sh.counters;
+            c.deadline_missed.fetch_add(outcome.expired, Ordering::Relaxed);
+            if outcome.fault.is_some() {
+                c.drive_faults.fetch_add(1, Ordering::Relaxed);
+                let streak = c.consecutive_faults.fetch_add(1, Ordering::Relaxed) + 1;
+                if streak >= DEGRADE_AFTER && !job_sh.degraded.swap(true, Ordering::Relaxed) {
+                    obs::degraded_entered();
+                }
+            } else if outcome.drove {
+                c.consecutive_faults.store(0, Ordering::Relaxed);
+            }
             let mut n = job_sh.inflight.lock().unwrap();
             *n -= 1;
             if *n == 0 {
@@ -482,15 +642,63 @@ fn flusher_loop(sh: Arc<Shared>) {
     }
 }
 
+/// What one batch job did, for the dispatcher's fault accounting
+/// (degraded-mode streaks in the batcher, fault budgets in the fleet).
+pub(crate) struct DriveOutcome {
+    /// `Some` if the drive faulted (panic, executor error, or at least
+    /// one non-finite output row).
+    pub(crate) fault: Option<DriveFault>,
+    /// Tickets resolved as [`ServeError::DeadlineExceeded`] at the flush
+    /// boundary instead of executing.
+    pub(crate) expired: usize,
+    /// Whether a plan drive actually ran (false when every ticket in the
+    /// batch had already expired) — an all-expired batch neither extends
+    /// nor resets a fault streak.
+    pub(crate) drove: bool,
+}
+
+/// How a batch drive faulted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum DriveFault {
+    /// The drive panicked; caught at the containment boundary.
+    Panicked,
+    /// The drive completed but emitted a non-finite output row.
+    NonFinite,
+    /// The executor returned an error.
+    ExecFailed,
+}
+
+/// Act on a fault-injection decision at a drive site: panic and delay
+/// happen here; a NaN decision is reported back for the scatter to apply.
+fn injected_nan(site: faultinject::Site) -> bool {
+    match faultinject::at(site) {
+        Some(faultinject::FaultKind::Panic) => {
+            panic!("injected fault: panic at {}", site.name())
+        }
+        Some(faultinject::FaultKind::Delay { ms }) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            false
+        }
+        Some(faultinject::FaultKind::Nan) => true,
+        None => false,
+    }
+}
+
 /// One pool job: drive the whole micro-batch through a single batched
 /// plan execution against this worker's thread-local arena (in the
 /// format's arithmetic — f64 straight through, emulated-k via input
 /// rounding and per-op re-rounding), scattering each per-sample output to
 /// its ticket straight from the arena borrow (no intermediate full-batch
-/// copy). Every ticket is resolved exactly once on every path — including
-/// a panic inside the drive, which the pool worker would otherwise
-/// swallow, leaving waiters blocked forever. `pub(crate)`: the fleet
-/// scheduler dispatches its per-format sub-batches through this same job.
+/// copy). This is the fault-containment boundary: every ticket is
+/// resolved exactly once with a typed outcome on every path. Expired
+/// tickets resolve as [`ServeError::DeadlineExceeded`] before the drive;
+/// a panic anywhere inside the drive (including its scoped shards) is
+/// caught and resolves only this batch's tickets as
+/// [`ServeError::DrivePanicked`] — the worker's checked-out scratch arena
+/// is dropped by [`with_worker_scratch`], never reused poisoned; each
+/// output row is finiteness-checked before delivery. `pub(crate)`: the
+/// fleet scheduler dispatches its per-format sub-batches through this
+/// same job.
 pub(crate) fn run_batch_job(
     plan: &Plan,
     kernels: KernelPath,
@@ -498,8 +706,7 @@ pub(crate) fn run_batch_job(
     batch: Vec<PendingSample>,
     pool: &Pool,
     par: Parallelism,
-) {
-    let b = batch.len();
+) -> DriveOutcome {
     // Flush span + per-sample latency: `enqueued` is already captured
     // unconditionally at submit, so measuring costs nothing extra on the
     // submit side. The flush inherits the first traced sample's id so the
@@ -509,6 +716,25 @@ pub(crate) fn run_batch_job(
         for p in &batch {
             obs::queue_wait_done(p.enqueued);
         }
+    }
+    // Deadline boundary: expired tickets resolve now instead of occupying
+    // a batch slot. The common no-deadline batch skips the clock read.
+    let mut live = batch;
+    let mut expired = 0usize;
+    if live.iter().any(|p| p.deadline.is_some()) {
+        let now = Instant::now();
+        let (dead, rest): (Vec<PendingSample>, Vec<PendingSample>) =
+            live.into_iter().partition(|p| p.deadline.is_some_and(|d| d <= now));
+        live = rest;
+        expired = dead.len();
+        for p in &dead {
+            let waited_ms = p.enqueued.elapsed().as_millis() as u64;
+            fill(&p.slot, Err(ServeError::DeadlineExceeded { waited_ms }));
+            if t_flush.is_some() {
+                obs::request_done(p.trace, p.enqueued);
+            }
+        }
+        obs::deadlines_missed(expired);
     }
     let finish = |batch: &[PendingSample]| {
         if t_flush.is_none() {
@@ -520,20 +746,57 @@ pub(crate) fn run_batch_job(
         let trace = batch.iter().map(|p| p.trace).find(|&t| t != 0).unwrap_or(0);
         obs::flush_done(t_flush, "flush", trace, batch.len());
     };
+    if live.is_empty() {
+        return DriveOutcome { fault: None, expired, drove: false };
+    }
+    let b = live.len();
     let mut flat: Vec<f64> = Vec::with_capacity(b * plan.input_len());
-    for p in &batch {
+    for p in &live {
         flat.extend_from_slice(&p.sample);
     }
+    let batch = live;
+    // Scatter one output row: the finiteness tripwire runs on every row,
+    // so a poisoned drive resolves the affected tickets as
+    // `NonFiniteOutput` instead of delivering NaN/Inf downstream.
+    let scatter = |p: &PendingSample, mut row: Vec<f64>, corrupt: bool, bad: &mut bool| {
+        if corrupt {
+            if let Some(v) = row.first_mut() {
+                *v = f64::NAN;
+            }
+        }
+        match row.iter().position(|v| !v.is_finite()) {
+            Some(i) => {
+                *bad = true;
+                obs::nonfinite_output();
+                fill(&p.slot, Err(ServeError::NonFiniteOutput { index: i }));
+            }
+            None => fill(&p.slot, Ok(row)),
+        }
+    };
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // UnwindSafe audit: the closure captures `&Plan` and `&Pool`
+        // (interior state guarded by mutexes whose holders never unwind
+        // mid-update on this path), the worker's scratch arena (checked
+        // out — dropped, not reinserted, if we unwind), and the tickets'
+        // slots (resolved under their own locks by `fill`, first write
+        // wins). Nothing observable is left half-updated by an unwind.
+        let corrupt = injected_nan(faultinject::Site::DrivePre);
         let m = plan.output_len();
-        match format {
+        let drove = match format {
             ServeFormat::F64 => with_worker_scratch(|arena: &mut Arena<f64>| {
                 match plan.execute_batch_pooled::<f64>(&(), &flat, b, arena, kernels, pool, par) {
                     Ok(out) => {
+                        let mut bad = false;
                         for (s, p) in batch.iter().enumerate() {
-                            fill(&p.slot, Ok(out[s * m..(s + 1) * m].to_vec()));
+                            if matches!(
+                                faultinject::at(faultinject::Site::DriveScatter),
+                                Some(faultinject::FaultKind::Panic)
+                            ) {
+                                panic!("injected fault: panic at drive-scatter");
+                            }
+                            scatter(p, out[s * m..(s + 1) * m].to_vec(), corrupt, &mut bad);
                         }
-                        Ok(())
+                        Ok(bad)
                     }
                     Err(e) => Err(format!("{e:#}")),
                 }
@@ -541,54 +804,76 @@ pub(crate) fn run_batch_job(
             ServeFormat::Emulated { k } => {
                 // Same input mapping as `quant::emulated_forward`, batched.
                 let ec = EmuCtx { k };
-                let xe: Vec<EmulatedFp> =
-                    flat.iter().map(|&v| EmulatedFp::new(v, k)).collect();
+                let xe: Vec<EmulatedFp> = flat.iter().map(|&v| EmulatedFp::new(v, k)).collect();
                 with_worker_scratch(|arena: &mut Arena<EmulatedFp>| {
                     match plan.execute_batch_pooled::<EmulatedFp>(
                         &ec, &xe, b, arena, kernels, pool, par,
                     ) {
                         Ok(out) => {
+                            let mut bad = false;
                             for (s, p) in batch.iter().enumerate() {
-                                let row = &out[s * m..(s + 1) * m];
-                                fill(&p.slot, Ok(row.iter().map(|e| e.v).collect()));
+                                if matches!(
+                                    faultinject::at(faultinject::Site::DriveScatter),
+                                    Some(faultinject::FaultKind::Panic)
+                                ) {
+                                    panic!("injected fault: panic at drive-scatter");
+                                }
+                                let row: Vec<f64> =
+                                    out[s * m..(s + 1) * m].iter().map(|e| e.v).collect();
+                                scatter(p, row, corrupt, &mut bad);
                             }
-                            Ok(())
+                            Ok(bad)
                         }
                         Err(e) => Err(format!("{e:#}")),
                     }
                 })
             }
+        };
+        if drove.is_ok() {
+            let _ = injected_nan(faultinject::Site::DrivePost);
         }
+        drove
     }));
-    let msg = match result {
-        Ok(Ok(())) => {
+    let (fault, msg) = match result {
+        Ok(Ok(nonfinite)) => {
             finish(&batch);
-            return;
+            let fault = if nonfinite { Some(DriveFault::NonFinite) } else { None };
+            return DriveOutcome { fault, expired, drove: true };
         }
-        Ok(Err(msg)) => msg,
+        Ok(Err(detail)) => (DriveFault::ExecFailed, ServeError::ExecFailed { detail }),
         Err(p) => {
             let cause = p
                 .downcast_ref::<String>()
                 .cloned()
                 .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
-            format!("batch job panicked: {cause}")
+            obs::panic_caught();
+            (DriveFault::Panicked, ServeError::DrivePanicked { detail: cause })
         }
     };
     for p in &batch {
         fill(&p.slot, Err(msg.clone()));
     }
     finish(&batch);
+    DriveOutcome { fault: Some(fault), expired, drove: true }
 }
 
 /// Resolve a ticket slot, first write wins: the error fallback after a
-/// mid-scatter panic must not clobber outputs already delivered.
-pub(crate) fn fill(slot: &Slot, result: Result<Vec<f64>, String>) {
+/// mid-scatter panic must not clobber outputs already delivered (or
+/// already taken by the waiter — the sticky `resolved` bit outlives the
+/// value). A scatter into a dropped receiver is a counted no-op.
+pub(crate) fn fill(slot: &Slot, result: Result<Vec<f64>, ServeError>) {
     let mut st = slot.state.lock().unwrap();
-    if st.is_none() {
-        *st = Some(result);
-        slot.ready.notify_all();
+    if st.resolved {
+        return;
     }
+    st.resolved = true;
+    if slot.abandoned.load(Ordering::Relaxed) {
+        obs::ticket_dropped();
+        return;
+    }
+    st.value = Some(result);
+    slot.ready.notify_all();
 }
 
 #[cfg(test)]
@@ -683,7 +968,12 @@ mod tests {
         let batcher = Arc::new(MicroBatcher::with_kernel_path(
             Arc::clone(&plan),
             pool,
-            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), max_pending: 3 },
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+                max_pending: 3,
+                ..BatchPolicy::default()
+            },
             plan.kernel_path(),
         ));
         let mut handles = Vec::new();
@@ -720,7 +1010,12 @@ mod tests {
         let batcher = Arc::new(MicroBatcher::with_kernel_path(
             Arc::clone(&plan),
             pool,
-            BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(30), max_pending: 2 },
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_secs(30),
+                max_pending: 2,
+                ..BatchPolicy::default()
+            },
             plan.kernel_path(),
         ));
         let t1 = batcher.submit(sample(0)).unwrap();
@@ -755,7 +1050,12 @@ mod tests {
         let mut batcher = MicroBatcher::new(
             Arc::clone(&plan),
             pool,
-            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), max_pending: 8 },
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+                max_pending: 8,
+                ..BatchPolicy::default()
+            },
         );
         let tickets: Vec<Ticket> =
             (0..4).map(|i| batcher.submit(sample(i)).unwrap()).collect();
@@ -807,7 +1107,12 @@ mod tests {
         let _ = MicroBatcher::new(
             plan,
             pool,
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1), max_pending: 4 },
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                max_pending: 4,
+                ..BatchPolicy::default()
+            },
         );
     }
 
@@ -837,5 +1142,90 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(batcher.metrics().submitted, 32);
+    }
+
+    #[test]
+    fn rejects_non_finite_inputs_at_submit() {
+        let (_, batcher) = setup(BatchPolicy::default());
+        let mut s = sample(0);
+        s[3] = f64::NAN;
+        assert!(batcher.submit(s).is_err());
+        let mut s = sample(1);
+        s[0] = f64::INFINITY;
+        assert!(batcher.submit(s).is_err());
+        assert_eq!(batcher.metrics().submitted, 0);
+    }
+
+    #[test]
+    fn dropped_ticket_does_not_wedge_shutdown_drain() {
+        // Stall the pool so the ticket is still unresolved when we drop
+        // it, then require shutdown (via Drop) to complete: the scatter
+        // into the dropped receiver must be a counted no-op, not a hang.
+        let before = obs::registry().fault_stats().tickets_dropped;
+        let model = zoo::tiny_mlp(11);
+        let plan = Arc::new(Plan::for_reference(&model).unwrap());
+        let pool = Arc::new(Pool::new(1, 2));
+        pool.submit(|| std::thread::sleep(Duration::from_millis(40))).unwrap();
+        let batcher = MicroBatcher::new(
+            Arc::clone(&plan),
+            pool,
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                ..BatchPolicy::default()
+            },
+        );
+        let t = batcher.submit(sample(0)).unwrap();
+        drop(t);
+        drop(batcher); // must drain and return, not deadlock
+        let after = obs::registry().fault_stats().tickets_dropped;
+        assert!(after > before, "dropped-ticket scatter was not counted");
+    }
+
+    #[test]
+    fn expired_tickets_resolve_as_deadline_exceeded() {
+        // A zero-ish deadline with a stalled pool: by the time the flush
+        // boundary runs, every ticket has expired and must resolve as the
+        // typed DeadlineExceeded — no batch slot spent on it.
+        let model = zoo::tiny_mlp(11);
+        let plan = Arc::new(Plan::for_reference(&model).unwrap());
+        let pool = Arc::new(Pool::new(1, 2));
+        pool.submit(|| std::thread::sleep(Duration::from_millis(40))).unwrap();
+        let batcher = MicroBatcher::new(
+            Arc::clone(&plan),
+            pool,
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+                default_deadline: Some(Duration::from_millis(5)),
+                ..BatchPolicy::default()
+            },
+        );
+        let t1 = batcher.submit(sample(0)).unwrap();
+        let t2 = batcher.submit(sample(1)).unwrap();
+        match t1.wait_typed() {
+            Err(ServeError::DeadlineExceeded { waited_ms }) => assert!(waited_ms >= 5),
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert!(matches!(t2.wait_typed(), Err(ServeError::DeadlineExceeded { .. })));
+        let m = batcher.metrics();
+        assert_eq!(m.deadline_missed, 2);
+        assert_eq!(m.drive_faults, 0, "expiry is not a drive fault");
+    }
+
+    #[test]
+    fn deadline_within_budget_still_serves() {
+        let (plan, batcher) = setup(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            default_deadline: Some(Duration::from_secs(30)),
+            ..BatchPolicy::default()
+        });
+        let t = batcher.submit(sample(0)).unwrap();
+        let got = t.wait().unwrap();
+        let mut arena: Arena<f64> = Arena::new();
+        let want = plan.execute::<f64>(&(), &sample(0), &mut arena).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(batcher.metrics().deadline_missed, 0);
     }
 }

@@ -1,0 +1,401 @@
+//! Chaos suite for the fault-containment layer.
+//!
+//! The invariant under test, at every fault mix the harness can produce:
+//! **every admitted ticket resolves, exactly once, with a typed outcome** —
+//! no lost tickets, no deadlocks, no cross-queue contamination — and with
+//! injection disarmed the stack serves bit-identical outputs again
+//! (nothing is left poisoned by a contained fault).
+//!
+//! The [`rigor::faultinject`] harness is process-global, so every test
+//! holds a shared lock while armed ([`ChaosGuard`]); the guard also
+//! disarms on drop (including unwinds) and, when `RIGOR_CHAOS_TRACE_OUT`
+//! is set (CI), exports the chrome trace on failure so chaos failures are
+//! debuggable from the artifact alone.
+
+use rigor::coordinator::Pool;
+use rigor::faultinject::{self, ChaosPlan, FaultKind, SITES};
+use rigor::fleet::{AdmitError, Fleet, FleetPolicy};
+use rigor::model::zoo;
+use rigor::plan::{Arena, Plan, ServeFormat};
+use rigor::serve::{BatchPolicy, MicroBatcher, ServeError, Ticket};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// The one lock serializing armed sections across this binary's tests.
+fn chaos_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+/// Holds the chaos lock with a plan armed; disarms on drop (even on
+/// unwind) and exports the chrome trace to `RIGOR_CHAOS_TRACE_OUT` when a
+/// test is failing.
+struct ChaosGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl ChaosGuard {
+    fn arm(plan: ChaosPlan) -> ChaosGuard {
+        let lock = chaos_lock().lock().unwrap_or_else(|e| e.into_inner());
+        faultinject::arm(plan);
+        ChaosGuard { _lock: lock }
+    }
+}
+
+impl Drop for ChaosGuard {
+    fn drop(&mut self) {
+        faultinject::disarm();
+        if std::thread::panicking() {
+            if let Some(path) = std::env::var_os("RIGOR_CHAOS_TRACE_OUT") {
+                let _ = std::fs::write(path, rigor::obs::TraceSink::export());
+            }
+        }
+    }
+}
+
+fn sample(n: usize, i: usize) -> Vec<f64> {
+    (0..n).map(|j| ((i * n + j) % 13) as f64 / 13.0).collect()
+}
+
+/// Reference bits for one sample through a plan (the serial oracle).
+fn reference_bits(plan: &Plan, s: &[f64], arena: &mut Arena<f64>) -> Vec<u64> {
+    plan.execute::<f64>(&(), s, arena).unwrap().iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn panic_storm_resolves_every_ticket_and_the_batcher_recovers() {
+    let _g = ChaosGuard::arm(ChaosPlan { seed: 0xA1, panic_in_256: 255, ..ChaosPlan::default() });
+    let model = zoo::tiny_mlp(11);
+    let plan = Arc::new(Plan::for_reference(&model).unwrap());
+    let pool = Arc::new(Pool::new(2, 8));
+    let batcher = MicroBatcher::new(
+        Arc::clone(&plan),
+        pool,
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        },
+    );
+    let mut panicked = 0usize;
+    for i in 0..12 {
+        let t = batcher.submit(sample(8, i)).unwrap();
+        // Every ticket resolves with a typed outcome — a panicking drive
+        // never leaves a waiter blocked.
+        match t.wait_typed() {
+            Ok(row) => assert_eq!(row.len(), 3),
+            Err(ServeError::DrivePanicked { detail }) => {
+                panicked += 1;
+                assert!(detail.contains("injected fault"), "unexpected cause: {detail}");
+            }
+            Err(e) => panic!("unexpected outcome: {e}"),
+        }
+    }
+    assert!(panicked >= 1, "a 255/256 panic plan must hit");
+    assert!(batcher.metrics().drive_faults >= panicked);
+
+    // Disarm: the same batcher (same flusher thread, same pool, same
+    // worker arenas that were unwound through) must serve bit-identical
+    // outputs — the contained panics poisoned nothing.
+    faultinject::disarm();
+    let mut arena: Arena<f64> = Arena::new();
+    for i in 0..6 {
+        let got = batcher.submit(sample(8, i)).unwrap().wait_typed().unwrap();
+        let want = reference_bits(&plan, &sample(8, i), &mut arena);
+        let got_bits: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, want, "post-recovery request {i}");
+    }
+}
+
+#[test]
+fn injected_delays_trip_ticket_deadlines() {
+    let _g = ChaosGuard::arm(ChaosPlan {
+        seed: 0xD1,
+        delay_in_256: 255,
+        delay_ms: 30,
+        ..ChaosPlan::default()
+    });
+    let model = zoo::tiny_mlp(11);
+    let plan = Arc::new(Plan::for_reference(&model).unwrap());
+    // One worker, one queue slot: delayed drives back later batches up
+    // past the 5 ms deadline.
+    let pool = Arc::new(Pool::new(1, 1));
+    let batcher = MicroBatcher::new(
+        Arc::clone(&plan),
+        pool,
+        BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            default_deadline: Some(Duration::from_millis(5)),
+            ..BatchPolicy::default()
+        },
+    );
+    let tickets: Vec<Ticket> = (0..6).map(|i| batcher.submit(sample(8, i)).unwrap()).collect();
+    let mut expired = 0usize;
+    for t in tickets {
+        match t.wait_typed() {
+            Ok(row) => assert_eq!(row.len(), 3),
+            Err(ServeError::DeadlineExceeded { waited_ms }) => {
+                expired += 1;
+                assert!(waited_ms >= 5, "expired before its deadline: {waited_ms} ms");
+            }
+            Err(e) => panic!("unexpected outcome: {e}"),
+        }
+    }
+    assert!(expired >= 1, "30 ms stalls behind a 1-wide pool must expire 5 ms tickets");
+    assert_eq!(batcher.metrics().deadline_missed, expired);
+}
+
+#[test]
+fn nan_injection_quarantines_the_queue_and_recovery_paths_clear_it() {
+    let _g = ChaosGuard::arm(ChaosPlan { seed: 0xF1, nan_in_256: 255, ..ChaosPlan::default() });
+    let pool = Arc::new(Pool::new(2, 8));
+    let fleet = Fleet::new(
+        Arc::clone(&pool),
+        FleetPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            fault_budget: 2,
+            degrade_after: 1000, // isolate the quarantine path
+            ..FleetPolicy::default()
+        },
+    );
+    fleet.deploy("m", &zoo::tiny_mlp(62)).unwrap();
+
+    // Drive the f64 queue into quarantine: each poisoned drive charges the
+    // fault budget, and admission must start rejecting with the typed
+    // error once it is exhausted.
+    let mut quarantined = false;
+    for i in 0..40 {
+        match fleet.submit("m", ServeFormat::F64, sample(8, i)) {
+            Ok(t) => match t.wait_typed() {
+                Ok(row) => assert_eq!(row.len(), 3),
+                Err(ServeError::NonFiniteOutput { .. }) => {}
+                Err(e) => panic!("unexpected outcome: {e}"),
+            },
+            Err(AdmitError::Quarantined { model, format }) => {
+                assert_eq!(model, "m");
+                assert_eq!(format, ServeFormat::F64);
+                quarantined = true;
+                break;
+            }
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    assert!(quarantined, "a 2-fault budget under an always-NaN plan must trip");
+    let snap = fleet.snapshot();
+    assert_eq!(snap.quarantined, 1);
+    assert!(snap.queues.iter().any(|q| q.quarantined && q.faults >= 2));
+
+    // No cross-queue contamination: the same model's emulated lane has its
+    // own ledger and still admits.
+    let t = fleet.submit("m", ServeFormat::Emulated { k: 12 }, sample(8, 0)).unwrap();
+    assert!(t.wait_typed().map(|row| row.len() == 3).unwrap_or(true));
+
+    // Recovery path 1: manual reinstate lifts the quarantine.
+    assert!(fleet.reinstate("m", ServeFormat::F64));
+    faultinject::disarm();
+    let t = fleet.submit("m", ServeFormat::F64, sample(8, 1)).unwrap();
+    assert_eq!(t.wait_typed().unwrap().len(), 3);
+
+    // Recovery path 2: re-poison to quarantine again, then a hot swap
+    // clears every queue of the model.
+    faultinject::arm(ChaosPlan { seed: 0xF2, nan_in_256: 255, ..ChaosPlan::default() });
+    let mut requarantined = false;
+    for i in 0..40 {
+        match fleet.submit("m", ServeFormat::F64, sample(8, i)) {
+            Ok(t) => drop(t.wait_typed()),
+            Err(AdmitError::Quarantined { .. }) => {
+                requarantined = true;
+                break;
+            }
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    assert!(requarantined);
+    faultinject::disarm();
+    fleet.deploy("m", &zoo::tiny_mlp(63)).unwrap();
+    assert_eq!(fleet.snapshot().quarantined, 0, "hot swap clears the quarantine");
+    let t = fleet.submit("m", ServeFormat::F64, sample(8, 2)).unwrap();
+    assert_eq!(t.wait_typed().unwrap().len(), 3);
+    fleet.shutdown();
+}
+
+#[test]
+fn repeated_faults_degrade_the_batcher_which_still_serves_correct_bits() {
+    let _g = ChaosGuard::arm(ChaosPlan { seed: 0xDE, panic_in_256: 255, ..ChaosPlan::default() });
+    let model = zoo::tiny_mlp(11);
+    let plan = Arc::new(Plan::for_reference(&model).unwrap());
+    let pool = Arc::new(Pool::new(2, 8));
+    let batcher = MicroBatcher::new(
+        Arc::clone(&plan),
+        pool,
+        BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        },
+    );
+    // Each submit is one drive; after enough consecutive faults the
+    // batcher must fall back to the scalar/serial escape hatch.
+    for i in 0..40 {
+        if batcher.degraded() {
+            break;
+        }
+        drop(batcher.submit(sample(8, i)).unwrap().wait_typed());
+    }
+    assert!(batcher.degraded(), "a panic storm must trip degraded mode");
+    assert!(batcher.metrics().drive_faults >= 3);
+
+    // Degraded serving is an escape hatch, not a downgrade in correctness:
+    // disarmed, the scalar/serial path serves the reference bits.
+    faultinject::disarm();
+    let mut arena: Arena<f64> = Arena::new();
+    for i in 0..4 {
+        let got = batcher.submit(sample(8, i)).unwrap().wait_typed().unwrap();
+        let got_bits: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, reference_bits(&plan, &sample(8, i), &mut arena));
+    }
+    assert!(batcher.degraded(), "degraded mode is sticky for the batcher's lifetime");
+}
+
+#[test]
+fn chaos_invariant_every_admitted_ticket_resolves_exactly_once() {
+    let _g = ChaosGuard::arm(ChaosPlan {
+        seed: 0xC0FFEE,
+        panic_in_256: 32,
+        delay_in_256: 32,
+        nan_in_256: 32,
+        delay_ms: 1,
+    });
+    let pool = Arc::new(Pool::new(2, 16));
+    let fleet = Arc::new(Fleet::new(
+        Arc::clone(&pool),
+        FleetPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            max_queue_pending: 64,
+            max_fleet_pending: 256,
+            default_deadline: Some(Duration::from_millis(40)),
+            degrade_after: 2,
+            fault_budget: usize::MAX, // admission stays open for the storm
+        },
+    ));
+    fleet.deploy("a", &zoo::tiny_mlp(1)).unwrap();
+    fleet.deploy("b", &zoo::tiny_mlp(2)).unwrap();
+
+    // Concurrent submitters over both models and both formats, against a
+    // mixed panic/delay/NaN storm.
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        let f = Arc::clone(&fleet);
+        handles.push(std::thread::spawn(move || {
+            let mut tickets = Vec::new();
+            for i in 0..24usize {
+                let model = if (t + i) % 2 == 0 { "a" } else { "b" };
+                let format = if i % 2 == 0 {
+                    ServeFormat::F64
+                } else {
+                    ServeFormat::Emulated { k: 12 }
+                };
+                if let Ok(ticket) = f.submit_blocking(model, format, sample(8, t * 100 + i)) {
+                    tickets.push(ticket);
+                }
+            }
+            tickets
+        }));
+    }
+    // Racing hot swaps under the storm: in-flight tickets must drain on
+    // the plans they were admitted under.
+    for v in 0..8u64 {
+        let id = if v % 2 == 0 { "a" } else { "b" };
+        fleet.deploy(id, &zoo::tiny_mlp(1 + v)).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut tickets: Vec<Ticket> = Vec::new();
+    for h in handles {
+        tickets.extend(h.join().unwrap());
+    }
+    assert!(tickets.len() >= 90, "submitters were mostly admitted: {}", tickets.len());
+
+    // Shutdown races the storm; when it returns, every admitted ticket
+    // must already hold a typed outcome.
+    fleet.shutdown();
+    for (i, t) in tickets.iter().enumerate() {
+        match t.try_take_typed() {
+            Some(Ok(row)) => assert_eq!(row.len(), 3),
+            Some(Err(e)) => match e {
+                ServeError::DrivePanicked { .. }
+                | ServeError::DeadlineExceeded { .. }
+                | ServeError::NonFiniteOutput { .. }
+                | ServeError::ExecFailed { .. } => {}
+            },
+            None => panic!("ticket {i} was admitted but never resolved"),
+        }
+        // Exactly once: the outcome was taken above, a second take must
+        // find the slot empty.
+        assert!(t.try_take_typed().is_none(), "ticket {i} resolved more than once");
+    }
+}
+
+#[test]
+fn same_seed_replays_the_same_fault_sequence() {
+    let plan = ChaosPlan {
+        seed: 0x5EED5,
+        panic_in_256: 40,
+        delay_in_256: 40,
+        nan_in_256: 40,
+        delay_ms: 3,
+    };
+    let _g = ChaosGuard::arm(plan);
+    let draw = || -> Vec<Option<FaultKind>> {
+        (0..64)
+            .flat_map(|_| SITES.iter().map(|&s| faultinject::at(s)))
+            .collect()
+    };
+    let first = draw();
+    faultinject::arm(plan); // re-arming the same plan resets the sequence
+    let second = draw();
+    assert_eq!(first, second, "chaos must replay from the seed alone");
+    assert!(first.iter().any(|d| d.is_some()), "a 120/256 mix must inject");
+    assert!(first.iter().any(|d| d.is_none()), "and must also pass clean draws");
+    assert!(
+        first.contains(&Some(FaultKind::Delay { ms: 3 })),
+        "delay draws carry the plan's stall length"
+    );
+
+    faultinject::disarm();
+    for site in SITES {
+        assert_eq!(faultinject::at(site), None, "disarmed sites draw nothing");
+        assert!(!site.name().is_empty());
+    }
+}
+
+#[test]
+fn dropped_tickets_under_chaos_do_not_wedge_fleet_shutdown() {
+    let _g = ChaosGuard::arm(ChaosPlan {
+        seed: 0xDD,
+        panic_in_256: 64,
+        delay_in_256: 64,
+        delay_ms: 2,
+        ..ChaosPlan::default()
+    });
+    let pool = Arc::new(Pool::new(2, 8));
+    let fleet = Fleet::new(
+        Arc::clone(&pool),
+        FleetPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            fault_budget: usize::MAX,
+            ..FleetPolicy::default()
+        },
+    );
+    fleet.deploy("m", &zoo::tiny_mlp(5)).unwrap();
+    for i in 0..16 {
+        // Drop every ticket immediately: the scatters become counted
+        // no-ops and the drain below must still terminate.
+        drop(fleet.submit_blocking("m", ServeFormat::F64, sample(8, i)).unwrap());
+    }
+    fleet.shutdown(); // must not hang on abandoned slots
+    assert_eq!(fleet.snapshot().total_pending, 0);
+}

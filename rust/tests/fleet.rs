@@ -37,6 +37,7 @@ fn mixed_fleet_matches_independent_microbatchers_bitwise() {
             max_wait: Duration::from_millis(1),
             max_queue_pending: 64,
             max_fleet_pending: 256,
+            ..FleetPolicy::default()
         },
     ));
     fleet.deploy("mlp", &mlp).unwrap();
@@ -70,7 +71,12 @@ fn mixed_fleet_matches_independent_microbatchers_bitwise() {
         let batcher = MicroBatcher::with_format(
             plan,
             Arc::new(Pool::new(2, 16)),
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1), max_pending: 64 },
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                max_pending: 64,
+                ..BatchPolicy::default()
+            },
             kernels,
             fmt,
         );
@@ -113,6 +119,7 @@ fn flush_shares_stay_within_2x_of_fair() {
             max_wait: Duration::from_millis(200),
             max_queue_pending: 16,
             max_fleet_pending: 64,
+            ..FleetPolicy::default()
         },
     ));
     fleet.deploy("a", &mlp_a).unwrap();
@@ -163,6 +170,7 @@ fn hot_swap_under_concurrent_load_drops_and_misroutes_nothing() {
             max_wait: Duration::from_millis(1),
             max_queue_pending: 64,
             max_fleet_pending: 256,
+            ..FleetPolicy::default()
         },
     ));
     fleet.deploy("m", &v1).unwrap();

@@ -311,7 +311,12 @@ fn serve_round_trip_records_nested_spans() {
     let mut batcher = MicroBatcher::with_parallelism(
         plan,
         Arc::new(Pool::new(4, 32)),
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1), max_pending: 64 },
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            max_pending: 64,
+            ..BatchPolicy::default()
+        },
         kernels,
         ServeFormat::F64,
         Parallelism::with_workers(4),

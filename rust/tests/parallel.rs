@@ -244,6 +244,7 @@ fn pooled_drives_stay_deterministic_under_a_racing_fleet() {
             max_wait: Duration::from_millis(1),
             max_queue_pending: 256,
             max_fleet_pending: 1024,
+            ..FleetPolicy::default()
         },
     ));
     fleet.deploy("noise", &zoo::tiny_cnn(2)).unwrap();
